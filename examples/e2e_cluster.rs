@@ -1,0 +1,84 @@
+//! END-TO-END driver: the full three-layer stack on a real small workload.
+//!
+//! Every winning Spark task executes its actual body through the AOT/PJRT
+//! path (Layer 1 Pallas kernels, Layer 2 JAX graphs, compiled once, run
+//! from rust): Pi tasks run Monte-Carlo rounds, WordCount tasks histogram
+//! synthetic corpus chunks. The allocator itself scores through the
+//! AOT-compiled fused kernel (`HloScorer`) — so both the *control plane*
+//! and the *data plane* of this run exercise artifacts built by
+//! `make artifacts`. Python is not involved.
+//!
+//! Reported: batch makespan (simulated), real task-execution
+//! latency/throughput (wall), the aggregated π estimate and wordcount
+//! output, and scorer parity. Recorded in EXPERIMENTS.md §End-to-end.
+//!
+//! ```sh
+//! make artifacts && cargo run --release --example e2e_cluster -- [jobs_per_queue]
+//! ```
+
+use mesos_fair::error::Result;
+use mesos_fair::mesos::AllocatorMode;
+use mesos_fair::runtime::{ArtifactRuntime, HloScorer, WorkloadRuntime};
+use mesos_fair::sim::online::{OnlineConfig, OnlineSim};
+
+fn main() -> Result<()> {
+    let jobs: usize = std::env::args().nth(1).and_then(|v| v.parse().ok()).unwrap_or(3);
+
+    println!("e2e: rPS-DSF allocator (HLO-scored) + real PJRT task compute");
+    let rt = ArtifactRuntime::open_default()?;
+    println!("PJRT platform: {}\n", rt.platform());
+    let scorer = HloScorer::new(rt);
+
+    let mut cfg = OnlineConfig::paper("rpsdsf", AllocatorMode::Characterized, jobs);
+    for q in &mut cfg.queues {
+        q.workload.tasks_per_job = 16;
+    }
+    cfg.seed = 0xE2E;
+
+    let mut compute = WorkloadRuntime::open_default()?;
+    let t0 = std::time::Instant::now();
+    let r = OnlineSim::with_scorer(cfg, Box::new(scorer))?.run_with_compute(&mut compute)?;
+    let wall = t0.elapsed().as_secs_f64();
+
+    println!("--- scheduling (simulated cluster) ---");
+    println!("jobs completed : {}", r.jobs_completed);
+    println!("tasks executed : {}", r.tasks_done);
+    println!("makespan       : {:.1}s simulated", r.makespan);
+    println!(
+        "utilization    : cpu {:.1}%±{:.1}, mem {:.1}%±{:.1}",
+        100.0 * r.mean_cpu,
+        100.0 * r.std_cpu,
+        100.0 * r.mean_mem,
+        100.0 * r.std_mem
+    );
+    println!("allocator      : {} cycles, {} grants (all scored via PJRT)", r.cycles, r.grants);
+
+    println!("\n--- real compute (Layer-1 kernels via PJRT) ---");
+    println!("pi rounds      : {} x {} samples", compute.pi_rounds, mesos_fair::PI_SAMPLES);
+    println!(
+        "pi estimate    : {:.6}  (true pi {:.6}, err {:+.2e})",
+        compute.pi_estimate(),
+        std::f64::consts::PI,
+        compute.pi_estimate() - std::f64::consts::PI
+    );
+    println!("wc tokens      : {}", compute.tokens);
+    println!("wc top buckets : {:?}", compute.top_buckets(5));
+    assert!(compute.histogram_consistent(), "wordcount histogram lost tokens");
+
+    let n = compute.latency.count();
+    println!("\n--- end-to-end performance (wall clock) ---");
+    println!("task execs     : {n}");
+    println!(
+        "task latency   : mean {:.3}ms ± {:.3}ms",
+        1e3 * compute.latency.mean(),
+        1e3 * compute.latency.stddev()
+    );
+    println!("task throughput: {:.0} execs/s", n as f64 / wall.max(1e-9));
+    println!("total wall     : {wall:.2}s");
+
+    // hard checks: this example doubles as the e2e validation gate
+    assert_eq!(r.jobs_completed, 10 * jobs);
+    assert!((compute.pi_estimate() - std::f64::consts::PI).abs() < 0.01);
+    println!("\ne2e OK: all layers composed (rust coordinator -> PJRT -> AOT pallas kernels).");
+    Ok(())
+}

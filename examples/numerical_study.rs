@@ -1,0 +1,27 @@
+//! The §2 numerical study: progressive filling with integer tasking on the
+//! two-framework / two-server illustrative example — regenerates Tables 1-4
+//! with the paper's reference values inline.
+//!
+//! ```sh
+//! cargo run --release --example numerical_study -- [trials] [seed]
+//! ```
+
+use mesos_fair::exp::tables::run_illustrative;
+
+fn main() {
+    let args: Vec<String> = std::env::args().skip(1).collect();
+    let trials: usize = args.first().and_then(|v| v.parse().ok()).unwrap_or(200);
+    let seed: u64 = args.get(1).and_then(|v| v.parse().ok()).unwrap_or(0x5EED);
+
+    let t0 = std::time::Instant::now();
+    let t = run_illustrative(trials, seed);
+    println!("{}", t.render());
+    println!("({} trials of 3 RRR schedulers + 3 deterministic runs in {:.0}ms)",
+             trials, 1e3 * t0.elapsed().as_secs_f64());
+
+    // also dump CSV next to the binary for plotting
+    let path = "target/numerical_study.csv";
+    if t.to_csv().write_to(path).is_ok() {
+        println!("wrote {path}");
+    }
+}

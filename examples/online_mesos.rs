@@ -1,0 +1,57 @@
+//! Online Mesos experiment driver: run any scheduler/mode combination on
+//! the paper's cluster and print the figure-style trace.
+//!
+//! ```sh
+//! cargo run --release --example online_mesos -- --scheduler psdsf --mode characterized
+//! cargo run --release --example online_mesos -- --scheduler drf --mode oblivious --jobs 10
+//! cargo run --release --example online_mesos -- --scheduler drf --homogeneous --jobs 10
+//! ```
+
+use mesos_fair::cli::Args;
+use mesos_fair::error::{Error, Result};
+use mesos_fair::mesos::AllocatorMode;
+use mesos_fair::metrics::plot;
+use mesos_fair::sim::online::{OnlineConfig, OnlineSim};
+
+fn main() -> Result<()> {
+    let args = Args::parse(std::env::args().skip(1))?;
+    let policy = args.flag_or("scheduler", "rrr-psdsf");
+    let mode = match args.flag_or("mode", "characterized").as_str() {
+        "oblivious" => AllocatorMode::Oblivious,
+        "characterized" => AllocatorMode::Characterized,
+        other => return Err(Error::Config(format!("unknown mode '{other}'"))),
+    };
+    let jobs = args.flag_usize("jobs", 20)?;
+    let mut cfg = if args.has("homogeneous") {
+        OnlineConfig::paper_homogeneous(&policy, mode, jobs)
+    } else {
+        OnlineConfig::paper(&policy, mode, jobs)
+    };
+    cfg.seed = args.flag_u64("seed", 0x5EED)?;
+
+    println!(
+        "online experiment: {policy}/{} on {} agents, 10 queues x {jobs} jobs\n",
+        mode.label(),
+        cfg.cluster.len()
+    );
+    let t0 = std::time::Instant::now();
+    let r = OnlineSim::new(cfg)?.run()?;
+    println!("Allocated CPU and memory fractions over time:");
+    println!("{}", plot::render(&[&r.trace.cpu, &r.trace.mem], 72, 14, 1.0));
+    println!("jobs completed : {}", r.jobs_completed);
+    println!("tasks executed : {}", r.tasks_done);
+    println!("makespan       : {:.1}s (simulated)", r.makespan);
+    for (g, t) in &r.group_finish {
+        println!("group {g:10} : done at {t:.1}s");
+    }
+    println!(
+        "utilization    : cpu {:.1}%±{:.1}, mem {:.1}%±{:.1}",
+        100.0 * r.mean_cpu,
+        100.0 * r.std_cpu,
+        100.0 * r.mean_mem,
+        100.0 * r.std_mem
+    );
+    println!("allocator      : {} cycles, {} grants", r.cycles, r.grants);
+    println!("wall time      : {:.2}s", t0.elapsed().as_secs_f64());
+    Ok(())
+}

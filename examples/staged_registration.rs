@@ -1,0 +1,41 @@
+//! The Figure-9 scenario (§3.7): three servers, one of each type, register
+//! one by one — forcing an initially suboptimal allocation — and we watch
+//! whether the scheduler recovers. rPS-DSF adapts (its criterion tracks
+//! current residuals); BF-DRF keeps re-offering the same agent to the same
+//! framework.
+//!
+//! ```sh
+//! cargo run --release --example staged_registration -- [jobs_per_queue]
+//! ```
+
+use mesos_fair::exp::fig9;
+use mesos_fair::metrics::plot;
+
+fn main() -> mesos_fair::error::Result<()> {
+    let jobs: usize = std::env::args().nth(1).and_then(|v| v.parse().ok()).unwrap_or(20);
+    println!("staged registration (type-1 -> type-2 -> type-3), 10 queues x {jobs} jobs\n");
+
+    let fig = fig9::run(jobs, 0x5EED)?;
+    println!("Allocated memory fraction over time:");
+    let series: Vec<_> = fig.runs.iter().map(|r| &r.trace.mem).collect();
+    println!("{}", plot::render(&series, 72, 14, 1.0));
+
+    for r in &fig.runs {
+        println!(
+            "{:28} makespan {:7.1}s   mem {:5.1}%±{:4.1}",
+            r.label,
+            r.makespan,
+            100.0 * r.mean_mem,
+            100.0 * r.std_mem
+        );
+    }
+    let bf = fig9::mid_run_mem_efficiency(&fig, "bf-drf").unwrap();
+    let rps = fig9::mid_run_mem_efficiency(&fig, "rpsdsf").unwrap();
+    println!("\nmid-run memory efficiency: rPS-DSF {:.1}% vs BF-DRF {:.1}%", 100.0 * rps, 100.0 * bf);
+    if rps > bf {
+        println!("=> rPS-DSF recovered from the suboptimal start; BF-DRF did not (paper Fig. 9).");
+    } else {
+        println!("=> shapes did not separate at this batch size; try more jobs.");
+    }
+    Ok(())
+}

@@ -1,0 +1,117 @@
+"""AOT compile path: lower every Layer-2 function to HLO *text* artifacts.
+
+Run once by ``make artifacts``:
+
+    cd python && python -m compile.aot --out-dir ../artifacts
+
+Interchange format is HLO text, NOT ``lowered.compile().serialize()`` and NOT
+a serialized HloModuleProto: jax >= 0.5 emits protos with 64-bit instruction
+ids which the rust side's xla_extension 0.5.1 rejects (``proto.id() <=
+INT_MAX``). The text parser reassigns ids and round-trips cleanly — see
+/opt/xla-example/README.md and gen_hlo.py there.
+
+Besides the ``*.hlo.txt`` files this writes ``manifest.json`` recording the
+padded dimensions and each artifact's input/output shapes; the rust runtime
+reads it at startup and refuses to run against stale dimensions.
+"""
+
+import argparse
+import json
+import os
+
+import jax
+import jax.numpy as jnp
+from jax._src.lib import xla_client as xc
+
+from . import model
+from .kernels import BIG, M_MAX, N_MAX, PI_SAMPLES, R_MAX, WC_TOKENS, WC_VOCAB
+
+
+def to_hlo_text(lowered) -> str:
+    """StableHLO -> XlaComputation -> HLO text (ids reassigned by the parser)."""
+    mlir_mod = lowered.compiler_ir("stablehlo")
+    comp = xc._xla.mlir.mlir_module_to_xla_computation(
+        str(mlir_mod), use_tuple_args=False, return_tuple=True
+    )
+    return comp.as_hlo_text()
+
+
+def _spec(shape, dtype):
+    return jax.ShapeDtypeStruct(shape, dtype)
+
+
+def artifact_specs():
+    """name -> (function, example-arg specs). Shared with tests."""
+    f32, i32 = jnp.float32, jnp.int32
+    return {
+        "scores": (
+            model.allocation_scores_tuple,
+            [
+                _spec((M_MAX, R_MAX), f32),   # c
+                _spec((N_MAX, M_MAX), f32),   # x
+                _spec((N_MAX, R_MAX), f32),   # d
+                _spec((N_MAX,), f32),         # phi
+                _spec((N_MAX, N_MAX), f32),   # rolemat
+                _spec((N_MAX,), f32),         # fmask
+                _spec((M_MAX,), f32),         # smask
+                _spec((R_MAX,), f32),         # rmask
+            ],
+        ),
+        "utilization": (
+            model.cluster_utilization,
+            [
+                _spec((M_MAX, R_MAX), f32),
+                _spec((N_MAX, M_MAX), f32),
+                _spec((N_MAX, R_MAX), f32),
+                _spec((M_MAX,), f32),
+                _spec((R_MAX,), f32),
+            ],
+        ),
+        "pi_mc": (model.pi_round, [_spec((1,), i32)]),
+        "wordcount": (model.wordcount_round, [_spec((WC_TOKENS,), i32)]),
+    }
+
+
+def lower_all(out_dir: str) -> dict:
+    os.makedirs(out_dir, exist_ok=True)
+    manifest = {
+        "dims": {
+            "N_MAX": N_MAX, "M_MAX": M_MAX, "R_MAX": R_MAX,
+            "PI_SAMPLES": PI_SAMPLES, "WC_TOKENS": WC_TOKENS,
+            "WC_VOCAB": WC_VOCAB,
+        },
+        "big": BIG,
+        "artifacts": {},
+    }
+    for name, (fn, specs) in artifact_specs().items():
+        lowered = jax.jit(fn).lower(*specs)
+        text = to_hlo_text(lowered)
+        path = os.path.join(out_dir, f"{name}.hlo.txt")
+        with open(path, "w") as f:
+            f.write(text)
+        manifest["artifacts"][name] = {
+            "file": f"{name}.hlo.txt",
+            "inputs": [{"shape": list(s.shape), "dtype": str(s.dtype)} for s in specs],
+            "chars": len(text),
+        }
+        print(f"wrote {path} ({len(text)} chars)")
+    mpath = os.path.join(out_dir, "manifest.json")
+    with open(mpath, "w") as f:
+        json.dump(manifest, f, indent=2, sort_keys=True)
+    print(f"wrote {mpath}")
+    return manifest
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--out-dir", default="../artifacts",
+                    help="directory for *.hlo.txt + manifest.json")
+    # Back-compat with the scaffold Makefile's `--out ../artifacts/model.hlo.txt`.
+    ap.add_argument("--out", default=None, help=argparse.SUPPRESS)
+    args = ap.parse_args()
+    out_dir = os.path.dirname(args.out) if args.out else args.out_dir
+    lower_all(out_dir or ".")
+
+
+if __name__ == "__main__":
+    main()

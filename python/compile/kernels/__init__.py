@@ -1,0 +1,31 @@
+"""Layer-1 Pallas kernels for mesos-fair.
+
+Three kernels, all lowered with ``interpret=True`` (CPU PJRT cannot execute
+Mosaic custom-calls; see /opt/xla-example/README.md):
+
+* :mod:`scores`    — fused fair-allocation scoring (DRF, TSF, PS-DSF,
+                     rPS-DSF, best-fit distance, feasibility) over a padded
+                     (N_MAX, M_MAX, R_MAX) cluster instance.
+* :mod:`pi_mc`     — Monte-Carlo quarter-circle hit counting (the Spark-Pi
+                     task body) with a counter-based PCG-style hash PRNG.
+* :mod:`wordcount` — token-id histogram via a [1,T]x[T,V] matmul reduction
+                     (the Spark-WordCount task body).
+
+:mod:`ref` holds the pure-jnp oracles pytest checks every kernel against.
+"""
+
+# Padded problem dimensions shared by the scores kernel, the L2 model, the
+# AOT artifacts and the rust runtime (rust/src/runtime/scorer.rs keeps the
+# mirror constants; python/tests/test_aot.py checks the manifest).
+N_MAX = 16  # frameworks
+M_MAX = 8   # servers / agents
+R_MAX = 4   # resource kinds
+
+# Workload-kernel dimensions.
+PI_SAMPLES = 16384  # Monte-Carlo points per pi_mc round
+WC_TOKENS = 2048    # tokens per wordcount round
+WC_VOCAB = 512      # histogram buckets
+
+# Finite stand-in for +inf inside score tensors: keeps HLO free of inf/nan
+# edge cases and lets the rust side compare with plain f32 ordering.
+BIG = 1.0e30

@@ -1,0 +1,53 @@
+"""Monte-Carlo pi kernel — the Spark-Pi task body.
+
+The paper's ``Pi`` submission group runs jobs that "accurately calculate
+pi = 3.1415... via Monte Carlo simulation" (§3.3). Each simulated Spark task
+in the e2e example executes one round of this kernel through the AOT/PJRT
+path: given a task-unique seed, generate ``PI_SAMPLES`` pseudo-random points
+in the unit square with a counter-based hash PRNG and count how many fall
+inside the quarter circle. The driver aggregates hit counts across tasks and
+reports ``4 * hits / samples``.
+
+Counter-based (stateless) RNG is the TPU-native choice: no sequential state,
+purely element-wise VPU work over an iota, trivially vectorizable. The hash
+is murmur3's fmix32 finalizer over decorrelated lane counters.
+"""
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+from . import PI_SAMPLES
+
+
+def _mix(h):
+    h = h ^ (h >> jnp.uint32(16))
+    h = h * jnp.uint32(0x85EBCA6B)
+    h = h ^ (h >> jnp.uint32(13))
+    h = h * jnp.uint32(0xC2B2AE35)
+    h = h ^ (h >> jnp.uint32(16))
+    return h
+
+
+def _pi_kernel(seed_ref, out_ref):
+    s = seed_ref[0].astype(jnp.uint32)
+    i = jax.lax.broadcasted_iota(jnp.uint32, (PI_SAMPLES,), 0)
+    hx = _mix(i * jnp.uint32(0x9E3779B9) + s)
+    hy = _mix(i * jnp.uint32(0x85EBCA77) + s + jnp.uint32(0x6C62272E))
+    inv = jnp.float32(1.0 / 4294967296.0)
+    fx = hx.astype(jnp.float32) * inv
+    fy = hy.astype(jnp.float32) * inv
+    inside = (fx * fx + fy * fy) < 1.0
+    out_ref[0] = jnp.sum(inside.astype(jnp.int32))
+
+
+@functools.partial(jax.jit)
+def pi_hits(seed):
+    """int32[1] seed -> int32[1] quarter-circle hit count out of PI_SAMPLES."""
+    return pl.pallas_call(
+        _pi_kernel,
+        out_shape=jax.ShapeDtypeStruct((1,), jnp.int32),
+        interpret=True,
+    )(seed.astype(jnp.int32))

@@ -1,0 +1,243 @@
+"""Pure-jnp reference oracles for every Layer-1 kernel.
+
+These are the correctness ground truth: straightforward, unfused, obviously
+correct implementations of the same math the Pallas kernels compute. pytest
+(python/tests/) sweeps random instances with hypothesis and asserts
+``allclose(kernel(...), ref(...))``; the rust native scorer
+(rust/src/scheduler/scorer.rs) implements the same equations and is
+parity-tested against the AOT artifact in rust/tests/runtime_parity.rs.
+
+Notation follows the paper (Shan et al. 2018):
+
+* ``c[i, r]``   — capacity of resource ``r`` on server ``i``
+* ``x[n, i]``   — tasks of framework ``n`` currently placed on server ``i``
+* ``d[n, r]``   — per-task demand of framework ``n`` for resource ``r``
+* ``phi[n]``    — framework weight (paper uses equal priority, phi = 1)
+* ``rolemat[a, b]`` — 1.0 iff frameworks ``a`` and ``b`` belong to the same
+  Mesos *role* (submission group). Fair shares aggregate over roles — the
+  paper's two groups, Pi and WordCount, are "roles in Mesos' jargon" (§3.3)
+  and Mesos' DRF sorter operates on roles. The identity matrix recovers
+  per-framework fairness (the §2 numerical study, where each framework is
+  its own role). Residuals/feasibility always use the raw per-framework x.
+* ``fmask/smask/rmask`` — 1.0 where the framework / server / resource slot of
+  the padded instance is real, 0.0 where it is padding.
+"""
+
+import jax.numpy as jnp
+
+from . import BIG
+
+
+def _masked(x, mask, fill):
+    return jnp.where(mask > 0.5, x, fill)
+
+
+def residuals(c, x, d):
+    """Residual (unreserved) capacity per server/resource.
+
+    ``res[i, r] = c[i, r] - sum_n x[n, i] * d[n, r]`` — the quantity the
+    paper's Tables 3-4 report and rPS-DSF's criterion divides by.
+    """
+    used = jnp.einsum("ni,nr->ir", x, d)
+    return c - used
+
+
+def role_totals(x, rolemat, smask):
+    """Role-aggregated task totals: xr[n] = sum_{n' in role(n)} x_{n'} ."""
+    xn = jnp.sum(x * smask[None, :], axis=1)  # [N]
+    return rolemat @ xn
+
+
+def drf_shares(c, x, d, phi, rolemat, fmask, smask, rmask):
+    """Global dominant shares (DRFH, [11]): s_n = max_r x_n d_{n,r} / (phi_n C_r).
+
+    ``C_r`` is the cluster-wide capacity of resource ``r`` over *registered*
+    servers. Padding frameworks score BIG so progressive filling never picks
+    them; a framework with zero demand on every real resource also scores BIG
+    (it can never run a task, offering it resources would loop forever).
+    """
+    ctot = jnp.sum(c * smask[:, None], axis=0)  # [R]
+    xn = role_totals(x, rolemat, smask)  # [N] role-aggregated
+    # share per resource; only real resources with positive demand count.
+    valid = (rmask[None, :] > 0.5) & (d > 0.0) & (ctot[None, :] > 0.0)
+    per_r = jnp.where(valid, xn[:, None] * d / (phi[:, None] * jnp.maximum(ctot[None, :], 1e-30)), -BIG)
+    share = jnp.max(per_r, axis=1)
+    has_demand = jnp.any(valid, axis=1)
+    share = jnp.where(has_demand, share, BIG)
+    return _masked(share, fmask, BIG)
+
+
+def tsf_shares(c, x, d, phi, rolemat, fmask, smask, rmask):
+    """Task-share fairness ([10]): share_n = x_n / (phi_n N*_n).
+
+    ``N*_n = sum_i min_r floor(c_{i,r} / d_{n,r})`` — the whole tasks
+    framework ``n`` could run were the entire cluster dedicated to it
+    (integer tasking, matching the paper's progressive-filling study).
+    """
+    xn = role_totals(x, rolemat, smask)  # [N] role-aggregated
+    valid_r = (rmask[None, None, :] > 0.5) & (d[:, None, :] > 0.0)  # [N,1,R] bcast [N,M,R]
+    ratio = c[None, :, :] / jnp.maximum(d[:, None, :], 1e-30)  # [N,M,R]
+    per_server = jnp.min(jnp.where(valid_r, jnp.floor(ratio), BIG), axis=2)  # [N,M]
+    # a framework with no real positive demand can host "infinite" tasks -> BIG share guard below
+    per_server = jnp.where(smask[None, :] > 0.5, per_server, 0.0)
+    nstar = jnp.sum(jnp.where(per_server >= BIG, 0.0, per_server), axis=1)  # [N]
+    share = jnp.where(nstar > 0.0, xn / (phi * jnp.maximum(nstar, 1e-30)), BIG)
+    has_demand = jnp.any((d > 0.0) & (rmask[None, :] > 0.5), axis=1)
+    share = jnp.where(has_demand, share, BIG)
+    return _masked(share, fmask, BIG)
+
+
+def psdsf_scores(c, x, d, phi, rolemat, fmask, smask, rmask):
+    """Per-Server Dominant-Share Fairness ([2]): K_{n,i} = x_n max_r d_{n,r}/(phi_n c_{i,r}).
+
+    Equivalently ``x_n / (phi_n N_{n,i})`` with ``N_{n,i}`` the (fluid) task
+    count server ``i`` alone could host. A server with zero capacity on a
+    demanded resource cannot host the framework at all -> BIG.
+    """
+    xn = role_totals(x, rolemat, smask)  # [N] role-aggregated
+    valid = (rmask[None, None, :] > 0.5) & (d[:, None, :] > 0.0)  # bcast [N,M,R]
+    per_r = jnp.where(
+        valid & (c[None, :, :] > 0.0),
+        d[:, None, :] / jnp.maximum(c[None, :, :], 1e-30),
+        jnp.where(valid, BIG, -BIG),  # demanded but zero capacity -> impossible
+    )
+    k = jnp.max(per_r, axis=2) * xn[:, None] / phi[:, None]  # [N,M]
+    impossible = jnp.any(valid & (c[None, :, :] <= 0.0), axis=2)
+    has_demand = jnp.any(valid, axis=2)
+    k = jnp.where(impossible | ~has_demand, BIG, k)
+    k = jnp.minimum(k, BIG)
+    k = _masked(k, fmask[:, None], BIG)
+    k = _masked(k, smask[None, :], BIG)
+    return k
+
+
+def rpsdsf_scores(c, x, d, phi, rolemat, fmask, smask, rmask):
+    """Residual PS-DSF (this paper, §2):
+
+    ``K~_{n,j} = x_n max_r d_{n,r} / (phi_n (c_{j,r} - sum_n' x_{n',j} d_{n',r}))``
+
+    i.e. PS-DSF evaluated against *current unreserved* capacities. A server
+    whose residual is <= 0 on a demanded resource scores BIG (cannot take the
+    next task of ``n``).
+    """
+    res = residuals(c, x, d)  # [M,R]
+    xn = role_totals(x, rolemat, smask)
+    valid = (rmask[None, None, :] > 0.5) & (d[:, None, :] > 0.0)
+    per_r = jnp.where(
+        valid & (res[None, :, :] > 0.0),
+        d[:, None, :] / jnp.maximum(res[None, :, :], 1e-30),
+        jnp.where(valid, BIG, -BIG),
+    )
+    k = jnp.max(per_r, axis=2) * xn[:, None] / phi[:, None]
+    exhausted = jnp.any(valid & (res[None, :, :] <= 0.0), axis=2)
+    has_demand = jnp.any(valid, axis=2)
+    k = jnp.where(exhausted | ~has_demand, BIG, k)
+    k = jnp.minimum(k, BIG)
+    k = _masked(k, fmask[:, None], BIG)
+    k = _masked(k, smask[None, :], BIG)
+    return k
+
+
+def bestfit_ratio(c, x, d, fmask, smask, rmask):
+    """Best-fit server-selection score ([11] via BF-DRF):
+
+    ``fit[n, i] = max_r d[n, r] / res[i, r]`` — the reciprocal of how many
+    further tasks of ``n`` server ``i``'s residual could host. BF-DRF picks
+    the framework by DRF and then the feasible server *minimizing* this
+    ratio: the server whose residual profile "most closely matches the
+    demands" is the one where no single resource dimension chokes the
+    demand vector. (Minimizing an L1 distance instead sends memory-bound
+    frameworks to CPU-rich servers and fails to reproduce Table 1 — kept as
+    an ablation in rust/benches/ablations.rs.) BIG when one more task does
+    not fit at all. Note rPS-DSF's score is exactly ``x_n/phi_n`` times this
+    ratio — the fused kernel computes it once.
+    """
+    res = residuals(c, x, d)  # [M,R]
+    valid = (rmask[None, None, :] > 0.5) & (d[:, None, :] > 0.0)
+    per_r = jnp.where(
+        valid & (res[None, :, :] > 0.0),
+        d[:, None, :] / jnp.maximum(res[None, :, :], 1e-30),
+        jnp.where(valid, BIG, -BIG),
+    )
+    fit = jnp.max(per_r, axis=2)
+    fit = jnp.minimum(fit, BIG)
+    feas = feasibility(c, x, d, fmask, smask, rmask) > 0.5
+    fit = jnp.where(feas, fit, BIG)
+    return fit
+
+
+def feasibility(c, x, d, fmask, smask, rmask):
+    """1.0 where one more task of framework ``n`` fits server ``i``'s residual.
+
+    A small epsilon absorbs f32 rounding from the einsum (capacities and
+    demands are exact small numbers, so 1e-4 is conservative).
+    """
+    res = residuals(c, x, d)
+    ok_r = (res[None, :, :] + 1e-4 >= d[:, None, :]) | (rmask[None, None, :] < 0.5)
+    has_demand = jnp.any((d > 0.0) & (rmask[None, :] > 0.5), axis=1)  # [N]
+    ok = jnp.all(ok_r, axis=2) & (fmask[:, None] > 0.5) & (smask[None, :] > 0.5)
+    ok = ok & has_demand[:, None]
+    return ok.astype(jnp.float32)
+
+
+def allocation_scores(c, x, d, phi, rolemat, fmask, smask, rmask):
+    """All six score tensors, in the order the AOT artifact returns them."""
+    return (
+        drf_shares(c, x, d, phi, rolemat, fmask, smask, rmask),
+        tsf_shares(c, x, d, phi, rolemat, fmask, smask, rmask),
+        psdsf_scores(c, x, d, phi, rolemat, fmask, smask, rmask),
+        rpsdsf_scores(c, x, d, phi, rolemat, fmask, smask, rmask),
+        bestfit_ratio(c, x, d, fmask, smask, rmask),
+        feasibility(c, x, d, fmask, smask, rmask),
+    )
+
+
+def utilization(c, x, d, smask, rmask):
+    """Cluster-level allocated fraction per resource: the quantity Figures 3-8
+    plot (``allocated CPU %``, ``allocated memory %``)."""
+    used = jnp.einsum("ni,nr->ir", x, d) * smask[:, None]
+    cap = jnp.sum(c * smask[:, None], axis=0)
+    frac = jnp.sum(used, axis=0) / jnp.maximum(cap, 1e-30)
+    return jnp.where(rmask > 0.5, frac, 0.0)
+
+
+# --- workload kernels -------------------------------------------------------
+
+def _mix(h):
+    """32-bit finalizer (murmur3 fmix32): a counter-based PRNG good enough for
+    Monte-Carlo pi — passes the chi-square smoke test in test_pi.py."""
+    h = jnp.uint32(h)
+    h = h ^ (h >> jnp.uint32(16))
+    h = h * jnp.uint32(0x85EBCA6B)
+    h = h ^ (h >> jnp.uint32(13))
+    h = h * jnp.uint32(0xC2B2AE35)
+    h = h ^ (h >> jnp.uint32(16))
+    return h
+
+
+def pi_hits(seed, n_samples):
+    """Count Monte-Carlo points inside the quarter circle.
+
+    ``seed`` is an int32[1]; returns int32[1] hit count out of ``n_samples``.
+    x/y coordinates come from two decorrelated lanes of the counter hash.
+    """
+    i = jnp.arange(n_samples, dtype=jnp.uint32)
+    s = seed[0].astype(jnp.uint32)
+    hx = _mix(i * jnp.uint32(0x9E3779B9) + s)
+    hy = _mix(i * jnp.uint32(0x85EBCA77) + s + jnp.uint32(0x6C62272E))
+    fx = hx.astype(jnp.float32) * jnp.float32(1.0 / 4294967296.0)
+    fy = hy.astype(jnp.float32) * jnp.float32(1.0 / 4294967296.0)
+    inside = (fx * fx + fy * fy) < 1.0
+    return jnp.sum(inside.astype(jnp.int32)).reshape(1)
+
+
+def wordcount_hist(tokens, vocab):
+    """Token-id histogram: hist[v] = |{t : tokens[t] == v}| as float32[V].
+
+    Out-of-range ids (< 0 or >= vocab) are ignored, matching the rust-side
+    tokenizer contract (it clamps real hash buckets into range, so in
+    practice nothing is dropped).
+    """
+    v = jnp.arange(vocab, dtype=jnp.int32)
+    onehot = (tokens[:, None] == v[None, :]).astype(jnp.float32)
+    return jnp.sum(onehot, axis=0)

@@ -1,0 +1,142 @@
+"""Fused fair-allocation scoring as a single Pallas kernel.
+
+The allocator's hot-spot is: given the current cluster state (capacities
+``c``, allocations ``x``, demands ``d``), produce the score tensors every
+fairness criterion needs so the coordinator can argmin over them. The paper
+evaluates five criteria (DRF, TSF, PS-DSF, rPS-DSF, BF-DRF); recomputing
+residuals/dominant ratios per criterion wastes bandwidth, so this kernel does
+one fused pass over the padded (N_MAX, M_MAX, R_MAX) instance and emits all
+six tensors at once.
+
+VMEM/tiling story (DESIGN.md §Hardware-Adaptation): the whole instance is
+tiny — every tensor is at most N_MAX*M_MAX*R_MAX = 512 f32 = 2 KiB — so the
+kernel uses a single grid step with all operands resident in VMEM; there is
+no HBM<->VMEM schedule to pipeline. The win on real hardware is fusion (one
+pass over x/c/d instead of six) rather than tiling.
+
+interpret=True throughout: the CPU PJRT plugin cannot execute Mosaic
+custom-calls, and correctness — not CPU wallclock — is what the interpret
+path validates.
+"""
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+from . import BIG, M_MAX, N_MAX, R_MAX
+
+
+def _scores_kernel(c_ref, x_ref, d_ref, phi_ref, rolemat_ref, fmask_ref, smask_ref, rmask_ref,
+                   drf_ref, tsf_ref, ps_ref, rps_ref, fit_ref, feas_ref):
+    c = c_ref[...]        # [M,R] capacities
+    x = x_ref[...]        # [N,M] current integer allocations (as f32)
+    d = d_ref[...]        # [N,R] per-task demands
+    phi = phi_ref[...]    # [N]   weights
+    rolemat = rolemat_ref[...]  # [N,N] role membership (identity = per-framework)
+    fmask = fmask_ref[...]
+    smask = smask_ref[...]
+    rmask = rmask_ref[...]
+
+    big = jnp.float32(BIG)
+    eps = jnp.float32(1e-30)
+
+    # --- shared intermediates (the point of fusing) -------------------------
+    # x_n: role-aggregated task totals over registered servers (Mesos' DRF
+    # sorter operates on roles; identity rolemat = per-framework fairness).
+    xn = rolemat @ jnp.sum(x * smask[None, :], axis=1)             # [N]
+    # residual (unreserved) capacity per server/resource.
+    used = jnp.einsum("ni,nr->ir", x, d)                           # [M,R]
+    res = c - used                                                 # [M,R]
+    # demand validity per (n, r) and broadcast to (n, i, r).
+    dvalid = (rmask[None, :] > 0.5) & (d > 0.0)                    # [N,R]
+    valid3 = dvalid[:, None, :]                                    # [N,1,R] -> bcast
+    has_demand = jnp.any(dvalid, axis=1)                           # [N]
+
+    # --- DRF: global dominant share -----------------------------------------
+    ctot = jnp.sum(c * smask[:, None], axis=0)                     # [R]
+    drf_valid = dvalid & (ctot[None, :] > 0.0)
+    drf_per_r = jnp.where(drf_valid,
+                          xn[:, None] * d / (phi[:, None] * jnp.maximum(ctot[None, :], eps)),
+                          -big)
+    drf = jnp.max(drf_per_r, axis=1)
+    drf = jnp.where(jnp.any(drf_valid, axis=1), drf, big)
+    drf = jnp.where(fmask > 0.5, drf, big)
+
+    # --- TSF: x_n / N*_n with N*_n = sum_i min_r floor(c_ir / d_nr) ----------
+    ratio = c[None, :, :] / jnp.maximum(d[:, None, :], eps)        # [N,M,R]
+    per_server = jnp.min(jnp.where(valid3, jnp.floor(ratio), big), axis=2)  # [N,M]
+    per_server = jnp.where(smask[None, :] > 0.5, per_server, 0.0)
+    nstar = jnp.sum(jnp.where(per_server >= big, 0.0, per_server), axis=1)  # [N]
+    tsf = jnp.where(nstar > 0.0, xn / (phi * jnp.maximum(nstar, eps)), big)
+    tsf = jnp.where(has_demand, tsf, big)
+    tsf = jnp.where(fmask > 0.5, tsf, big)
+
+    # --- PS-DSF: K_{n,i} = x_n max_r d_nr / (phi_n c_ir) ---------------------
+    ps_per_r = jnp.where(valid3 & (c[None, :, :] > 0.0),
+                         d[:, None, :] / jnp.maximum(c[None, :, :], eps),
+                         jnp.where(valid3, big, -big))
+    ps = jnp.max(ps_per_r, axis=2) * xn[:, None] / phi[:, None]    # [N,M]
+    ps_impossible = jnp.any(valid3 & (c[None, :, :] <= 0.0), axis=2)
+    ps = jnp.where(ps_impossible | ~has_demand[:, None], big, ps)
+    ps = jnp.minimum(ps, big)
+    ps = jnp.where(fmask[:, None] > 0.5, ps, big)
+    ps = jnp.where(smask[None, :] > 0.5, ps, big)
+
+    # --- residual demand/supply ratio (shared by rPS-DSF and best-fit) ------
+    # ratio[n,i] = max_r d_nr / res_ir : the reciprocal of how many further
+    # tasks of n server i could host. rPS-DSF = x_n/phi_n * ratio; BF-DRF's
+    # best-fit server is the feasible argmin of the ratio itself.
+    ratio_per_r = jnp.where(valid3 & (res[None, :, :] > 0.0),
+                            d[:, None, :] / jnp.maximum(res[None, :, :], eps),
+                            jnp.where(valid3, big, -big))
+    ratio = jnp.max(ratio_per_r, axis=2)                           # [N,M]
+    exhausted = jnp.any(valid3 & (res[None, :, :] <= 0.0), axis=2)
+    ratio = jnp.where(exhausted | ~has_demand[:, None], big, ratio)
+    ratio = jnp.minimum(ratio, big)
+    ratio = jnp.where(fmask[:, None] > 0.5, ratio, big)
+    ratio = jnp.where(smask[None, :] > 0.5, ratio, big)
+
+    # --- rPS-DSF: ratio scaled by the framework's weighted total tasks -------
+    rps = ratio * xn[:, None] / phi[:, None]
+    rps = jnp.where(ratio >= big, big, rps)
+    rps = jnp.minimum(rps, big)
+
+    # --- feasibility + best-fit ratio ----------------------------------------
+    ok_r = (res[None, :, :] + jnp.float32(1e-4) >= d[:, None, :]) | (rmask[None, None, :] < 0.5)
+    feas = (jnp.all(ok_r, axis=2)
+            & (fmask[:, None] > 0.5) & (smask[None, :] > 0.5)
+            & has_demand[:, None])
+    fit = jnp.where(feas, ratio, big)
+
+    drf_ref[...] = drf
+    tsf_ref[...] = tsf
+    ps_ref[...] = ps
+    rps_ref[...] = rps
+    fit_ref[...] = fit
+    feas_ref[...] = feas.astype(jnp.float32)
+
+
+@functools.partial(jax.jit, static_argnames=())
+def allocation_scores(c, x, d, phi, rolemat, fmask, smask, rmask):
+    """Pallas entry point; shapes are the padded constants from ``kernels``.
+
+    Returns ``(drf[N], tsf[N], psdsf[N,M], rpsdsf[N,M], fit[N,M], feas[N,M])``
+    — exactly what :func:`kernels.ref.allocation_scores` computes unfused.
+    """
+    f32 = jnp.float32
+    out_shape = (
+        jax.ShapeDtypeStruct((N_MAX,), f32),
+        jax.ShapeDtypeStruct((N_MAX,), f32),
+        jax.ShapeDtypeStruct((N_MAX, M_MAX), f32),
+        jax.ShapeDtypeStruct((N_MAX, M_MAX), f32),
+        jax.ShapeDtypeStruct((N_MAX, M_MAX), f32),
+        jax.ShapeDtypeStruct((N_MAX, M_MAX), f32),
+    )
+    return pl.pallas_call(
+        _scores_kernel,
+        out_shape=out_shape,
+        interpret=True,
+    )(c.astype(f32), x.astype(f32), d.astype(f32), phi.astype(f32),
+      rolemat.astype(f32), fmask.astype(f32), smask.astype(f32), rmask.astype(f32))

@@ -1,0 +1,46 @@
+"""WordCount histogram kernel — the Spark-WordCount task body.
+
+The paper's ``WordCount`` group counts words of a 700 MB+ document (§3.3).
+Each simulated Spark task processes one chunk of the corpus: the rust driver
+tokenizes its chunk into hashed token ids (rust/src/runtime/workload.rs) and
+this kernel produces the per-chunk histogram; the driver then reduces
+histograms across tasks — exactly Spark's map-side count + shuffle-reduce
+structure, with the map-side combine living on the accelerator.
+
+MXU adaptation (DESIGN.md §Hardware-Adaptation): the histogram is computed as
+``ones[1,T] @ onehot[T,V]`` so the reduction over tokens is a matmul the
+systolic array executes, rather than a scatter (which TPUs do poorly). With
+T = 2048, V = 512 the onehot tile is 4 MiB f32 (bf16-able to 2 MiB), well
+inside VMEM.
+"""
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+from . import WC_TOKENS, WC_VOCAB
+
+
+def _wc_kernel(tok_ref, out_ref):
+    tokens = tok_ref[...]                                   # i32[T]
+    v = jax.lax.broadcasted_iota(jnp.int32, (WC_TOKENS, WC_VOCAB), 1)
+    onehot = (tokens[:, None] == v).astype(jnp.float32)     # [T,V]
+    ones = jnp.ones((1, WC_TOKENS), dtype=jnp.float32)
+    hist = jnp.dot(ones, onehot)                            # [1,V] on the MXU
+    out_ref[...] = hist[0]
+
+
+@functools.partial(jax.jit)
+def wordcount_hist(tokens):
+    """int32[WC_TOKENS] token ids -> float32[WC_VOCAB] histogram.
+
+    Ids outside [0, WC_VOCAB) simply match no bucket (the rust tokenizer
+    hashes into range, so nothing is dropped in practice; pad slots use -1).
+    """
+    return pl.pallas_call(
+        _wc_kernel,
+        out_shape=jax.ShapeDtypeStruct((WC_VOCAB,), jnp.float32),
+        interpret=True,
+    )(tokens.astype(jnp.int32))

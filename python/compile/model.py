@@ -1,0 +1,60 @@
+"""Layer-2 JAX model: the compute graphs the rust coordinator executes.
+
+This paper's "model" is not a neural network — its compute graph is the fair
+allocation scorer plus the two Spark workload bodies. Each public function
+here is a jit-able JAX function calling the Layer-1 Pallas kernels; aot.py
+lowers each one once to HLO text under ``artifacts/`` and the rust runtime
+(rust/src/runtime/) loads and executes them via PJRT. Python never runs on
+the request path.
+
+Functions / artifacts:
+
+* :func:`allocation_scores` -> ``artifacts/scores.hlo.txt``
+* :func:`cluster_utilization` -> ``artifacts/utilization.hlo.txt``
+* :func:`pi_round`          -> ``artifacts/pi_mc.hlo.txt``
+* :func:`wordcount_round`   -> ``artifacts/wordcount.hlo.txt``
+"""
+
+import jax.numpy as jnp
+
+from .kernels import BIG, M_MAX, N_MAX, PI_SAMPLES, R_MAX, WC_TOKENS, WC_VOCAB  # noqa: F401
+from .kernels import pi_mc, scores, wordcount
+
+
+def allocation_scores(c, x, d, phi, rolemat, fmask, smask, rmask):
+    """Fused scoring pass (see kernels/scores.py).
+
+    Inputs (padded, f32): c[M_MAX,R_MAX], x[N_MAX,M_MAX], d[N_MAX,R_MAX],
+    phi[N_MAX], rolemat[N_MAX,N_MAX], fmask[N_MAX], smask[M_MAX],
+    rmask[R_MAX].
+    Returns (drf[N], tsf[N], psdsf[N,M], rpsdsf[N,M], fit[N,M], feas[N,M]).
+    """
+    return scores.allocation_scores(c, x, d, phi, rolemat, fmask, smask, rmask)
+
+
+def cluster_utilization(c, x, d, smask, rmask):
+    """Allocated fraction per resource — the quantity Figures 3-8 plot.
+
+    Kept as a plain jnp graph (no Pallas): it is one einsum + reduction and
+    exists so the rust trace recorder can cross-check its own bookkeeping
+    against the artifact (rust/tests/runtime_parity.rs).
+    """
+    used = jnp.einsum("ni,nr->ir", x, d) * smask[:, None]
+    cap = jnp.sum(c * smask[:, None], axis=0)
+    frac = jnp.sum(used, axis=0) / jnp.maximum(cap, 1e-30)
+    return (jnp.where(rmask > 0.5, frac, 0.0),)
+
+
+def pi_round(seed):
+    """One Spark-Pi task: int32[1] seed -> int32[1] hits of PI_SAMPLES."""
+    return (pi_mc.pi_hits(seed),)
+
+
+def wordcount_round(tokens):
+    """One Spark-WordCount task: int32[WC_TOKENS] ids -> f32[WC_VOCAB] hist."""
+    return (wordcount.wordcount_hist(tokens),)
+
+
+def allocation_scores_tuple(c, x, d, phi, rolemat, fmask, smask, rmask):
+    """Tuple-returning wrapper for AOT lowering (PJRT root must be a tuple)."""
+    return tuple(allocation_scores(c, x, d, phi, rolemat, fmask, smask, rmask))

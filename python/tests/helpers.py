@@ -1,0 +1,76 @@
+"""Shared test helpers: padded cluster-instance builders.
+
+An "instance" is the tuple of padded arrays the scores kernel consumes:
+(c, x, d, phi, fmask, smask, rmask). ``make_instance`` builds one from dense
+(unpadded) numpy arrays; ``paper_instance`` is the illustrative example of
+the paper's §2 (eq. (1)-(2)) that Tables 1-4 are computed from.
+"""
+
+import numpy as np
+
+from compile.kernels import M_MAX, N_MAX, R_MAX
+
+
+def make_instance(c, x, d, phi=None, roles=None):
+    """Pad dense arrays (n x m x r real dims) into the kernel's fixed shapes."""
+    c = np.asarray(c, dtype=np.float32)
+    x = np.asarray(x, dtype=np.float32)
+    d = np.asarray(d, dtype=np.float32)
+    m, r = c.shape
+    n = d.shape[0]
+    assert x.shape == (n, m), (x.shape, n, m)
+    assert d.shape == (n, r)
+    assert n <= N_MAX and m <= M_MAX and r <= R_MAX
+    if phi is None:
+        phi = np.ones(n, dtype=np.float32)
+    cp = np.zeros((M_MAX, R_MAX), np.float32)
+    xp = np.zeros((N_MAX, M_MAX), np.float32)
+    dp = np.zeros((N_MAX, R_MAX), np.float32)
+    pp = np.ones(N_MAX, np.float32)
+    cp[:m, :r] = c
+    xp[:n, :m] = x
+    dp[:n, :r] = d
+    pp[:n] = phi
+    fmask = np.zeros(N_MAX, np.float32)
+    fmask[:n] = 1.0
+    smask = np.zeros(M_MAX, np.float32)
+    smask[:m] = 1.0
+    rmask = np.zeros(R_MAX, np.float32)
+    rmask[:r] = 1.0
+    rolemat = np.eye(N_MAX, dtype=np.float32)
+    if roles is not None:
+        assert len(roles) == n
+        for a in range(n):
+            for b in range(n):
+                rolemat[a, b] = 1.0 if roles[a] == roles[b] else 0.0
+    return cp, xp, dp, pp, rolemat, fmask, smask, rmask
+
+
+def paper_instance(x=None):
+    """The §2 illustrative example: d1=(5,1), d2=(1,5); c1=(100,30), c2=(30,100)."""
+    c = [[100.0, 30.0], [30.0, 100.0]]
+    d = [[5.0, 1.0], [1.0, 5.0]]
+    if x is None:
+        x = [[0.0, 0.0], [0.0, 0.0]]
+    return make_instance(c, x, d)
+
+
+def random_instance(rng, n=None, m=None, r=None, allocated=True):
+    """Random feasible instance for hypothesis/fuzz sweeps."""
+    n = n or int(rng.integers(1, N_MAX + 1))
+    m = m or int(rng.integers(1, M_MAX + 1))
+    r = r or int(rng.integers(1, R_MAX + 1))
+    c = rng.uniform(10.0, 200.0, size=(m, r)).astype(np.float32)
+    d = rng.uniform(0.5, 8.0, size=(n, r)).astype(np.float32)
+    # occasionally zero out a demand dimension (framework ignores a resource)
+    mask = rng.random((n, r)) < 0.15
+    d[mask] = 0.0
+    x = np.zeros((n, m), np.float32)
+    if allocated:
+        # allocate a few random tasks without (necessarily) exceeding capacity
+        for _ in range(int(rng.integers(0, 4 * n))):
+            ni = int(rng.integers(0, n))
+            mi = int(rng.integers(0, m))
+            x[ni, mi] += 1.0
+    phi = rng.uniform(0.5, 2.0, size=n).astype(np.float32)
+    return make_instance(c, x, d, phi)

@@ -1,0 +1,65 @@
+"""Layer-2 model graph: shapes, masking invariants, utilization math."""
+
+import numpy as np
+
+from compile import model
+from compile.kernels import BIG, M_MAX, N_MAX, R_MAX, WC_TOKENS, WC_VOCAB
+from .helpers import make_instance, paper_instance
+
+
+def test_scores_shapes():
+    out = model.allocation_scores(*paper_instance())
+    drf, tsf, ps, rps, fit, feas = [np.asarray(a) for a in out]
+    assert drf.shape == (N_MAX,)
+    assert tsf.shape == (N_MAX,)
+    assert ps.shape == (N_MAX, M_MAX)
+    assert rps.shape == (N_MAX, M_MAX)
+    assert fit.shape == (N_MAX, M_MAX)
+    assert feas.shape == (N_MAX, M_MAX)
+
+
+def test_scores_tuple_wrapper():
+    out = model.allocation_scores_tuple(*paper_instance())
+    assert isinstance(out, tuple) and len(out) == 6
+
+
+def test_utilization_paper_full():
+    """BF-DRF's Table-1 end state: server1 cpu fully used, residuals (0,10|1,3)."""
+    inst = paper_instance(x=[[20.0, 2.0], [0.0, 19.0]])
+    c, x, d, _, _, _, smask, rmask = inst
+    (util,) = model.cluster_utilization(c, x, d, smask, rmask)
+    util = np.asarray(util)
+    # total cpu used = 100 + 29 = 129 of 130; mem = 20+97 = 117 of 130
+    np.testing.assert_allclose(util[0], 129.0 / 130.0, rtol=1e-5)
+    np.testing.assert_allclose(util[1], 117.0 / 130.0, rtol=1e-5)
+    assert np.all(util[2:] == 0.0)
+
+
+def test_utilization_empty():
+    inst = paper_instance()
+    c, x, d, _, _, _, smask, rmask = inst
+    (util,) = model.cluster_utilization(c, x, d, smask, rmask)
+    np.testing.assert_allclose(np.asarray(util), 0.0)
+
+
+def test_utilization_ignores_unregistered_servers():
+    c = [[10.0, 10.0], [1000.0, 1000.0]]
+    d = [[1.0, 1.0]]
+    x = [[5.0, 0.0]]
+    inst = make_instance(c, x, d)
+    c_, x_, d_, _, _, _, smask, rmask = inst
+    smask = smask.copy()
+    smask[1] = 0.0  # pretend server 2 not registered yet (Fig 9 staging)
+    (util,) = model.cluster_utilization(c_, x_, d_, smask, rmask)
+    np.testing.assert_allclose(np.asarray(util)[0], 0.5, rtol=1e-6)
+
+
+def test_pi_round_shape():
+    (out,) = model.pi_round(np.array([5], np.int32))
+    assert np.asarray(out).shape == (1,)
+
+
+def test_wordcount_round_shape():
+    toks = np.zeros(WC_TOKENS, np.int32)
+    (out,) = model.wordcount_round(toks)
+    assert np.asarray(out).shape == (WC_VOCAB,)

@@ -1,0 +1,198 @@
+"""Pallas scores kernel vs pure-jnp oracle — the core L1 correctness signal."""
+
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from compile.kernels import BIG, M_MAX, N_MAX, R_MAX, ref, scores
+from .helpers import make_instance, paper_instance, random_instance
+
+NAMES = ["drf", "tsf", "psdsf", "rpsdsf", "fit", "feas"]
+
+
+def assert_scores_match(inst, atol=1e-4, rtol=1e-5):
+    got = scores.allocation_scores(*inst)
+    want = ref.allocation_scores(*inst)
+    for name, g, w in zip(NAMES, got, want):
+        g = np.asarray(g)
+        w = np.asarray(w)
+        # compare BIG slots exactly, finite slots with allclose
+        gb, wb = g >= BIG / 2, w >= BIG / 2
+        np.testing.assert_array_equal(gb, wb, err_msg=f"{name}: BIG mask differs")
+        np.testing.assert_allclose(g[~gb], w[~wb], atol=atol, rtol=rtol,
+                                   err_msg=f"{name}: finite values differ")
+
+
+def test_paper_instance_empty():
+    assert_scores_match(paper_instance())
+
+
+def test_paper_instance_allocated():
+    # BF-DRF's final state from Table 1: x = [[20, 2], [0, 19]]
+    assert_scores_match(paper_instance(x=[[20.0, 2.0], [0.0, 19.0]]))
+
+
+def test_drf_values_paper():
+    """Hand-checked DRF dominant shares on the §2 example."""
+    inst = paper_instance(x=[[4.0, 2.0], [1.0, 5.0]])
+    drf = np.asarray(ref.drf_shares(*inst))
+    # C = (130, 130); x_1 = 6, d_1 = (5,1) -> 30/130; x_2 = 6, d_2=(1,5) -> 30/130
+    np.testing.assert_allclose(drf[0], 30.0 / 130.0, rtol=1e-6)
+    np.testing.assert_allclose(drf[1], 30.0 / 130.0, rtol=1e-6)
+    assert np.all(drf[2:] >= BIG / 2)
+
+
+def test_tsf_nstar_paper():
+    """N*_1 = min(100/5,30/1)+min(30/5,100/1) = 20+6 = 26 on the §2 example."""
+    inst = paper_instance(x=[[13.0, 13.0], [0.0, 0.0]])
+    tsf = np.asarray(ref.tsf_shares(*inst))
+    np.testing.assert_allclose(tsf[0], 26.0 / 26.0, rtol=1e-6)
+    np.testing.assert_allclose(tsf[1], 0.0, atol=1e-9)
+
+
+def test_psdsf_values_paper():
+    """K_{n,i} = x_n * max_r d_nr/c_ir."""
+    inst = paper_instance(x=[[2.0, 0.0], [0.0, 3.0]])
+    ps = np.asarray(ref.psdsf_scores(*inst))
+    # framework 1: x=2, server 1: max(5/100, 1/30) = 1/20 -> 0.1
+    np.testing.assert_allclose(ps[0, 0], 2.0 * 5.0 / 100.0, rtol=1e-6)
+    # framework 1, server 2: max(5/30, 1/100) = 1/6 -> 2/6
+    np.testing.assert_allclose(ps[0, 1], 2.0 * 5.0 / 30.0, rtol=1e-6)
+    # framework 2, server 1: max(1/100, 5/30) -> 3 * 1/6
+    np.testing.assert_allclose(ps[1, 0], 3.0 * 5.0 / 30.0, rtol=1e-6)
+
+
+def test_rpsdsf_uses_residuals():
+    inst = paper_instance(x=[[1.0, 0.0], [0.0, 0.0]])
+    rps = np.asarray(ref.rpsdsf_scores(*inst))
+    # server 1 residual after one f1 task: (95, 29); f1: max(5/95, 1/29) = 5/95
+    np.testing.assert_allclose(rps[0, 0], 1.0 * 5.0 / 95.0, rtol=1e-6)
+    # framework 2 has x=0 -> score 0 everywhere feasible
+    np.testing.assert_allclose(rps[1, 0], 0.0, atol=1e-9)
+
+
+def test_rpsdsf_exhausted_server_big():
+    # fill server 1 cpu exactly: 20 tasks of f1 use (100, 20)
+    inst = paper_instance(x=[[20.0, 0.0], [0.0, 0.0]])
+    rps = np.asarray(ref.rpsdsf_scores(*inst))
+    assert rps[0, 0] >= BIG / 2  # no residual cpu left
+    assert rps[1, 0] >= BIG / 2  # f2 also needs cpu
+
+
+def test_feasibility_boundary():
+    # after 20 f1 tasks on server 1, residual = (0, 10): nothing fits
+    inst = paper_instance(x=[[20.0, 0.0], [0.0, 0.0]])
+    feas = np.asarray(ref.feasibility(inst[0], inst[1], inst[2], inst[5], inst[6], inst[7]))
+    assert feas[0, 0] == 0.0
+    assert feas[1, 0] == 0.0
+    assert feas[0, 1] == 1.0 and feas[1, 1] == 1.0
+
+
+def test_bestfit_prefers_matching_server():
+    """Profile match: cpu-heavy f1 -> cpu-rich server 1, mem-heavy f2 -> server 2.
+
+    This is the property that makes BF-DRF reproduce Table 1 (x_{2,1} = 0):
+    fit = max_r d/res, so f1 scores 5/100 on s1 vs 5/30 on s2, and f2 the
+    mirror image.
+    """
+    inst = paper_instance()
+    fit = np.asarray(ref.bestfit_ratio(inst[0], inst[1], inst[2], inst[5], inst[6], inst[7]))
+    np.testing.assert_allclose(fit[0, 0], 5.0 / 100.0, rtol=1e-6)
+    np.testing.assert_allclose(fit[0, 1], 5.0 / 30.0, rtol=1e-6)
+    np.testing.assert_allclose(fit[1, 0], 5.0 / 30.0, rtol=1e-6)
+    np.testing.assert_allclose(fit[1, 1], 5.0 / 100.0, rtol=1e-6)
+    assert fit[0, 0] < fit[0, 1] and fit[1, 1] < fit[1, 0]
+
+
+def test_padding_slots_are_big():
+    got = scores.allocation_scores(*paper_instance())
+    drf, tsf, ps, rps, fit, feas = [np.asarray(a) for a in got]
+    assert np.all(drf[2:] >= BIG / 2)
+    assert np.all(tsf[2:] >= BIG / 2)
+    assert np.all(ps[2:, :] >= BIG / 2)
+    assert np.all(ps[:, 2:] >= BIG / 2)
+    assert np.all(feas[2:, :] == 0.0)
+    assert np.all(feas[:, 2:] == 0.0)
+
+
+@settings(max_examples=40, deadline=None)
+@given(seed=st.integers(0, 2**31 - 1))
+def test_kernel_matches_ref_random(seed):
+    rng = np.random.default_rng(seed)
+    assert_scores_match(random_instance(rng))
+
+
+@settings(max_examples=15, deadline=None)
+@given(
+    n=st.integers(1, N_MAX),
+    m=st.integers(1, M_MAX),
+    r=st.integers(1, R_MAX),
+    seed=st.integers(0, 2**31 - 1),
+)
+def test_kernel_matches_ref_shapes(n, m, r, seed):
+    rng = np.random.default_rng(seed)
+    assert_scores_match(random_instance(rng, n=n, m=m, r=r))
+
+
+@settings(max_examples=15, deadline=None)
+@given(seed=st.integers(0, 2**31 - 1))
+def test_kernel_matches_ref_unallocated(seed):
+    rng = np.random.default_rng(seed)
+    assert_scores_match(random_instance(rng, allocated=False))
+
+
+def test_zero_demand_framework_scores_big():
+    c = [[50.0, 50.0]]
+    d = [[0.0, 0.0], [1.0, 1.0]]
+    x = [[0.0], [0.0]]
+    inst = make_instance(c, x, d)
+    drf, tsf, ps, rps, fit, feas = [np.asarray(a) for a in ref.allocation_scores(*inst)]
+    assert drf[0] >= BIG / 2 and tsf[0] >= BIG / 2
+    assert np.all(ps[0] >= BIG / 2) and np.all(rps[0] >= BIG / 2)
+    assert np.all(fit[0] >= BIG / 2)
+    assert np.all(feas[0] == 0.0)
+    assert drf[1] == 0.0  # unallocated real framework has zero share
+
+
+def test_weights_scale_shares():
+    inst_w1 = make_instance([[100.0, 100.0]], [[10.0]], [[1.0, 1.0]], phi=[1.0])
+    inst_w2 = make_instance([[100.0, 100.0]], [[10.0]], [[1.0, 1.0]], phi=[2.0])
+    d1 = np.asarray(ref.drf_shares(*inst_w1))[0]
+    d2 = np.asarray(ref.drf_shares(*inst_w2))[0]
+    np.testing.assert_allclose(d1, 2.0 * d2, rtol=1e-6)
+
+
+def test_role_aggregation_shares():
+    """Two same-role frameworks share one DRF/PS-DSF score (Mesos roles)."""
+    c = [[100.0, 30.0], [30.0, 100.0]]
+    d = [[5.0, 1.0], [5.0, 1.0], [1.0, 5.0]]
+    x = [[2.0, 0.0], [3.0, 0.0], [0.0, 4.0]]
+    inst = make_instance(c, x, d, roles=[0, 0, 1])
+    drf = np.asarray(ref.drf_shares(*inst))
+    # role 0 total = 5 tasks -> share 25/130 for BOTH members
+    np.testing.assert_allclose(drf[0], 25.0 / 130.0, rtol=1e-6)
+    np.testing.assert_allclose(drf[1], 25.0 / 130.0, rtol=1e-6)
+    np.testing.assert_allclose(drf[2], 20.0 / 130.0, rtol=1e-6)
+    # kernel agrees
+    assert_scores_match(inst)
+
+
+def test_identity_rolemat_is_per_framework():
+    a = make_instance([[50.0, 50.0]], [[2.0], [3.0]], [[1.0, 1.0], [1.0, 1.0]])
+    b = make_instance([[50.0, 50.0]], [[2.0], [3.0]], [[1.0, 1.0], [1.0, 1.0]], roles=[0, 1])
+    for ga, gb in zip(ref.allocation_scores(*a), ref.allocation_scores(*b)):
+        np.testing.assert_allclose(np.asarray(ga), np.asarray(gb))
+
+
+def test_role_aggregation_does_not_change_residuals():
+    """Feasibility/fit use raw per-framework x even with shared roles."""
+    c = [[10.0, 10.0]]
+    d = [[2.0, 2.0], [2.0, 2.0]]
+    x = [[2.0], [2.0]]
+    same = make_instance(c, x, d, roles=[0, 0])
+    diff = make_instance(c, x, d, roles=[0, 1])
+    fs = np.asarray(ref.feasibility(same[0], same[1], same[2], same[5], same[6], same[7]))
+    fd = np.asarray(ref.feasibility(diff[0], diff[1], diff[2], diff[5], diff[6], diff[7]))
+    np.testing.assert_array_equal(fs, fd)
+    # residual (2,2): one more task fits either framework
+    assert fs[0, 0] == 1.0 and fs[1, 0] == 1.0

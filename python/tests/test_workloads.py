@@ -1,0 +1,120 @@
+"""pi_mc and wordcount kernels vs their oracles + statistical sanity."""
+
+import math
+
+import numpy as np
+from hypothesis import given, settings, strategies as st
+
+from compile.kernels import PI_SAMPLES, WC_TOKENS, WC_VOCAB, pi_mc, ref, wordcount
+
+
+# --- pi_mc -------------------------------------------------------------------
+
+def test_pi_kernel_matches_ref():
+    for seed in [0, 1, 42, 123456, 2**31 - 1]:
+        s = np.array([seed], dtype=np.int32)
+        got = np.asarray(pi_mc.pi_hits(s))
+        want = np.asarray(ref.pi_hits(s, PI_SAMPLES))
+        np.testing.assert_array_equal(got, want)
+
+
+def test_pi_deterministic():
+    s = np.array([7], dtype=np.int32)
+    a = np.asarray(pi_mc.pi_hits(s))
+    b = np.asarray(pi_mc.pi_hits(s))
+    np.testing.assert_array_equal(a, b)
+
+
+def test_pi_seeds_differ():
+    a = int(np.asarray(pi_mc.pi_hits(np.array([1], np.int32)))[0])
+    b = int(np.asarray(pi_mc.pi_hits(np.array([2], np.int32)))[0])
+    assert a != b
+
+
+def test_pi_estimate_accuracy():
+    """Aggregated over 32 rounds the estimate should be within ~3 sigma.
+
+    sigma for one Bernoulli(p=pi/4) sample batch of K: sqrt(p(1-p)/K); with
+    32*16384 samples sigma(pi_hat) ~ 4*sqrt(p(1-p)/524288) ~ 0.0023.
+    """
+    total = 0
+    rounds = 32
+    for seed in range(rounds):
+        total += int(np.asarray(pi_mc.pi_hits(np.array([seed], np.int32)))[0])
+    est = 4.0 * total / (rounds * PI_SAMPLES)
+    assert abs(est - math.pi) < 0.01, est
+
+
+@settings(max_examples=20, deadline=None)
+@given(seed=st.integers(-(2**31), 2**31 - 1))
+def test_pi_kernel_matches_ref_hypothesis(seed):
+    s = np.array([seed], dtype=np.int32)
+    np.testing.assert_array_equal(
+        np.asarray(pi_mc.pi_hits(s)), np.asarray(ref.pi_hits(s, PI_SAMPLES))
+    )
+
+
+def test_pi_hash_uniformity():
+    """Chi-square smoke test of the counter hash over 16 buckets."""
+    s = np.array([99], dtype=np.int32)
+    i = np.arange(PI_SAMPLES, dtype=np.uint32)
+    import jax.numpy as jnp
+    hx = np.asarray(ref._mix(i * np.uint32(0x9E3779B9) + np.uint32(99)))
+    buckets = np.bincount((hx >> 28).astype(np.int64), minlength=16)
+    expected = PI_SAMPLES / 16
+    chi2 = float(np.sum((buckets - expected) ** 2 / expected))
+    # 15 dof, p=0.001 critical value ~ 37.7
+    assert chi2 < 37.7, (chi2, buckets)
+
+
+# --- wordcount ---------------------------------------------------------------
+
+def test_wc_kernel_matches_ref_uniform():
+    rng = np.random.default_rng(0)
+    toks = rng.integers(0, WC_VOCAB, size=WC_TOKENS).astype(np.int32)
+    got = np.asarray(wordcount.wordcount_hist(toks))
+    want = np.asarray(ref.wordcount_hist(toks, WC_VOCAB))
+    np.testing.assert_allclose(got, want)
+
+
+def test_wc_matches_numpy_bincount():
+    rng = np.random.default_rng(1)
+    toks = rng.integers(0, WC_VOCAB, size=WC_TOKENS).astype(np.int32)
+    got = np.asarray(wordcount.wordcount_hist(toks)).astype(np.int64)
+    want = np.bincount(toks, minlength=WC_VOCAB)
+    np.testing.assert_array_equal(got, want)
+
+
+def test_wc_total_preserved():
+    rng = np.random.default_rng(2)
+    toks = rng.integers(0, WC_VOCAB, size=WC_TOKENS).astype(np.int32)
+    got = np.asarray(wordcount.wordcount_hist(toks))
+    assert float(got.sum()) == WC_TOKENS
+
+
+def test_wc_out_of_range_dropped():
+    toks = np.full(WC_TOKENS, -1, dtype=np.int32)
+    toks[:10] = 3
+    got = np.asarray(wordcount.wordcount_hist(toks))
+    assert float(got.sum()) == 10.0
+    assert got[3] == 10.0
+
+
+def test_wc_skewed_distribution():
+    """Zipf-ish skew (like real word frequencies) round-trips exactly."""
+    rng = np.random.default_rng(3)
+    zipf = np.minimum(rng.zipf(1.5, size=WC_TOKENS), WC_VOCAB) - 1
+    toks = zipf.astype(np.int32)
+    got = np.asarray(wordcount.wordcount_hist(toks)).astype(np.int64)
+    want = np.bincount(toks, minlength=WC_VOCAB)
+    np.testing.assert_array_equal(got, want)
+
+
+@settings(max_examples=20, deadline=None)
+@given(seed=st.integers(0, 2**31 - 1), hi=st.integers(1, WC_VOCAB))
+def test_wc_kernel_matches_ref_hypothesis(seed, hi):
+    rng = np.random.default_rng(seed)
+    toks = rng.integers(0, hi, size=WC_TOKENS).astype(np.int32)
+    got = np.asarray(wordcount.wordcount_hist(toks))
+    want = np.asarray(ref.wordcount_hist(toks, WC_VOCAB))
+    np.testing.assert_allclose(got, want)

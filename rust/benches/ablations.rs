@@ -1,0 +1,111 @@
+//! Ablation benches for the design decisions DESIGN.md §6 calls out:
+//!
+//! 1. best-fit metric (profile-ratio vs L1 vs L2) — §6.1
+//! 2. oblivious demand-inference rule (mean vs last-grant) — §6.2
+//! 3. release staggering (pool-ish jitter vs simultaneous) — §6.3
+//! 4. speculative execution on/off (driver model, §3.2)
+
+use mesos_fair::bench::header;
+use mesos_fair::cluster::{AgentPool, ServerType};
+use mesos_fair::mesos::framework::InferenceRule;
+use mesos_fair::mesos::AllocatorMode;
+use mesos_fair::resources::ResVec;
+use mesos_fair::rng::Rng;
+use mesos_fair::scheduler::progressive::progressive_fill;
+use mesos_fair::scheduler::server_select::BestFitMetric;
+use mesos_fair::scheduler::{policy_by_name, AllocState, FrameworkEntry, NativeScorer};
+use mesos_fair::sim::online::{OnlineConfig, OnlineSim};
+use mesos_fair::cluster::ReleaseMode;
+use mesos_fair::spark::driver::SpeculationCfg;
+
+fn illustrative() -> AllocState {
+    let mut st = AllocState::new(AgentPool::new(&ServerType::illustrative()));
+    for d in [[5.0, 1.0], [1.0, 5.0]] {
+        st.add_framework(FrameworkEntry {
+            name: "f".into(),
+            demand: ResVec::new(&d),
+            weight: 1.0,
+            active: true,
+        });
+    }
+    st
+}
+
+fn main() {
+    header("ablation 1 — BF-DRF best-fit metric on the illustrative study");
+    for (metric, label) in [
+        (BestFitMetric::ProfileRatio, "profile-ratio (default)"),
+        (BestFitMetric::L1, "L1 distance"),
+        (BestFitMetric::L2, "L2 distance"),
+    ] {
+        let mut st = illustrative();
+        let mut policy = policy_by_name("bf-drf").unwrap();
+        policy.metric = metric;
+        let out =
+            progressive_fill(&mut st, &policy, &mut NativeScorer::new(), &mut Rng::new(7)).unwrap();
+        let waste: f64 = out.unused.iter().flatten().sum();
+        println!(
+            "bf-drf[{label:24}] total {:>4}  x={:?}  waste {:.0}",
+            out.total, out.x, waste
+        );
+    }
+    println!("(paper Table 1 BF-DRF total = 41; L1/L2 mis-place the mem-bound framework)");
+
+    header("ablation 2 — oblivious demand inference rule (DRF, 10 jobs/queue)");
+    for (rule, label) in [(InferenceRule::Mean, "running mean"), (InferenceRule::LastGrant, "last grant")] {
+        let mut cfg = OnlineConfig::paper("drf", AllocatorMode::Oblivious, 10);
+        cfg.seed = 0xAB1;
+        let mut sim = OnlineSim::new(cfg).unwrap();
+        sim.set_inference_rule(rule);
+        let res = sim.run().unwrap();
+        println!(
+            "inference[{label:14}] makespan {:>7.1}s  cpu {:.1}%±{:.1}  mem {:.1}%±{:.1}",
+            res.makespan,
+            100.0 * res.mean_cpu,
+            100.0 * res.std_cpu,
+            100.0 * res.mean_mem,
+            100.0 * res.std_mem
+        );
+    }
+
+    header("ablation 3 — release staggering (rPS-DSF, characterized, 10 jobs/queue)");
+    for jitter in [0.0, 2.0, 10.0] {
+        let mut cfg = OnlineConfig::paper("rpsdsf", AllocatorMode::Characterized, 10);
+        cfg.release_jitter = jitter;
+        cfg.seed = 0xAB2;
+        let res = OnlineSim::new(cfg).unwrap().run().unwrap();
+        println!(
+            "jitter {jitter:>5.1}s  makespan {:>7.1}s  cycles {:>5}  grants {:>5}",
+            res.makespan, res.cycles, res.grants
+        );
+    }
+    println!("(0 = all executors release simultaneously; >0 = §3.5.3's staggered releases)");
+
+    header("ablation 3b — pool vs sequential release handling (rrr-psdsf, characterized)");
+    for (mode, label) in [(ReleaseMode::Pool, "pool (batched)"), (ReleaseMode::Sequential, "sequential")] {
+        let mut cfg = OnlineConfig::paper("rrr-psdsf", AllocatorMode::Characterized, 10);
+        cfg.release_mode = mode;
+        cfg.seed = 0xAB4;
+        let res = OnlineSim::new(cfg).unwrap().run().unwrap();
+        println!(
+            "release[{label:16}] makespan {:>7.1}s  cycles {:>5}  mem {:.1}%±{:.1}",
+            res.makespan, res.cycles, 100.0 * res.mean_mem, 100.0 * res.std_mem
+        );
+    }
+    println!("(§3.1: pooled releases let the agent-selection mechanism act on the full set)");
+
+    header("ablation 4 — speculative execution (DRF characterized, straggly tasks)");
+    for (enabled, label) in [(true, "on"), (false, "off")] {
+        let mut cfg = OnlineConfig::paper("drf", AllocatorMode::Characterized, 10);
+        for q in &mut cfg.queues {
+            q.workload.straggler_prob = 0.08; // heavier tail to make it visible
+        }
+        cfg.speculation = SpeculationCfg { enabled, multiplier: 3.0 };
+        cfg.seed = 0xAB3;
+        let res = OnlineSim::new(cfg).unwrap().run().unwrap();
+        println!(
+            "speculation {label:3}  makespan {:>7.1}s  tasks {:>6}",
+            res.makespan, res.tasks_done
+        );
+    }
+}

@@ -1,0 +1,84 @@
+//! Bench: regenerate Figures 3–9 (the online Mesos/Spark experiments).
+//!
+//! Run with `cargo bench --bench figures` (full paper batch: 50 jobs/queue;
+//! set MESOS_FAIR_JOBS to override). Each figure prints its ASCII traces,
+//! per-run summary, and the paper's qualitative ordering check.
+
+use mesos_fair::bench::header;
+use mesos_fair::exp::{run_figure, FIGURE_IDS};
+
+fn jobs() -> usize {
+    std::env::var("MESOS_FAIR_JOBS").ok().and_then(|v| v.parse().ok()).unwrap_or(50)
+}
+
+fn main() {
+    let jobs = jobs();
+    let seed = 0x5EED;
+    let mut summaries: Vec<String> = Vec::new();
+
+    for &id in FIGURE_IDS {
+        header(&format!("Figure {id} (jobs/queue = {jobs})"));
+        let t0 = std::time::Instant::now();
+        let fig = run_figure(id, jobs, seed).expect("figure run");
+        let wall = t0.elapsed().as_secs_f64();
+        println!("{}", fig.render());
+        println!("(simulated in {wall:.2}s wall)");
+
+        // the paper's qualitative claims, checked on the full batch
+        let claim = match id {
+            3 | 4 => {
+                let drf = fig.makespan_of("drf/").unwrap();
+                let ps = fig.makespan_of("psdsf").unwrap();
+                format!("PS-DSF finishes earlier than DRF: {ps:.0}s vs {drf:.0}s ({})",
+                        if ps < drf { "OK" } else { "VIOLATED" })
+            }
+            5 => {
+                let tsf = fig.makespan_of("tsf").unwrap();
+                let bf = fig.makespan_of("bf-drf").unwrap();
+                let rps = fig.makespan_of("rpsdsf").unwrap();
+                format!(
+                    "BF-DRF ({bf:.0}s) and rPS-DSF ({rps:.0}s) shorter than TSF ({tsf:.0}s): {}",
+                    if bf < tsf && rps < tsf { "OK" } else { "VIOLATED" }
+                )
+            }
+            6 | 7 => {
+                let obl = fig.runs.iter().find(|r| r.label.contains("oblivious")).unwrap();
+                let chr = fig.runs.iter().find(|r| r.label.contains("characterized")).unwrap();
+                format!(
+                    "characterized finishes sooner ({:.0}s vs {:.0}s: {}) and with lower variance (σcpu {:.3} vs {:.3}: {})",
+                    chr.makespan, obl.makespan,
+                    if chr.makespan <= obl.makespan * 1.05 { "OK" } else { "VIOLATED" },
+                    chr.std_cpu, obl.std_cpu,
+                    if chr.std_cpu <= obl.std_cpu { "OK" } else { "check" }
+                )
+            }
+            8 => {
+                let drf = fig.makespan_of("drf").unwrap();
+                let ps = fig.makespan_of("psdsf").unwrap();
+                format!(
+                    "homogeneous: DRF ≈ PS-DSF ({drf:.0}s vs {ps:.0}s, ratio {:.2}: {})",
+                    ps / drf,
+                    if (0.9..=1.1).contains(&(ps / drf)) { "OK" } else { "check" }
+                )
+            }
+            9 => {
+                let bf = mesos_fair::exp::fig9::mid_run_mem_efficiency(&fig, "bf-drf").unwrap();
+                let rps = mesos_fair::exp::fig9::mid_run_mem_efficiency(&fig, "rpsdsf").unwrap();
+                format!(
+                    "mid-run memory efficiency: rPS-DSF {:.1}% vs BF-DRF {:.1}%: {}",
+                    100.0 * rps,
+                    100.0 * bf,
+                    if rps > bf { "OK (rPS-DSF adapts)" } else { "check" }
+                )
+            }
+            _ => unreachable!(),
+        };
+        println!("paper claim: {claim}\n");
+        summaries.push(format!("Figure {id}: {claim}"));
+    }
+
+    header("summary");
+    for s in &summaries {
+        println!("{s}");
+    }
+}

@@ -1,0 +1,89 @@
+//! Bench: scoring hot path — native rust vs AOT/PJRT (HLO) backends, plus
+//! allocation-cycle and end-to-end-simulation latency. These are the L3
+//! §Perf numbers in EXPERIMENTS.md.
+
+use mesos_fair::bench::{bench, bench_adaptive, header};
+use mesos_fair::cluster::{AgentPool, ServerType};
+use mesos_fair::mesos::AllocatorMode;
+use mesos_fair::resources::ResVec;
+use mesos_fair::rng::Rng;
+use mesos_fair::runtime::HloScorer;
+use mesos_fair::scheduler::{AllocState, FrameworkEntry, NativeScorer, Scorer};
+use mesos_fair::sim::online::{OnlineConfig, OnlineSim};
+
+/// A representative mid-experiment state: 6 agents, 10 frameworks, partial
+/// allocation.
+fn busy_state(rng: &mut Rng) -> AllocState {
+    let mut st = AllocState::new(AgentPool::new(&ServerType::paper_heterogeneous()));
+    for k in 0..10 {
+        let d = if k % 2 == 0 { ResVec::cpu_mem(2.0, 2.0) } else { ResVec::cpu_mem(1.0, 3.5) };
+        st.add_framework(FrameworkEntry {
+            name: format!("f{k}"),
+            demand: d,
+            weight: 1.0,
+            active: true,
+        });
+    }
+    for _ in 0..40 {
+        let n = rng.index(10);
+        let i = rng.index(6);
+        if st.task_fits(n, i) {
+            st.place_task(n, i).unwrap();
+        }
+    }
+    st
+}
+
+fn main() {
+    let mut rng = Rng::new(0xBE9C);
+    let st = busy_state(&mut rng);
+    let si = st.score_inputs();
+
+    header("scorer microbench (6 agents x 10 frameworks, padded 8x16x4)");
+    let mut native = NativeScorer::new();
+    let rn = bench("scorer/native (fused f64)", 100, 5000, || {
+        std::hint::black_box(native.score(&si).unwrap());
+    });
+    println!("{}", rn.render());
+
+    match HloScorer::open_default() {
+        Ok(mut hlo) => {
+            // first call compiles; do it outside timing
+            let _ = hlo.score(&si).unwrap();
+            let rh = bench("scorer/hlo (PJRT cpu, AOT pallas kernel)", 20, 500, || {
+                std::hint::black_box(hlo.score(&si).unwrap());
+            });
+            println!("{}", rh.render());
+            println!(
+                "hlo/native latency ratio: {:.1}x (PJRT call overhead dominates at this tiny instance size)",
+                rh.mean / rn.mean
+            );
+        }
+        Err(e) => println!("scorer/hlo skipped: {e} (run `make artifacts`)"),
+    }
+
+    header("allocation-cycle latency (one full cycle on a drained cluster)");
+    for policy in ["drf", "psdsf", "rpsdsf", "bf-drf"] {
+        let r = bench_adaptive(&format!("cycle/{policy}"), 1.0, 50, || {
+            let mut cfg = OnlineConfig::small(policy, AllocatorMode::Characterized);
+            cfg.seed = 7;
+            let sim = OnlineSim::new(cfg).unwrap();
+            std::hint::black_box(sim.run().unwrap());
+        });
+        println!("{}", r.render());
+    }
+
+    header("end-to-end simulated experiment (paper scale: 500 jobs, 6 agents)");
+    for policy in ["drf", "rrr-psdsf"] {
+        let t0 = std::time::Instant::now();
+        let cfg = OnlineConfig::paper(policy, AllocatorMode::Characterized, 50);
+        let res = OnlineSim::new(cfg).unwrap().run().unwrap();
+        println!(
+            "e2e/{policy:10} 500 jobs, {} tasks, {} cycles -> {:.3}s wall ({:.0} sim-seconds)",
+            res.tasks_done,
+            res.cycles,
+            t0.elapsed().as_secs_f64(),
+            res.makespan
+        );
+    }
+}

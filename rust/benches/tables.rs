@@ -1,0 +1,37 @@
+//! Bench: regenerate Tables 1–4 (the §2 illustrative study).
+//!
+//! Run with `cargo bench --bench tables`. Prints the full
+//! measured-vs-paper tables and times the 200-trial sweep (an L3 perf
+//! headline tracked in EXPERIMENTS.md §Perf).
+
+use mesos_fair::bench::{bench, header};
+use mesos_fair::exp::tables::run_illustrative;
+
+fn main() {
+    header("Tables 1-4 — progressive filling, illustrative example (d1=(5,1), d2=(1,5))");
+    let t = run_illustrative(200, 0x5EED);
+    println!("{}", t.render());
+
+    // paper-shape assertions: fail the bench loudly if the reproduction drifts
+    let drf = t.row("drf").expect("drf row");
+    let rps = t.row("rpsdsf").expect("rpsdsf row");
+    let ps = t.row("psdsf").expect("psdsf row");
+    assert!((drf.total.mean - 22.48).abs() < 2.0, "DRF total drifted: {}", drf.total.mean);
+    assert!((rps.total.mean - 42.0).abs() < 1.0, "rPS-DSF total drifted: {}", rps.total.mean);
+    assert!((ps.total.mean - 41.0).abs() < 1.0, "PS-DSF total drifted: {}", ps.total.mean);
+    assert!(drf.x[0].stddev > 1.0, "DRF variance vanished: {}", drf.x[0].stddev);
+    println!("paper-shape assertions passed\n");
+
+    let r = bench("tables/200-trial sweep (all 6 schedulers)", 1, 10, || {
+        std::hint::black_box(run_illustrative(200, 0x5EED));
+    });
+    println!("{}", r.render());
+
+    let r1 = bench("tables/single drf trial", 3, 200, || {
+        let mut scorer = mesos_fair::scheduler::NativeScorer::new();
+        std::hint::black_box(
+            mesos_fair::exp::tables::one_trial("drf", 1, &mut scorer).unwrap(),
+        );
+    });
+    println!("{}", r1.render());
+}

@@ -1,0 +1,154 @@
+//! Criterion-like benchmark harness (criterion itself is unavailable
+//! offline): warmup, timed iterations, outlier-robust statistics, and a
+//! compact report — used by every binary under `rust/benches/`.
+
+use crate::metrics::stats::{percentile, Summary};
+use std::time::Instant;
+
+/// Result of one benchmark.
+#[derive(Debug, Clone)]
+pub struct BenchResult {
+    pub name: String,
+    pub iters: usize,
+    /// Per-iteration wall time, seconds.
+    pub mean: f64,
+    pub stddev: f64,
+    pub p50: f64,
+    pub p95: f64,
+    pub min: f64,
+    pub max: f64,
+}
+
+impl BenchResult {
+    /// "name   mean ± sd  (p50 / p95)  xN" line with adaptive units.
+    pub fn render(&self) -> String {
+        format!(
+            "{:40} {:>12} ± {:>10}   p50 {:>12}  p95 {:>12}   ({} iters)",
+            self.name,
+            fmt_secs(self.mean),
+            fmt_secs(self.stddev),
+            fmt_secs(self.p50),
+            fmt_secs(self.p95),
+            self.iters
+        )
+    }
+}
+
+/// Format seconds with ns/µs/ms/s units.
+pub fn fmt_secs(s: f64) -> String {
+    if s < 1e-6 {
+        format!("{:.1}ns", s * 1e9)
+    } else if s < 1e-3 {
+        format!("{:.2}µs", s * 1e6)
+    } else if s < 1.0 {
+        format!("{:.3}ms", s * 1e3)
+    } else {
+        format!("{:.3}s", s)
+    }
+}
+
+/// Run `f` for `warmup` unmeasured iterations, then measure `iters`.
+pub fn bench<F: FnMut()>(name: &str, warmup: usize, iters: usize, mut f: F) -> BenchResult {
+    assert!(iters >= 1);
+    for _ in 0..warmup {
+        f();
+    }
+    let mut times = Vec::with_capacity(iters);
+    for _ in 0..iters {
+        let t0 = Instant::now();
+        f();
+        times.push(t0.elapsed().as_secs_f64());
+    }
+    summarize(name, &times)
+}
+
+/// Adaptive variant: iterate until ~`target_secs` of measured time (at
+/// least `min_iters`). Good for benches whose cost is unknown up front.
+pub fn bench_adaptive<F: FnMut()>(
+    name: &str,
+    target_secs: f64,
+    min_iters: usize,
+    mut f: F,
+) -> BenchResult {
+    // one warmup + calibration run
+    let t0 = Instant::now();
+    f();
+    let first = t0.elapsed().as_secs_f64().max(1e-9);
+    let iters = ((target_secs / first) as usize).clamp(min_iters, 100_000);
+    let mut times = Vec::with_capacity(iters);
+    for _ in 0..iters {
+        let t0 = Instant::now();
+        f();
+        times.push(t0.elapsed().as_secs_f64());
+    }
+    summarize(name, &times)
+}
+
+fn summarize(name: &str, times: &[f64]) -> BenchResult {
+    let mut sorted = times.to_vec();
+    sorted.sort_by(|a, b| a.partial_cmp(b).unwrap());
+    let s = Summary::of(times);
+    BenchResult {
+        name: name.to_string(),
+        iters: times.len(),
+        mean: s.mean,
+        stddev: s.stddev,
+        p50: percentile(&sorted, 0.5),
+        p95: percentile(&sorted, 0.95),
+        min: s.min,
+        max: s.max,
+    }
+}
+
+/// Standard bench-binary header (cargo bench passes `--bench`; we ignore
+/// args but accept a filter as argv[1]).
+pub fn header(title: &str) {
+    println!("\n=== {title} ===");
+}
+
+/// `true` if `name` matches the optional CLI filter (argv after `--`).
+pub fn selected(name: &str) -> bool {
+    let args: Vec<String> = std::env::args().skip(1).filter(|a| !a.starts_with('-')).collect();
+    args.is_empty() || args.iter().any(|a| name.contains(a.as_str()))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn bench_measures_work() {
+        let mut acc = 0u64;
+        let r = bench("spin", 2, 20, || {
+            for i in 0..1000 {
+                acc = acc.wrapping_add(i);
+            }
+        });
+        assert_eq!(r.iters, 20);
+        assert!(r.mean > 0.0);
+        assert!(r.min <= r.p50 && r.p50 <= r.max);
+        assert!(acc > 0);
+    }
+
+    #[test]
+    fn adaptive_respects_min() {
+        let r = bench_adaptive("fast", 0.001, 5, || {
+            std::hint::black_box(1 + 1);
+        });
+        assert!(r.iters >= 5);
+    }
+
+    #[test]
+    fn unit_formatting() {
+        assert!(fmt_secs(2.5e-9).ends_with("ns"));
+        assert!(fmt_secs(2.5e-5).ends_with("µs"));
+        assert!(fmt_secs(2.5e-3).ends_with("ms"));
+        assert!(fmt_secs(2.5).ends_with('s'));
+    }
+
+    #[test]
+    fn render_contains_name() {
+        let r = bench("named", 0, 3, || {});
+        assert!(r.render().contains("named"));
+    }
+}

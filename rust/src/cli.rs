@@ -1,0 +1,153 @@
+//! Hand-rolled CLI (clap is unavailable offline): subcommand + `--key value`
+//! flags.
+
+use crate::error::{Error, Result};
+use std::collections::HashMap;
+
+/// Parsed command line.
+#[derive(Debug, Clone, Default)]
+pub struct Args {
+    /// First non-flag token ("tables", "figure", …).
+    pub command: Option<String>,
+    /// Remaining non-flag tokens.
+    pub positional: Vec<String>,
+    flags: HashMap<String, String>,
+    /// Bare `--flag`s with no value.
+    switches: Vec<String>,
+}
+
+impl Args {
+    /// Parse from an iterator of tokens (excluding argv[0]).
+    pub fn parse<I: IntoIterator<Item = String>>(tokens: I) -> Result<Args> {
+        let mut out = Args::default();
+        let mut iter = tokens.into_iter().peekable();
+        while let Some(tok) = iter.next() {
+            if let Some(name) = tok.strip_prefix("--") {
+                if name.is_empty() {
+                    return Err(Error::Config("empty flag '--'".into()));
+                }
+                if let Some((k, v)) = name.split_once('=') {
+                    out.flags.insert(k.to_string(), v.to_string());
+                } else if iter.peek().map(|n| !n.starts_with("--")).unwrap_or(false) {
+                    let v = iter.next().unwrap();
+                    out.flags.insert(name.to_string(), v);
+                } else {
+                    out.switches.push(name.to_string());
+                }
+            } else if out.command.is_none() {
+                out.command = Some(tok);
+            } else {
+                out.positional.push(tok);
+            }
+        }
+        Ok(out)
+    }
+
+    /// Parse from the process arguments.
+    pub fn from_env() -> Result<Args> {
+        Args::parse(std::env::args().skip(1))
+    }
+
+    pub fn flag(&self, name: &str) -> Option<&str> {
+        self.flags.get(name).map(String::as_str)
+    }
+
+    pub fn flag_or(&self, name: &str, default: &str) -> String {
+        self.flag(name).unwrap_or(default).to_string()
+    }
+
+    pub fn flag_usize(&self, name: &str, default: usize) -> Result<usize> {
+        match self.flag(name) {
+            None => Ok(default),
+            Some(v) => v
+                .parse()
+                .map_err(|_| Error::Config(format!("--{name} expects an integer, got '{v}'"))),
+        }
+    }
+
+    pub fn flag_u64(&self, name: &str, default: u64) -> Result<u64> {
+        match self.flag(name) {
+            None => Ok(default),
+            Some(v) => {
+                let v = v.trim_start_matches("0x");
+                u64::from_str_radix(v, 16)
+                    .or_else(|_| v.parse())
+                    .map_err(|_| Error::Config(format!("--{name} expects an integer, got '{v}'")))
+            }
+        }
+    }
+
+    pub fn has(&self, switch: &str) -> bool {
+        self.switches.iter().any(|s| s == switch) || self.flags.contains_key(switch)
+    }
+}
+
+/// Top-level usage text.
+pub const USAGE: &str = "\
+mesos-fair — fair scheduling of Spark workloads on a Mesos-like cluster
+(Shan et al. 2018 reproduction; see DESIGN.md / EXPERIMENTS.md)
+
+USAGE:
+    mesos-fair <COMMAND> [FLAGS]
+
+COMMANDS:
+    tables                 Reproduce Tables 1-4 (progressive filling, 200 trials)
+    figure <3..9>          Reproduce one online figure
+    online                 Run a single online experiment
+    e2e                    End-to-end run with real PJRT task compute
+    parity                 Cross-check the native and HLO scorers
+    list                   List schedulers and figure ids
+    help                   Show this help
+
+COMMON FLAGS:
+    --trials N             Trials for the tables study        [default: 200]
+    --jobs N               Jobs per submission queue          [default: 50]
+    --seed S               RNG seed (hex ok)                  [default: 0x5EED]
+    --scheduler NAME       drf|tsf|bf-drf|psdsf|rrr-psdsf|rpsdsf|rrr-rpsdsf
+    --mode MODE            oblivious|characterized            [default: characterized]
+    --scorer BACKEND       native|hlo                         [default: native]
+    --config FILE          Online experiment TOML (see config/)
+    --homogeneous          Use the six type-3 cluster (§3.6)
+    --staged               Staged agent registration (§3.7)
+    --csv DIR              Also write CSV outputs to DIR
+";
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn parse(s: &str) -> Args {
+        Args::parse(s.split_whitespace().map(String::from)).unwrap()
+    }
+
+    #[test]
+    fn parses_command_and_flags() {
+        let a = parse("figure 5 --jobs 10 --seed 0xAB --plot");
+        assert_eq!(a.command.as_deref(), Some("figure"));
+        assert_eq!(a.positional, vec!["5"]);
+        assert_eq!(a.flag_usize("jobs", 50).unwrap(), 10);
+        assert_eq!(a.flag_u64("seed", 0).unwrap(), 0xAB);
+        assert!(a.has("plot"));
+        assert!(!a.has("csv"));
+    }
+
+    #[test]
+    fn equals_form() {
+        let a = parse("online --scheduler=rpsdsf --mode=oblivious");
+        assert_eq!(a.flag("scheduler"), Some("rpsdsf"));
+        assert_eq!(a.flag("mode"), Some("oblivious"));
+    }
+
+    #[test]
+    fn bad_numbers_error() {
+        let a = parse("tables --trials banana");
+        assert!(a.flag_usize("trials", 200).is_err());
+    }
+
+    #[test]
+    fn defaults_apply() {
+        let a = parse("tables");
+        assert_eq!(a.flag_usize("trials", 200).unwrap(), 200);
+        assert_eq!(a.flag_or("scorer", "native"), "native");
+    }
+}

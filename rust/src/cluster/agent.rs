@@ -1,0 +1,167 @@
+//! A Mesos agent (a.k.a. server/slave/worker — paper footnote 1).
+//!
+//! Agents track total capacity and the resources currently *reserved* by
+//! running executors. All mutation goes through [`Agent::reserve`] /
+//! [`Agent::release`], which enforce the cluster's core invariant: reserved
+//! never exceeds capacity and never goes negative.
+
+use crate::error::{Error, Result};
+use crate::resources::ResVec;
+
+/// Dense agent identifier (index into the pool).
+pub type AgentId = usize;
+
+/// One server of the cluster.
+#[derive(Debug, Clone)]
+pub struct Agent {
+    /// Pool index.
+    pub id: AgentId,
+    /// Server-type name (for reports).
+    pub type_name: String,
+    /// Total capacity `c_{i,·}`.
+    pub capacity: ResVec,
+    /// Currently reserved resources `Σ_n x_{n,i} d_{n,·}`.
+    reserved: ResVec,
+    /// Whether the agent has registered with the master (Fig 9 staging).
+    pub registered: bool,
+}
+
+impl Agent {
+    pub fn new(id: AgentId, type_name: impl Into<String>, capacity: ResVec) -> Self {
+        Agent {
+            id,
+            type_name: type_name.into(),
+            capacity,
+            reserved: ResVec::zero(capacity.len()),
+            registered: true,
+        }
+    }
+
+    /// Currently reserved resources.
+    pub fn reserved(&self) -> ResVec {
+        self.reserved
+    }
+
+    /// Residual (unreserved) capacity — the paper's `c_{i,r} − Σ_n x_{n,i} d_{n,r}`.
+    pub fn residual(&self) -> ResVec {
+        self.capacity - self.reserved
+    }
+
+    /// `true` iff `demand` fits in the current residual.
+    pub fn can_fit(&self, demand: &ResVec) -> bool {
+        self.registered && demand.fits_within(&self.residual())
+    }
+
+    /// Reserve `demand`; errors if it does not fit (the allocator must only
+    /// grant feasible offers — a failure here is a scheduler bug).
+    pub fn reserve(&mut self, demand: &ResVec) -> Result<()> {
+        if !self.registered {
+            return Err(Error::Cluster(format!("agent {} not registered", self.id)));
+        }
+        if !demand.fits_within(&self.residual()) {
+            return Err(Error::Cluster(format!(
+                "agent {}: demand {} exceeds residual {}",
+                self.id,
+                demand,
+                self.residual()
+            )));
+        }
+        self.reserved += *demand;
+        Ok(())
+    }
+
+    /// Release previously reserved resources.
+    pub fn release(&mut self, demand: &ResVec) -> Result<()> {
+        let after = self.reserved - *demand;
+        if !after.non_negative() {
+            return Err(Error::Cluster(format!(
+                "agent {}: releasing {} below zero (reserved {})",
+                self.id, demand, self.reserved
+            )));
+        }
+        self.reserved = after;
+        Ok(())
+    }
+
+    /// Fraction of capacity reserved, per resource lane.
+    pub fn utilization(&self) -> Vec<f64> {
+        self.reserved
+            .as_slice()
+            .iter()
+            .zip(self.capacity.as_slice())
+            .map(|(u, c)| if *c > 0.0 { u / c } else { 0.0 })
+            .collect()
+    }
+
+    /// `true` iff at least one resource lane is (numerically) exhausted —
+    /// the paper's §1 stopping condition for progressive filling.
+    pub fn some_resource_exhausted(&self) -> bool {
+        self.residual().any_lane_zero(&self.capacity)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn agent() -> Agent {
+        Agent::new(0, "type-3", ResVec::cpu_mem(6.0, 11.0))
+    }
+
+    #[test]
+    fn reserve_release_roundtrip() {
+        let mut a = agent();
+        let pi = ResVec::cpu_mem(2.0, 2.0);
+        a.reserve(&pi).unwrap();
+        a.reserve(&pi).unwrap();
+        assert_eq!(a.residual().as_slice(), &[2.0, 7.0]);
+        a.release(&pi).unwrap();
+        assert_eq!(a.residual().as_slice(), &[4.0, 9.0]);
+    }
+
+    #[test]
+    fn over_reserve_rejected() {
+        let mut a = agent();
+        let big = ResVec::cpu_mem(7.0, 1.0);
+        assert!(a.reserve(&big).is_err());
+        // state unchanged after failed reserve
+        assert_eq!(a.residual().as_slice(), &[6.0, 11.0]);
+    }
+
+    #[test]
+    fn over_release_rejected() {
+        let mut a = agent();
+        let pi = ResVec::cpu_mem(2.0, 2.0);
+        a.reserve(&pi).unwrap();
+        assert!(a.release(&ResVec::cpu_mem(3.0, 2.0)).is_err());
+    }
+
+    #[test]
+    fn exact_fill_allowed_and_detected() {
+        let mut a = agent();
+        a.reserve(&ResVec::cpu_mem(2.0, 2.0)).unwrap();
+        a.reserve(&ResVec::cpu_mem(2.0, 2.0)).unwrap();
+        a.reserve(&ResVec::cpu_mem(1.0, 3.5)).unwrap();
+        a.reserve(&ResVec::cpu_mem(1.0, 3.5)).unwrap();
+        assert!(a.residual().is_zero());
+        assert!(a.some_resource_exhausted());
+        assert!(!a.can_fit(&ResVec::cpu_mem(0.5, 0.5)));
+    }
+
+    #[test]
+    fn unregistered_agent_rejects() {
+        let mut a = agent();
+        a.registered = false;
+        assert!(!a.can_fit(&ResVec::cpu_mem(1.0, 1.0)));
+        assert!(a.reserve(&ResVec::cpu_mem(1.0, 1.0)).is_err());
+    }
+
+    #[test]
+    fn utilization_fractions() {
+        let mut a = agent();
+        a.reserve(&ResVec::cpu_mem(3.0, 5.5)).unwrap();
+        let u = a.utilization();
+        assert!((u[0] - 0.5).abs() < 1e-12);
+        assert!((u[1] - 0.5).abs() < 1e-12);
+    }
+}

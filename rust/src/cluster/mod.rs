@@ -1,0 +1,12 @@
+//! Cluster substrate: agents (Mesos' name for servers/workers), server-type
+//! presets matching the paper's testbed, and the agent pool with
+//! registration dynamics (including the staged one-by-one registration of
+//! the Figure-9 experiment).
+
+pub mod agent;
+pub mod pool;
+pub mod types;
+
+pub use agent::{Agent, AgentId};
+pub use pool::{AgentPool, ReleaseMode};
+pub use types::ServerType;

@@ -1,0 +1,207 @@
+//! The agent pool the allocator draws from.
+//!
+//! Paper §3.1: "at times the Mesos allocator sequentially schedules agents
+//! with available resources …, while at other times the released agents are
+//! scheduled as a pool so that the agent-selection mechanism would be
+//! relevant. Initially, the agents are always scheduled … as a pool."
+//! [`ReleaseMode`] models both behaviours; §3.7's one-by-one registration is
+//! [`AgentPool::register_next`].
+
+use crate::cluster::agent::{Agent, AgentId};
+use crate::cluster::types::ServerType;
+use crate::error::Result;
+use crate::resources::ResVec;
+
+/// How freed resources reach the allocator (DESIGN.md §6.3).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum ReleaseMode {
+    /// Released agents form a pool; the scheduler's agent-selection
+    /// mechanism (RRR / best-fit / joint) chooses among them. Default.
+    Pool,
+    /// Released agents are handed to the allocator one at a time in release
+    /// order, so agent selection is moot.
+    Sequential,
+}
+
+/// All agents of the cluster, registered or pending.
+#[derive(Debug, Clone)]
+pub struct AgentPool {
+    agents: Vec<Agent>,
+}
+
+impl AgentPool {
+    /// Build a pool with every agent registered (the §3.3/§3.6 clusters).
+    pub fn new(types: &[ServerType]) -> Self {
+        let agents = types
+            .iter()
+            .enumerate()
+            .map(|(i, t)| Agent::new(i, t.name.clone(), t.capacity))
+            .collect();
+        AgentPool { agents }
+    }
+
+    /// Build a pool where no agent is registered yet (Fig-9 staging);
+    /// register them one-by-one with [`AgentPool::register_next`].
+    pub fn new_staged(types: &[ServerType]) -> Self {
+        let mut pool = AgentPool::new(types);
+        for a in &mut pool.agents {
+            a.registered = false;
+        }
+        pool
+    }
+
+    /// Register the first still-unregistered agent; returns its id.
+    pub fn register_next(&mut self) -> Option<AgentId> {
+        for a in &mut self.agents {
+            if !a.registered {
+                a.registered = true;
+                return Some(a.id);
+            }
+        }
+        None
+    }
+
+    pub fn len(&self) -> usize {
+        self.agents.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.agents.is_empty()
+    }
+
+    pub fn agent(&self, id: AgentId) -> &Agent {
+        &self.agents[id]
+    }
+
+    pub fn agent_mut(&mut self, id: AgentId) -> &mut Agent {
+        &mut self.agents[id]
+    }
+
+    pub fn agents(&self) -> &[Agent] {
+        &self.agents
+    }
+
+    /// Ids of registered agents.
+    pub fn registered_ids(&self) -> Vec<AgentId> {
+        self.agents.iter().filter(|a| a.registered).map(|a| a.id).collect()
+    }
+
+    /// Ids of registered agents with any free resources.
+    pub fn available_ids(&self) -> Vec<AgentId> {
+        self.agents
+            .iter()
+            .filter(|a| a.registered && a.residual().any_positive())
+            .map(|a| a.id)
+            .collect()
+    }
+
+    /// Number of real resource kinds (uniform across agents).
+    pub fn resource_kinds(&self) -> usize {
+        self.agents.first().map_or(0, |a| a.capacity.len())
+    }
+
+    /// Total capacity over registered agents (`C_r = Σ_i c_{i,r}` — DRF's
+    /// denominator).
+    pub fn total_capacity(&self) -> ResVec {
+        let len = self.resource_kinds();
+        let mut tot = ResVec::zero(len);
+        for a in &self.agents {
+            if a.registered {
+                tot += a.capacity;
+            }
+        }
+        tot
+    }
+
+    /// Total reserved over registered agents.
+    pub fn total_reserved(&self) -> ResVec {
+        let len = self.resource_kinds();
+        let mut tot = ResVec::zero(len);
+        for a in &self.agents {
+            if a.registered {
+                tot += a.reserved();
+            }
+        }
+        tot
+    }
+
+    /// Cluster-level allocated fraction per resource — the Figures 3–8
+    /// y-axis. Mirrors `model.cluster_utilization` (parity-tested).
+    pub fn utilization(&self) -> Vec<f64> {
+        let cap = self.total_capacity();
+        let used = self.total_reserved();
+        used.as_slice()
+            .iter()
+            .zip(cap.as_slice())
+            .map(|(u, c)| if *c > 0.0 { u / c } else { 0.0 })
+            .collect()
+    }
+
+    /// Reserve `demand` on agent `id`.
+    pub fn reserve(&mut self, id: AgentId, demand: &ResVec) -> Result<()> {
+        self.agents[id].reserve(demand)
+    }
+
+    /// Release `demand` on agent `id`.
+    pub fn release(&mut self, id: AgentId, demand: &ResVec) -> Result<()> {
+        self.agents[id].release(demand)
+    }
+
+    /// `true` iff no registered agent can fit `demand`.
+    pub fn nothing_fits(&self, demand: &ResVec) -> bool {
+        !self.agents.iter().any(|a| a.can_fit(demand))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn paper_cluster_totals() {
+        let pool = AgentPool::new(&ServerType::paper_heterogeneous());
+        // 2*(4,14) + 2*(8,8) + 2*(6,11) = (36, 66)
+        assert_eq!(pool.total_capacity().as_slice(), &[36.0, 66.0]);
+        assert_eq!(pool.available_ids().len(), 6);
+    }
+
+    #[test]
+    fn staged_registration_order() {
+        let mut pool = AgentPool::new_staged(&ServerType::paper_staged());
+        assert!(pool.registered_ids().is_empty());
+        assert_eq!(pool.total_capacity().as_slice(), &[0.0, 0.0]);
+        assert_eq!(pool.register_next(), Some(0)); // type-1 first, per §3.7
+        assert_eq!(pool.agent(0).type_name, "type-1");
+        assert_eq!(pool.register_next(), Some(1));
+        assert_eq!(pool.register_next(), Some(2));
+        assert_eq!(pool.register_next(), None);
+        assert_eq!(pool.registered_ids(), vec![0, 1, 2]);
+    }
+
+    #[test]
+    fn utilization_tracks_reservations() {
+        let mut pool = AgentPool::new(&ServerType::paper_homogeneous());
+        let pi = ResVec::cpu_mem(2.0, 2.0);
+        for id in 0..3 {
+            pool.reserve(id, &pi).unwrap();
+        }
+        let u = pool.utilization();
+        assert!((u[0] - 6.0 / 36.0).abs() < 1e-12);
+        assert!((u[1] - 6.0 / 66.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn available_excludes_full_agents() {
+        let mut pool = AgentPool::new(&[ServerType::type2()]);
+        pool.reserve(0, &ResVec::cpu_mem(8.0, 8.0)).unwrap();
+        assert!(pool.available_ids().is_empty());
+        assert!(pool.nothing_fits(&ResVec::cpu_mem(1.0, 1.0)));
+    }
+
+    #[test]
+    fn unregistered_agents_excluded_from_totals() {
+        let mut pool = AgentPool::new_staged(&ServerType::paper_staged());
+        pool.register_next();
+        assert_eq!(pool.total_capacity().as_slice(), &[4.0, 14.0]);
+    }
+}

@@ -1,0 +1,96 @@
+//! Server-type presets.
+//!
+//! Paper §3.3: the Mesos agents are six AWS c3.2xlarge VMs, two each of
+//! three types; §3.6 uses six type-3 servers; §3.7/Fig-9 one of each type.
+//! §2's illustrative study uses two synthetic heterogeneous servers.
+
+use crate::resources::ResVec;
+
+/// A named server configuration.
+#[derive(Debug, Clone, PartialEq)]
+pub struct ServerType {
+    /// Human-readable name ("type-1", …).
+    pub name: String,
+    /// Capacity vector.
+    pub capacity: ResVec,
+}
+
+impl ServerType {
+    pub fn new<S: Into<String>>(name: S, capacity: ResVec) -> Self {
+        ServerType { name: name.into(), capacity }
+    }
+
+    /// Type-1: 4 CPUs, 14 GB — "well utilized by 4 WordCount tasks".
+    pub fn type1() -> Self {
+        ServerType::new("type-1", ResVec::cpu_mem(4.0, 14.0))
+    }
+
+    /// Type-2: 8 CPUs, 8 GB — "well utilized by 4 Pi tasks".
+    pub fn type2() -> Self {
+        ServerType::new("type-2", ResVec::cpu_mem(8.0, 8.0))
+    }
+
+    /// Type-3: 6 CPUs, 11 GB — "well utilized by 2 Pi and 2 WordCount tasks".
+    pub fn type3() -> Self {
+        ServerType::new("type-3", ResVec::cpu_mem(6.0, 11.0))
+    }
+
+    /// The paper's heterogeneous cluster: two agents of each type (§3.3).
+    pub fn paper_heterogeneous() -> Vec<ServerType> {
+        vec![
+            ServerType::type1(),
+            ServerType::type1(),
+            ServerType::type2(),
+            ServerType::type2(),
+            ServerType::type3(),
+            ServerType::type3(),
+        ]
+    }
+
+    /// The homogeneous cluster of §3.6: six type-3 agents.
+    pub fn paper_homogeneous() -> Vec<ServerType> {
+        (0..6).map(|_| ServerType::type3()).collect()
+    }
+
+    /// The Fig-9 cluster: one agent of each type, registered one by one.
+    pub fn paper_staged() -> Vec<ServerType> {
+        vec![ServerType::type1(), ServerType::type2(), ServerType::type3()]
+    }
+
+    /// §2's illustrative pair: c1 = (100, 30), c2 = (30, 100).
+    pub fn illustrative() -> Vec<ServerType> {
+        vec![
+            ServerType::new("illus-1", ResVec::new(&[100.0, 30.0])),
+            ServerType::new("illus-2", ResVec::new(&[30.0, 100.0])),
+        ]
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn paper_capacity_sanity() {
+        // "well utilized by 4 WordCount tasks" (1 cpu, 3.5 GB each)
+        let t1 = ServerType::type1();
+        let wc = ResVec::cpu_mem(1.0, 3.5);
+        assert_eq!(wc.whole_tasks_within(&t1.capacity), Some(4));
+        // "well utilized by 4 Pi tasks" (2 cpu, 2 GB each)
+        let t2 = ServerType::type2();
+        let pi = ResVec::cpu_mem(2.0, 2.0);
+        assert_eq!(pi.whole_tasks_within(&t2.capacity), Some(4));
+        // type-3 fits 2 Pi + 2 WC: 2*(2,2)+2*(1,3.5) = (6, 11) exactly
+        let t3 = ServerType::type3();
+        let used = pi.scaled(2.0) + wc.scaled(2.0);
+        assert_eq!(used.as_slice(), t3.capacity.as_slice());
+    }
+
+    #[test]
+    fn cluster_presets_sizes() {
+        assert_eq!(ServerType::paper_heterogeneous().len(), 6);
+        assert_eq!(ServerType::paper_homogeneous().len(), 6);
+        assert_eq!(ServerType::paper_staged().len(), 3);
+        assert_eq!(ServerType::illustrative().len(), 2);
+    }
+}

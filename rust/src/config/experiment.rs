@@ -1,0 +1,151 @@
+//! Typed loading of online-experiment configurations from TOML files.
+
+use crate::cluster::ServerType;
+use crate::config::toml::{TomlDoc, TomlTable};
+use crate::error::{Error, Result};
+use crate::mesos::AllocatorMode;
+use crate::sim::online::{OnlineConfig, QueueSpec};
+use crate::spark::workload::WorkloadSpec;
+
+/// Resolve a server-type name from config.
+fn server_type(name: &str) -> Result<ServerType> {
+    match name {
+        "type-1" => Ok(ServerType::type1()),
+        "type-2" => Ok(ServerType::type2()),
+        "type-3" => Ok(ServerType::type3()),
+        "illus-1" => Ok(ServerType::illustrative().swap_remove(0)),
+        "illus-2" => Ok(ServerType::illustrative().swap_remove(1)),
+        other => Err(Error::Config(format!("unknown server type '{other}'"))),
+    }
+}
+
+/// Resolve a workload spec, applying optional per-queue overrides.
+fn workload(table: &TomlTable) -> Result<WorkloadSpec> {
+    let name = table
+        .get("workload")
+        .and_then(|v| v.as_str())
+        .ok_or_else(|| Error::Config("queue missing 'workload'".into()))?;
+    let mut spec = match name {
+        "pi" => WorkloadSpec::pi(),
+        "wordcount" => WorkloadSpec::wordcount(),
+        other => return Err(Error::Config(format!("unknown workload '{other}'"))),
+    };
+    if let Some(v) = table.get("tasks_per_job").and_then(|v| v.as_i64()) {
+        spec.tasks_per_job = v as usize;
+    }
+    if let Some(v) = table.get("max_executors").and_then(|v| v.as_i64()) {
+        spec.max_executors = v as usize;
+    }
+    if let Some(v) = table.get("mean_task_secs").and_then(|v| v.as_f64()) {
+        spec.mean_task_secs = v;
+    }
+    Ok(spec)
+}
+
+/// Load an [`OnlineConfig`] from TOML text.
+pub fn parse_online_config(text: &str) -> Result<OnlineConfig> {
+    let doc = TomlDoc::parse(text)?;
+    let policy = doc
+        .get("experiment.policy")
+        .and_then(|v| v.as_str())
+        .unwrap_or("drf")
+        .to_string();
+    let mode = match doc.get("experiment.mode").and_then(|v| v.as_str()).unwrap_or("characterized")
+    {
+        "oblivious" => AllocatorMode::Oblivious,
+        "characterized" => AllocatorMode::Characterized,
+        other => return Err(Error::Config(format!("unknown mode '{other}'"))),
+    };
+    // start from the paper defaults, then override
+    let mut cfg = OnlineConfig::paper(&policy, mode, 50);
+    cfg.queues.clear();
+
+    if let Some(servers) = doc.get("cluster.servers").and_then(|v| v.as_array()) {
+        let mut cluster = Vec::new();
+        for s in servers {
+            let name = s.as_str().ok_or_else(|| Error::Config("server names must be strings".into()))?;
+            cluster.push(server_type(name)?);
+        }
+        cfg.cluster = cluster;
+    }
+    for q in doc.array("queue") {
+        let jobs = q.get("jobs").and_then(|v| v.as_i64()).unwrap_or(50) as usize;
+        cfg.queues.push(QueueSpec { workload: workload(q)?, jobs });
+    }
+    if cfg.queues.is_empty() {
+        return Err(Error::Config("config defines no [[queue]] entries".into()));
+    }
+    if let Some(v) = doc.get("experiment.seed").and_then(|v| v.as_i64()) {
+        cfg.seed = v as u64;
+    }
+    if let Some(v) = doc.get("experiment.staged").and_then(|v| v.as_bool()) {
+        cfg.staged = v;
+    }
+    if let Some(v) = doc.get("experiment.stage_interval").and_then(|v| v.as_f64()) {
+        cfg.stage_interval = v;
+    }
+    if let Some(v) = doc.get("experiment.sample_dt").and_then(|v| v.as_f64()) {
+        cfg.sample_dt = v;
+    }
+    if let Some(v) = doc.get("experiment.release_jitter").and_then(|v| v.as_f64()) {
+        cfg.release_jitter = v;
+    }
+    Ok(cfg)
+}
+
+/// Load from a file path.
+pub fn load_online_config(path: &str) -> Result<OnlineConfig> {
+    let text = std::fs::read_to_string(path)
+        .map_err(|e| Error::Config(format!("cannot read {path}: {e}")))?;
+    parse_online_config(&text)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    const CFG: &str = r#"
+        [experiment]
+        policy = "rpsdsf"
+        mode = "oblivious"
+        seed = 7
+        staged = true
+        stage_interval = 30.0
+
+        [cluster]
+        servers = ["type-1", "type-2", "type-3"]
+
+        [[queue]]
+        workload = "pi"
+        jobs = 20
+        tasks_per_job = 16
+
+        [[queue]]
+        workload = "wordcount"
+        jobs = 20
+    "#;
+
+    #[test]
+    fn parses_full_config() {
+        let cfg = parse_online_config(CFG).unwrap();
+        assert_eq!(cfg.policy, "rpsdsf");
+        assert_eq!(cfg.mode, AllocatorMode::Oblivious);
+        assert_eq!(cfg.seed, 7);
+        assert!(cfg.staged);
+        assert_eq!(cfg.stage_interval, 30.0);
+        assert_eq!(cfg.cluster.len(), 3);
+        assert_eq!(cfg.cluster[1].name, "type-2");
+        assert_eq!(cfg.queues.len(), 2);
+        assert_eq!(cfg.queues[0].workload.tasks_per_job, 16);
+        assert_eq!(cfg.queues[0].jobs, 20);
+        assert_eq!(cfg.queues[1].workload.tasks_per_job, WorkloadSpec::wordcount().tasks_per_job);
+    }
+
+    #[test]
+    fn rejects_unknowns() {
+        assert!(parse_online_config("[experiment]\nmode = \"psychic\"\n[[queue]]\nworkload = \"pi\"").is_err());
+        assert!(parse_online_config("[[queue]]\nworkload = \"fortran\"").is_err());
+        assert!(parse_online_config("[cluster]\nservers = [\"type-9\"]\n[[queue]]\nworkload = \"pi\"").is_err());
+        assert!(parse_online_config("[experiment]\npolicy = \"drf\"").is_err()); // no queues
+    }
+}

@@ -1,0 +1,28 @@
+//! Configuration system: a TOML-subset parser (serde/toml are unavailable
+//! offline) plus typed experiment configuration loading, so custom
+//! clusters/workloads can be described in files instead of code.
+//!
+//! ```toml
+//! # experiment.toml
+//! [experiment]
+//! policy = "rpsdsf"
+//! mode = "characterized"
+//! seed = 42
+//!
+//! [cluster]
+//! servers = ["type-1", "type-1", "type-2", "type-2", "type-3", "type-3"]
+//!
+//! [[queue]]
+//! workload = "pi"
+//! jobs = 50
+//!
+//! [[queue]]
+//! workload = "wordcount"
+//! jobs = 50
+//! ```
+
+pub mod experiment;
+pub mod toml;
+
+pub use experiment::load_online_config;
+pub use toml::{TomlDoc, TomlValue};

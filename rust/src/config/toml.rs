@@ -1,0 +1,277 @@
+//! Minimal TOML-subset parser.
+//!
+//! Supported: `[table]` headers, `[[array-of-tables]]` headers, `key = value`
+//! with string / integer / float / boolean / array values, `#` comments,
+//! and dotted access via [`TomlDoc::get`]. Unsupported (and rejected or
+//! ignored deliberately): multi-line strings, inline tables, datetimes —
+//! nothing in this repo's configs needs them.
+
+use crate::error::{Error, Result};
+use std::collections::BTreeMap;
+
+/// A TOML scalar or array value.
+#[derive(Debug, Clone, PartialEq)]
+pub enum TomlValue {
+    Str(String),
+    Int(i64),
+    Float(f64),
+    Bool(bool),
+    Array(Vec<TomlValue>),
+}
+
+impl TomlValue {
+    pub fn as_str(&self) -> Option<&str> {
+        match self {
+            TomlValue::Str(s) => Some(s),
+            _ => None,
+        }
+    }
+
+    pub fn as_f64(&self) -> Option<f64> {
+        match self {
+            TomlValue::Float(f) => Some(*f),
+            TomlValue::Int(i) => Some(*i as f64),
+            _ => None,
+        }
+    }
+
+    pub fn as_i64(&self) -> Option<i64> {
+        match self {
+            TomlValue::Int(i) => Some(*i),
+            _ => None,
+        }
+    }
+
+    pub fn as_bool(&self) -> Option<bool> {
+        match self {
+            TomlValue::Bool(b) => Some(*b),
+            _ => None,
+        }
+    }
+
+    pub fn as_array(&self) -> Option<&[TomlValue]> {
+        match self {
+            TomlValue::Array(a) => Some(a),
+            _ => None,
+        }
+    }
+}
+
+/// One `[table]`'s key/value pairs.
+pub type TomlTable = BTreeMap<String, TomlValue>;
+
+/// A parsed document: named tables plus arrays-of-tables.
+#[derive(Debug, Clone, Default)]
+pub struct TomlDoc {
+    /// `[name]` tables; the root table is keyed "".
+    pub tables: BTreeMap<String, TomlTable>,
+    /// `[[name]]` arrays of tables, in order.
+    pub arrays: BTreeMap<String, Vec<TomlTable>>,
+}
+
+impl TomlDoc {
+    /// Parse a document.
+    pub fn parse(text: &str) -> Result<TomlDoc> {
+        let mut doc = TomlDoc::default();
+        doc.tables.insert(String::new(), TomlTable::new());
+        enum Cur {
+            Table(String),
+            Array(String),
+        }
+        let mut cur = Cur::Table(String::new());
+        for (lineno, raw) in text.lines().enumerate() {
+            let line = strip_comment(raw).trim().to_string();
+            if line.is_empty() {
+                continue;
+            }
+            let err = |msg: &str| Error::Config(format!("line {}: {msg}", lineno + 1));
+            if let Some(name) = line.strip_prefix("[[").and_then(|s| s.strip_suffix("]]")) {
+                let name = name.trim().to_string();
+                doc.arrays.entry(name.clone()).or_default().push(TomlTable::new());
+                cur = Cur::Array(name);
+            } else if let Some(name) = line.strip_prefix('[').and_then(|s| s.strip_suffix(']')) {
+                let name = name.trim().to_string();
+                doc.tables.entry(name.clone()).or_default();
+                cur = Cur::Table(name);
+            } else if let Some(eq) = line.find('=') {
+                let key = line[..eq].trim().to_string();
+                if key.is_empty() {
+                    return Err(err("empty key"));
+                }
+                let value = parse_value(line[eq + 1..].trim())
+                    .map_err(|e| err(&format!("bad value for '{key}': {e}")))?;
+                match &cur {
+                    Cur::Table(t) => {
+                        doc.tables.get_mut(t).unwrap().insert(key, value);
+                    }
+                    Cur::Array(a) => {
+                        doc.arrays.get_mut(a).unwrap().last_mut().unwrap().insert(key, value);
+                    }
+                }
+            } else {
+                return Err(err("expected `[table]`, `[[array]]` or `key = value`"));
+            }
+        }
+        Ok(doc)
+    }
+
+    /// `get("table.key")` or `get("key")` for the root table.
+    pub fn get(&self, path: &str) -> Option<&TomlValue> {
+        match path.rsplit_once('.') {
+            Some((table, key)) => self.tables.get(table)?.get(key),
+            None => self.tables.get("")?.get(path),
+        }
+    }
+
+    /// All `[[name]]` tables.
+    pub fn array(&self, name: &str) -> &[TomlTable] {
+        self.arrays.get(name).map(Vec::as_slice).unwrap_or(&[])
+    }
+}
+
+fn strip_comment(line: &str) -> &str {
+    // a '#' inside a quoted string must not start a comment
+    let mut in_str = false;
+    for (i, c) in line.char_indices() {
+        match c {
+            '"' => in_str = !in_str,
+            '#' if !in_str => return &line[..i],
+            _ => {}
+        }
+    }
+    line
+}
+
+fn parse_value(s: &str) -> std::result::Result<TomlValue, String> {
+    let s = s.trim();
+    if s.is_empty() {
+        return Err("empty value".into());
+    }
+    if let Some(inner) = s.strip_prefix('"') {
+        let inner = inner.strip_suffix('"').ok_or("unterminated string")?;
+        return Ok(TomlValue::Str(inner.replace("\\\"", "\"").replace("\\\\", "\\")));
+    }
+    if s == "true" {
+        return Ok(TomlValue::Bool(true));
+    }
+    if s == "false" {
+        return Ok(TomlValue::Bool(false));
+    }
+    if let Some(inner) = s.strip_prefix('[') {
+        let inner = inner.strip_suffix(']').ok_or("unterminated array")?.trim();
+        if inner.is_empty() {
+            return Ok(TomlValue::Array(Vec::new()));
+        }
+        let mut items = Vec::new();
+        for part in split_top_level(inner) {
+            items.push(parse_value(part.trim())?);
+        }
+        return Ok(TomlValue::Array(items));
+    }
+    if let Ok(i) = s.parse::<i64>() {
+        return Ok(TomlValue::Int(i));
+    }
+    if let Ok(f) = s.parse::<f64>() {
+        return Ok(TomlValue::Float(f));
+    }
+    Err(format!("cannot parse '{s}'"))
+}
+
+/// Split on commas that are not inside strings or nested brackets.
+fn split_top_level(s: &str) -> Vec<&str> {
+    let mut parts = Vec::new();
+    let mut depth = 0usize;
+    let mut in_str = false;
+    let mut start = 0usize;
+    for (i, c) in s.char_indices() {
+        match c {
+            '"' => in_str = !in_str,
+            '[' if !in_str => depth += 1,
+            ']' if !in_str => depth = depth.saturating_sub(1),
+            ',' if !in_str && depth == 0 => {
+                parts.push(&s[start..i]);
+                start = i + 1;
+            }
+            _ => {}
+        }
+    }
+    parts.push(&s[start..]);
+    parts
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    const DOC: &str = r#"
+        # top comment
+        title = "demo"
+
+        [experiment]
+        policy = "rpsdsf"   # trailing comment
+        seed = 42
+        jitter = 2.5
+        staged = false
+        names = ["a", "b"]
+
+        [[queue]]
+        workload = "pi"
+        jobs = 50
+
+        [[queue]]
+        workload = "wordcount"
+        jobs = 50
+    "#;
+
+    #[test]
+    fn parses_document() {
+        let doc = TomlDoc::parse(DOC).unwrap();
+        assert_eq!(doc.get("title").unwrap().as_str(), Some("demo"));
+        assert_eq!(doc.get("experiment.policy").unwrap().as_str(), Some("rpsdsf"));
+        assert_eq!(doc.get("experiment.seed").unwrap().as_i64(), Some(42));
+        assert_eq!(doc.get("experiment.jitter").unwrap().as_f64(), Some(2.5));
+        assert_eq!(doc.get("experiment.staged").unwrap().as_bool(), Some(false));
+        let names = doc.get("experiment.names").unwrap().as_array().unwrap();
+        assert_eq!(names.len(), 2);
+        assert_eq!(names[1].as_str(), Some("b"));
+    }
+
+    #[test]
+    fn arrays_of_tables_in_order() {
+        let doc = TomlDoc::parse(DOC).unwrap();
+        let queues = doc.array("queue");
+        assert_eq!(queues.len(), 2);
+        assert_eq!(queues[0]["workload"].as_str(), Some("pi"));
+        assert_eq!(queues[1]["jobs"].as_i64(), Some(50));
+    }
+
+    #[test]
+    fn hash_inside_string_not_comment() {
+        let doc = TomlDoc::parse(r##"k = "a#b" # real comment"##).unwrap();
+        assert_eq!(doc.get("k").unwrap().as_str(), Some("a#b"));
+    }
+
+    #[test]
+    fn rejects_garbage() {
+        assert!(TomlDoc::parse("not a toml line").is_err());
+        assert!(TomlDoc::parse("k = ").is_err());
+        assert!(TomlDoc::parse("k = \"unterminated").is_err());
+        assert!(TomlDoc::parse("= 3").is_err());
+    }
+
+    #[test]
+    fn nested_arrays() {
+        let doc = TomlDoc::parse("m = [[1, 2], [3, 4]]").unwrap();
+        let outer = doc.get("m").unwrap().as_array().unwrap();
+        assert_eq!(outer.len(), 2);
+        assert_eq!(outer[0].as_array().unwrap()[1].as_i64(), Some(2));
+    }
+
+    #[test]
+    fn int_vs_float() {
+        let doc = TomlDoc::parse("a = 3\nb = 3.0").unwrap();
+        assert_eq!(doc.get("a").unwrap().as_i64(), Some(3));
+        assert!(doc.get("b").unwrap().as_i64().is_none());
+        assert_eq!(doc.get("b").unwrap().as_f64(), Some(3.0));
+    }
+}

@@ -1,0 +1,45 @@
+//! Crate-wide error type.
+
+use thiserror::Error;
+
+/// Errors surfaced by the coordinator, runtime and experiment layers.
+#[derive(Debug, Error)]
+pub enum Error {
+    /// Artifact directory / manifest problems (run `make artifacts`).
+    #[error("artifact error: {0}")]
+    Artifact(String),
+
+    /// The AOT manifest's padded dimensions disagree with the crate's
+    /// compiled-in constants — the python and rust layers are out of sync.
+    #[error("manifest dimension mismatch: {0}")]
+    ManifestMismatch(String),
+
+    /// PJRT / XLA failures (compile, execute, literal conversion).
+    #[error("xla error: {0}")]
+    Xla(String),
+
+    /// Cluster capacity exceeded or inconsistent state transitions.
+    #[error("cluster invariant violated: {0}")]
+    Cluster(String),
+
+    /// Configuration file / CLI parse errors.
+    #[error("config error: {0}")]
+    Config(String),
+
+    /// Experiment harness errors (unknown scheduler name, bad dimensions…).
+    #[error("experiment error: {0}")]
+    Experiment(String),
+
+    /// I/O wrapper.
+    #[error("io error: {0}")]
+    Io(#[from] std::io::Error),
+}
+
+impl From<xla::Error> for Error {
+    fn from(e: xla::Error) -> Self {
+        Error::Xla(e.to_string())
+    }
+}
+
+/// Crate-wide result alias.
+pub type Result<T> = std::result::Result<T, Error>;

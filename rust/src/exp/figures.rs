@@ -1,0 +1,187 @@
+//! Figures 3–9: the online Mesos/Spark experiments.
+//!
+//! Each figure is a set of online runs whose utilization traces are
+//! overlaid; the driver returns the raw runs so benches can render ASCII
+//! plots, dump CSV, and assert the paper's qualitative orderings.
+
+use crate::error::{Error, Result};
+use crate::exp::fig9;
+use crate::mesos::AllocatorMode;
+use crate::metrics::csv::CsvTable;
+use crate::metrics::plot;
+use crate::sim::online::{OnlineConfig, OnlineResult, OnlineSim};
+
+/// All online figure ids in the paper.
+pub const FIGURE_IDS: &[u8] = &[3, 4, 5, 6, 7, 8, 9];
+
+/// One figure's runs.
+#[derive(Debug, Clone)]
+pub struct FigureResult {
+    pub figure: u8,
+    pub caption: &'static str,
+    pub runs: Vec<OnlineResult>,
+}
+
+/// Which (policy, mode, cluster) combos each figure compares.
+fn figure_plan(figure: u8) -> Result<(&'static str, Vec<(String, AllocatorMode, Cluster)>)> {
+    use AllocatorMode::*;
+    use Cluster::*;
+    let plan = match figure {
+        3 => (
+            "DRF vs PS-DSF, oblivious mode (heterogeneous cluster)",
+            vec![("drf", Oblivious, Hetero), ("rrr-psdsf", Oblivious, Hetero)],
+        ),
+        4 => (
+            "DRF vs PS-DSF, workload-characterized mode",
+            vec![("drf", Characterized, Hetero), ("rrr-psdsf", Characterized, Hetero)],
+        ),
+        5 => (
+            "TSF vs BF-DRF vs rPS-DSF (workload-characterized)",
+            vec![
+                ("tsf", Characterized, Hetero),
+                ("bf-drf", Characterized, Hetero),
+                ("rrr-rpsdsf", Characterized, Hetero),
+            ],
+        ),
+        6 => (
+            "Oblivious vs workload-characterized, DRF",
+            vec![("drf", Oblivious, Hetero), ("drf", Characterized, Hetero)],
+        ),
+        7 => (
+            "Oblivious vs workload-characterized, PS-DSF",
+            vec![("rrr-psdsf", Oblivious, Hetero), ("rrr-psdsf", Characterized, Hetero)],
+        ),
+        8 => (
+            "DRF vs PS-DSF with homogeneous servers",
+            vec![("drf", Characterized, Homo), ("rrr-psdsf", Characterized, Homo)],
+        ),
+        9 => (
+            "BF-DRF vs rPS-DSF after staged (suboptimal) registration",
+            vec![], // handled by exp::fig9
+        ),
+        other => return Err(Error::Experiment(format!("unknown figure {other}"))),
+    };
+    Ok((plan.0, plan.1.into_iter().map(|(p, m, c)| (p.to_string(), m, c)).collect()))
+}
+
+#[derive(Debug, Clone, Copy)]
+enum Cluster {
+    Hetero,
+    Homo,
+}
+
+/// Run one figure's experiment set. `jobs_per_queue` = 50 reproduces the
+/// paper's batch size; smaller values keep CI fast with the same shape.
+pub fn run_figure(figure: u8, jobs_per_queue: usize, seed: u64) -> Result<FigureResult> {
+    if figure == 9 {
+        return fig9::run(jobs_per_queue.min(20), seed);
+    }
+    let (caption, plan) = figure_plan(figure)?;
+    let mut runs = Vec::new();
+    for (policy, mode, cluster) in plan {
+        let mut cfg = match cluster {
+            Cluster::Hetero => OnlineConfig::paper(&policy, mode, jobs_per_queue),
+            Cluster::Homo => OnlineConfig::paper_homogeneous(&policy, mode, jobs_per_queue),
+        };
+        cfg.seed = seed;
+        runs.push(OnlineSim::new(cfg)?.run()?);
+    }
+    Ok(FigureResult { figure, caption, runs })
+}
+
+impl FigureResult {
+    /// ASCII rendering: cpu + mem traces overlaid, then summary lines.
+    pub fn render(&self) -> String {
+        let mut out = String::new();
+        out.push_str(&format!("Figure {} — {}\n\n", self.figure, self.caption));
+        let cpu: Vec<&crate::metrics::TimeSeries> = self.runs.iter().map(|r| &r.trace.cpu).collect();
+        out.push_str("Allocated CPU fraction:\n");
+        out.push_str(&plot::render(&cpu, 72, 14, 1.0));
+        let mem: Vec<&crate::metrics::TimeSeries> = self.runs.iter().map(|r| &r.trace.mem).collect();
+        out.push_str("\nAllocated memory fraction:\n");
+        out.push_str(&plot::render(&mem, 72, 14, 1.0));
+        out.push('\n');
+        for r in &self.runs {
+            out.push_str(&crate::exp::report::online_summary_line(
+                &r.label,
+                r.makespan,
+                &r.trace.cpu.summary(),
+                &r.trace.mem.summary(),
+            ));
+            out.push('\n');
+        }
+        out
+    }
+
+    /// CSV export: resampled traces, one row per grid point per run.
+    pub fn to_csv(&self) -> CsvTable {
+        let mut t = CsvTable::new(vec!["figure", "run", "time", "cpu", "mem"]);
+        let t1 = self.runs.iter().map(|r| r.makespan).fold(1.0, f64::max);
+        for r in &self.runs {
+            for (time, cpu) in r.trace.cpu.resample(0.0, t1, 200) {
+                let mem = r.trace.mem.value_at(time);
+                t.row(vec![
+                    self.figure.to_string(),
+                    r.label.clone(),
+                    format!("{time:.1}"),
+                    format!("{cpu:.4}"),
+                    format!("{mem:.4}"),
+                ]);
+            }
+        }
+        t
+    }
+
+    /// Makespan of the named run.
+    pub fn makespan_of(&self, label_substr: &str) -> Option<f64> {
+        self.runs
+            .iter()
+            .find(|r| r.label.contains(label_substr))
+            .map(|r| r.makespan)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn all_figures_have_plans() {
+        for &f in FIGURE_IDS {
+            if f != 9 {
+                assert!(figure_plan(f).is_ok());
+            }
+        }
+        assert!(figure_plan(2).is_err());
+    }
+
+    #[test]
+    fn fig4_psdsf_not_slower_than_drf() {
+        // small-batch smoke of the Figure-4 shape: PS-DSF's batch should not
+        // finish meaningfully later than DRF's (with full batches it
+        // finishes earlier; 3 jobs/queue keeps CI fast)
+        let fig = run_figure(4, 3, 0xF1).unwrap();
+        let drf = fig.makespan_of("drf").unwrap();
+        let ps = fig.makespan_of("psdsf").unwrap();
+        assert!(ps <= drf * 1.10, "psdsf {ps} vs drf {drf}");
+    }
+
+    #[test]
+    fn fig8_homogeneous_near_identical() {
+        let fig = run_figure(8, 3, 0xF8).unwrap();
+        let drf = fig.makespan_of("drf").unwrap();
+        let ps = fig.makespan_of("psdsf").unwrap();
+        let ratio = ps / drf;
+        assert!((0.8..=1.25).contains(&ratio), "{ratio}");
+    }
+
+    #[test]
+    fn render_and_csv() {
+        let fig = run_figure(6, 2, 1).unwrap();
+        let text = fig.render();
+        assert!(text.contains("Figure 6"));
+        assert!(text.contains("drf/oblivious"));
+        assert!(text.contains("drf/characterized"));
+        assert!(fig.to_csv().n_rows() > 0);
+    }
+}

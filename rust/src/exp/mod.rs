@@ -1,0 +1,10 @@
+//! Experiment harness: one driver per table/figure of the paper, plus the
+//! paper-vs-measured reporting (EXPERIMENTS.md is generated from these).
+
+pub mod fig9;
+pub mod figures;
+pub mod report;
+pub mod tables;
+
+pub use figures::{run_figure, FigureResult, FIGURE_IDS};
+pub use tables::{run_illustrative, IllustrativeTables};

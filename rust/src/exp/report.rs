@@ -1,0 +1,176 @@
+//! Rendering: fixed-width tables with the paper's reference values inline,
+//! so every regenerated table/figure shows measured-vs-paper at a glance.
+
+use crate::exp::tables::IllustrativeTables;
+use crate::metrics::stats::Summary;
+
+/// Paper Table 1 — mean allocations x_{n,i} and totals.
+pub const PAPER_TABLE1: &[(&str, [f64; 4], f64)] = &[
+    ("drf", [6.55, 4.69, 4.69, 6.55], 22.48),
+    ("tsf", [6.5, 4.7, 4.7, 6.5], 22.4),
+    ("rrr-psdsf", [19.44, 1.15, 1.07, 19.42], 41.08),
+    ("bf-drf", [20.0, 2.0, 0.0, 19.0], 41.0),
+    ("psdsf", [19.0, 0.0, 2.0, 20.0], 41.0),
+    ("rpsdsf", [19.0, 2.0, 2.0, 19.0], 42.0),
+];
+
+/// Paper Table 2 — stddev of allocations (RRR schedulers only).
+pub const PAPER_TABLE2: &[(&str, [f64; 4])] = &[
+    ("drf", [2.31, 0.46, 0.46, 2.31]),
+    ("tsf", [2.29, 0.46, 0.46, 2.29]),
+    ("rrr-psdsf", [0.59, 0.99, 1.0, 0.49]),
+];
+
+/// Paper Table 3 — unused capacities c_{i,r}.
+pub const PAPER_TABLE3: &[(&str, [f64; 4])] = &[
+    ("drf", [62.56, 0.0, 0.0, 62.56]),
+    ("tsf", [62.8, 0.0, 0.0, 62.8]),
+    ("rrr-psdsf", [1.8, 4.6, 4.86, 1.92]),
+    ("bf-drf", [0.0, 10.0, 1.0, 3.0]),
+    ("psdsf", [3.0, 1.0, 10.0, 0.0]),
+    ("rpsdsf", [3.0, 1.0, 1.0, 3.0]),
+];
+
+/// Paper Table 4 — stddev of unused capacities (RRR schedulers only).
+pub const PAPER_TABLE4: &[(&str, [f64; 4])] = &[
+    ("drf", [11.09, 0.0, 0.0, 11.09]),
+    ("tsf", [10.99, 0.0, 0.0, 10.99]),
+    ("rrr-psdsf", [0.59, 0.99, 1.0, 0.49]),
+];
+
+fn lookup4(table: &[(&str, [f64; 4])], policy: &str) -> Option<[f64; 4]> {
+    table.iter().find(|(p, _)| *p == policy).map(|(_, v)| *v)
+}
+
+fn fmt_pair(measured: f64, paper: Option<f64>) -> String {
+    match paper {
+        Some(p) => format!("{measured:6.2} ({p:5.2})"),
+        None => format!("{measured:6.2}        "),
+    }
+}
+
+fn render_grid(
+    title: &str,
+    header: &str,
+    rows: &IllustrativeTables,
+    cell: impl Fn(&crate::exp::tables::PolicyRow, usize) -> f64,
+    paper: impl Fn(&str, usize) -> Option<f64>,
+    with_total: Option<&dyn Fn(&crate::exp::tables::PolicyRow) -> (f64, Option<f64>)>,
+) -> String {
+    let mut out = String::new();
+    out.push_str(title);
+    out.push('\n');
+    out.push_str(header);
+    out.push('\n');
+    for r in &rows.rows {
+        out.push_str(&format!("{:>11} |", r.policy));
+        for k in 0..4 {
+            out.push_str(&format!(" {} |", fmt_pair(cell(r, k), paper(&r.policy, k))));
+        }
+        if let Some(tot) = with_total {
+            let (m, p) = tot(r);
+            out.push_str(&format!(" {} |", fmt_pair(m, p)));
+        }
+        out.push('\n');
+    }
+    out.push_str("            measured (paper)\n");
+    out
+}
+
+/// Table 1: mean allocations + total.
+pub fn render_table1(t: &IllustrativeTables) -> String {
+    render_grid(
+        "Table 1 — workload allocations x_{n,i}",
+        "     sched. |     (1,1)      |     (1,2)      |     (2,1)      |     (2,2)      |     total      |",
+        t,
+        |r, k| r.x[k].mean,
+        |p, k| {
+            PAPER_TABLE1.iter().find(|(name, _, _)| *name == p).map(|(_, v, _)| v[k])
+        },
+        Some(&|r: &crate::exp::tables::PolicyRow| {
+            let paper = PAPER_TABLE1.iter().find(|(name, _, _)| *name == r.policy).map(|(_, _, t)| *t);
+            (r.total.mean, paper)
+        }),
+    )
+}
+
+/// Table 2: stddev of allocations (RRR rows only).
+pub fn render_table2(t: &IllustrativeTables) -> String {
+    let rrr = IllustrativeTables {
+        rows: t.rows.iter().filter(|r| r.trials > 1).cloned().collect(),
+        trials: t.trials,
+        seed: t.seed,
+    };
+    render_grid(
+        "Table 2 — sample stddev of x_{n,i} (RRR schedulers)",
+        "     sched. |     (1,1)      |     (1,2)      |     (2,1)      |     (2,2)      |",
+        &rrr,
+        |r, k| r.x[k].stddev,
+        |p, k| lookup4(PAPER_TABLE2, p).map(|v| v[k]),
+        None,
+    )
+}
+
+/// Table 3: mean unused capacities.
+pub fn render_table3(t: &IllustrativeTables) -> String {
+    render_grid(
+        "Table 3 — unused capacities c_{i,r} − Σ_n x_{n,i} d_{n,r}",
+        "     sched. |     (1,1)      |     (1,2)      |     (2,1)      |     (2,2)      |",
+        t,
+        |r, k| r.unused[k].mean,
+        |p, k| lookup4(PAPER_TABLE3, p).map(|v| v[k]),
+        None,
+    )
+}
+
+/// Table 4: stddev of unused capacities (RRR rows only).
+pub fn render_table4(t: &IllustrativeTables) -> String {
+    let rrr = IllustrativeTables {
+        rows: t.rows.iter().filter(|r| r.trials > 1).cloned().collect(),
+        trials: t.trials,
+        seed: t.seed,
+    };
+    render_grid(
+        "Table 4 — sample stddev of unused capacities (RRR schedulers)",
+        "     sched. |     (1,1)      |     (1,2)      |     (2,1)      |     (2,2)      |",
+        &rrr,
+        |r, k| r.unused[k].stddev,
+        |p, k| lookup4(PAPER_TABLE4, p).map(|v| v[k]),
+        None,
+    )
+}
+
+/// A one-line summary of an online run (figures' caption line).
+pub fn online_summary_line(label: &str, makespan: f64, cpu: &Summary, mem: &Summary) -> String {
+    format!(
+        "{label:28} makespan {makespan:8.1}s   cpu {:5.1}%±{:4.1}   mem {:5.1}%±{:4.1}",
+        100.0 * cpu.mean,
+        100.0 * cpu.stddev,
+        100.0 * mem.mean,
+        100.0 * mem.stddev
+    )
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::exp::tables::run_illustrative;
+
+    #[test]
+    fn paper_constants_consistent() {
+        // Table 1 totals equal the sum of their cells (paper arithmetic)
+        for (name, x, total) in PAPER_TABLE1 {
+            let sum: f64 = x.iter().sum();
+            assert!((sum - total).abs() < 0.1, "{name}: {sum} vs {total}");
+        }
+    }
+
+    #[test]
+    fn tables_render_with_paper_refs() {
+        let t = run_illustrative(3, 0);
+        let t1 = render_table1(&t);
+        assert!(t1.contains("(22.48)") || t1.contains("(22.4"), "{t1}");
+        let t3 = render_table3(&t);
+        assert!(t3.contains("(62.56)"), "{t3}");
+    }
+}

@@ -1,0 +1,198 @@
+//! Tables 1–4: the illustrative progressive-filling study (§2).
+//!
+//! Two frameworks (d₁ = (5,1), d₂ = (1,5)), two servers (c₁ = (100,30),
+//! c₂ = (30,100)), integer tasking, 200 trials for the RRR schedulers.
+//! Reported: mean allocations x_{n,i} (Table 1), their sample stddev
+//! (Table 2), unused capacities (Table 3) and their stddev (Table 4), plus
+//! the §2 95%-CI example.
+
+use crate::cluster::{AgentPool, ServerType};
+use crate::error::Result;
+use crate::metrics::csv::CsvTable;
+use crate::metrics::stats::Summary;
+use crate::resources::ResVec;
+use crate::rng::Rng;
+use crate::scheduler::progressive::progressive_fill;
+use crate::scheduler::{policy_by_name, AllocState, FrameworkEntry, NativeScorer, Scorer};
+use crate::sim::runner;
+
+/// The schedulers of Table 1, in the paper's row order.
+pub const TABLE_POLICIES: &[&str] =
+    &["drf", "tsf", "rrr-psdsf", "bf-drf", "psdsf", "rpsdsf"];
+
+/// Which rows are averaged over 200 RRR trials (the others are
+/// deterministic single runs in the paper).
+pub const RRR_POLICIES: &[&str] = &["drf", "tsf", "rrr-psdsf"];
+
+/// Summary of one scheduler's row across trials.
+#[derive(Debug, Clone)]
+pub struct PolicyRow {
+    pub policy: String,
+    /// Summaries of x_{n,i} in paper order: (1,1), (1,2), (2,1), (2,2).
+    pub x: [Summary; 4],
+    /// Summaries of unused c_{i,r}: (1,1), (1,2), (2,1), (2,2).
+    pub unused: [Summary; 4],
+    pub total: Summary,
+    pub trials: usize,
+}
+
+/// All rows of Tables 1–4.
+#[derive(Debug, Clone)]
+pub struct IllustrativeTables {
+    pub rows: Vec<PolicyRow>,
+    pub trials: usize,
+    pub seed: u64,
+}
+
+/// Build the §2 instance.
+pub fn illustrative_state() -> AllocState {
+    let mut st = AllocState::new(AgentPool::new(&ServerType::illustrative()));
+    for d in [[5.0, 1.0], [1.0, 5.0]] {
+        st.add_framework(FrameworkEntry {
+            name: "f".into(),
+            demand: ResVec::new(&d),
+            weight: 1.0,
+            active: true,
+        });
+    }
+    st
+}
+
+/// One progressive-filling trial for `policy`, returning (x, unused, total)
+/// flattened in paper order.
+pub fn one_trial(policy: &str, seed: u64, scorer: &mut dyn Scorer) -> Result<([f64; 4], [f64; 4], f64)> {
+    let mut st = illustrative_state();
+    let policy = policy_by_name(policy)?;
+    let mut rng = Rng::new(seed);
+    let out = progressive_fill(&mut st, &policy, scorer, &mut rng)?;
+    let x = [out.x[0][0], out.x[0][1], out.x[1][0], out.x[1][1]];
+    let unused = [out.unused[0][0], out.unused[0][1], out.unused[1][0], out.unused[1][1]];
+    Ok((x, unused, out.total))
+}
+
+/// Run the whole study: `trials` runs for RRR schedulers (threaded), one
+/// run for the deterministic ones.
+pub fn run_illustrative(trials: usize, seed: u64) -> IllustrativeTables {
+    let mut rows = Vec::new();
+    for &policy in TABLE_POLICIES {
+        let n = if RRR_POLICIES.contains(&policy) { trials } else { 1 };
+        let results = runner::run_trials(n, seed ^ hash_name(policy), runner::default_threads(), |_i, s| {
+            let mut scorer = NativeScorer::new();
+            one_trial(policy, s, &mut scorer).expect("trial failed")
+        });
+        let mut xs = [(); 4].map(|_| Vec::with_capacity(n));
+        let mut us = [(); 4].map(|_| Vec::with_capacity(n));
+        let mut totals = Vec::with_capacity(n);
+        for (x, u, t) in results {
+            for k in 0..4 {
+                xs[k].push(x[k]);
+                us[k].push(u[k]);
+            }
+            totals.push(t);
+        }
+        rows.push(PolicyRow {
+            policy: policy.to_string(),
+            x: [0, 1, 2, 3].map(|k| Summary::of(&xs[k])),
+            unused: [0, 1, 2, 3].map(|k| Summary::of(&us[k])),
+            total: Summary::of(&totals),
+            trials: n,
+        });
+    }
+    IllustrativeTables { rows, trials, seed }
+}
+
+fn hash_name(name: &str) -> u64 {
+    name.bytes().fold(0xcbf29ce484222325u64, |h, b| (h ^ b as u64).wrapping_mul(0x100000001b3))
+}
+
+impl IllustrativeTables {
+    pub fn row(&self, policy: &str) -> Option<&PolicyRow> {
+        self.rows.iter().find(|r| r.policy == policy)
+    }
+
+    /// Render all four tables (+ CI example) next to the paper's numbers.
+    pub fn render(&self) -> String {
+        use crate::exp::report;
+        let mut out = String::new();
+        out.push_str(&format!(
+            "Illustrative progressive-filling study — {} trials for RRR schedulers (seed {:#x})\n\n",
+            self.trials, self.seed
+        ));
+        out.push_str(&report::render_table1(self));
+        out.push('\n');
+        out.push_str(&report::render_table2(self));
+        out.push('\n');
+        out.push_str(&report::render_table3(self));
+        out.push('\n');
+        out.push_str(&report::render_table4(self));
+        out.push('\n');
+        // The §2 CI example. NOTE: the paper quotes "(6.5 − 2·0.46/√200, …)"
+        // for TSF (1,2), but its own Table 1 has x_(1,2) = 4.7 — it combined
+        // the (1,1) mean with the (1,2) stddev. We print both cells' CIs.
+        if let Some(row) = self.row("tsf") {
+            let (lo1, hi1) = row.x[0].ci95();
+            let (lo2, hi2) = row.x[1].ci95();
+            out.push_str(&format!(
+                "95% CI for TSF x_(1,1): ({lo1:.2}, {hi1:.2});  x_(1,2): ({lo2:.2}, {hi2:.2})\n\
+                 [paper quotes (6.43, 6.57), mixing the (1,1) mean with the (1,2) stddev]\n"
+            ));
+        }
+        out
+    }
+
+    /// Export Table 1 + 3 means as CSV.
+    pub fn to_csv(&self) -> CsvTable {
+        let mut t = CsvTable::new(vec![
+            "policy", "trials",
+            "x11_mean", "x12_mean", "x21_mean", "x22_mean",
+            "x11_std", "x12_std", "x21_std", "x22_std",
+            "u11_mean", "u12_mean", "u21_mean", "u22_mean",
+            "total_mean",
+        ]);
+        for r in &self.rows {
+            let mut cells: Vec<String> = vec![r.policy.clone(), r.trials.to_string()];
+            cells.extend(r.x.iter().map(|s| format!("{:.4}", s.mean)));
+            cells.extend(r.x.iter().map(|s| format!("{:.4}", s.stddev)));
+            cells.extend(r.unused.iter().map(|s| format!("{:.4}", s.mean)));
+            cells.push(format!("{:.4}", r.total.mean));
+            t.row(cells);
+        }
+        t
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn small_study_shapes_hold() {
+        let t = run_illustrative(20, 0xABCD);
+        assert_eq!(t.rows.len(), TABLE_POLICIES.len());
+        let drf = t.row("drf").unwrap();
+        let rps = t.row("rpsdsf").unwrap();
+        // headline contrast: PS-DSF-family totals ~41-42 vs DRF ~22-24
+        assert!(rps.total.mean > 1.5 * drf.total.mean);
+        // deterministic rows ran once
+        assert_eq!(rps.trials, 1);
+        assert_eq!(drf.trials, 20);
+        // DRF wastes the abundant resource on both servers
+        assert!(drf.unused[0].mean > 50.0);
+        assert!(drf.unused[3].mean > 50.0);
+    }
+
+    #[test]
+    fn render_contains_all_tables() {
+        let t = run_illustrative(5, 1);
+        let text = t.render();
+        for needle in ["Table 1", "Table 2", "Table 3", "Table 4", "95% CI"] {
+            assert!(text.contains(needle), "missing {needle}\n{text}");
+        }
+    }
+
+    #[test]
+    fn csv_has_row_per_policy() {
+        let t = run_illustrative(3, 2);
+        assert_eq!(t.to_csv().n_rows(), TABLE_POLICIES.len());
+    }
+}

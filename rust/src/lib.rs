@@ -1,0 +1,84 @@
+//! # mesos-fair
+//!
+//! A reproduction of *“Online Scheduling of Spark Workloads with Mesos using
+//! Different Fair Allocation Algorithms”* (Shan, Jain, Kesidis, Urgaonkar,
+//! Khamse-Ashari, Lambadaris — 2018) as a three-layer Rust + JAX + Pallas
+//! system.
+//!
+//! The paper compares multi-resource fair allocation criteria — **DRF**,
+//! **BF-DRF**, **TSF**, **PS-DSF** and the paper's own **rPS-DSF** — both in
+//! a static progressive-filling study (Tables 1–4) and online, as the
+//! allocator of a Mesos cluster scheduling Spark `Pi` and `WordCount` job
+//! batches on heterogeneous agents (Figures 3–9).
+//!
+//! ## Layering
+//!
+//! * **Layer 3 (this crate)** — the coordinator: a faithful discrete-event
+//!   model of the Mesos master + allocator ([`mesos`]), the Spark
+//!   driver/executor machinery ([`spark`]), the fair schedulers themselves
+//!   ([`scheduler`]) and the experiment harness ([`exp`]). Rust owns the
+//!   event loop, metrics and CLI; Python never runs on the request path.
+//! * **Layer 2 (python/compile/model.py)** — the scoring graph + workload
+//!   bodies in JAX, AOT-lowered once to HLO text under `artifacts/`.
+//! * **Layer 1 (python/compile/kernels/)** — the fused Pallas scoring kernel
+//!   and the Monte-Carlo-π / wordcount task kernels.
+//!
+//! The [`runtime`] module loads the AOT artifacts through PJRT (the `xla`
+//! crate) so the allocator can score through the compiled kernel
+//! (`--scorer hlo`) and the e2e example can run real task compute. The
+//! native Rust scorer ([`scheduler::scorer`]) implements identical math and
+//! is parity-tested against the artifact.
+//!
+//! ## Quick start
+//!
+//! ```no_run
+//! use mesos_fair::exp::tables;
+//!
+//! // Reproduce the paper's Table 1 (mean allocations over 200 RRR trials).
+//! let t = tables::run_illustrative(200, 0xC0FFEE);
+//! println!("{}", t.render());
+//! ```
+//!
+//! See `examples/` for the online experiments and the end-to-end cluster
+//! driver, and DESIGN.md / EXPERIMENTS.md for the experiment index.
+
+pub mod bench;
+pub mod cli;
+pub mod cluster;
+pub mod config;
+pub mod error;
+pub mod exp;
+pub mod mesos;
+pub mod metrics;
+pub mod resources;
+pub mod rng;
+pub mod runtime;
+pub mod scheduler;
+pub mod sim;
+pub mod spark;
+pub mod testing;
+
+/// Maximum frameworks in a padded scoring instance (mirrors
+/// `python/compile/kernels/__init__.py::N_MAX`; checked against
+/// `artifacts/manifest.json` at runtime start-up).
+pub const N_MAX: usize = 16;
+/// Maximum servers/agents in a padded scoring instance.
+pub const M_MAX: usize = 8;
+/// Maximum resource kinds in a padded scoring instance.
+pub const R_MAX: usize = 4;
+/// Finite stand-in for +inf in score tensors (same value as the kernels).
+pub const BIG: f64 = 1.0e30;
+
+/// Monte-Carlo samples per `pi_mc` kernel round.
+pub const PI_SAMPLES: usize = 16384;
+/// Tokens per `wordcount` kernel round.
+pub const WC_TOKENS: usize = 2048;
+/// Histogram buckets of the `wordcount` kernel.
+pub const WC_VOCAB: usize = 512;
+
+/// `true` when `v` is the kernels' BIG sentinel (or anything unreasonably
+/// close to it — scores are compared, never summed, so half-BIG is safe).
+#[inline]
+pub fn is_big(v: f64) -> bool {
+    v >= BIG / 2.0
+}

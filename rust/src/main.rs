@@ -1,0 +1,214 @@
+//! `mesos-fair` binary: the leader entrypoint (CLI over the experiment
+//! harness and the online coordinator). See `cli::USAGE`.
+
+use mesos_fair::cli::{Args, USAGE};
+use mesos_fair::config::load_online_config;
+use mesos_fair::error::{Error, Result};
+use mesos_fair::exp::{run_figure, run_illustrative, FIGURE_IDS};
+use mesos_fair::mesos::AllocatorMode;
+use mesos_fair::runtime::{ArtifactRuntime, HloScorer, WorkloadRuntime};
+use mesos_fair::scheduler::{NativeScorer, Scorer, POLICY_NAMES};
+use mesos_fair::sim::online::{OnlineConfig, OnlineSim};
+
+fn main() {
+    let code = match run() {
+        Ok(()) => 0,
+        Err(e) => {
+            eprintln!("error: {e}");
+            1
+        }
+    };
+    std::process::exit(code);
+}
+
+fn scorer_backend(args: &Args) -> Result<Box<dyn Scorer>> {
+    match args.flag_or("scorer", "native").as_str() {
+        "native" => Ok(Box::new(NativeScorer::new())),
+        "hlo" => Ok(Box::new(HloScorer::open_default()?)),
+        other => Err(Error::Config(format!("unknown scorer backend '{other}'"))),
+    }
+}
+
+fn run() -> Result<()> {
+    let args = Args::from_env()?;
+    match args.command.as_deref() {
+        Some("tables") => cmd_tables(&args),
+        Some("figure") => cmd_figure(&args),
+        Some("online") => cmd_online(&args),
+        Some("e2e") => cmd_e2e(&args),
+        Some("parity") => cmd_parity(&args),
+        Some("list") => {
+            println!("schedulers: {}", POLICY_NAMES.join(", "));
+            println!("figures: {:?}", FIGURE_IDS);
+            Ok(())
+        }
+        Some("help") | None => {
+            println!("{USAGE}");
+            Ok(())
+        }
+        Some(other) => Err(Error::Config(format!("unknown command '{other}'; try 'help'"))),
+    }
+}
+
+fn cmd_tables(args: &Args) -> Result<()> {
+    let trials = args.flag_usize("trials", 200)?;
+    let seed = args.flag_u64("seed", 0x5EED)?;
+    let t = run_illustrative(trials, seed);
+    println!("{}", t.render());
+    if let Some(dir) = args.flag("csv") {
+        let path = format!("{dir}/tables.csv");
+        t.to_csv().write_to(&path)?;
+        println!("wrote {path}");
+    }
+    Ok(())
+}
+
+fn cmd_figure(args: &Args) -> Result<()> {
+    let id: u8 = args
+        .positional
+        .first()
+        .ok_or_else(|| Error::Config("figure needs an id (3-9)".into()))?
+        .parse()
+        .map_err(|_| Error::Config("figure id must be a number".into()))?;
+    let jobs = args.flag_usize("jobs", 50)?;
+    let seed = args.flag_u64("seed", 0x5EED)?;
+    let fig = run_figure(id, jobs, seed)?;
+    println!("{}", fig.render());
+    if let Some(dir) = args.flag("csv") {
+        let path = format!("{dir}/figure{id}.csv");
+        fig.to_csv().write_to(&path)?;
+        println!("wrote {path}");
+    }
+    Ok(())
+}
+
+fn cmd_online(args: &Args) -> Result<()> {
+    let cfg = build_online_config(args)?;
+    let scorer = scorer_backend(args)?;
+    let result = OnlineSim::with_scorer(cfg, scorer)?.run()?;
+    print_online(&result);
+    Ok(())
+}
+
+fn build_online_config(args: &Args) -> Result<OnlineConfig> {
+    if let Some(path) = args.flag("config") {
+        return load_online_config(path);
+    }
+    let policy = args.flag_or("scheduler", "drf");
+    let mode = match args.flag_or("mode", "characterized").as_str() {
+        "oblivious" => AllocatorMode::Oblivious,
+        "characterized" => AllocatorMode::Characterized,
+        other => return Err(Error::Config(format!("unknown mode '{other}'"))),
+    };
+    let jobs = args.flag_usize("jobs", 50)?;
+    let mut cfg = if args.has("staged") {
+        OnlineConfig::paper_staged(&policy, jobs)
+    } else if args.has("homogeneous") {
+        OnlineConfig::paper_homogeneous(&policy, mode, jobs)
+    } else {
+        OnlineConfig::paper(&policy, mode, jobs)
+    };
+    cfg.seed = args.flag_u64("seed", 0x5EED)?;
+    Ok(cfg)
+}
+
+fn print_online(r: &mesos_fair::sim::online::OnlineResult) {
+    println!("run           : {}", r.label);
+    println!("jobs completed: {}", r.jobs_completed);
+    println!("tasks done    : {}", r.tasks_done);
+    println!("makespan      : {:.1}s", r.makespan);
+    println!(
+        "utilization   : cpu {:.1}%±{:.1}  mem {:.1}%±{:.1}",
+        100.0 * r.mean_cpu,
+        100.0 * r.std_cpu,
+        100.0 * r.mean_mem,
+        100.0 * r.std_mem
+    );
+    for (group, t) in &r.group_finish {
+        println!("group {group:10}: finished at {t:.1}s");
+    }
+    println!("allocator     : {} cycles, {} grants", r.cycles, r.grants);
+}
+
+fn cmd_e2e(args: &Args) -> Result<()> {
+    let jobs = args.flag_usize("jobs", 2)?;
+    let seed = args.flag_u64("seed", 0x5EED)?;
+    let policy = args.flag_or("scheduler", "rpsdsf");
+    let mut cfg = OnlineConfig::paper(&policy, AllocatorMode::Characterized, jobs);
+    for q in &mut cfg.queues {
+        q.workload.tasks_per_job = q.workload.tasks_per_job.min(16);
+    }
+    cfg.seed = seed;
+    let mut compute = WorkloadRuntime::open_default()?;
+    let t0 = std::time::Instant::now();
+    let result = OnlineSim::new(cfg)?.run_with_compute(&mut compute)?;
+    let wall = t0.elapsed().as_secs_f64();
+    print_online(&result);
+    println!("--- real compute (PJRT cpu backend) ---");
+    println!("pi rounds     : {}", compute.pi_rounds);
+    println!(
+        "pi estimate   : {:.5} (err {:+.5})",
+        compute.pi_estimate(),
+        compute.pi_estimate() - std::f64::consts::PI
+    );
+    println!("wc tokens     : {}", compute.tokens);
+    println!("top buckets   : {:?}", compute.top_buckets(5));
+    println!(
+        "task latency  : mean {:.3}ms over {} execs",
+        1e3 * compute.latency.mean(),
+        compute.latency.count()
+    );
+    println!("wall time     : {wall:.2}s");
+    Ok(())
+}
+
+fn cmd_parity(args: &Args) -> Result<()> {
+    use mesos_fair::exp::tables::illustrative_state;
+    let mut native = NativeScorer::new();
+    let mut hlo = HloScorer::new(ArtifactRuntime::open_default()?);
+    let trials = args.flag_usize("trials", 50)?;
+    let mut rng = mesos_fair::rng::Rng::new(args.flag_u64("seed", 1)?);
+    let mut max_err = 0.0f64;
+    for _ in 0..trials {
+        let mut st = illustrative_state();
+        // random partial allocation
+        for _ in 0..rng.index(30) {
+            let n = rng.index(2);
+            let i = rng.index(2);
+            if st.task_fits(n, i) {
+                st.place_task(n, i)?;
+            }
+        }
+        let si = st.score_inputs();
+        let a = native.score(&si)?;
+        let b = hlo.score(&si)?;
+        for n in 0..mesos_fair::N_MAX {
+            let pairs = [(a.drf[n], b.drf[n]), (a.tsf[n], b.tsf[n])];
+            for (x, y) in pairs {
+                if !(mesos_fair::is_big(x) && mesos_fair::is_big(y)) {
+                    max_err = max_err.max((x - y).abs());
+                }
+            }
+            for i in 0..mesos_fair::M_MAX {
+                if a.feas[n][i] != b.feas[n][i] {
+                    return Err(Error::Experiment(format!("feasibility mismatch at ({n},{i})")));
+                }
+                for (x, y) in [
+                    (a.psdsf[n][i], b.psdsf[n][i]),
+                    (a.rpsdsf[n][i], b.rpsdsf[n][i]),
+                    (a.fit[n][i], b.fit[n][i]),
+                ] {
+                    if !(mesos_fair::is_big(x) && mesos_fair::is_big(y)) {
+                        max_err = max_err.max((x - y).abs());
+                    }
+                }
+            }
+        }
+    }
+    println!("native vs hlo scorer: {trials} random states, max abs error {max_err:.2e}");
+    if max_err > 1e-4 {
+        return Err(Error::Experiment(format!("scorer parity violated: {max_err}")));
+    }
+    println!("parity OK");
+    Ok(())
+}

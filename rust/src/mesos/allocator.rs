@@ -1,0 +1,384 @@
+//! The allocation cycle — the logic Figure 1 flowcharts, for both modes.
+//!
+//! A cycle runs whenever resources free up (job completion, agent
+//! registration, new framework): it repeatedly scores the cluster, picks a
+//! `(framework, agent)` pair by the configured fairness policy, makes an
+//! offer, and applies the framework's response, until no further offer is
+//! possible. Frameworks that decline an offer are not re-offered the same
+//! agent within the cycle (Mesos' offer-decline backoff, collapsed to the
+//! cycle granularity).
+
+use crate::cluster::AgentId;
+use crate::error::Result;
+use crate::mesos::offer::Offer;
+use crate::resources::ResVec;
+use crate::rng::Rng;
+use crate::scheduler::policy::PolicyKind;
+use crate::scheduler::server_select;
+use crate::scheduler::{AllocState, Policy, ScoreSet, Scorer};
+use std::collections::HashSet;
+
+/// Oblivious ("coarse-grained") vs workload-characterized ("fine-grained").
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum AllocatorMode {
+    Oblivious,
+    Characterized,
+}
+
+impl AllocatorMode {
+    pub fn label(&self) -> &'static str {
+        match self {
+            AllocatorMode::Oblivious => "oblivious",
+            AllocatorMode::Characterized => "characterized",
+        }
+    }
+}
+
+/// An applied allocation: `count` executors worth `amount` in total.
+#[derive(Debug, Clone, PartialEq)]
+pub struct Grant {
+    pub framework: usize,
+    pub agent: AgentId,
+    pub amount: ResVec,
+    pub count: f64,
+}
+
+/// The framework side of the offer protocol (implemented by the Spark
+/// drivers in the online sim).
+pub trait OfferHandler {
+    /// Does this framework currently want more executors?
+    fn wants(&self, framework: usize) -> bool;
+    /// Respond to an offer: how many executors are launched and how much of
+    /// the offer is accepted in total. `(0, zero)` declines.
+    fn accept(&mut self, offer: &Offer) -> (f64, ResVec);
+}
+
+/// Tracks which frameworks lack a demand estimate (oblivious mode): they
+/// score as `-1` (absolute priority — "newly arrived frameworks with no
+/// allocations are given priority", §3.1).
+const NEW_FRAMEWORK_SCORE: f64 = -1.0;
+
+/// One allocation cycle. Returns the grants applied. `no_inference[n]` marks
+/// frameworks whose demand is still unknown (oblivious mode only; empty
+/// slice in characterized mode).
+#[allow(clippy::too_many_arguments)]
+pub fn allocation_cycle(
+    state: &mut AllocState,
+    policy: &Policy,
+    scorer: &mut dyn Scorer,
+    mode: AllocatorMode,
+    handler: &mut dyn OfferHandler,
+    no_inference: &[bool],
+    rng: &mut Rng,
+) -> Result<Vec<Grant>> {
+    let mut grants = Vec::new();
+    let mut declined: HashSet<(usize, AgentId)> = HashSet::new();
+    // Hard bound: each iteration either grants (bounded by capacity) or
+    // declines (bounded by N_MAX * M_MAX pairs).
+    let max_iters = 10_000;
+
+    // Scores only change when a grant mutates state; decline-only iterations
+    // reuse the cached tensors (see EXPERIMENTS.md §Perf).
+    let mut cached: Option<(crate::scheduler::ScoreInputs, ScoreSet)> = None;
+
+    for _ in 0..max_iters {
+        if cached.is_none() {
+            let si_new = state.score_inputs();
+            let set_new = scorer.score(&si_new)?;
+            cached = Some((si_new, set_new));
+        }
+        let (si_ref, base) = cached.as_ref().unwrap();
+        let si = si_ref.clone();
+        let mut set = base.clone();
+        mask_unwanted(&mut set, state, handler, &declined);
+        if mode == AllocatorMode::Oblivious {
+            oblivious_adjust(&mut set, state, handler, no_inference, &declined);
+        }
+
+        let candidates = available_agents(state);
+        if candidates.is_empty() {
+            break;
+        }
+        let pick = match policy.kind {
+            PolicyKind::PerAgent => {
+                let order = server_select::rrr_order(&candidates, rng);
+                let mut found = None;
+                for i in order {
+                    if let Some(n) = policy.pick_for_agent(&set, &si, i, rng) {
+                        found = Some((n, i));
+                        break;
+                    }
+                }
+                found
+            }
+            PolicyKind::Joint => policy.pick_joint(&set, &si, &candidates),
+            PolicyKind::BestFit => pick_bestfit_with_fallback(policy, &set, &si, &candidates, no_inference, rng),
+        };
+        let Some((n, i)) = pick else { break };
+
+        let offered = match mode {
+            // the whole residual of the agent (coarse-grained offer)
+            AllocatorMode::Oblivious => state.pool.agent(i).residual(),
+            // exactly one executor's worth (fine-grained offer)
+            AllocatorMode::Characterized => state.framework(n).demand,
+        };
+        let offer = Offer::new(n, i, offered);
+        let (count, amount) = handler.accept(&offer);
+        if count <= 0.0 {
+            declined.insert((n, i));
+            continue;
+        }
+        debug_assert!(amount.fits_within(&offer.resources));
+        state.place(n, i, &amount, count)?;
+        grants.push(Grant { framework: n, agent: i, amount, count });
+        cached = None; // state changed: rescore next iteration
+    }
+    Ok(grants)
+}
+
+/// Registered agents with any free resources.
+fn available_agents(state: &AllocState) -> Vec<AgentId> {
+    state.pool.available_ids()
+}
+
+/// Remove pairs the handler doesn't want or already declined.
+fn mask_unwanted(
+    set: &mut ScoreSet,
+    state: &AllocState,
+    handler: &dyn OfferHandler,
+    declined: &HashSet<(usize, AgentId)>,
+) {
+    for n in 0..state.n_frameworks() {
+        let wanted = state.framework(n).active && handler.wants(n);
+        for i in 0..state.pool.len() {
+            if !wanted || declined.contains(&(n, i)) {
+                set.feas[n][i] = false;
+            }
+        }
+    }
+}
+
+/// Oblivious-mode adjustments: feasibility is "any free resources at all"
+/// (the allocator cannot check a demand it doesn't know), and frameworks
+/// with no estimate yet take absolute priority.
+fn oblivious_adjust(
+    set: &mut ScoreSet,
+    state: &AllocState,
+    handler: &dyn OfferHandler,
+    no_inference: &[bool],
+    declined: &HashSet<(usize, AgentId)>,
+) {
+    for n in 0..state.n_frameworks() {
+        let fw = state.framework(n);
+        if !fw.active || !handler.wants(n) {
+            continue;
+        }
+        let unknown = no_inference.get(n).copied().unwrap_or(false);
+        for i in 0..state.pool.len() {
+            if declined.contains(&(n, i)) {
+                continue;
+            }
+            let agent = state.pool.agent(i);
+            let open = agent.registered && agent.residual().any_positive();
+            if open {
+                set.feas[n][i] = true;
+                if unknown {
+                    set.drf[n] = NEW_FRAMEWORK_SCORE;
+                    set.tsf[n] = NEW_FRAMEWORK_SCORE;
+                    set.psdsf[n][i] = NEW_FRAMEWORK_SCORE;
+                    set.rpsdsf[n][i] = NEW_FRAMEWORK_SCORE;
+                    set.fit[n][i] = NEW_FRAMEWORK_SCORE;
+                }
+            } else {
+                set.feas[n][i] = false;
+            }
+        }
+    }
+}
+
+/// BF-DRF in oblivious mode may have to place a framework with unknown
+/// demand: best-fit is undefined, fall back to the first open agent.
+fn pick_bestfit_with_fallback(
+    policy: &Policy,
+    set: &ScoreSet,
+    si: &crate::scheduler::ScoreInputs,
+    candidates: &[usize],
+    no_inference: &[bool],
+    rng: &mut Rng,
+) -> Option<(usize, usize)> {
+    if let Some(pick) = policy.pick_bestfit(set, si, candidates, rng) {
+        return Some(pick);
+    }
+    // unknown-demand frameworks: any feasible agent will do
+    for (n, unknown) in no_inference.iter().enumerate() {
+        if !unknown {
+            continue;
+        }
+        for &i in candidates {
+            if set.feas[n][i] {
+                return Some((n, i));
+            }
+        }
+    }
+    None
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::cluster::{AgentPool, ServerType};
+    use crate::scheduler::{policy_by_name, FrameworkEntry, NativeScorer};
+
+    /// Accepts up to `want` executors of fixed demand `d` per framework.
+    struct GreedyHandler {
+        d: Vec<ResVec>,
+        want: Vec<usize>,
+        have: Vec<usize>,
+    }
+
+    impl OfferHandler for GreedyHandler {
+        fn wants(&self, n: usize) -> bool {
+            self.have[n] < self.want[n]
+        }
+        fn accept(&mut self, offer: &Offer) -> (f64, ResVec) {
+            let d = self.d[offer.framework];
+            let fit = offer.executors_that_fit(&d) as usize;
+            let take = fit.min(self.want[offer.framework] - self.have[offer.framework]);
+            if take == 0 {
+                return (0.0, ResVec::zero(d.len()));
+            }
+            self.have[offer.framework] += take;
+            (take as f64, d.scaled(take as f64))
+        }
+    }
+
+    fn paper_state() -> (AllocState, GreedyHandler) {
+        let pool = AgentPool::new(&ServerType::paper_heterogeneous());
+        let mut st = AllocState::new(pool);
+        let pi = ResVec::cpu_mem(2.0, 2.0);
+        let wc = ResVec::cpu_mem(1.0, 3.5);
+        st.add_framework(FrameworkEntry {
+            name: "pi".into(),
+            demand: pi,
+            weight: 1.0,
+            active: true,
+        });
+        st.add_framework(FrameworkEntry {
+            name: "wc".into(),
+            demand: wc,
+            weight: 1.0,
+            active: true,
+        });
+        let h = GreedyHandler { d: vec![pi, wc], want: vec![100, 100], have: vec![0, 0] };
+        (st, h)
+    }
+
+    #[test]
+    fn characterized_cycle_fills_cluster() {
+        let (mut st, mut h) = paper_state();
+        let policy = policy_by_name("psdsf").unwrap();
+        let mut scorer = NativeScorer::new();
+        let mut rng = Rng::new(1);
+        let grants = allocation_cycle(
+            &mut st, &policy, &mut scorer, AllocatorMode::Characterized, &mut h, &[], &mut rng,
+        )
+        .unwrap();
+        assert!(!grants.is_empty());
+        // every grant is exactly one executor in characterized mode
+        assert!(grants.iter().all(|g| g.count == 1.0));
+        // cluster is saturated for both demand vectors afterwards
+        assert!(st.pool.nothing_fits(&ResVec::cpu_mem(2.0, 2.0)));
+        assert!(st.pool.nothing_fits(&ResVec::cpu_mem(1.0, 3.5)));
+        // PS-DSF packs the heterogeneous cluster tightly: type-2 agents all-Pi
+        let total: f64 = grants.iter().map(|g| g.count).sum();
+        assert!(total >= 16.0, "expected a full packing, got {total}");
+    }
+
+    #[test]
+    fn oblivious_cycle_offers_whole_agents() {
+        let (mut st, mut h) = paper_state();
+        let policy = policy_by_name("drf").unwrap();
+        let mut scorer = NativeScorer::new();
+        let mut rng = Rng::new(2);
+        let no_inf = vec![true, true];
+        let grants = allocation_cycle(
+            &mut st, &policy, &mut scorer, AllocatorMode::Oblivious, &mut h, &no_inf, &mut rng,
+        )
+        .unwrap();
+        // coarse grants: at least one multi-executor chunk
+        assert!(grants.iter().any(|g| g.count > 1.0), "{grants:?}");
+        assert!(st.pool.nothing_fits(&ResVec::cpu_mem(2.0, 2.0)));
+    }
+
+    #[test]
+    fn wants_false_stops_offers() {
+        let (mut st, mut h) = paper_state();
+        h.want = vec![0, 0];
+        let policy = policy_by_name("drf").unwrap();
+        let grants = allocation_cycle(
+            &mut st,
+            &policy,
+            &mut NativeScorer::new(),
+            AllocatorMode::Characterized,
+            &mut h,
+            &[],
+            &mut Rng::new(3),
+        )
+        .unwrap();
+        assert!(grants.is_empty());
+    }
+
+    #[test]
+    fn decline_is_not_reoffered_within_cycle() {
+        struct DecliningHandler {
+            offers_seen: Vec<Offer>,
+        }
+        impl OfferHandler for DecliningHandler {
+            fn wants(&self, _n: usize) -> bool {
+                true
+            }
+            fn accept(&mut self, offer: &Offer) -> (f64, ResVec) {
+                self.offers_seen.push(offer.clone());
+                (0.0, ResVec::zero(2))
+            }
+        }
+        let (mut st, _) = paper_state();
+        let mut h = DecliningHandler { offers_seen: Vec::new() };
+        let policy = policy_by_name("drf").unwrap();
+        allocation_cycle(
+            &mut st,
+            &policy,
+            &mut NativeScorer::new(),
+            AllocatorMode::Characterized,
+            &mut h,
+            &[],
+            &mut Rng::new(4),
+        )
+        .unwrap();
+        // at most one offer per (framework, agent) pair
+        let mut seen = HashSet::new();
+        for o in &h.offers_seen {
+            assert!(seen.insert((o.framework, o.agent)), "re-offered {o:?}");
+        }
+        assert!(!h.offers_seen.is_empty());
+    }
+
+    #[test]
+    fn grants_never_oversubscribe() {
+        let (mut st, mut h) = paper_state();
+        let policy = policy_by_name("rpsdsf").unwrap();
+        allocation_cycle(
+            &mut st,
+            &policy,
+            &mut NativeScorer::new(),
+            AllocatorMode::Characterized,
+            &mut h,
+            &[],
+            &mut Rng::new(5),
+        )
+        .unwrap();
+        for a in st.pool.agents() {
+            assert!(a.residual().non_negative(), "agent {} over-allocated", a.id);
+        }
+    }
+}

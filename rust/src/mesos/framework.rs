@@ -1,0 +1,113 @@
+//! Per-framework accounting on the master side, including the oblivious
+//! mode's demand *inference*.
+//!
+//! §3.1: "the allocator is not aware of the resource demands of the
+//! frameworks … the resource requirements {d_{n,r}} per task of a framework
+//! n are thus inferred" from existing allocations. The tracker keeps the
+//! running totals of accepted resources and executor counts; the inferred
+//! per-task demand is their ratio (DESIGN.md §6.2; the `last-grant`
+//! alternative lives in the ablation bench).
+
+use crate::resources::ResVec;
+
+/// How oblivious inference derives `d̃` from observed grants.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Default)]
+pub enum InferenceRule {
+    /// `d̃ = Σ accepted / Σ executors` (running mean). Default.
+    #[default]
+    Mean,
+    /// `d̃ = last accepted chunk / its executor count`.
+    LastGrant,
+}
+
+/// Running demand estimate for one framework.
+#[derive(Debug, Clone)]
+pub struct DemandTracker {
+    rule: InferenceRule,
+    total: ResVec,
+    count: f64,
+    last: Option<ResVec>,
+}
+
+impl DemandTracker {
+    pub fn new(resource_kinds: usize, rule: InferenceRule) -> Self {
+        DemandTracker { rule, total: ResVec::zero(resource_kinds), count: 0.0, last: None }
+    }
+
+    /// Record an accepted grant of `amount` covering `count` executors.
+    pub fn observe(&mut self, amount: &ResVec, count: f64) {
+        debug_assert!(count > 0.0);
+        self.total += *amount;
+        self.count += count;
+        self.last = Some(amount.scaled(1.0 / count));
+    }
+
+    /// Record a release (job completion returning resources).
+    pub fn release(&mut self, amount: &ResVec, count: f64) {
+        self.total = self.total.saturating_sub(amount);
+        self.count = (self.count - count).max(0.0);
+    }
+
+    /// Current inferred per-task demand; `None` before any observation
+    /// (a brand-new framework — the allocator knows nothing about it).
+    pub fn inferred(&self) -> Option<ResVec> {
+        match self.rule {
+            InferenceRule::Mean => {
+                if self.count > 0.0 {
+                    Some(self.total.scaled(1.0 / self.count))
+                } else {
+                    None
+                }
+            }
+            InferenceRule::LastGrant => self.last,
+        }
+    }
+
+    pub fn executors(&self) -> f64 {
+        self.count
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn mean_inference_converges_to_true_demand() {
+        let mut t = DemandTracker::new(2, InferenceRule::Mean);
+        assert!(t.inferred().is_none());
+        // grants of 2 then 3 executors at true d = (2, 2)
+        t.observe(&ResVec::cpu_mem(4.0, 4.0), 2.0);
+        t.observe(&ResVec::cpu_mem(6.0, 6.0), 3.0);
+        assert_eq!(t.inferred().unwrap().as_slice(), &[2.0, 2.0]);
+    }
+
+    #[test]
+    fn mean_inference_averages_uneven_grants() {
+        let mut t = DemandTracker::new(2, InferenceRule::Mean);
+        // a coarse grant that over-provisioned (framework took a big chunk)
+        t.observe(&ResVec::cpu_mem(6.0, 10.0), 2.0);
+        t.observe(&ResVec::cpu_mem(2.0, 2.0), 1.0);
+        let d = t.inferred().unwrap();
+        assert!((d.get(0) - 8.0 / 3.0).abs() < 1e-12);
+        assert!((d.get(1) - 4.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn last_grant_rule() {
+        let mut t = DemandTracker::new(2, InferenceRule::LastGrant);
+        t.observe(&ResVec::cpu_mem(4.0, 4.0), 2.0);
+        t.observe(&ResVec::cpu_mem(9.0, 3.0), 3.0);
+        assert_eq!(t.inferred().unwrap().as_slice(), &[3.0, 1.0]);
+    }
+
+    #[test]
+    fn release_rewinds_totals() {
+        let mut t = DemandTracker::new(2, InferenceRule::Mean);
+        t.observe(&ResVec::cpu_mem(4.0, 4.0), 2.0);
+        t.release(&ResVec::cpu_mem(2.0, 2.0), 1.0);
+        assert_eq!(t.inferred().unwrap().as_slice(), &[2.0, 2.0]);
+        t.release(&ResVec::cpu_mem(2.0, 2.0), 1.0);
+        assert!(t.inferred().is_none()); // count back to zero
+    }
+}

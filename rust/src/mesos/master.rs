@@ -1,0 +1,277 @@
+//! The Mesos master: framework churn, agent registration, release handling,
+//! and the allocator invocation — the stateful wrapper the online sim and
+//! the e2e example drive.
+
+use crate::cluster::{AgentId, AgentPool};
+use crate::error::{Error, Result};
+use crate::mesos::allocator::{allocation_cycle, AllocatorMode, Grant, OfferHandler};
+use crate::mesos::framework::{DemandTracker, InferenceRule};
+use crate::resources::ResVec;
+use crate::rng::Rng;
+use crate::scheduler::{AllocState, FrameworkEntry, Policy, Scorer};
+use crate::N_MAX;
+use std::collections::HashMap;
+
+/// The master. Owns the allocator state (pool + frameworks + x matrix), the
+/// fairness policy, the scoring backend and the per-framework demand
+/// trackers (oblivious mode).
+pub struct Master {
+    pub state: AllocState,
+    pub policy: Policy,
+    pub mode: AllocatorMode,
+    scorer: Box<dyn Scorer>,
+    /// Demand inference per Mesos *role* (oblivious mode): a role's history
+    /// persists across its jobs' churn, like Mesos' role-level accounting.
+    trackers: HashMap<usize, DemandTracker>,
+    inference: InferenceRule,
+    /// Cycles run (for perf accounting).
+    pub cycles: u64,
+    /// Grants applied over the run.
+    pub total_grants: u64,
+}
+
+impl Master {
+    pub fn new(
+        pool: AgentPool,
+        policy: Policy,
+        mode: AllocatorMode,
+        scorer: Box<dyn Scorer>,
+    ) -> Self {
+        Master {
+            state: AllocState::new(pool),
+            policy,
+            mode,
+            scorer,
+            trackers: HashMap::new(),
+            inference: InferenceRule::Mean,
+            cycles: 0,
+            total_grants: 0,
+        }
+    }
+
+    pub fn set_inference_rule(&mut self, rule: InferenceRule) {
+        self.inference = rule;
+    }
+
+    /// Register a framework. In characterized mode `declared` must be the
+    /// true per-executor demand; in oblivious mode it is ignored (the
+    /// allocator starts with no estimate). Reuses a free slot if available;
+    /// errors when all `N_MAX` slots are busy (caller retries later).
+    pub fn register_framework(
+        &mut self,
+        name: String,
+        declared: Option<ResVec>,
+        weight: f64,
+    ) -> Result<usize> {
+        let kinds = self.state.pool.resource_kinds();
+        let believed = match self.mode {
+            AllocatorMode::Characterized => declared.ok_or_else(|| {
+                Error::Cluster("characterized mode requires a declared demand".into())
+            })?,
+            AllocatorMode::Oblivious => ResVec::zero(kinds),
+        };
+        let entry = FrameworkEntry { name, demand: believed, weight, active: true };
+
+        // reuse a fully drained inactive slot
+        for n in 0..self.state.n_frameworks() {
+            let drained = !self.state.framework(n).active
+                && (0..self.state.pool.len()).all(|i| self.state.tasks_on(n, i) == 0.0);
+            if drained {
+                self.state.replace_framework(n, entry);
+                return Ok(n);
+            }
+        }
+        if self.state.n_frameworks() >= N_MAX {
+            return Err(Error::Cluster(format!(
+                "all {N_MAX} framework slots busy; retry after releases"
+            )));
+        }
+        let _ = kinds;
+        let n = self.state.add_framework(entry);
+        Ok(n)
+    }
+
+    /// Register a framework under a Mesos *role* — fair shares aggregate per
+    /// role, as for the paper's Pi/WordCount submission groups (§3.3).
+    pub fn register_framework_in_role(
+        &mut self,
+        name: String,
+        declared: Option<ResVec>,
+        weight: f64,
+        role: usize,
+    ) -> Result<usize> {
+        let n = self.register_framework(name, declared, weight)?;
+        self.state.set_role(n, role);
+        Ok(n)
+    }
+
+    /// Run one allocation cycle against the given offer handler.
+    pub fn allocate(&mut self, handler: &mut dyn OfferHandler, rng: &mut Rng) -> Result<Vec<Grant>> {
+        self.cycles += 1;
+        // refresh believed demands from inference (oblivious mode)
+        let mut no_inference = vec![false; self.state.n_frameworks()];
+        if self.mode == AllocatorMode::Oblivious {
+            for n in 0..self.state.n_frameworks() {
+                let role = self.state.role_of(n);
+                match self.trackers.get(&role).and_then(|t| t.inferred()) {
+                    Some(d) => self.state.framework_mut(n).demand = d,
+                    None => no_inference[n] = true,
+                }
+            }
+        }
+        let grants = allocation_cycle(
+            &mut self.state,
+            &self.policy,
+            self.scorer.as_mut(),
+            self.mode,
+            handler,
+            &no_inference,
+            rng,
+        )?;
+        let kinds = self.state.pool.resource_kinds();
+        for g in &grants {
+            let role = self.state.role_of(g.framework);
+            self.trackers
+                .entry(role)
+                .or_insert_with(|| DemandTracker::new(kinds, self.inference))
+                .observe(&g.amount, g.count);
+        }
+        self.total_grants += grants.len() as u64;
+        Ok(grants)
+    }
+
+    /// A framework's executor resources return to agent `agent`.
+    pub fn release(&mut self, framework: usize, agent: AgentId, amount: &ResVec, count: f64) -> Result<()> {
+        self.state.unplace(framework, agent, amount, count)?;
+        let role = self.state.role_of(framework);
+        if let Some(t) = self.trackers.get_mut(&role) {
+            t.release(amount, count);
+        }
+        Ok(())
+    }
+
+    /// Mark a framework complete (stops scoring; slot reused once drained).
+    pub fn finish_framework(&mut self, framework: usize) {
+        self.state.deactivate(framework);
+    }
+
+    /// Register a pending agent (Fig-9 staging).
+    pub fn agent_up(&mut self, agent: AgentId) {
+        self.state.pool.agent_mut(agent).registered = true;
+    }
+
+    /// Allocated fraction per resource over registered agents.
+    pub fn utilization(&self) -> Vec<f64> {
+        self.state.pool.utilization()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::cluster::ServerType;
+    use crate::mesos::offer::Offer;
+    use crate::scheduler::{policy_by_name, NativeScorer};
+
+    struct TakeN {
+        d: ResVec,
+        want: usize,
+        have: usize,
+    }
+    impl OfferHandler for TakeN {
+        fn wants(&self, _n: usize) -> bool {
+            self.have < self.want
+        }
+        fn accept(&mut self, offer: &Offer) -> (f64, ResVec) {
+            let fit = offer.executors_that_fit(&self.d) as usize;
+            let take = fit.min(self.want - self.have);
+            self.have += take;
+            (take as f64, self.d.scaled(take as f64))
+        }
+    }
+
+    fn master(mode: AllocatorMode) -> Master {
+        Master::new(
+            AgentPool::new(&ServerType::paper_homogeneous()),
+            policy_by_name("drf").unwrap(),
+            mode,
+            Box::new(NativeScorer::new()),
+        )
+    }
+
+    #[test]
+    fn register_allocate_release_roundtrip() {
+        let mut m = master(AllocatorMode::Characterized);
+        let pi = ResVec::cpu_mem(2.0, 2.0);
+        let n = m.register_framework("pi-0".into(), Some(pi), 1.0).unwrap();
+        let mut h = TakeN { d: pi, want: 4, have: 0 };
+        let grants = m.allocate(&mut h, &mut Rng::new(1)).unwrap();
+        assert_eq!(grants.iter().map(|g| g.count).sum::<f64>(), 4.0);
+        assert!(m.utilization()[0] > 0.0);
+        for g in grants {
+            m.release(n, g.agent, &g.amount, g.count).unwrap();
+        }
+        m.finish_framework(n);
+        assert_eq!(m.utilization()[0], 0.0);
+    }
+
+    #[test]
+    fn slot_reuse_after_drain() {
+        let mut m = master(AllocatorMode::Characterized);
+        let pi = ResVec::cpu_mem(2.0, 2.0);
+        let n0 = m.register_framework("a".into(), Some(pi), 1.0).unwrap();
+        m.finish_framework(n0);
+        let n1 = m.register_framework("b".into(), Some(pi), 1.0).unwrap();
+        assert_eq!(n0, n1, "drained slot should be reused");
+        assert_eq!(m.state.framework(n1).name, "b");
+    }
+
+    #[test]
+    fn characterized_requires_declared_demand() {
+        let mut m = master(AllocatorMode::Characterized);
+        assert!(m.register_framework("x".into(), None, 1.0).is_err());
+    }
+
+    #[test]
+    fn oblivious_inference_updates_believed_demand() {
+        let mut m = master(AllocatorMode::Oblivious);
+        let pi = ResVec::cpu_mem(2.0, 2.0);
+        let n = m.register_framework("pi".into(), None, 1.0).unwrap();
+        assert!(m.state.framework(n).demand.is_zero());
+        let mut h = TakeN { d: pi, want: 3, have: 0 };
+        m.allocate(&mut h, &mut Rng::new(2)).unwrap();
+        // next allocate() refreshes the believed demand from the tracker
+        let mut h2 = TakeN { d: pi, want: 3, have: 3 };
+        m.allocate(&mut h2, &mut Rng::new(3)).unwrap();
+        assert_eq!(m.state.framework(n).demand.as_slice(), &[2.0, 2.0]);
+    }
+
+    #[test]
+    fn slots_exhaust_then_error() {
+        let mut m = master(AllocatorMode::Characterized);
+        let pi = ResVec::cpu_mem(2.0, 2.0);
+        for k in 0..N_MAX {
+            m.register_framework(format!("f{k}"), Some(pi), 1.0).unwrap();
+        }
+        assert!(m.register_framework("extra".into(), Some(pi), 1.0).is_err());
+    }
+
+    #[test]
+    fn staged_agent_up() {
+        let mut m = Master::new(
+            AgentPool::new_staged(&ServerType::paper_staged()),
+            policy_by_name("rpsdsf").unwrap(),
+            AllocatorMode::Characterized,
+            Box::new(NativeScorer::new()),
+        );
+        let pi = ResVec::cpu_mem(2.0, 2.0);
+        m.register_framework("pi".into(), Some(pi), 1.0).unwrap();
+        let mut h = TakeN { d: pi, want: 10, have: 0 };
+        let g0 = m.allocate(&mut h, &mut Rng::new(4)).unwrap();
+        assert!(g0.is_empty(), "no agents registered yet");
+        m.agent_up(0);
+        let g1 = m.allocate(&mut h, &mut Rng::new(5)).unwrap();
+        assert!(!g1.is_empty());
+        assert!(g1.iter().all(|g| g.agent == 0));
+    }
+}

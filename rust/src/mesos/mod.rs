@@ -1,0 +1,24 @@
+//! The Mesos master + allocator model (paper §3.1, Figure 1).
+//!
+//! The master manages framework churn: when agent resources free up it
+//! selects a framework (via the pluggable fairness [`crate::scheduler`])
+//! and makes it a resource *offer*; the framework accepts in whole or in
+//! part. Two allocation modes:
+//!
+//! * [`AllocatorMode::Oblivious`] ("coarse-grained", Fig 1 left): the
+//!   allocator does not know per-task demands; it offers a framework *all*
+//!   remaining resources of the selected agent and infers demands from the
+//!   framework's accepted allocations.
+//! * [`AllocatorMode::Characterized`] ("fine-grained", Fig 1 right): each
+//!   framework declares `d_{n,r}`; the allocator hands out a single task's
+//!   worth of resources per decision.
+
+pub mod allocator;
+pub mod framework;
+pub mod master;
+pub mod offer;
+
+pub use allocator::{AllocatorMode, Grant, OfferHandler};
+pub use framework::DemandTracker;
+pub use master::Master;
+pub use offer::Offer;

@@ -1,0 +1,40 @@
+//! Resource offers — Mesos' unit of negotiation with frameworks.
+
+use crate::cluster::AgentId;
+use crate::resources::ResVec;
+
+/// An offer of `resources` on `agent` to framework `framework`.
+#[derive(Debug, Clone, PartialEq)]
+pub struct Offer {
+    pub framework: usize,
+    pub agent: AgentId,
+    pub resources: ResVec,
+}
+
+impl Offer {
+    pub fn new(framework: usize, agent: AgentId, resources: ResVec) -> Self {
+        Offer { framework, agent, resources }
+    }
+
+    /// How many whole executors of per-executor demand `d` fit this offer.
+    pub fn executors_that_fit(&self, d: &ResVec) -> u64 {
+        d.whole_tasks_within(&self.resources).unwrap_or(0)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn carving_executors_from_offer() {
+        // a whole type-1 agent offered to the WordCount framework
+        let offer = Offer::new(0, 0, ResVec::cpu_mem(4.0, 14.0));
+        assert_eq!(offer.executors_that_fit(&ResVec::cpu_mem(1.0, 3.5)), 4);
+        // Pi executors are cpu-bound there
+        assert_eq!(offer.executors_that_fit(&ResVec::cpu_mem(2.0, 2.0)), 2);
+        // nothing fits an empty offer
+        let empty = Offer::new(0, 0, ResVec::cpu_mem(0.0, 0.0));
+        assert_eq!(empty.executors_that_fit(&ResVec::cpu_mem(1.0, 3.5)), 0);
+    }
+}

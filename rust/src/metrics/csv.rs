@@ -1,0 +1,110 @@
+//! Minimal CSV writer (serde/csv crates unavailable offline). Handles
+//! quoting of fields containing commas/quotes/newlines per RFC 4180.
+
+use crate::error::Result;
+use std::io::Write;
+use std::path::Path;
+
+/// Quote a field if needed.
+fn escape(field: &str) -> String {
+    if field.contains(',') || field.contains('"') || field.contains('\n') {
+        format!("\"{}\"", field.replace('"', "\"\""))
+    } else {
+        field.to_string()
+    }
+}
+
+/// An in-memory CSV table.
+#[derive(Debug, Clone, Default)]
+pub struct CsvTable {
+    header: Vec<String>,
+    rows: Vec<Vec<String>>,
+}
+
+impl CsvTable {
+    pub fn new<S: Into<String>>(header: Vec<S>) -> Self {
+        CsvTable { header: header.into_iter().map(Into::into).collect(), rows: Vec::new() }
+    }
+
+    /// Append a row; must match the header width.
+    pub fn row<S: Into<String>>(&mut self, cells: Vec<S>) {
+        let cells: Vec<String> = cells.into_iter().map(Into::into).collect();
+        assert_eq!(cells.len(), self.header.len(), "row width != header width");
+        self.rows.push(cells);
+    }
+
+    /// Append a row of floats with fixed precision.
+    pub fn row_f64(&mut self, cells: &[f64], precision: usize) {
+        self.row(cells.iter().map(|v| format!("{v:.precision$}")).collect::<Vec<_>>());
+    }
+
+    pub fn n_rows(&self) -> usize {
+        self.rows.len()
+    }
+
+    /// Render to a CSV string.
+    pub fn render(&self) -> String {
+        let mut out = String::new();
+        out.push_str(
+            &self.header.iter().map(|h| escape(h)).collect::<Vec<_>>().join(","),
+        );
+        out.push('\n');
+        for row in &self.rows {
+            out.push_str(&row.iter().map(|c| escape(c)).collect::<Vec<_>>().join(","));
+            out.push('\n');
+        }
+        out
+    }
+
+    /// Write to a file, creating parent directories.
+    pub fn write_to(&self, path: impl AsRef<Path>) -> Result<()> {
+        let path = path.as_ref();
+        if let Some(parent) = path.parent() {
+            std::fs::create_dir_all(parent)?;
+        }
+        let mut f = std::fs::File::create(path)?;
+        f.write_all(self.render().as_bytes())?;
+        Ok(())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn renders_basic() {
+        let mut t = CsvTable::new(vec!["a", "b"]);
+        t.row(vec!["1", "2"]);
+        t.row_f64(&[0.5, 1.25], 2);
+        assert_eq!(t.render(), "a,b\n1,2\n0.50,1.25\n");
+    }
+
+    #[test]
+    fn escapes_specials() {
+        let mut t = CsvTable::new(vec!["x"]);
+        t.row(vec!["has,comma"]);
+        t.row(vec!["has\"quote"]);
+        let r = t.render();
+        assert!(r.contains("\"has,comma\""));
+        assert!(r.contains("\"has\"\"quote\""));
+    }
+
+    #[test]
+    #[should_panic]
+    fn width_mismatch_panics() {
+        let mut t = CsvTable::new(vec!["a", "b"]);
+        t.row(vec!["only-one"]);
+    }
+
+    #[test]
+    fn writes_file() {
+        let mut t = CsvTable::new(vec!["a"]);
+        t.row(vec!["1"]);
+        let dir = std::env::temp_dir().join("mesos_fair_csv_test");
+        let path = dir.join("t.csv");
+        t.write_to(&path).unwrap();
+        assert_eq!(std::fs::read_to_string(&path).unwrap(), "a\n1\n");
+        let _ = std::fs::remove_dir_all(dir);
+    }
+}

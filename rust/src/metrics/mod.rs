@@ -1,0 +1,12 @@
+//! Metrics substrate: summary statistics, time series, CSV/JSON writers and
+//! the ASCII plotter the figure benches render with (serde/plotters are
+//! unavailable offline — DESIGN.md §2).
+
+pub mod csv;
+pub mod json;
+pub mod plot;
+pub mod series;
+pub mod stats;
+
+pub use series::TimeSeries;
+pub use stats::Summary;

@@ -1,0 +1,91 @@
+//! ASCII line plots — the terminal rendering of the paper's figures.
+//!
+//! Each figure bench prints two artifacts: a CSV (for external plotting)
+//! and an ASCII chart so `cargo bench` output is self-contained. Multiple
+//! series are overlaid with distinct glyphs.
+
+use crate::metrics::series::TimeSeries;
+
+/// Glyphs assigned to overlaid series, in order.
+const GLYPHS: &[char] = &['*', 'o', '+', 'x', '#', '@'];
+
+/// Render one or more time series as an ASCII chart.
+///
+/// `width`/`height` are the plot area in characters; axes and legend are
+/// added around it. Y range is `[0, ymax]` (utilization fractions plot with
+/// `ymax = 1`); X spans the union of the series' time ranges.
+pub fn render(series: &[&TimeSeries], width: usize, height: usize, ymax: f64) -> String {
+    assert!(width >= 10 && height >= 4);
+    let t1 = series.iter().map(|s| s.last_time()).fold(1e-9, f64::max);
+    let mut grid = vec![vec![' '; width]; height];
+
+    for (si, s) in series.iter().enumerate() {
+        let glyph = GLYPHS[si % GLYPHS.len()];
+        for col in 0..width {
+            let t = t1 * col as f64 / (width - 1) as f64;
+            let v = s.value_at(t).clamp(0.0, ymax);
+            let row_f = (1.0 - v / ymax) * (height - 1) as f64;
+            let row = row_f.round().clamp(0.0, (height - 1) as f64) as usize;
+            // don't overwrite an earlier series' glyph at the same cell
+            if grid[row][col] == ' ' {
+                grid[row][col] = glyph;
+            }
+        }
+    }
+
+    let mut out = String::new();
+    for (ri, row) in grid.iter().enumerate() {
+        let yval = ymax * (1.0 - ri as f64 / (height - 1) as f64);
+        out.push_str(&format!("{yval:6.2} |"));
+        out.extend(row.iter());
+        out.push('\n');
+    }
+    out.push_str(&format!("{:6} +{}\n", "", "-".repeat(width)));
+    out.push_str(&format!("{:6}  0{:>w$.0}\n", "", t1, w = width - 1));
+    for (si, s) in series.iter().enumerate() {
+        out.push_str(&format!(
+            "        {} {}\n",
+            GLYPHS[si % GLYPHS.len()],
+            s.name
+        ));
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn renders_overlaid_series() {
+        let mut a = TimeSeries::new("drf cpu");
+        let mut b = TimeSeries::new("psdsf cpu");
+        for t in 0..20 {
+            a.push(t as f64, 0.5 + 0.4 * ((t as f64) / 20.0));
+            b.push(t as f64, 0.9);
+        }
+        let text = render(&[&a, &b], 40, 10, 1.0);
+        assert!(text.contains('*'));
+        assert!(text.contains('o'));
+        assert!(text.contains("drf cpu"));
+        assert!(text.contains("psdsf cpu"));
+        // has axis line
+        assert!(text.contains("+----"));
+    }
+
+    #[test]
+    fn clamps_out_of_range() {
+        let mut s = TimeSeries::new("x");
+        s.push(0.0, 5.0); // above ymax
+        s.push(10.0, -1.0); // below zero
+        let text = render(&[&s], 20, 5, 1.0);
+        assert!(!text.is_empty());
+    }
+
+    #[test]
+    #[should_panic]
+    fn too_small_panics() {
+        let s = TimeSeries::new("x");
+        render(&[&s], 2, 2, 1.0);
+    }
+}

@@ -1,0 +1,142 @@
+//! Time series: the (time, value) traces Figures 3–9 are drawn from.
+
+use crate::metrics::stats::Summary;
+
+/// An append-only (time, value) trace, e.g. "allocated CPU %" over the run.
+#[derive(Debug, Clone, Default)]
+pub struct TimeSeries {
+    pub name: String,
+    times: Vec<f64>,
+    values: Vec<f64>,
+}
+
+impl TimeSeries {
+    pub fn new(name: impl Into<String>) -> Self {
+        TimeSeries { name: name.into(), times: Vec::new(), values: Vec::new() }
+    }
+
+    /// Append a sample; time must be non-decreasing.
+    pub fn push(&mut self, t: f64, v: f64) {
+        debug_assert!(self.times.last().map_or(true, |last| t >= *last));
+        self.times.push(t);
+        self.values.push(v);
+    }
+
+    pub fn len(&self) -> usize {
+        self.times.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.times.is_empty()
+    }
+
+    pub fn times(&self) -> &[f64] {
+        &self.times
+    }
+
+    pub fn values(&self) -> &[f64] {
+        &self.values
+    }
+
+    pub fn last_time(&self) -> f64 {
+        *self.times.last().unwrap_or(&0.0)
+    }
+
+    /// Step-function value at time `t` (last sample at or before `t`).
+    pub fn value_at(&self, t: f64) -> f64 {
+        match self.times.partition_point(|x| *x <= t) {
+            0 => 0.0,
+            k => self.values[k - 1],
+        }
+    }
+
+    /// Resample onto a uniform grid of `n` points over `[t0, t1]` — the
+    /// figure benches align traces from different schedulers this way.
+    pub fn resample(&self, t0: f64, t1: f64, n: usize) -> Vec<(f64, f64)> {
+        assert!(n >= 2 && t1 > t0);
+        (0..n)
+            .map(|k| {
+                let t = t0 + (t1 - t0) * k as f64 / (n - 1) as f64;
+                (t, self.value_at(t))
+            })
+            .collect()
+    }
+
+    /// Time-weighted mean over the step function (what "average utilization
+    /// over the run" means for an event-driven trace).
+    pub fn time_weighted_mean(&self) -> f64 {
+        if self.times.len() < 2 {
+            return self.values.first().copied().unwrap_or(0.0);
+        }
+        let mut acc = 0.0;
+        let mut dur = 0.0;
+        for w in 0..self.times.len() - 1 {
+            let dt = self.times[w + 1] - self.times[w];
+            acc += self.values[w] * dt;
+            dur += dt;
+        }
+        if dur > 0.0 {
+            acc / dur
+        } else {
+            self.values[0]
+        }
+    }
+
+    /// Plain (unweighted) summary of the sampled values — the paper's
+    /// "variance of utilized resources" comparisons (§3.5.3).
+    pub fn summary(&self) -> Summary {
+        Summary::of(&self.values)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn series() -> TimeSeries {
+        let mut s = TimeSeries::new("util");
+        s.push(0.0, 0.0);
+        s.push(10.0, 0.5);
+        s.push(20.0, 1.0);
+        s.push(30.0, 0.25);
+        s
+    }
+
+    #[test]
+    fn step_lookup() {
+        let s = series();
+        assert_eq!(s.value_at(-1.0), 0.0);
+        assert_eq!(s.value_at(0.0), 0.0);
+        assert_eq!(s.value_at(9.9), 0.0);
+        assert_eq!(s.value_at(10.0), 0.5);
+        assert_eq!(s.value_at(25.0), 1.0);
+        assert_eq!(s.value_at(99.0), 0.25);
+    }
+
+    #[test]
+    fn resample_grid() {
+        let s = series();
+        let g = s.resample(0.0, 30.0, 4);
+        assert_eq!(g.len(), 4);
+        assert_eq!(g[0], (0.0, 0.0));
+        assert_eq!(g[1], (10.0, 0.5));
+        assert_eq!(g[3], (30.0, 0.25));
+    }
+
+    #[test]
+    fn time_weighted_mean_steps() {
+        let s = series();
+        // 10s at 0.0, 10s at 0.5, 10s at 1.0 -> 0.5
+        assert!((s.time_weighted_mean() - 0.5).abs() < 1e-12);
+    }
+
+    #[test]
+    fn empty_and_single() {
+        let e = TimeSeries::new("e");
+        assert_eq!(e.time_weighted_mean(), 0.0);
+        let mut one = TimeSeries::new("o");
+        one.push(5.0, 2.0);
+        assert_eq!(one.time_weighted_mean(), 2.0);
+        assert_eq!(one.value_at(4.0), 0.0);
+    }
+}

@@ -1,0 +1,339 @@
+//! Multi-resource vectors: capacities `c_{i,r}`, per-task demands `d_{n,r}`,
+//! allocations, residuals — the arithmetic every scheduler in the paper is
+//! defined over.
+//!
+//! A [`ResVec`] is a fixed-width (R_MAX) array plus the number of *real*
+//! resource kinds; padding lanes are always zero. f64 is used on the rust
+//! side (exact for the paper's small integers and halves); the runtime
+//! narrows to f32 at the HLO boundary.
+
+use crate::{R_MAX};
+use std::fmt;
+use std::ops::{Add, AddAssign, Index, Sub, SubAssign};
+
+/// Resource-kind metadata for pretty printing: the paper's experiments use
+/// `(cpus, mem)`; the numerical study uses anonymous `(r1, r2)`.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct ResourceKinds {
+    names: Vec<String>,
+}
+
+impl ResourceKinds {
+    pub fn new<S: Into<String>>(names: Vec<S>) -> Self {
+        let names: Vec<String> = names.into_iter().map(Into::into).collect();
+        assert!(!names.is_empty() && names.len() <= R_MAX);
+        ResourceKinds { names }
+    }
+
+    /// `(cpus, mem[GB])` — the online experiments' resource kinds.
+    pub fn cpu_mem() -> Self {
+        ResourceKinds::new(vec!["cpus", "mem"])
+    }
+
+    pub fn len(&self) -> usize {
+        self.names.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.names.is_empty()
+    }
+
+    pub fn name(&self, r: usize) -> &str {
+        &self.names[r]
+    }
+}
+
+/// A point in resource space (demand, capacity, usage or residual).
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct ResVec {
+    vals: [f64; R_MAX],
+    len: usize,
+}
+
+impl ResVec {
+    /// Build from a slice of per-resource quantities.
+    pub fn new(vals: &[f64]) -> Self {
+        assert!(!vals.is_empty() && vals.len() <= R_MAX, "1..={R_MAX} resources");
+        let mut v = [0.0; R_MAX];
+        v[..vals.len()].copy_from_slice(vals);
+        ResVec { vals: v, len: vals.len() }
+    }
+
+    /// The zero vector with `len` real resource lanes.
+    pub fn zero(len: usize) -> Self {
+        assert!(len >= 1 && len <= R_MAX);
+        ResVec { vals: [0.0; R_MAX], len }
+    }
+
+    /// Convenience for the online experiments' `(cpus, mem)` pairs.
+    pub fn cpu_mem(cpus: f64, mem: f64) -> Self {
+        ResVec::new(&[cpus, mem])
+    }
+
+    /// Number of real resource kinds.
+    pub fn len(&self) -> usize {
+        self.len
+    }
+
+    pub fn is_empty(&self) -> bool {
+        false
+    }
+
+    /// Raw lane access including padding (always 0 beyond `len`).
+    pub fn get(&self, r: usize) -> f64 {
+        self.vals[r]
+    }
+
+    /// Real lanes as a slice.
+    pub fn as_slice(&self) -> &[f64] {
+        &self.vals[..self.len]
+    }
+
+    /// `true` iff every real lane of `self` fits within `other` (with a tiny
+    /// epsilon absorbing float round-off from repeated add/sub).
+    pub fn fits_within(&self, other: &ResVec) -> bool {
+        debug_assert_eq!(self.len, other.len);
+        self.as_slice()
+            .iter()
+            .zip(other.as_slice())
+            .all(|(d, c)| *d <= c + 1e-9)
+    }
+
+    /// `true` iff any real lane is (numerically) exhausted relative to the
+    /// per-lane scale `scale` — used by the "at least one resource exhausted"
+    /// invariant checks.
+    pub fn any_lane_zero(&self, scale: &ResVec) -> bool {
+        self.as_slice()
+            .iter()
+            .zip(scale.as_slice())
+            .any(|(v, s)| *v <= 1e-9 * s.max(1.0))
+    }
+
+    /// `true` iff every real lane is >= 0 (within epsilon).
+    pub fn non_negative(&self) -> bool {
+        self.as_slice().iter().all(|v| *v >= -1e-9)
+    }
+
+    /// `true` iff every real lane is exactly 0 (within epsilon).
+    pub fn is_zero(&self) -> bool {
+        self.as_slice().iter().all(|v| v.abs() <= 1e-9)
+    }
+
+    /// `true` iff any real lane is > 0.
+    pub fn any_positive(&self) -> bool {
+        self.as_slice().iter().any(|v| *v > 1e-9)
+    }
+
+    /// Lane-wise scale.
+    pub fn scaled(&self, k: f64) -> ResVec {
+        let mut out = *self;
+        for v in &mut out.vals[..out.len] {
+            *v *= k;
+        }
+        out
+    }
+
+    /// Lane-wise max(0, self - other) — "how much of the demand is missing".
+    pub fn saturating_sub(&self, other: &ResVec) -> ResVec {
+        debug_assert_eq!(self.len, other.len);
+        let mut out = *self;
+        for (v, o) in out.vals[..out.len].iter_mut().zip(other.as_slice()) {
+            *v = (*v - o).max(0.0);
+        }
+        out
+    }
+
+    /// `max_r self_r / other_r` over lanes where `self_r > 0`; `None` if some
+    /// such lane has `other_r <= 0` (impossible placement) or no lane has
+    /// positive demand. This is the dominant demand/supply ratio at the heart
+    /// of PS-DSF, rPS-DSF and best-fit.
+    pub fn dominant_ratio_over(&self, other: &ResVec) -> Option<f64> {
+        debug_assert_eq!(self.len, other.len);
+        let mut best: Option<f64> = None;
+        for (d, c) in self.as_slice().iter().zip(other.as_slice()) {
+            if *d > 0.0 {
+                if *c <= 0.0 {
+                    return None;
+                }
+                let ratio = d / c;
+                best = Some(best.map_or(ratio, |b: f64| b.max(ratio)));
+            }
+        }
+        best
+    }
+
+    /// How many whole tasks of demand `self` fit in `other`
+    /// (`min_r floor(other_r / self_r)`); `None` if no positive demand lane.
+    pub fn whole_tasks_within(&self, other: &ResVec) -> Option<u64> {
+        debug_assert_eq!(self.len, other.len);
+        let mut best: Option<u64> = None;
+        for (d, c) in self.as_slice().iter().zip(other.as_slice()) {
+            if *d > 0.0 {
+                let k = ((c + 1e-9) / d).floor().max(0.0) as u64;
+                best = Some(best.map_or(k, |b| b.min(k)));
+            }
+        }
+        best
+    }
+
+    /// L1 distance over real lanes (the best-fit ablation metric).
+    pub fn l1_distance(&self, other: &ResVec) -> f64 {
+        self.as_slice()
+            .iter()
+            .zip(other.as_slice())
+            .map(|(a, b)| (a - b).abs())
+            .sum()
+    }
+
+    /// L2 distance over real lanes (another best-fit ablation metric).
+    pub fn l2_distance(&self, other: &ResVec) -> f64 {
+        self.as_slice()
+            .iter()
+            .zip(other.as_slice())
+            .map(|(a, b)| (a - b) * (a - b))
+            .sum::<f64>()
+            .sqrt()
+    }
+}
+
+impl Add for ResVec {
+    type Output = ResVec;
+    fn add(self, rhs: ResVec) -> ResVec {
+        debug_assert_eq!(self.len, rhs.len);
+        let mut out = self;
+        for (v, o) in out.vals[..out.len].iter_mut().zip(rhs.as_slice()) {
+            *v += o;
+        }
+        out
+    }
+}
+
+impl AddAssign for ResVec {
+    fn add_assign(&mut self, rhs: ResVec) {
+        *self = *self + rhs;
+    }
+}
+
+impl Sub for ResVec {
+    type Output = ResVec;
+    fn sub(self, rhs: ResVec) -> ResVec {
+        debug_assert_eq!(self.len, rhs.len);
+        let mut out = self;
+        for (v, o) in out.vals[..out.len].iter_mut().zip(rhs.as_slice()) {
+            *v -= o;
+        }
+        out
+    }
+}
+
+impl SubAssign for ResVec {
+    fn sub_assign(&mut self, rhs: ResVec) {
+        *self = *self - rhs;
+    }
+}
+
+impl Index<usize> for ResVec {
+    type Output = f64;
+    fn index(&self, r: usize) -> &f64 {
+        &self.vals[r]
+    }
+}
+
+impl fmt::Display for ResVec {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        write!(f, "(")?;
+        for (i, v) in self.as_slice().iter().enumerate() {
+            if i > 0 {
+                write!(f, ", ")?;
+            }
+            write!(f, "{v:.3}")?;
+        }
+        write!(f, ")")
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn arithmetic_roundtrip() {
+        let a = ResVec::new(&[5.0, 1.0]);
+        let b = ResVec::new(&[1.0, 5.0]);
+        let s = a + b;
+        assert_eq!(s.as_slice(), &[6.0, 6.0]);
+        assert_eq!((s - b).as_slice(), a.as_slice());
+    }
+
+    #[test]
+    fn fits_within_boundary() {
+        let cap = ResVec::new(&[4.0, 14.0]);
+        assert!(ResVec::new(&[4.0, 14.0]).fits_within(&cap));
+        assert!(ResVec::new(&[2.0, 2.0]).fits_within(&cap));
+        assert!(!ResVec::new(&[4.5, 2.0]).fits_within(&cap));
+        assert!(!ResVec::new(&[2.0, 14.5]).fits_within(&cap));
+    }
+
+    #[test]
+    fn dominant_ratio_paper_values() {
+        // PS-DSF example: d1=(5,1) vs c1=(100,30): max(5/100, 1/30) = 0.05
+        let d1 = ResVec::new(&[5.0, 1.0]);
+        let c1 = ResVec::new(&[100.0, 30.0]);
+        assert!((d1.dominant_ratio_over(&c1).unwrap() - 0.05).abs() < 1e-12);
+        // d1 vs c2=(30,100): max(5/30, 1/100) = 1/6
+        let c2 = ResVec::new(&[30.0, 100.0]);
+        assert!((d1.dominant_ratio_over(&c2).unwrap() - 5.0 / 30.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn dominant_ratio_impossible_and_empty() {
+        let d = ResVec::new(&[1.0, 1.0]);
+        let c = ResVec::new(&[0.0, 10.0]);
+        assert!(d.dominant_ratio_over(&c).is_none());
+        let zero = ResVec::zero(2);
+        assert!(zero.dominant_ratio_over(&c).is_none());
+    }
+
+    #[test]
+    fn whole_tasks_paper_values() {
+        // N*_1 on the illustrative cluster: 20 on server1 + 6 on server2 = 26
+        let d1 = ResVec::new(&[5.0, 1.0]);
+        assert_eq!(d1.whole_tasks_within(&ResVec::new(&[100.0, 30.0])), Some(20));
+        assert_eq!(d1.whole_tasks_within(&ResVec::new(&[30.0, 100.0])), Some(6));
+    }
+
+    #[test]
+    fn whole_tasks_zero_demand() {
+        let z = ResVec::zero(2);
+        assert_eq!(z.whole_tasks_within(&ResVec::new(&[1.0, 1.0])), None);
+    }
+
+    #[test]
+    fn saturating_sub_clamps() {
+        let a = ResVec::new(&[1.0, 5.0]);
+        let b = ResVec::new(&[2.0, 2.0]);
+        assert_eq!(a.saturating_sub(&b).as_slice(), &[0.0, 3.0]);
+    }
+
+    #[test]
+    fn any_lane_zero_detects_exhaustion() {
+        let cap = ResVec::new(&[100.0, 30.0]);
+        let residual = ResVec::new(&[62.5, 0.0]);
+        assert!(residual.any_lane_zero(&cap));
+        assert!(!ResVec::new(&[62.5, 1.0]).any_lane_zero(&cap));
+    }
+
+    #[test]
+    fn distances() {
+        let a = ResVec::new(&[3.0, 4.0]);
+        let b = ResVec::zero(2);
+        assert!((a.l1_distance(&b) - 7.0).abs() < 1e-12);
+        assert!((a.l2_distance(&b) - 5.0).abs() < 1e-12);
+    }
+
+    #[test]
+    #[should_panic]
+    fn too_many_resources_panics() {
+        ResVec::new(&[1.0; R_MAX + 1]);
+    }
+}

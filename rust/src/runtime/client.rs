@@ -1,0 +1,154 @@
+//! PJRT client wrapper: manifest validation + compiled-executable cache.
+
+use crate::error::{Error, Result};
+use crate::metrics::json::Json;
+use crate::{M_MAX, N_MAX, PI_SAMPLES, R_MAX, WC_TOKENS, WC_VOCAB};
+use std::collections::HashMap;
+use std::path::{Path, PathBuf};
+
+/// A PJRT CPU client with one compiled executable per artifact, compiled
+/// lazily on first use and cached for the life of the runtime (one compiled
+/// executable per model variant — the request path never recompiles).
+pub struct ArtifactRuntime {
+    client: xla::PjRtClient,
+    dir: PathBuf,
+    cache: HashMap<String, xla::PjRtLoadedExecutable>,
+    /// Executions per artifact (perf accounting).
+    pub exec_counts: HashMap<String, u64>,
+}
+
+impl ArtifactRuntime {
+    /// Open the artifact directory, validate `manifest.json` against the
+    /// crate's compiled-in padded dimensions, and start a PJRT CPU client.
+    pub fn open(dir: impl AsRef<Path>) -> Result<Self> {
+        let dir = dir.as_ref().to_path_buf();
+        let manifest_path = dir.join("manifest.json");
+        let text = std::fs::read_to_string(&manifest_path).map_err(|e| {
+            Error::Artifact(format!(
+                "cannot read {} (run `make artifacts`): {e}",
+                manifest_path.display()
+            ))
+        })?;
+        let manifest = Json::parse(&text)?;
+        check_dims(&manifest)?;
+        let client = xla::PjRtClient::cpu()?;
+        Ok(ArtifactRuntime { client, dir, cache: HashMap::new(), exec_counts: HashMap::new() })
+    }
+
+    /// Open using [`super::find_artifact_dir`].
+    pub fn open_default() -> Result<Self> {
+        let dir = super::find_artifact_dir().ok_or_else(|| {
+            Error::Artifact("no artifacts/manifest.json found — run `make artifacts`".into())
+        })?;
+        Self::open(dir)
+    }
+
+    /// PJRT platform name ("cpu").
+    pub fn platform(&self) -> String {
+        self.client.platform_name()
+    }
+
+    /// Compile (or fetch the cached) executable for `name`.
+    pub fn executable(&mut self, name: &str) -> Result<&xla::PjRtLoadedExecutable> {
+        if !self.cache.contains_key(name) {
+            let path = self.dir.join(format!("{name}.hlo.txt"));
+            let proto = xla::HloModuleProto::from_text_file(path.to_str().ok_or_else(|| {
+                Error::Artifact(format!("non-utf8 path {}", path.display()))
+            })?)?;
+            let comp = xla::XlaComputation::from_proto(&proto);
+            let exe = self.client.compile(&comp)?;
+            self.cache.insert(name.to_string(), exe);
+        }
+        Ok(&self.cache[name])
+    }
+
+    /// Execute artifact `name` on `inputs`; returns the decomposed output
+    /// tuple (aot.py lowers everything with `return_tuple=True`).
+    pub fn execute(&mut self, name: &str, inputs: &[xla::Literal]) -> Result<Vec<xla::Literal>> {
+        self.executable(name)?; // ensure cached (borrow dance)
+        *self.exec_counts.entry(name.to_string()).or_insert(0) += 1;
+        let exe = &self.cache[name];
+        let result = exe.execute::<xla::Literal>(inputs)?;
+        let out = result[0][0].to_literal_sync()?;
+        Ok(out.to_tuple()?)
+    }
+
+    /// Number of compiled executables currently cached.
+    pub fn cached(&self) -> usize {
+        self.cache.len()
+    }
+}
+
+fn get_dim(manifest: &Json, key: &str) -> Result<usize> {
+    manifest
+        .get("dims")
+        .and_then(|d| d.get(key))
+        .and_then(Json::as_f64)
+        .map(|v| v as usize)
+        .ok_or_else(|| Error::Artifact(format!("manifest missing dims.{key}")))
+}
+
+fn check_dims(manifest: &Json) -> Result<()> {
+    let checks = [
+        ("N_MAX", N_MAX),
+        ("M_MAX", M_MAX),
+        ("R_MAX", R_MAX),
+        ("PI_SAMPLES", PI_SAMPLES),
+        ("WC_TOKENS", WC_TOKENS),
+        ("WC_VOCAB", WC_VOCAB),
+    ];
+    for (key, expected) in checks {
+        let got = get_dim(manifest, key)?;
+        if got != expected {
+            return Err(Error::ManifestMismatch(format!(
+                "{key}: artifacts built with {got}, crate compiled with {expected} — \
+                 re-run `make artifacts` or rebuild"
+            )));
+        }
+    }
+    Ok(())
+}
+
+/// Pack a padded f64 matrix into an f32 literal of the given dims.
+pub fn literal_f32(data: &[f64], dims: &[i64]) -> Result<xla::Literal> {
+    let f32s: Vec<f32> = data.iter().map(|v| *v as f32).collect();
+    let lit = xla::Literal::vec1(&f32s);
+    if dims.len() == 1 {
+        Ok(lit)
+    } else {
+        Ok(lit.reshape(dims)?)
+    }
+}
+
+/// Pack an i32 vector literal.
+pub fn literal_i32(data: &[i32]) -> xla::Literal {
+    xla::Literal::vec1(data)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    // NOTE: tests that actually execute artifacts live in
+    // rust/tests/runtime_parity.rs (they need `make artifacts` to have run);
+    // here we only test the pure helpers.
+
+    #[test]
+    fn literal_f32_roundtrip() {
+        let lit = literal_f32(&[1.0, 2.0, 3.0, 4.0], &[2, 2]).unwrap();
+        assert_eq!(lit.to_vec::<f32>().unwrap(), vec![1.0, 2.0, 3.0, 4.0]);
+        assert_eq!(lit.element_count(), 4);
+    }
+
+    #[test]
+    fn manifest_dim_check() {
+        let good = Json::parse(&format!(
+            r#"{{"dims": {{"N_MAX": {N_MAX}, "M_MAX": {M_MAX}, "R_MAX": {R_MAX},
+                 "PI_SAMPLES": {PI_SAMPLES}, "WC_TOKENS": {WC_TOKENS}, "WC_VOCAB": {WC_VOCAB}}}}}"#
+        ))
+        .unwrap();
+        assert!(check_dims(&good).is_ok());
+        let bad = Json::parse(r#"{"dims": {"N_MAX": 99}}"#).unwrap();
+        assert!(check_dims(&bad).is_err());
+    }
+}

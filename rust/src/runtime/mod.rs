@@ -1,0 +1,47 @@
+//! PJRT runtime: loads the AOT-compiled HLO artifacts (`make artifacts`)
+//! and executes them from the rust hot path — Python is never involved at
+//! run time.
+//!
+//! * [`client::ArtifactRuntime`] — PJRT CPU client + compiled-executable
+//!   cache + the manifest check that keeps the rust constants and the
+//!   python kernels' padded dimensions in lock-step.
+//! * [`scorer::HloScorer`] — [`crate::scheduler::Scorer`] backed by the
+//!   fused Pallas scoring kernel (`artifacts/scores.hlo.txt`).
+//! * [`workload::WorkloadRuntime`] — executes the Spark task bodies
+//!   (`pi_mc`, `wordcount`) for the e2e example.
+//!
+//! Interchange is HLO *text*: jax ≥ 0.5 serializes HloModuleProto with
+//! 64-bit instruction ids that xla_extension 0.5.1 rejects; the text parser
+//! reassigns ids (see /opt/xla-example/README.md).
+
+pub mod client;
+pub mod scorer;
+pub mod workload;
+
+pub use client::ArtifactRuntime;
+pub use scorer::HloScorer;
+pub use workload::WorkloadRuntime;
+
+/// Default artifact directory, relative to the repo root.
+pub const DEFAULT_ARTIFACT_DIR: &str = "artifacts";
+
+/// Locate the artifact directory: `$MESOS_FAIR_ARTIFACTS`, else `artifacts/`
+/// relative to the working directory, else relative to the crate root
+/// (useful under `cargo test`).
+pub fn find_artifact_dir() -> Option<std::path::PathBuf> {
+    if let Ok(dir) = std::env::var("MESOS_FAIR_ARTIFACTS") {
+        let p = std::path::PathBuf::from(dir);
+        if p.join("manifest.json").exists() {
+            return Some(p);
+        }
+    }
+    let cwd = std::path::PathBuf::from(DEFAULT_ARTIFACT_DIR);
+    if cwd.join("manifest.json").exists() {
+        return Some(cwd);
+    }
+    let root = std::path::PathBuf::from(env!("CARGO_MANIFEST_DIR")).join(DEFAULT_ARTIFACT_DIR);
+    if root.join("manifest.json").exists() {
+        return Some(root);
+    }
+    None
+}

@@ -1,0 +1,102 @@
+//! HLO-backed scorer: the fused Pallas scoring kernel through PJRT.
+//!
+//! Implements the same [`Scorer`] trait as the native rust scorer so the
+//! allocator can be switched with `--scorer hlo`; parity between the two
+//! backends (up to f32 rounding) is asserted in
+//! `rust/tests/runtime_parity.rs` and benchmarked in
+//! `rust/benches/scorer.rs`.
+
+use crate::error::Result;
+use crate::runtime::client::{literal_f32, ArtifactRuntime};
+use crate::scheduler::{ScoreInputs, ScoreSet, Scorer};
+use crate::{M_MAX, N_MAX, R_MAX};
+
+/// Scorer backend executing `artifacts/scores.hlo.txt`.
+pub struct HloScorer {
+    rt: ArtifactRuntime,
+}
+
+impl HloScorer {
+    pub fn new(rt: ArtifactRuntime) -> Self {
+        HloScorer { rt }
+    }
+
+    /// Open the default artifact dir and build a scorer.
+    pub fn open_default() -> Result<Self> {
+        Ok(HloScorer { rt: ArtifactRuntime::open_default()? })
+    }
+
+    /// Executions so far (perf accounting).
+    pub fn executions(&self) -> u64 {
+        self.rt.exec_counts.get("scores").copied().unwrap_or(0)
+    }
+
+    /// Borrow the underlying runtime (e.g. to share with a workload runner).
+    pub fn runtime_mut(&mut self) -> &mut ArtifactRuntime {
+        &mut self.rt
+    }
+
+    fn pack(inputs: &ScoreInputs) -> Result<Vec<xla::Literal>> {
+        let mut c = Vec::with_capacity(M_MAX * R_MAX);
+        for row in &inputs.c {
+            c.extend_from_slice(row);
+        }
+        let mut x = Vec::with_capacity(N_MAX * M_MAX);
+        for row in &inputs.x {
+            x.extend_from_slice(row);
+        }
+        let mut d = Vec::with_capacity(N_MAX * R_MAX);
+        for row in &inputs.d {
+            d.extend_from_slice(row);
+        }
+        let mut rolemat = Vec::with_capacity(N_MAX * N_MAX);
+        for row in &inputs.rolemat {
+            rolemat.extend_from_slice(row);
+        }
+        Ok(vec![
+            literal_f32(&c, &[M_MAX as i64, R_MAX as i64])?,
+            literal_f32(&x, &[N_MAX as i64, M_MAX as i64])?,
+            literal_f32(&d, &[N_MAX as i64, R_MAX as i64])?,
+            literal_f32(&inputs.phi, &[N_MAX as i64])?,
+            literal_f32(&rolemat, &[N_MAX as i64, N_MAX as i64])?,
+            literal_f32(&inputs.fmask, &[N_MAX as i64])?,
+            literal_f32(&inputs.smask, &[M_MAX as i64])?,
+            literal_f32(&inputs.rmask, &[R_MAX as i64])?,
+        ])
+    }
+
+    fn unpack(outs: Vec<xla::Literal>) -> Result<ScoreSet> {
+        debug_assert_eq!(outs.len(), 6);
+        let drf: Vec<f32> = outs[0].to_vec()?;
+        let tsf: Vec<f32> = outs[1].to_vec()?;
+        let ps: Vec<f32> = outs[2].to_vec()?;
+        let rps: Vec<f32> = outs[3].to_vec()?;
+        let fit: Vec<f32> = outs[4].to_vec()?;
+        let feas: Vec<f32> = outs[5].to_vec()?;
+        let mut set = ScoreSet::empty();
+        for n in 0..N_MAX {
+            set.drf[n] = drf[n] as f64;
+            set.tsf[n] = tsf[n] as f64;
+            for i in 0..M_MAX {
+                let k = n * M_MAX + i;
+                set.psdsf[n][i] = ps[k] as f64;
+                set.rpsdsf[n][i] = rps[k] as f64;
+                set.fit[n][i] = fit[k] as f64;
+                set.feas[n][i] = feas[k] > 0.5;
+            }
+        }
+        Ok(set)
+    }
+}
+
+impl Scorer for HloScorer {
+    fn name(&self) -> &'static str {
+        "hlo"
+    }
+
+    fn score(&mut self, inputs: &ScoreInputs) -> Result<ScoreSet> {
+        let lits = Self::pack(inputs)?;
+        let outs = self.rt.execute("scores", &lits)?;
+        Self::unpack(outs)
+    }
+}

@@ -1,0 +1,126 @@
+//! Real Spark task bodies through PJRT: Monte-Carlo π rounds and wordcount
+//! histogram rounds — the compute the e2e example attaches to the online
+//! simulation ([`crate::sim::online::TaskCompute`]).
+
+use crate::error::Result;
+use crate::metrics::stats::Welford;
+use crate::rng::Rng;
+use crate::runtime::client::{literal_i32, ArtifactRuntime};
+use crate::sim::online::TaskCompute;
+use crate::spark::workload::WorkloadKind;
+use crate::{PI_SAMPLES, WC_TOKENS, WC_VOCAB};
+
+/// Executes pi_mc / wordcount artifacts and aggregates their results the
+/// way the Spark drivers would (hit-count reduce for π; histogram merge for
+/// wordcount).
+pub struct WorkloadRuntime {
+    rt: ArtifactRuntime,
+    /// Σ hits over all π tasks.
+    pub pi_hits: u64,
+    /// Number of π task rounds run.
+    pub pi_rounds: u64,
+    /// Merged word histogram.
+    pub histogram: Vec<u64>,
+    /// Tokens processed.
+    pub tokens: u64,
+    /// Per-task execution latency (seconds) accumulator.
+    pub latency: Welford,
+    corpus_rng: Rng,
+}
+
+impl WorkloadRuntime {
+    pub fn new(rt: ArtifactRuntime) -> Self {
+        WorkloadRuntime {
+            rt,
+            pi_hits: 0,
+            pi_rounds: 0,
+            histogram: vec![0; WC_VOCAB],
+            tokens: 0,
+            latency: Welford::new(),
+            corpus_rng: Rng::new(0xC0FFEE77),
+        }
+    }
+
+    pub fn open_default() -> Result<Self> {
+        Ok(Self::new(ArtifactRuntime::open_default()?))
+    }
+
+    /// Run one π task: `PI_SAMPLES` Monte-Carlo points on the accelerator.
+    pub fn run_pi(&mut self, seed: i32) -> Result<u32> {
+        let outs = self.rt.execute("pi_mc", &[literal_i32(&[seed])])?;
+        let hits: Vec<i32> = outs[0].to_vec()?;
+        let h = hits[0] as u32;
+        self.pi_hits += h as u64;
+        self.pi_rounds += 1;
+        Ok(h)
+    }
+
+    /// Current π estimate from all rounds so far.
+    pub fn pi_estimate(&self) -> f64 {
+        if self.pi_rounds == 0 {
+            return 0.0;
+        }
+        4.0 * self.pi_hits as f64 / (self.pi_rounds as f64 * PI_SAMPLES as f64)
+    }
+
+    /// Run one wordcount task over a synthetic Zipf-ish corpus chunk: the
+    /// "tokenizer" hashes words into `WC_VOCAB` buckets, matching the
+    /// kernel's contract.
+    pub fn run_wordcount(&mut self, seed: u64) -> Result<()> {
+        let mut rng = self.corpus_rng.split(seed);
+        let tokens: Vec<i32> = (0..WC_TOKENS)
+            .map(|_| {
+                // Zipf-like skew: low ids much more frequent (like stopwords)
+                let u = rng.f64().max(1e-9);
+                let z = (u.powf(-0.9) - 1.0) as i64;
+                (z.min(WC_VOCAB as i64 - 1)).max(0) as i32
+            })
+            .collect();
+        let outs = self.rt.execute("wordcount", &[literal_i32(&tokens)])?;
+        let hist: Vec<f32> = outs[0].to_vec()?;
+        for (b, h) in self.histogram.iter_mut().zip(hist.iter()) {
+            *b += *h as u64;
+        }
+        self.tokens += WC_TOKENS as u64;
+        Ok(())
+    }
+
+    /// The `k` most frequent token buckets (the wordcount "output").
+    pub fn top_buckets(&self, k: usize) -> Vec<(usize, u64)> {
+        let mut idx: Vec<usize> = (0..self.histogram.len()).collect();
+        idx.sort_by_key(|i| std::cmp::Reverse(self.histogram[*i]));
+        idx.into_iter().take(k).map(|i| (i, self.histogram[i])).collect()
+    }
+
+    /// Sanity: the histogram total must equal the tokens processed (the
+    /// tokenizer maps every token in range).
+    pub fn histogram_consistent(&self) -> bool {
+        self.histogram.iter().sum::<u64>() == self.tokens
+    }
+}
+
+impl TaskCompute for WorkloadRuntime {
+    fn run_task(&mut self, kind: WorkloadKind, seed: u64) -> Result<()> {
+        let t0 = std::time::Instant::now();
+        match kind {
+            WorkloadKind::Pi => {
+                self.run_pi((seed & 0x7FFF_FFFF) as i32)?;
+            }
+            WorkloadKind::WordCount => {
+                self.run_wordcount(seed)?;
+            }
+        }
+        self.latency.push(t0.elapsed().as_secs_f64());
+        Ok(())
+    }
+}
+
+impl std::fmt::Debug for WorkloadRuntime {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        f.debug_struct("WorkloadRuntime")
+            .field("pi_rounds", &self.pi_rounds)
+            .field("pi_estimate", &self.pi_estimate())
+            .field("tokens", &self.tokens)
+            .finish()
+    }
+}

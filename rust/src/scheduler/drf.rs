@@ -1,0 +1,142 @@
+//! Dominant Resource Fairness over heterogeneous servers (DRFH).
+//!
+//! Ghodsi et al. (NSDI'11) for the single-pool formulation; Wang, Liang & Li
+//! (TPDS'15, ref [11]) extend it to multiple heterogeneous servers by
+//! pooling capacities: the *global dominant share* of framework `n` is
+//!
+//! ```text
+//! s_n = max_r  x_n · d_{n,r} / (φ_n · C_r),      C_r = Σ_i c_{i,r}
+//! ```
+//!
+//! Progressive filling repeatedly grants one task to the framework with the
+//! minimum `s_n` that still fits somewhere. Under Mesos this is the default
+//! allocator criterion, with agents visited in randomized round-robin.
+
+use crate::is_big;
+use crate::scheduler::ScoreInputs;
+use crate::BIG;
+
+/// Global dominant share of framework `n` given padded inputs.
+///
+/// Returns [`BIG`] for padding slots, inactive frameworks and frameworks
+/// with no positive demand on any real resource (they can never run a task,
+/// so they must never win the argmin).
+pub fn dominant_share(si: &ScoreInputs, n: usize) -> f64 {
+    if si.fmask[n] < 0.5 {
+        return BIG;
+    }
+    // C_r over registered servers.
+    let mut ctot = [0.0f64; crate::R_MAX];
+    for i in 0..si.m {
+        if si.smask[i] > 0.5 {
+            for r in 0..si.r {
+                ctot[r] += si.c[i][r];
+            }
+        }
+    }
+    // role-aggregated x_n over registered servers.
+    let xn = crate::scheduler::role_total(si, n);
+    let mut share: Option<f64> = None;
+    for r in 0..si.r {
+        if si.rmask[r] > 0.5 && si.d[n][r] > 0.0 && ctot[r] > 0.0 {
+            let s = xn * si.d[n][r] / (si.phi[n] * ctot[r]);
+            share = Some(share.map_or(s, |b: f64| b.max(s)));
+        }
+    }
+    share.unwrap_or(BIG)
+}
+
+/// All global dominant shares.
+pub fn shares(si: &ScoreInputs) -> [f64; crate::N_MAX] {
+    let mut out = [BIG; crate::N_MAX];
+    for (n, o) in out.iter_mut().enumerate().take(si.n) {
+        *o = dominant_share(si, n);
+    }
+    out
+}
+
+/// `true` if the share is a real (non-sentinel) value.
+pub fn is_real_share(s: f64) -> bool {
+    !is_big(s)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::cluster::{AgentPool, ServerType};
+    use crate::resources::ResVec;
+    use crate::scheduler::{AllocState, FrameworkEntry};
+
+    fn state_with(x: &[(usize, usize, usize)]) -> AllocState {
+        let mut st = AllocState::new(AgentPool::new(&ServerType::illustrative()));
+        st.add_framework(FrameworkEntry {
+            name: "f1".into(),
+            demand: ResVec::new(&[5.0, 1.0]),
+            weight: 1.0,
+            active: true,
+        });
+        st.add_framework(FrameworkEntry {
+            name: "f2".into(),
+            demand: ResVec::new(&[1.0, 5.0]),
+            weight: 1.0,
+            active: true,
+        });
+        for &(n, i, k) in x {
+            for _ in 0..k {
+                st.place_task(n, i).unwrap();
+            }
+        }
+        st
+    }
+
+    #[test]
+    fn paper_shares() {
+        // x1 = 6 (4 on s1, 2 on s2), x2 = 6: both shares = 6*5/130
+        let st = state_with(&[(0, 0, 4), (0, 1, 2), (1, 1, 6)]);
+        let si = st.score_inputs();
+        let s = shares(&si);
+        assert!((s[0] - 30.0 / 130.0).abs() < 1e-12);
+        assert!((s[1] - 30.0 / 130.0).abs() < 1e-12);
+        assert!(crate::is_big(s[2]));
+    }
+
+    #[test]
+    fn zero_allocation_zero_share() {
+        let st = state_with(&[]);
+        let s = shares(&st.score_inputs());
+        assert_eq!(s[0], 0.0);
+        assert_eq!(s[1], 0.0);
+    }
+
+    #[test]
+    fn weight_divides_share() {
+        let mut st = state_with(&[(0, 0, 4)]);
+        st.framework_mut(0).weight = 2.0;
+        let s = shares(&st.score_inputs());
+        assert!((s[0] - 4.0 * 5.0 / (2.0 * 130.0)).abs() < 1e-12);
+    }
+
+    #[test]
+    fn unregistered_servers_excluded_from_ctot() {
+        let mut st = AllocState::new(AgentPool::new_staged(&ServerType::illustrative()));
+        st.add_framework(FrameworkEntry {
+            name: "f1".into(),
+            demand: ResVec::new(&[5.0, 1.0]),
+            weight: 1.0,
+            active: true,
+        });
+        st.pool.register_next(); // only server 1 (100, 30)
+        st.place_task(0, 0).unwrap();
+        let s = shares(&st.score_inputs());
+        // C = (100, 30): share = max(5/100, 1/30) = 1/20
+        assert!((s[0] - 0.05).abs() < 1e-12);
+    }
+
+    #[test]
+    fn inactive_framework_big() {
+        let mut st = state_with(&[(0, 0, 1)]);
+        st.deactivate(0);
+        let s = shares(&st.score_inputs());
+        assert!(crate::is_big(s[0]));
+    }
+}

@@ -1,0 +1,408 @@
+//! Fair allocation schedulers — the paper's subject matter.
+//!
+//! Everything is built over one state abstraction, [`AllocState`]: the agent
+//! pool plus per-framework demand vectors, weights and the allocation matrix
+//! `x[n][i]` (tasks of framework `n` on agent `i`). The static progressive
+//! filling study (Tables 1–4) and the online Mesos allocator both drive
+//! their decisions through the same [`Policy`] / [`Scorer`] pair, so the
+//! numerical study and the cluster experiments exercise identical scheduler
+//! code.
+//!
+//! * [`scorer::NativeScorer`] — pure-rust scoring (mirrors the L1 kernel).
+//! * `runtime::scorer::HloScorer` — the same math through the AOT-compiled
+//!   Pallas kernel via PJRT (parity-tested in `rust/tests/runtime_parity.rs`).
+//! * [`policy::Policy`] — argmin selection + tie-breaking + server-selection
+//!   mechanism (RRR / best-fit / joint).
+//! * [`progressive`] — the §2 progressive-filling engine.
+
+pub mod drf;
+pub mod policy;
+pub mod progressive;
+pub mod psdsf;
+pub mod registry;
+pub mod rpsdsf;
+pub mod scorer;
+pub mod server_select;
+pub mod tsf;
+
+pub use policy::{BestFitMetric, Policy, PolicyKind};
+pub use registry::{policy_by_name, POLICY_NAMES};
+pub use scorer::NativeScorer;
+
+use crate::cluster::{AgentId, AgentPool};
+use crate::error::{Error, Result};
+use crate::resources::ResVec;
+use crate::{BIG, M_MAX, N_MAX, R_MAX};
+
+/// One framework (distributed application / Spark job) as the allocator
+/// sees it.
+#[derive(Debug, Clone)]
+pub struct FrameworkEntry {
+    /// Display name ("Pi-q3-j17", "wc-…").
+    pub name: String,
+    /// Per-task demand vector `d_{n,·}` — the *allocator's belief*: exact in
+    /// workload-characterized mode, inferred in oblivious mode.
+    pub demand: ResVec,
+    /// Weight φ_n (the paper uses 1 everywhere).
+    pub weight: f64,
+    /// Inactive frameworks (completed / not yet arrived) never score.
+    pub active: bool,
+}
+
+/// Allocator-visible cluster state: pool + frameworks + allocation matrix.
+#[derive(Debug, Clone)]
+pub struct AllocState {
+    pub pool: AgentPool,
+    frameworks: Vec<FrameworkEntry>,
+    /// `x[n][i]` — tasks (executors, online) of framework `n` on agent `i`.
+    x: Vec<Vec<f64>>,
+    /// Mesos role of each framework. Fair shares aggregate over roles (the
+    /// paper's Pi / WordCount submission groups are roles, §3.3); the
+    /// default `role == own index` recovers per-framework fairness (the §2
+    /// numerical study).
+    roles: Vec<usize>,
+}
+
+impl AllocState {
+    pub fn new(pool: AgentPool) -> Self {
+        AllocState { pool, frameworks: Vec::new(), x: Vec::new(), roles: Vec::new() }
+    }
+
+    /// Register a framework; returns its dense index.
+    pub fn add_framework(&mut self, entry: FrameworkEntry) -> usize {
+        let n = self.frameworks.len();
+        assert!(n < N_MAX, "at most {N_MAX} concurrent frameworks (padded kernel)");
+        self.frameworks.push(entry);
+        self.x.push(vec![0.0; self.pool.len()]);
+        self.roles.push(n); // own role by default (per-framework fairness)
+        n
+    }
+
+    /// Assign framework `n` to a Mesos role (shares aggregate per role).
+    pub fn set_role(&mut self, n: usize, role: usize) {
+        self.roles[n] = role;
+    }
+
+    /// The role of framework `n`.
+    pub fn role_of(&self, n: usize) -> usize {
+        self.roles[n]
+    }
+
+    /// Remove a completed framework from scoring (allocations must already
+    /// be released).
+    pub fn deactivate(&mut self, n: usize) {
+        self.frameworks[n].active = false;
+    }
+
+    /// Reuse a completed framework's slot for a newly arrived one — the
+    /// online experiments run 500 jobs through ≤ 10 concurrent slots.
+    pub fn replace_framework(&mut self, n: usize, entry: FrameworkEntry) {
+        debug_assert!(!self.frameworks[n].active, "replacing an active framework");
+        debug_assert!(self.x[n].iter().all(|v| *v == 0.0), "slot still holds tasks");
+        self.frameworks[n] = entry;
+        self.roles[n] = n; // callers re-assign via set_role if needed
+    }
+
+    pub fn frameworks(&self) -> &[FrameworkEntry] {
+        &self.frameworks
+    }
+
+    pub fn framework(&self, n: usize) -> &FrameworkEntry {
+        &self.frameworks[n]
+    }
+
+    pub fn framework_mut(&mut self, n: usize) -> &mut FrameworkEntry {
+        &mut self.frameworks[n]
+    }
+
+    pub fn n_frameworks(&self) -> usize {
+        self.frameworks.len()
+    }
+
+    /// Allocation matrix entry.
+    pub fn tasks_on(&self, n: usize, i: AgentId) -> f64 {
+        self.x[n][i]
+    }
+
+    /// Total tasks of framework `n` over registered agents (`x_n`).
+    pub fn total_tasks(&self, n: usize) -> f64 {
+        self.x[n]
+            .iter()
+            .enumerate()
+            .filter(|(i, _)| self.pool.agent(*i).registered)
+            .map(|(_, v)| *v)
+            .sum()
+    }
+
+    /// Place `count` tasks of framework `n` on agent `i`, reserving `amount`
+    /// from the pool (`amount` = `count * d_n` in characterized mode; an
+    /// arbitrary accepted-offer chunk in oblivious mode).
+    pub fn place(&mut self, n: usize, i: AgentId, amount: &ResVec, count: f64) -> Result<()> {
+        if !self.frameworks[n].active {
+            return Err(Error::Cluster(format!("placing on inactive framework {n}")));
+        }
+        self.pool.reserve(i, amount)?;
+        self.x[n][i] += count;
+        Ok(())
+    }
+
+    /// Place one task of `n` on `i` at the believed demand — the
+    /// progressive-filling step.
+    pub fn place_task(&mut self, n: usize, i: AgentId) -> Result<()> {
+        let d = self.frameworks[n].demand;
+        self.place(n, i, &d, 1.0)
+    }
+
+    /// Release `count` tasks' worth (`amount`) of framework `n` from agent `i`.
+    pub fn unplace(&mut self, n: usize, i: AgentId, amount: &ResVec, count: f64) -> Result<()> {
+        if self.x[n][i] + 1e-9 < count {
+            return Err(Error::Cluster(format!(
+                "framework {n} has {} tasks on agent {i}, releasing {count}",
+                self.x[n][i]
+            )));
+        }
+        self.pool.release(i, amount)?;
+        self.x[n][i] = (self.x[n][i] - count).max(0.0);
+        Ok(())
+    }
+
+    /// `true` iff one more task of `n` (at believed demand) fits agent `i`.
+    pub fn task_fits(&self, n: usize, i: AgentId) -> bool {
+        self.frameworks[n].active
+            && self.frameworks[n].demand.any_positive()
+            && self.pool.agent(i).can_fit(&self.frameworks[n].demand)
+    }
+
+    /// `true` iff no active framework can place a task anywhere — the
+    /// progressive-filling termination condition.
+    pub fn saturated(&self) -> bool {
+        for n in 0..self.frameworks.len() {
+            if !self.frameworks[n].active {
+                continue;
+            }
+            for i in 0..self.pool.len() {
+                if self.task_fits(n, i) {
+                    return false;
+                }
+            }
+        }
+        true
+    }
+
+    /// Pack the state into the padded tensors the scoring kernel consumes.
+    pub fn score_inputs(&self) -> ScoreInputs {
+        let m = self.pool.len();
+        let n = self.frameworks.len();
+        let r = self.pool.resource_kinds();
+        assert!(m <= M_MAX && n <= N_MAX && r <= R_MAX);
+        let mut si = ScoreInputs::default();
+        si.n = n;
+        si.m = m;
+        si.r = r;
+        for (i, a) in self.pool.agents().iter().enumerate() {
+            for rr in 0..r {
+                si.c[i][rr] = a.capacity.get(rr);
+            }
+            si.smask[i] = if a.registered { 1.0 } else { 0.0 };
+        }
+        for (ni, fe) in self.frameworks.iter().enumerate() {
+            for rr in 0..r {
+                si.d[ni][rr] = fe.demand.get(rr);
+            }
+            si.phi[ni] = fe.weight;
+            si.fmask[ni] = if fe.active { 1.0 } else { 0.0 };
+            for i in 0..m {
+                si.x[ni][i] = self.x[ni][i];
+            }
+        }
+        for rr in 0..r {
+            si.rmask[rr] = 1.0;
+        }
+        for a in 0..n {
+            for b in 0..n {
+                si.rolemat[a][b] = if self.roles[a] == self.roles[b] { 1.0 } else { 0.0 };
+            }
+        }
+        si
+    }
+}
+
+/// Padded scoring tensors — the exact layout of the AOT artifact's inputs.
+#[derive(Debug, Clone)]
+pub struct ScoreInputs {
+    pub c: [[f64; R_MAX]; M_MAX],
+    pub x: [[f64; M_MAX]; N_MAX],
+    pub d: [[f64; R_MAX]; N_MAX],
+    pub phi: [f64; N_MAX],
+    /// Role membership: `rolemat[a][b] = 1` iff same Mesos role (identity =
+    /// per-framework fairness). Shares aggregate over roles; residuals don't.
+    pub rolemat: [[f64; N_MAX]; N_MAX],
+    pub fmask: [f64; N_MAX],
+    pub smask: [f64; M_MAX],
+    pub rmask: [f64; R_MAX],
+    /// Real (unpadded) dimensions, for iteration.
+    pub n: usize,
+    pub m: usize,
+    pub r: usize,
+}
+
+impl Default for ScoreInputs {
+    fn default() -> Self {
+        ScoreInputs {
+            c: [[0.0; R_MAX]; M_MAX],
+            x: [[0.0; M_MAX]; N_MAX],
+            d: [[0.0; R_MAX]; N_MAX],
+            phi: [1.0; N_MAX],
+            rolemat: [[0.0; N_MAX]; N_MAX],
+            fmask: [0.0; N_MAX],
+            smask: [0.0; M_MAX],
+            rmask: [0.0; R_MAX],
+            n: 0,
+            m: 0,
+            r: 0,
+        }
+    }
+}
+
+/// All six score tensors (padding slots hold [`BIG`] / `false`).
+#[derive(Debug, Clone)]
+pub struct ScoreSet {
+    /// Global dominant shares (DRF).
+    pub drf: [f64; N_MAX],
+    /// Task-share fairness scores (TSF).
+    pub tsf: [f64; N_MAX],
+    /// Per-server virtual dominant shares `K_{n,i}` (PS-DSF).
+    pub psdsf: [[f64; M_MAX]; N_MAX],
+    /// Residual PS-DSF `K̃_{n,i}` (this paper's criterion).
+    pub rpsdsf: [[f64; M_MAX]; N_MAX],
+    /// Best-fit ratio `max_r d_{n,r}/res_{i,r}` (BF-DRF server selection).
+    pub fit: [[f64; M_MAX]; N_MAX],
+    /// One-more-task feasibility.
+    pub feas: [[bool; M_MAX]; N_MAX],
+}
+
+impl ScoreSet {
+    pub fn empty() -> Self {
+        ScoreSet {
+            drf: [BIG; N_MAX],
+            tsf: [BIG; N_MAX],
+            psdsf: [[BIG; M_MAX]; N_MAX],
+            rpsdsf: [[BIG; M_MAX]; N_MAX],
+            fit: [[BIG; M_MAX]; N_MAX],
+            feas: [[false; M_MAX]; N_MAX],
+        }
+    }
+}
+
+/// Role-aggregated task total for framework `n` over registered servers:
+/// `Σ_{n' : role(n') = role(n)} Σ_i x[n'][i]` — the `x_n` every share-based
+/// criterion uses (identity rolemat ⇒ plain per-framework total). Mirrors
+/// the kernel's `rolemat @ sum(x * smask)`.
+#[inline]
+pub fn role_total(si: &ScoreInputs, n: usize) -> f64 {
+    let mut total = 0.0;
+    for n2 in 0..si.n {
+        if si.rolemat[n][n2] > 0.5 {
+            for i in 0..si.m {
+                if si.smask[i] > 0.5 {
+                    total += si.x[n2][i];
+                }
+            }
+        }
+    }
+    total
+}
+
+/// Anything that can turn state tensors into scores: the native rust scorer
+/// or the AOT/PJRT-backed kernel scorer.
+pub trait Scorer {
+    /// Human-readable backend name ("native", "hlo").
+    fn name(&self) -> &'static str;
+    /// Compute all score tensors for the given padded inputs.
+    fn score(&mut self, inputs: &ScoreInputs) -> Result<ScoreSet>;
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::cluster::ServerType;
+
+    pub(crate) fn illustrative_state() -> AllocState {
+        let pool = AgentPool::new(&ServerType::illustrative());
+        let mut st = AllocState::new(pool);
+        st.add_framework(FrameworkEntry {
+            name: "f1".into(),
+            demand: ResVec::new(&[5.0, 1.0]),
+            weight: 1.0,
+            active: true,
+        });
+        st.add_framework(FrameworkEntry {
+            name: "f2".into(),
+            demand: ResVec::new(&[1.0, 5.0]),
+            weight: 1.0,
+            active: true,
+        });
+        st
+    }
+
+    #[test]
+    fn place_and_release_tracks_x() {
+        let mut st = illustrative_state();
+        st.place_task(0, 0).unwrap();
+        st.place_task(0, 0).unwrap();
+        st.place_task(1, 1).unwrap();
+        assert_eq!(st.tasks_on(0, 0), 2.0);
+        assert_eq!(st.total_tasks(0), 2.0);
+        assert_eq!(st.pool.agent(0).residual().as_slice(), &[90.0, 28.0]);
+        let d0 = st.framework(0).demand;
+        st.unplace(0, 0, &d0, 1.0).unwrap();
+        assert_eq!(st.tasks_on(0, 0), 1.0);
+        assert_eq!(st.pool.agent(0).residual().as_slice(), &[95.0, 29.0]);
+    }
+
+    #[test]
+    fn saturated_detects_full_cluster() {
+        let mut st = illustrative_state();
+        assert!(!st.saturated());
+        // 20 f1 tasks exhaust server-1 cpu; 20 f2 tasks exhaust server-2 mem
+        for _ in 0..20 {
+            st.place_task(0, 0).unwrap();
+            st.place_task(1, 1).unwrap();
+        }
+        // server1 residual (0,10), server2 residual (10,0): nothing fits
+        assert!(st.saturated());
+    }
+
+    #[test]
+    fn score_inputs_layout() {
+        let mut st = illustrative_state();
+        st.place_task(0, 0).unwrap();
+        let si = st.score_inputs();
+        assert_eq!((si.n, si.m, si.r), (2, 2, 2));
+        assert_eq!(si.c[0][0], 100.0);
+        assert_eq!(si.c[1][1], 100.0);
+        assert_eq!(si.d[0][0], 5.0);
+        assert_eq!(si.x[0][0], 1.0);
+        assert_eq!(si.fmask[0], 1.0);
+        assert_eq!(si.fmask[2], 0.0);
+        assert_eq!(si.smask[2], 0.0);
+        assert_eq!(si.rmask[1], 1.0);
+        assert_eq!(si.rmask[2], 0.0);
+    }
+
+    #[test]
+    fn inactive_framework_cannot_place() {
+        let mut st = illustrative_state();
+        st.deactivate(0);
+        assert!(st.place_task(0, 0).is_err());
+        assert!(!st.task_fits(0, 0));
+    }
+
+    #[test]
+    fn unplace_more_than_placed_rejected() {
+        let mut st = illustrative_state();
+        st.place_task(0, 0).unwrap();
+        let d = st.framework(0).demand;
+        assert!(st.unplace(0, 0, &d.scaled(2.0), 2.0).is_err());
+    }
+}

@@ -1,0 +1,349 @@
+//! Allocation policies: a fairness criterion plus a server-selection
+//! mechanism, with the argmin/tie-breaking rules in one place.
+//!
+//! Tie-breaking (DESIGN.md §6.4/§6.8): exact score ties break uniformly at
+//! random for per-agent and best-fit framework picks (the paper's Table-2/4
+//! variance), by the residual profile ratio for rPS-DSF joint picks (the
+//! Figure-9 adaptivity), and by (framework id, agent id) for PS-DSF joint
+//! picks (which reproduces its Table-1 row exactly). All randomness flows
+//! from the caller's seeded [`Rng`], so runs replay exactly.
+
+pub use crate::scheduler::server_select::BestFitMetric;
+
+use crate::rng::Rng;
+use crate::scheduler::server_select;
+use crate::scheduler::{ScoreInputs, ScoreSet};
+use crate::BIG;
+
+/// Which fairness criterion ranks frameworks.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Criterion {
+    /// Global dominant share (DRFH).
+    Drf,
+    /// Task-share fairness.
+    Tsf,
+    /// Per-server dominant share — scores depend on the agent.
+    PsDsf,
+    /// Residual per-server dominant share (the paper's criterion).
+    RPsDsf,
+}
+
+impl Criterion {
+    /// Score of placing the next task of `n` on agent `i`.
+    #[inline]
+    pub fn score(&self, set: &ScoreSet, n: usize, i: usize) -> f64 {
+        match self {
+            Criterion::Drf => set.drf[n],
+            Criterion::Tsf => set.tsf[n],
+            Criterion::PsDsf => set.psdsf[n][i],
+            Criterion::RPsDsf => set.rpsdsf[n][i],
+        }
+    }
+
+    /// `true` for criteria whose score varies with the agent.
+    pub fn is_per_server(&self) -> bool {
+        matches!(self, Criterion::PsDsf | Criterion::RPsDsf)
+    }
+}
+
+/// How the agent is chosen.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum PolicyKind {
+    /// The caller iterates agents (RRR permutation / sequential release);
+    /// the policy only picks the framework for the agent at hand.
+    PerAgent,
+    /// The policy ranks `(framework, agent)` pairs jointly (PS-DSF native).
+    Joint,
+    /// Framework first (by the global criterion), then best-fit agent.
+    BestFit,
+}
+
+/// A complete allocation policy.
+#[derive(Debug, Clone)]
+pub struct Policy {
+    /// Registry name ("drf", "bf-drf", "rpsdsf", …).
+    pub name: &'static str,
+    pub criterion: Criterion,
+    pub kind: PolicyKind,
+    /// Best-fit metric (only meaningful for `PolicyKind::BestFit`).
+    pub metric: BestFitMetric,
+}
+
+impl Policy {
+    pub fn new(name: &'static str, criterion: Criterion, kind: PolicyKind) -> Self {
+        Policy { name, criterion, kind, metric: BestFitMetric::default() }
+    }
+
+    /// For agent `i`, the feasible framework with the minimum criterion
+    /// score. Exact ties are broken *uniformly at random* — this is what
+    /// produces the trial-to-trial variance the paper's Tables 2/4 report
+    /// for the RRR schedulers (equal-share frameworks race for each offer).
+    /// Used by RRR and sequential release.
+    pub fn pick_for_agent(
+        &self,
+        set: &ScoreSet,
+        si: &ScoreInputs,
+        i: usize,
+        rng: &mut Rng,
+    ) -> Option<usize> {
+        let mut best: Option<f64> = None;
+        let mut tied: Vec<usize> = Vec::new();
+        for n in 0..si.n {
+            if !set.feas[n][i] {
+                continue;
+            }
+            let s = self.criterion.score(set, n, i);
+            if s >= BIG {
+                continue;
+            }
+            match best {
+                Some(b) if s > b => {}
+                Some(b) if s == b => tied.push(n),
+                _ => {
+                    best = Some(s);
+                    tied.clear();
+                    tied.push(n);
+                }
+            }
+        }
+        match tied.len() {
+            0 => None,
+            1 => Some(tied[0]),
+            k => Some(tied[rng.index(k)]),
+        }
+    }
+
+    /// Jointly pick the feasible `(framework, agent)` pair with minimum
+    /// score over `candidates`.
+    ///
+    /// Tie-breaking: for **rPS-DSF**, equal scores (ubiquitous at `x_n = 0`,
+    /// where every feasible pair scores 0) break toward the pair with the
+    /// smallest residual demand/supply ratio — the criterion's own per-task
+    /// factor. This is what lets rPS-DSF steer brand-new frameworks to the
+    /// agents whose *current* residual profile suits them, the adaptivity
+    /// Figure 9 demonstrates. Other criteria keep the deterministic
+    /// (lower `n`, lower `i`) order, which reproduces the paper's PS-DSF
+    /// Table-1 row exactly.
+    pub fn pick_joint(
+        &self,
+        set: &ScoreSet,
+        si: &ScoreInputs,
+        candidates: &[usize],
+    ) -> Option<(usize, usize)> {
+        let mut best: Option<(f64, f64, usize, usize)> = None;
+        for n in 0..si.n {
+            for &i in candidates {
+                if !set.feas[n][i] {
+                    continue;
+                }
+                let s = self.criterion.score(set, n, i);
+                if s >= BIG {
+                    continue;
+                }
+                let tie = match self.criterion {
+                    Criterion::RPsDsf => set.fit[n][i],
+                    _ => 0.0,
+                };
+                match best {
+                    Some((b, bt, bn, bi)) if (s, tie, n, i) >= (b, bt, bn, bi) => {}
+                    _ => best = Some((s, tie, n, i)),
+                }
+            }
+        }
+        best.map(|(_, _, n, i)| (n, i))
+    }
+
+    /// BF-DRF-style two-stage pick: framework by the global criterion among
+    /// frameworks feasible on some candidate (exact score ties break
+    /// uniformly at random, like [`Policy::pick_for_agent`] — same-role
+    /// frameworks always tie under role-aggregated shares), then the
+    /// best-fit agent.
+    pub fn pick_bestfit(
+        &self,
+        set: &ScoreSet,
+        si: &ScoreInputs,
+        candidates: &[usize],
+        rng: &mut Rng,
+    ) -> Option<(usize, usize)> {
+        let mut best: Option<f64> = None;
+        let mut tied: Vec<usize> = Vec::new();
+        for n in 0..si.n {
+            if !candidates.iter().any(|&i| set.feas[n][i]) {
+                continue;
+            }
+            // the global score; for per-server criteria fall back to the
+            // pair minimum so BestFit composes with any criterion
+            let s = if self.criterion.is_per_server() {
+                candidates
+                    .iter()
+                    .filter(|&&i| set.feas[n][i])
+                    .map(|&i| self.criterion.score(set, n, i))
+                    .fold(BIG, f64::min)
+            } else {
+                self.criterion.score(set, n, 0)
+            };
+            if s >= BIG {
+                continue;
+            }
+            match best {
+                Some(b) if s > b => {}
+                Some(b) if s == b => tied.push(n),
+                _ => {
+                    best = Some(s);
+                    tied.clear();
+                    tied.push(n);
+                }
+            }
+        }
+        let n = match tied.len() {
+            0 => return None,
+            1 => tied[0],
+            k => tied[rng.index(k)],
+        };
+        let i = server_select::best_fit(si, set, self.metric, n, candidates)?;
+        Some((n, i))
+    }
+
+    /// One allocation decision over an agent pool, dispatching on the
+    /// policy kind. For `PerAgent` the caller supplies this cycle's RRR
+    /// permutation via `order`; the first agent with a feasible framework
+    /// wins (the paper's Mesos default behaviour).
+    pub fn decide(
+        &self,
+        set: &ScoreSet,
+        si: &ScoreInputs,
+        candidates: &[usize],
+        rng: &mut Rng,
+    ) -> Option<(usize, usize)> {
+        match self.kind {
+            PolicyKind::PerAgent => {
+                let order = server_select::rrr_order(candidates, rng);
+                for i in order {
+                    if let Some(n) = self.pick_for_agent(set, si, i, rng) {
+                        return Some((n, i));
+                    }
+                }
+                None
+            }
+            PolicyKind::Joint => self.pick_joint(set, si, candidates),
+            PolicyKind::BestFit => self.pick_bestfit(set, si, candidates, rng),
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::cluster::{AgentPool, ServerType};
+    use crate::resources::ResVec;
+    use crate::scheduler::{AllocState, FrameworkEntry, NativeScorer};
+
+    fn illustrative(x: &[(usize, usize, usize)]) -> AllocState {
+        let mut st = AllocState::new(AgentPool::new(&ServerType::illustrative()));
+        for d in [[5.0, 1.0], [1.0, 5.0]] {
+            st.add_framework(FrameworkEntry {
+                name: "f".into(),
+                demand: ResVec::new(&d),
+                weight: 1.0,
+                active: true,
+            });
+        }
+        for &(n, i, k) in x {
+            for _ in 0..k {
+                st.place_task(n, i).unwrap();
+            }
+        }
+        st
+    }
+
+    #[test]
+    fn drf_picks_min_share_framework() {
+        let st = illustrative(&[(0, 0, 4)]); // f1 has 4 tasks, f2 none
+        let si = st.score_inputs();
+        let set = NativeScorer::compute(&si);
+        let p = Policy::new("drf", Criterion::Drf, PolicyKind::PerAgent);
+        assert_eq!(p.pick_for_agent(&set, &si, 0, &mut Rng::new(0)), Some(1));
+        assert_eq!(p.pick_for_agent(&set, &si, 1, &mut Rng::new(0)), Some(1));
+    }
+
+    #[test]
+    fn score_ties_break_randomly_per_agent() {
+        let st = illustrative(&[]);
+        let si = st.score_inputs();
+        let set = NativeScorer::compute(&si);
+        let p = Policy::new("drf", Criterion::Drf, PolicyKind::PerAgent);
+        let picks: std::collections::HashSet<usize> = (0..32)
+            .filter_map(|s| p.pick_for_agent(&set, &si, 0, &mut Rng::new(s)))
+            .collect();
+        assert!(picks.contains(&0) && picks.contains(&1), "random tie-break covers both");
+        let pj = Policy::new("psdsf", Criterion::PsDsf, PolicyKind::Joint);
+        assert_eq!(pj.pick_joint(&set, &si, &[0, 1]), Some((0, 0)));
+    }
+
+    #[test]
+    fn joint_psdsf_prefers_matching_server() {
+        let st = illustrative(&[(0, 0, 1), (1, 1, 1)]);
+        let si = st.score_inputs();
+        let set = NativeScorer::compute(&si);
+        let p = Policy::new("psdsf", Criterion::PsDsf, PolicyKind::Joint);
+        // K_{1,1} = 1/20 = K_{2,2}; ties to (0,0)
+        assert_eq!(p.pick_joint(&set, &si, &[0, 1]), Some((0, 0)));
+        // restrict to server 2: f2's K_{2,2}=0.05 < f1's K_{1,2}=1/6
+        assert_eq!(p.pick_joint(&set, &si, &[1]), Some((1, 1)));
+    }
+
+    #[test]
+    fn bestfit_drf_first_steps() {
+        let st = illustrative(&[]);
+        let si = st.score_inputs();
+        let set = NativeScorer::compute(&si);
+        let p = Policy::new("bf-drf", Criterion::Drf, PolicyKind::BestFit);
+        // shares tied at 0 -> random framework; best-fit sends whichever
+        // wins to its profile-matching server
+        let pick = p.pick_bestfit(&set, &si, &[0, 1], &mut Rng::new(0)).unwrap();
+        assert!(pick == (0, 0) || pick == (1, 1), "{pick:?}");
+        // after granting f1, f2 has the strict min share; best-fit -> server 1
+        let st2 = illustrative(&[(0, 0, 1)]);
+        let si2 = st2.score_inputs();
+        let set2 = NativeScorer::compute(&si2);
+        assert_eq!(p.pick_bestfit(&set2, &si2, &[0, 1], &mut Rng::new(0)), Some((1, 1)));
+    }
+
+    #[test]
+    fn nothing_feasible_returns_none() {
+        // saturate: 20 f1 on s1 (residual 0,10), 20 f2 on s2 (residual 10,0)
+        let st = illustrative(&[(0, 0, 20), (1, 1, 20)]);
+        let si = st.score_inputs();
+        let set = NativeScorer::compute(&si);
+        for p in [
+            Policy::new("drf", Criterion::Drf, PolicyKind::PerAgent),
+            Policy::new("psdsf", Criterion::PsDsf, PolicyKind::Joint),
+            Policy::new("bf-drf", Criterion::Drf, PolicyKind::BestFit),
+        ] {
+            let mut rng = Rng::new(0);
+            assert_eq!(p.decide(&set, &si, &[0, 1], &mut rng), None, "{}", p.name);
+        }
+    }
+
+    #[test]
+    fn decide_respects_candidates() {
+        let st = illustrative(&[]);
+        let si = st.score_inputs();
+        let set = NativeScorer::compute(&si);
+        let p = Policy::new("rpsdsf", Criterion::RPsDsf, PolicyKind::Joint);
+        // zero-share tie on agent 1 breaks by residual ratio: f2's demand
+        // (1,5) suits c=(30,100) better (ratio 0.05) than f1's (5,1) (1/6)
+        assert_eq!(p.decide(&set, &si, &[1], &mut Rng::new(0)), Some((1, 1)));
+    }
+
+    #[test]
+    fn rpsdsf_zero_share_tie_breaks_by_profile_match() {
+        let st = illustrative(&[]);
+        let si = st.score_inputs();
+        let set = NativeScorer::compute(&si);
+        let p = Policy::new("rpsdsf", Criterion::RPsDsf, PolicyKind::Joint);
+        // across both agents, the best profile match overall is picked first
+        let (n, i) = p.pick_joint(&set, &si, &[0, 1]).unwrap();
+        assert_eq!((n, i), (0, 0), "f1 (5,1) on the cpu-rich server is the tightest match");
+    }
+}

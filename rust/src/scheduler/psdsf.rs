@@ -1,0 +1,125 @@
+//! Per-Server Dominant-Share Fairness (PS-DSF).
+//!
+//! Khamse-Ashari, Lambadaris, Kesidis, Urgaonkar & Zhao (ICC'17, ref [2]):
+//! instead of pooling capacities, each framework gets a *virtual dominant
+//! share per server*:
+//!
+//! ```text
+//! K_{n,i} = x_n · max_r d_{n,r} / (φ_n · c_{i,r})  =  x_n / (φ_n · N_{n,i})
+//! ```
+//!
+//! where `N_{n,i}` is the (fluid) number of tasks server `i` alone could
+//! host. Progressive filling grants the next task to the feasible pair
+//! `(n, i)` with minimum `K_{n,i}` — frameworks are steered to the servers
+//! that suit their demand profile, which is why PS-DSF "packs" heterogeneous
+//! clusters so much better than DRF in Tables 1/3 (total 41 vs 22.5).
+
+use crate::scheduler::ScoreInputs;
+use crate::{BIG, M_MAX, N_MAX};
+
+/// `K_{n,i}` for one pair (BIG for padding/inactive/impossible pairs).
+pub fn virtual_share(si: &ScoreInputs, n: usize, i: usize) -> f64 {
+    if si.fmask[n] < 0.5 || si.smask[i] < 0.5 {
+        return BIG;
+    }
+    let mut ratio: Option<f64> = None;
+    for r in 0..si.r {
+        if si.rmask[r] > 0.5 && si.d[n][r] > 0.0 {
+            if si.c[i][r] <= 0.0 {
+                return BIG; // demanded resource absent on this server
+            }
+            let q = si.d[n][r] / si.c[i][r];
+            ratio = Some(ratio.map_or(q, |b: f64| b.max(q)));
+        }
+    }
+    let Some(ratio) = ratio else { return BIG };
+    let xn = crate::scheduler::role_total(si, n);
+    (xn * ratio / si.phi[n]).min(BIG)
+}
+
+/// The full `K` matrix.
+pub fn scores(si: &ScoreInputs) -> [[f64; M_MAX]; N_MAX] {
+    let mut out = [[BIG; M_MAX]; N_MAX];
+    for n in 0..si.n {
+        for i in 0..si.m {
+            out[n][i] = virtual_share(si, n, i);
+        }
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::cluster::{AgentPool, ServerType};
+    use crate::resources::ResVec;
+    use crate::scheduler::{AllocState, FrameworkEntry};
+
+    fn illustrative() -> AllocState {
+        let mut st = AllocState::new(AgentPool::new(&ServerType::illustrative()));
+        for d in [[5.0, 1.0], [1.0, 5.0]] {
+            st.add_framework(FrameworkEntry {
+                name: "f".into(),
+                demand: ResVec::new(&d),
+                weight: 1.0,
+                active: true,
+            });
+        }
+        st
+    }
+
+    #[test]
+    fn paper_k_values() {
+        let mut st = illustrative();
+        for _ in 0..2 {
+            st.place_task(0, 0).unwrap();
+        }
+        for _ in 0..3 {
+            st.place_task(1, 1).unwrap();
+        }
+        let k = scores(&st.score_inputs());
+        // x1 = 2: K_{1,1} = 2 * max(5/100, 1/30) = 2/20; K_{1,2} = 2 * 1/6
+        assert!((k[0][0] - 0.1).abs() < 1e-12);
+        assert!((k[0][1] - 2.0 / 6.0).abs() < 1e-12);
+        // x2 = 3: K_{2,1} = 3 * max(1/100, 5/30) = 0.5; K_{2,2} = 3/20
+        assert!((k[1][0] - 0.5).abs() < 1e-12);
+        assert!((k[1][1] - 0.15).abs() < 1e-12);
+    }
+
+    #[test]
+    fn x_is_global_not_per_server() {
+        // K_{n,i} uses the framework's TOTAL tasks, not its tasks on i.
+        let mut st = illustrative();
+        for _ in 0..4 {
+            st.place_task(0, 1).unwrap(); // all on server 2
+        }
+        let k = scores(&st.score_inputs());
+        assert!((k[0][0] - 4.0 / 20.0).abs() < 1e-12); // still scales with x_n=4
+    }
+
+    #[test]
+    fn missing_resource_on_server_is_big() {
+        let mut st = AllocState::new(AgentPool::new(&[
+            ServerType::new("no-mem", ResVec::new(&[8.0, 0.0])),
+            ServerType::new("full", ResVec::new(&[8.0, 8.0])),
+        ]));
+        st.add_framework(FrameworkEntry {
+            name: "f".into(),
+            demand: ResVec::new(&[1.0, 1.0]),
+            weight: 1.0,
+            active: true,
+        });
+        let k = scores(&st.score_inputs());
+        assert!(crate::is_big(k[0][0]));
+        assert!(!crate::is_big(k[0][1]));
+    }
+
+    #[test]
+    fn weight_scales() {
+        let mut st = illustrative();
+        st.framework_mut(0).weight = 2.0;
+        st.place_task(0, 0).unwrap();
+        let k = scores(&st.score_inputs());
+        assert!((k[0][0] - 1.0 * 0.05 / 2.0).abs() < 1e-12);
+    }
+}

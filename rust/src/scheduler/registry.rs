@@ -1,0 +1,61 @@
+//! Scheduler registry: the paper's seven named configurations.
+
+use crate::error::{Error, Result};
+use crate::scheduler::policy::{Criterion, Policy, PolicyKind};
+
+/// Every policy name accepted by the CLI / experiment configs.
+pub const POLICY_NAMES: &[&str] = &[
+    "drf",        // DRF under RRR agent selection (Mesos default)
+    "tsf",        // TSF under RRR
+    "bf-drf",     // DRF framework pick + best-fit agent
+    "psdsf",      // PS-DSF, joint (framework, agent) selection
+    "rrr-psdsf",  // RRR picks the agent, PS-DSF picks the framework
+    "rpsdsf",     // residual PS-DSF, joint
+    "rrr-rpsdsf", // residual PS-DSF under RRR
+];
+
+/// Look a policy up by its registry name.
+pub fn policy_by_name(name: &str) -> Result<Policy> {
+    let p = match name {
+        "drf" => Policy::new("drf", Criterion::Drf, PolicyKind::PerAgent),
+        "tsf" => Policy::new("tsf", Criterion::Tsf, PolicyKind::PerAgent),
+        "bf-drf" => Policy::new("bf-drf", Criterion::Drf, PolicyKind::BestFit),
+        "psdsf" => Policy::new("psdsf", Criterion::PsDsf, PolicyKind::Joint),
+        "rrr-psdsf" => Policy::new("rrr-psdsf", Criterion::PsDsf, PolicyKind::PerAgent),
+        "rpsdsf" => Policy::new("rpsdsf", Criterion::RPsDsf, PolicyKind::Joint),
+        "rrr-rpsdsf" => Policy::new("rrr-rpsdsf", Criterion::RPsDsf, PolicyKind::PerAgent),
+        other => {
+            return Err(Error::Experiment(format!(
+                "unknown scheduler '{other}' (expected one of {POLICY_NAMES:?})"
+            )))
+        }
+    };
+    Ok(p)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn all_names_resolve() {
+        for name in POLICY_NAMES {
+            let p = policy_by_name(name).unwrap();
+            assert_eq!(&p.name, name);
+        }
+    }
+
+    #[test]
+    fn unknown_name_errors() {
+        assert!(policy_by_name("fifo").is_err());
+    }
+
+    #[test]
+    fn kinds_match_paper() {
+        assert_eq!(policy_by_name("drf").unwrap().kind, PolicyKind::PerAgent);
+        assert_eq!(policy_by_name("bf-drf").unwrap().kind, PolicyKind::BestFit);
+        assert_eq!(policy_by_name("psdsf").unwrap().kind, PolicyKind::Joint);
+        assert_eq!(policy_by_name("rrr-psdsf").unwrap().kind, PolicyKind::PerAgent);
+        assert!(policy_by_name("rpsdsf").unwrap().criterion.is_per_server());
+    }
+}

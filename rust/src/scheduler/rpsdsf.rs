@@ -1,0 +1,148 @@
+//! Residual PS-DSF (rPS-DSF) — the paper's own criterion (§2).
+//!
+//! PS-DSF evaluated against the *current residual (unreserved)* capacities
+//! instead of the nominal ones:
+//!
+//! ```text
+//! K̃_{n,j} = x_n · max_r d_{n,r} / (φ_n · (c_{j,r} − Σ_{n'} x_{n',j} d_{n',r}))
+//! ```
+//!
+//! "This criterion makes scheduling decisions by progressive filling using
+//! *current* residual capacities based on the *current* allocations x."
+//! The residual form both improves packing slightly (Table 1: 42 vs 41
+//! total) and — crucially for Figure 9 — lets the scheduler *adapt* when the
+//! initial allocation was forced to be suboptimal: a server whose remaining
+//! profile no longer suits a framework stops attracting it, unlike PS-DSF
+//! or BF-DRF whose nominal-capacity scores never change.
+//!
+//! The shared `max_r d/res` factor is exactly the best-fit ratio, so the
+//! fused kernel (and the native scorer) compute it once for both.
+
+use crate::scheduler::ScoreInputs;
+use crate::{BIG, M_MAX, N_MAX, R_MAX};
+
+/// Residual capacities `res[i][r] = c_{i,r} − Σ_n x_{n,i} d_{n,r}` under the
+/// allocator's believed demands.
+pub fn residuals(si: &ScoreInputs) -> [[f64; R_MAX]; M_MAX] {
+    let mut res = [[0.0; R_MAX]; M_MAX];
+    for i in 0..si.m {
+        for r in 0..si.r {
+            let mut used = 0.0;
+            for n in 0..si.n {
+                used += si.x[n][i] * si.d[n][r];
+            }
+            res[i][r] = si.c[i][r] - used;
+        }
+    }
+    res
+}
+
+/// The demand/residual dominant ratio `max_r d_{n,r}/res_{i,r}` — BIG when a
+/// demanded resource is exhausted on `i`. This is BF-DRF's best-fit score
+/// and rPS-DSF's per-pair factor.
+pub fn residual_ratio(si: &ScoreInputs, res: &[[f64; R_MAX]; M_MAX], n: usize, i: usize) -> f64 {
+    if si.fmask[n] < 0.5 || si.smask[i] < 0.5 {
+        return BIG;
+    }
+    let mut ratio: Option<f64> = None;
+    for r in 0..si.r {
+        if si.rmask[r] > 0.5 && si.d[n][r] > 0.0 {
+            if res[i][r] <= 0.0 {
+                return BIG;
+            }
+            let q = si.d[n][r] / res[i][r];
+            ratio = Some(ratio.map_or(q, |b: f64| b.max(q)));
+        }
+    }
+    ratio.map_or(BIG, |v| v.min(BIG))
+}
+
+/// `K̃_{n,i}` matrix.
+pub fn scores(si: &ScoreInputs) -> [[f64; M_MAX]; N_MAX] {
+    let res = residuals(si);
+    let mut out = [[BIG; M_MAX]; N_MAX];
+    for n in 0..si.n {
+        let xn = crate::scheduler::role_total(si, n);
+        for i in 0..si.m {
+            let ratio = residual_ratio(si, &res, n, i);
+            out[n][i] = if crate::is_big(ratio) { BIG } else { (xn * ratio / si.phi[n]).min(BIG) };
+        }
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::cluster::{AgentPool, ServerType};
+    use crate::resources::ResVec;
+    use crate::scheduler::{AllocState, FrameworkEntry};
+
+    fn illustrative() -> AllocState {
+        let mut st = AllocState::new(AgentPool::new(&ServerType::illustrative()));
+        for d in [[5.0, 1.0], [1.0, 5.0]] {
+            st.add_framework(FrameworkEntry {
+                name: "f".into(),
+                demand: ResVec::new(&d),
+                weight: 1.0,
+                active: true,
+            });
+        }
+        st
+    }
+
+    #[test]
+    fn residuals_track_allocations() {
+        let mut st = illustrative();
+        st.place_task(0, 0).unwrap();
+        st.place_task(1, 0).unwrap();
+        let si = st.score_inputs();
+        let res = residuals(&si);
+        // server1: (100,30) - (5,1) - (1,5) = (94, 24)
+        assert_eq!(res[0][0], 94.0);
+        assert_eq!(res[0][1], 24.0);
+        assert_eq!(res[1][0], 30.0);
+    }
+
+    #[test]
+    fn paper_formula_value() {
+        let mut st = illustrative();
+        st.place_task(0, 0).unwrap();
+        let k = scores(&st.score_inputs());
+        // x1=1, server1 residual (95, 29): K~ = max(5/95, 1/29) = 5/95
+        assert!((k[0][0] - 5.0 / 95.0).abs() < 1e-12);
+        // x2=0 -> 0 on any feasible server
+        assert_eq!(k[1][0], 0.0);
+        assert_eq!(k[1][1], 0.0);
+    }
+
+    #[test]
+    fn exhausted_residual_big() {
+        let mut st = illustrative();
+        for _ in 0..20 {
+            st.place_task(0, 0).unwrap(); // cpu on server 1 now 0
+        }
+        let k = scores(&st.score_inputs());
+        assert!(crate::is_big(k[0][0]));
+        assert!(crate::is_big(k[1][0])); // f2 needs cpu too
+        assert!(!crate::is_big(k[0][1]));
+    }
+
+    #[test]
+    fn adapts_where_psdsf_does_not() {
+        // Fig-9 mechanism in miniature: load server 1 with f2 tasks; PS-DSF's
+        // K_{1,1} ignores that load, rPS-DSF's K~_{1,1} rises above K~_{1,2}.
+        let mut st = illustrative();
+        st.place_task(0, 0).unwrap();
+        for _ in 0..5 {
+            st.place_task(1, 0).unwrap(); // 5 f2 tasks eat server-1 mem
+        }
+        let si = st.score_inputs();
+        let ps = crate::scheduler::psdsf::scores(&si);
+        let rps = scores(&si);
+        assert!(ps[0][0] < ps[0][1], "PS-DSF still prefers server 1");
+        // residual s1 = (90, 4): ratio = max(5/90, 1/4) = 0.25
+        // residual s2 = (30, 100): ratio = 5/30
+        assert!(rps[0][0] > rps[0][1], "rPS-DSF switched to server 2");
+    }
+}

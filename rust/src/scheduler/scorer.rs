@@ -1,0 +1,139 @@
+//! Native rust scorer — the same math as the fused Pallas kernel
+//! (`python/compile/kernels/scores.py`), computed in f64.
+//!
+//! This is the default backend for the experiment sweeps (a 200-trial
+//! progressive-filling study re-scores thousands of times; staying in-process
+//! keeps that in the tens of milliseconds). The HLO backend
+//! (`runtime::scorer::HloScorer`) is bit-compatible up to f32 rounding and
+//! is cross-checked against this one in `rust/tests/runtime_parity.rs`.
+
+use crate::error::Result;
+use crate::scheduler::{drf, psdsf, rpsdsf, tsf, ScoreInputs, ScoreSet, Scorer};
+use crate::{BIG, is_big};
+
+/// Pure-rust implementation of [`Scorer`].
+#[derive(Debug, Default, Clone)]
+pub struct NativeScorer;
+
+impl NativeScorer {
+    pub fn new() -> Self {
+        NativeScorer
+    }
+
+    /// Score synchronously without the trait plumbing.
+    pub fn compute(si: &ScoreInputs) -> ScoreSet {
+        let mut set = ScoreSet::empty();
+        set.drf = drf::shares(si);
+        set.tsf = tsf::shares(si);
+        set.psdsf = psdsf::scores(si);
+        set.rpsdsf = rpsdsf::scores(si);
+
+        // best-fit ratio + feasibility share the residual matrix
+        let res = rpsdsf::residuals(si);
+        for n in 0..si.n {
+            let has_demand = (0..si.r).any(|r| si.rmask[r] > 0.5 && si.d[n][r] > 0.0);
+            for i in 0..si.m {
+                let feasible = si.fmask[n] > 0.5
+                    && si.smask[i] > 0.5
+                    && has_demand
+                    && (0..si.r).all(|r| {
+                        si.rmask[r] < 0.5 || res[i][r] + 1e-4 >= si.d[n][r]
+                    });
+                set.feas[n][i] = feasible;
+                let ratio = rpsdsf::residual_ratio(si, &res, n, i);
+                set.fit[n][i] = if feasible && !is_big(ratio) { ratio } else { BIG };
+            }
+        }
+        set
+    }
+}
+
+impl Scorer for NativeScorer {
+    fn name(&self) -> &'static str {
+        "native"
+    }
+
+    fn score(&mut self, inputs: &ScoreInputs) -> Result<ScoreSet> {
+        Ok(NativeScorer::compute(inputs))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::cluster::{AgentPool, ServerType};
+    use crate::resources::ResVec;
+    use crate::scheduler::{AllocState, FrameworkEntry};
+
+    fn illustrative(x: &[(usize, usize, usize)]) -> AllocState {
+        let mut st = AllocState::new(AgentPool::new(&ServerType::illustrative()));
+        for d in [[5.0, 1.0], [1.0, 5.0]] {
+            st.add_framework(FrameworkEntry {
+                name: "f".into(),
+                demand: ResVec::new(&d),
+                weight: 1.0,
+                active: true,
+            });
+        }
+        for &(n, i, k) in x {
+            for _ in 0..k {
+                st.place_task(n, i).unwrap();
+            }
+        }
+        st
+    }
+
+    #[test]
+    fn all_tensors_consistent_on_paper_instance() {
+        let st = illustrative(&[(0, 0, 20), (0, 1, 2), (1, 1, 19)]); // BF-DRF end state
+        let set = NativeScorer::compute(&st.score_inputs());
+        // server1 residual (0, 10): nothing feasible there
+        assert!(!set.feas[0][0] && !set.feas[1][0]);
+        // server2 residual (1, 3): nothing feasible there either
+        assert!(!set.feas[0][1] && !set.feas[1][1]);
+        // global shares real
+        assert!(!crate::is_big(set.drf[0]) && !crate::is_big(set.drf[1]));
+    }
+
+    #[test]
+    fn fit_equals_rps_factor() {
+        // fit[n][i] * x_n / phi == rpsdsf[n][i] wherever both are finite
+        let st = illustrative(&[(0, 0, 3), (1, 1, 2)]);
+        let si = st.score_inputs();
+        let set = NativeScorer::compute(&si);
+        for n in 0..2 {
+            let xn = st.total_tasks(n);
+            for i in 0..2 {
+                if !crate::is_big(set.fit[n][i]) && !crate::is_big(set.rpsdsf[n][i]) {
+                    assert!((set.fit[n][i] * xn - set.rpsdsf[n][i]).abs() < 1e-9);
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn empty_cluster_all_zero_shares() {
+        let st = illustrative(&[]);
+        let set = NativeScorer::compute(&st.score_inputs());
+        assert_eq!(set.drf[0], 0.0);
+        assert_eq!(set.tsf[1], 0.0);
+        assert_eq!(set.psdsf[0][0], 0.0);
+        assert!(set.feas[0][0] && set.feas[1][1]);
+    }
+
+    #[test]
+    fn padding_slots_sentinel() {
+        let st = illustrative(&[]);
+        let set = NativeScorer::compute(&st.score_inputs());
+        for n in 2..crate::N_MAX {
+            assert!(crate::is_big(set.drf[n]));
+            for i in 0..crate::M_MAX {
+                assert!(crate::is_big(set.psdsf[n][i]));
+                assert!(!set.feas[n][i]);
+            }
+        }
+        for i in 2..crate::M_MAX {
+            assert!(crate::is_big(set.psdsf[0][i]));
+        }
+    }
+}

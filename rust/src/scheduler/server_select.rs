@@ -1,0 +1,176 @@
+//! Server(agent)-selection mechanisms.
+//!
+//! The paper separates *which framework* gets resources (the fairness
+//! criterion) from *which server's* resources are considered:
+//!
+//! * **RRR** — randomized round-robin: each round visits all candidate
+//!   agents in a freshly drawn random permutation (the Mesos default).
+//! * **Best-fit** — after DRF picks the framework, choose the feasible agent
+//!   whose residual "most closely matches" the demand vector ([11]); see
+//!   [`BestFitMetric`] for the exact metric + the ablations.
+//! * **Joint** — PS-DSF/rPS-DSF natively rank `(framework, server)` pairs,
+//!   so no separate mechanism is needed.
+//! * **Max-residual** — pick the agent with the largest remaining dominant
+//!   fraction (a "worst-fit" baseline used in the ablation bench).
+
+use crate::rng::Rng;
+use crate::scheduler::{ScoreInputs, ScoreSet};
+use crate::BIG;
+
+/// Exact metric used by best-fit server selection (DESIGN.md §6.1).
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Default)]
+pub enum BestFitMetric {
+    /// `max_r d_{n,r}/res_{i,r}` — demand-profile match (reproduces Table 1).
+    #[default]
+    ProfileRatio,
+    /// `Σ_r |res_{i,r} − d_{n,r}|` — classic L1 closeness (ablation).
+    L1,
+    /// Euclidean distance (ablation).
+    L2,
+}
+
+/// A freshly permuted visiting order over `candidates` — the paper's RRR.
+pub fn rrr_order(candidates: &[usize], rng: &mut Rng) -> Vec<usize> {
+    let mut order = candidates.to_vec();
+    rng.shuffle(&mut order);
+    order
+}
+
+/// Best-fit agent for framework `n` among `candidates` (feasible only).
+/// Ties break toward the lower agent id, matching the kernel's argmin.
+pub fn best_fit(
+    si: &ScoreInputs,
+    set: &ScoreSet,
+    metric: BestFitMetric,
+    n: usize,
+    candidates: &[usize],
+) -> Option<usize> {
+    let res = crate::scheduler::rpsdsf::residuals(si);
+    let mut best: Option<(f64, usize)> = None;
+    for &i in candidates {
+        if !set.feas[n][i] {
+            continue;
+        }
+        let score = match metric {
+            BestFitMetric::ProfileRatio => set.fit[n][i],
+            BestFitMetric::L1 => (0..si.r)
+                .filter(|r| si.rmask[*r] > 0.5)
+                .map(|r| (res[i][r] - si.d[n][r]).abs())
+                .sum(),
+            BestFitMetric::L2 => (0..si.r)
+                .filter(|r| si.rmask[*r] > 0.5)
+                .map(|r| (res[i][r] - si.d[n][r]) * (res[i][r] - si.d[n][r]))
+                .sum::<f64>()
+                .sqrt(),
+        };
+        if score >= BIG {
+            continue;
+        }
+        match best {
+            Some((b, bi)) if (score, i) >= (b, bi) => {}
+            _ => best = Some((score, i)),
+        }
+    }
+    best.map(|(_, i)| i)
+}
+
+/// Worst-fit baseline: the feasible agent maximizing how many further tasks
+/// of `n` it could host (i.e. minimizing nothing — the ablation's strawman).
+pub fn max_residual(set: &ScoreSet, n: usize, candidates: &[usize]) -> Option<usize> {
+    let mut best: Option<(f64, usize)> = None;
+    for &i in candidates {
+        if !set.feas[n][i] || set.fit[n][i] >= BIG {
+            continue;
+        }
+        // larger hostable count == smaller fit ratio; invert the comparison
+        let score = -1.0 / set.fit[n][i].max(1e-30);
+        match best {
+            Some((b, _)) if score >= b => {}
+            _ => best = Some((score, i)),
+        }
+    }
+    best.map(|(_, i)| i)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::cluster::{AgentPool, ServerType};
+    use crate::resources::ResVec;
+    use crate::scheduler::{AllocState, FrameworkEntry, NativeScorer};
+
+    fn setup() -> (ScoreInputs, ScoreSet) {
+        let mut st = AllocState::new(AgentPool::new(&ServerType::illustrative()));
+        for d in [[5.0, 1.0], [1.0, 5.0]] {
+            st.add_framework(FrameworkEntry {
+                name: "f".into(),
+                demand: ResVec::new(&d),
+                weight: 1.0,
+                active: true,
+            });
+        }
+        let si = st.score_inputs();
+        let set = NativeScorer::compute(&si);
+        (si, set)
+    }
+
+    #[test]
+    fn profile_ratio_sends_f1_to_cpu_server() {
+        let (si, set) = setup();
+        assert_eq!(best_fit(&si, &set, BestFitMetric::ProfileRatio, 0, &[0, 1]), Some(0));
+        assert_eq!(best_fit(&si, &set, BestFitMetric::ProfileRatio, 1, &[0, 1]), Some(1));
+    }
+
+    #[test]
+    fn l1_metric_differs_from_profile() {
+        // On the empty illustrative instance the L1 distances are tied (124
+        // both) so L1 picks agent 0 for both frameworks — the wrong call for
+        // f2, which is exactly why ProfileRatio is the default.
+        let (si, set) = setup();
+        assert_eq!(best_fit(&si, &set, BestFitMetric::L1, 1, &[0, 1]), Some(0));
+    }
+
+    #[test]
+    fn candidates_restrict_choice() {
+        let (si, set) = setup();
+        assert_eq!(best_fit(&si, &set, BestFitMetric::ProfileRatio, 0, &[1]), Some(1));
+        assert_eq!(best_fit(&si, &set, BestFitMetric::ProfileRatio, 0, &[]), None);
+    }
+
+    #[test]
+    fn infeasible_candidates_skipped() {
+        let mut st = AllocState::new(AgentPool::new(&ServerType::illustrative()));
+        st.add_framework(FrameworkEntry {
+            name: "f".into(),
+            demand: ResVec::new(&[5.0, 1.0]),
+            weight: 1.0,
+            active: true,
+        });
+        // exhaust server 1 cpu
+        for _ in 0..20 {
+            st.place_task(0, 0).unwrap();
+        }
+        let si = st.score_inputs();
+        let set = NativeScorer::compute(&si);
+        assert_eq!(best_fit(&si, &set, BestFitMetric::ProfileRatio, 0, &[0, 1]), Some(1));
+    }
+
+    #[test]
+    fn rrr_is_permutation_of_candidates() {
+        let mut rng = crate::rng::Rng::new(1);
+        let cands = vec![2usize, 4, 5];
+        let order = rrr_order(&cands, &mut rng);
+        let mut sorted = order.clone();
+        sorted.sort_unstable();
+        assert_eq!(sorted, cands);
+    }
+
+    #[test]
+    fn max_residual_picks_roomiest() {
+        let (si, set) = setup();
+        // f1 can host 20 future tasks on s1 vs 6 on s2 -> max_residual = s1
+        let _ = si;
+        assert_eq!(max_residual(&set, 0, &[0, 1]), Some(0));
+        assert_eq!(max_residual(&set, 1, &[0, 1]), Some(1));
+    }
+}

@@ -1,0 +1,136 @@
+//! Task Share Fairness (TSF).
+//!
+//! Wang, Li, Liang & Li (Supercomputing'16, ref [10]): the share of a
+//! framework is the fraction of the tasks it *could* run were the whole
+//! cluster dedicated to it:
+//!
+//! ```text
+//! share_n = x_n / (φ_n · N*_n),   N*_n = Σ_i min_r ⌊c_{i,r} / d_{n,r}⌋
+//! ```
+//!
+//! With integer tasking (the paper's §2 study) `N*_n` counts whole tasks per
+//! server. Progressive filling equalizes task shares; on the illustrative
+//! example `N*_1 = N*_2 = 26` so TSF behaves nearly identically to DRF
+//! (Tables 1–4 show matching allocations and waste).
+
+use crate::scheduler::ScoreInputs;
+use crate::{BIG, N_MAX};
+
+/// `N*_n`: max whole tasks of `n` the registered cluster could host alone.
+pub fn nstar(si: &ScoreInputs, n: usize) -> f64 {
+    let mut total = 0.0f64;
+    for i in 0..si.m {
+        if si.smask[i] < 0.5 {
+            continue;
+        }
+        let mut per_server: Option<f64> = None;
+        for r in 0..si.r {
+            if si.rmask[r] > 0.5 && si.d[n][r] > 0.0 {
+                let k = ((si.c[i][r] + 1e-9) / si.d[n][r]).floor().max(0.0);
+                per_server = Some(per_server.map_or(k, |b: f64| b.min(k)));
+            }
+        }
+        total += per_server.unwrap_or(0.0);
+    }
+    total
+}
+
+/// Task share of framework `n` (BIG for padding/inactive/zero-demand slots).
+pub fn task_share(si: &ScoreInputs, n: usize) -> f64 {
+    if si.fmask[n] < 0.5 {
+        return BIG;
+    }
+    let has_demand = (0..si.r).any(|r| si.rmask[r] > 0.5 && si.d[n][r] > 0.0);
+    if !has_demand {
+        return BIG;
+    }
+    let ns = nstar(si, n);
+    if ns <= 0.0 {
+        return BIG;
+    }
+    let xn = crate::scheduler::role_total(si, n);
+    xn / (si.phi[n] * ns)
+}
+
+/// All task shares.
+pub fn shares(si: &ScoreInputs) -> [f64; N_MAX] {
+    let mut out = [BIG; N_MAX];
+    for (n, o) in out.iter_mut().enumerate().take(si.n) {
+        *o = task_share(si, n);
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::cluster::{AgentPool, ServerType};
+    use crate::resources::ResVec;
+    use crate::scheduler::{AllocState, FrameworkEntry};
+
+    fn illustrative() -> AllocState {
+        let mut st = AllocState::new(AgentPool::new(&ServerType::illustrative()));
+        for d in [[5.0, 1.0], [1.0, 5.0]] {
+            st.add_framework(FrameworkEntry {
+                name: "f".into(),
+                demand: ResVec::new(&d),
+                weight: 1.0,
+                active: true,
+            });
+        }
+        st
+    }
+
+    #[test]
+    fn nstar_paper_value() {
+        let st = illustrative();
+        let si = st.score_inputs();
+        // f1: min(100/5, 30/1) + min(30/5, 100/1) = 20 + 6 = 26
+        assert_eq!(nstar(&si, 0), 26.0);
+        assert_eq!(nstar(&si, 1), 26.0);
+    }
+
+    #[test]
+    fn share_scales_with_tasks() {
+        let mut st = illustrative();
+        for _ in 0..13 {
+            st.place_task(0, 0).unwrap();
+        }
+        let s = shares(&st.score_inputs());
+        assert!((s[0] - 0.5).abs() < 1e-12);
+        assert_eq!(s[1], 0.0);
+    }
+
+    #[test]
+    fn floor_matters() {
+        // c = (10, 10), d = (3, 3): floor(10/3) = 3, not 3.33
+        let mut st = AllocState::new(AgentPool::new(&[ServerType::new(
+            "s",
+            ResVec::new(&[10.0, 10.0]),
+        )]));
+        st.add_framework(FrameworkEntry {
+            name: "f".into(),
+            demand: ResVec::new(&[3.0, 3.0]),
+            weight: 1.0,
+            active: true,
+        });
+        assert_eq!(nstar(&st.score_inputs(), 0), 3.0);
+    }
+
+    #[test]
+    fn impossible_framework_big() {
+        // demands exceed every server -> N* = 0 -> BIG share
+        let mut st = AllocState::new(AgentPool::new(&[ServerType::new(
+            "s",
+            ResVec::new(&[2.0, 2.0]),
+        )]));
+        st.add_framework(FrameworkEntry {
+            name: "f".into(),
+            demand: ResVec::new(&[5.0, 5.0]),
+            weight: 1.0,
+            active: true,
+        });
+        let s = shares(&st.score_inputs());
+        assert!(crate::is_big(s[0]));
+    }
+}

@@ -1,0 +1,149 @@
+//! The event queue: a time-ordered heap with deterministic tie-breaking.
+
+use crate::sim::events::EventKind;
+use std::cmp::Ordering;
+use std::collections::BinaryHeap;
+
+/// A scheduled event.
+#[derive(Debug, Clone)]
+pub struct Event {
+    pub time: f64,
+    /// Monotonic sequence number — the final tie-breaker, so insertion order
+    /// decides among otherwise-identical events and runs replay exactly.
+    pub seq: u64,
+    pub kind: EventKind,
+}
+
+impl PartialEq for Event {
+    fn eq(&self, other: &Self) -> bool {
+        self.cmp(other) == Ordering::Equal
+    }
+}
+impl Eq for Event {}
+
+impl PartialOrd for Event {
+    fn partial_cmp(&self, other: &Self) -> Option<Ordering> {
+        Some(self.cmp(other))
+    }
+}
+
+impl Ord for Event {
+    fn cmp(&self, other: &Self) -> Ordering {
+        // BinaryHeap is a max-heap; invert for earliest-first.
+        other
+            .time
+            .partial_cmp(&self.time)
+            .unwrap_or(Ordering::Equal)
+            .then_with(|| other.kind.class_order().cmp(&self.kind.class_order()))
+            .then_with(|| other.seq.cmp(&self.seq))
+    }
+}
+
+/// Deterministic discrete-event queue.
+#[derive(Debug, Default)]
+pub struct EventQueue {
+    heap: BinaryHeap<Event>,
+    seq: u64,
+    now: f64,
+}
+
+impl EventQueue {
+    pub fn new() -> Self {
+        EventQueue::default()
+    }
+
+    /// Current simulation time (the time of the last popped event).
+    pub fn now(&self) -> f64 {
+        self.now
+    }
+
+    pub fn len(&self) -> usize {
+        self.heap.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.heap.is_empty()
+    }
+
+    /// Schedule `kind` at absolute time `t` (clamped to now — no past events).
+    pub fn schedule(&mut self, t: f64, kind: EventKind) {
+        let t = t.max(self.now);
+        self.seq += 1;
+        self.heap.push(Event { time: t, seq: self.seq, kind });
+    }
+
+    /// Schedule `kind` after a delay.
+    pub fn schedule_in(&mut self, dt: f64, kind: EventKind) {
+        debug_assert!(dt >= 0.0);
+        self.schedule(self.now + dt, kind);
+    }
+
+    /// Pop the earliest event, advancing the clock.
+    pub fn pop(&mut self) -> Option<Event> {
+        let ev = self.heap.pop()?;
+        debug_assert!(ev.time >= self.now, "time went backwards");
+        self.now = ev.time;
+        Some(ev)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn pops_in_time_order() {
+        let mut q = EventQueue::new();
+        q.schedule(5.0, EventKind::Sample);
+        q.schedule(1.0, EventKind::Sample);
+        q.schedule(3.0, EventKind::Sample);
+        let times: Vec<f64> = std::iter::from_fn(|| q.pop().map(|e| e.time)).collect();
+        assert_eq!(times, vec![1.0, 3.0, 5.0]);
+    }
+
+    #[test]
+    fn clock_advances() {
+        let mut q = EventQueue::new();
+        q.schedule(2.0, EventKind::Sample);
+        assert_eq!(q.now(), 0.0);
+        q.pop();
+        assert_eq!(q.now(), 2.0);
+        q.schedule_in(1.5, EventKind::Sample);
+        q.pop();
+        assert_eq!(q.now(), 3.5);
+    }
+
+    #[test]
+    fn simultaneous_events_class_ordered() {
+        let mut q = EventQueue::new();
+        q.schedule(1.0, EventKind::Sample);
+        q.schedule(1.0, EventKind::TaskFinish { job: 0, exec: 0, task: 0, attempt: 0, duration: 1.0 });
+        q.schedule(1.0, EventKind::JobArrival { queue: 0 });
+        q.schedule(1.0, EventKind::AgentUp { agent: 0 });
+        q.schedule(1.0, EventKind::Allocate);
+        let kinds: Vec<u8> =
+            std::iter::from_fn(|| q.pop().map(|e| e.kind.class_order())).collect();
+        assert_eq!(kinds, vec![0, 2, 3, 4, 5]);
+    }
+
+    #[test]
+    fn same_class_fifo_by_seq() {
+        let mut q = EventQueue::new();
+        q.schedule(1.0, EventKind::JobArrival { queue: 7 });
+        q.schedule(1.0, EventKind::JobArrival { queue: 9 });
+        match q.pop().unwrap().kind {
+            EventKind::JobArrival { queue } => assert_eq!(queue, 7),
+            _ => panic!(),
+        }
+    }
+
+    #[test]
+    fn no_past_scheduling() {
+        let mut q = EventQueue::new();
+        q.schedule(10.0, EventKind::Sample);
+        q.pop();
+        q.schedule(5.0, EventKind::Sample); // clamped to now = 10
+        let e = q.pop().unwrap();
+        assert_eq!(e.time, 10.0);
+    }
+}

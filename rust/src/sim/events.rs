@@ -1,0 +1,49 @@
+//! Event vocabulary of the online simulation.
+
+use crate::cluster::AgentId;
+use crate::resources::ResVec;
+
+/// Identifier of a Spark job within a run.
+pub type JobId = usize;
+/// Identifier of an executor within a run.
+pub type ExecutorId = usize;
+/// Identifier of a task within its job.
+pub type TaskId = usize;
+
+/// What can happen in the online cluster.
+#[derive(Debug, Clone, PartialEq)]
+pub enum EventKind {
+    /// A submission queue submits its next job.
+    JobArrival { queue: usize },
+    /// A task attempt finishes on an executor. `duration` is the attempt's
+    /// sampled service time (recorded for the driver's speculation median).
+    TaskFinish { job: JobId, exec: ExecutorId, task: TaskId, attempt: u32, duration: f64 },
+    /// A completed job's executor resources reach the allocator (possibly
+    /// staggered after completion — §3.5.3's observation).
+    Release { framework: usize, agent: AgentId, amount: ResVec, count: f64 },
+    /// An agent registers with the master (Fig 9 staged registration).
+    AgentUp { agent: AgentId },
+    /// Deferred allocation cycle — Mesos batches allocation on an interval
+    /// timer (`--allocation_interval`, default 1s), which pools the releases
+    /// of a completing job so the allocator chooses among *all* freed
+    /// resources (§3.1's "scheduled as a pool").
+    Allocate,
+    /// Periodic utilization sampling tick.
+    Sample,
+}
+
+impl EventKind {
+    /// Stable ordering tag so simultaneous events process in a deterministic,
+    /// sensible order: releases and registrations land before new arrivals,
+    /// arrivals before task finishes, sampling last.
+    pub fn class_order(&self) -> u8 {
+        match self {
+            EventKind::AgentUp { .. } => 0,
+            EventKind::Release { .. } => 1,
+            EventKind::JobArrival { .. } => 2,
+            EventKind::Allocate => 3,
+            EventKind::TaskFinish { .. } => 4,
+            EventKind::Sample => 5,
+        }
+    }
+}

@@ -1,0 +1,17 @@
+//! Discrete-event simulation substrate.
+//!
+//! The paper's online experiments ran wall-clock hours on AWS; we replay the
+//! same dynamics deterministically: an event queue drives the Mesos master
+//! ([`crate::mesos`]) and the Spark jobs ([`crate::spark`]), while a trace
+//! recorder samples the allocated CPU/memory fractions Figures 3–9 plot.
+
+pub mod engine;
+pub mod events;
+pub mod online;
+pub mod runner;
+pub mod trace;
+
+pub use engine::EventQueue;
+pub use events::EventKind;
+pub use online::{OnlineConfig, OnlineResult, OnlineSim, QueueSpec};
+pub use trace::TraceRecorder;

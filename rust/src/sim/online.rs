@@ -1,0 +1,604 @@
+//! The online experiment: Spark job batches on a Mesos-like cluster —
+//! the machinery behind Figures 3–9.
+//!
+//! Wiring: submission queues register frameworks with the [`Master`]; the
+//! allocator grants executors (fine- or coarse-grained per
+//! [`AllocatorMode`]); executors pull microtasks from their job's driver;
+//! task finishes free slots and eventually complete jobs, whose executor
+//! resources are released back (possibly staggered — §3.5.3) and trigger
+//! new allocation cycles; a sampler records the allocated CPU/mem fractions
+//! the figures plot.
+
+use crate::cluster::{ReleaseMode, ServerType};
+use crate::error::Result;
+use crate::mesos::allocator::{AllocatorMode, Grant};
+use crate::mesos::master::Master;
+use crate::mesos::offer::Offer;
+use crate::mesos::OfferHandler;
+use crate::resources::ResVec;
+use crate::rng::Rng;
+use crate::scheduler::{policy_by_name, NativeScorer, Scorer};
+use crate::sim::engine::EventQueue;
+use crate::sim::events::{EventKind, JobId};
+use crate::sim::trace::TraceRecorder;
+use crate::spark::driver::{fill_executor, Dispatch, SpeculationCfg};
+use crate::spark::executor::Executor;
+use crate::spark::job::SparkJob;
+use crate::spark::queue::SubmissionQueue;
+use crate::spark::workload::{WorkloadKind, WorkloadSpec};
+use std::collections::HashMap;
+
+/// One submission queue's configuration.
+#[derive(Debug, Clone)]
+pub struct QueueSpec {
+    pub workload: WorkloadSpec,
+    pub jobs: usize,
+}
+
+/// Full configuration of an online run.
+#[derive(Debug, Clone)]
+pub struct OnlineConfig {
+    pub cluster: Vec<ServerType>,
+    /// Register agents one-by-one (Fig 9) instead of all up-front.
+    pub staged: bool,
+    /// Seconds between staged registrations.
+    pub stage_interval: f64,
+    pub queues: Vec<QueueSpec>,
+    /// Scheduler registry name ("drf", "psdsf", …).
+    pub policy: String,
+    pub mode: AllocatorMode,
+    pub seed: u64,
+    /// Utilization sampling period (seconds).
+    pub sample_dt: f64,
+    /// Max staggering of per-executor releases after job completion.
+    pub release_jitter: f64,
+    /// Mesos' allocation batching interval (`--allocation_interval`):
+    /// state changes schedule one deferred allocation cycle this many
+    /// seconds later, pooling a completing job's releases.
+    pub allocation_interval: f64,
+    /// §3.1: released agents handled as a *pool* (batched cycle, agent
+    /// selection matters — default) or *sequentially* (each release triggers
+    /// its own immediate cycle, so the freed agent is effectively the only
+    /// candidate).
+    pub release_mode: ReleaseMode,
+    pub speculation: SpeculationCfg,
+    /// Safety cutoff (simulated seconds).
+    pub max_sim_time: f64,
+}
+
+impl OnlineConfig {
+    /// The paper's §3.3 set-up: 6 heterogeneous agents, two groups × five
+    /// queues × `jobs_per_queue` jobs.
+    pub fn paper(policy: &str, mode: AllocatorMode, jobs_per_queue: usize) -> Self {
+        let mut queues = Vec::new();
+        for _ in 0..5 {
+            queues.push(QueueSpec { workload: WorkloadSpec::pi(), jobs: jobs_per_queue });
+        }
+        for _ in 0..5 {
+            queues.push(QueueSpec { workload: WorkloadSpec::wordcount(), jobs: jobs_per_queue });
+        }
+        OnlineConfig {
+            cluster: ServerType::paper_heterogeneous(),
+            staged: false,
+            stage_interval: 60.0,
+            queues,
+            policy: policy.to_string(),
+            mode,
+            seed: 0x5EED,
+            sample_dt: 5.0,
+            release_jitter: 0.5,
+            allocation_interval: 1.0,
+            release_mode: ReleaseMode::Pool,
+            speculation: SpeculationCfg::default(),
+            max_sim_time: 1e7,
+        }
+    }
+
+    /// §3.6's homogeneous cluster variant.
+    pub fn paper_homogeneous(policy: &str, mode: AllocatorMode, jobs_per_queue: usize) -> Self {
+        let mut cfg = OnlineConfig::paper(policy, mode, jobs_per_queue);
+        cfg.cluster = ServerType::paper_homogeneous();
+        cfg
+    }
+
+    /// §3.7 / Fig 9: three agents (one per type) registered one by one,
+    /// 5 queues × 20 jobs per group.
+    pub fn paper_staged(policy: &str, jobs_per_queue: usize) -> Self {
+        let mut cfg = OnlineConfig::paper(policy, AllocatorMode::Characterized, jobs_per_queue);
+        cfg.cluster = ServerType::paper_staged();
+        cfg.staged = true;
+        cfg
+    }
+
+    /// A small fast configuration for tests.
+    pub fn small(policy: &str, mode: AllocatorMode) -> Self {
+        let mut cfg = OnlineConfig::paper(policy, mode, 2);
+        for q in &mut cfg.queues {
+            q.workload.tasks_per_job = 8;
+            q.workload.max_executors = 4;
+        }
+        cfg.queues.truncate(4); // 2 Pi + … keep two of each group
+        cfg.queues.remove(2);
+        cfg.queues.push(QueueSpec {
+            workload: {
+                let mut w = WorkloadSpec::wordcount();
+                w.tasks_per_job = 8;
+                w.max_executors = 4;
+                w
+            },
+            jobs: 2,
+        });
+        cfg
+    }
+}
+
+/// Hook for running real task compute through the PJRT runtime (the e2e
+/// example); the figure sweeps use [`NoCompute`].
+pub trait TaskCompute {
+    /// Execute the body of one finished task attempt.
+    fn run_task(&mut self, kind: WorkloadKind, seed: u64) -> Result<()>;
+}
+
+/// Default no-op compute.
+pub struct NoCompute;
+
+impl TaskCompute for NoCompute {
+    fn run_task(&mut self, _kind: WorkloadKind, _seed: u64) -> Result<()> {
+        Ok(())
+    }
+}
+
+/// Aggregated outcome of one online run.
+#[derive(Debug, Clone)]
+pub struct OnlineResult {
+    pub label: String,
+    /// Time the last job finished.
+    pub makespan: f64,
+    pub jobs_completed: usize,
+    pub trace: TraceRecorder,
+    pub mean_cpu: f64,
+    pub mean_mem: f64,
+    pub std_cpu: f64,
+    pub std_mem: f64,
+    /// Last finish time per submission group.
+    pub group_finish: Vec<(String, f64)>,
+    /// Allocator cycles run / grants issued (perf accounting).
+    pub cycles: u64,
+    pub grants: u64,
+    /// Tasks executed (incl. speculative winners only).
+    pub tasks_done: usize,
+}
+
+/// The online simulator.
+pub struct OnlineSim {
+    cfg: OnlineConfig,
+    master: Master,
+    events: EventQueue,
+    rng: Rng,
+    queues: Vec<SubmissionQueue>,
+    jobs: Vec<SparkJob>,
+    executors: Vec<Executor>,
+    fw_to_job: HashMap<usize, JobId>,
+    done_durations: Vec<Vec<f64>>,
+    trace: TraceRecorder,
+    group_finish: HashMap<&'static str, f64>,
+    tasks_done: usize,
+    /// An Allocate event is already queued (coalesces triggers).
+    alloc_pending: bool,
+}
+
+impl OnlineSim {
+    pub fn new(cfg: OnlineConfig) -> Result<Self> {
+        Self::with_scorer(cfg, Box::new(NativeScorer::new()))
+    }
+
+    /// Build with an explicit scoring backend (`--scorer hlo` uses the
+    /// PJRT-backed one).
+    pub fn with_scorer(cfg: OnlineConfig, scorer: Box<dyn Scorer>) -> Result<Self> {
+        let policy = policy_by_name(&cfg.policy)?;
+        let pool = if cfg.staged {
+            crate::cluster::AgentPool::new_staged(&cfg.cluster)
+        } else {
+            crate::cluster::AgentPool::new(&cfg.cluster)
+        };
+        let master = Master::new(pool, policy, cfg.mode, scorer);
+        let label = format!("{}/{}", cfg.policy, cfg.mode.label());
+        let queues = cfg
+            .queues
+            .iter()
+            .enumerate()
+            .map(|(i, q)| SubmissionQueue::new(i, q.workload.clone(), q.jobs))
+            .collect();
+        let rng = Rng::new(cfg.seed);
+        Ok(OnlineSim {
+            master,
+            events: EventQueue::new(),
+            rng,
+            queues,
+            jobs: Vec::new(),
+            executors: Vec::new(),
+            fw_to_job: HashMap::new(),
+            done_durations: Vec::new(),
+            trace: TraceRecorder::new(&label),
+            group_finish: HashMap::new(),
+            tasks_done: 0,
+            alloc_pending: false,
+            cfg,
+        })
+    }
+
+    /// Override the oblivious demand-inference rule (ablation bench).
+    pub fn set_inference_rule(&mut self, rule: crate::mesos::framework::InferenceRule) {
+        self.master.set_inference_rule(rule);
+    }
+
+    /// Run to completion with no real compute.
+    pub fn run(self) -> Result<OnlineResult> {
+        let mut none = NoCompute;
+        self.run_with_compute(&mut none)
+    }
+
+    /// Run to completion, invoking `compute` for every winning task attempt.
+    pub fn run_with_compute(mut self, compute: &mut dyn TaskCompute) -> Result<OnlineResult> {
+        // bootstrap: agents, first submissions, sampler
+        if self.cfg.staged {
+            for (k, _) in self.cfg.cluster.iter().enumerate() {
+                self.events
+                    .schedule(k as f64 * self.cfg.stage_interval, EventKind::AgentUp { agent: k });
+            }
+        }
+        for q in 0..self.queues.len() {
+            self.events.schedule(0.0, EventKind::JobArrival { queue: q });
+        }
+        self.events.schedule(0.0, EventKind::Sample);
+
+        while let Some(ev) = self.events.pop() {
+            if ev.time > self.cfg.max_sim_time {
+                break;
+            }
+            let now = ev.time;
+            match ev.kind {
+                EventKind::AgentUp { agent } => {
+                    self.master.agent_up(agent);
+                    self.request_allocation();
+                }
+                EventKind::JobArrival { queue } => self.on_job_arrival(queue, now)?,
+                EventKind::Allocate => {
+                    self.alloc_pending = false;
+                    self.allocate(now)?;
+                }
+                EventKind::TaskFinish { job, exec, task, attempt, duration } => {
+                    self.on_task_finish(job, exec, task, attempt, duration, now, compute)?;
+                }
+                EventKind::Release { framework, agent, amount, count } => {
+                    self.master.release(framework, agent, &amount, count)?;
+                    match self.cfg.release_mode {
+                        ReleaseMode::Pool => self.request_allocation(),
+                        // sequential: the allocator reacts to each release
+                        // immediately, before the rest of the job's
+                        // executors free up
+                        ReleaseMode::Sequential => self.allocate(now)?,
+                    }
+                }
+                EventKind::Sample => {
+                    self.trace.sample(now, &self.master.state.pool);
+                    if !self.finished() {
+                        self.events.schedule_in(self.cfg.sample_dt, EventKind::Sample);
+                    }
+                }
+            }
+            if self.finished() && self.events.is_empty() {
+                break;
+            }
+        }
+        // final sample after the last (possibly jittered) releases drained,
+        // so traces end at zero utilization
+        let t_end = self.events.now();
+        self.trace.sample(t_end, &self.master.state.pool);
+
+        let makespan = self
+            .jobs
+            .iter()
+            .filter_map(|j| j.finished_at)
+            .fold(0.0, f64::max);
+        let cpu_summary = self.trace.cpu.summary();
+        let mem_summary = self.trace.mem.summary();
+        let mut group_finish: Vec<(String, f64)> = self
+            .group_finish
+            .iter()
+            .map(|(k, v)| (k.to_string(), *v))
+            .collect();
+        group_finish.sort_by(|a, b| a.0.cmp(&b.0));
+        Ok(OnlineResult {
+            label: format!("{}/{}", self.cfg.policy, self.cfg.mode.label()),
+            makespan,
+            jobs_completed: self.trace.jobs_completed(),
+            mean_cpu: cpu_summary.mean,
+            mean_mem: mem_summary.mean,
+            std_cpu: cpu_summary.stddev,
+            std_mem: mem_summary.stddev,
+            group_finish,
+            cycles: self.master.cycles,
+            grants: self.master.total_grants,
+            tasks_done: self.tasks_done,
+            trace: self.trace,
+        })
+    }
+
+    fn finished(&self) -> bool {
+        self.queues.iter().all(|q| q.is_drained())
+            && self.jobs.iter().all(|j| j.is_finished())
+    }
+
+    fn on_job_arrival(&mut self, queue: usize, now: f64) -> Result<()> {
+        let Some(spec) = self.queues[queue].next_job() else { return Ok(()) };
+        let job_id = self.jobs.len();
+        let name = format!("{}-q{}-j{}", spec.kind.label(), queue, job_id);
+        let declared = match self.cfg.mode {
+            AllocatorMode::Characterized => Some(spec.executor_demand),
+            AllocatorMode::Oblivious => None,
+        };
+        // the paper's submission groups are Mesos roles: shares aggregate per
+        // group (Pi = role 0, WordCount = role 1)
+        let role = match spec.kind {
+            WorkloadKind::Pi => 0,
+            WorkloadKind::WordCount => 1,
+        };
+        match self.master.register_framework_in_role(name, declared, 1.0, role) {
+            Ok(slot) => {
+                let job = SparkJob::new(job_id, queue, slot, spec, now);
+                self.jobs.push(job);
+                self.done_durations.push(Vec::new());
+                self.fw_to_job.insert(slot, job_id);
+                self.request_allocation();
+            }
+            Err(_) => {
+                // all framework slots busy (releases in flight): requeue the
+                // submission and retry shortly
+                self.queues[queue].requeue();
+                self.events.schedule_in(1.0, EventKind::JobArrival { queue });
+            }
+        }
+        Ok(())
+    }
+
+    /// Schedule a deferred allocation cycle (Mesos' allocation-interval
+    /// batching); multiple triggers within the window coalesce into one.
+    fn request_allocation(&mut self) {
+        if !self.alloc_pending {
+            self.alloc_pending = true;
+            self.events.schedule_in(self.cfg.allocation_interval, EventKind::Allocate);
+        }
+    }
+
+    /// Run an allocation cycle and materialize the grants into executors.
+    fn allocate(&mut self, now: f64) -> Result<()> {
+        let grants = {
+            let mut handler = SparkOfferHandler {
+                jobs: &mut self.jobs,
+                fw_to_job: &self.fw_to_job,
+            };
+            self.master.allocate(&mut handler, &mut self.rng)?
+        };
+        self.materialize(&grants, now)
+    }
+
+    fn materialize(&mut self, grants: &[Grant], now: f64) -> Result<()> {
+        for g in grants {
+            let job_id = *self.fw_to_job.get(&g.framework).expect("grant for unknown framework");
+            let count = g.count as usize;
+            let per_exec = g.amount.scaled(1.0 / g.count);
+            for _ in 0..count {
+                let exec_id = self.executors.len();
+                let job = &mut self.jobs[job_id];
+                let slots = job.spec.slots_per_executor;
+                let mut exec = Executor::new(exec_id, job_id, g.agent, per_exec, slots);
+                job.pending_executors = job.pending_executors.saturating_sub(1);
+                job.executors.push(exec_id);
+                let dispatches = fill_executor(
+                    job,
+                    &mut exec,
+                    now,
+                    &mut self.rng,
+                    self.cfg.speculation,
+                    &self.done_durations[job_id],
+                );
+                self.executors.push(exec);
+                self.schedule_dispatches(job_id, exec_id, &dispatches, now);
+            }
+        }
+        Ok(())
+    }
+
+    fn schedule_dispatches(&mut self, job: JobId, exec: usize, ds: &[Dispatch], now: f64) {
+        let _ = now;
+        for d in ds {
+            self.events.schedule_in(
+                d.duration,
+                EventKind::TaskFinish {
+                    job,
+                    exec,
+                    task: d.task,
+                    attempt: d.attempt,
+                    duration: d.duration,
+                },
+            );
+        }
+    }
+
+    #[allow(clippy::too_many_arguments)]
+    fn on_task_finish(
+        &mut self,
+        job_id: JobId,
+        exec_id: usize,
+        task: usize,
+        attempt: u32,
+        duration: f64,
+        now: f64,
+        compute: &mut dyn TaskCompute,
+    ) -> Result<()> {
+        self.executors[exec_id].vacate();
+        let won = self.jobs[job_id].tasks[task].finish_attempt(attempt, now);
+        if won {
+            self.tasks_done += 1;
+            self.done_durations[job_id].push(duration);
+            let kind = self.jobs[job_id].spec.kind;
+            compute.run_task(kind, (job_id as u64) << 20 | task as u64)?;
+            let job_done = self.jobs[job_id].mark_task_done(task, now);
+            if job_done {
+                self.complete_job(job_id, now)?;
+                return Ok(());
+            }
+        }
+        // keep this executor busy if the job still has work
+        if !self.jobs[job_id].is_finished() {
+            let job = &mut self.jobs[job_id];
+            let exec = &mut self.executors[exec_id];
+            let dispatches = fill_executor(
+                job,
+                exec,
+                now,
+                &mut self.rng,
+                self.cfg.speculation,
+                &self.done_durations[job_id],
+            );
+            self.schedule_dispatches(job_id, exec_id, &dispatches, now);
+        }
+        Ok(())
+    }
+
+    fn complete_job(&mut self, job_id: JobId, now: f64) -> Result<()> {
+        self.trace.job_completed(now);
+        let queue = self.jobs[job_id].queue;
+        let slot = self.jobs[job_id].framework;
+        let kind_label = self.jobs[job_id].spec.kind.label();
+        let entry = self.group_finish.entry(kind_label).or_insert(0.0);
+        *entry = entry.max(now);
+
+        // executors terminate with the job (§3.2); their resources reach the
+        // allocator staggered by up to release_jitter seconds (§3.5.3)
+        let exec_ids = self.jobs[job_id].executors.clone();
+        for eid in exec_ids {
+            let exec = &mut self.executors[eid];
+            exec.terminated = true;
+            let jitter = self.rng.f64() * self.cfg.release_jitter;
+            self.events.schedule_in(
+                jitter,
+                EventKind::Release {
+                    framework: slot,
+                    agent: exec.agent,
+                    amount: exec.demand,
+                    count: 1.0,
+                },
+            );
+        }
+        self.master.finish_framework(slot);
+        self.fw_to_job.remove(&slot);
+        // the queue submits its next job right away
+        self.events.schedule(now, EventKind::JobArrival { queue });
+        Ok(())
+    }
+}
+
+/// The Spark side of the offer protocol.
+struct SparkOfferHandler<'a> {
+    jobs: &'a mut Vec<SparkJob>,
+    fw_to_job: &'a HashMap<usize, JobId>,
+}
+
+impl OfferHandler for SparkOfferHandler<'_> {
+    fn wants(&self, framework: usize) -> bool {
+        self.fw_to_job
+            .get(&framework)
+            .map(|j| self.jobs[*j].executors_wanted() > 0)
+            .unwrap_or(false)
+    }
+
+    fn accept(&mut self, offer: &Offer) -> (f64, ResVec) {
+        let Some(&job_id) = self.fw_to_job.get(&offer.framework) else {
+            return (0.0, ResVec::zero(offer.resources.len()));
+        };
+        let job = &mut self.jobs[job_id];
+        let d = job.spec.executor_demand;
+        let fit = offer.executors_that_fit(&d) as usize;
+        let take = fit.min(job.executors_wanted());
+        if take == 0 {
+            return (0.0, ResVec::zero(offer.resources.len()));
+        }
+        job.pending_executors += take;
+        (take as f64, d.scaled(take as f64))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn run(policy: &str, mode: AllocatorMode, seed: u64) -> OnlineResult {
+        let mut cfg = OnlineConfig::small(policy, mode);
+        cfg.seed = seed;
+        OnlineSim::new(cfg).unwrap().run().unwrap()
+    }
+
+    #[test]
+    fn small_run_completes_all_jobs() {
+        let r = run("drf", AllocatorMode::Characterized, 1);
+        assert_eq!(r.jobs_completed, 8); // 4 queues x 2 jobs
+        assert!(r.makespan > 0.0);
+        assert!(r.tasks_done >= 8 * 8);
+        assert!(r.mean_cpu > 0.0 && r.mean_mem > 0.0);
+    }
+
+    #[test]
+    fn oblivious_mode_completes_too() {
+        let r = run("drf", AllocatorMode::Oblivious, 2);
+        assert_eq!(r.jobs_completed, 8);
+    }
+
+    #[test]
+    fn all_policies_complete_characterized() {
+        for p in crate::scheduler::POLICY_NAMES {
+            let r = run(p, AllocatorMode::Characterized, 3);
+            assert_eq!(r.jobs_completed, 8, "{p}");
+        }
+    }
+
+    #[test]
+    fn deterministic_given_seed() {
+        let a = run("psdsf", AllocatorMode::Characterized, 42);
+        let b = run("psdsf", AllocatorMode::Characterized, 42);
+        assert_eq!(a.makespan, b.makespan);
+        assert_eq!(a.grants, b.grants);
+        assert_eq!(a.trace.cpu.values(), b.trace.cpu.values());
+    }
+
+    #[test]
+    fn seeds_change_trajectories() {
+        let a = run("drf", AllocatorMode::Characterized, 1);
+        let b = run("drf", AllocatorMode::Characterized, 2);
+        assert!(a.makespan != b.makespan || a.trace.cpu.values() != b.trace.cpu.values());
+    }
+
+    #[test]
+    fn staged_registration_runs() {
+        let mut cfg = OnlineConfig::paper_staged("rpsdsf", 1);
+        for q in &mut cfg.queues {
+            q.workload.tasks_per_job = 6;
+            q.workload.max_executors = 3;
+        }
+        cfg.queues.truncate(4);
+        let r = OnlineSim::new(cfg).unwrap().run().unwrap();
+        assert_eq!(r.jobs_completed, 4);
+    }
+
+    #[test]
+    fn utilization_bounded() {
+        let r = run("rpsdsf", AllocatorMode::Characterized, 7);
+        for &v in r.trace.cpu.values() {
+            assert!((0.0..=1.0 + 1e-9).contains(&v));
+        }
+        for &v in r.trace.mem.values() {
+            assert!((0.0..=1.0 + 1e-9).contains(&v));
+        }
+    }
+}

@@ -1,0 +1,73 @@
+//! Trace recorder: samples the cluster-level allocated fractions the
+//! figures plot, plus job-completion marks.
+
+use crate::cluster::AgentPool;
+use crate::metrics::TimeSeries;
+
+/// Records the utilization time series of one online run.
+#[derive(Debug, Clone)]
+pub struct TraceRecorder {
+    /// Allocated CPU fraction over time (figures' left axis).
+    pub cpu: TimeSeries,
+    /// Allocated memory fraction over time.
+    pub mem: TimeSeries,
+    /// (time, jobs-completed-so-far) marks.
+    pub completions: Vec<(f64, usize)>,
+    completed: usize,
+}
+
+impl TraceRecorder {
+    pub fn new(label: &str) -> Self {
+        TraceRecorder {
+            cpu: TimeSeries::new(format!("{label} cpu")),
+            mem: TimeSeries::new(format!("{label} mem")),
+            completions: Vec::new(),
+            completed: 0,
+        }
+    }
+
+    /// Sample the pool's allocated fractions at time `t`.
+    pub fn sample(&mut self, t: f64, pool: &AgentPool) {
+        let u = pool.utilization();
+        self.cpu.push(t, u.first().copied().unwrap_or(0.0));
+        self.mem.push(t, u.get(1).copied().unwrap_or(0.0));
+    }
+
+    /// Record a job completion at time `t`.
+    pub fn job_completed(&mut self, t: f64) {
+        self.completed += 1;
+        self.completions.push((t, self.completed));
+    }
+
+    pub fn jobs_completed(&self) -> usize {
+        self.completed
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::cluster::{AgentPool, ServerType};
+    use crate::resources::ResVec;
+
+    #[test]
+    fn samples_pool_utilization() {
+        let mut pool = AgentPool::new(&ServerType::paper_homogeneous());
+        let mut tr = TraceRecorder::new("test");
+        tr.sample(0.0, &pool);
+        pool.reserve(0, &ResVec::cpu_mem(6.0, 11.0)).unwrap();
+        tr.sample(10.0, &pool);
+        assert_eq!(tr.cpu.values()[0], 0.0);
+        assert!((tr.cpu.values()[1] - 6.0 / 36.0).abs() < 1e-12);
+        assert!((tr.mem.values()[1] - 11.0 / 66.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn counts_completions() {
+        let mut tr = TraceRecorder::new("t");
+        tr.job_completed(1.0);
+        tr.job_completed(2.0);
+        assert_eq!(tr.jobs_completed(), 2);
+        assert_eq!(tr.completions, vec![(1.0, 1), (2.0, 2)]);
+    }
+}

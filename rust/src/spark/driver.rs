@@ -1,0 +1,165 @@
+//! The Spark driver's dispatch logic (§3.2's three classical techniques):
+//! microtasking, executors *pulling* work when underbooked, and speculative
+//! re-launch of stragglers at the program barrier.
+
+use crate::rng::Rng;
+use crate::sim::events::TaskId;
+use crate::spark::executor::Executor;
+use crate::spark::job::SparkJob;
+
+/// Speculative-execution knobs.
+#[derive(Debug, Clone, Copy)]
+pub struct SpeculationCfg {
+    pub enabled: bool,
+    /// A task straggles when it has run longer than `multiplier` × the
+    /// median completed-task duration (Spark's `speculation.multiplier`).
+    pub multiplier: f64,
+}
+
+impl Default for SpeculationCfg {
+    fn default() -> Self {
+        SpeculationCfg { enabled: true, multiplier: 3.0 }
+    }
+}
+
+/// A dispatch decision: run attempt `attempt` of `task` for `duration`.
+#[derive(Debug, Clone, PartialEq)]
+pub struct Dispatch {
+    pub task: TaskId,
+    pub attempt: u32,
+    pub duration: f64,
+}
+
+/// Fill `exec`'s free slots with work from `job` (pending tasks first, then
+/// speculative copies of stragglers once the pending queue is empty — i.e.
+/// near the barrier). Occupies slots and records attempts; the caller
+/// schedules the corresponding `TaskFinish` events.
+pub fn fill_executor(
+    job: &mut SparkJob,
+    exec: &mut Executor,
+    now: f64,
+    rng: &mut Rng,
+    spec_cfg: SpeculationCfg,
+    done_durations: &[f64],
+) -> Vec<Dispatch> {
+    debug_assert_eq!(exec.job, job.id);
+    let mut out = Vec::new();
+    while exec.free_slots() > 0 && !job.is_finished() {
+        if let Some(t) = job.pop_pending() {
+            let dur = job.spec.sample_duration(rng);
+            let attempt = job.tasks[t].start_attempt(exec.id, now, now + dur, false);
+            exec.occupy();
+            out.push(Dispatch { task: t, attempt, duration: dur });
+            continue;
+        }
+        // Barrier phase: pending queue dry. Speculate on a straggler if any.
+        if !spec_cfg.enabled {
+            break;
+        }
+        let Some(median) = job.median_done_duration(done_durations) else { break };
+        let threshold = spec_cfg.multiplier * median;
+        let straggler = (0..job.tasks.len())
+            .filter(|t| job.tasks[*t].is_straggling(now, threshold))
+            // relaunch the longest-running straggler first
+            .min_by(|a, b| {
+                let sa = job.tasks[*a].attempts[0].started;
+                let sb = job.tasks[*b].attempts[0].started;
+                sa.partial_cmp(&sb).unwrap()
+            });
+        let Some(t) = straggler else { break };
+        let dur = job.spec.sample_duration(rng);
+        let attempt = job.tasks[t].start_attempt(exec.id, now, now + dur, true);
+        exec.occupy();
+        out.push(Dispatch { task: t, attempt, duration: dur });
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::resources::ResVec;
+    use crate::spark::workload::WorkloadSpec;
+
+    fn mini_job(tasks: usize) -> SparkJob {
+        let mut spec = WorkloadSpec::pi();
+        spec.tasks_per_job = tasks;
+        spec.straggler_prob = 0.0;
+        SparkJob::new(0, 0, 0, spec, 0.0)
+    }
+
+    fn exec(slots: usize) -> Executor {
+        Executor::new(0, 0, 0, ResVec::cpu_mem(2.0, 2.0), slots)
+    }
+
+    #[test]
+    fn fills_all_slots_from_pending() {
+        let mut job = mini_job(5);
+        let mut e = exec(2);
+        let mut rng = Rng::new(1);
+        let d = fill_executor(&mut job, &mut e, 0.0, &mut rng, SpeculationCfg::default(), &[]);
+        assert_eq!(d.len(), 2);
+        assert_eq!(e.free_slots(), 0);
+        assert_eq!(job.pending_count(), 3);
+        assert!(job.tasks[0].is_running() && job.tasks[1].is_running());
+    }
+
+    #[test]
+    fn stops_when_no_work() {
+        let mut job = mini_job(1);
+        let mut e = exec(2);
+        let mut rng = Rng::new(2);
+        let d = fill_executor(&mut job, &mut e, 0.0, &mut rng, SpeculationCfg::default(), &[]);
+        assert_eq!(d.len(), 1);
+        assert_eq!(e.free_slots(), 1); // no speculation yet (no medians)
+    }
+
+    #[test]
+    fn speculates_on_straggler_at_barrier() {
+        let mut job = mini_job(3);
+        let mut e = exec(1);
+        let mut rng = Rng::new(3);
+        // run tasks 0..2 to done quickly, leave task 2 straggling
+        for t in 0..2 {
+            job.pop_pending();
+            let a = job.tasks[t].start_attempt(0, 0.0, 4.0, false);
+            job.tasks[t].finish_attempt(a, 4.0);
+            job.mark_task_done(t, 4.0);
+        }
+        job.pop_pending();
+        job.tasks[2].start_attempt(0, 0.0, 100.0, false); // the straggler
+        let done = [4.0, 4.0, 4.0, 4.0];
+        // at t=50 the straggler has run 50 > 3 * median(4) = 12
+        let d = fill_executor(&mut job, &mut e, 50.0, &mut rng, SpeculationCfg::default(), &done);
+        assert_eq!(d.len(), 1);
+        assert_eq!(d[0].task, 2);
+        assert_eq!(job.tasks[2].attempts.len(), 2);
+        assert!(job.tasks[2].attempts[1].speculative);
+    }
+
+    #[test]
+    fn speculation_disabled_idles() {
+        let mut job = mini_job(1);
+        let mut e = exec(1);
+        let mut rng = Rng::new(4);
+        job.pop_pending();
+        job.tasks[0].start_attempt(0, 0.0, 100.0, false);
+        let cfg = SpeculationCfg { enabled: false, multiplier: 3.0 };
+        let d = fill_executor(&mut job, &mut e, 50.0, &mut rng, cfg, &[4.0; 8]);
+        assert!(d.is_empty());
+    }
+
+    #[test]
+    fn no_duplicate_speculation() {
+        let mut job = mini_job(1);
+        let mut e = exec(2);
+        let mut rng = Rng::new(5);
+        job.pop_pending();
+        job.tasks[0].start_attempt(9, 0.0, 100.0, false);
+        let done = [4.0; 8];
+        let d = fill_executor(&mut job, &mut e, 50.0, &mut rng, SpeculationCfg::default(), &done);
+        // one speculative copy launched; second slot must NOT copy again
+        assert_eq!(d.len(), 1);
+        assert_eq!(e.free_slots(), 1);
+    }
+}

@@ -1,0 +1,92 @@
+//! Spark executors: one Mesos task each (coarse-grained mode, §3.2),
+//! residing in a container on an agent, running up to `slots` concurrent
+//! microtasks and pulling new work from the driver when a slot frees.
+
+use crate::cluster::AgentId;
+use crate::resources::ResVec;
+use crate::sim::events::{ExecutorId, JobId};
+
+/// One executor instance.
+#[derive(Debug, Clone)]
+pub struct Executor {
+    pub id: ExecutorId,
+    pub job: JobId,
+    pub agent: AgentId,
+    /// Resources this executor reserves on its agent.
+    pub demand: ResVec,
+    /// Concurrent task slots.
+    pub slots: usize,
+    /// Currently running attempts.
+    busy: usize,
+    /// Set when the job has completed and the executor is shutting down.
+    pub terminated: bool,
+}
+
+impl Executor {
+    pub fn new(id: ExecutorId, job: JobId, agent: AgentId, demand: ResVec, slots: usize) -> Self {
+        assert!(slots >= 1);
+        Executor { id, job, agent, demand, slots, busy: 0, terminated: false }
+    }
+
+    pub fn free_slots(&self) -> usize {
+        if self.terminated {
+            0
+        } else {
+            self.slots - self.busy
+        }
+    }
+
+    pub fn busy_slots(&self) -> usize {
+        self.busy
+    }
+
+    /// Occupy a slot for a task attempt.
+    pub fn occupy(&mut self) {
+        assert!(self.busy < self.slots, "executor {} has no free slot", self.id);
+        self.busy += 1;
+    }
+
+    /// Free a slot when an attempt's finish event fires.
+    pub fn vacate(&mut self) {
+        assert!(self.busy > 0, "executor {} has no busy slot", self.id);
+        self.busy -= 1;
+    }
+
+    pub fn is_idle(&self) -> bool {
+        self.busy == 0
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn slot_accounting() {
+        let mut e = Executor::new(0, 0, 2, ResVec::cpu_mem(2.0, 2.0), 2);
+        assert_eq!(e.free_slots(), 2);
+        e.occupy();
+        e.occupy();
+        assert_eq!(e.free_slots(), 0);
+        assert!(!e.is_idle());
+        e.vacate();
+        assert_eq!(e.free_slots(), 1);
+        e.vacate();
+        assert!(e.is_idle());
+    }
+
+    #[test]
+    #[should_panic]
+    fn over_occupy_panics() {
+        let mut e = Executor::new(0, 0, 0, ResVec::cpu_mem(1.0, 3.5), 1);
+        e.occupy();
+        e.occupy();
+    }
+
+    #[test]
+    fn terminated_executor_has_no_slots() {
+        let mut e = Executor::new(0, 0, 0, ResVec::cpu_mem(1.0, 3.5), 1);
+        e.terminated = true;
+        assert_eq!(e.free_slots(), 0);
+    }
+}

@@ -1,0 +1,182 @@
+//! A Spark job: a batch of microtasks behind a single program barrier
+//! (§3.2's typical configuration), owned by one Mesos framework.
+
+use crate::sim::events::{ExecutorId, JobId, TaskId};
+use crate::spark::task::{Task, TaskState};
+use crate::spark::workload::WorkloadSpec;
+
+/// Job lifecycle.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum JobState {
+    /// Submitted, still has work or running tasks.
+    Running,
+    /// All tasks done; executors released (or releasing).
+    Finished,
+}
+
+/// One Spark job instance.
+#[derive(Debug, Clone)]
+pub struct SparkJob {
+    pub id: JobId,
+    /// Submission queue that produced it.
+    pub queue: usize,
+    /// Framework slot in the master's [`crate::scheduler::AllocState`].
+    pub framework: usize,
+    pub spec: WorkloadSpec,
+    pub tasks: Vec<Task>,
+    /// Task ids not yet started (driver's pending queue, FIFO).
+    pending: Vec<TaskId>,
+    /// Executor ids currently held.
+    pub executors: Vec<ExecutorId>,
+    /// Executors granted in the current allocation cycle but not yet
+    /// materialized (keeps `executors_wanted` honest mid-cycle).
+    pub pending_executors: usize,
+    pub state: JobState,
+    pub submitted_at: f64,
+    pub finished_at: Option<f64>,
+    done_count: usize,
+}
+
+impl SparkJob {
+    pub fn new(id: JobId, queue: usize, framework: usize, spec: WorkloadSpec, now: f64) -> Self {
+        let n = spec.tasks_per_job;
+        SparkJob {
+            id,
+            queue,
+            framework,
+            spec,
+            tasks: (0..n).map(|_| Task::new()).collect(),
+            pending: (0..n).rev().collect(), // pop() yields task 0 first
+            executors: Vec::new(),
+            pending_executors: 0,
+            state: JobState::Running,
+            submitted_at: now,
+            finished_at: None,
+            done_count: 0,
+        }
+    }
+
+    /// Next pending task, if any.
+    pub fn pop_pending(&mut self) -> Option<TaskId> {
+        self.pending.pop()
+    }
+
+    pub fn pending_count(&self) -> usize {
+        self.pending.len()
+    }
+
+    pub fn done_count(&self) -> usize {
+        self.done_count
+    }
+
+    /// Record a winning attempt; returns `true` if the job just completed.
+    pub fn mark_task_done(&mut self, task: TaskId, now: f64) -> bool {
+        debug_assert!(matches!(self.tasks[task].state, TaskState::Done { .. }));
+        self.done_count += 1;
+        if self.done_count == self.tasks.len() {
+            self.state = JobState::Finished;
+            self.finished_at = Some(now);
+            true
+        } else {
+            false
+        }
+    }
+
+    pub fn is_finished(&self) -> bool {
+        self.state == JobState::Finished
+    }
+
+    /// How many *more* executors the driver would currently use: enough to
+    /// cover pending tasks at `slots_per_executor` each, capped by
+    /// `max_executors` ("the Spark driver will attempt to use as much of its
+    /// allocated resources as possible", §3.2).
+    pub fn executors_wanted(&self) -> usize {
+        if self.is_finished() {
+            return 0;
+        }
+        let needed = self
+            .pending
+            .len()
+            .div_ceil(self.spec.slots_per_executor)
+            .saturating_sub(self.pending_executors);
+        let cap = self
+            .spec
+            .max_executors
+            .saturating_sub(self.executors.len() + self.pending_executors);
+        needed.min(cap)
+    }
+
+    /// Median service time of completed tasks (the driver's speculation
+    /// baseline); `None` until enough samples exist.
+    pub fn median_done_duration(&self, durations: &[f64]) -> Option<f64> {
+        if durations.len() < 4 {
+            return None;
+        }
+        let mut d = durations.to_vec();
+        d.sort_by(|a, b| a.partial_cmp(b).unwrap());
+        Some(d[d.len() / 2])
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::spark::workload::WorkloadSpec;
+
+    fn job() -> SparkJob {
+        let mut spec = WorkloadSpec::pi();
+        spec.tasks_per_job = 4;
+        spec.max_executors = 3;
+        SparkJob::new(0, 0, 0, spec, 0.0)
+    }
+
+    #[test]
+    fn pending_fifo() {
+        let mut j = job();
+        assert_eq!(j.pop_pending(), Some(0));
+        assert_eq!(j.pop_pending(), Some(1));
+        assert_eq!(j.pending_count(), 2);
+    }
+
+    #[test]
+    fn completion_detection() {
+        let mut j = job();
+        for t in 0..4 {
+            j.pop_pending();
+            let a = j.tasks[t].start_attempt(0, 0.0, 1.0, false);
+            j.tasks[t].finish_attempt(a, 1.0);
+            let done = j.mark_task_done(t, 1.0);
+            assert_eq!(done, t == 3);
+        }
+        assert!(j.is_finished());
+        assert_eq!(j.finished_at, Some(1.0));
+        assert_eq!(j.executors_wanted(), 0);
+    }
+
+    #[test]
+    fn executors_wanted_respects_cap_and_slots() {
+        let mut j = job(); // 4 tasks, 2 slots/exec, cap 3
+        assert_eq!(j.executors_wanted(), 2); // ceil(4/2)
+        j.executors.push(0);
+        assert_eq!(j.executors_wanted(), 2); // cap 3, held 1, need 2 more
+        j.executors.push(1);
+        j.executors.push(2);
+        assert_eq!(j.executors_wanted(), 0); // at cap
+    }
+
+    #[test]
+    fn wanted_shrinks_with_pending() {
+        let mut j = job();
+        j.pop_pending();
+        j.pop_pending();
+        j.pop_pending();
+        assert_eq!(j.executors_wanted(), 1); // 1 pending, ceil(1/2) = 1
+    }
+
+    #[test]
+    fn median_requires_samples() {
+        let j = job();
+        assert_eq!(j.median_done_duration(&[1.0, 2.0]), None);
+        assert_eq!(j.median_done_duration(&[1.0, 2.0, 3.0, 10.0]), Some(3.0));
+    }
+}

@@ -1,0 +1,21 @@
+//! Spark-on-Mesos workload model (paper §3.2–§3.3).
+//!
+//! Each Spark job is a Mesos *framework*; its executors are Mesos *tasks*
+//! (coarse-grained mode), each residing in a container on some agent. Jobs
+//! divide into microtasks; executors pull tasks from the driver as slots
+//! free up; the driver speculatively relaunches stragglers near barriers.
+//! Executors hold their resources until the whole job completes (§3.2),
+//! which is what makes release dynamics bursty in oblivious mode (§3.5.3).
+
+pub mod driver;
+pub mod executor;
+pub mod job;
+pub mod queue;
+pub mod task;
+pub mod workload;
+
+pub use executor::Executor;
+pub use job::{JobState, SparkJob};
+pub use queue::SubmissionQueue;
+pub use task::{Task, TaskState};
+pub use workload::{WorkloadKind, WorkloadSpec};

@@ -1,0 +1,68 @@
+//! Submission queues (paper §3.3): each group ("role") has five queues; a
+//! queue submits its next job as soon as its previous one finishes, so up
+//! to ten jobs run concurrently and each queue drains fifty jobs.
+
+use crate::spark::workload::WorkloadSpec;
+
+/// One job-submission queue.
+#[derive(Debug, Clone)]
+pub struct SubmissionQueue {
+    pub id: usize,
+    /// The group/role it belongs to ("Pi", "WordCount").
+    pub spec: WorkloadSpec,
+    remaining: usize,
+    submitted: usize,
+}
+
+impl SubmissionQueue {
+    pub fn new(id: usize, spec: WorkloadSpec, jobs: usize) -> Self {
+        SubmissionQueue { id, spec, remaining: jobs, submitted: 0 }
+    }
+
+    /// Take the next job off the queue (None when drained).
+    pub fn next_job(&mut self) -> Option<WorkloadSpec> {
+        if self.remaining == 0 {
+            None
+        } else {
+            self.remaining -= 1;
+            self.submitted += 1;
+            Some(self.spec.clone())
+        }
+    }
+
+    /// Put a taken job back (master's framework slots were all busy; the
+    /// submission retries shortly).
+    pub fn requeue(&mut self) {
+        self.remaining += 1;
+        self.submitted -= 1;
+    }
+
+    pub fn remaining(&self) -> usize {
+        self.remaining
+    }
+
+    pub fn submitted(&self) -> usize {
+        self.submitted
+    }
+
+    pub fn is_drained(&self) -> bool {
+        self.remaining == 0
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn drains_exactly_n_jobs() {
+        let mut q = SubmissionQueue::new(0, WorkloadSpec::pi(), 3);
+        assert_eq!(q.remaining(), 3);
+        for _ in 0..3 {
+            assert!(q.next_job().is_some());
+        }
+        assert!(q.next_job().is_none());
+        assert!(q.is_drained());
+        assert_eq!(q.submitted(), 3);
+    }
+}

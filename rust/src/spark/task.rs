@@ -1,0 +1,137 @@
+//! Microtasks and their attempt lifecycle.
+//!
+//! A task may have several *attempts* (speculative execution, §3.2): the
+//! first attempt to finish wins; later finish events of losing attempts
+//! only free their executor slot.
+
+use crate::sim::events::ExecutorId;
+
+/// Lifecycle of one microtask.
+#[derive(Debug, Clone, PartialEq)]
+pub enum TaskState {
+    /// Waiting in the driver's queue.
+    Pending,
+    /// At least one attempt is running.
+    Running,
+    /// Finished (first attempt won at `finished`).
+    Done { finished: f64 },
+}
+
+/// One running attempt of a task.
+#[derive(Debug, Clone, PartialEq)]
+pub struct Attempt {
+    pub id: u32,
+    pub exec: ExecutorId,
+    pub started: f64,
+    /// Expected finish time (the scheduled TaskFinish event's time).
+    pub eta: f64,
+    pub speculative: bool,
+}
+
+/// One microtask of a Spark job.
+#[derive(Debug, Clone)]
+pub struct Task {
+    pub state: TaskState,
+    /// Live attempts (at most 2: original + one speculative copy).
+    pub attempts: Vec<Attempt>,
+    next_attempt: u32,
+}
+
+impl Default for Task {
+    fn default() -> Self {
+        Task::new()
+    }
+}
+
+impl Task {
+    pub fn new() -> Self {
+        Task { state: TaskState::Pending, attempts: Vec::new(), next_attempt: 0 }
+    }
+
+    /// Start a new attempt on `exec`; returns its attempt id.
+    pub fn start_attempt(&mut self, exec: ExecutorId, now: f64, eta: f64, speculative: bool) -> u32 {
+        debug_assert!(self.state != TaskState::Done { finished: 0.0 });
+        let id = self.next_attempt;
+        self.next_attempt += 1;
+        self.attempts.push(Attempt { id, exec, started: now, eta, speculative });
+        self.state = TaskState::Running;
+        id
+    }
+
+    /// Handle a finish event for `attempt`; returns `true` iff this attempt
+    /// *won* (i.e. the task transitions to Done now).
+    pub fn finish_attempt(&mut self, attempt: u32, now: f64) -> bool {
+        self.attempts.retain(|a| a.id != attempt);
+        match self.state {
+            TaskState::Done { .. } => false, // losing attempt of a done task
+            _ => {
+                self.state = TaskState::Done { finished: now };
+                true
+            }
+        }
+    }
+
+    pub fn is_done(&self) -> bool {
+        matches!(self.state, TaskState::Done { .. })
+    }
+
+    pub fn is_running(&self) -> bool {
+        matches!(self.state, TaskState::Running)
+    }
+
+    /// `true` iff the task runs a single non-speculative attempt that by
+    /// `now` has been running longer than `threshold` — the driver's
+    /// straggler test.
+    pub fn is_straggling(&self, now: f64, threshold: f64) -> bool {
+        self.is_running()
+            && self.attempts.len() == 1
+            && !self.attempts[0].speculative
+            && now - self.attempts[0].started > threshold
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn single_attempt_lifecycle() {
+        let mut t = Task::new();
+        assert_eq!(t.state, TaskState::Pending);
+        let a = t.start_attempt(3, 10.0, 14.0, false);
+        assert!(t.is_running());
+        assert!(t.finish_attempt(a, 14.0));
+        assert!(t.is_done());
+        assert!(t.attempts.is_empty());
+    }
+
+    #[test]
+    fn speculative_race_first_wins() {
+        let mut t = Task::new();
+        let a0 = t.start_attempt(0, 0.0, 30.0, false);
+        let a1 = t.start_attempt(1, 10.0, 15.0, true);
+        // the speculative copy lands first and wins
+        assert!(t.finish_attempt(a1, 15.0));
+        assert!(t.is_done());
+        // the original straggler arrives later and loses
+        assert!(!t.finish_attempt(a0, 30.0));
+        assert!(t.attempts.is_empty());
+    }
+
+    #[test]
+    fn straggler_detection() {
+        let mut t = Task::new();
+        t.start_attempt(0, 0.0, 100.0, false);
+        assert!(!t.is_straggling(5.0, 10.0));
+        assert!(t.is_straggling(11.0, 10.0));
+        // once a speculative copy runs, no more copies
+        t.start_attempt(1, 11.0, 13.0, true);
+        assert!(!t.is_straggling(20.0, 10.0));
+    }
+
+    #[test]
+    fn pending_task_not_straggling() {
+        let t = Task::new();
+        assert!(!t.is_straggling(100.0, 1.0));
+    }
+}

@@ -1,0 +1,139 @@
+//! Workload specifications — the paper's two submission groups (§3.3).
+//!
+//! * **Pi** — Monte-Carlo π estimation: executors need 2 CPUs + ~2 GB
+//!   (CPU-bottlenecked).
+//! * **WordCount** — word counting over a 700 MB+ document: executors need
+//!   1 CPU + ~3.5 GB (memory-bottlenecked).
+//!
+//! Task counts and service times are not reported in the paper; the presets
+//! below give jobs a few executor-minutes of work so that ten concurrent
+//! jobs keep the 6-agent cluster saturated for most of the batch — the
+//! regime the figures show. They are config-overridable (config::toml).
+
+use crate::resources::ResVec;
+
+/// Which task body the e2e example executes through the PJRT runtime.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub enum WorkloadKind {
+    /// Monte-Carlo π (pi_mc.hlo.txt).
+    Pi,
+    /// Token histogram word count (wordcount.hlo.txt).
+    WordCount,
+}
+
+impl WorkloadKind {
+    pub fn label(&self) -> &'static str {
+        match self {
+            WorkloadKind::Pi => "Pi",
+            WorkloadKind::WordCount => "WordCount",
+        }
+    }
+}
+
+/// Everything the simulator needs to know about one submission group's jobs.
+#[derive(Debug, Clone)]
+pub struct WorkloadSpec {
+    pub kind: WorkloadKind,
+    /// Per-executor resource demand `d_{n,·}` (a Mesos task's resources).
+    pub executor_demand: ResVec,
+    /// Concurrent task slots per executor (executor cores / cores-per-task).
+    pub slots_per_executor: usize,
+    /// Microtasks per job.
+    pub tasks_per_job: usize,
+    /// Cap on simultaneously held executors per job.
+    pub max_executors: usize,
+    /// Mean service time of one task (seconds).
+    pub mean_task_secs: f64,
+    /// Lognormal sigma of task service times.
+    pub duration_sigma: f64,
+    /// Probability a task is a straggler…
+    pub straggler_prob: f64,
+    /// …and the factor by which a straggler is slower.
+    pub straggler_factor: f64,
+}
+
+impl WorkloadSpec {
+    /// The Pi group: 2 CPUs + 2 GB per executor, 2 cores ⇒ 2 one-core slots.
+    pub fn pi() -> Self {
+        WorkloadSpec {
+            kind: WorkloadKind::Pi,
+            executor_demand: ResVec::cpu_mem(2.0, 2.0),
+            slots_per_executor: 2,
+            tasks_per_job: 48,
+            max_executors: 8,
+            mean_task_secs: 4.0,
+            duration_sigma: 0.2,
+            straggler_prob: 0.02,
+            straggler_factor: 6.0,
+        }
+    }
+
+    /// The WordCount group: 1 CPU + 3.5 GB per executor, single slot.
+    pub fn wordcount() -> Self {
+        WorkloadSpec {
+            kind: WorkloadKind::WordCount,
+            executor_demand: ResVec::cpu_mem(1.0, 3.5),
+            slots_per_executor: 1,
+            tasks_per_job: 24,
+            max_executors: 8,
+            mean_task_secs: 6.0,
+            duration_sigma: 0.2,
+            straggler_prob: 0.02,
+            straggler_factor: 6.0,
+        }
+    }
+
+    /// Sample one task attempt's service time.
+    pub fn sample_duration(&self, rng: &mut crate::rng::Rng) -> f64 {
+        // lognormal with mean == mean_task_secs: mu = ln(mean) - sigma^2/2
+        let mu = self.mean_task_secs.ln() - self.duration_sigma * self.duration_sigma / 2.0;
+        let mut d = rng.lognormal(mu, self.duration_sigma);
+        if rng.chance(self.straggler_prob) {
+            d *= self.straggler_factor;
+        }
+        d.max(1e-3)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::rng::Rng;
+
+    #[test]
+    fn paper_demand_vectors() {
+        assert_eq!(WorkloadSpec::pi().executor_demand.as_slice(), &[2.0, 2.0]);
+        assert_eq!(WorkloadSpec::wordcount().executor_demand.as_slice(), &[1.0, 3.5]);
+    }
+
+    #[test]
+    fn duration_mean_close() {
+        let spec = WorkloadSpec::pi();
+        let mut rng = Rng::new(1);
+        let n = 20_000;
+        let mean: f64 = (0..n).map(|_| spec.sample_duration(&mut rng)).sum::<f64>() / n as f64;
+        // stragglers (2% x6) push the mean ~10% above the base
+        let expected = spec.mean_task_secs * (1.0 + spec.straggler_prob * (spec.straggler_factor - 1.0));
+        assert!((mean - expected).abs() < 0.15 * expected, "{mean} vs {expected}");
+    }
+
+    #[test]
+    fn durations_positive_and_varied() {
+        let spec = WorkloadSpec::wordcount();
+        let mut rng = Rng::new(2);
+        let xs: Vec<f64> = (0..100).map(|_| spec.sample_duration(&mut rng)).collect();
+        assert!(xs.iter().all(|d| *d > 0.0));
+        let distinct = xs.windows(2).filter(|w| (w[0] - w[1]).abs() > 1e-9).count();
+        assert!(distinct > 90);
+    }
+
+    #[test]
+    fn stragglers_appear() {
+        let mut spec = WorkloadSpec::pi();
+        spec.straggler_prob = 0.5;
+        let mut rng = Rng::new(3);
+        let xs: Vec<f64> = (0..200).map(|_| spec.sample_duration(&mut rng)).collect();
+        let slow = xs.iter().filter(|d| **d > 3.0 * spec.mean_task_secs).count();
+        assert!(slow > 50, "{slow}");
+    }
+}

@@ -1,0 +1,6 @@
+//! Testing substrate: a small property-testing driver (proptest is
+//! unavailable offline).
+
+pub mod prop;
+
+pub use prop::{forall, Case};

@@ -1,0 +1,91 @@
+//! A minimal property-testing driver.
+//!
+//! `forall(seed, cases, gen, prop)` draws `cases` inputs from `gen` and
+//! checks `prop` on each. On failure it panics with the case index and the
+//! failing input's Debug rendering, plus the exact seed to reproduce:
+//! generation is a pure function of `(seed, index)`, so a failing case can
+//! be re-run in isolation with [`Case::reproduce`].
+//!
+//! No shrinking (that's proptest's moat); generators are encouraged to draw
+//! sizes small-first so early cases are already near-minimal.
+
+use crate::rng::Rng;
+
+/// Handle to reproduce a specific generated case.
+#[derive(Debug, Clone, Copy)]
+pub struct Case {
+    pub seed: u64,
+    pub index: usize,
+}
+
+impl Case {
+    /// Re-generate this case's input.
+    pub fn reproduce<T>(&self, gen: impl Fn(&mut Rng) -> T) -> T {
+        let mut rng = Rng::new(self.seed).split(self.index as u64);
+        gen(&mut rng)
+    }
+}
+
+/// Check `prop` over `cases` generated inputs. The property returns
+/// `Result<(), String>` so failures carry a message.
+pub fn forall<T: std::fmt::Debug>(
+    seed: u64,
+    cases: usize,
+    gen: impl Fn(&mut Rng) -> T,
+    prop: impl Fn(&T) -> Result<(), String>,
+) {
+    for index in 0..cases {
+        // the same stream Case::reproduce uses
+        let mut rng = Rng::new(seed).split(index as u64);
+        let input = gen(&mut rng);
+        if let Err(msg) = prop(&input) {
+            panic!(
+                "property failed at case {index}/{cases} (seed {seed:#x}):\n  {msg}\n  input: {input:?}\n  \
+                 reproduce with Case {{ seed: {seed:#x}, index: {index} }}"
+            );
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn passes_true_property() {
+        forall(1, 100, |rng| rng.below(100), |x| {
+            if *x < 100 {
+                Ok(())
+            } else {
+                Err(format!("{x} out of range"))
+            }
+        });
+    }
+
+    #[test]
+    #[should_panic(expected = "property failed")]
+    fn fails_with_case_info() {
+        forall(2, 50, |rng| rng.below(10), |x| {
+            if *x < 5 {
+                Ok(())
+            } else {
+                Err("too big".into())
+            }
+        });
+    }
+
+    #[test]
+    fn reproduce_regenerates_same_input() {
+        let seed = 3u64;
+        let gen = |rng: &mut Rng| (rng.below(1000), rng.f64());
+        let mut firsts = Vec::new();
+        for index in 0..10 {
+            let mut rng = Rng::new(seed).split(index as u64);
+            firsts.push(gen(&mut rng));
+        }
+        for (index, first) in firsts.iter().enumerate() {
+            let again = Case { seed, index }.reproduce(gen);
+            assert_eq!(*first, again);
+        }
+    }
+}

@@ -1,0 +1,177 @@
+//! Integration tests: whole-system flows across master + allocator + spark
+//! + sim + config + cli.
+
+use mesos_fair::cli::Args;
+use mesos_fair::config::experiment::parse_online_config;
+use mesos_fair::mesos::AllocatorMode;
+use mesos_fair::scheduler::POLICY_NAMES;
+use mesos_fair::sim::online::{OnlineConfig, OnlineSim};
+
+fn small(policy: &str, mode: AllocatorMode, seed: u64) -> OnlineConfig {
+    let mut cfg = OnlineConfig::small(policy, mode);
+    cfg.seed = seed;
+    cfg
+}
+
+#[test]
+fn every_policy_completes_in_both_modes() {
+    for &policy in POLICY_NAMES {
+        for mode in [AllocatorMode::Characterized, AllocatorMode::Oblivious] {
+            let res = OnlineSim::new(small(policy, mode, 11)).unwrap().run().unwrap();
+            assert_eq!(res.jobs_completed, 8, "{policy}/{}", mode.label());
+            assert!(res.makespan > 0.0);
+            assert!(res.grants > 0);
+        }
+    }
+}
+
+#[test]
+fn paper_batch_small_scale_runs_to_completion() {
+    // 2 jobs/queue over the full 10-queue paper topology
+    let mut cfg = OnlineConfig::paper("rrr-psdsf", AllocatorMode::Characterized, 2);
+    cfg.seed = 3;
+    let res = OnlineSim::new(cfg).unwrap().run().unwrap();
+    assert_eq!(res.jobs_completed, 20);
+    // both groups are represented in the finish table
+    let groups: Vec<&str> = res.group_finish.iter().map(|(g, _)| g.as_str()).collect();
+    assert!(groups.contains(&"Pi") && groups.contains(&"WordCount"));
+}
+
+#[test]
+fn utilization_never_exceeds_one() {
+    for mode in [AllocatorMode::Characterized, AllocatorMode::Oblivious] {
+        let res = OnlineSim::new(small("drf", mode, 5)).unwrap().run().unwrap();
+        for &v in res.trace.cpu.values().iter().chain(res.trace.mem.values()) {
+            assert!((0.0..=1.0 + 1e-9).contains(&v), "{}: {v}", mode.label());
+        }
+    }
+}
+
+#[test]
+fn oblivious_grants_are_coarser_than_characterized() {
+    let chr = OnlineSim::new(small("drf", AllocatorMode::Characterized, 9))
+        .unwrap()
+        .run()
+        .unwrap();
+    let obl = OnlineSim::new(small("drf", AllocatorMode::Oblivious, 9)).unwrap().run().unwrap();
+    // same completed work, but the oblivious allocator hands out fewer,
+    // bigger grants (whole-agent offers)
+    assert_eq!(chr.jobs_completed, obl.jobs_completed);
+    assert!(
+        obl.grants < chr.grants,
+        "oblivious {} grants vs characterized {}",
+        obl.grants,
+        chr.grants
+    );
+}
+
+#[test]
+fn staged_cluster_delays_completion() {
+    // the same tiny batch finishes later when agents trickle in
+    let mut all_up = OnlineConfig::paper_staged("rpsdsf", 1);
+    all_up.staged = false;
+    for q in &mut all_up.queues {
+        q.workload.tasks_per_job = 6;
+    }
+    all_up.seed = 21;
+    let mut staged = all_up.clone();
+    staged.staged = true;
+    staged.stage_interval = 120.0;
+    let a = OnlineSim::new(all_up).unwrap().run().unwrap();
+    let b = OnlineSim::new(staged).unwrap().run().unwrap();
+    assert!(b.makespan > a.makespan, "staged {} vs {}", b.makespan, a.makespan);
+}
+
+#[test]
+fn config_file_round_trip_drives_sim() {
+    let toml = r#"
+        [experiment]
+        policy = "psdsf"
+        mode = "characterized"
+        seed = 99
+
+        [cluster]
+        servers = ["type-3", "type-3"]
+
+        [[queue]]
+        workload = "pi"
+        jobs = 2
+        tasks_per_job = 6
+        max_executors = 3
+
+        [[queue]]
+        workload = "wordcount"
+        jobs = 2
+        tasks_per_job = 6
+        max_executors = 3
+    "#;
+    let cfg = parse_online_config(toml).unwrap();
+    let res = OnlineSim::new(cfg).unwrap().run().unwrap();
+    assert_eq!(res.jobs_completed, 4);
+    assert_eq!(res.label, "psdsf/characterized");
+}
+
+#[test]
+fn cli_args_drive_experiment_selection() {
+    let a = Args::parse(
+        "online --scheduler rpsdsf --mode oblivious --jobs 3 --seed 0xFF"
+            .split_whitespace()
+            .map(String::from),
+    )
+    .unwrap();
+    assert_eq!(a.command.as_deref(), Some("online"));
+    assert_eq!(a.flag("scheduler"), Some("rpsdsf"));
+    assert_eq!(a.flag_u64("seed", 0).unwrap(), 255);
+}
+
+#[test]
+fn trace_csv_export_is_well_formed() {
+    let res = OnlineSim::new(small("tsf", AllocatorMode::Characterized, 2)).unwrap().run().unwrap();
+    let mut csv = mesos_fair::metrics::csv::CsvTable::new(vec!["t", "cpu", "mem"]);
+    for (k, &t) in res.trace.cpu.times().iter().enumerate() {
+        csv.row(vec![
+            format!("{t:.1}"),
+            format!("{:.4}", res.trace.cpu.values()[k]),
+            format!("{:.4}", res.trace.mem.value_at(t)),
+        ]);
+    }
+    let text = csv.render();
+    assert!(text.lines().count() > 2);
+    assert!(text.starts_with("t,cpu,mem\n"));
+}
+
+#[test]
+fn group_bottlenecks_match_paper_intuition() {
+    // Pi is CPU-bound, WordCount memory-bound: with only Pi queues the
+    // cluster's cpu should be the hotter resource, and vice versa.
+    let mut pi_only = OnlineConfig::small("drf", AllocatorMode::Characterized);
+    pi_only.queues.retain(|q| q.workload.kind == mesos_fair::spark::WorkloadKind::Pi);
+    pi_only.seed = 31;
+    let pi_res = OnlineSim::new(pi_only).unwrap().run().unwrap();
+    assert!(pi_res.mean_cpu > pi_res.mean_mem, "{} vs {}", pi_res.mean_cpu, pi_res.mean_mem);
+
+    let mut wc_only = OnlineConfig::small("drf", AllocatorMode::Characterized);
+    wc_only.queues.retain(|q| q.workload.kind == mesos_fair::spark::WorkloadKind::WordCount);
+    wc_only.seed = 31;
+    let wc_res = OnlineSim::new(wc_only).unwrap().run().unwrap();
+    assert!(wc_res.mean_mem > wc_res.mean_cpu, "{} vs {}", wc_res.mean_mem, wc_res.mean_cpu);
+}
+
+#[test]
+fn speculation_bounds_straggler_damage() {
+    let mut base = OnlineConfig::small("drf", AllocatorMode::Characterized);
+    for q in &mut base.queues {
+        q.workload.straggler_prob = 0.10;
+        q.workload.straggler_factor = 20.0;
+    }
+    base.seed = 77;
+    let mut with = base.clone();
+    with.speculation.enabled = true;
+    let mut without = base;
+    without.speculation.enabled = false;
+    let a = OnlineSim::new(with).unwrap().run().unwrap();
+    let b = OnlineSim::new(without).unwrap().run().unwrap();
+    // speculation should never make things dramatically worse, and with a
+    // 20x tail it usually helps
+    assert!(a.makespan <= b.makespan * 1.1, "spec {} vs none {}", a.makespan, b.makespan);
+}

@@ -1,0 +1,254 @@
+//! Property-based tests (testing::prop) over the scheduler and simulator
+//! invariants.
+
+use mesos_fair::cluster::{AgentPool, ServerType};
+use mesos_fair::mesos::AllocatorMode;
+use mesos_fair::resources::ResVec;
+use mesos_fair::rng::Rng;
+use mesos_fair::scheduler::progressive::progressive_fill;
+use mesos_fair::scheduler::{
+    policy_by_name, AllocState, FrameworkEntry, NativeScorer, POLICY_NAMES,
+};
+use mesos_fair::sim::online::{OnlineConfig, OnlineSim};
+use mesos_fair::testing::forall;
+use mesos_fair::{is_big, BIG};
+
+/// Random cluster instance: 1-6 servers, 1-8 frameworks, 2 resources.
+#[derive(Debug, Clone)]
+struct RandomInstance {
+    caps: Vec<[f64; 2]>,
+    demands: Vec<[f64; 2]>,
+    policy: &'static str,
+    seed: u64,
+}
+
+fn gen_instance(rng: &mut Rng) -> RandomInstance {
+    let m = 1 + rng.index(6);
+    let n = 1 + rng.index(8);
+    RandomInstance {
+        caps: (0..m)
+            .map(|_| [rng.range(4.0, 64.0).round(), rng.range(4.0, 64.0).round()])
+            .collect(),
+        demands: (0..n)
+            .map(|_| [rng.range(0.5, 6.0).round().max(1.0), rng.range(0.5, 6.0).round().max(1.0)])
+            .collect(),
+        policy: POLICY_NAMES[rng.index(POLICY_NAMES.len())],
+        seed: rng.next_u64(),
+    }
+}
+
+fn build_state(inst: &RandomInstance) -> AllocState {
+    let types: Vec<ServerType> = inst
+        .caps
+        .iter()
+        .enumerate()
+        .map(|(i, c)| ServerType::new(format!("s{i}"), ResVec::new(c)))
+        .collect();
+    let mut st = AllocState::new(AgentPool::new(&types));
+    for (k, d) in inst.demands.iter().enumerate() {
+        st.add_framework(FrameworkEntry {
+            name: format!("f{k}"),
+            demand: ResVec::new(d),
+            weight: 1.0,
+            active: true,
+        });
+    }
+    st
+}
+
+#[test]
+fn prop_progressive_fill_never_overallocates_and_saturates() {
+    forall(0xF111, 60, gen_instance, |inst| {
+        let mut st = build_state(inst);
+        let policy = policy_by_name(inst.policy).unwrap();
+        let out = progressive_fill(&mut st, &policy, &mut NativeScorer::new(), &mut Rng::new(inst.seed))
+            .map_err(|e| e.to_string())?;
+        // 1. no negative residuals
+        for (i, row) in out.unused.iter().enumerate() {
+            for &v in row {
+                if v < -1e-9 {
+                    return Err(format!("negative residual {v} on server {i}"));
+                }
+            }
+        }
+        // 2. saturation: no framework fits anywhere
+        if !st.saturated() {
+            return Err("stopped before saturation".into());
+        }
+        // 3. accounting: x * d == capacity - unused
+        for i in 0..inst.caps.len() {
+            for r in 0..2 {
+                let used: f64 =
+                    (0..inst.demands.len()).map(|n| out.x[n][i] * inst.demands[n][r]).sum();
+                let expect = inst.caps[i][r] - out.unused[i][r];
+                if (used - expect).abs() > 1e-6 {
+                    return Err(format!("accounting mismatch at ({i},{r}): {used} vs {expect}"));
+                }
+            }
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn prop_single_framework_gets_whole_cluster() {
+    // sharing incentive degenerate case: alone, a framework receives every
+    // task the cluster can host (for every policy)
+    forall(0xF222, 40, gen_instance, |inst| {
+        let mut st = build_state(inst);
+        // keep only framework 0
+        for n in 1..inst.demands.len() {
+            st.deactivate(n);
+        }
+        let policy = policy_by_name(inst.policy).unwrap();
+        let out = progressive_fill(&mut st, &policy, &mut NativeScorer::new(), &mut Rng::new(inst.seed))
+            .map_err(|e| e.to_string())?;
+        let d = ResVec::new(&inst.demands[0]);
+        // upper bound: sum over servers of whole tasks; progressive filling
+        // must reach it exactly (no fragmentation for a single framework)
+        let max: u64 = inst
+            .caps
+            .iter()
+            .map(|c| d.whole_tasks_within(&ResVec::new(c)).unwrap_or(0))
+            .sum();
+        if out.total as u64 != max {
+            return Err(format!("single framework got {} of {max}", out.total));
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn prop_scores_monotone_in_allocation() {
+    // granting a framework a task never DECREASES its global shares
+    forall(0xF333, 60, gen_instance, |inst| {
+        let mut st = build_state(inst);
+        let mut rng = Rng::new(inst.seed);
+        // random pre-allocation
+        for _ in 0..rng.index(20) {
+            let n = rng.index(inst.demands.len());
+            let i = rng.index(inst.caps.len());
+            if st.task_fits(n, i) {
+                st.place_task(n, i).unwrap();
+            }
+        }
+        let before = NativeScorer::compute(&st.score_inputs());
+        // place one more task for any framework that fits
+        for n in 0..inst.demands.len() {
+            for i in 0..inst.caps.len() {
+                if st.task_fits(n, i) {
+                    let mut st2 = st.clone();
+                    st2.place_task(n, i).unwrap();
+                    let after = NativeScorer::compute(&st2.score_inputs());
+                    if !is_big(before.drf[n]) && !is_big(after.drf[n]) && after.drf[n] < before.drf[n] - 1e-12 {
+                        return Err(format!("drf share of {n} decreased"));
+                    }
+                    if !is_big(before.tsf[n]) && !is_big(after.tsf[n]) && after.tsf[n] < before.tsf[n] - 1e-12 {
+                        return Err(format!("tsf share of {n} decreased"));
+                    }
+                }
+            }
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn prop_feasibility_matches_pool_truth() {
+    // kernel feasibility (believed demands = true demands) must agree with
+    // the pool's can_fit
+    forall(0xF444, 80, gen_instance, |inst| {
+        let mut st = build_state(inst);
+        let mut rng = Rng::new(inst.seed);
+        for _ in 0..rng.index(25) {
+            let n = rng.index(inst.demands.len());
+            let i = rng.index(inst.caps.len());
+            if st.task_fits(n, i) {
+                st.place_task(n, i).unwrap();
+            }
+        }
+        let set = NativeScorer::compute(&st.score_inputs());
+        for n in 0..inst.demands.len() {
+            for i in 0..inst.caps.len() {
+                let truth = st.task_fits(n, i);
+                if set.feas[n][i] != truth {
+                    return Err(format!("feas[{n}][{i}] = {} but pool says {truth}", set.feas[n][i]));
+                }
+            }
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn prop_scores_finite_iff_meaningful() {
+    forall(0xF555, 60, gen_instance, |inst| {
+        let st = build_state(inst);
+        let set = NativeScorer::compute(&st.score_inputs());
+        for n in 0..inst.demands.len() {
+            if set.drf[n] >= BIG && inst.demands[n].iter().any(|d| *d > 0.0) {
+                return Err(format!("active framework {n} scored BIG under drf"));
+            }
+        }
+        Ok(())
+    });
+}
+
+#[derive(Debug, Clone)]
+struct OnlineCase {
+    policy: &'static str,
+    mode: AllocatorMode,
+    seed: u64,
+    jitter: f64,
+    straggler_prob: f64,
+}
+
+fn gen_online(rng: &mut Rng) -> OnlineCase {
+    OnlineCase {
+        policy: POLICY_NAMES[rng.index(POLICY_NAMES.len())],
+        mode: if rng.chance(0.5) { AllocatorMode::Characterized } else { AllocatorMode::Oblivious },
+        seed: rng.next_u64(),
+        jitter: rng.range(0.0, 5.0),
+        straggler_prob: rng.range(0.0, 0.1),
+    }
+}
+
+#[test]
+fn prop_online_all_jobs_complete_and_cluster_drains() {
+    forall(0xF666, 24, gen_online, |case| {
+        let mut cfg = OnlineConfig::small(case.policy, case.mode);
+        cfg.seed = case.seed;
+        cfg.release_jitter = case.jitter;
+        for q in &mut cfg.queues {
+            q.workload.straggler_prob = case.straggler_prob;
+        }
+        let res = OnlineSim::new(cfg).map_err(|e| e.to_string())?.run().map_err(|e| e.to_string())?;
+        if res.jobs_completed != 8 {
+            return Err(format!("{} of 8 jobs completed", res.jobs_completed));
+        }
+        // after the batch drains, the last utilization sample must be zero
+        let last_cpu = *res.trace.cpu.values().last().unwrap();
+        if last_cpu > 1e-9 {
+            return Err(format!("cluster did not drain: cpu {last_cpu}"));
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn prop_online_deterministic_per_seed() {
+    forall(0xF777, 10, gen_online, |case| {
+        let mk = || {
+            let mut cfg = OnlineConfig::small(case.policy, case.mode);
+            cfg.seed = case.seed;
+            cfg.release_jitter = case.jitter;
+            OnlineSim::new(cfg).unwrap().run().unwrap()
+        };
+        let a = mk();
+        let b = mk();
+        if a.makespan != b.makespan || a.grants != b.grants {
+            return Err("two runs with the same seed diverged".into());
+        }
+        Ok(())
+    });
+}

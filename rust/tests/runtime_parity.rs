@@ -1,0 +1,264 @@
+//! Native scorer vs AOT/PJRT kernel parity + workload artifact checks.
+//!
+//! Requires `make artifacts` (these tests skip with a message otherwise —
+//! `make test` always builds artifacts first).
+
+use mesos_fair::cluster::{AgentPool, ServerType};
+use mesos_fair::resources::ResVec;
+use mesos_fair::rng::Rng;
+use mesos_fair::runtime::{find_artifact_dir, ArtifactRuntime, HloScorer, WorkloadRuntime};
+use mesos_fair::scheduler::{AllocState, FrameworkEntry, NativeScorer, Scorer};
+use mesos_fair::{is_big, M_MAX, N_MAX, PI_SAMPLES, WC_VOCAB};
+
+macro_rules! require_artifacts {
+    () => {
+        if find_artifact_dir().is_none() {
+            eprintln!("SKIP: artifacts/ missing — run `make artifacts`");
+            return;
+        }
+    };
+}
+
+fn random_state(rng: &mut Rng) -> AllocState {
+    let presets = [
+        ServerType::illustrative(),
+        ServerType::paper_heterogeneous(),
+        ServerType::paper_staged(),
+    ];
+    let types = presets[rng.index(presets.len())].clone();
+    let mut st = AllocState::new(AgentPool::new(&types));
+    let n = 1 + rng.index(8);
+    for k in 0..n {
+        let d = match rng.index(3) {
+            0 => ResVec::cpu_mem(2.0, 2.0),
+            1 => ResVec::cpu_mem(1.0, 3.5),
+            _ => ResVec::new(&[rng.range(0.5, 6.0).round().max(1.0), rng.range(0.5, 6.0).round().max(1.0)]),
+        };
+        st.add_framework(FrameworkEntry {
+            name: format!("f{k}"),
+            demand: d,
+            weight: if rng.chance(0.2) { 2.0 } else { 1.0 },
+            active: true,
+        });
+    }
+    for _ in 0..rng.index(30) {
+        let fidx = rng.index(n);
+        let i = rng.index(st.pool.len());
+        if st.task_fits(fidx, i) {
+            st.place_task(fidx, i).unwrap();
+        }
+    }
+    st
+}
+
+fn assert_sets_match(a: &mesos_fair::scheduler::ScoreSet, b: &mesos_fair::scheduler::ScoreSet, ctx: &str) {
+    let tol = 1e-4;
+    for n in 0..N_MAX {
+        for (x, y, name) in [(a.drf[n], b.drf[n], "drf"), (a.tsf[n], b.tsf[n], "tsf")] {
+            assert_eq!(is_big(x), is_big(y), "{ctx}: {name}[{n}] BIG mismatch ({x} vs {y})");
+            if !is_big(x) {
+                assert!((x - y).abs() < tol, "{ctx}: {name}[{n}] {x} vs {y}");
+            }
+        }
+        for i in 0..M_MAX {
+            assert_eq!(a.feas[n][i], b.feas[n][i], "{ctx}: feas[{n}][{i}]");
+            for (x, y, name) in [
+                (a.psdsf[n][i], b.psdsf[n][i], "psdsf"),
+                (a.rpsdsf[n][i], b.rpsdsf[n][i], "rpsdsf"),
+                (a.fit[n][i], b.fit[n][i], "fit"),
+            ] {
+                assert_eq!(is_big(x), is_big(y), "{ctx}: {name}[{n}][{i}] BIG mismatch ({x} vs {y})");
+                if !is_big(x) {
+                    // relative tolerance for f32 rounding
+                    let scale = x.abs().max(1.0);
+                    assert!((x - y).abs() < tol * scale, "{ctx}: {name}[{n}][{i}] {x} vs {y}");
+                }
+            }
+        }
+    }
+}
+
+#[test]
+fn scorer_parity_on_random_states() {
+    require_artifacts!();
+    let mut hlo = HloScorer::open_default().unwrap();
+    let mut native = NativeScorer::new();
+    let mut rng = Rng::new(0x9A87);
+    for trial in 0..40 {
+        let st = random_state(&mut rng);
+        let si = st.score_inputs();
+        let a = native.score(&si).unwrap();
+        let b = hlo.score(&si).unwrap();
+        assert_sets_match(&a, &b, &format!("trial {trial}"));
+    }
+    assert_eq!(hlo.executions(), 40);
+}
+
+#[test]
+fn scorer_parity_on_empty_and_saturated_states() {
+    require_artifacts!();
+    let mut hlo = HloScorer::open_default().unwrap();
+    let mut native = NativeScorer::new();
+    // empty
+    let mut st = AllocState::new(AgentPool::new(&ServerType::illustrative()));
+    for d in [[5.0, 1.0], [1.0, 5.0]] {
+        st.add_framework(FrameworkEntry {
+            name: "f".into(),
+            demand: ResVec::new(&d),
+            weight: 1.0,
+            active: true,
+        });
+    }
+    let si = st.score_inputs();
+    assert_sets_match(&native.score(&si).unwrap(), &hlo.score(&si).unwrap(), "empty");
+    // saturated (20 f1 on s1, 20 f2 on s2)
+    for _ in 0..20 {
+        st.place_task(0, 0).unwrap();
+        st.place_task(1, 1).unwrap();
+    }
+    let si = st.score_inputs();
+    assert_sets_match(&native.score(&si).unwrap(), &hlo.score(&si).unwrap(), "saturated");
+}
+
+#[test]
+fn scorer_parity_with_unregistered_servers() {
+    require_artifacts!();
+    let mut hlo = HloScorer::open_default().unwrap();
+    let mut native = NativeScorer::new();
+    let mut st = AllocState::new(AgentPool::new_staged(&ServerType::paper_staged()));
+    st.add_framework(FrameworkEntry {
+        name: "pi".into(),
+        demand: ResVec::cpu_mem(2.0, 2.0),
+        weight: 1.0,
+        active: true,
+    });
+    st.pool.register_next();
+    let si = st.score_inputs();
+    assert_sets_match(&native.score(&si).unwrap(), &hlo.score(&si).unwrap(), "staged");
+}
+
+#[test]
+fn progressive_fill_identical_under_both_scorers() {
+    require_artifacts!();
+    use mesos_fair::scheduler::{policy_by_name, progressive::progressive_fill};
+    for policy_name in ["psdsf", "rpsdsf", "bf-drf"] {
+        let build = || {
+            let mut st = AllocState::new(AgentPool::new(&ServerType::illustrative()));
+            for d in [[5.0, 1.0], [1.0, 5.0]] {
+                st.add_framework(FrameworkEntry {
+                    name: "f".into(),
+                    demand: ResVec::new(&d),
+                    weight: 1.0,
+                    active: true,
+                });
+            }
+            st
+        };
+        let policy = policy_by_name(policy_name).unwrap();
+        let mut st1 = build();
+        let out_native =
+            progressive_fill(&mut st1, &policy, &mut NativeScorer::new(), &mut Rng::new(4)).unwrap();
+        let mut st2 = build();
+        let mut hlo = HloScorer::open_default().unwrap();
+        let out_hlo = progressive_fill(&mut st2, &policy, &mut hlo, &mut Rng::new(4)).unwrap();
+        assert_eq!(out_native.x, out_hlo.x, "{policy_name}: allocations diverge across scorers");
+    }
+}
+
+#[test]
+fn pi_artifact_estimates_pi() {
+    require_artifacts!();
+    let mut wl = WorkloadRuntime::open_default().unwrap();
+    for seed in 0..24 {
+        wl.run_pi(seed).unwrap();
+    }
+    let est = wl.pi_estimate();
+    assert!((est - std::f64::consts::PI).abs() < 0.02, "pi estimate {est}");
+    assert_eq!(wl.pi_rounds, 24);
+}
+
+#[test]
+fn pi_artifact_deterministic_per_seed() {
+    require_artifacts!();
+    let mut wl = WorkloadRuntime::open_default().unwrap();
+    let a = wl.run_pi(42).unwrap();
+    let b = wl.run_pi(42).unwrap();
+    assert_eq!(a, b);
+    let c = wl.run_pi(43).unwrap();
+    assert_ne!(a, c);
+    assert!(a as usize <= PI_SAMPLES);
+}
+
+#[test]
+fn wordcount_artifact_conserves_tokens() {
+    require_artifacts!();
+    let mut wl = WorkloadRuntime::open_default().unwrap();
+    for seed in 0..8 {
+        wl.run_wordcount(seed).unwrap();
+    }
+    assert!(wl.histogram_consistent(), "histogram total != tokens");
+    assert_eq!(wl.histogram.len(), WC_VOCAB);
+    // Zipf-ish: bucket 0 strictly dominates
+    let top = wl.top_buckets(2);
+    assert_eq!(top[0].0, 0);
+    assert!(top[0].1 > top[1].1);
+}
+
+#[test]
+fn utilization_artifact_matches_pool() {
+    require_artifacts!();
+    let mut rt = ArtifactRuntime::open_default().unwrap();
+    let mut st = AllocState::new(AgentPool::new(&ServerType::illustrative()));
+    for d in [[5.0, 1.0], [1.0, 5.0]] {
+        st.add_framework(FrameworkEntry {
+            name: "f".into(),
+            demand: ResVec::new(&d),
+            weight: 1.0,
+            active: true,
+        });
+    }
+    for _ in 0..20 {
+        st.place_task(0, 0).unwrap();
+    }
+    st.place_task(1, 1).unwrap();
+    let si = st.score_inputs();
+    // pack and execute the utilization artifact
+    let mut c = Vec::new();
+    for row in &si.c {
+        c.extend_from_slice(row);
+    }
+    let mut x = Vec::new();
+    for row in &si.x {
+        x.extend_from_slice(row);
+    }
+    let mut d = Vec::new();
+    for row in &si.d {
+        d.extend_from_slice(row);
+    }
+    let lits = vec![
+        mesos_fair::runtime::client::literal_f32(&c, &[M_MAX as i64, mesos_fair::R_MAX as i64]).unwrap(),
+        mesos_fair::runtime::client::literal_f32(&x, &[N_MAX as i64, M_MAX as i64]).unwrap(),
+        mesos_fair::runtime::client::literal_f32(&d, &[N_MAX as i64, mesos_fair::R_MAX as i64]).unwrap(),
+        mesos_fair::runtime::client::literal_f32(&si.smask, &[M_MAX as i64]).unwrap(),
+        mesos_fair::runtime::client::literal_f32(&si.rmask, &[mesos_fair::R_MAX as i64]).unwrap(),
+    ];
+    let outs = rt.execute("utilization", &lits).unwrap();
+    let util: Vec<f32> = outs[0].to_vec().unwrap();
+    let pool_util = st.pool.utilization();
+    assert!((util[0] as f64 - pool_util[0]).abs() < 1e-5, "{util:?} vs {pool_util:?}");
+    assert!((util[1] as f64 - pool_util[1]).abs() < 1e-5);
+}
+
+#[test]
+fn executable_cache_reuses_compilations() {
+    require_artifacts!();
+    let mut rt = ArtifactRuntime::open_default().unwrap();
+    assert_eq!(rt.cached(), 0);
+    let seed = mesos_fair::runtime::client::literal_i32(&[1]);
+    rt.execute("pi_mc", &[seed]).unwrap();
+    assert_eq!(rt.cached(), 1);
+    let seed = mesos_fair::runtime::client::literal_i32(&[2]);
+    rt.execute("pi_mc", &[seed]).unwrap();
+    assert_eq!(rt.cached(), 1, "second execution must reuse the compiled executable");
+    assert_eq!(rt.exec_counts["pi_mc"], 2);
+}
