@@ -13,7 +13,7 @@ use mesos_fair::resources::ResVec;
 use mesos_fair::rng::Rng;
 use mesos_fair::scheduler::progressive::progressive_fill;
 use mesos_fair::scheduler::server_select::BestFitMetric;
-use mesos_fair::scheduler::{policy_by_name, AllocState, FrameworkEntry, NativeScorer};
+use mesos_fair::scheduler::{policy_by_name, AllocState, FrameworkEntry, ScoringEngine};
 use mesos_fair::sim::online::{OnlineConfig, OnlineSim};
 use mesos_fair::cluster::ReleaseMode;
 use mesos_fair::spark::driver::SpeculationCfg;
@@ -42,7 +42,8 @@ fn main() {
         let mut policy = policy_by_name("bf-drf").unwrap();
         policy.metric = metric;
         let out =
-            progressive_fill(&mut st, &policy, &mut NativeScorer::new(), &mut Rng::new(7)).unwrap();
+            progressive_fill(&mut st, &policy, &mut ScoringEngine::native(), &mut Rng::new(7))
+                .unwrap();
         let waste: f64 = out.unused.iter().flatten().sum();
         println!(
             "bf-drf[{label:24}] total {:>4}  x={:?}  waste {:.0}",

@@ -1,68 +1,101 @@
-//! Bench: scoring hot path — native rust vs AOT/PJRT (HLO) backends, plus
-//! allocation-cycle and end-to-end-simulation latency. These are the L3
-//! §Perf numbers in EXPERIMENTS.md.
+//! Bench: scoring hot path — full recompute vs incremental re-scoring
+//! across the (agents, frameworks) scale sweep, plus allocation-cycle and
+//! end-to-end-simulation latency, and (with `--features hlo` + artifacts)
+//! the AOT/PJRT backend. These are the L3 §Perf numbers in EXPERIMENTS.md.
+//!
+//! Emits `BENCH_scorer.json` (working directory) so the perf trajectory of
+//! the scoring core is tracked from PR to PR.
 
-use mesos_fair::bench::{bench, bench_adaptive, header};
-use mesos_fair::cluster::{AgentPool, ServerType};
+use mesos_fair::bench::{bench, bench_adaptive, header, BenchResult};
 use mesos_fair::mesos::AllocatorMode;
-use mesos_fair::resources::ResVec;
+use mesos_fair::metrics::json::Json;
 use mesos_fair::rng::Rng;
-use mesos_fair::runtime::HloScorer;
-use mesos_fair::scheduler::{AllocState, FrameworkEntry, NativeScorer, Scorer};
+use mesos_fair::scheduler::{IncrementalScorer, NativeScorer};
 use mesos_fair::sim::online::{OnlineConfig, OnlineSim};
+use mesos_fair::testing::scaled_state_with_load;
 
-/// A representative mid-experiment state: 6 agents, 10 frameworks, partial
-/// allocation.
-fn busy_state(rng: &mut Rng) -> AllocState {
-    let mut st = AllocState::new(AgentPool::new(&ServerType::paper_heterogeneous()));
-    for k in 0..10 {
-        let d = if k % 2 == 0 { ResVec::cpu_mem(2.0, 2.0) } else { ResVec::cpu_mem(1.0, 3.5) };
-        st.add_framework(FrameworkEntry {
-            name: format!("f{k}"),
-            demand: d,
-            weight: 1.0,
-            active: true,
-        });
-    }
-    for _ in 0..40 {
-        let n = rng.index(10);
-        let i = rng.index(6);
-        if st.task_fits(n, i) {
-            st.place_task(n, i).unwrap();
-        }
-    }
-    st
-}
+/// The scale sweep: (agents, frameworks) from the paper's size to 32× the
+/// old padded cap.
+const SWEEP: &[(usize, usize)] = &[(8, 16), (64, 128), (256, 512)];
 
 fn main() {
     let mut rng = Rng::new(0xBE9C);
-    let st = busy_state(&mut rng);
-    let si = st.score_inputs();
+    let mut sweep_rows: Vec<Json> = Vec::new();
 
-    header("scorer microbench (6 agents x 10 frameworks, padded 8x16x4)");
-    let mut native = NativeScorer::new();
-    let rn = bench("scorer/native (fused f64)", 100, 5000, || {
-        std::hint::black_box(native.score(&si).unwrap());
-    });
-    println!("{}", rn.render());
+    header("scorer sweep — full recompute vs incremental, per placement");
+    for &(m, n) in SWEEP {
+        let mut st = scaled_state_with_load(m, n, 4 * m, &mut rng);
+        // a feasible (framework, agent) pair to toggle during the bench
+        let (fw, ag) = (0..n)
+            .flat_map(|f| (0..m).map(move |a| (f, a)))
+            .find(|&(f, a)| st.task_fits(f, a))
+            .expect("loaded state still has room");
+        let d = st.framework(fw).demand;
 
-    match HloScorer::open_default() {
-        Ok(mut hlo) => {
-            // first call compiles; do it outside timing
-            let _ = hlo.score(&si).unwrap();
-            let rh = bench("scorer/hlo (PJRT cpu, AOT pallas kernel)", 20, 500, || {
-                std::hint::black_box(hlo.score(&si).unwrap());
-            });
-            println!("{}", rh.render());
-            println!(
-                "hlo/native latency ratio: {:.1}x (PJRT call overhead dominates at this tiny instance size)",
-                rh.mean / rn.mean
-            );
+        let full = {
+            let mut st = st.clone();
+            bench(&format!("full/{m}x{n} (place+rescore)"), 20, iters_for(m), || {
+                st.place_task(fw, ag).unwrap();
+                std::hint::black_box(NativeScorer::compute(&st.score_inputs()));
+                st.unplace(fw, ag, &d, 1.0).unwrap();
+                std::hint::black_box(NativeScorer::compute(&st.score_inputs()));
+            })
+        };
+        println!("{}", full.render());
+
+        let incr = {
+            let mut inc = IncrementalScorer::new();
+            inc.rescore(&mut st);
+            bench(&format!("incremental/{m}x{n} (place+rescore)"), 20, iters_for(m), || {
+                st.place_task(fw, ag).unwrap();
+                std::hint::black_box(inc.rescore(&mut st).1);
+                st.unplace(fw, ag, &d, 1.0).unwrap();
+                std::hint::black_box(inc.rescore(&mut st).1);
+            })
+        };
+        println!("{}", incr.render());
+        println!("  speedup: {:.1}x", full.mean / incr.mean.max(1e-12));
+
+        sweep_rows.push(Json::obj(vec![
+            ("agents", Json::Num(m as f64)),
+            ("frameworks", Json::Num(n as f64)),
+            ("full", result_json(&full)),
+            ("incremental", result_json(&incr)),
+            ("speedup", Json::Num(full.mean / incr.mean.max(1e-12))),
+        ]));
+    }
+
+    #[cfg(feature = "hlo")]
+    {
+        use mesos_fair::runtime::HloScorer;
+        use mesos_fair::scheduler::Scorer;
+        header("scorer/hlo (PJRT cpu, AOT pallas kernel) — paper-size instance");
+        let st = scaled_state_with_load(6, 10, 40, &mut rng);
+        let si = st.score_inputs();
+        let mut native = NativeScorer::new();
+        let rn = bench("scorer/native (paper-size)", 100, 5000, || {
+            std::hint::black_box(native.score(&si).unwrap());
+        });
+        println!("{}", rn.render());
+        match HloScorer::open_default() {
+            Ok(mut hlo) => {
+                // first call compiles; do it outside timing
+                let _ = hlo.score(&si).unwrap();
+                let rh = bench("scorer/hlo", 20, 500, || {
+                    std::hint::black_box(hlo.score(&si).unwrap());
+                });
+                println!("{}", rh.render());
+                println!(
+                    "hlo/native latency ratio: {:.1}x (PJRT call overhead dominates at this tiny instance size)",
+                    rh.mean / rn.mean
+                );
+            }
+            Err(e) => println!("scorer/hlo skipped: {e} (run `make artifacts`)"),
         }
-        Err(e) => println!("scorer/hlo skipped: {e} (run `make artifacts`)"),
     }
 
     header("allocation-cycle latency (one full cycle on a drained cluster)");
+    let mut cycle_rows: Vec<Json> = Vec::new();
     for policy in ["drf", "psdsf", "rpsdsf", "bf-drf"] {
         let r = bench_adaptive(&format!("cycle/{policy}"), 1.0, 50, || {
             let mut cfg = OnlineConfig::small(policy, AllocatorMode::Characterized);
@@ -71,19 +104,57 @@ fn main() {
             std::hint::black_box(sim.run().unwrap());
         });
         println!("{}", r.render());
+        cycle_rows.push(Json::obj(vec![
+            ("policy", Json::Str(policy.to_string())),
+            ("result", result_json(&r)),
+        ]));
     }
 
     header("end-to-end simulated experiment (paper scale: 500 jobs, 6 agents)");
+    let mut e2e_rows: Vec<Json> = Vec::new();
     for policy in ["drf", "rrr-psdsf"] {
         let t0 = std::time::Instant::now();
         let cfg = OnlineConfig::paper(policy, AllocatorMode::Characterized, 50);
         let res = OnlineSim::new(cfg).unwrap().run().unwrap();
+        let wall = t0.elapsed().as_secs_f64();
         println!(
-            "e2e/{policy:10} 500 jobs, {} tasks, {} cycles -> {:.3}s wall ({:.0} sim-seconds)",
-            res.tasks_done,
-            res.cycles,
-            t0.elapsed().as_secs_f64(),
-            res.makespan
+            "e2e/{policy:10} 500 jobs, {} tasks, {} cycles -> {wall:.3}s wall ({:.0} sim-seconds)",
+            res.tasks_done, res.cycles, res.makespan
         );
+        e2e_rows.push(Json::obj(vec![
+            ("policy", Json::Str(policy.to_string())),
+            ("wall_seconds", Json::Num(wall)),
+            ("tasks", Json::Num(res.tasks_done as f64)),
+            ("cycles", Json::Num(res.cycles as f64)),
+        ]));
     }
+
+    let doc = Json::obj(vec![
+        ("bench", Json::Str("scorer".into())),
+        ("sweep", Json::Arr(sweep_rows)),
+        ("cycles", Json::Arr(cycle_rows)),
+        ("e2e", Json::Arr(e2e_rows)),
+    ]);
+    match doc.write_to("BENCH_scorer.json") {
+        Ok(()) => println!("\nwrote BENCH_scorer.json"),
+        Err(e) => println!("\ncould not write BENCH_scorer.json: {e}"),
+    }
+}
+
+/// Fewer timed iterations at the big end of the sweep.
+fn iters_for(m: usize) -> usize {
+    match m {
+        0..=15 => 2000,
+        16..=127 => 400,
+        _ => 60,
+    }
+}
+
+fn result_json(r: &BenchResult) -> Json {
+    Json::obj(vec![
+        ("mean_s", Json::Num(r.mean)),
+        ("p50_s", Json::Num(r.p50)),
+        ("p95_s", Json::Num(r.p95)),
+        ("iters", Json::Num(r.iters as f64)),
+    ])
 }

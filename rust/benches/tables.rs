@@ -28,9 +28,9 @@ fn main() {
     println!("{}", r.render());
 
     let r1 = bench("tables/single drf trial", 3, 200, || {
-        let mut scorer = mesos_fair::scheduler::NativeScorer::new();
+        let mut engine = mesos_fair::scheduler::ScoringEngine::native();
         std::hint::black_box(
-            mesos_fair::exp::tables::one_trial("drf", 1, &mut scorer).unwrap(),
+            mesos_fair::exp::tables::one_trial("drf", 1, &mut engine).unwrap(),
         );
     });
     println!("{}", r1.render());

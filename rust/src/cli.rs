@@ -109,6 +109,8 @@ COMMON FLAGS:
     --config FILE          Online experiment TOML (see config/)
     --homogeneous          Use the six type-3 cluster (§3.6)
     --staged               Staged agent registration (§3.7)
+    --agents M             Scale scenario: M heterogeneous agents
+    --queues N             Concurrent queues for --agents   [default: 2*M]
     --csv DIR              Also write CSV outputs to DIR
 ";
 

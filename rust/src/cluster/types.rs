@@ -64,6 +64,23 @@ impl ServerType {
             ServerType::new("illus-2", ResVec::new(&[30.0, 100.0])),
         ]
     }
+
+    /// The scale scenario family: `m` heterogeneous agents cycling through
+    /// the paper's three types. The paper's clusters top out at 8 agents;
+    /// with the dynamic-dimension scoring core this family drives 64-,
+    /// 256-, … agent clusters through the same scheduler code.
+    pub fn scaled(m: usize) -> Vec<ServerType> {
+        (0..m)
+            .map(|k| {
+                let base = match k % 3 {
+                    0 => ServerType::type1(),
+                    1 => ServerType::type2(),
+                    _ => ServerType::type3(),
+                };
+                ServerType::new(format!("{}-{k}", base.name), base.capacity)
+            })
+            .collect()
+    }
 }
 
 #[cfg(test)]
@@ -92,5 +109,17 @@ mod tests {
         assert_eq!(ServerType::paper_homogeneous().len(), 6);
         assert_eq!(ServerType::paper_staged().len(), 3);
         assert_eq!(ServerType::illustrative().len(), 2);
+    }
+
+    #[test]
+    fn scaled_cycles_types() {
+        let cluster = ServerType::scaled(64);
+        assert_eq!(cluster.len(), 64);
+        assert_eq!(cluster[0].capacity, ServerType::type1().capacity);
+        assert_eq!(cluster[1].capacity, ServerType::type2().capacity);
+        assert_eq!(cluster[2].capacity, ServerType::type3().capacity);
+        assert_eq!(cluster[63].capacity, ServerType::type1().capacity);
+        // names stay unique for trace labels
+        assert_ne!(cluster[0].name, cluster[3].name);
     }
 }

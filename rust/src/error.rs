@@ -1,40 +1,64 @@
-//! Crate-wide error type.
+//! Crate-wide error type (hand-rolled Display — the default build has zero
+//! external dependencies).
 
-use thiserror::Error;
+use std::fmt;
 
 /// Errors surfaced by the coordinator, runtime and experiment layers.
-#[derive(Debug, Error)]
+#[derive(Debug)]
 pub enum Error {
     /// Artifact directory / manifest problems (run `make artifacts`).
-    #[error("artifact error: {0}")]
     Artifact(String),
 
     /// The AOT manifest's padded dimensions disagree with the crate's
     /// compiled-in constants — the python and rust layers are out of sync.
-    #[error("manifest dimension mismatch: {0}")]
     ManifestMismatch(String),
 
     /// PJRT / XLA failures (compile, execute, literal conversion).
-    #[error("xla error: {0}")]
     Xla(String),
 
     /// Cluster capacity exceeded or inconsistent state transitions.
-    #[error("cluster invariant violated: {0}")]
     Cluster(String),
 
     /// Configuration file / CLI parse errors.
-    #[error("config error: {0}")]
     Config(String),
 
     /// Experiment harness errors (unknown scheduler name, bad dimensions…).
-    #[error("experiment error: {0}")]
     Experiment(String),
 
     /// I/O wrapper.
-    #[error("io error: {0}")]
-    Io(#[from] std::io::Error),
+    Io(std::io::Error),
 }
 
+impl fmt::Display for Error {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        match self {
+            Error::Artifact(m) => write!(f, "artifact error: {m}"),
+            Error::ManifestMismatch(m) => write!(f, "manifest dimension mismatch: {m}"),
+            Error::Xla(m) => write!(f, "xla error: {m}"),
+            Error::Cluster(m) => write!(f, "cluster invariant violated: {m}"),
+            Error::Config(m) => write!(f, "config error: {m}"),
+            Error::Experiment(m) => write!(f, "experiment error: {m}"),
+            Error::Io(e) => write!(f, "io error: {e}"),
+        }
+    }
+}
+
+impl std::error::Error for Error {
+    fn source(&self) -> Option<&(dyn std::error::Error + 'static)> {
+        match self {
+            Error::Io(e) => Some(e),
+            _ => None,
+        }
+    }
+}
+
+impl From<std::io::Error> for Error {
+    fn from(e: std::io::Error) -> Self {
+        Error::Io(e)
+    }
+}
+
+#[cfg(feature = "hlo")]
 impl From<xla::Error> for Error {
     fn from(e: xla::Error) -> Self {
         Error::Xla(e.to_string())
@@ -43,3 +67,16 @@ impl From<xla::Error> for Error {
 
 /// Crate-wide result alias.
 pub type Result<T> = std::result::Result<T, Error>;
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn display_prefixes() {
+        assert!(Error::Cluster("x".into()).to_string().starts_with("cluster"));
+        assert!(Error::Config("x".into()).to_string().starts_with("config"));
+        let io: Error = Error::from(std::io::Error::other("boom"));
+        assert!(io.to_string().contains("boom"));
+    }
+}

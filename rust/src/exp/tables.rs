@@ -13,7 +13,7 @@ use crate::metrics::stats::Summary;
 use crate::resources::ResVec;
 use crate::rng::Rng;
 use crate::scheduler::progressive::progressive_fill;
-use crate::scheduler::{policy_by_name, AllocState, FrameworkEntry, NativeScorer, Scorer};
+use crate::scheduler::{policy_by_name, AllocState, FrameworkEntry, ScoringEngine};
 use crate::sim::runner;
 
 /// The schedulers of Table 1, in the paper's row order.
@@ -60,11 +60,15 @@ pub fn illustrative_state() -> AllocState {
 
 /// One progressive-filling trial for `policy`, returning (x, unused, total)
 /// flattened in paper order.
-pub fn one_trial(policy: &str, seed: u64, scorer: &mut dyn Scorer) -> Result<([f64; 4], [f64; 4], f64)> {
+pub fn one_trial(
+    policy: &str,
+    seed: u64,
+    engine: &mut ScoringEngine,
+) -> Result<([f64; 4], [f64; 4], f64)> {
     let mut st = illustrative_state();
     let policy = policy_by_name(policy)?;
     let mut rng = Rng::new(seed);
-    let out = progressive_fill(&mut st, &policy, scorer, &mut rng)?;
+    let out = progressive_fill(&mut st, &policy, engine, &mut rng)?;
     let x = [out.x[0][0], out.x[0][1], out.x[1][0], out.x[1][1]];
     let unused = [out.unused[0][0], out.unused[0][1], out.unused[1][0], out.unused[1][1]];
     Ok((x, unused, out.total))
@@ -77,8 +81,8 @@ pub fn run_illustrative(trials: usize, seed: u64) -> IllustrativeTables {
     for &policy in TABLE_POLICIES {
         let n = if RRR_POLICIES.contains(&policy) { trials } else { 1 };
         let results = runner::run_trials(n, seed ^ hash_name(policy), runner::default_threads(), |_i, s| {
-            let mut scorer = NativeScorer::new();
-            one_trial(policy, s, &mut scorer).expect("trial failed")
+            let mut engine = ScoringEngine::native();
+            one_trial(policy, s, &mut engine).expect("trial failed")
         });
         let mut xs = [(); 4].map(|_| Vec::with_capacity(n));
         let mut us = [(); 4].map(|_| Vec::with_capacity(n));

@@ -11,6 +11,25 @@
 //! allocator of a Mesos cluster scheduling Spark `Pi` and `WordCount` job
 //! batches on heterogeneous agents (Figures 3–9).
 //!
+//! ## Architecture: dynamic dims, incremental scoring
+//!
+//! The scoring core is **dynamically sized**: [`scheduler::ScoreInputs`] /
+//! [`scheduler::ScoreSet`] are flat row-major `Vec` tensors with runtime
+//! `(n, m, r)` dimensions, so the same scheduler code drives the paper's
+//! 2-server illustrative study and 256-agent × 512-framework scale
+//! scenarios ([`cluster::ServerType::scaled`],
+//! [`sim::online::OnlineConfig::scaled`]).
+//!
+//! Allocation decisions flow through a [`scheduler::ScoringEngine`]:
+//! mutations of [`scheduler::AllocState`] (place / unplace / arrivals /
+//! agent registration) log what they dirtied, and the engine's
+//! [`scheduler::IncrementalScorer`] re-scores only the dirty framework rows
+//! and agent columns — maintaining cached per-role task totals and
+//! per-agent residuals — falling back to a full recompute on structural
+//! changes. Incremental results are bit-identical to full recomputes
+//! (property-tested), so every paper table and figure reproduces exactly
+//! while the hot path scales.
+//!
 //! ## Layering
 //!
 //! * **Layer 3 (this crate)** — the coordinator: a faithful discrete-event
@@ -23,11 +42,16 @@
 //! * **Layer 1 (python/compile/kernels/)** — the fused Pallas scoring kernel
 //!   and the Monte-Carlo-π / wordcount task kernels.
 //!
-//! The [`runtime`] module loads the AOT artifacts through PJRT (the `xla`
-//! crate) so the allocator can score through the compiled kernel
-//! (`--scorer hlo`) and the e2e example can run real task compute. The
-//! native Rust scorer ([`scheduler::scorer`]) implements identical math and
-//! is parity-tested against the artifact.
+//! The [`runtime`] module (cargo feature `hlo`) loads the AOT artifacts
+//! through PJRT (the `xla` crate) so the allocator can score through the
+//! compiled kernel (`--scorer hlo`) and the e2e example can run real task
+//! compute. The native Rust scorer ([`scheduler::scorer`]) implements
+//! identical math and is parity-tested against the artifact. **The padded
+//! `N_MAX × M_MAX × R_MAX` layout exists only at that boundary**
+//! (`runtime::scorer::pack_padded`): the dynamic state is embedded into the
+//! artifact's fixed tensors, with a clean error when an instance exceeds
+//! them. The default build has no XLA dependency at all — `cargo build &&
+//! cargo test` work without Python or artifacts.
 //!
 //! ## Quick start
 //!
@@ -52,19 +76,23 @@ pub mod mesos;
 pub mod metrics;
 pub mod resources;
 pub mod rng;
+#[cfg(feature = "hlo")]
 pub mod runtime;
 pub mod scheduler;
 pub mod sim;
 pub mod spark;
 pub mod testing;
 
-/// Maximum frameworks in a padded scoring instance (mirrors
+/// Maximum frameworks in a **padded HLO-boundary instance** (mirrors
 /// `python/compile/kernels/__init__.py::N_MAX`; checked against
-/// `artifacts/manifest.json` at runtime start-up).
+/// `artifacts/manifest.json` at runtime start-up). The scheduler core
+/// itself is dynamically sized — these caps only bound what the AOT
+/// artifact can score.
 pub const N_MAX: usize = 16;
-/// Maximum servers/agents in a padded scoring instance.
+/// Maximum servers/agents in a padded HLO-boundary instance.
 pub const M_MAX: usize = 8;
-/// Maximum resource kinds in a padded scoring instance.
+/// Maximum resource kinds in a padded HLO-boundary instance (also the
+/// fixed width of [`resources::ResVec`]).
 pub const R_MAX: usize = 4;
 /// Finite stand-in for +inf in score tensors (same value as the kernels).
 pub const BIG: f64 = 1.0e30;

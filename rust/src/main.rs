@@ -1,12 +1,14 @@
 //! `mesos-fair` binary: the leader entrypoint (CLI over the experiment
 //! harness and the online coordinator). See `cli::USAGE`.
+//!
+//! The `hlo`-feature-gated commands (`--scorer hlo`, `e2e`, `parity`)
+//! explain themselves away in default builds instead of failing to parse.
 
 use mesos_fair::cli::{Args, USAGE};
 use mesos_fair::config::load_online_config;
 use mesos_fair::error::{Error, Result};
 use mesos_fair::exp::{run_figure, run_illustrative, FIGURE_IDS};
 use mesos_fair::mesos::AllocatorMode;
-use mesos_fair::runtime::{ArtifactRuntime, HloScorer, WorkloadRuntime};
 use mesos_fair::scheduler::{NativeScorer, Scorer, POLICY_NAMES};
 use mesos_fair::sim::online::{OnlineConfig, OnlineSim};
 
@@ -24,7 +26,12 @@ fn main() {
 fn scorer_backend(args: &Args) -> Result<Box<dyn Scorer>> {
     match args.flag_or("scorer", "native").as_str() {
         "native" => Ok(Box::new(NativeScorer::new())),
-        "hlo" => Ok(Box::new(HloScorer::open_default()?)),
+        #[cfg(feature = "hlo")]
+        "hlo" => Ok(Box::new(mesos_fair::runtime::HloScorer::open_default()?)),
+        #[cfg(not(feature = "hlo"))]
+        "hlo" => Err(Error::Config(
+            "this binary was built without the 'hlo' feature; rebuild with --features hlo".into(),
+        )),
         other => Err(Error::Config(format!("unknown scorer backend '{other}'"))),
     }
 }
@@ -101,7 +108,14 @@ fn build_online_config(args: &Args) -> Result<OnlineConfig> {
         other => return Err(Error::Config(format!("unknown mode '{other}'"))),
     };
     let jobs = args.flag_usize("jobs", 50)?;
-    let mut cfg = if args.has("staged") {
+    let mut cfg = if let Some(agents) = args.flag("agents") {
+        // the scale scenario family: --agents M [--queues N]
+        let agents: usize = agents
+            .parse()
+            .map_err(|_| Error::Config("--agents expects an integer".into()))?;
+        let queues = args.flag_usize("queues", 2 * agents)?;
+        OnlineConfig::scaled(&policy, mode, agents, queues, jobs)
+    } else if args.has("staged") {
         OnlineConfig::paper_staged(&policy, jobs)
     } else if args.has("homogeneous") {
         OnlineConfig::paper_homogeneous(&policy, mode, jobs)
@@ -130,7 +144,9 @@ fn print_online(r: &mesos_fair::sim::online::OnlineResult) {
     println!("allocator     : {} cycles, {} grants", r.cycles, r.grants);
 }
 
+#[cfg(feature = "hlo")]
 fn cmd_e2e(args: &Args) -> Result<()> {
+    use mesos_fair::runtime::WorkloadRuntime;
     let jobs = args.flag_usize("jobs", 2)?;
     let seed = args.flag_u64("seed", 0x5EED)?;
     let policy = args.flag_or("scheduler", "rpsdsf");
@@ -162,8 +178,17 @@ fn cmd_e2e(args: &Args) -> Result<()> {
     Ok(())
 }
 
+#[cfg(not(feature = "hlo"))]
+fn cmd_e2e(_args: &Args) -> Result<()> {
+    Err(Error::Config(
+        "the e2e command needs the PJRT runtime; rebuild with --features hlo".into(),
+    ))
+}
+
+#[cfg(feature = "hlo")]
 fn cmd_parity(args: &Args) -> Result<()> {
     use mesos_fair::exp::tables::illustrative_state;
+    use mesos_fair::runtime::{ArtifactRuntime, HloScorer};
     let mut native = NativeScorer::new();
     let mut hlo = HloScorer::new(ArtifactRuntime::open_default()?);
     let trials = args.flag_usize("trials", 50)?;
@@ -182,21 +207,21 @@ fn cmd_parity(args: &Args) -> Result<()> {
         let si = st.score_inputs();
         let a = native.score(&si)?;
         let b = hlo.score(&si)?;
-        for n in 0..mesos_fair::N_MAX {
-            let pairs = [(a.drf[n], b.drf[n]), (a.tsf[n], b.tsf[n])];
+        for n in 0..si.n() {
+            let pairs = [(a.drf(n), b.drf(n)), (a.tsf(n), b.tsf(n))];
             for (x, y) in pairs {
                 if !(mesos_fair::is_big(x) && mesos_fair::is_big(y)) {
                     max_err = max_err.max((x - y).abs());
                 }
             }
-            for i in 0..mesos_fair::M_MAX {
-                if a.feas[n][i] != b.feas[n][i] {
+            for i in 0..si.m() {
+                if a.feas(n, i) != b.feas(n, i) {
                     return Err(Error::Experiment(format!("feasibility mismatch at ({n},{i})")));
                 }
                 for (x, y) in [
-                    (a.psdsf[n][i], b.psdsf[n][i]),
-                    (a.rpsdsf[n][i], b.rpsdsf[n][i]),
-                    (a.fit[n][i], b.fit[n][i]),
+                    (a.psdsf(n, i), b.psdsf(n, i)),
+                    (a.rpsdsf(n, i), b.rpsdsf(n, i)),
+                    (a.fit(n, i), b.fit(n, i)),
                 ] {
                     if !(mesos_fair::is_big(x) && mesos_fair::is_big(y)) {
                         max_err = max_err.max((x - y).abs());
@@ -211,4 +236,11 @@ fn cmd_parity(args: &Args) -> Result<()> {
     }
     println!("parity OK");
     Ok(())
+}
+
+#[cfg(not(feature = "hlo"))]
+fn cmd_parity(_args: &Args) -> Result<()> {
+    Err(Error::Config(
+        "the parity command needs the PJRT runtime; rebuild with --features hlo".into(),
+    ))
 }

@@ -7,15 +7,22 @@
 //! possible. Frameworks that decline an offer are not re-offered the same
 //! agent within the cycle (Mesos' offer-decline backoff, collapsed to the
 //! cycle granularity).
+//!
+//! Scoring flows through a [`ScoringEngine`]: a grant dirties one framework
+//! row and one agent column and the next iteration re-scores just those;
+//! decline-only iterations come straight from the engine's cache. The
+//! handler masks (wants / declined / oblivious adjustments) are applied to
+//! a clone of the cached tensors, never to the cache itself.
 
 use crate::cluster::AgentId;
 use crate::error::Result;
 use crate::mesos::offer::Offer;
 use crate::resources::ResVec;
 use crate::rng::Rng;
+use crate::scheduler::engine::ScoringEngine;
 use crate::scheduler::policy::PolicyKind;
 use crate::scheduler::server_select;
-use crate::scheduler::{AllocState, Policy, ScoreSet, Scorer};
+use crate::scheduler::{AllocState, Policy, ScoreInputs, ScoreSet};
 use std::collections::HashSet;
 
 /// Oblivious ("coarse-grained") vs workload-characterized ("fine-grained").
@@ -65,7 +72,7 @@ const NEW_FRAMEWORK_SCORE: f64 = -1.0;
 pub fn allocation_cycle(
     state: &mut AllocState,
     policy: &Policy,
-    scorer: &mut dyn Scorer,
+    engine: &mut ScoringEngine,
     mode: AllocatorMode,
     handler: &mut dyn OfferHandler,
     no_inference: &[bool],
@@ -74,22 +81,18 @@ pub fn allocation_cycle(
     let mut grants = Vec::new();
     let mut declined: HashSet<(usize, AgentId)> = HashSet::new();
     // Hard bound: each iteration either grants (bounded by capacity) or
-    // declines (bounded by N_MAX * M_MAX pairs).
-    let max_iters = 10_000;
-
-    // Scores only change when a grant mutates state; decline-only iterations
-    // reuse the cached tensors (see EXPERIMENTS.md §Perf).
-    let mut cached: Option<(crate::scheduler::ScoreInputs, ScoreSet)> = None;
+    // declines (bounded by n_frameworks * n_agents pairs).
+    let max_iters = 10_000.max(4 * state.n_frameworks() * state.pool.len());
 
     for _ in 0..max_iters {
-        if cached.is_none() {
-            let si_new = state.score_inputs();
-            let set_new = scorer.score(&si_new)?;
-            cached = Some((si_new, set_new));
-        }
-        let (si_ref, base) = cached.as_ref().unwrap();
-        let si = si_ref.clone();
-        let mut set = base.clone();
+        // The engine re-scores only what the last grant dirtied;
+        // decline-only iterations are pure cache hits. The inputs are
+        // borrowed (never mutated here); only the ScoreSet is cloned, as
+        // the handler masks below must not touch the engine's cache.
+        let (si, mut set) = {
+            let (si_ref, set_ref) = engine.scores(state)?;
+            (si_ref, set_ref.clone())
+        };
         mask_unwanted(&mut set, state, handler, &declined);
         if mode == AllocatorMode::Oblivious {
             oblivious_adjust(&mut set, state, handler, no_inference, &declined);
@@ -104,15 +107,17 @@ pub fn allocation_cycle(
                 let order = server_select::rrr_order(&candidates, rng);
                 let mut found = None;
                 for i in order {
-                    if let Some(n) = policy.pick_for_agent(&set, &si, i, rng) {
+                    if let Some(n) = policy.pick_for_agent(&set, si, i, rng) {
                         found = Some((n, i));
                         break;
                     }
                 }
                 found
             }
-            PolicyKind::Joint => policy.pick_joint(&set, &si, &candidates),
-            PolicyKind::BestFit => pick_bestfit_with_fallback(policy, &set, &si, &candidates, no_inference, rng),
+            PolicyKind::Joint => policy.pick_joint(&set, si, &candidates),
+            PolicyKind::BestFit => {
+                pick_bestfit_with_fallback(policy, &set, si, &candidates, no_inference, rng)
+            }
         };
         let Some((n, i)) = pick else { break };
 
@@ -131,7 +136,6 @@ pub fn allocation_cycle(
         debug_assert!(amount.fits_within(&offer.resources));
         state.place(n, i, &amount, count)?;
         grants.push(Grant { framework: n, agent: i, amount, count });
-        cached = None; // state changed: rescore next iteration
     }
     Ok(grants)
 }
@@ -152,7 +156,7 @@ fn mask_unwanted(
         let wanted = state.framework(n).active && handler.wants(n);
         for i in 0..state.pool.len() {
             if !wanted || declined.contains(&(n, i)) {
-                set.feas[n][i] = false;
+                set.set_feas(n, i, false);
             }
         }
     }
@@ -181,16 +185,16 @@ fn oblivious_adjust(
             let agent = state.pool.agent(i);
             let open = agent.registered && agent.residual().any_positive();
             if open {
-                set.feas[n][i] = true;
+                set.set_feas(n, i, true);
                 if unknown {
-                    set.drf[n] = NEW_FRAMEWORK_SCORE;
-                    set.tsf[n] = NEW_FRAMEWORK_SCORE;
-                    set.psdsf[n][i] = NEW_FRAMEWORK_SCORE;
-                    set.rpsdsf[n][i] = NEW_FRAMEWORK_SCORE;
-                    set.fit[n][i] = NEW_FRAMEWORK_SCORE;
+                    set.set_drf(n, NEW_FRAMEWORK_SCORE);
+                    set.set_tsf(n, NEW_FRAMEWORK_SCORE);
+                    set.set_psdsf(n, i, NEW_FRAMEWORK_SCORE);
+                    set.set_rpsdsf(n, i, NEW_FRAMEWORK_SCORE);
+                    set.set_fit(n, i, NEW_FRAMEWORK_SCORE);
                 }
             } else {
-                set.feas[n][i] = false;
+                set.set_feas(n, i, false);
             }
         }
     }
@@ -201,7 +205,7 @@ fn oblivious_adjust(
 fn pick_bestfit_with_fallback(
     policy: &Policy,
     set: &ScoreSet,
-    si: &crate::scheduler::ScoreInputs,
+    si: &ScoreInputs,
     candidates: &[usize],
     no_inference: &[bool],
     rng: &mut Rng,
@@ -215,7 +219,7 @@ fn pick_bestfit_with_fallback(
             continue;
         }
         for &i in candidates {
-            if set.feas[n][i] {
+            if set.feas(n, i) {
                 return Some((n, i));
             }
         }
@@ -227,7 +231,7 @@ fn pick_bestfit_with_fallback(
 mod tests {
     use super::*;
     use crate::cluster::{AgentPool, ServerType};
-    use crate::scheduler::{policy_by_name, FrameworkEntry, NativeScorer};
+    use crate::scheduler::{policy_by_name, FrameworkEntry};
 
     /// Accepts up to `want` executors of fixed demand `d` per framework.
     struct GreedyHandler {
@@ -277,10 +281,16 @@ mod tests {
     fn characterized_cycle_fills_cluster() {
         let (mut st, mut h) = paper_state();
         let policy = policy_by_name("psdsf").unwrap();
-        let mut scorer = NativeScorer::new();
+        let mut engine = ScoringEngine::native();
         let mut rng = Rng::new(1);
         let grants = allocation_cycle(
-            &mut st, &policy, &mut scorer, AllocatorMode::Characterized, &mut h, &[], &mut rng,
+            &mut st,
+            &policy,
+            &mut engine,
+            AllocatorMode::Characterized,
+            &mut h,
+            &[],
+            &mut rng,
         )
         .unwrap();
         assert!(!grants.is_empty());
@@ -298,11 +308,17 @@ mod tests {
     fn oblivious_cycle_offers_whole_agents() {
         let (mut st, mut h) = paper_state();
         let policy = policy_by_name("drf").unwrap();
-        let mut scorer = NativeScorer::new();
+        let mut engine = ScoringEngine::native();
         let mut rng = Rng::new(2);
         let no_inf = vec![true, true];
         let grants = allocation_cycle(
-            &mut st, &policy, &mut scorer, AllocatorMode::Oblivious, &mut h, &no_inf, &mut rng,
+            &mut st,
+            &policy,
+            &mut engine,
+            AllocatorMode::Oblivious,
+            &mut h,
+            &no_inf,
+            &mut rng,
         )
         .unwrap();
         // coarse grants: at least one multi-executor chunk
@@ -318,7 +334,7 @@ mod tests {
         let grants = allocation_cycle(
             &mut st,
             &policy,
-            &mut NativeScorer::new(),
+            &mut ScoringEngine::native(),
             AllocatorMode::Characterized,
             &mut h,
             &[],
@@ -348,7 +364,7 @@ mod tests {
         allocation_cycle(
             &mut st,
             &policy,
-            &mut NativeScorer::new(),
+            &mut ScoringEngine::native(),
             AllocatorMode::Characterized,
             &mut h,
             &[],
@@ -370,7 +386,7 @@ mod tests {
         allocation_cycle(
             &mut st,
             &policy,
-            &mut NativeScorer::new(),
+            &mut ScoringEngine::native(),
             AllocatorMode::Characterized,
             &mut h,
             &[],

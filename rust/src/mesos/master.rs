@@ -8,18 +8,17 @@ use crate::mesos::allocator::{allocation_cycle, AllocatorMode, Grant, OfferHandl
 use crate::mesos::framework::{DemandTracker, InferenceRule};
 use crate::resources::ResVec;
 use crate::rng::Rng;
-use crate::scheduler::{AllocState, FrameworkEntry, Policy, Scorer};
-use crate::N_MAX;
+use crate::scheduler::{AllocState, FrameworkEntry, Policy, Scorer, ScoringEngine};
 use std::collections::HashMap;
 
 /// The master. Owns the allocator state (pool + frameworks + x matrix), the
-/// fairness policy, the scoring backend and the per-framework demand
+/// fairness policy, the scoring engine and the per-framework demand
 /// trackers (oblivious mode).
 pub struct Master {
     pub state: AllocState,
     pub policy: Policy,
     pub mode: AllocatorMode,
-    scorer: Box<dyn Scorer>,
+    engine: ScoringEngine,
     /// Demand inference per Mesos *role* (oblivious mode): a role's history
     /// persists across its jobs' churn, like Mesos' role-level accounting.
     trackers: HashMap<usize, DemandTracker>,
@@ -31,17 +30,30 @@ pub struct Master {
 }
 
 impl Master {
+    /// Build from a scoring backend. The native backend is routed through
+    /// the incremental engine; external backends (HLO) get cached full
+    /// recomputes.
     pub fn new(
         pool: AgentPool,
         policy: Policy,
         mode: AllocatorMode,
         scorer: Box<dyn Scorer>,
     ) -> Self {
+        Self::with_engine(pool, policy, mode, ScoringEngine::from_backend(scorer))
+    }
+
+    /// Build with an explicit scoring engine.
+    pub fn with_engine(
+        pool: AgentPool,
+        policy: Policy,
+        mode: AllocatorMode,
+        engine: ScoringEngine,
+    ) -> Self {
         Master {
             state: AllocState::new(pool),
             policy,
             mode,
-            scorer,
+            engine,
             trackers: HashMap::new(),
             inference: InferenceRule::Mean,
             cycles: 0,
@@ -53,10 +65,18 @@ impl Master {
         self.inference = rule;
     }
 
+    /// `(full, incremental)` scorer pass counts (native engine only).
+    pub fn rescore_stats(&self) -> Option<(u64, u64)> {
+        self.engine.rescore_stats()
+    }
+
     /// Register a framework. In characterized mode `declared` must be the
     /// true per-executor demand; in oblivious mode it is ignored (the
-    /// allocator starts with no estimate). Reuses a free slot if available;
-    /// errors when all `N_MAX` slots are busy (caller retries later).
+    /// allocator starts with no estimate). Reuses a drained slot when one
+    /// exists; otherwise grows the (dynamically sized) state — unless the
+    /// scoring backend is a padded AOT artifact, in which case growth past
+    /// the artifact's framework dim errors here (the caller retries after
+    /// releases) instead of aborting mid-cycle inside the scorer.
     pub fn register_framework(
         &mut self,
         name: String,
@@ -81,12 +101,15 @@ impl Master {
                 return Ok(n);
             }
         }
-        if self.state.n_frameworks() >= N_MAX {
-            return Err(Error::Cluster(format!(
-                "all {N_MAX} framework slots busy; retry after releases"
-            )));
+        if let Some(cap) = self.engine.framework_cap() {
+            if self.state.n_frameworks() >= cap {
+                return Err(Error::Cluster(format!(
+                    "all {cap} framework slots busy (padded '{}' scoring backend); retry after \
+                     releases",
+                    self.engine.name()
+                )));
+            }
         }
-        let _ = kinds;
         let n = self.state.add_framework(entry);
         Ok(n)
     }
@@ -106,15 +129,25 @@ impl Master {
     }
 
     /// Run one allocation cycle against the given offer handler.
-    pub fn allocate(&mut self, handler: &mut dyn OfferHandler, rng: &mut Rng) -> Result<Vec<Grant>> {
+    pub fn allocate(
+        &mut self,
+        handler: &mut dyn OfferHandler,
+        rng: &mut Rng,
+    ) -> Result<Vec<Grant>> {
         self.cycles += 1;
-        // refresh believed demands from inference (oblivious mode)
+        // refresh believed demands from inference (oblivious mode); only
+        // actually-changed demands touch the state, so the scoring cache
+        // survives quiescent cycles
         let mut no_inference = vec![false; self.state.n_frameworks()];
         if self.mode == AllocatorMode::Oblivious {
             for n in 0..self.state.n_frameworks() {
                 let role = self.state.role_of(n);
                 match self.trackers.get(&role).and_then(|t| t.inferred()) {
-                    Some(d) => self.state.framework_mut(n).demand = d,
+                    Some(d) => {
+                        if self.state.framework(n).demand != d {
+                            self.state.framework_mut(n).demand = d;
+                        }
+                    }
                     None => no_inference[n] = true,
                 }
             }
@@ -122,7 +155,7 @@ impl Master {
         let grants = allocation_cycle(
             &mut self.state,
             &self.policy,
-            self.scorer.as_mut(),
+            &mut self.engine,
             self.mode,
             handler,
             &no_inference,
@@ -141,7 +174,13 @@ impl Master {
     }
 
     /// A framework's executor resources return to agent `agent`.
-    pub fn release(&mut self, framework: usize, agent: AgentId, amount: &ResVec, count: f64) -> Result<()> {
+    pub fn release(
+        &mut self,
+        framework: usize,
+        agent: AgentId,
+        amount: &ResVec,
+        count: f64,
+    ) -> Result<()> {
         self.state.unplace(framework, agent, amount, count)?;
         let role = self.state.role_of(framework);
         if let Some(t) = self.trackers.get_mut(&role) {
@@ -157,7 +196,7 @@ impl Master {
 
     /// Register a pending agent (Fig-9 staging).
     pub fn agent_up(&mut self, agent: AgentId) {
-        self.state.pool.agent_mut(agent).registered = true;
+        self.state.agent_up(agent);
     }
 
     /// Allocated fraction per resource over registered agents.
@@ -247,13 +286,16 @@ mod tests {
     }
 
     #[test]
-    fn slots_exhaust_then_error() {
+    fn framework_slots_grow_without_bound() {
+        // the padded kernel used to cap concurrent frameworks at 16; the
+        // dynamic core just grows
         let mut m = master(AllocatorMode::Characterized);
         let pi = ResVec::cpu_mem(2.0, 2.0);
-        for k in 0..N_MAX {
-            m.register_framework(format!("f{k}"), Some(pi), 1.0).unwrap();
+        for k in 0..100 {
+            let n = m.register_framework(format!("f{k}"), Some(pi), 1.0).unwrap();
+            assert_eq!(n, k);
         }
-        assert!(m.register_framework("extra".into(), Some(pi), 1.0).is_err());
+        assert_eq!(m.state.n_frameworks(), 100);
     }
 
     #[test]

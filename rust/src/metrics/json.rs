@@ -60,6 +60,12 @@ impl Json {
         s
     }
 
+    /// Serialize to a file (the `BENCH_*.json` perf-trajectory exports).
+    pub fn write_to(&self, path: &str) -> Result<()> {
+        std::fs::write(path, self.render() + "\n")?;
+        Ok(())
+    }
+
     fn write(&self, out: &mut String) {
         match self {
             Json::Null => out.push_str("null"),

@@ -1,6 +1,12 @@
 //! PJRT runtime: loads the AOT-compiled HLO artifacts (`make artifacts`)
 //! and executes them from the rust hot path — Python is never involved at
-//! run time.
+//! run time. Compiled only with the `hlo` cargo feature; the default build
+//! has no XLA dependency (the scheduler uses the native scorer). The
+//! in-tree `xla` stub satisfies the API for feature-gated builds without
+//! the real bindings.
+//!
+//! This layer is also where the dynamic-dimension scheduler core meets the
+//! artifact's fixed padded tensors: see [`scorer::pack_padded`].
 //!
 //! * [`client::ArtifactRuntime`] — PJRT CPU client + compiled-executable
 //!   cache + the manifest check that keeps the rust constants and the
@@ -19,7 +25,7 @@ pub mod scorer;
 pub mod workload;
 
 pub use client::ArtifactRuntime;
-pub use scorer::HloScorer;
+pub use scorer::{pack_padded, HloScorer, PaddedInputs};
 pub use workload::WorkloadRuntime;
 
 /// Default artifact directory, relative to the repo root.

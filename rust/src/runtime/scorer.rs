@@ -5,11 +5,80 @@
 //! backends (up to f32 rounding) is asserted in
 //! `rust/tests/runtime_parity.rs` and benchmarked in
 //! `rust/benches/scorer.rs`.
+//!
+//! This module is the **padded boundary**: the scheduler core is
+//! dynamically sized, but the AOT artifact was compiled for fixed
+//! `N_MAX × M_MAX × R_MAX` tensors. [`pack_padded`] embeds the dynamic
+//! state into those tensors (zero-padding the slack, rebuilding the role
+//! matrix and masks) and errors cleanly when the instance exceeds the
+//! artifact's dimensions — scale scenarios beyond the artifact must use the
+//! native scorer.
 
-use crate::error::Result;
+use crate::error::{Error, Result};
 use crate::runtime::client::{literal_f32, ArtifactRuntime};
 use crate::scheduler::{ScoreInputs, ScoreSet, Scorer};
 use crate::{M_MAX, N_MAX, R_MAX};
+
+/// The dynamic state embedded in the artifact's fixed padded tensors.
+#[derive(Debug, Clone)]
+pub struct PaddedInputs {
+    pub c: [[f64; R_MAX]; M_MAX],
+    pub x: [[f64; M_MAX]; N_MAX],
+    pub d: [[f64; R_MAX]; N_MAX],
+    pub phi: [f64; N_MAX],
+    /// `rolemat[a][b] = 1` iff same Mesos role (identity = per-framework
+    /// fairness) — rebuilt from the dynamic state's role vector.
+    pub rolemat: [[f64; N_MAX]; N_MAX],
+    pub fmask: [f64; N_MAX],
+    pub smask: [f64; M_MAX],
+    pub rmask: [f64; R_MAX],
+}
+
+/// Pad dynamic inputs into the artifact layout. Errors when the instance
+/// is larger than the artifact was compiled for.
+pub fn pack_padded(si: &ScoreInputs) -> Result<PaddedInputs> {
+    let (n, m, r) = (si.n(), si.m(), si.r());
+    if n > N_MAX || m > M_MAX || r > R_MAX {
+        return Err(Error::Artifact(format!(
+            "instance ({n} frameworks × {m} agents × {r} resources) exceeds the AOT artifact's \
+             padded dims ({N_MAX} × {M_MAX} × {R_MAX}); use the native scorer or rebuild the \
+             artifacts with larger dims"
+        )));
+    }
+    let mut p = PaddedInputs {
+        c: [[0.0; R_MAX]; M_MAX],
+        x: [[0.0; M_MAX]; N_MAX],
+        d: [[0.0; R_MAX]; N_MAX],
+        phi: [1.0; N_MAX],
+        rolemat: [[0.0; N_MAX]; N_MAX],
+        fmask: [0.0; N_MAX],
+        smask: [0.0; M_MAX],
+        rmask: [0.0; R_MAX],
+    };
+    for i in 0..m {
+        for rr in 0..r {
+            p.c[i][rr] = si.c(i, rr);
+        }
+        p.smask[i] = si.smask(i);
+    }
+    for ni in 0..n {
+        for rr in 0..r {
+            p.d[ni][rr] = si.d(ni, rr);
+        }
+        p.phi[ni] = si.phi(ni);
+        p.fmask[ni] = si.fmask(ni);
+        for i in 0..m {
+            p.x[ni][i] = si.x(ni, i);
+        }
+        for nb in 0..n {
+            p.rolemat[ni][nb] = if si.same_role(ni, nb) { 1.0 } else { 0.0 };
+        }
+    }
+    for rr in 0..r {
+        p.rmask[rr] = 1.0;
+    }
+    Ok(p)
+}
 
 /// Scorer backend executing `artifacts/scores.hlo.txt`.
 pub struct HloScorer {
@@ -37,35 +106,37 @@ impl HloScorer {
     }
 
     fn pack(inputs: &ScoreInputs) -> Result<Vec<xla::Literal>> {
+        let p = pack_padded(inputs)?;
         let mut c = Vec::with_capacity(M_MAX * R_MAX);
-        for row in &inputs.c {
+        for row in &p.c {
             c.extend_from_slice(row);
         }
         let mut x = Vec::with_capacity(N_MAX * M_MAX);
-        for row in &inputs.x {
+        for row in &p.x {
             x.extend_from_slice(row);
         }
         let mut d = Vec::with_capacity(N_MAX * R_MAX);
-        for row in &inputs.d {
+        for row in &p.d {
             d.extend_from_slice(row);
         }
         let mut rolemat = Vec::with_capacity(N_MAX * N_MAX);
-        for row in &inputs.rolemat {
+        for row in &p.rolemat {
             rolemat.extend_from_slice(row);
         }
         Ok(vec![
             literal_f32(&c, &[M_MAX as i64, R_MAX as i64])?,
             literal_f32(&x, &[N_MAX as i64, M_MAX as i64])?,
             literal_f32(&d, &[N_MAX as i64, R_MAX as i64])?,
-            literal_f32(&inputs.phi, &[N_MAX as i64])?,
+            literal_f32(&p.phi, &[N_MAX as i64])?,
             literal_f32(&rolemat, &[N_MAX as i64, N_MAX as i64])?,
-            literal_f32(&inputs.fmask, &[N_MAX as i64])?,
-            literal_f32(&inputs.smask, &[M_MAX as i64])?,
-            literal_f32(&inputs.rmask, &[R_MAX as i64])?,
+            literal_f32(&p.fmask, &[N_MAX as i64])?,
+            literal_f32(&p.smask, &[M_MAX as i64])?,
+            literal_f32(&p.rmask, &[R_MAX as i64])?,
         ])
     }
 
-    fn unpack(outs: Vec<xla::Literal>) -> Result<ScoreSet> {
+    /// Un-pad the artifact's fixed outputs into a `(n, m)`-sized set.
+    fn unpack(outs: Vec<xla::Literal>, n: usize, m: usize) -> Result<ScoreSet> {
         debug_assert_eq!(outs.len(), 6);
         let drf: Vec<f32> = outs[0].to_vec()?;
         let tsf: Vec<f32> = outs[1].to_vec()?;
@@ -73,16 +144,16 @@ impl HloScorer {
         let rps: Vec<f32> = outs[3].to_vec()?;
         let fit: Vec<f32> = outs[4].to_vec()?;
         let feas: Vec<f32> = outs[5].to_vec()?;
-        let mut set = ScoreSet::empty();
-        for n in 0..N_MAX {
-            set.drf[n] = drf[n] as f64;
-            set.tsf[n] = tsf[n] as f64;
-            for i in 0..M_MAX {
-                let k = n * M_MAX + i;
-                set.psdsf[n][i] = ps[k] as f64;
-                set.rpsdsf[n][i] = rps[k] as f64;
-                set.fit[n][i] = fit[k] as f64;
-                set.feas[n][i] = feas[k] > 0.5;
+        let mut set = ScoreSet::sized(n, m);
+        for ni in 0..n {
+            set.set_drf(ni, drf[ni] as f64);
+            set.set_tsf(ni, tsf[ni] as f64);
+            for i in 0..m {
+                let k = ni * M_MAX + i;
+                set.set_psdsf(ni, i, ps[k] as f64);
+                set.set_rpsdsf(ni, i, rps[k] as f64);
+                set.set_fit(ni, i, fit[k] as f64);
+                set.set_feas(ni, i, feas[k] > 0.5);
             }
         }
         Ok(set)
@@ -97,6 +168,58 @@ impl Scorer for HloScorer {
     fn score(&mut self, inputs: &ScoreInputs) -> Result<ScoreSet> {
         let lits = Self::pack(inputs)?;
         let outs = self.rt.execute("scores", &lits)?;
-        Self::unpack(outs)
+        Self::unpack(outs, inputs.n(), inputs.m())
+    }
+
+    fn padded_caps(&self) -> Option<(usize, usize)> {
+        Some((N_MAX, M_MAX))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::cluster::{AgentPool, ServerType};
+    use crate::resources::ResVec;
+    use crate::scheduler::{AllocState, FrameworkEntry};
+
+    #[test]
+    fn pack_padded_embeds_and_masks() {
+        let mut st = AllocState::new(AgentPool::new(&ServerType::illustrative()));
+        for d in [[5.0, 1.0], [1.0, 5.0]] {
+            st.add_framework(FrameworkEntry {
+                name: "f".into(),
+                demand: ResVec::new(&d),
+                weight: 1.0,
+                active: true,
+            });
+        }
+        st.place_task(0, 0).unwrap();
+        let p = pack_padded(&st.score_inputs()).unwrap();
+        assert_eq!(p.c[0][0], 100.0);
+        assert_eq!(p.x[0][0], 1.0);
+        assert_eq!(p.d[1][1], 5.0);
+        assert_eq!(p.rolemat[0][0], 1.0);
+        assert_eq!(p.rolemat[0][1], 0.0);
+        assert_eq!(p.fmask[1], 1.0);
+        assert_eq!(p.fmask[2], 0.0, "padding slot inactive");
+        assert_eq!(p.smask[2], 0.0);
+        assert_eq!(p.rmask[1], 1.0);
+        assert_eq!(p.rmask[2], 0.0);
+    }
+
+    #[test]
+    fn pack_padded_rejects_oversize_instances() {
+        let types: Vec<ServerType> =
+            (0..M_MAX + 1).map(|k| ServerType::new(format!("s{k}"), ResVec::new(&[8.0, 8.0]))).collect();
+        let mut st = AllocState::new(AgentPool::new(&types));
+        st.add_framework(FrameworkEntry {
+            name: "f".into(),
+            demand: ResVec::new(&[1.0, 1.0]),
+            weight: 1.0,
+            active: true,
+        });
+        let err = pack_padded(&st.score_inputs()).unwrap_err();
+        assert!(err.to_string().contains("exceeds"), "{err}");
     }
 }

@@ -11,35 +11,28 @@
 //! Progressive filling repeatedly grants one task to the framework with the
 //! minimum `s_n` that still fits somewhere. Under Mesos this is the default
 //! allocator criterion, with agents visited in randomized round-robin.
+//!
+//! Both `C_r` and the role-aggregated `x_n` come precomputed on
+//! [`ScoreInputs`], so one share is O(R).
 
 use crate::is_big;
 use crate::scheduler::ScoreInputs;
 use crate::BIG;
 
-/// Global dominant share of framework `n` given padded inputs.
+/// Global dominant share of framework `n`.
 ///
-/// Returns [`BIG`] for padding slots, inactive frameworks and frameworks
-/// with no positive demand on any real resource (they can never run a task,
-/// so they must never win the argmin).
+/// Returns [`BIG`] for inactive frameworks and frameworks with no positive
+/// demand on any resource (they can never run a task, so they must never
+/// win the argmin).
 pub fn dominant_share(si: &ScoreInputs, n: usize) -> f64 {
-    if si.fmask[n] < 0.5 {
+    if si.fmask(n) < 0.5 {
         return BIG;
     }
-    // C_r over registered servers.
-    let mut ctot = [0.0f64; crate::R_MAX];
-    for i in 0..si.m {
-        if si.smask[i] > 0.5 {
-            for r in 0..si.r {
-                ctot[r] += si.c[i][r];
-            }
-        }
-    }
-    // role-aggregated x_n over registered servers.
-    let xn = crate::scheduler::role_total(si, n);
+    let xn = si.role_total(n);
     let mut share: Option<f64> = None;
-    for r in 0..si.r {
-        if si.rmask[r] > 0.5 && si.d[n][r] > 0.0 && ctot[r] > 0.0 {
-            let s = xn * si.d[n][r] / (si.phi[n] * ctot[r]);
+    for r in 0..si.r() {
+        if si.d(n, r) > 0.0 && si.ctot(r) > 0.0 {
+            let s = xn * si.d(n, r) / (si.phi(n) * si.ctot(r));
             share = Some(share.map_or(s, |b: f64| b.max(s)));
         }
     }
@@ -47,12 +40,8 @@ pub fn dominant_share(si: &ScoreInputs, n: usize) -> f64 {
 }
 
 /// All global dominant shares.
-pub fn shares(si: &ScoreInputs) -> [f64; crate::N_MAX] {
-    let mut out = [BIG; crate::N_MAX];
-    for (n, o) in out.iter_mut().enumerate().take(si.n) {
-        *o = dominant_share(si, n);
-    }
-    out
+pub fn shares(si: &ScoreInputs) -> Vec<f64> {
+    (0..si.n()).map(|n| dominant_share(si, n)).collect()
 }
 
 /// `true` if the share is a real (non-sentinel) value.
@@ -95,9 +84,9 @@ mod tests {
         let st = state_with(&[(0, 0, 4), (0, 1, 2), (1, 1, 6)]);
         let si = st.score_inputs();
         let s = shares(&si);
+        assert_eq!(s.len(), 2);
         assert!((s[0] - 30.0 / 130.0).abs() < 1e-12);
         assert!((s[1] - 30.0 / 130.0).abs() < 1e-12);
-        assert!(crate::is_big(s[2]));
     }
 
     #[test]

@@ -1,0 +1,346 @@
+//! The scoring engine: cached, incrementally-patched scoring over an
+//! [`AllocState`].
+//!
+//! The padded-era pipeline repacked the whole cluster state and recomputed
+//! all six score tensors from scratch before *every* allocation decision —
+//! O(N·M·R + N²·M) per grant, which capped practical scenarios at the
+//! paper's 8-agent clusters. The engine instead consumes the state's
+//! [`DirtyLog`]:
+//!
+//! * **Placements / releases** dirty one framework row and one agent
+//!   column. The engine re-copies the dirty rows into its cached
+//!   [`ScoreInputs`], re-derives the per-role task totals from the cached
+//!   per-framework row totals (O(N)), recomputes the residual rows of the
+//!   dirty agents (O(N·R) each), and then re-scores only (a) frameworks
+//!   sharing a role with a dirty framework — their `x_n` changed, so every
+//!   tensor entry of the row changes — and (b) the dirty agents' columns
+//!   for everyone else — only the residual-dependent rPS-DSF/fit/feas
+//!   entries change there.
+//! * **Structural changes** (arrival, departure, role moves, agent
+//!   registration, demand updates) fall back to a full rebuild + recompute.
+//!
+//! Patching reuses the very same [`NativeScorer`] row/pair helpers and
+//! recomputes aggregates with identical iteration order, so an
+//! incrementally-maintained [`ScoreSet`] is **bit-identical** to a full
+//! recompute (property-tested in `testing::prop`). The paper's ≤8-agent
+//! configurations therefore reproduce exactly, while 256-agent × 512-
+//! framework scenarios become tractable.
+
+use crate::error::Result;
+use crate::scheduler::scorer::NativeScorer;
+use crate::scheduler::{rpsdsf, AllocState, DirtyLog, ScoreInputs, ScoreSet, Scorer};
+
+/// Incrementally-maintained native scoring state.
+#[derive(Debug, Clone)]
+pub struct IncrementalScorer {
+    si: ScoreInputs,
+    set: ScoreSet,
+    /// Cached per-agent residuals, flat `m × r`.
+    res: Vec<f64>,
+    valid: bool,
+    /// Full rebuild+recompute passes performed (perf accounting).
+    pub full_rescores: u64,
+    /// Incremental patch passes performed.
+    pub incremental_rescores: u64,
+    /// Calls answered from cache with no state change at all.
+    pub cached_hits: u64,
+}
+
+impl Default for IncrementalScorer {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+impl IncrementalScorer {
+    pub fn new() -> Self {
+        IncrementalScorer {
+            si: ScoreInputs::empty(),
+            set: ScoreSet::sized(0, 0),
+            res: Vec::new(),
+            valid: false,
+            full_rescores: 0,
+            incremental_rescores: 0,
+            cached_hits: 0,
+        }
+    }
+
+    /// Bring the cached tensors up to date with `state` (draining its dirty
+    /// log) and return them.
+    pub fn rescore(&mut self, state: &mut AllocState) -> (&ScoreInputs, &ScoreSet) {
+        let dirty = state.take_dirty();
+        if !self.valid || dirty.structural || !self.si.matches_shape(state) {
+            self.si = state.score_inputs();
+            self.res = rpsdsf::residuals(&self.si);
+            self.set = NativeScorer::compute_with_residuals(&self.si, &self.res);
+            self.valid = true;
+            self.full_rescores += 1;
+        } else if !dirty.is_clean() {
+            self.patch(state, &dirty);
+            self.incremental_rescores += 1;
+        } else {
+            self.cached_hits += 1;
+        }
+        (&self.si, &self.set)
+    }
+
+    /// Apply a non-structural dirty log to the cached tensors.
+    fn patch(&mut self, state: &AllocState, dirty: &DirtyLog) {
+        let r = self.si.r();
+        for &n in &dirty.frameworks {
+            self.si.refresh_row(state, n);
+        }
+        self.si.recompute_role_totals();
+        for &i in &dirty.agents {
+            rpsdsf::agent_residuals_into(&self.si, i, &mut self.res[i * r..(i + 1) * r]);
+        }
+        for n in 0..self.si.n() {
+            let xn_changed = dirty.frameworks.iter().any(|&dn| self.si.same_role(dn, n));
+            if xn_changed {
+                // every tensor entry of the row depends on x_n
+                NativeScorer::fill_row(&self.si, &self.res, &mut self.set, n);
+            } else {
+                // only the residual-dependent entries on dirty agents change
+                for &i in &dirty.agents {
+                    NativeScorer::fill_pair(&self.si, &self.res, &mut self.set, n, i);
+                }
+            }
+        }
+    }
+
+    /// Drop the cache (next call fully recomputes).
+    pub fn invalidate(&mut self) {
+        self.valid = false;
+    }
+}
+
+/// The common scoring front the progressive-filling study and the Mesos
+/// allocator drive. Routes the native backend through the incremental
+/// path; any external backend (e.g. the HLO scorer) gets cached full
+/// recomputes — scores are only recomputed after the state actually
+/// changed, exactly like the old allocator-local cache.
+pub struct ScoringEngine {
+    inner: EngineImpl,
+}
+
+enum EngineImpl {
+    Incremental(IncrementalScorer),
+    External { scorer: Box<dyn Scorer>, si: ScoreInputs, set: ScoreSet, valid: bool },
+}
+
+impl ScoringEngine {
+    /// The default engine: native math, incremental re-scoring.
+    pub fn native() -> Self {
+        ScoringEngine { inner: EngineImpl::Incremental(IncrementalScorer::new()) }
+    }
+
+    /// Drive an explicit backend with full (but cached) recomputes. Use
+    /// this for the HLO scorer, or to force the native scorer through the
+    /// non-incremental path (the equivalence tests do).
+    pub fn external(scorer: Box<dyn Scorer>) -> Self {
+        ScoringEngine {
+            inner: EngineImpl::External {
+                scorer,
+                si: ScoreInputs::empty(),
+                set: ScoreSet::sized(0, 0),
+                valid: false,
+            },
+        }
+    }
+
+    /// Build from a backend, routing the native scorer through the
+    /// incremental path.
+    pub fn from_backend(scorer: Box<dyn Scorer>) -> Self {
+        if scorer.name() == "native" {
+            Self::native()
+        } else {
+            Self::external(scorer)
+        }
+    }
+
+    /// Engine label for logs.
+    pub fn name(&self) -> &'static str {
+        match &self.inner {
+            EngineImpl::Incremental(_) => "native-incremental",
+            EngineImpl::External { scorer, .. } => scorer.name(),
+        }
+    }
+
+    /// `(full, incremental)` re-score counts (native-incremental only).
+    pub fn rescore_stats(&self) -> Option<(u64, u64)> {
+        match &self.inner {
+            EngineImpl::Incremental(inc) => {
+                Some((inc.full_rescores, inc.incremental_rescores))
+            }
+            EngineImpl::External { .. } => None,
+        }
+    }
+
+    /// Maximum concurrent frameworks the backend can score (`None` when
+    /// unbounded). The master uses this to refuse registrations a padded
+    /// AOT backend could never score, restoring the retry-later
+    /// backpressure the caller expects.
+    pub fn framework_cap(&self) -> Option<usize> {
+        match &self.inner {
+            EngineImpl::Incremental(_) => None,
+            EngineImpl::External { scorer, .. } => scorer.padded_caps().map(|(n, _)| n),
+        }
+    }
+
+    /// Current score tensors for `state`, recomputing only what changed
+    /// since the last call. Drains the state's dirty log — one state should
+    /// be observed by one engine.
+    pub fn scores(&mut self, state: &mut AllocState) -> Result<(&ScoreInputs, &ScoreSet)> {
+        match &mut self.inner {
+            EngineImpl::Incremental(inc) => Ok(inc.rescore(state)),
+            EngineImpl::External { scorer, si, set, valid } => {
+                let dirty = state.take_dirty();
+                if !*valid || !dirty.is_clean() || !si.matches_shape(state) {
+                    *si = state.score_inputs();
+                    *set = scorer.score(si)?;
+                    *valid = true;
+                }
+                Ok((&*si, &*set))
+            }
+        }
+    }
+}
+
+impl std::fmt::Debug for ScoringEngine {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        f.debug_struct("ScoringEngine").field("name", &self.name()).finish()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::cluster::{AgentPool, ServerType};
+    use crate::resources::ResVec;
+    use crate::scheduler::FrameworkEntry;
+
+    fn illustrative() -> AllocState {
+        let mut st = AllocState::new(AgentPool::new(&ServerType::illustrative()));
+        for d in [[5.0, 1.0], [1.0, 5.0]] {
+            st.add_framework(FrameworkEntry {
+                name: "f".into(),
+                demand: ResVec::new(&d),
+                weight: 1.0,
+                active: true,
+            });
+        }
+        st
+    }
+
+    #[test]
+    fn incremental_matches_full_after_places() {
+        let mut st = illustrative();
+        let mut inc = IncrementalScorer::new();
+        inc.rescore(&mut st); // initial full pass
+        st.place_task(0, 0).unwrap();
+        st.place_task(1, 1).unwrap();
+        let (_, set) = inc.rescore(&mut st);
+        let expect = NativeScorer::compute(&st.score_inputs());
+        assert_eq!(set, &expect);
+        assert_eq!(inc.full_rescores, 1);
+        assert_eq!(inc.incremental_rescores, 1);
+    }
+
+    #[test]
+    fn incremental_matches_full_after_unplace() {
+        let mut st = illustrative();
+        let mut inc = IncrementalScorer::new();
+        inc.rescore(&mut st);
+        st.place_task(0, 0).unwrap();
+        inc.rescore(&mut st);
+        let d = st.framework(0).demand;
+        st.unplace(0, 0, &d, 1.0).unwrap();
+        let (_, set) = inc.rescore(&mut st);
+        assert_eq!(set, &NativeScorer::compute(&st.score_inputs()));
+    }
+
+    #[test]
+    fn structural_changes_force_full_recompute() {
+        let mut st = illustrative();
+        let mut inc = IncrementalScorer::new();
+        inc.rescore(&mut st);
+        st.add_framework(FrameworkEntry {
+            name: "f3".into(),
+            demand: ResVec::new(&[2.0, 2.0]),
+            weight: 1.0,
+            active: true,
+        });
+        let (_, set) = inc.rescore(&mut st);
+        assert_eq!(set.n(), 3);
+        assert_eq!(set, &NativeScorer::compute(&st.score_inputs()));
+        assert_eq!(inc.full_rescores, 2);
+    }
+
+    #[test]
+    fn clean_state_hits_cache() {
+        let mut st = illustrative();
+        let mut inc = IncrementalScorer::new();
+        inc.rescore(&mut st);
+        inc.rescore(&mut st);
+        inc.rescore(&mut st);
+        assert_eq!(inc.full_rescores, 1);
+        assert_eq!(inc.cached_hits, 2);
+    }
+
+    #[test]
+    fn role_aggregated_totals_patch_correctly() {
+        let mut st = illustrative();
+        st.set_role(0, 9);
+        st.set_role(1, 9);
+        let mut inc = IncrementalScorer::new();
+        inc.rescore(&mut st);
+        // placing for framework 0 changes framework 1's role total too
+        st.place_task(0, 0).unwrap();
+        let (si, set) = inc.rescore(&mut st);
+        assert_eq!(si.role_total(1), 1.0);
+        assert_eq!(set, &NativeScorer::compute(&st.score_inputs()));
+    }
+
+    #[test]
+    fn direct_pool_mutation_self_heals() {
+        // register_next bypasses the dirty log; the shape check must catch
+        // the drift and fall back to a full rebuild, not serve stale scores
+        let mut st = AllocState::new(AgentPool::new_staged(&ServerType::illustrative()));
+        st.add_framework(FrameworkEntry {
+            name: "f".into(),
+            demand: ResVec::new(&[5.0, 1.0]),
+            weight: 1.0,
+            active: true,
+        });
+        let mut inc = IncrementalScorer::new();
+        let (si, _) = inc.rescore(&mut st);
+        assert_eq!(si.ctot(0), 0.0, "no agents registered yet");
+        st.pool.register_next(); // out-of-band mutation, no mark_structural
+        let (si, set) = inc.rescore(&mut st);
+        assert_eq!(si.ctot(0), 100.0, "cache rebuilt from the drifted pool");
+        assert_eq!(set, &NativeScorer::compute(&st.score_inputs()));
+        assert_eq!(inc.full_rescores, 2);
+    }
+
+    #[test]
+    fn engine_routes_native_to_incremental() {
+        let e = ScoringEngine::from_backend(Box::new(NativeScorer::new()));
+        assert_eq!(e.name(), "native-incremental");
+        assert!(e.rescore_stats().is_some());
+    }
+
+    #[test]
+    fn external_engine_matches_incremental() {
+        let mut st_a = illustrative();
+        let mut st_b = st_a.clone();
+        let mut inc = ScoringEngine::native();
+        let mut ext = ScoringEngine::external(Box::new(NativeScorer::new()));
+        for (n, i) in [(0, 0), (1, 1), (0, 1), (1, 0)] {
+            st_a.place_task(n, i).unwrap();
+            st_b.place_task(n, i).unwrap();
+            let set_a = inc.scores(&mut st_a).unwrap().1.clone();
+            let set_b = ext.scores(&mut st_b).unwrap().1.clone();
+            assert_eq!(set_a, set_b);
+        }
+    }
+}

@@ -4,18 +4,44 @@
 //! pool plus per-framework demand vectors, weights and the allocation matrix
 //! `x[n][i]` (tasks of framework `n` on agent `i`). The static progressive
 //! filling study (Tables 1–4) and the online Mesos allocator both drive
-//! their decisions through the same [`Policy`] / [`Scorer`] pair, so the
+//! their decisions through the same [`Policy`] / scoring pair, so the
 //! numerical study and the cluster experiments exercise identical scheduler
 //! code.
 //!
+//! ## Dynamic dimensions
+//!
+//! The scoring core is dynamically sized: [`ScoreInputs`] and [`ScoreSet`]
+//! are flat row-major `Vec` tensors with runtime `(n, m, r)` dimensions, so
+//! a scenario may use 2 agents or 2 000. The compile-time `N_MAX`/`M_MAX`/
+//! `R_MAX` constants survive only at the HLO/PJRT boundary
+//! (`runtime::scorer`), where the dynamic state is padded into the AOT
+//! artifact's fixed tensors (erroring cleanly when the instance is larger
+//! than the artifact).
+//!
+//! ## Incremental re-scoring
+//!
+//! [`AllocState`] keeps a [`DirtyLog`] of mutations since the last scoring
+//! pass: [`AllocState::place`]/[`AllocState::unplace`] mark the touched
+//! framework row and agent column, while structural changes (framework
+//! arrival/departure, role changes, agent registration, demand updates)
+//! mark the whole state dirty. [`engine::IncrementalScorer`] consumes the
+//! log and re-scores only dirty rows and columns — maintaining cached
+//! per-role task totals and per-agent residuals — falling back to a full
+//! recompute on structural changes. [`engine::ScoringEngine`] is the common
+//! front the progressive-filling study and the Mesos allocator drive; it
+//! routes the native backend through the incremental path and any external
+//! backend (e.g. the HLO scorer) through cached full recomputes.
+//!
 //! * [`scorer::NativeScorer`] — pure-rust scoring (mirrors the L1 kernel).
 //! * `runtime::scorer::HloScorer` — the same math through the AOT-compiled
-//!   Pallas kernel via PJRT (parity-tested in `rust/tests/runtime_parity.rs`).
+//!   Pallas kernel via PJRT (parity-tested in `rust/tests/runtime_parity.rs`,
+//!   behind the `hlo` feature).
 //! * [`policy::Policy`] — argmin selection + tie-breaking + server-selection
 //!   mechanism (RRR / best-fit / joint).
 //! * [`progressive`] — the §2 progressive-filling engine.
 
 pub mod drf;
+pub mod engine;
 pub mod policy;
 pub mod progressive;
 pub mod psdsf;
@@ -25,6 +51,7 @@ pub mod scorer;
 pub mod server_select;
 pub mod tsf;
 
+pub use engine::{IncrementalScorer, ScoringEngine};
 pub use policy::{BestFitMetric, Policy, PolicyKind};
 pub use registry::{policy_by_name, POLICY_NAMES};
 pub use scorer::NativeScorer;
@@ -32,7 +59,7 @@ pub use scorer::NativeScorer;
 use crate::cluster::{AgentId, AgentPool};
 use crate::error::{Error, Result};
 use crate::resources::ResVec;
-use crate::{BIG, M_MAX, N_MAX, R_MAX};
+use crate::BIG;
 
 /// One framework (distributed application / Spark job) as the allocator
 /// sees it.
@@ -49,6 +76,54 @@ pub struct FrameworkEntry {
     pub active: bool,
 }
 
+/// Mutations of an [`AllocState`] since the last scoring pass — what the
+/// incremental scorer needs to re-score. Placements and releases record the
+/// touched `(framework, agent)` pair; everything else (arrival, departure,
+/// role change, agent registration, demand update) is *structural* and
+/// forces a full recompute. The log is bounded: past
+/// [`DirtyLog::PAIR_CAP`] distinct rows or columns it collapses to
+/// structural (a full recompute is cheaper than a near-full patch).
+#[derive(Debug, Clone, Default)]
+pub struct DirtyLog {
+    /// Framework rows with changed allocations (deduplicated).
+    pub frameworks: Vec<usize>,
+    /// Agent columns with changed allocations (deduplicated).
+    pub agents: Vec<usize>,
+    /// A change the incremental scorer cannot patch around.
+    pub structural: bool,
+}
+
+impl DirtyLog {
+    /// Collapse to structural past this many distinct rows/columns.
+    pub const PAIR_CAP: usize = 64;
+
+    /// `true` when nothing changed since the log was last taken.
+    pub fn is_clean(&self) -> bool {
+        !self.structural && self.frameworks.is_empty() && self.agents.is_empty()
+    }
+
+    fn note_pair(&mut self, n: usize, i: usize) {
+        if self.structural {
+            return;
+        }
+        if !self.frameworks.contains(&n) {
+            self.frameworks.push(n);
+        }
+        if !self.agents.contains(&i) {
+            self.agents.push(i);
+        }
+        if self.frameworks.len() > Self::PAIR_CAP || self.agents.len() > Self::PAIR_CAP {
+            self.note_structural();
+        }
+    }
+
+    fn note_structural(&mut self) {
+        self.structural = true;
+        self.frameworks.clear();
+        self.agents.clear();
+    }
+}
+
 /// Allocator-visible cluster state: pool + frameworks + allocation matrix.
 #[derive(Debug, Clone)]
 pub struct AllocState {
@@ -61,26 +136,37 @@ pub struct AllocState {
     /// default `role == own index` recovers per-framework fairness (the §2
     /// numerical study).
     roles: Vec<usize>,
+    /// Mutations since the last [`AllocState::take_dirty`].
+    dirty: DirtyLog,
 }
 
 impl AllocState {
     pub fn new(pool: AgentPool) -> Self {
-        AllocState { pool, frameworks: Vec::new(), x: Vec::new(), roles: Vec::new() }
+        AllocState {
+            pool,
+            frameworks: Vec::new(),
+            x: Vec::new(),
+            roles: Vec::new(),
+            dirty: DirtyLog::default(),
+        }
     }
 
-    /// Register a framework; returns its dense index.
+    /// Register a framework; returns its dense index. The state is
+    /// dynamically sized — any number of concurrent frameworks is allowed
+    /// (the HLO boundary pads and errors past the artifact dims instead).
     pub fn add_framework(&mut self, entry: FrameworkEntry) -> usize {
         let n = self.frameworks.len();
-        assert!(n < N_MAX, "at most {N_MAX} concurrent frameworks (padded kernel)");
         self.frameworks.push(entry);
         self.x.push(vec![0.0; self.pool.len()]);
         self.roles.push(n); // own role by default (per-framework fairness)
+        self.dirty.note_structural();
         n
     }
 
     /// Assign framework `n` to a Mesos role (shares aggregate per role).
     pub fn set_role(&mut self, n: usize, role: usize) {
         self.roles[n] = role;
+        self.dirty.note_structural();
     }
 
     /// The role of framework `n`.
@@ -92,15 +178,35 @@ impl AllocState {
     /// be released).
     pub fn deactivate(&mut self, n: usize) {
         self.frameworks[n].active = false;
+        self.dirty.note_structural();
     }
 
     /// Reuse a completed framework's slot for a newly arrived one — the
-    /// online experiments run 500 jobs through ≤ 10 concurrent slots.
+    /// online experiments run 500 jobs through a bounded set of concurrent
+    /// slots.
     pub fn replace_framework(&mut self, n: usize, entry: FrameworkEntry) {
         debug_assert!(!self.frameworks[n].active, "replacing an active framework");
         debug_assert!(self.x[n].iter().all(|v| *v == 0.0), "slot still holds tasks");
         self.frameworks[n] = entry;
         self.roles[n] = n; // callers re-assign via set_role if needed
+        self.dirty.note_structural();
+    }
+
+    /// Register agent `i` (Fig-9 staging) — a structural change.
+    pub fn agent_up(&mut self, i: AgentId) {
+        self.pool.agent_mut(i).registered = true;
+        self.dirty.note_structural();
+    }
+
+    /// Record an out-of-band mutation (e.g. a caller touched `pool`
+    /// directly) so the incremental scorer fully recomputes.
+    pub fn mark_structural(&mut self) {
+        self.dirty.note_structural();
+    }
+
+    /// Drain the mutation log (scoring engines call this each pass).
+    pub fn take_dirty(&mut self) -> DirtyLog {
+        std::mem::take(&mut self.dirty)
     }
 
     pub fn frameworks(&self) -> &[FrameworkEntry] {
@@ -111,7 +217,11 @@ impl AllocState {
         &self.frameworks[n]
     }
 
+    /// Mutable framework access. Conservatively marks the state structurally
+    /// dirty (the caller may change the demand or weight, which invalidates
+    /// every cached score).
     pub fn framework_mut(&mut self, n: usize) -> &mut FrameworkEntry {
+        self.dirty.note_structural();
         &mut self.frameworks[n]
     }
 
@@ -143,6 +253,7 @@ impl AllocState {
         }
         self.pool.reserve(i, amount)?;
         self.x[n][i] += count;
+        self.dirty.note_pair(n, i);
         Ok(())
     }
 
@@ -163,6 +274,7 @@ impl AllocState {
         }
         self.pool.release(i, amount)?;
         self.x[n][i] = (self.x[n][i] - count).max(0.0);
+        self.dirty.note_pair(n, i);
         Ok(())
     }
 
@@ -189,128 +301,367 @@ impl AllocState {
         true
     }
 
-    /// Pack the state into the padded tensors the scoring kernel consumes.
+    /// Snapshot the state into the dynamically-sized scoring tensors.
     pub fn score_inputs(&self) -> ScoreInputs {
-        let m = self.pool.len();
-        let n = self.frameworks.len();
-        let r = self.pool.resource_kinds();
-        assert!(m <= M_MAX && n <= N_MAX && r <= R_MAX);
-        let mut si = ScoreInputs::default();
-        si.n = n;
-        si.m = m;
-        si.r = r;
-        for (i, a) in self.pool.agents().iter().enumerate() {
-            for rr in 0..r {
-                si.c[i][rr] = a.capacity.get(rr);
-            }
-            si.smask[i] = if a.registered { 1.0 } else { 0.0 };
-        }
-        for (ni, fe) in self.frameworks.iter().enumerate() {
-            for rr in 0..r {
-                si.d[ni][rr] = fe.demand.get(rr);
-            }
-            si.phi[ni] = fe.weight;
-            si.fmask[ni] = if fe.active { 1.0 } else { 0.0 };
-            for i in 0..m {
-                si.x[ni][i] = self.x[ni][i];
-            }
-        }
-        for rr in 0..r {
-            si.rmask[rr] = 1.0;
-        }
-        for a in 0..n {
-            for b in 0..n {
-                si.rolemat[a][b] = if self.roles[a] == self.roles[b] { 1.0 } else { 0.0 };
-            }
-        }
-        si
+        ScoreInputs::build(self)
     }
 }
 
-/// Padded scoring tensors — the exact layout of the AOT artifact's inputs.
-#[derive(Debug, Clone)]
+/// Dynamically-sized scoring tensors: flat row-major `Vec` storage with
+/// runtime `(n, m, r)` dims, plus the cached aggregates every criterion
+/// reads (total registered capacity, per-framework and per-role task
+/// totals). Padding to the AOT artifact's fixed dims happens only at the
+/// HLO boundary (`runtime::scorer::pack_padded`).
+#[derive(Debug, Clone, PartialEq)]
 pub struct ScoreInputs {
-    pub c: [[f64; R_MAX]; M_MAX],
-    pub x: [[f64; M_MAX]; N_MAX],
-    pub d: [[f64; R_MAX]; N_MAX],
-    pub phi: [f64; N_MAX],
-    /// Role membership: `rolemat[a][b] = 1` iff same Mesos role (identity =
-    /// per-framework fairness). Shares aggregate over roles; residuals don't.
-    pub rolemat: [[f64; N_MAX]; N_MAX],
-    pub fmask: [f64; N_MAX],
-    pub smask: [f64; M_MAX],
-    pub rmask: [f64; R_MAX],
-    /// Real (unpadded) dimensions, for iteration.
-    pub n: usize,
-    pub m: usize,
-    pub r: usize,
+    n: usize,
+    m: usize,
+    r: usize,
+    /// `c[i][r]` — nominal capacities (m × r).
+    c: Vec<f64>,
+    /// `x[n][i]` — allocation matrix (n × m).
+    x: Vec<f64>,
+    /// `d[n][r]` — believed per-task demands (n × r).
+    d: Vec<f64>,
+    /// Weights φ_n.
+    phi: Vec<f64>,
+    /// Mesos role per framework (shares aggregate over roles).
+    roles: Vec<usize>,
+    /// 1.0 for active frameworks.
+    fmask: Vec<f64>,
+    /// 1.0 for registered agents.
+    smask: Vec<f64>,
+    /// Cached `C_r = Σ_i c_{i,r}` over registered agents (DRF denominator).
+    ctot: Vec<f64>,
+    /// Cached per-framework task totals over registered agents.
+    row_totals: Vec<f64>,
+    /// Cached role-aggregated totals, fanned back per framework — the `x_n`
+    /// every share-based criterion uses. Replaces the per-call
+    /// O(N²·M) role walk of the padded-era scorer with an O(N·M) build-time
+    /// pass (and O(dirty) incremental patches).
+    role_totals: Vec<f64>,
 }
 
-impl Default for ScoreInputs {
-    fn default() -> Self {
+impl ScoreInputs {
+    /// A zero-dimensional instance (incremental-scorer bootstrap).
+    pub fn empty() -> Self {
         ScoreInputs {
-            c: [[0.0; R_MAX]; M_MAX],
-            x: [[0.0; M_MAX]; N_MAX],
-            d: [[0.0; R_MAX]; N_MAX],
-            phi: [1.0; N_MAX],
-            rolemat: [[0.0; N_MAX]; N_MAX],
-            fmask: [0.0; N_MAX],
-            smask: [0.0; M_MAX],
-            rmask: [0.0; R_MAX],
             n: 0,
             m: 0,
             r: 0,
+            c: Vec::new(),
+            x: Vec::new(),
+            d: Vec::new(),
+            phi: Vec::new(),
+            roles: Vec::new(),
+            fmask: Vec::new(),
+            smask: Vec::new(),
+            ctot: Vec::new(),
+            row_totals: Vec::new(),
+            role_totals: Vec::new(),
         }
     }
-}
 
-/// All six score tensors (padding slots hold [`BIG`] / `false`).
-#[derive(Debug, Clone)]
-pub struct ScoreSet {
-    /// Global dominant shares (DRF).
-    pub drf: [f64; N_MAX],
-    /// Task-share fairness scores (TSF).
-    pub tsf: [f64; N_MAX],
-    /// Per-server virtual dominant shares `K_{n,i}` (PS-DSF).
-    pub psdsf: [[f64; M_MAX]; N_MAX],
-    /// Residual PS-DSF `K̃_{n,i}` (this paper's criterion).
-    pub rpsdsf: [[f64; M_MAX]; N_MAX],
-    /// Best-fit ratio `max_r d_{n,r}/res_{i,r}` (BF-DRF server selection).
-    pub fit: [[f64; M_MAX]; N_MAX],
-    /// One-more-task feasibility.
-    pub feas: [[bool; M_MAX]; N_MAX],
-}
-
-impl ScoreSet {
-    pub fn empty() -> Self {
-        ScoreSet {
-            drf: [BIG; N_MAX],
-            tsf: [BIG; N_MAX],
-            psdsf: [[BIG; M_MAX]; N_MAX],
-            rpsdsf: [[BIG; M_MAX]; N_MAX],
-            fit: [[BIG; M_MAX]; N_MAX],
-            feas: [[false; M_MAX]; N_MAX],
+    /// Snapshot `state` into scoring tensors.
+    pub fn build(state: &AllocState) -> ScoreInputs {
+        let m = state.pool.len();
+        let n = state.n_frameworks();
+        let r = state.pool.resource_kinds();
+        let mut si = ScoreInputs {
+            n,
+            m,
+            r,
+            c: vec![0.0; m * r],
+            x: vec![0.0; n * m],
+            d: vec![0.0; n * r],
+            phi: vec![1.0; n],
+            roles: vec![0; n],
+            fmask: vec![0.0; n],
+            smask: vec![0.0; m],
+            ctot: vec![0.0; r],
+            row_totals: vec![0.0; n],
+            role_totals: vec![0.0; n],
+        };
+        for (i, a) in state.pool.agents().iter().enumerate() {
+            for rr in 0..r {
+                si.c[i * r + rr] = a.capacity.get(rr);
+            }
+            si.smask[i] = if a.registered { 1.0 } else { 0.0 };
         }
-    }
-}
-
-/// Role-aggregated task total for framework `n` over registered servers:
-/// `Σ_{n' : role(n') = role(n)} Σ_i x[n'][i]` — the `x_n` every share-based
-/// criterion uses (identity rolemat ⇒ plain per-framework total). Mirrors
-/// the kernel's `rolemat @ sum(x * smask)`.
-#[inline]
-pub fn role_total(si: &ScoreInputs, n: usize) -> f64 {
-    let mut total = 0.0;
-    for n2 in 0..si.n {
-        if si.rolemat[n][n2] > 0.5 {
-            for i in 0..si.m {
-                if si.smask[i] > 0.5 {
-                    total += si.x[n2][i];
+        for ni in 0..n {
+            si.roles[ni] = state.role_of(ni);
+            si.refresh_row(state, ni);
+        }
+        for i in 0..m {
+            if si.smask[i] > 0.5 {
+                for rr in 0..r {
+                    si.ctot[rr] += si.c[i * r + rr];
                 }
             }
         }
+        si.recompute_role_totals();
+        si
     }
-    total
+
+    /// Frameworks.
+    pub fn n(&self) -> usize {
+        self.n
+    }
+
+    /// Agents.
+    pub fn m(&self) -> usize {
+        self.m
+    }
+
+    /// Resource kinds.
+    pub fn r(&self) -> usize {
+        self.r
+    }
+
+    /// Nominal capacity `c[i][r]`.
+    #[inline]
+    pub fn c(&self, i: usize, rr: usize) -> f64 {
+        self.c[i * self.r + rr]
+    }
+
+    /// Allocation `x[n][i]`.
+    #[inline]
+    pub fn x(&self, n: usize, i: usize) -> f64 {
+        self.x[n * self.m + i]
+    }
+
+    /// Believed demand `d[n][r]`.
+    #[inline]
+    pub fn d(&self, n: usize, rr: usize) -> f64 {
+        self.d[n * self.r + rr]
+    }
+
+    /// Weight φ_n.
+    #[inline]
+    pub fn phi(&self, n: usize) -> f64 {
+        self.phi[n]
+    }
+
+    /// 1.0 iff framework `n` is active.
+    #[inline]
+    pub fn fmask(&self, n: usize) -> f64 {
+        self.fmask[n]
+    }
+
+    /// 1.0 iff agent `i` is registered.
+    #[inline]
+    pub fn smask(&self, i: usize) -> f64 {
+        self.smask[i]
+    }
+
+    /// Mesos role of framework `n`.
+    #[inline]
+    pub fn role(&self, n: usize) -> usize {
+        self.roles[n]
+    }
+
+    /// `true` iff frameworks `a` and `b` share a role.
+    #[inline]
+    pub fn same_role(&self, a: usize, b: usize) -> bool {
+        self.roles[a] == self.roles[b]
+    }
+
+    /// Total registered capacity `C_r` (cached).
+    #[inline]
+    pub fn ctot(&self, rr: usize) -> f64 {
+        self.ctot[rr]
+    }
+
+    /// Role-aggregated task total for framework `n` over registered servers:
+    /// `Σ_{n' : role(n') = role(n)} Σ_i x[n'][i]` (cached; identity roles ⇒
+    /// plain per-framework total). Mirrors the kernel's
+    /// `rolemat @ sum(x * smask)`.
+    #[inline]
+    pub fn role_total(&self, n: usize) -> f64 {
+        self.role_totals[n]
+    }
+
+    /// `true` iff framework `n` demands a positive amount of some resource.
+    #[inline]
+    pub fn has_demand(&self, n: usize) -> bool {
+        (0..self.r).any(|rr| self.d(n, rr) > 0.0)
+    }
+
+    /// `true` when this snapshot still structurally matches `state`:
+    /// same framework/agent/resource counts, agent registration mask and
+    /// nominal capacities — everything scoring reads from the pool
+    /// (reservations are deliberately excluded: scores are computed from
+    /// the believed `x·d`, never from pool bookkeeping). Scoring engines
+    /// use this to self-heal when a caller mutated `state.pool` directly
+    /// (e.g. `register_next`) without going through the dirty-tracked
+    /// [`AllocState`] methods — the cache falls back to a full rebuild
+    /// instead of serving stale scores.
+    pub fn matches_shape(&self, state: &AllocState) -> bool {
+        self.n == state.n_frameworks()
+            && self.m == state.pool.len()
+            && self.r == state.pool.resource_kinds()
+            && state.pool.agents().iter().enumerate().all(|(i, a)| {
+                (self.smask[i] > 0.5) == a.registered
+                    && (0..self.r).all(|rr| self.c[i * self.r + rr] == a.capacity.get(rr))
+            })
+    }
+
+    /// Re-copy framework `n`'s row (allocations, demand, weight, activity)
+    /// from `state` and recompute its registered-agent task total. Identical
+    /// arithmetic to [`ScoreInputs::build`], so a patched instance is
+    /// bit-identical to a rebuilt one.
+    pub(crate) fn refresh_row(&mut self, state: &AllocState, n: usize) {
+        let fe = state.framework(n);
+        for rr in 0..self.r {
+            self.d[n * self.r + rr] = fe.demand.get(rr);
+        }
+        self.phi[n] = fe.weight;
+        self.fmask[n] = if fe.active { 1.0 } else { 0.0 };
+        let mut total = 0.0;
+        for i in 0..self.m {
+            let v = state.tasks_on(n, i);
+            self.x[n * self.m + i] = v;
+            if self.smask[i] > 0.5 {
+                total += v;
+            }
+        }
+        self.row_totals[n] = total;
+    }
+
+    /// Re-derive every role total from the per-framework row totals
+    /// (ascending framework order, so full and incremental passes sum in
+    /// the same order and agree bit-for-bit). The dominant identity-role
+    /// case (every framework its own role — the §2 study and the scale
+    /// family) is a plain copy; only genuinely shared roles pay for
+    /// aggregation. This runs once per incremental patch, so it must not
+    /// allocate on the identity path.
+    pub(crate) fn recompute_role_totals(&mut self) {
+        let identity = (0..self.n).all(|k| self.roles[k] == k);
+        if identity {
+            self.role_totals.copy_from_slice(&self.row_totals);
+            return;
+        }
+        let mut sums: std::collections::HashMap<usize, f64> = std::collections::HashMap::new();
+        for n in 0..self.n {
+            *sums.entry(self.roles[n]).or_insert(0.0) += self.row_totals[n];
+        }
+        for n in 0..self.n {
+            self.role_totals[n] = sums[&self.roles[n]];
+        }
+    }
+}
+
+/// All six score tensors, dynamically sized to `(n, m)`. Pair tensors are
+/// flat row-major; impossible entries hold [`BIG`] / `false`.
+#[derive(Debug, Clone, PartialEq)]
+pub struct ScoreSet {
+    n: usize,
+    m: usize,
+    /// Global dominant shares (DRF).
+    drf: Vec<f64>,
+    /// Task-share fairness scores (TSF).
+    tsf: Vec<f64>,
+    /// Per-server virtual dominant shares `K_{n,i}` (PS-DSF).
+    psdsf: Vec<f64>,
+    /// Residual PS-DSF `K̃_{n,i}` (this paper's criterion).
+    rpsdsf: Vec<f64>,
+    /// Best-fit ratio `max_r d_{n,r}/res_{i,r}` (BF-DRF server selection).
+    fit: Vec<f64>,
+    /// One-more-task feasibility.
+    feas: Vec<bool>,
+}
+
+impl ScoreSet {
+    /// A BIG-filled, infeasible set for `n` frameworks × `m` agents.
+    pub fn sized(n: usize, m: usize) -> Self {
+        ScoreSet {
+            n,
+            m,
+            drf: vec![BIG; n],
+            tsf: vec![BIG; n],
+            psdsf: vec![BIG; n * m],
+            rpsdsf: vec![BIG; n * m],
+            fit: vec![BIG; n * m],
+            feas: vec![false; n * m],
+        }
+    }
+
+    pub fn n(&self) -> usize {
+        self.n
+    }
+
+    pub fn m(&self) -> usize {
+        self.m
+    }
+
+    #[inline]
+    fn at(&self, n: usize, i: usize) -> usize {
+        n * self.m + i
+    }
+
+    #[inline]
+    pub fn drf(&self, n: usize) -> f64 {
+        self.drf[n]
+    }
+
+    #[inline]
+    pub fn tsf(&self, n: usize) -> f64 {
+        self.tsf[n]
+    }
+
+    #[inline]
+    pub fn psdsf(&self, n: usize, i: usize) -> f64 {
+        self.psdsf[self.at(n, i)]
+    }
+
+    #[inline]
+    pub fn rpsdsf(&self, n: usize, i: usize) -> f64 {
+        self.rpsdsf[self.at(n, i)]
+    }
+
+    #[inline]
+    pub fn fit(&self, n: usize, i: usize) -> f64 {
+        self.fit[self.at(n, i)]
+    }
+
+    #[inline]
+    pub fn feas(&self, n: usize, i: usize) -> bool {
+        self.feas[self.at(n, i)]
+    }
+
+    #[inline]
+    pub fn set_drf(&mut self, n: usize, v: f64) {
+        self.drf[n] = v;
+    }
+
+    #[inline]
+    pub fn set_tsf(&mut self, n: usize, v: f64) {
+        self.tsf[n] = v;
+    }
+
+    #[inline]
+    pub fn set_psdsf(&mut self, n: usize, i: usize, v: f64) {
+        let k = self.at(n, i);
+        self.psdsf[k] = v;
+    }
+
+    #[inline]
+    pub fn set_rpsdsf(&mut self, n: usize, i: usize, v: f64) {
+        let k = self.at(n, i);
+        self.rpsdsf[k] = v;
+    }
+
+    #[inline]
+    pub fn set_fit(&mut self, n: usize, i: usize, v: f64) {
+        let k = self.at(n, i);
+        self.fit[k] = v;
+    }
+
+    #[inline]
+    pub fn set_feas(&mut self, n: usize, i: usize, v: bool) {
+        let k = self.at(n, i);
+        self.feas[k] = v;
+    }
 }
 
 /// Anything that can turn state tensors into scores: the native rust scorer
@@ -318,8 +669,15 @@ pub fn role_total(si: &ScoreInputs, n: usize) -> f64 {
 pub trait Scorer {
     /// Human-readable backend name ("native", "hlo").
     fn name(&self) -> &'static str;
-    /// Compute all score tensors for the given padded inputs.
+    /// Compute all score tensors for the given inputs.
     fn score(&mut self, inputs: &ScoreInputs) -> Result<ScoreSet>;
+    /// `(max frameworks, max agents)` this backend can score, or `None`
+    /// when unbounded. Padded AOT backends report their artifact dims so
+    /// the master can apply registration backpressure instead of failing
+    /// mid-cycle.
+    fn padded_caps(&self) -> Option<(usize, usize)> {
+        None
+    }
 }
 
 #[cfg(test)]
@@ -378,16 +736,65 @@ mod tests {
         let mut st = illustrative_state();
         st.place_task(0, 0).unwrap();
         let si = st.score_inputs();
-        assert_eq!((si.n, si.m, si.r), (2, 2, 2));
-        assert_eq!(si.c[0][0], 100.0);
-        assert_eq!(si.c[1][1], 100.0);
-        assert_eq!(si.d[0][0], 5.0);
-        assert_eq!(si.x[0][0], 1.0);
-        assert_eq!(si.fmask[0], 1.0);
-        assert_eq!(si.fmask[2], 0.0);
-        assert_eq!(si.smask[2], 0.0);
-        assert_eq!(si.rmask[1], 1.0);
-        assert_eq!(si.rmask[2], 0.0);
+        assert_eq!((si.n(), si.m(), si.r()), (2, 2, 2));
+        assert_eq!(si.c(0, 0), 100.0);
+        assert_eq!(si.c(1, 1), 100.0);
+        assert_eq!(si.d(0, 0), 5.0);
+        assert_eq!(si.x(0, 0), 1.0);
+        assert_eq!(si.fmask(0), 1.0);
+        assert_eq!(si.smask(1), 1.0);
+        assert_eq!(si.ctot(0), 130.0);
+        assert_eq!(si.role_total(0), 1.0);
+        assert_eq!(si.role_total(1), 0.0);
+    }
+
+    #[test]
+    fn dimensions_are_dynamic() {
+        // far beyond the old padded 16×8 cap
+        let types: Vec<ServerType> =
+            (0..40).map(|k| ServerType::new(format!("s{k}"), ResVec::new(&[8.0, 8.0]))).collect();
+        let mut st = AllocState::new(AgentPool::new(&types));
+        for k in 0..100 {
+            st.add_framework(FrameworkEntry {
+                name: format!("f{k}"),
+                demand: ResVec::new(&[1.0, 1.0]),
+                weight: 1.0,
+                active: true,
+            });
+        }
+        st.place_task(99, 39).unwrap();
+        let si = st.score_inputs();
+        assert_eq!((si.n(), si.m()), (100, 40));
+        assert_eq!(si.x(99, 39), 1.0);
+        assert_eq!(si.role_total(99), 1.0);
+    }
+
+    #[test]
+    fn role_totals_aggregate_by_role() {
+        let mut st = illustrative_state();
+        st.set_role(0, 7);
+        st.set_role(1, 7);
+        st.place_task(0, 0).unwrap();
+        st.place_task(1, 1).unwrap();
+        let si = st.score_inputs();
+        assert_eq!(si.role_total(0), 2.0);
+        assert_eq!(si.role_total(1), 2.0);
+        assert!(si.same_role(0, 1));
+    }
+
+    #[test]
+    fn dirty_log_tracks_pairs_and_structure() {
+        let mut st = illustrative_state();
+        assert!(st.take_dirty().structural, "add_framework is structural");
+        assert!(st.take_dirty().is_clean());
+        st.place_task(0, 1).unwrap();
+        st.place_task(0, 1).unwrap();
+        let d = st.take_dirty();
+        assert_eq!(d.frameworks, vec![0]);
+        assert_eq!(d.agents, vec![1]);
+        assert!(!d.structural);
+        st.deactivate(1);
+        assert!(st.take_dirty().structural);
     }
 
     #[test]

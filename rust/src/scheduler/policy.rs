@@ -1,12 +1,19 @@
 //! Allocation policies: a fairness criterion plus a server-selection
 //! mechanism, with the argmin/tie-breaking rules in one place.
 //!
-//! Tie-breaking (DESIGN.md §6.4/§6.8): exact score ties break uniformly at
+//! Tie-breaking (DESIGN.md §6.4/§6.8): score ties break uniformly at
 //! random for per-agent and best-fit framework picks (the paper's Table-2/4
 //! variance), by the residual profile ratio for rPS-DSF joint picks (the
 //! Figure-9 adaptivity), and by (framework id, agent id) for PS-DSF joint
 //! picks (which reproduces its Table-1 row exactly). All randomness flows
 //! from the caller's seeded [`Rng`], so runs replay exactly.
+//!
+//! Ties are detected with a shared relative-epsilon comparison
+//! ([`approx_tied`]), not exact float equality: shares that are equal *in
+//! the paper's arithmetic* can differ by a few ulps here (e.g. computed via
+//! different but algebraically equivalent paths), and exact `==` would
+//! silently turn the paper's random tie-break into a deterministic
+//! first-index win.
 
 pub use crate::scheduler::server_select::BestFitMetric;
 
@@ -14,6 +21,35 @@ use crate::rng::Rng;
 use crate::scheduler::server_select;
 use crate::scheduler::{ScoreInputs, ScoreSet};
 use crate::BIG;
+
+/// Relative tolerance for score-tie detection.
+pub const TIE_EPS: f64 = 1e-9;
+
+/// `true` iff `a` and `b` are equal up to [`TIE_EPS`] relative to their
+/// magnitude (absolute near zero) — the shared tie test for every random
+/// tie-break in the scheduler.
+#[inline]
+pub fn approx_tied(a: f64, b: f64) -> bool {
+    (a - b).abs() <= TIE_EPS * a.abs().max(b.abs()).max(1.0)
+}
+
+/// Two-pass argmin with a uniform random tie-break: find the true minimum
+/// score, then pick uniformly among every candidate [`approx_tied`] with
+/// it. Collecting the tie cluster against the final minimum (rather than
+/// while scanning) keeps membership independent of iteration order.
+fn pick_min_with_random_ties(scores: &[(usize, f64)], rng: &mut Rng) -> Option<usize> {
+    let min = scores.iter().map(|&(_, s)| s).fold(f64::INFINITY, f64::min);
+    if !min.is_finite() {
+        return None;
+    }
+    let tied: Vec<usize> =
+        scores.iter().filter(|&&(_, s)| approx_tied(s, min)).map(|&(n, _)| n).collect();
+    match tied.len() {
+        0 => None,
+        1 => Some(tied[0]),
+        k => Some(tied[rng.index(k)]),
+    }
+}
 
 /// Which fairness criterion ranks frameworks.
 #[derive(Debug, Clone, Copy, PartialEq, Eq)]
@@ -33,10 +69,10 @@ impl Criterion {
     #[inline]
     pub fn score(&self, set: &ScoreSet, n: usize, i: usize) -> f64 {
         match self {
-            Criterion::Drf => set.drf[n],
-            Criterion::Tsf => set.tsf[n],
-            Criterion::PsDsf => set.psdsf[n][i],
-            Criterion::RPsDsf => set.rpsdsf[n][i],
+            Criterion::Drf => set.drf(n),
+            Criterion::Tsf => set.tsf(n),
+            Criterion::PsDsf => set.psdsf(n, i),
+            Criterion::RPsDsf => set.rpsdsf(n, i),
         }
     }
 
@@ -75,10 +111,13 @@ impl Policy {
     }
 
     /// For agent `i`, the feasible framework with the minimum criterion
-    /// score. Exact ties are broken *uniformly at random* — this is what
-    /// produces the trial-to-trial variance the paper's Tables 2/4 report
-    /// for the RRR schedulers (equal-share frameworks race for each offer).
-    /// Used by RRR and sequential release.
+    /// score. Scores within [`approx_tied`] of the minimum are broken
+    /// *uniformly at random* — this is what produces the trial-to-trial
+    /// variance the paper's Tables 2/4 report for the RRR schedulers
+    /// (equal-share frameworks race for each offer). The tie cluster is
+    /// collected in a second pass against the true minimum, so membership
+    /// does not depend on iteration order. Used by RRR and sequential
+    /// release.
     pub fn pick_for_agent(
         &self,
         set: &ScoreSet,
@@ -86,31 +125,12 @@ impl Policy {
         i: usize,
         rng: &mut Rng,
     ) -> Option<usize> {
-        let mut best: Option<f64> = None;
-        let mut tied: Vec<usize> = Vec::new();
-        for n in 0..si.n {
-            if !set.feas[n][i] {
-                continue;
-            }
-            let s = self.criterion.score(set, n, i);
-            if s >= BIG {
-                continue;
-            }
-            match best {
-                Some(b) if s > b => {}
-                Some(b) if s == b => tied.push(n),
-                _ => {
-                    best = Some(s);
-                    tied.clear();
-                    tied.push(n);
-                }
-            }
-        }
-        match tied.len() {
-            0 => None,
-            1 => Some(tied[0]),
-            k => Some(tied[rng.index(k)]),
-        }
+        let scores: Vec<(usize, f64)> = (0..si.n())
+            .filter(|&n| set.feas(n, i))
+            .map(|n| (n, self.criterion.score(set, n, i)))
+            .filter(|&(_, s)| s < BIG)
+            .collect();
+        pick_min_with_random_ties(&scores, rng)
     }
 
     /// Jointly pick the feasible `(framework, agent)` pair with minimum
@@ -131,9 +151,9 @@ impl Policy {
         candidates: &[usize],
     ) -> Option<(usize, usize)> {
         let mut best: Option<(f64, f64, usize, usize)> = None;
-        for n in 0..si.n {
+        for n in 0..si.n() {
             for &i in candidates {
-                if !set.feas[n][i] {
+                if !set.feas(n, i) {
                     continue;
                 }
                 let s = self.criterion.score(set, n, i);
@@ -141,7 +161,7 @@ impl Policy {
                     continue;
                 }
                 let tie = match self.criterion {
-                    Criterion::RPsDsf => set.fit[n][i],
+                    Criterion::RPsDsf => set.fit(n, i),
                     _ => 0.0,
                 };
                 match best {
@@ -154,7 +174,7 @@ impl Policy {
     }
 
     /// BF-DRF-style two-stage pick: framework by the global criterion among
-    /// frameworks feasible on some candidate (exact score ties break
+    /// frameworks feasible on some candidate (near-equal scores break
     /// uniformly at random, like [`Policy::pick_for_agent`] — same-role
     /// frameworks always tie under role-aggregated shares), then the
     /// best-fit agent.
@@ -165,41 +185,25 @@ impl Policy {
         candidates: &[usize],
         rng: &mut Rng,
     ) -> Option<(usize, usize)> {
-        let mut best: Option<f64> = None;
-        let mut tied: Vec<usize> = Vec::new();
-        for n in 0..si.n {
-            if !candidates.iter().any(|&i| set.feas[n][i]) {
-                continue;
-            }
-            // the global score; for per-server criteria fall back to the
-            // pair minimum so BestFit composes with any criterion
-            let s = if self.criterion.is_per_server() {
-                candidates
-                    .iter()
-                    .filter(|&&i| set.feas[n][i])
-                    .map(|&i| self.criterion.score(set, n, i))
-                    .fold(BIG, f64::min)
-            } else {
-                self.criterion.score(set, n, 0)
-            };
-            if s >= BIG {
-                continue;
-            }
-            match best {
-                Some(b) if s > b => {}
-                Some(b) if s == b => tied.push(n),
-                _ => {
-                    best = Some(s);
-                    tied.clear();
-                    tied.push(n);
-                }
-            }
-        }
-        let n = match tied.len() {
-            0 => return None,
-            1 => tied[0],
-            k => tied[rng.index(k)],
-        };
+        let scores: Vec<(usize, f64)> = (0..si.n())
+            .filter(|&n| candidates.iter().any(|&i| set.feas(n, i)))
+            .map(|n| {
+                // the global score; for per-server criteria fall back to the
+                // pair minimum so BestFit composes with any criterion
+                let s = if self.criterion.is_per_server() {
+                    candidates
+                        .iter()
+                        .filter(|&&i| set.feas(n, i))
+                        .map(|&i| self.criterion.score(set, n, i))
+                        .fold(BIG, f64::min)
+                } else {
+                    self.criterion.score(set, n, 0)
+                };
+                (n, s)
+            })
+            .filter(|&(_, s)| s < BIG)
+            .collect();
+        let n = pick_min_with_random_ties(&scores, rng)?;
         let i = server_select::best_fit(si, set, self.metric, n, candidates)?;
         Some((n, i))
     }
@@ -257,6 +261,15 @@ mod tests {
     }
 
     #[test]
+    fn approx_tied_semantics() {
+        assert!(approx_tied(0.0, 0.0));
+        assert!(approx_tied(0.5, 0.5 + 1e-13));
+        assert!(approx_tied(1e6, 1e6 * (1.0 + 1e-10)));
+        assert!(!approx_tied(0.5, 0.5 + 1e-6));
+        assert!(!approx_tied(0.0, 1.0));
+    }
+
+    #[test]
     fn drf_picks_min_share_framework() {
         let st = illustrative(&[(0, 0, 4)]); // f1 has 4 tasks, f2 none
         let si = st.score_inputs();
@@ -278,6 +291,26 @@ mod tests {
         assert!(picks.contains(&0) && picks.contains(&1), "random tie-break covers both");
         let pj = Policy::new("psdsf", Criterion::PsDsf, PolicyKind::Joint);
         assert_eq!(pj.pick_joint(&set, &si, &[0, 1]), Some((0, 0)));
+    }
+
+    #[test]
+    fn near_equal_shares_still_tie() {
+        // x1 = 5 on s1, x2 = 5 on s2: both dominant shares are 25/130, but
+        // nudge one weight by 1 ulp-ish so the shares differ in the last
+        // bits — the epsilon tie-break must still treat them as tied.
+        let mut st = illustrative(&[(0, 0, 5), (1, 1, 5)]);
+        st.framework_mut(1).weight = 1.0 + 1e-13;
+        let si = st.score_inputs();
+        let set = NativeScorer::compute(&si);
+        assert_ne!(set.drf(0), set.drf(1), "shares differ in the last bits");
+        let p = Policy::new("drf", Criterion::Drf, PolicyKind::PerAgent);
+        let picks: std::collections::HashSet<usize> = (0..64)
+            .filter_map(|s| p.pick_for_agent(&set, &si, 0, &mut Rng::new(s)))
+            .collect();
+        assert!(
+            picks.contains(&0) && picks.contains(&1),
+            "near-equal shares must still exercise the random tie-break: {picks:?}"
+        );
     }
 
     #[test]

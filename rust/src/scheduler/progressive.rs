@@ -11,11 +11,17 @@
 //! re-scoring after every grant; filling stops after a full round with no
 //! grant. Joint/best-fit policies simply grant one task per iteration until
 //! no feasible pair remains.
+//!
+//! Decisions flow through a [`ScoringEngine`], so each grant triggers an
+//! *incremental* re-score (one dirty row + one dirty column) rather than a
+//! from-scratch recompute — the difference between the paper's 2-server
+//! study and the 64–256-agent scale scenarios being tractable.
 
 use crate::error::Result;
 use crate::rng::Rng;
+use crate::scheduler::engine::ScoringEngine;
 use crate::scheduler::policy::{Policy, PolicyKind};
-use crate::scheduler::{AllocState, Scorer};
+use crate::scheduler::AllocState;
 
 /// Outcome of one progressive-filling run.
 #[derive(Debug, Clone)]
@@ -37,7 +43,7 @@ pub struct FillOutcome {
 pub fn progressive_fill(
     state: &mut AllocState,
     policy: &Policy,
-    scorer: &mut dyn Scorer,
+    engine: &mut ScoringEngine,
     rng: &mut Rng,
 ) -> Result<FillOutcome> {
     let mut steps = 0usize;
@@ -54,9 +60,11 @@ pub fn progressive_fill(
                 o
             };
             for i in order {
-                let si = state.score_inputs();
-                let set = scorer.score(&si)?;
-                if let Some(n) = policy.pick_for_agent(&set, &si, i, rng) {
+                let pick = {
+                    let (si, set) = engine.scores(state)?;
+                    policy.pick_for_agent(set, si, i, rng)
+                };
+                if let Some(n) = pick {
                     state.place_task(n, i)?;
                     steps += 1;
                     granted_this_round += 1;
@@ -67,13 +75,14 @@ pub fn progressive_fill(
             }
         },
         PolicyKind::Joint | PolicyKind::BestFit => loop {
-            let si = state.score_inputs();
-            let set = scorer.score(&si)?;
             let candidates = state.pool.registered_ids();
-            let pick = match policy.kind {
-                PolicyKind::Joint => policy.pick_joint(&set, &si, &candidates),
-                PolicyKind::BestFit => policy.pick_bestfit(&set, &si, &candidates, rng),
-                PolicyKind::PerAgent => unreachable!(),
+            let pick = {
+                let (si, set) = engine.scores(state)?;
+                match policy.kind {
+                    PolicyKind::Joint => policy.pick_joint(set, si, &candidates),
+                    PolicyKind::BestFit => policy.pick_bestfit(set, si, &candidates, rng),
+                    PolicyKind::PerAgent => unreachable!(),
+                }
             };
             match pick {
                 Some((n, i)) => {
@@ -122,9 +131,9 @@ mod tests {
     fn run(name: &str, seed: u64) -> FillOutcome {
         let mut st = illustrative();
         let policy = policy_by_name(name).unwrap();
-        let mut scorer = NativeScorer::new();
+        let mut engine = ScoringEngine::native();
         let mut rng = Rng::new(seed);
-        progressive_fill(&mut st, &policy, &mut scorer, &mut rng).unwrap()
+        progressive_fill(&mut st, &policy, &mut engine, &mut rng).unwrap()
     }
 
     #[test]
@@ -206,6 +215,33 @@ mod tests {
     }
 
     #[test]
+    fn incremental_engine_matches_full_recompute() {
+        // the paper's configurations must be bit-identical whichever engine
+        // variant drives the fill
+        for name in crate::scheduler::POLICY_NAMES {
+            let mut st_inc = illustrative();
+            let mut st_full = illustrative();
+            let policy = policy_by_name(name).unwrap();
+            let a = progressive_fill(
+                &mut st_inc,
+                &policy,
+                &mut ScoringEngine::native(),
+                &mut Rng::new(11),
+            )
+            .unwrap();
+            let b = progressive_fill(
+                &mut st_full,
+                &policy,
+                &mut ScoringEngine::external(Box::new(NativeScorer::new())),
+                &mut Rng::new(11),
+            )
+            .unwrap();
+            assert_eq!(a.x, b.x, "{name}: allocations diverge across engines");
+            assert_eq!(a.unused, b.unused, "{name}");
+        }
+    }
+
+    #[test]
     fn unused_never_negative() {
         for name in crate::scheduler::POLICY_NAMES {
             let out = run(name, 17);
@@ -227,8 +263,9 @@ mod tests {
             active: true,
         });
         let policy = policy_by_name("psdsf").unwrap();
-        let out = progressive_fill(&mut st, &policy, &mut NativeScorer::new(), &mut Rng::new(0))
-            .unwrap();
+        let out =
+            progressive_fill(&mut st, &policy, &mut ScoringEngine::native(), &mut Rng::new(0))
+                .unwrap();
         // alone it gets N*_1 = 20 + 6 = 26 tasks
         assert_eq!(out.total, 26.0);
     }

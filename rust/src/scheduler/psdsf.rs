@@ -15,37 +15,32 @@
 //! clusters so much better than DRF in Tables 1/3 (total 41 vs 22.5).
 
 use crate::scheduler::ScoreInputs;
-use crate::{BIG, M_MAX, N_MAX};
+use crate::BIG;
 
-/// `K_{n,i}` for one pair (BIG for padding/inactive/impossible pairs).
+/// `K_{n,i}` for one pair (BIG for inactive/unregistered/impossible pairs).
 pub fn virtual_share(si: &ScoreInputs, n: usize, i: usize) -> f64 {
-    if si.fmask[n] < 0.5 || si.smask[i] < 0.5 {
+    if si.fmask(n) < 0.5 || si.smask(i) < 0.5 {
         return BIG;
     }
     let mut ratio: Option<f64> = None;
-    for r in 0..si.r {
-        if si.rmask[r] > 0.5 && si.d[n][r] > 0.0 {
-            if si.c[i][r] <= 0.0 {
+    for r in 0..si.r() {
+        if si.d(n, r) > 0.0 {
+            if si.c(i, r) <= 0.0 {
                 return BIG; // demanded resource absent on this server
             }
-            let q = si.d[n][r] / si.c[i][r];
+            let q = si.d(n, r) / si.c(i, r);
             ratio = Some(ratio.map_or(q, |b: f64| b.max(q)));
         }
     }
     let Some(ratio) = ratio else { return BIG };
-    let xn = crate::scheduler::role_total(si, n);
-    (xn * ratio / si.phi[n]).min(BIG)
+    (si.role_total(n) * ratio / si.phi(n)).min(BIG)
 }
 
-/// The full `K` matrix.
-pub fn scores(si: &ScoreInputs) -> [[f64; M_MAX]; N_MAX] {
-    let mut out = [[BIG; M_MAX]; N_MAX];
-    for n in 0..si.n {
-        for i in 0..si.m {
-            out[n][i] = virtual_share(si, n, i);
-        }
-    }
-    out
+/// The full `K` matrix (row per framework).
+pub fn scores(si: &ScoreInputs) -> Vec<Vec<f64>> {
+    (0..si.n())
+        .map(|n| (0..si.m()).map(|i| virtual_share(si, n, i)).collect())
+        .collect()
 }
 
 #[cfg(test)]

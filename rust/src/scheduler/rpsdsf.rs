@@ -16,59 +16,79 @@
 //! or BF-DRF whose nominal-capacity scores never change.
 //!
 //! The shared `max_r d/res` factor is exactly the best-fit ratio, so the
-//! fused kernel (and the native scorer) compute it once for both.
+//! native scorer computes it once for both. Residuals live in a flat
+//! `m × r` buffer; [`agent_residuals_into`] recomputes one agent's row,
+//! which is how the incremental engine patches exactly the dirty columns
+//! with arithmetic bit-identical to a full recompute.
 
 use crate::scheduler::ScoreInputs;
-use crate::{BIG, M_MAX, N_MAX, R_MAX};
+use crate::BIG;
 
-/// Residual capacities `res[i][r] = c_{i,r} − Σ_n x_{n,i} d_{n,r}` under the
-/// allocator's believed demands.
-pub fn residuals(si: &ScoreInputs) -> [[f64; R_MAX]; M_MAX] {
-    let mut res = [[0.0; R_MAX]; M_MAX];
-    for i in 0..si.m {
-        for r in 0..si.r {
-            let mut used = 0.0;
-            for n in 0..si.n {
-                used += si.x[n][i] * si.d[n][r];
-            }
-            res[i][r] = si.c[i][r] - used;
+/// Recompute agent `i`'s residual row
+/// `res[r] = c_{i,r} − Σ_n x_{n,i} d_{n,r}` into `out` (length `si.r()`).
+pub fn agent_residuals_into(si: &ScoreInputs, i: usize, out: &mut [f64]) {
+    debug_assert_eq!(out.len(), si.r());
+    for (rr, slot) in out.iter_mut().enumerate() {
+        let mut used = 0.0;
+        for n in 0..si.n() {
+            used += si.x(n, i) * si.d(n, rr);
         }
+        *slot = si.c(i, rr) - used;
+    }
+}
+
+/// Residual capacities for every agent, flat row-major `m × r`
+/// (`res[i * r + rr]`), under the allocator's believed demands.
+pub fn residuals(si: &ScoreInputs) -> Vec<f64> {
+    let r = si.r();
+    let mut res = vec![0.0; si.m() * r];
+    for i in 0..si.m() {
+        agent_residuals_into(si, i, &mut res[i * r..(i + 1) * r]);
     }
     res
 }
 
 /// The demand/residual dominant ratio `max_r d_{n,r}/res_{i,r}` — BIG when a
 /// demanded resource is exhausted on `i`. This is BF-DRF's best-fit score
-/// and rPS-DSF's per-pair factor.
-pub fn residual_ratio(si: &ScoreInputs, res: &[[f64; R_MAX]; M_MAX], n: usize, i: usize) -> f64 {
-    if si.fmask[n] < 0.5 || si.smask[i] < 0.5 {
+/// and rPS-DSF's per-pair factor. `res` is the flat `m × r` buffer from
+/// [`residuals`].
+pub fn residual_ratio(si: &ScoreInputs, res: &[f64], n: usize, i: usize) -> f64 {
+    if si.fmask(n) < 0.5 || si.smask(i) < 0.5 {
         return BIG;
     }
+    let r = si.r();
     let mut ratio: Option<f64> = None;
-    for r in 0..si.r {
-        if si.rmask[r] > 0.5 && si.d[n][r] > 0.0 {
-            if res[i][r] <= 0.0 {
+    for rr in 0..r {
+        if si.d(n, rr) > 0.0 {
+            let avail = res[i * r + rr];
+            if avail <= 0.0 {
                 return BIG;
             }
-            let q = si.d[n][r] / res[i][r];
+            let q = si.d(n, rr) / avail;
             ratio = Some(ratio.map_or(q, |b: f64| b.max(q)));
         }
     }
     ratio.map_or(BIG, |v| v.min(BIG))
 }
 
-/// `K̃_{n,i}` matrix.
-pub fn scores(si: &ScoreInputs) -> [[f64; M_MAX]; N_MAX] {
+/// `K̃_{n,i}` matrix (row per framework).
+pub fn scores(si: &ScoreInputs) -> Vec<Vec<f64>> {
     let res = residuals(si);
-    let mut out = [[BIG; M_MAX]; N_MAX];
-    for n in 0..si.n {
-        let xn = crate::scheduler::role_total(si, n);
-        for i in 0..si.m {
-            let ratio = residual_ratio(si, &res, n, i);
-            out[n][i] = if crate::is_big(ratio) { BIG } else { (xn * ratio / si.phi[n]).min(BIG) };
-        }
-    }
-    out
+    (0..si.n())
+        .map(|n| {
+            let xn = si.role_total(n);
+            (0..si.m())
+                .map(|i| {
+                    let ratio = residual_ratio(si, &res, n, i);
+                    if crate::is_big(ratio) {
+                        BIG
+                    } else {
+                        (xn * ratio / si.phi(n)).min(BIG)
+                    }
+                })
+                .collect()
+        })
+        .collect()
 }
 
 #[cfg(test)]
@@ -98,10 +118,11 @@ mod tests {
         st.place_task(1, 0).unwrap();
         let si = st.score_inputs();
         let res = residuals(&si);
+        let r = si.r();
         // server1: (100,30) - (5,1) - (1,5) = (94, 24)
-        assert_eq!(res[0][0], 94.0);
-        assert_eq!(res[0][1], 24.0);
-        assert_eq!(res[1][0], 30.0);
+        assert_eq!(res[0], 94.0);
+        assert_eq!(res[1], 24.0);
+        assert_eq!(res[r], 30.0);
     }
 
     #[test]
@@ -144,5 +165,19 @@ mod tests {
         // residual s1 = (90, 4): ratio = max(5/90, 1/4) = 0.25
         // residual s2 = (30, 100): ratio = 5/30
         assert!(rps[0][0] > rps[0][1], "rPS-DSF switched to server 2");
+    }
+
+    #[test]
+    fn per_agent_patch_matches_full() {
+        let mut st = illustrative();
+        st.place_task(0, 0).unwrap();
+        st.place_task(1, 1).unwrap();
+        let si = st.score_inputs();
+        let full = residuals(&si);
+        let mut patched = vec![0.0; si.m() * si.r()];
+        for i in 0..si.m() {
+            agent_residuals_into(&si, i, &mut patched[i * si.r()..(i + 1) * si.r()]);
+        }
+        assert_eq!(full, patched);
     }
 }

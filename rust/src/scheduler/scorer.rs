@@ -1,15 +1,22 @@
 //! Native rust scorer — the same math as the fused Pallas kernel
-//! (`python/compile/kernels/scores.py`), computed in f64.
+//! (`python/compile/kernels/scores.py`), computed in f64 over the
+//! dynamically-sized tensors.
 //!
 //! This is the default backend for the experiment sweeps (a 200-trial
-//! progressive-filling study re-scores thousands of times; staying in-process
-//! keeps that in the tens of milliseconds). The HLO backend
-//! (`runtime::scorer::HloScorer`) is bit-compatible up to f32 rounding and
-//! is cross-checked against this one in `rust/tests/runtime_parity.rs`.
+//! progressive-filling study re-scores thousands of times; staying
+//! in-process keeps that in the tens of milliseconds). The HLO backend
+//! (`runtime::scorer::HloScorer`, `hlo` feature) is bit-compatible up to
+//! f32 rounding and is cross-checked against this one in
+//! `rust/tests/runtime_parity.rs`.
+//!
+//! The per-row / per-pair fill helpers are shared with
+//! [`crate::scheduler::engine::IncrementalScorer`], which re-runs them on
+//! exactly the dirty rows and columns — so an incrementally patched
+//! [`ScoreSet`] is bit-identical to a full recompute.
 
 use crate::error::Result;
 use crate::scheduler::{drf, psdsf, rpsdsf, tsf, ScoreInputs, ScoreSet, Scorer};
-use crate::{BIG, is_big};
+use crate::{is_big, BIG};
 
 /// Pure-rust implementation of [`Scorer`].
 #[derive(Debug, Default, Clone)]
@@ -22,29 +29,47 @@ impl NativeScorer {
 
     /// Score synchronously without the trait plumbing.
     pub fn compute(si: &ScoreInputs) -> ScoreSet {
-        let mut set = ScoreSet::empty();
-        set.drf = drf::shares(si);
-        set.tsf = tsf::shares(si);
-        set.psdsf = psdsf::scores(si);
-        set.rpsdsf = rpsdsf::scores(si);
-
-        // best-fit ratio + feasibility share the residual matrix
         let res = rpsdsf::residuals(si);
-        for n in 0..si.n {
-            let has_demand = (0..si.r).any(|r| si.rmask[r] > 0.5 && si.d[n][r] > 0.0);
-            for i in 0..si.m {
-                let feasible = si.fmask[n] > 0.5
-                    && si.smask[i] > 0.5
-                    && has_demand
-                    && (0..si.r).all(|r| {
-                        si.rmask[r] < 0.5 || res[i][r] + 1e-4 >= si.d[n][r]
-                    });
-                set.feas[n][i] = feasible;
-                let ratio = rpsdsf::residual_ratio(si, &res, n, i);
-                set.fit[n][i] = if feasible && !is_big(ratio) { ratio } else { BIG };
-            }
+        Self::compute_with_residuals(si, &res)
+    }
+
+    /// Full scoring pass given precomputed residuals (flat `m × r`).
+    pub(crate) fn compute_with_residuals(si: &ScoreInputs, res: &[f64]) -> ScoreSet {
+        let mut set = ScoreSet::sized(si.n(), si.m());
+        for n in 0..si.n() {
+            Self::fill_row(si, res, &mut set, n);
         }
         set
+    }
+
+    /// Re-score one framework row: its global shares and every pair tensor
+    /// entry.
+    pub(crate) fn fill_row(si: &ScoreInputs, res: &[f64], set: &mut ScoreSet, n: usize) {
+        set.set_drf(n, drf::dominant_share(si, n));
+        set.set_tsf(n, tsf::task_share(si, n));
+        for i in 0..si.m() {
+            Self::fill_pair(si, res, set, n, i);
+        }
+    }
+
+    /// Re-score the residual-dependent tensors (and PS-DSF) for one
+    /// `(framework, agent)` pair.
+    pub(crate) fn fill_pair(si: &ScoreInputs, res: &[f64], set: &mut ScoreSet, n: usize, i: usize) {
+        set.set_psdsf(n, i, psdsf::virtual_share(si, n, i));
+        let ratio = rpsdsf::residual_ratio(si, res, n, i);
+        let rps = if is_big(ratio) {
+            BIG
+        } else {
+            (si.role_total(n) * ratio / si.phi(n)).min(BIG)
+        };
+        set.set_rpsdsf(n, i, rps);
+        let r = si.r();
+        let feasible = si.fmask(n) > 0.5
+            && si.smask(i) > 0.5
+            && si.has_demand(n)
+            && (0..r).all(|rr| res[i * r + rr] + 1e-4 >= si.d(n, rr));
+        set.set_feas(n, i, feasible);
+        set.set_fit(n, i, if feasible && !is_big(ratio) { ratio } else { BIG });
     }
 }
 
@@ -88,11 +113,11 @@ mod tests {
         let st = illustrative(&[(0, 0, 20), (0, 1, 2), (1, 1, 19)]); // BF-DRF end state
         let set = NativeScorer::compute(&st.score_inputs());
         // server1 residual (0, 10): nothing feasible there
-        assert!(!set.feas[0][0] && !set.feas[1][0]);
+        assert!(!set.feas(0, 0) && !set.feas(1, 0));
         // server2 residual (1, 3): nothing feasible there either
-        assert!(!set.feas[0][1] && !set.feas[1][1]);
+        assert!(!set.feas(0, 1) && !set.feas(1, 1));
         // global shares real
-        assert!(!crate::is_big(set.drf[0]) && !crate::is_big(set.drf[1]));
+        assert!(!crate::is_big(set.drf(0)) && !crate::is_big(set.drf(1)));
     }
 
     #[test]
@@ -104,8 +129,8 @@ mod tests {
         for n in 0..2 {
             let xn = st.total_tasks(n);
             for i in 0..2 {
-                if !crate::is_big(set.fit[n][i]) && !crate::is_big(set.rpsdsf[n][i]) {
-                    assert!((set.fit[n][i] * xn - set.rpsdsf[n][i]).abs() < 1e-9);
+                if !crate::is_big(set.fit(n, i)) && !crate::is_big(set.rpsdsf(n, i)) {
+                    assert!((set.fit(n, i) * xn - set.rpsdsf(n, i)).abs() < 1e-9);
                 }
             }
         }
@@ -115,25 +140,22 @@ mod tests {
     fn empty_cluster_all_zero_shares() {
         let st = illustrative(&[]);
         let set = NativeScorer::compute(&st.score_inputs());
-        assert_eq!(set.drf[0], 0.0);
-        assert_eq!(set.tsf[1], 0.0);
-        assert_eq!(set.psdsf[0][0], 0.0);
-        assert!(set.feas[0][0] && set.feas[1][1]);
+        assert_eq!(set.drf(0), 0.0);
+        assert_eq!(set.tsf(1), 0.0);
+        assert_eq!(set.psdsf(0, 0), 0.0);
+        assert!(set.feas(0, 0) && set.feas(1, 1));
     }
 
     #[test]
-    fn padding_slots_sentinel() {
+    fn set_is_sized_to_instance() {
+        // dynamic dims: the set is exactly (n, m) — no padding slots
         let st = illustrative(&[]);
         let set = NativeScorer::compute(&st.score_inputs());
-        for n in 2..crate::N_MAX {
-            assert!(crate::is_big(set.drf[n]));
-            for i in 0..crate::M_MAX {
-                assert!(crate::is_big(set.psdsf[n][i]));
-                assert!(!set.feas[n][i]);
-            }
-        }
-        for i in 2..crate::M_MAX {
-            assert!(crate::is_big(set.psdsf[0][i]));
-        }
+        assert_eq!((set.n(), set.m()), (2, 2));
+        let sized = ScoreSet::sized(3, 5);
+        assert_eq!((sized.n(), sized.m()), (3, 5));
+        assert!(crate::is_big(sized.drf(2)));
+        assert!(crate::is_big(sized.psdsf(2, 4)));
+        assert!(!sized.feas(0, 0));
     }
 }

@@ -14,7 +14,7 @@
 //!   fraction (a "worst-fit" baseline used in the ablation bench).
 
 use crate::rng::Rng;
-use crate::scheduler::{ScoreInputs, ScoreSet};
+use crate::scheduler::{rpsdsf, ScoreInputs, ScoreSet};
 use crate::BIG;
 
 /// Exact metric used by best-fit server selection (DESIGN.md §6.1).
@@ -45,21 +45,21 @@ pub fn best_fit(
     n: usize,
     candidates: &[usize],
 ) -> Option<usize> {
-    let res = crate::scheduler::rpsdsf::residuals(si);
+    let res = rpsdsf::residuals(si);
+    let r = si.r();
     let mut best: Option<(f64, usize)> = None;
     for &i in candidates {
-        if !set.feas[n][i] {
+        if !set.feas(n, i) {
             continue;
         }
         let score = match metric {
-            BestFitMetric::ProfileRatio => set.fit[n][i],
-            BestFitMetric::L1 => (0..si.r)
-                .filter(|r| si.rmask[*r] > 0.5)
-                .map(|r| (res[i][r] - si.d[n][r]).abs())
-                .sum(),
-            BestFitMetric::L2 => (0..si.r)
-                .filter(|r| si.rmask[*r] > 0.5)
-                .map(|r| (res[i][r] - si.d[n][r]) * (res[i][r] - si.d[n][r]))
+            BestFitMetric::ProfileRatio => set.fit(n, i),
+            BestFitMetric::L1 => (0..r).map(|rr| (res[i * r + rr] - si.d(n, rr)).abs()).sum(),
+            BestFitMetric::L2 => (0..r)
+                .map(|rr| {
+                    let diff = res[i * r + rr] - si.d(n, rr);
+                    diff * diff
+                })
                 .sum::<f64>()
                 .sqrt(),
         };
@@ -79,11 +79,11 @@ pub fn best_fit(
 pub fn max_residual(set: &ScoreSet, n: usize, candidates: &[usize]) -> Option<usize> {
     let mut best: Option<(f64, usize)> = None;
     for &i in candidates {
-        if !set.feas[n][i] || set.fit[n][i] >= BIG {
+        if !set.feas(n, i) || set.fit(n, i) >= BIG {
             continue;
         }
         // larger hostable count == smaller fit ratio; invert the comparison
-        let score = -1.0 / set.fit[n][i].max(1e-30);
+        let score = -1.0 / set.fit(n, i).max(1e-30);
         match best {
             Some((b, _)) if score >= b => {}
             _ => best = Some((score, i)),

@@ -14,19 +14,19 @@
 //! (Tables 1–4 show matching allocations and waste).
 
 use crate::scheduler::ScoreInputs;
-use crate::{BIG, N_MAX};
+use crate::BIG;
 
 /// `N*_n`: max whole tasks of `n` the registered cluster could host alone.
 pub fn nstar(si: &ScoreInputs, n: usize) -> f64 {
     let mut total = 0.0f64;
-    for i in 0..si.m {
-        if si.smask[i] < 0.5 {
+    for i in 0..si.m() {
+        if si.smask(i) < 0.5 {
             continue;
         }
         let mut per_server: Option<f64> = None;
-        for r in 0..si.r {
-            if si.rmask[r] > 0.5 && si.d[n][r] > 0.0 {
-                let k = ((si.c[i][r] + 1e-9) / si.d[n][r]).floor().max(0.0);
+        for r in 0..si.r() {
+            if si.d(n, r) > 0.0 {
+                let k = ((si.c(i, r) + 1e-9) / si.d(n, r)).floor().max(0.0);
                 per_server = Some(per_server.map_or(k, |b: f64| b.min(k)));
             }
         }
@@ -35,30 +35,24 @@ pub fn nstar(si: &ScoreInputs, n: usize) -> f64 {
     total
 }
 
-/// Task share of framework `n` (BIG for padding/inactive/zero-demand slots).
+/// Task share of framework `n` (BIG for inactive/zero-demand frameworks).
 pub fn task_share(si: &ScoreInputs, n: usize) -> f64 {
-    if si.fmask[n] < 0.5 {
+    if si.fmask(n) < 0.5 {
         return BIG;
     }
-    let has_demand = (0..si.r).any(|r| si.rmask[r] > 0.5 && si.d[n][r] > 0.0);
-    if !has_demand {
+    if !si.has_demand(n) {
         return BIG;
     }
     let ns = nstar(si, n);
     if ns <= 0.0 {
         return BIG;
     }
-    let xn = crate::scheduler::role_total(si, n);
-    xn / (si.phi[n] * ns)
+    si.role_total(n) / (si.phi(n) * ns)
 }
 
 /// All task shares.
-pub fn shares(si: &ScoreInputs) -> [f64; N_MAX] {
-    let mut out = [BIG; N_MAX];
-    for (n, o) in out.iter_mut().enumerate().take(si.n) {
-        *o = task_share(si, n);
-    }
-    out
+pub fn shares(si: &ScoreInputs) -> Vec<f64> {
+    (0..si.n()).map(|n| task_share(si, n)).collect()
 }
 
 #[cfg(test)]

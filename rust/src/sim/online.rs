@@ -110,6 +110,34 @@ impl OnlineConfig {
         cfg
     }
 
+    /// The scale scenario family unlocked by the dynamic-dimension scoring
+    /// core: `agents` heterogeneous servers ([`ServerType::scaled`]) driven
+    /// by `queues` concurrent submission queues (alternating Pi/WordCount,
+    /// one in-flight job each — so `queues` concurrent frameworks) of
+    /// `jobs_per_queue` jobs. `scaled("rpsdsf", mode, 64, 128, 1)` runs a
+    /// 64-agent / 128-framework experiment end-to-end; the paper's own
+    /// configurations are the `paper*` constructors above.
+    pub fn scaled(
+        policy: &str,
+        mode: AllocatorMode,
+        agents: usize,
+        queues: usize,
+        jobs_per_queue: usize,
+    ) -> Self {
+        let mut cfg = OnlineConfig::paper(policy, mode, jobs_per_queue);
+        cfg.cluster = ServerType::scaled(agents);
+        cfg.queues = (0..queues)
+            .map(|q| {
+                let mut w = if q % 2 == 0 { WorkloadSpec::pi() } else { WorkloadSpec::wordcount() };
+                // keep per-job work small: the point is breadth, not depth
+                w.tasks_per_job = 8;
+                w.max_executors = 2;
+                QueueSpec { workload: w, jobs: jobs_per_queue }
+            })
+            .collect();
+        cfg
+    }
+
     /// A small fast configuration for tests.
     pub fn small(policy: &str, mode: AllocatorMode) -> Self {
         let mut cfg = OnlineConfig::paper(policy, mode, 2);

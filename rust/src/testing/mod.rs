@@ -1,6 +1,8 @@
 //! Testing substrate: a small property-testing driver (proptest is
-//! unavailable offline).
+//! unavailable offline) and shared scenario builders.
 
 pub mod prop;
+pub mod scenarios;
 
 pub use prop::{forall, Case};
+pub use scenarios::{scaled_state, scaled_state_with_load};

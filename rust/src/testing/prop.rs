@@ -51,6 +51,192 @@ pub fn forall<T: std::fmt::Debug>(
 mod tests {
     use super::*;
 
+    mod incremental_equivalence {
+        //! The incremental-scorer contract: after ANY sequence of
+        //! place / unplace / arrival / departure / agent-registration /
+        //! role mutations, [`IncrementalScorer`] must produce tensors
+        //! bit-identical to a from-scratch [`NativeScorer::compute`].
+
+        use crate::cluster::{AgentPool, ServerType};
+        use crate::resources::ResVec;
+        use crate::rng::Rng;
+        use crate::scheduler::{
+            AllocState, FrameworkEntry, IncrementalScorer, NativeScorer,
+        };
+        use crate::testing::forall;
+
+        #[derive(Debug, Clone, Copy, PartialEq)]
+        enum Op {
+            Place,
+            Unplace,
+            Arrival,
+            Departure,
+            AgentUp,
+            RoleMove,
+        }
+
+        #[derive(Debug, Clone)]
+        struct Seq {
+            m: usize,
+            n0: usize,
+            staged: bool,
+            shared_roles: bool,
+            ops: Vec<Op>,
+            seed: u64,
+        }
+
+        fn gen_seq(rng: &mut Rng) -> Seq {
+            let ops = (0..10 + rng.index(30))
+                .map(|_| match rng.index(12) {
+                    0 => Op::Arrival,
+                    1 => Op::Departure,
+                    2 => Op::AgentUp,
+                    3 => Op::RoleMove,
+                    4 | 5 | 6 => Op::Unplace,
+                    _ => Op::Place,
+                })
+                .collect();
+            Seq {
+                m: 1 + rng.index(6),
+                n0: 1 + rng.index(6),
+                staged: rng.chance(0.3),
+                shared_roles: rng.chance(0.5),
+                ops,
+                seed: rng.next_u64(),
+            }
+        }
+
+        fn random_demand(rng: &mut Rng) -> ResVec {
+            ResVec::new(&[
+                rng.range(0.5, 6.0).round().max(1.0),
+                rng.range(0.5, 6.0).round().max(1.0),
+            ])
+        }
+
+        fn build(seq: &Seq, rng: &mut Rng) -> AllocState {
+            let types: Vec<ServerType> = (0..seq.m)
+                .map(|i| {
+                    ServerType::new(
+                        format!("s{i}"),
+                        ResVec::new(&[rng.range(4.0, 40.0).round(), rng.range(4.0, 40.0).round()]),
+                    )
+                })
+                .collect();
+            let pool = if seq.staged {
+                AgentPool::new_staged(&types)
+            } else {
+                AgentPool::new(&types)
+            };
+            let mut st = AllocState::new(pool);
+            for k in 0..seq.n0 {
+                st.add_framework(FrameworkEntry {
+                    name: format!("f{k}"),
+                    demand: random_demand(rng),
+                    weight: if rng.chance(0.2) { 2.0 } else { 1.0 },
+                    active: true,
+                });
+                if seq.shared_roles {
+                    st.set_role(k, k % 2);
+                }
+            }
+            if seq.staged {
+                // bring at least one agent up so placements are possible
+                st.agent_up(0);
+            }
+            st
+        }
+
+        fn apply(op: Op, st: &mut AllocState, rng: &mut Rng) {
+            match op {
+                Op::Place => {
+                    let (n, m) = (st.n_frameworks(), st.pool.len());
+                    for _ in 0..8 {
+                        let fw = rng.index(n);
+                        let ag = rng.index(m);
+                        if st.pool.agent(ag).registered && st.task_fits(fw, ag) {
+                            st.place_task(fw, ag).unwrap();
+                            return;
+                        }
+                    }
+                }
+                Op::Unplace => {
+                    let (n, m) = (st.n_frameworks(), st.pool.len());
+                    for _ in 0..8 {
+                        let fw = rng.index(n);
+                        let ag = rng.index(m);
+                        if st.tasks_on(fw, ag) >= 1.0 {
+                            let d = st.framework(fw).demand;
+                            st.unplace(fw, ag, &d, 1.0).unwrap();
+                            return;
+                        }
+                    }
+                }
+                Op::Arrival => {
+                    let k = st.n_frameworks();
+                    let d = random_demand(rng);
+                    st.add_framework(FrameworkEntry {
+                        name: format!("f{k}"),
+                        demand: d,
+                        weight: 1.0,
+                        active: true,
+                    });
+                }
+                Op::Departure => {
+                    let fw = rng.index(st.n_frameworks());
+                    if st.framework(fw).active {
+                        // release its tasks first (the sim's semantics), then go
+                        for ag in 0..st.pool.len() {
+                            let k = st.tasks_on(fw, ag);
+                            if k >= 1.0 {
+                                let d = st.framework(fw).demand;
+                                st.unplace(fw, ag, &d.scaled(k), k).unwrap();
+                            }
+                        }
+                        st.deactivate(fw);
+                    }
+                }
+                Op::AgentUp => {
+                    let ag = rng.index(st.pool.len());
+                    if !st.pool.agent(ag).registered {
+                        st.agent_up(ag);
+                    }
+                }
+                Op::RoleMove => {
+                    let fw = rng.index(st.n_frameworks());
+                    let role = rng.index(st.n_frameworks().max(2));
+                    st.set_role(fw, role);
+                }
+            }
+        }
+
+        #[test]
+        fn prop_incremental_scorer_equals_full_recompute() {
+            forall(0x1C4E, 60, gen_seq, |seq| {
+                let mut rng = Rng::new(seq.seed);
+                let mut st = build(seq, &mut rng);
+                let mut inc = IncrementalScorer::new();
+                // initial full pass, then check after every mutation
+                inc.rescore(&mut st);
+                for (step, &op) in seq.ops.iter().enumerate() {
+                    apply(op, &mut st, &mut rng);
+                    let expected_si = st.score_inputs();
+                    let expected = NativeScorer::compute(&expected_si);
+                    let (si, set) = inc.rescore(&mut st);
+                    if si != &expected_si {
+                        return Err(format!("inputs diverged after step {step} ({op:?})"));
+                    }
+                    if set != &expected {
+                        return Err(format!(
+                            "scores diverged after step {step} ({op:?}): all six tensors must \
+                             be bit-identical to a full recompute"
+                        ));
+                    }
+                }
+                Ok(())
+            });
+        }
+    }
+
     #[test]
     fn passes_true_property() {
         forall(1, 100, |rng| rng.below(100), |x| {

@@ -1,0 +1,58 @@
+//! Shared scenario builders for tests and benches — notably the scale
+//! family the dynamic-dimension scoring core unlocked.
+
+use crate::cluster::{AgentPool, ServerType};
+use crate::resources::ResVec;
+use crate::rng::Rng;
+use crate::scheduler::{AllocState, FrameworkEntry};
+
+/// An `m`-agent heterogeneous cluster ([`ServerType::scaled`]) with `n`
+/// frameworks alternating the paper's Pi / WordCount demand profiles.
+pub fn scaled_state(m: usize, n: usize) -> AllocState {
+    let mut st = AllocState::new(AgentPool::new(&ServerType::scaled(m)));
+    for k in 0..n {
+        let d = if k % 2 == 0 { ResVec::cpu_mem(2.0, 2.0) } else { ResVec::cpu_mem(1.0, 3.5) };
+        st.add_framework(FrameworkEntry {
+            name: format!("f{k}"),
+            demand: d,
+            weight: 1.0,
+            active: true,
+        });
+    }
+    st
+}
+
+/// `scaled_state` plus a random partial allocation of up to `places`
+/// placements (only feasible ones are applied).
+pub fn scaled_state_with_load(m: usize, n: usize, places: usize, rng: &mut Rng) -> AllocState {
+    let mut st = scaled_state(m, n);
+    for _ in 0..places {
+        let fw = rng.index(n);
+        let ag = rng.index(m);
+        if st.task_fits(fw, ag) {
+            st.place_task(fw, ag).unwrap();
+        }
+    }
+    st
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn scaled_state_dimensions() {
+        let st = scaled_state(64, 128);
+        assert_eq!(st.pool.len(), 64);
+        assert_eq!(st.n_frameworks(), 128);
+        assert_eq!(st.pool.resource_kinds(), 2);
+    }
+
+    #[test]
+    fn loaded_state_places_something() {
+        let mut rng = Rng::new(7);
+        let st = scaled_state_with_load(8, 16, 40, &mut rng);
+        let placed: f64 = (0..16).map(|n| st.total_tasks(n)).sum();
+        assert!(placed > 0.0);
+    }
+}

@@ -7,7 +7,7 @@ use mesos_fair::resources::ResVec;
 use mesos_fair::rng::Rng;
 use mesos_fair::scheduler::progressive::progressive_fill;
 use mesos_fair::scheduler::{
-    policy_by_name, AllocState, FrameworkEntry, NativeScorer, POLICY_NAMES,
+    policy_by_name, AllocState, FrameworkEntry, NativeScorer, ScoringEngine, POLICY_NAMES,
 };
 use mesos_fair::sim::online::{OnlineConfig, OnlineSim};
 use mesos_fair::testing::forall;
@@ -61,8 +61,13 @@ fn prop_progressive_fill_never_overallocates_and_saturates() {
     forall(0xF111, 60, gen_instance, |inst| {
         let mut st = build_state(inst);
         let policy = policy_by_name(inst.policy).unwrap();
-        let out = progressive_fill(&mut st, &policy, &mut NativeScorer::new(), &mut Rng::new(inst.seed))
-            .map_err(|e| e.to_string())?;
+        let out = progressive_fill(
+            &mut st,
+            &policy,
+            &mut ScoringEngine::native(),
+            &mut Rng::new(inst.seed),
+        )
+        .map_err(|e| e.to_string())?;
         // 1. no negative residuals
         for (i, row) in out.unused.iter().enumerate() {
             for &v in row {
@@ -101,8 +106,13 @@ fn prop_single_framework_gets_whole_cluster() {
             st.deactivate(n);
         }
         let policy = policy_by_name(inst.policy).unwrap();
-        let out = progressive_fill(&mut st, &policy, &mut NativeScorer::new(), &mut Rng::new(inst.seed))
-            .map_err(|e| e.to_string())?;
+        let out = progressive_fill(
+            &mut st,
+            &policy,
+            &mut ScoringEngine::native(),
+            &mut Rng::new(inst.seed),
+        )
+        .map_err(|e| e.to_string())?;
         let d = ResVec::new(&inst.demands[0]);
         // upper bound: sum over servers of whole tasks; progressive filling
         // must reach it exactly (no fragmentation for a single framework)
@@ -140,10 +150,16 @@ fn prop_scores_monotone_in_allocation() {
                     let mut st2 = st.clone();
                     st2.place_task(n, i).unwrap();
                     let after = NativeScorer::compute(&st2.score_inputs());
-                    if !is_big(before.drf[n]) && !is_big(after.drf[n]) && after.drf[n] < before.drf[n] - 1e-12 {
+                    if !is_big(before.drf(n))
+                        && !is_big(after.drf(n))
+                        && after.drf(n) < before.drf(n) - 1e-12
+                    {
                         return Err(format!("drf share of {n} decreased"));
                     }
-                    if !is_big(before.tsf[n]) && !is_big(after.tsf[n]) && after.tsf[n] < before.tsf[n] - 1e-12 {
+                    if !is_big(before.tsf(n))
+                        && !is_big(after.tsf(n))
+                        && after.tsf(n) < before.tsf(n) - 1e-12
+                    {
                         return Err(format!("tsf share of {n} decreased"));
                     }
                 }
@@ -171,8 +187,8 @@ fn prop_feasibility_matches_pool_truth() {
         for n in 0..inst.demands.len() {
             for i in 0..inst.caps.len() {
                 let truth = st.task_fits(n, i);
-                if set.feas[n][i] != truth {
-                    return Err(format!("feas[{n}][{i}] = {} but pool says {truth}", set.feas[n][i]));
+                if set.feas(n, i) != truth {
+                    return Err(format!("feas[{n}][{i}] = {} but pool says {truth}", set.feas(n, i)));
                 }
             }
         }
@@ -186,7 +202,7 @@ fn prop_scores_finite_iff_meaningful() {
         let st = build_state(inst);
         let set = NativeScorer::compute(&st.score_inputs());
         for n in 0..inst.demands.len() {
-            if set.drf[n] >= BIG && inst.demands[n].iter().any(|d| *d > 0.0) {
+            if set.drf(n) >= BIG && inst.demands[n].iter().any(|d| *d > 0.0) {
                 return Err(format!("active framework {n} scored BIG under drf"));
             }
         }

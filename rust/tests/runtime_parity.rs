@@ -1,14 +1,18 @@
 //! Native scorer vs AOT/PJRT kernel parity + workload artifact checks.
 //!
-//! Requires `make artifacts` (these tests skip with a message otherwise —
-//! `make test` always builds artifacts first).
+//! Compiled only with the `hlo` cargo feature (the default build has no
+//! XLA dependency), and each test additionally skips with a message unless
+//! `make artifacts` has produced the AOT artifacts — so
+//! `cargo build --release && cargo test -q` passes on a machine with
+//! neither Python nor PJRT.
+#![cfg(feature = "hlo")]
 
 use mesos_fair::cluster::{AgentPool, ServerType};
 use mesos_fair::resources::ResVec;
 use mesos_fair::rng::Rng;
-use mesos_fair::runtime::{find_artifact_dir, ArtifactRuntime, HloScorer, WorkloadRuntime};
-use mesos_fair::scheduler::{AllocState, FrameworkEntry, NativeScorer, Scorer};
-use mesos_fair::{is_big, M_MAX, N_MAX, PI_SAMPLES, WC_VOCAB};
+use mesos_fair::runtime::{find_artifact_dir, pack_padded, ArtifactRuntime, HloScorer, WorkloadRuntime};
+use mesos_fair::scheduler::{AllocState, FrameworkEntry, NativeScorer, Scorer, ScoringEngine};
+use mesos_fair::{is_big, M_MAX, N_MAX, PI_SAMPLES, R_MAX, WC_VOCAB};
 
 macro_rules! require_artifacts {
     () => {
@@ -32,7 +36,10 @@ fn random_state(rng: &mut Rng) -> AllocState {
         let d = match rng.index(3) {
             0 => ResVec::cpu_mem(2.0, 2.0),
             1 => ResVec::cpu_mem(1.0, 3.5),
-            _ => ResVec::new(&[rng.range(0.5, 6.0).round().max(1.0), rng.range(0.5, 6.0).round().max(1.0)]),
+            _ => ResVec::new(&[
+                rng.range(0.5, 6.0).round().max(1.0),
+                rng.range(0.5, 6.0).round().max(1.0),
+            ]),
         };
         st.add_framework(FrameworkEntry {
             name: format!("f{k}"),
@@ -51,21 +58,26 @@ fn random_state(rng: &mut Rng) -> AllocState {
     st
 }
 
-fn assert_sets_match(a: &mesos_fair::scheduler::ScoreSet, b: &mesos_fair::scheduler::ScoreSet, ctx: &str) {
+fn assert_sets_match(
+    a: &mesos_fair::scheduler::ScoreSet,
+    b: &mesos_fair::scheduler::ScoreSet,
+    ctx: &str,
+) {
     let tol = 1e-4;
-    for n in 0..N_MAX {
-        for (x, y, name) in [(a.drf[n], b.drf[n], "drf"), (a.tsf[n], b.tsf[n], "tsf")] {
+    assert_eq!((a.n(), a.m()), (b.n(), b.m()), "{ctx}: dims");
+    for n in 0..a.n() {
+        for (x, y, name) in [(a.drf(n), b.drf(n), "drf"), (a.tsf(n), b.tsf(n), "tsf")] {
             assert_eq!(is_big(x), is_big(y), "{ctx}: {name}[{n}] BIG mismatch ({x} vs {y})");
             if !is_big(x) {
                 assert!((x - y).abs() < tol, "{ctx}: {name}[{n}] {x} vs {y}");
             }
         }
-        for i in 0..M_MAX {
-            assert_eq!(a.feas[n][i], b.feas[n][i], "{ctx}: feas[{n}][{i}]");
+        for i in 0..a.m() {
+            assert_eq!(a.feas(n, i), b.feas(n, i), "{ctx}: feas[{n}][{i}]");
             for (x, y, name) in [
-                (a.psdsf[n][i], b.psdsf[n][i], "psdsf"),
-                (a.rpsdsf[n][i], b.rpsdsf[n][i], "rpsdsf"),
-                (a.fit[n][i], b.fit[n][i], "fit"),
+                (a.psdsf(n, i), b.psdsf(n, i), "psdsf"),
+                (a.rpsdsf(n, i), b.rpsdsf(n, i), "rpsdsf"),
+                (a.fit(n, i), b.fit(n, i), "fit"),
             ] {
                 assert_eq!(is_big(x), is_big(y), "{ctx}: {name}[{n}][{i}] BIG mismatch ({x} vs {y})");
                 if !is_big(x) {
@@ -138,6 +150,23 @@ fn scorer_parity_with_unregistered_servers() {
 }
 
 #[test]
+fn hlo_scorer_rejects_oversize_instances() {
+    require_artifacts!();
+    let mut hlo = HloScorer::open_default().unwrap();
+    let types: Vec<ServerType> =
+        (0..M_MAX + 1).map(|k| ServerType::new(format!("s{k}"), ResVec::new(&[8.0, 8.0]))).collect();
+    let mut st = AllocState::new(AgentPool::new(&types));
+    st.add_framework(FrameworkEntry {
+        name: "f".into(),
+        demand: ResVec::new(&[1.0, 1.0]),
+        weight: 1.0,
+        active: true,
+    });
+    let err = hlo.score(&st.score_inputs()).unwrap_err();
+    assert!(err.to_string().contains("exceeds"), "{err}");
+}
+
+#[test]
 fn progressive_fill_identical_under_both_scorers() {
     require_artifacts!();
     use mesos_fair::scheduler::{policy_by_name, progressive::progressive_fill};
@@ -157,10 +186,12 @@ fn progressive_fill_identical_under_both_scorers() {
         let policy = policy_by_name(policy_name).unwrap();
         let mut st1 = build();
         let out_native =
-            progressive_fill(&mut st1, &policy, &mut NativeScorer::new(), &mut Rng::new(4)).unwrap();
+            progressive_fill(&mut st1, &policy, &mut ScoringEngine::native(), &mut Rng::new(4))
+                .unwrap();
         let mut st2 = build();
-        let mut hlo = HloScorer::open_default().unwrap();
-        let out_hlo = progressive_fill(&mut st2, &policy, &mut hlo, &mut Rng::new(4)).unwrap();
+        let hlo = HloScorer::open_default().unwrap();
+        let mut engine = ScoringEngine::external(Box::new(hlo));
+        let out_hlo = progressive_fill(&mut st2, &policy, &mut engine, &mut Rng::new(4)).unwrap();
         assert_eq!(out_native.x, out_hlo.x, "{policy_name}: allocations diverge across scorers");
     }
 }
@@ -221,26 +252,26 @@ fn utilization_artifact_matches_pool() {
         st.place_task(0, 0).unwrap();
     }
     st.place_task(1, 1).unwrap();
-    let si = st.score_inputs();
+    let p = pack_padded(&st.score_inputs()).unwrap();
     // pack and execute the utilization artifact
     let mut c = Vec::new();
-    for row in &si.c {
+    for row in &p.c {
         c.extend_from_slice(row);
     }
     let mut x = Vec::new();
-    for row in &si.x {
+    for row in &p.x {
         x.extend_from_slice(row);
     }
     let mut d = Vec::new();
-    for row in &si.d {
+    for row in &p.d {
         d.extend_from_slice(row);
     }
     let lits = vec![
-        mesos_fair::runtime::client::literal_f32(&c, &[M_MAX as i64, mesos_fair::R_MAX as i64]).unwrap(),
+        mesos_fair::runtime::client::literal_f32(&c, &[M_MAX as i64, R_MAX as i64]).unwrap(),
         mesos_fair::runtime::client::literal_f32(&x, &[N_MAX as i64, M_MAX as i64]).unwrap(),
-        mesos_fair::runtime::client::literal_f32(&d, &[N_MAX as i64, mesos_fair::R_MAX as i64]).unwrap(),
-        mesos_fair::runtime::client::literal_f32(&si.smask, &[M_MAX as i64]).unwrap(),
-        mesos_fair::runtime::client::literal_f32(&si.rmask, &[mesos_fair::R_MAX as i64]).unwrap(),
+        mesos_fair::runtime::client::literal_f32(&d, &[N_MAX as i64, R_MAX as i64]).unwrap(),
+        mesos_fair::runtime::client::literal_f32(&p.smask, &[M_MAX as i64]).unwrap(),
+        mesos_fair::runtime::client::literal_f32(&p.rmask, &[R_MAX as i64]).unwrap(),
     ];
     let outs = rt.execute("utilization", &lits).unwrap();
     let util: Vec<f32> = outs[0].to_vec().unwrap();

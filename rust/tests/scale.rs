@@ -1,0 +1,71 @@
+//! Scale scenarios — impossible at the seed (`assert!(n < N_MAX)` with
+//! `N_MAX = 16` / `M_MAX = 8` capped every instance at the paper's size).
+//! With the dynamic-dimension core + incremental re-scoring, both the
+//! progressive-filling study and the online Mesos sim drive 64-agent /
+//! 128-framework scenarios end-to-end.
+
+use mesos_fair::mesos::AllocatorMode;
+use mesos_fair::rng::Rng;
+use mesos_fair::scheduler::progressive::progressive_fill;
+use mesos_fair::scheduler::{policy_by_name, IncrementalScorer, NativeScorer, ScoringEngine};
+use mesos_fair::sim::online::{OnlineConfig, OnlineSim};
+use mesos_fair::testing::{scaled_state, scaled_state_with_load};
+
+#[test]
+fn progressive_fill_64_agents_128_frameworks() {
+    let mut st = scaled_state(64, 128);
+    let policy = policy_by_name("rpsdsf").unwrap();
+    let mut engine = ScoringEngine::native();
+    let out = progressive_fill(&mut st, &policy, &mut engine, &mut Rng::new(0x5CA1E)).unwrap();
+    assert!(st.saturated());
+    // 64 agents cycling (4,14)/(8,8)/(6,11) hold well over 100 Pi/WC tasks
+    assert!(out.total >= 100.0, "total {}", out.total);
+    // the whole fill ran off one full rescore + per-grant increments
+    let (full, incremental) = engine.rescore_stats().unwrap();
+    assert_eq!(full, 1, "structural-free fill must not fall back to full recomputes");
+    assert!(incremental as usize >= out.steps, "{incremental} < {}", out.steps);
+}
+
+#[test]
+fn incremental_equals_full_at_scale() {
+    // spot-check the equivalence property at a size the prop test (which
+    // sweeps small random instances) never reaches
+    let mut rng = Rng::new(0xB16);
+    let mut st = scaled_state_with_load(64, 128, 200, &mut rng);
+    let mut inc = IncrementalScorer::new();
+    inc.rescore(&mut st);
+    for _ in 0..50 {
+        let n = rng.index(128);
+        let i = rng.index(64);
+        if st.task_fits(n, i) {
+            st.place_task(n, i).unwrap();
+        }
+        let (_, set) = inc.rescore(&mut st);
+        assert_eq!(set, &NativeScorer::compute(&st.score_inputs()));
+    }
+}
+
+#[test]
+fn online_sim_64_agents_128_frameworks() {
+    // 128 concurrent queues × 1 job = 128 concurrent frameworks on 64
+    // heterogeneous agents — eight times the old framework cap
+    let mut cfg = OnlineConfig::scaled("rpsdsf", AllocatorMode::Characterized, 64, 128, 1);
+    cfg.seed = 0xFEED;
+    let r = OnlineSim::new(cfg).unwrap().run().unwrap();
+    assert_eq!(r.jobs_completed, 128);
+    assert!(r.makespan > 0.0);
+    assert!(r.mean_cpu > 0.0 && r.mean_mem > 0.0);
+}
+
+#[test]
+fn online_sim_scaled_is_deterministic() {
+    let mk = || {
+        let mut cfg = OnlineConfig::scaled("drf", AllocatorMode::Characterized, 64, 128, 1);
+        cfg.seed = 0xD17E;
+        OnlineSim::new(cfg).unwrap().run().unwrap()
+    };
+    let a = mk();
+    let b = mk();
+    assert_eq!(a.makespan, b.makespan);
+    assert_eq!(a.grants, b.grants);
+}
