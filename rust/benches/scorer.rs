@@ -7,10 +7,13 @@
 //! the scoring core is tracked from PR to PR.
 
 use mesos_fair::bench::{bench, bench_adaptive, header, BenchResult};
+use mesos_fair::mesos::allocator::{CycleMask, MaskedScores, OfferHandler};
+use mesos_fair::mesos::offer::Offer;
 use mesos_fair::mesos::AllocatorMode;
 use mesos_fair::metrics::json::Json;
+use mesos_fair::resources::ResVec;
 use mesos_fair::rng::Rng;
-use mesos_fair::scheduler::{IncrementalScorer, NativeScorer};
+use mesos_fair::scheduler::{policy_by_name, IncrementalScorer, NativeScorer};
 use mesos_fair::sim::online::{OnlineConfig, OnlineSim};
 use mesos_fair::testing::scaled_state_with_load;
 
@@ -94,6 +97,56 @@ fn main() {
         }
     }
 
+    header("offer-iteration masking at 256x512 — tensor clone (old) vs overlay (new)");
+    let masking_rows = {
+        // wants-everything handler (masking cost only, no accepts)
+        struct AllWants;
+        impl OfferHandler for AllWants {
+            fn wants(&self, _n: usize) -> bool {
+                true
+            }
+            fn accept(&mut self, _offer: &Offer) -> (f64, ResVec) {
+                (0.0, ResVec::zero(2))
+            }
+        }
+        let (m, n) = (256usize, 512usize);
+        let st = scaled_state_with_load(m, n, 4 * m, &mut rng);
+        let set = NativeScorer::compute(&st.score_inputs());
+        let si = st.score_inputs();
+        let policy = policy_by_name("psdsf").unwrap();
+        let candidates: Vec<usize> = (0..m).collect();
+        let handler = AllWants;
+        let mask = CycleMask::new(&st, &handler, AllocatorMode::Characterized, &[]);
+
+        // old per-iteration cost: clone all six tensors, write the handler
+        // masks in, then run the argmin over the clone
+        let cloned = bench(&format!("mask/clone+pick/{m}x{n}"), 5, 40, || {
+            let mut masked = set.clone();
+            // the removed mask_unwanted wrote every (framework, agent) cell
+            for fw in 0..n {
+                for ag in 0..m {
+                    let v = masked.feas(fw, ag);
+                    masked.set_feas(fw, ag, v);
+                }
+            }
+            std::hint::black_box(policy.pick_joint(&masked, &si, &candidates));
+        });
+        println!("{}", cloned.render());
+
+        // new per-iteration cost: zero-copy overlay over the cached tensors
+        let overlay = bench(&format!("mask/overlay+pick/{m}x{n}"), 5, 40, || {
+            let view = MaskedScores { base: &set, mask: &mask };
+            std::hint::black_box(policy.pick_joint(&view, &si, &candidates));
+        });
+        println!("{}", overlay.render());
+        println!("  masking speedup: {:.2}x", cloned.mean / overlay.mean.max(1e-12));
+        vec![
+            ("clone", result_json(&cloned)),
+            ("overlay", result_json(&overlay)),
+            ("speedup", Json::Num(cloned.mean / overlay.mean.max(1e-12))),
+        ]
+    };
+
     header("allocation-cycle latency (one full cycle on a drained cluster)");
     let mut cycle_rows: Vec<Json> = Vec::new();
     for policy in ["drf", "psdsf", "rpsdsf", "bf-drf"] {
@@ -132,6 +185,7 @@ fn main() {
     let doc = Json::obj(vec![
         ("bench", Json::Str("scorer".into())),
         ("sweep", Json::Arr(sweep_rows)),
+        ("masking_256x512", Json::obj(masking_rows)),
         ("cycles", Json::Arr(cycle_rows)),
         ("e2e", Json::Arr(e2e_rows)),
     ]);

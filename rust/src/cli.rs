@@ -94,9 +94,11 @@ COMMANDS:
     tables                 Reproduce Tables 1-4 (progressive filling, 200 trials)
     figure <3..9>          Reproduce one online figure
     online                 Run a single online experiment
+    scenarios              Run the scenario smoke matrix (CI: every --scenario
+                           under selected policies; writes BENCH_scenarios.json)
     e2e                    End-to-end run with real PJRT task compute
     parity                 Cross-check the native and HLO scorers
-    list                   List schedulers and figure ids
+    list                   List schedulers, figure ids and scenario names
     help                   Show this help
 
 COMMON FLAGS:
@@ -107,10 +109,15 @@ COMMON FLAGS:
     --mode MODE            oblivious|characterized            [default: characterized]
     --scorer BACKEND       native|hlo                         [default: native]
     --config FILE          Online experiment TOML (see config/)
+    --scenario NAME        Named scenario (see 'list'): batch-baseline|poisson|
+                           bursty|diurnal|heavy-tail|churn|mixed-bottleneck
+    --record FILE          Write the realized scenario trace (JSONL) before running
+    --replay FILE          Drive the run from a recorded scenario trace
     --homogeneous          Use the six type-3 cluster (§3.6)
     --staged               Staged agent registration (§3.7)
     --agents M             Scale scenario: M heterogeneous agents
     --queues N             Concurrent queues for --agents   [default: 2*M]
+    --policies A,B         Policies for the scenarios matrix  [default: drf,psdsf]
     --csv DIR              Also write CSV outputs to DIR
 ";
 

@@ -65,6 +65,24 @@ impl ServerType {
         ]
     }
 
+    /// The r=3 scenario cluster (`mixed-bottleneck`): six agents over
+    /// `(cpus, mem[GB], io)`, two each of a CPU-rich, a memory-rich and an
+    /// I/O-rich shape — no paper configuration exercises a third resource
+    /// dimension, this family does.
+    pub fn trio() -> Vec<ServerType> {
+        let shapes = [
+            ("trio-cpu", [16.0, 8.0, 6.0]),
+            ("trio-mem", [6.0, 24.0, 6.0]),
+            ("trio-io", [6.0, 10.0, 20.0]),
+        ];
+        (0..6)
+            .map(|k| {
+                let (name, cap) = &shapes[k % 3];
+                ServerType::new(format!("{name}-{k}"), ResVec::new(cap))
+            })
+            .collect()
+    }
+
     /// The scale scenario family: `m` heterogeneous agents cycling through
     /// the paper's three types. The paper's clusters top out at 8 agents;
     /// with the dynamic-dimension scoring core this family drives 64-,
@@ -109,6 +127,21 @@ mod tests {
         assert_eq!(ServerType::paper_homogeneous().len(), 6);
         assert_eq!(ServerType::paper_staged().len(), 3);
         assert_eq!(ServerType::illustrative().len(), 2);
+    }
+
+    #[test]
+    fn trio_is_three_dimensional() {
+        let cluster = ServerType::trio();
+        assert_eq!(cluster.len(), 6);
+        assert!(cluster.iter().all(|s| s.capacity.len() == 3));
+        // every template of the mixed-bottleneck family fits somewhere
+        for d in [[4.0, 2.0, 1.0], [1.0, 6.0, 1.0], [1.0, 2.0, 5.0], [2.0, 3.0, 2.0]] {
+            let demand = ResVec::new(&d);
+            assert!(
+                cluster.iter().any(|s| demand.fits_within(&s.capacity)),
+                "{d:?} fits nowhere"
+            );
+        }
     }
 
     #[test]

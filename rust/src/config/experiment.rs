@@ -1,11 +1,52 @@
 //! Typed loading of online-experiment configurations from TOML files.
+//!
+//! ## Scenario TOML schema
+//!
+//! ```toml
+//! [experiment]
+//! policy = "rpsdsf"          # scheduler registry name
+//! mode = "characterized"     # or "oblivious"
+//! seed = 42
+//!
+//! [cluster]
+//! servers = ["type-1", "type-2", "type-3"]   # or "trio-cpu"/"trio-mem"/"trio-io" (r=3)
+//!
+//! [[queue]]
+//! workload = "pi"            # template: pi|wordcount|cpu-heavy|mem-heavy|
+//!                            #   cpu-heavy-r3|mem-heavy-r3|io-heavy-r3|mixed-r3
+//! jobs = 50
+//! tasks_per_job = 16         # optional overrides…
+//! max_executors = 4
+//! mean_task_secs = 4.0
+//! duration = "pareto"        # optional: heavy-tailed durations…
+//! alpha = 1.4                # …with this tail index
+//! cap = 80.0                 # …bounded at cap × the minimum
+//! arrival = "poisson"        # closed (default) | poisson | bursty | diurnal
+//! rate = 0.02                # poisson: jobs/second
+//! # bursty:  rate_on, rate_off, mean_on, mean_off
+//! # diurnal: base, amplitude, period
+//!
+//! [churn]                    # optional stochastic churn…
+//! min_up = 4                 # agents 0..min_up never churn
+//! mean_up = 400.0
+//! mean_down = 90.0
+//! horizon = 4000.0
+//!
+//! [[churn_event]]            # …or an explicit schedule
+//! time = 120.0
+//! agent = 5
+//! up = false
+//! ```
 
 use crate::cluster::ServerType;
 use crate::config::toml::{TomlDoc, TomlTable};
 use crate::error::{Error, Result};
 use crate::mesos::AllocatorMode;
 use crate::sim::online::{OnlineConfig, QueueSpec};
-use crate::spark::workload::WorkloadSpec;
+use crate::spark::workload::DurationModel;
+use crate::workload::arrival::ArrivalProcess;
+use crate::workload::churn::{ChurnEvent, ChurnModel};
+use crate::workload::templates::template_by_name;
 
 /// Resolve a server-type name from config.
 fn server_type(name: &str) -> Result<ServerType> {
@@ -15,31 +56,117 @@ fn server_type(name: &str) -> Result<ServerType> {
         "type-3" => Ok(ServerType::type3()),
         "illus-1" => Ok(ServerType::illustrative().swap_remove(0)),
         "illus-2" => Ok(ServerType::illustrative().swap_remove(1)),
+        // resolve from the canonical trio preset so the shapes cannot drift
+        "trio-cpu" => Ok(ServerType::trio().swap_remove(0)),
+        "trio-mem" => Ok(ServerType::trio().swap_remove(1)),
+        "trio-io" => Ok(ServerType::trio().swap_remove(2)),
         other => Err(Error::Config(format!("unknown server type '{other}'"))),
     }
 }
 
+fn table_f64(table: &TomlTable, key: &str) -> Option<f64> {
+    table.get(key).and_then(|v| v.as_f64())
+}
+
+/// The queue's arrival process (closed batch when unspecified).
+fn arrival(table: &TomlTable) -> Result<ArrivalProcess> {
+    let name = table.get("arrival").and_then(|v| v.as_str()).unwrap_or("closed");
+    // a zero arrival rate would make sample_times spin forever, so every
+    // required parameter must be strictly positive
+    let need = |key: &str| -> Result<f64> {
+        let v = table_f64(table, key)
+            .ok_or_else(|| Error::Config(format!("arrival '{name}' needs '{key}'")))?;
+        if v <= 0.0 {
+            return Err(Error::Config(format!("arrival '{name}': '{key}' must be > 0, got {v}")));
+        }
+        Ok(v)
+    };
+    Ok(match name {
+        "closed" => ArrivalProcess::Closed,
+        "poisson" => ArrivalProcess::Poisson { rate: need("rate")? },
+        "bursty" => ArrivalProcess::Bursty {
+            rate_on: need("rate_on")?,
+            rate_off: table_f64(table, "rate_off").unwrap_or(0.0).max(0.0),
+            mean_on: need("mean_on")?,
+            mean_off: need("mean_off")?,
+        },
+        "diurnal" => ArrivalProcess::Diurnal {
+            base: table_f64(table, "base").unwrap_or(0.0).max(0.0),
+            amplitude: need("amplitude")?,
+            period: need("period")?,
+        },
+        other => return Err(Error::Config(format!("unknown arrival process '{other}'"))),
+    })
+}
+
 /// Resolve a workload spec, applying optional per-queue overrides.
-fn workload(table: &TomlTable) -> Result<WorkloadSpec> {
+fn workload(table: &TomlTable) -> Result<crate::spark::workload::WorkloadSpec> {
     let name = table
         .get("workload")
         .and_then(|v| v.as_str())
         .ok_or_else(|| Error::Config("queue missing 'workload'".into()))?;
-    let mut spec = match name {
-        "pi" => WorkloadSpec::pi(),
-        "wordcount" => WorkloadSpec::wordcount(),
-        other => return Err(Error::Config(format!("unknown workload '{other}'"))),
-    };
+    let mut spec = template_by_name(name)
+        .ok_or_else(|| Error::Config(format!("unknown workload '{name}'")))?;
     if let Some(v) = table.get("tasks_per_job").and_then(|v| v.as_i64()) {
         spec.tasks_per_job = v as usize;
     }
     if let Some(v) = table.get("max_executors").and_then(|v| v.as_i64()) {
         spec.max_executors = v as usize;
     }
-    if let Some(v) = table.get("mean_task_secs").and_then(|v| v.as_f64()) {
+    if let Some(v) = table_f64(table, "mean_task_secs") {
         spec.mean_task_secs = v;
     }
+    match table.get("duration").and_then(|v| v.as_str()) {
+        None | Some("lognormal") => {}
+        Some("pareto") => {
+            spec.duration = DurationModel::BoundedPareto {
+                alpha: table_f64(table, "alpha").unwrap_or(1.5),
+                cap: table_f64(table, "cap").unwrap_or(50.0),
+            };
+            spec.straggler_prob = 0.0;
+        }
+        Some(other) => {
+            return Err(Error::Config(format!("unknown duration model '{other}'")));
+        }
+    }
     Ok(spec)
+}
+
+/// The optional churn section(s).
+fn churn(doc: &TomlDoc) -> Result<ChurnModel> {
+    let scripted: Vec<ChurnEvent> = doc
+        .array("churn_event")
+        .iter()
+        .map(|t| {
+            Ok(ChurnEvent {
+                t: table_f64(t, "time")
+                    .ok_or_else(|| Error::Config("churn_event missing 'time'".into()))?,
+                agent: t
+                    .get("agent")
+                    .and_then(|v| v.as_i64())
+                    .ok_or_else(|| Error::Config("churn_event missing 'agent'".into()))?
+                    as usize,
+                up: t
+                    .get("up")
+                    .and_then(|v| v.as_bool())
+                    .ok_or_else(|| Error::Config("churn_event missing 'up'".into()))?,
+            })
+        })
+        .collect::<Result<_>>()?;
+    if !scripted.is_empty() {
+        return Ok(ChurnModel::Scripted(scripted));
+    }
+    if let Some(table) = doc.tables.get("churn") {
+        if !table.is_empty() {
+            return Ok(ChurnModel::Flap {
+                min_up: table.get("min_up").and_then(|v| v.as_i64()).unwrap_or(1) as usize,
+                mean_up: table_f64(table, "mean_up").unwrap_or(300.0),
+                mean_down: table_f64(table, "mean_down").unwrap_or(60.0),
+                horizon: table_f64(table, "horizon").unwrap_or(3600.0),
+            });
+        }
+    }
+    Ok(ChurnModel::None)
 }
 
 /// Load an [`OnlineConfig`] from TOML text.
@@ -70,10 +197,42 @@ pub fn parse_online_config(text: &str) -> Result<OnlineConfig> {
     }
     for q in doc.array("queue") {
         let jobs = q.get("jobs").and_then(|v| v.as_i64()).unwrap_or(50) as usize;
-        cfg.queues.push(QueueSpec { workload: workload(q)?, jobs });
+        cfg.queues.push(QueueSpec { workload: workload(q)?, jobs, arrival: arrival(q)? });
     }
     if cfg.queues.is_empty() {
         return Err(Error::Config("config defines no [[queue]] entries".into()));
+    }
+    let kinds = cfg.cluster.first().map(|s| s.capacity.len()).unwrap_or(2);
+    for s in &cfg.cluster {
+        if s.capacity.len() != kinds {
+            return Err(Error::Config(format!(
+                "server '{}' has {} resource dims but the cluster leads with {kinds} — \
+                 mixed-dimension clusters are not supported",
+                s.name,
+                s.capacity.len()
+            )));
+        }
+    }
+    for q in &cfg.queues {
+        if q.workload.executor_demand.len() != kinds {
+            return Err(Error::Config(format!(
+                "workload '{}' has {} resource dims but the cluster has {kinds}",
+                q.workload.kind.label(),
+                q.workload.executor_demand.len()
+            )));
+        }
+    }
+    cfg.churn = churn(&doc)?;
+    if let ChurnModel::Scripted(evs) = &cfg.churn {
+        for e in evs {
+            if e.agent >= cfg.cluster.len() {
+                return Err(Error::Config(format!(
+                    "churn_event agent {} out of range (cluster has {} agents)",
+                    e.agent,
+                    cfg.cluster.len()
+                )));
+            }
+        }
     }
     if let Some(v) = doc.get("experiment.seed").and_then(|v| v.as_i64()) {
         cfg.seed = v as u64;
@@ -103,6 +262,7 @@ pub fn load_online_config(path: &str) -> Result<OnlineConfig> {
 #[cfg(test)]
 mod tests {
     use super::*;
+    use crate::spark::workload::WorkloadSpec;
 
     const CFG: &str = r#"
         [experiment]
@@ -139,6 +299,83 @@ mod tests {
         assert_eq!(cfg.queues[0].workload.tasks_per_job, 16);
         assert_eq!(cfg.queues[0].jobs, 20);
         assert_eq!(cfg.queues[1].workload.tasks_per_job, WorkloadSpec::wordcount().tasks_per_job);
+        assert!(cfg.queues.iter().all(|q| q.arrival == ArrivalProcess::Closed));
+        assert_eq!(cfg.churn, ChurnModel::None);
+    }
+
+    #[test]
+    fn parses_scenario_extensions() {
+        let cfg = parse_online_config(
+            r#"
+            [experiment]
+            policy = "drf"
+
+            [cluster]
+            servers = ["trio-cpu", "trio-mem", "trio-io"]
+
+            [[queue]]
+            workload = "cpu-heavy-r3"
+            jobs = 4
+            arrival = "poisson"
+            rate = 0.05
+
+            [[queue]]
+            workload = "io-heavy-r3"
+            jobs = 4
+            duration = "pareto"
+            alpha = 1.4
+            cap = 60.0
+            arrival = "bursty"
+            rate_on = 0.2
+            mean_on = 30.0
+            mean_off = 90.0
+
+            [churn]
+            min_up = 2
+            mean_up = 200.0
+            mean_down = 50.0
+            horizon = 1000.0
+            "#,
+        )
+        .unwrap();
+        assert_eq!(cfg.queues[0].arrival, ArrivalProcess::Poisson { rate: 0.05 });
+        assert_eq!(
+            cfg.queues[1].workload.duration,
+            DurationModel::BoundedPareto { alpha: 1.4, cap: 60.0 }
+        );
+        assert!(matches!(cfg.queues[1].arrival, ArrivalProcess::Bursty { .. }));
+        assert!(matches!(cfg.churn, ChurnModel::Flap { min_up: 2, .. }));
+        assert!(cfg.cluster.iter().all(|s| s.capacity.len() == 3));
+    }
+
+    #[test]
+    fn scripted_churn_events_win() {
+        let cfg = parse_online_config(
+            r#"
+            [[queue]]
+            workload = "pi"
+            jobs = 2
+
+            [[churn_event]]
+            time = 50.0
+            agent = 3
+            up = false
+
+            [[churn_event]]
+            time = 150.0
+            agent = 3
+            up = true
+            "#,
+        )
+        .unwrap();
+        match cfg.churn {
+            ChurnModel::Scripted(evs) => {
+                assert_eq!(evs.len(), 2);
+                assert_eq!(evs[0].agent, 3);
+                assert!(!evs[0].up);
+            }
+            other => panic!("expected scripted churn, got {other:?}"),
+        }
     }
 
     #[test]
@@ -147,5 +384,28 @@ mod tests {
         assert!(parse_online_config("[[queue]]\nworkload = \"fortran\"").is_err());
         assert!(parse_online_config("[cluster]\nservers = [\"type-9\"]\n[[queue]]\nworkload = \"pi\"").is_err());
         assert!(parse_online_config("[experiment]\npolicy = \"drf\"").is_err()); // no queues
+        // arrival without its rate
+        assert!(parse_online_config("[[queue]]\nworkload = \"pi\"\narrival = \"poisson\"").is_err());
+        // zero rates would hang realization
+        assert!(parse_online_config(
+            "[[queue]]\nworkload = \"pi\"\narrival = \"poisson\"\nrate = 0.0"
+        )
+        .is_err());
+        assert!(parse_online_config(
+            "[[queue]]\nworkload = \"pi\"\narrival = \"bursty\"\nrate_on = 0.0\nmean_on = 10.0\nmean_off = 10.0"
+        )
+        .is_err());
+        // dimension mismatch: r=3 workload on the r=2 paper cluster
+        assert!(parse_online_config("[[queue]]\nworkload = \"io-heavy-r3\"").is_err());
+        // mixed-dimension cluster
+        assert!(parse_online_config(
+            "[cluster]\nservers = [\"type-1\", \"trio-io\"]\n[[queue]]\nworkload = \"pi\""
+        )
+        .is_err());
+        // churn agent out of range for the 6-agent default cluster
+        assert!(parse_online_config(
+            "[[queue]]\nworkload = \"pi\"\n[[churn_event]]\ntime = 1.0\nagent = 99\nup = false"
+        )
+        .is_err());
     }
 }

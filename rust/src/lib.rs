@@ -28,7 +28,28 @@
 //! per-agent residuals — falling back to a full recompute on structural
 //! changes. Incremental results are bit-identical to full recomputes
 //! (property-tested), so every paper table and figure reproduces exactly
-//! while the hot path scales.
+//! while the hot path scales. Per-cycle handler masking (wants / declines /
+//! oblivious adjustments) is a zero-copy overlay over the cached tensors
+//! (`mesos::allocator::MaskedScores` via [`scheduler::ScoreView`]), not a
+//! per-offer tensor clone.
+//!
+//! ## Scenario workloads
+//!
+//! The [`workload`] subsystem generalizes the paper's two fixed batches
+//! into *scenarios*: open arrival processes (Poisson / bursty MMPP /
+//! diurnal, with the closed batch as a special case), a job-template
+//! generator (CPU-/memory-/I/O-bottleneck demand vectors incl. r≥3
+//! resource dimensions, lognormal or heavy-tailed bounded-Pareto
+//! durations), and cluster churn (agents drain and rejoin mid-run). Every
+//! stochastic workload input is realized up front from per-queue RNG
+//! streams keyed by queue id — common random numbers across schedulers —
+//! and can be recorded to / replayed from a JSONL trace bit-exactly
+//! ([`workload::trace`]).
+//!
+//! Named scenario catalogue (CLI `--scenario`, CI smoke matrix):
+//! `batch-baseline`, `poisson`, `bursty`, `diurnal`, `heavy-tail`,
+//! `churn`, `mixed-bottleneck` — see [`workload::scenario`] for their
+//! definitions and `config::experiment` for the scenario TOML schema.
 //!
 //! ## Layering
 //!
@@ -82,6 +103,7 @@ pub mod scheduler;
 pub mod sim;
 pub mod spark;
 pub mod testing;
+pub mod workload;
 
 /// Maximum frameworks in a **padded HLO-boundary instance** (mirrors
 /// `python/compile/kernels/__init__.py::N_MAX`; checked against

@@ -9,8 +9,10 @@ use mesos_fair::config::load_online_config;
 use mesos_fair::error::{Error, Result};
 use mesos_fair::exp::{run_figure, run_illustrative, FIGURE_IDS};
 use mesos_fair::mesos::AllocatorMode;
+use mesos_fair::metrics::json::Json;
 use mesos_fair::scheduler::{NativeScorer, Scorer, POLICY_NAMES};
 use mesos_fair::sim::online::{OnlineConfig, OnlineSim};
+use mesos_fair::workload::{realize, scenario_config, trace as scenario_trace, SCENARIO_NAMES};
 
 fn main() {
     let code = match run() {
@@ -42,11 +44,13 @@ fn run() -> Result<()> {
         Some("tables") => cmd_tables(&args),
         Some("figure") => cmd_figure(&args),
         Some("online") => cmd_online(&args),
+        Some("scenarios") => cmd_scenarios(&args),
         Some("e2e") => cmd_e2e(&args),
         Some("parity") => cmd_parity(&args),
         Some("list") => {
             println!("schedulers: {}", POLICY_NAMES.join(", "));
             println!("figures: {:?}", FIGURE_IDS);
+            println!("scenarios: {}", SCENARIO_NAMES.join(", "));
             Ok(())
         }
         Some("help") | None => {
@@ -90,10 +94,77 @@ fn cmd_figure(args: &Args) -> Result<()> {
 }
 
 fn cmd_online(args: &Args) -> Result<()> {
-    let cfg = build_online_config(args)?;
+    let mut cfg = build_online_config(args)?;
     let scorer = scorer_backend(args)?;
-    let result = OnlineSim::with_scorer(cfg, scorer)?.run()?;
+    // replay > record > live realization; either way the sim consumes one
+    // realized scenario, so a recorded trace reproduces the run bit-exactly
+    let scenario = if let Some(path) = args.flag("replay") {
+        let sc = scenario_trace::read_file(path)?;
+        // the scheduler-side RNG (RRR order, tie-breaks, release jitter)
+        // must match the recorded run too, so adopt the trace's seed
+        cfg.seed = sc.seed;
+        println!("replaying scenario '{}' (seed {:#x}) from {path}", sc.name, sc.seed);
+        sc
+    } else {
+        let name = args.flag_or("scenario", "adhoc");
+        realize(&cfg, &name)
+    };
+    if let Some(path) = args.flag("record") {
+        scenario_trace::write_file(&scenario, path)?;
+        println!("recorded scenario trace to {path}");
+    }
+    let result = OnlineSim::with_scenario_scorer(cfg, scenario, scorer)?.run()?;
     print_online(&result);
+    Ok(())
+}
+
+/// Run each registered scenario briefly under a set of policies (the CI
+/// smoke matrix) and write `BENCH_scenarios.json`.
+fn cmd_scenarios(args: &Args) -> Result<()> {
+    let jobs = args.flag_usize("jobs", 2)?;
+    let seed = args.flag_u64("seed", 0x5EED)?;
+    let policies = args.flag_or("policies", "drf,psdsf");
+    let mut rows: Vec<Json> = Vec::new();
+    for name in SCENARIO_NAMES {
+        for policy in policies.split(',').filter(|p| !p.is_empty()) {
+            let cfg =
+                scenario_config(name, policy, AllocatorMode::Characterized, Some(jobs), seed)?;
+            let expected: usize = cfg.queues.iter().map(|q| q.jobs).sum();
+            let t0 = std::time::Instant::now();
+            let r = OnlineSim::new(cfg)?.run()?;
+            let wall = t0.elapsed().as_secs_f64();
+            println!(
+                "{name:18} {policy:10} {}/{} jobs  makespan {:8.1}s  p95 slowdown {:6.2}  \
+                 ({wall:.2}s wall)",
+                r.jobs_completed, expected, r.makespan, r.slowdown.p95
+            );
+            if r.jobs_completed != expected {
+                return Err(Error::Experiment(format!(
+                    "scenario '{name}' under {policy}: {}/{} jobs completed",
+                    r.jobs_completed, expected
+                )));
+            }
+            rows.push(Json::obj(vec![
+                ("scenario", Json::Str(name.to_string())),
+                ("policy", Json::Str(policy.to_string())),
+                ("jobs", Json::Num(r.jobs_completed as f64)),
+                ("makespan", Json::Num(r.makespan)),
+                ("mean_cpu", Json::Num(r.mean_cpu)),
+                ("mean_mem", Json::Num(r.mean_mem)),
+                ("completion_p50", Json::Num(r.completion.p50)),
+                ("completion_p95", Json::Num(r.completion.p95)),
+                ("slowdown_p95", Json::Num(r.slowdown.p95)),
+                ("wall_seconds", Json::Num(wall)),
+            ]));
+        }
+    }
+    let doc = Json::obj(vec![
+        ("bench", Json::Str("scenarios".into())),
+        ("jobs_per_queue", Json::Num(jobs as f64)),
+        ("runs", Json::Arr(rows)),
+    ]);
+    doc.write_to("BENCH_scenarios.json")?;
+    println!("wrote BENCH_scenarios.json");
     Ok(())
 }
 
@@ -107,6 +178,12 @@ fn build_online_config(args: &Args) -> Result<OnlineConfig> {
         "characterized" => AllocatorMode::Characterized,
         other => return Err(Error::Config(format!("unknown mode '{other}'"))),
     };
+    let seed = args.flag_u64("seed", 0x5EED)?;
+    if let Some(name) = args.flag("scenario") {
+        // named scenario family; --jobs scales the per-queue job count
+        let jobs = args.flag("jobs").map(|_| args.flag_usize("jobs", 0)).transpose()?;
+        return scenario_config(name, &policy, mode, jobs, seed);
+    }
     let jobs = args.flag_usize("jobs", 50)?;
     let mut cfg = if let Some(agents) = args.flag("agents") {
         // the scale scenario family: --agents M [--queues N]
@@ -122,7 +199,7 @@ fn build_online_config(args: &Args) -> Result<OnlineConfig> {
     } else {
         OnlineConfig::paper(&policy, mode, jobs)
     };
-    cfg.seed = args.flag_u64("seed", 0x5EED)?;
+    cfg.seed = seed;
     Ok(cfg)
 }
 
@@ -140,6 +217,16 @@ fn print_online(r: &mesos_fair::sim::online::OnlineResult) {
     );
     for (group, t) in &r.group_finish {
         println!("group {group:10}: finished at {t:.1}s");
+    }
+    if r.completion.n > 0 {
+        println!(
+            "completion    : p50 {:.1}s  p95 {:.1}s  p99 {:.1}s  max {:.1}s",
+            r.completion.p50, r.completion.p95, r.completion.p99, r.completion.max
+        );
+        println!(
+            "slowdown      : p50 {:.2}  p95 {:.2}  p99 {:.2}  max {:.2}",
+            r.slowdown.p50, r.slowdown.p95, r.slowdown.p99, r.slowdown.max
+        );
     }
     println!("allocator     : {} cycles, {} grants", r.cycles, r.grants);
 }

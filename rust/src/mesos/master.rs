@@ -194,9 +194,16 @@ impl Master {
         self.state.deactivate(framework);
     }
 
-    /// Register a pending agent (Fig-9 staging).
+    /// Register a pending agent (Fig-9 staging, churn rejoin).
     pub fn agent_up(&mut self, agent: AgentId) {
         self.state.agent_up(agent);
+    }
+
+    /// Drain an agent (churn): it deregisters and receives no further
+    /// offers; resources already reserved there release normally when the
+    /// hosting executors terminate.
+    pub fn agent_down(&mut self, agent: AgentId) {
+        self.state.agent_down(agent);
     }
 
     /// Allocated fraction per resource over registered agents.
@@ -296,6 +303,32 @@ mod tests {
             assert_eq!(n, k);
         }
         assert_eq!(m.state.n_frameworks(), 100);
+    }
+
+    #[test]
+    fn agent_down_stops_offers_but_releases_still_land() {
+        let mut m = master(AllocatorMode::Characterized);
+        let pi = ResVec::cpu_mem(2.0, 2.0);
+        let n = m.register_framework("pi".into(), Some(pi), 1.0).unwrap();
+        let mut h = TakeN { d: pi, want: 2, have: 0 };
+        let grants = m.allocate(&mut h, &mut Rng::new(8)).unwrap();
+        assert_eq!(grants.iter().map(|g| g.count).sum::<f64>(), 2.0);
+        let drained = grants[0].agent;
+        m.agent_down(drained);
+        // the drained agent is never offered again…
+        let mut h2 = TakeN { d: pi, want: 10, have: 0 };
+        let g2 = m.allocate(&mut h2, &mut Rng::new(9)).unwrap();
+        assert!(g2.iter().all(|g| g.agent != drained), "{g2:?}");
+        // …but its in-flight reservations release normally
+        for g in grants.iter().filter(|g| g.agent == drained) {
+            m.release(n, g.agent, &g.amount, g.count).unwrap();
+        }
+        assert_eq!(m.state.pool.agent(drained).reserved().as_slice(), &[0.0, 0.0]);
+        // and it can rejoin later
+        m.agent_up(drained);
+        let mut h3 = TakeN { d: pi, want: 40, have: 0 };
+        let g3 = m.allocate(&mut h3, &mut Rng::new(10)).unwrap();
+        assert!(g3.iter().any(|g| g.agent == drained), "rejoined agent receives grants");
     }
 
     #[test]

@@ -68,6 +68,37 @@ pub fn percentile(sorted: &[f64], q: f64) -> f64 {
     }
 }
 
+/// Distribution summary with tail percentiles — per-job completion-time
+/// and slowdown reporting (scenario runs care about tails, not just means).
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct DistStats {
+    pub n: usize,
+    pub mean: f64,
+    pub p50: f64,
+    pub p95: f64,
+    pub p99: f64,
+    pub max: f64,
+}
+
+impl DistStats {
+    /// Summarize a sample (empty input yields zeros).
+    pub fn of(xs: &[f64]) -> DistStats {
+        if xs.is_empty() {
+            return DistStats { n: 0, mean: 0.0, p50: 0.0, p95: 0.0, p99: 0.0, max: 0.0 };
+        }
+        let mut sorted = xs.to_vec();
+        sorted.sort_by(|a, b| a.partial_cmp(b).unwrap());
+        DistStats {
+            n: xs.len(),
+            mean: xs.iter().sum::<f64>() / xs.len() as f64,
+            p50: percentile(&sorted, 0.50),
+            p95: percentile(&sorted, 0.95),
+            p99: percentile(&sorted, 0.99),
+            max: *sorted.last().unwrap(),
+        }
+    }
+}
+
 /// Welford online accumulator — used by long traces to avoid storing every
 /// sample.
 #[derive(Debug, Clone, Default)]
@@ -149,6 +180,17 @@ mod tests {
         assert_eq!(percentile(&xs, 1.0), 5.0);
         assert_eq!(percentile(&xs, 0.5), 3.0);
         assert!((percentile(&xs, 0.25) - 2.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn dist_stats_percentiles_ordered() {
+        let xs: Vec<f64> = (1..=100).map(|i| i as f64).collect();
+        let d = DistStats::of(&xs);
+        assert_eq!(d.n, 100);
+        assert!((d.mean - 50.5).abs() < 1e-12);
+        assert!(d.p50 <= d.p95 && d.p95 <= d.p99 && d.p99 <= d.max);
+        assert_eq!(d.max, 100.0);
+        assert_eq!(DistStats::of(&[]).n, 0);
     }
 
     #[test]

@@ -123,6 +123,15 @@ impl Rng {
         -u.ln() / lambda
     }
 
+    /// Bounded (truncated) Pareto on `[lo, hi]` with tail index `alpha` —
+    /// the heavy-tailed task-duration model (inverse-CDF sampling).
+    pub fn bounded_pareto(&mut self, alpha: f64, lo: f64, hi: f64) -> f64 {
+        debug_assert!(alpha > 0.0 && lo > 0.0 && hi > lo);
+        let u = self.f64(); // [0, 1)
+        let ratio = (lo / hi).powf(alpha); // (lo/hi)^alpha < 1
+        lo / (1.0 - u * (1.0 - ratio)).powf(1.0 / alpha)
+    }
+
     /// In-place Fisher–Yates shuffle.
     pub fn shuffle<T>(&mut self, xs: &mut [T]) {
         for i in (1..xs.len()).rev() {
@@ -208,6 +217,24 @@ mod tests {
         let var = xs.iter().map(|x| (x - mean) * (x - mean)).sum::<f64>() / n as f64;
         assert!(mean.abs() < 0.02, "{mean}");
         assert!((var - 1.0).abs() < 0.05, "{var}");
+    }
+
+    #[test]
+    fn bounded_pareto_in_range_and_heavy_tailed() {
+        let mut rng = Rng::new(17);
+        let n = 50_000;
+        let xs: Vec<f64> = (0..n).map(|_| rng.bounded_pareto(1.5, 1.0, 100.0)).collect();
+        assert!(xs.iter().all(|x| (1.0..=100.0).contains(x)));
+        // analytic mean of bounded Pareto(alpha=1.5, 1, 100):
+        // a/(a-1) * (1 - H^(1-a)) / (1 - H^(-a)), H = hi/lo
+        let h: f64 = 100.0;
+        let a = 1.5;
+        let expect = a / (a - 1.0) * (1.0 - h.powf(1.0 - a)) / (1.0 - h.powf(-a));
+        let mean = xs.iter().sum::<f64>() / n as f64;
+        assert!((mean - expect).abs() < 0.1 * expect, "{mean} vs {expect}");
+        // genuinely heavy-tailed: a visible mass beyond 10x the minimum
+        let tail = xs.iter().filter(|x| **x > 10.0).count();
+        assert!(tail > n / 200, "{tail}");
     }
 
     #[test]

@@ -103,10 +103,12 @@ impl TaskCompute for WorkloadRuntime {
     fn run_task(&mut self, kind: WorkloadKind, seed: u64) -> Result<()> {
         let t0 = std::time::Instant::now();
         match kind {
-            WorkloadKind::Pi => {
+            // synthetic CPU-bound scenario classes share the π kernel body
+            WorkloadKind::Pi | WorkloadKind::CpuHeavy | WorkloadKind::Mixed => {
                 self.run_pi((seed & 0x7FFF_FFFF) as i32)?;
             }
-            WorkloadKind::WordCount => {
+            // memory/I/O-bound classes share the wordcount body
+            WorkloadKind::WordCount | WorkloadKind::MemHeavy | WorkloadKind::IoHeavy => {
                 self.run_wordcount(seed)?;
             }
         }

@@ -192,9 +192,18 @@ impl AllocState {
         self.dirty.note_structural();
     }
 
-    /// Register agent `i` (Fig-9 staging) — a structural change.
+    /// Register agent `i` (Fig-9 staging, churn rejoin) — a structural
+    /// change.
     pub fn agent_up(&mut self, i: AgentId) {
         self.pool.agent_mut(i).registered = true;
+        self.dirty.note_structural();
+    }
+
+    /// Deregister agent `i` (churn drain) — a structural change. Existing
+    /// reservations stay on the agent and release normally; the agent just
+    /// stops being offered (scores mask it via `smask`).
+    pub fn agent_down(&mut self, i: AgentId) {
+        self.pool.agent_mut(i).registered = false;
         self.dirty.note_structural();
     }
 
@@ -661,6 +670,54 @@ impl ScoreSet {
     pub fn set_feas(&mut self, n: usize, i: usize, v: bool) {
         let k = self.at(n, i);
         self.feas[k] = v;
+    }
+}
+
+/// Read-only access to score tensors — what the policies' argmin selection
+/// actually needs. Implemented by [`ScoreSet`] (the engine's cached
+/// tensors) and by the allocator's masking overlay
+/// ([`crate::mesos::allocator::MaskedScores`]), which layers per-cycle
+/// handler masks (wants / declines / oblivious adjustments) over the cache
+/// without cloning the tensors.
+pub trait ScoreView {
+    /// Global dominant share of framework `n`.
+    fn drf(&self, n: usize) -> f64;
+    /// Task-share score of framework `n`.
+    fn tsf(&self, n: usize) -> f64;
+    /// Per-server virtual dominant share `K_{n,i}`.
+    fn psdsf(&self, n: usize, i: usize) -> f64;
+    /// Residual PS-DSF `K̃_{n,i}`.
+    fn rpsdsf(&self, n: usize, i: usize) -> f64;
+    /// Best-fit ratio.
+    fn fit(&self, n: usize, i: usize) -> f64;
+    /// One-more-task feasibility.
+    fn feas(&self, n: usize, i: usize) -> bool;
+}
+
+impl ScoreView for ScoreSet {
+    #[inline]
+    fn drf(&self, n: usize) -> f64 {
+        ScoreSet::drf(self, n)
+    }
+    #[inline]
+    fn tsf(&self, n: usize) -> f64 {
+        ScoreSet::tsf(self, n)
+    }
+    #[inline]
+    fn psdsf(&self, n: usize, i: usize) -> f64 {
+        ScoreSet::psdsf(self, n, i)
+    }
+    #[inline]
+    fn rpsdsf(&self, n: usize, i: usize) -> f64 {
+        ScoreSet::rpsdsf(self, n, i)
+    }
+    #[inline]
+    fn fit(&self, n: usize, i: usize) -> f64 {
+        ScoreSet::fit(self, n, i)
+    }
+    #[inline]
+    fn feas(&self, n: usize, i: usize) -> bool {
+        ScoreSet::feas(self, n, i)
     }
 }
 

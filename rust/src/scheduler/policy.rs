@@ -19,7 +19,7 @@ pub use crate::scheduler::server_select::BestFitMetric;
 
 use crate::rng::Rng;
 use crate::scheduler::server_select;
-use crate::scheduler::{ScoreInputs, ScoreSet};
+use crate::scheduler::{ScoreInputs, ScoreView};
 use crate::BIG;
 
 /// Relative tolerance for score-tie detection.
@@ -67,7 +67,7 @@ pub enum Criterion {
 impl Criterion {
     /// Score of placing the next task of `n` on agent `i`.
     #[inline]
-    pub fn score(&self, set: &ScoreSet, n: usize, i: usize) -> f64 {
+    pub fn score<S: ScoreView + ?Sized>(&self, set: &S, n: usize, i: usize) -> f64 {
         match self {
             Criterion::Drf => set.drf(n),
             Criterion::Tsf => set.tsf(n),
@@ -118,9 +118,9 @@ impl Policy {
     /// collected in a second pass against the true minimum, so membership
     /// does not depend on iteration order. Used by RRR and sequential
     /// release.
-    pub fn pick_for_agent(
+    pub fn pick_for_agent<S: ScoreView + ?Sized>(
         &self,
-        set: &ScoreSet,
+        set: &S,
         si: &ScoreInputs,
         i: usize,
         rng: &mut Rng,
@@ -144,9 +144,9 @@ impl Policy {
     /// Figure 9 demonstrates. Other criteria keep the deterministic
     /// (lower `n`, lower `i`) order, which reproduces the paper's PS-DSF
     /// Table-1 row exactly.
-    pub fn pick_joint(
+    pub fn pick_joint<S: ScoreView + ?Sized>(
         &self,
-        set: &ScoreSet,
+        set: &S,
         si: &ScoreInputs,
         candidates: &[usize],
     ) -> Option<(usize, usize)> {
@@ -178,9 +178,9 @@ impl Policy {
     /// uniformly at random, like [`Policy::pick_for_agent`] — same-role
     /// frameworks always tie under role-aggregated shares), then the
     /// best-fit agent.
-    pub fn pick_bestfit(
+    pub fn pick_bestfit<S: ScoreView + ?Sized>(
         &self,
-        set: &ScoreSet,
+        set: &S,
         si: &ScoreInputs,
         candidates: &[usize],
         rng: &mut Rng,
@@ -212,9 +212,9 @@ impl Policy {
     /// policy kind. For `PerAgent` the caller supplies this cycle's RRR
     /// permutation via `order`; the first agent with a feasible framework
     /// wins (the paper's Mesos default behaviour).
-    pub fn decide(
+    pub fn decide<S: ScoreView + ?Sized>(
         &self,
-        set: &ScoreSet,
+        set: &S,
         si: &ScoreInputs,
         candidates: &[usize],
         rng: &mut Rng,

@@ -14,7 +14,7 @@
 //!   fraction (a "worst-fit" baseline used in the ablation bench).
 
 use crate::rng::Rng;
-use crate::scheduler::{rpsdsf, ScoreInputs, ScoreSet};
+use crate::scheduler::{rpsdsf, ScoreInputs, ScoreView};
 use crate::BIG;
 
 /// Exact metric used by best-fit server selection (DESIGN.md §6.1).
@@ -38,9 +38,9 @@ pub fn rrr_order(candidates: &[usize], rng: &mut Rng) -> Vec<usize> {
 
 /// Best-fit agent for framework `n` among `candidates` (feasible only).
 /// Ties break toward the lower agent id, matching the kernel's argmin.
-pub fn best_fit(
+pub fn best_fit<S: ScoreView + ?Sized>(
     si: &ScoreInputs,
-    set: &ScoreSet,
+    set: &S,
     metric: BestFitMetric,
     n: usize,
     candidates: &[usize],
@@ -76,7 +76,11 @@ pub fn best_fit(
 
 /// Worst-fit baseline: the feasible agent maximizing how many further tasks
 /// of `n` it could host (i.e. minimizing nothing — the ablation's strawman).
-pub fn max_residual(set: &ScoreSet, n: usize, candidates: &[usize]) -> Option<usize> {
+pub fn max_residual<S: ScoreView + ?Sized>(
+    set: &S,
+    n: usize,
+    candidates: &[usize],
+) -> Option<usize> {
     let mut best: Option<(f64, usize)> = None;
     for &i in candidates {
         if !set.feas(n, i) || set.fit(n, i) >= BIG {
@@ -97,7 +101,7 @@ mod tests {
     use super::*;
     use crate::cluster::{AgentPool, ServerType};
     use crate::resources::ResVec;
-    use crate::scheduler::{AllocState, FrameworkEntry, NativeScorer};
+    use crate::scheduler::{AllocState, FrameworkEntry, NativeScorer, ScoreSet};
 
     fn setup() -> (ScoreInputs, ScoreSet) {
         let mut st = AllocState::new(AgentPool::new(&ServerType::illustrative()));

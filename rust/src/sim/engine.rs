@@ -120,10 +120,11 @@ mod tests {
         q.schedule(1.0, EventKind::TaskFinish { job: 0, exec: 0, task: 0, attempt: 0, duration: 1.0 });
         q.schedule(1.0, EventKind::JobArrival { queue: 0 });
         q.schedule(1.0, EventKind::AgentUp { agent: 0 });
+        q.schedule(1.0, EventKind::AgentDown { agent: 1 });
         q.schedule(1.0, EventKind::Allocate);
         let kinds: Vec<u8> =
             std::iter::from_fn(|| q.pop().map(|e| e.kind.class_order())).collect();
-        assert_eq!(kinds, vec![0, 2, 3, 4, 5]);
+        assert_eq!(kinds, vec![0, 1, 3, 4, 5, 6]);
     }
 
     #[test]

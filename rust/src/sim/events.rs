@@ -21,8 +21,12 @@ pub enum EventKind {
     /// A completed job's executor resources reach the allocator (possibly
     /// staggered after completion — §3.5.3's observation).
     Release { framework: usize, agent: AgentId, amount: ResVec, count: f64 },
-    /// An agent registers with the master (Fig 9 staged registration).
+    /// An agent registers with the master (Fig 9 staged registration,
+    /// churn rejoin).
     AgentUp { agent: AgentId },
+    /// An agent drains: it deregisters and receives no further offers,
+    /// while executors already placed there run to completion (churn).
+    AgentDown { agent: AgentId },
     /// Deferred allocation cycle — Mesos batches allocation on an interval
     /// timer (`--allocation_interval`, default 1s), which pools the releases
     /// of a completing job so the allocator chooses among *all* freed
@@ -39,11 +43,12 @@ impl EventKind {
     pub fn class_order(&self) -> u8 {
         match self {
             EventKind::AgentUp { .. } => 0,
-            EventKind::Release { .. } => 1,
-            EventKind::JobArrival { .. } => 2,
-            EventKind::Allocate => 3,
-            EventKind::TaskFinish { .. } => 4,
-            EventKind::Sample => 5,
+            EventKind::AgentDown { .. } => 1,
+            EventKind::Release { .. } => 2,
+            EventKind::JobArrival { .. } => 3,
+            EventKind::Allocate => 4,
+            EventKind::TaskFinish { .. } => 5,
+            EventKind::Sample => 6,
         }
     }
 }

@@ -1,5 +1,5 @@
-//! The online experiment: Spark job batches on a Mesos-like cluster —
-//! the machinery behind Figures 3–9.
+//! The online experiment: Spark jobs on a Mesos-like cluster — the
+//! machinery behind Figures 3–9, generalized to scenario workloads.
 //!
 //! Wiring: submission queues register frameworks with the [`Master`]; the
 //! allocator grants executors (fine- or coarse-grained per
@@ -8,13 +8,21 @@
 //! resources are released back (possibly staggered — §3.5.3) and trigger
 //! new allocation cycles; a sampler records the allocated CPU/mem fractions
 //! the figures plot.
+//!
+//! The workload side is a [`RealizedScenario`]
+//! ([`crate::workload::scenario`]): closed queues resubmit on completion
+//! (the paper's batches), open queues arrive at pre-realized times
+//! (Poisson / bursty / diurnal), agents churn per the realized schedule,
+//! and every task duration was fixed at realization — so the same
+//! scenario, recorded and replayed, drives any scheduler identically.
 
 use crate::cluster::{ReleaseMode, ServerType};
-use crate::error::Result;
+use crate::error::{Error, Result};
 use crate::mesos::allocator::{AllocatorMode, Grant};
 use crate::mesos::master::Master;
 use crate::mesos::offer::Offer;
 use crate::mesos::OfferHandler;
+use crate::metrics::DistStats;
 use crate::resources::ResVec;
 use crate::rng::Rng;
 use crate::scheduler::{policy_by_name, NativeScorer, Scorer};
@@ -26,6 +34,9 @@ use crate::spark::executor::Executor;
 use crate::spark::job::SparkJob;
 use crate::spark::queue::SubmissionQueue;
 use crate::spark::workload::{WorkloadKind, WorkloadSpec};
+use crate::workload::arrival::ArrivalProcess;
+use crate::workload::churn::{ChurnEvent, ChurnModel};
+use crate::workload::scenario::{realize, RealizedScenario};
 use std::collections::HashMap;
 
 /// One submission queue's configuration.
@@ -33,6 +44,20 @@ use std::collections::HashMap;
 pub struct QueueSpec {
     pub workload: WorkloadSpec,
     pub jobs: usize,
+    /// How this queue's jobs arrive (closed batch by default).
+    pub arrival: ArrivalProcess,
+}
+
+impl QueueSpec {
+    /// A closed-loop batch queue (the paper's behaviour).
+    pub fn closed(workload: WorkloadSpec, jobs: usize) -> Self {
+        QueueSpec { workload, jobs, arrival: ArrivalProcess::Closed }
+    }
+
+    /// An open queue whose jobs arrive per `arrival`.
+    pub fn open(workload: WorkloadSpec, jobs: usize, arrival: ArrivalProcess) -> Self {
+        QueueSpec { workload, jobs, arrival }
+    }
 }
 
 /// Full configuration of an online run.
@@ -62,6 +87,8 @@ pub struct OnlineConfig {
     /// candidate).
     pub release_mode: ReleaseMode,
     pub speculation: SpeculationCfg,
+    /// Cluster churn model (realized into a schedule at scenario time).
+    pub churn: ChurnModel,
     /// Safety cutoff (simulated seconds).
     pub max_sim_time: f64,
 }
@@ -72,10 +99,10 @@ impl OnlineConfig {
     pub fn paper(policy: &str, mode: AllocatorMode, jobs_per_queue: usize) -> Self {
         let mut queues = Vec::new();
         for _ in 0..5 {
-            queues.push(QueueSpec { workload: WorkloadSpec::pi(), jobs: jobs_per_queue });
+            queues.push(QueueSpec::closed(WorkloadSpec::pi(), jobs_per_queue));
         }
         for _ in 0..5 {
-            queues.push(QueueSpec { workload: WorkloadSpec::wordcount(), jobs: jobs_per_queue });
+            queues.push(QueueSpec::closed(WorkloadSpec::wordcount(), jobs_per_queue));
         }
         OnlineConfig {
             cluster: ServerType::paper_heterogeneous(),
@@ -90,6 +117,7 @@ impl OnlineConfig {
             allocation_interval: 1.0,
             release_mode: ReleaseMode::Pool,
             speculation: SpeculationCfg::default(),
+            churn: ChurnModel::None,
             max_sim_time: 1e7,
         }
     }
@@ -132,7 +160,7 @@ impl OnlineConfig {
                 // keep per-job work small: the point is breadth, not depth
                 w.tasks_per_job = 8;
                 w.max_executors = 2;
-                QueueSpec { workload: w, jobs: jobs_per_queue }
+                QueueSpec::closed(w, jobs_per_queue)
             })
             .collect();
         cfg
@@ -147,15 +175,15 @@ impl OnlineConfig {
         }
         cfg.queues.truncate(4); // 2 Pi + … keep two of each group
         cfg.queues.remove(2);
-        cfg.queues.push(QueueSpec {
-            workload: {
+        cfg.queues.push(QueueSpec::closed(
+            {
                 let mut w = WorkloadSpec::wordcount();
                 w.tasks_per_job = 8;
                 w.max_executors = 4;
                 w
             },
-            jobs: 2,
-        });
+            2,
+        ));
         cfg
     }
 }
@@ -195,6 +223,10 @@ pub struct OnlineResult {
     pub grants: u64,
     /// Tasks executed (incl. speculative winners only).
     pub tasks_done: usize,
+    /// Per-job completion time (finish − submission) distribution.
+    pub completion: DistStats,
+    /// Per-job slowdown (completion / inherent service) distribution.
+    pub slowdown: DistStats,
 }
 
 /// The online simulator.
@@ -204,6 +236,7 @@ pub struct OnlineSim {
     events: EventQueue,
     rng: Rng,
     queues: Vec<SubmissionQueue>,
+    churn: Vec<ChurnEvent>,
     jobs: Vec<SparkJob>,
     executors: Vec<Executor>,
     fw_to_job: HashMap<usize, JobId>,
@@ -221,8 +254,47 @@ impl OnlineSim {
     }
 
     /// Build with an explicit scoring backend (`--scorer hlo` uses the
-    /// PJRT-backed one).
+    /// PJRT-backed one). Realizes the configured workload live.
     pub fn with_scorer(cfg: OnlineConfig, scorer: Box<dyn Scorer>) -> Result<Self> {
+        let scenario = realize(&cfg, "adhoc");
+        Self::with_scenario_scorer(cfg, scenario, scorer)
+    }
+
+    /// Build from an explicit realized scenario (trace replay).
+    pub fn with_scenario(cfg: OnlineConfig, scenario: RealizedScenario) -> Result<Self> {
+        Self::with_scenario_scorer(cfg, scenario, Box::new(NativeScorer::new()))
+    }
+
+    /// Build from a realized scenario and an explicit scoring backend.
+    pub fn with_scenario_scorer(
+        cfg: OnlineConfig,
+        scenario: RealizedScenario,
+        scorer: Box<dyn Scorer>,
+    ) -> Result<Self> {
+        if scenario.queues.len() != cfg.queues.len() {
+            return Err(Error::Config(format!(
+                "scenario has {} queues but the configuration has {}",
+                scenario.queues.len(),
+                cfg.queues.len()
+            )));
+        }
+        if let Some(bad) = scenario.churn.iter().find(|e| e.agent >= cfg.cluster.len()) {
+            return Err(Error::Config(format!(
+                "scenario churn references agent {} but the cluster has {} agents",
+                bad.agent,
+                cfg.cluster.len()
+            )));
+        }
+        let kinds = cfg.cluster.first().map(|s| s.capacity.len()).unwrap_or(2);
+        if let Some(bad) =
+            scenario.queues.iter().find(|q| q.spec.executor_demand.len() != kinds)
+        {
+            return Err(Error::Config(format!(
+                "scenario workload '{}' has {} resource dims but the cluster has {kinds}",
+                bad.spec.kind.label(),
+                bad.spec.executor_demand.len()
+            )));
+        }
         let policy = policy_by_name(&cfg.policy)?;
         let pool = if cfg.staged {
             crate::cluster::AgentPool::new_staged(&cfg.cluster)
@@ -231,11 +303,11 @@ impl OnlineSim {
         };
         let master = Master::new(pool, policy, cfg.mode, scorer);
         let label = format!("{}/{}", cfg.policy, cfg.mode.label());
-        let queues = cfg
+        let queues: Vec<SubmissionQueue> = scenario
             .queues
-            .iter()
+            .into_iter()
             .enumerate()
-            .map(|(i, q)| SubmissionQueue::new(i, q.workload.clone(), q.jobs))
+            .map(|(i, rq)| SubmissionQueue::new(i, rq))
             .collect();
         let rng = Rng::new(cfg.seed);
         Ok(OnlineSim {
@@ -243,6 +315,7 @@ impl OnlineSim {
             events: EventQueue::new(),
             rng,
             queues,
+            churn: scenario.churn,
             jobs: Vec::new(),
             executors: Vec::new(),
             fw_to_job: HashMap::new(),
@@ -268,15 +341,30 @@ impl OnlineSim {
 
     /// Run to completion, invoking `compute` for every winning task attempt.
     pub fn run_with_compute(mut self, compute: &mut dyn TaskCompute) -> Result<OnlineResult> {
-        // bootstrap: agents, first submissions, sampler
+        // bootstrap: agents, churn, submissions, sampler
         if self.cfg.staged {
             for (k, _) in self.cfg.cluster.iter().enumerate() {
                 self.events
                     .schedule(k as f64 * self.cfg.stage_interval, EventKind::AgentUp { agent: k });
             }
         }
+        for ev in &self.churn {
+            let kind = if ev.up {
+                EventKind::AgentUp { agent: ev.agent }
+            } else {
+                EventKind::AgentDown { agent: ev.agent }
+            };
+            self.events.schedule(ev.t, kind);
+        }
         for q in 0..self.queues.len() {
-            self.events.schedule(0.0, EventKind::JobArrival { queue: q });
+            if self.queues[q].closed {
+                self.events.schedule(0.0, EventKind::JobArrival { queue: q });
+            } else {
+                let times = self.queues[q].arrivals.clone();
+                for t in times {
+                    self.events.schedule(t, EventKind::JobArrival { queue: q });
+                }
+            }
         }
         self.events.schedule(0.0, EventKind::Sample);
 
@@ -289,6 +377,9 @@ impl OnlineSim {
                 EventKind::AgentUp { agent } => {
                     self.master.agent_up(agent);
                     self.request_allocation();
+                }
+                EventKind::AgentDown { agent } => {
+                    self.master.agent_down(agent);
                 }
                 EventKind::JobArrival { queue } => self.on_job_arrival(queue, now)?,
                 EventKind::Allocate => {
@@ -337,6 +428,15 @@ impl OnlineSim {
             .map(|(k, v)| (k.to_string(), *v))
             .collect();
         group_finish.sort_by(|a, b| a.0.cmp(&b.0));
+        let mut completions = Vec::new();
+        let mut slowdowns = Vec::new();
+        for j in &self.jobs {
+            if let Some(done) = j.finished_at {
+                let ct = done - j.submitted_at;
+                completions.push(ct);
+                slowdowns.push(ct / j.ideal_service());
+            }
+        }
         Ok(OnlineResult {
             label: format!("{}/{}", self.cfg.policy, self.cfg.mode.label()),
             makespan,
@@ -349,6 +449,8 @@ impl OnlineSim {
             cycles: self.master.cycles,
             grants: self.master.total_grants,
             tasks_done: self.tasks_done,
+            completion: DistStats::of(&completions),
+            slowdown: DistStats::of(&slowdowns),
             trace: self.trace,
         })
     }
@@ -359,22 +461,21 @@ impl OnlineSim {
     }
 
     fn on_job_arrival(&mut self, queue: usize, now: f64) -> Result<()> {
-        let Some(spec) = self.queues[queue].next_job() else { return Ok(()) };
+        let Some(recipe) = self.queues[queue].next_job() else { return Ok(()) };
+        let spec = self.queues[queue].spec.clone();
         let job_id = self.jobs.len();
         let name = format!("{}-q{}-j{}", spec.kind.label(), queue, job_id);
         let declared = match self.cfg.mode {
             AllocatorMode::Characterized => Some(spec.executor_demand),
             AllocatorMode::Oblivious => None,
         };
-        // the paper's submission groups are Mesos roles: shares aggregate per
-        // group (Pi = role 0, WordCount = role 1)
-        let role = match spec.kind {
-            WorkloadKind::Pi => 0,
-            WorkloadKind::WordCount => 1,
-        };
+        // the paper's submission groups are Mesos roles: shares aggregate
+        // per group (Pi = role 0, WordCount = role 1, synthetic classes
+        // their own — WorkloadKind::role)
+        let role = spec.kind.role();
         match self.master.register_framework_in_role(name, declared, 1.0, role) {
             Ok(slot) => {
-                let job = SparkJob::new(job_id, queue, slot, spec, now);
+                let job = SparkJob::from_recipe(job_id, queue, slot, spec, &recipe, now);
                 self.jobs.push(job);
                 self.done_durations.push(Vec::new());
                 self.fw_to_job.insert(slot, job_id);
@@ -427,7 +528,6 @@ impl OnlineSim {
                     job,
                     &mut exec,
                     now,
-                    &mut self.rng,
                     self.cfg.speculation,
                     &self.done_durations[job_id],
                 );
@@ -486,7 +586,6 @@ impl OnlineSim {
                 job,
                 exec,
                 now,
-                &mut self.rng,
                 self.cfg.speculation,
                 &self.done_durations[job_id],
             );
@@ -522,8 +621,11 @@ impl OnlineSim {
         }
         self.master.finish_framework(slot);
         self.fw_to_job.remove(&slot);
-        // the queue submits its next job right away
-        self.events.schedule(now, EventKind::JobArrival { queue });
+        // a closed queue submits its next job right away; open queues'
+        // arrivals were scheduled up front
+        if self.queues[queue].closed {
+            self.events.schedule(now, EventKind::JobArrival { queue });
+        }
         Ok(())
     }
 }
@@ -575,6 +677,10 @@ mod tests {
         assert!(r.makespan > 0.0);
         assert!(r.tasks_done >= 8 * 8);
         assert!(r.mean_cpu > 0.0 && r.mean_mem > 0.0);
+        // per-job stats populated and sane
+        assert_eq!(r.completion.n, 8);
+        assert!(r.completion.p50 > 0.0 && r.completion.max >= r.completion.p50);
+        assert!(r.slowdown.p50 >= 1.0 - 1e-9, "slowdown {:?}", r.slowdown);
     }
 
     #[test]
@@ -628,5 +734,63 @@ mod tests {
         for &v in r.trace.mem.values() {
             assert!((0.0..=1.0 + 1e-9).contains(&v));
         }
+    }
+
+    #[test]
+    fn open_arrivals_complete_and_respect_times() {
+        let mut cfg = OnlineConfig::small("drf", AllocatorMode::Characterized);
+        for q in &mut cfg.queues {
+            q.arrival = ArrivalProcess::Poisson { rate: 0.05 };
+        }
+        cfg.seed = 13;
+        let scenario = realize(&cfg, "test-open");
+        let first_arrival = scenario
+            .queues
+            .iter()
+            .flat_map(|q| q.arrivals.iter().copied())
+            .fold(f64::INFINITY, f64::min);
+        let r = OnlineSim::with_scenario(cfg, scenario).unwrap().run().unwrap();
+        assert_eq!(r.jobs_completed, 8);
+        // nothing can finish before the first arrival
+        assert!(r.makespan > first_arrival);
+    }
+
+    #[test]
+    fn scripted_churn_drains_and_rejoins() {
+        let mut cfg = OnlineConfig::small("rpsdsf", AllocatorMode::Characterized);
+        cfg.seed = 17;
+        // take two agents out for a mid-run window
+        cfg.churn = ChurnModel::Scripted(vec![
+            ChurnEvent { t: 10.0, agent: 4, up: false },
+            ChurnEvent { t: 10.0, agent: 5, up: false },
+            ChurnEvent { t: 90.0, agent: 4, up: true },
+            ChurnEvent { t: 90.0, agent: 5, up: true },
+        ]);
+        let r = OnlineSim::new(cfg.clone()).unwrap().run().unwrap();
+        assert_eq!(r.jobs_completed, 8, "churn must not lose jobs");
+        // the outage genuinely alters the run (2 of 6 agents gone for most
+        // of it) but the workload itself is identical (same seed streams)
+        cfg.churn = ChurnModel::None;
+        let base = OnlineSim::new(cfg).unwrap().run().unwrap();
+        assert_eq!(base.jobs_completed, 8);
+        assert!(
+            base.makespan != r.makespan || base.trace.cpu.values() != r.trace.cpu.values(),
+            "an 80s outage of a third of the cluster left no trace"
+        );
+    }
+
+    #[test]
+    fn churn_scenario_from_registry_completes() {
+        let cfg = crate::workload::scenario::scenario_config(
+            "churn",
+            "drf",
+            AllocatorMode::Characterized,
+            Some(1),
+            23,
+        )
+        .unwrap();
+        let expected: usize = cfg.queues.iter().map(|q| q.jobs).sum();
+        let r = OnlineSim::new(cfg).unwrap().run().unwrap();
+        assert_eq!(r.jobs_completed, expected);
     }
 }

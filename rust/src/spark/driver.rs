@@ -1,8 +1,12 @@
 //! The Spark driver's dispatch logic (§3.2's three classical techniques):
 //! microtasking, executors *pulling* work when underbooked, and speculative
 //! re-launch of stragglers at the program barrier.
+//!
+//! Durations come from the job itself: first attempts use the recipe's
+//! pre-realized times, speculative copies draw from the job's private
+//! stream — dispatch order therefore never perturbs the realized workload
+//! (the record/replay and common-random-number invariants).
 
-use crate::rng::Rng;
 use crate::sim::events::TaskId;
 use crate::spark::executor::Executor;
 use crate::spark::job::SparkJob;
@@ -38,7 +42,6 @@ pub fn fill_executor(
     job: &mut SparkJob,
     exec: &mut Executor,
     now: f64,
-    rng: &mut Rng,
     spec_cfg: SpeculationCfg,
     done_durations: &[f64],
 ) -> Vec<Dispatch> {
@@ -46,7 +49,7 @@ pub fn fill_executor(
     let mut out = Vec::new();
     while exec.free_slots() > 0 && !job.is_finished() {
         if let Some(t) = job.pop_pending() {
-            let dur = job.spec.sample_duration(rng);
+            let dur = job.first_attempt_duration(t);
             let attempt = job.tasks[t].start_attempt(exec.id, now, now + dur, false);
             exec.occupy();
             out.push(Dispatch { task: t, attempt, duration: dur });
@@ -67,7 +70,7 @@ pub fn fill_executor(
                 sa.partial_cmp(&sb).unwrap()
             });
         let Some(t) = straggler else { break };
-        let dur = job.spec.sample_duration(rng);
+        let dur = job.speculative_duration();
         let attempt = job.tasks[t].start_attempt(exec.id, now, now + dur, true);
         exec.occupy();
         out.push(Dispatch { task: t, attempt, duration: dur });
@@ -96,20 +99,21 @@ mod tests {
     fn fills_all_slots_from_pending() {
         let mut job = mini_job(5);
         let mut e = exec(2);
-        let mut rng = Rng::new(1);
-        let d = fill_executor(&mut job, &mut e, 0.0, &mut rng, SpeculationCfg::default(), &[]);
+        let d = fill_executor(&mut job, &mut e, 0.0, SpeculationCfg::default(), &[]);
         assert_eq!(d.len(), 2);
         assert_eq!(e.free_slots(), 0);
         assert_eq!(job.pending_count(), 3);
         assert!(job.tasks[0].is_running() && job.tasks[1].is_running());
+        // dispatched durations are the recipe's, not fresh draws
+        assert_eq!(d[0].duration, job.first_attempt_duration(0));
+        assert_eq!(d[1].duration, job.first_attempt_duration(1));
     }
 
     #[test]
     fn stops_when_no_work() {
         let mut job = mini_job(1);
         let mut e = exec(2);
-        let mut rng = Rng::new(2);
-        let d = fill_executor(&mut job, &mut e, 0.0, &mut rng, SpeculationCfg::default(), &[]);
+        let d = fill_executor(&mut job, &mut e, 0.0, SpeculationCfg::default(), &[]);
         assert_eq!(d.len(), 1);
         assert_eq!(e.free_slots(), 1); // no speculation yet (no medians)
     }
@@ -118,7 +122,6 @@ mod tests {
     fn speculates_on_straggler_at_barrier() {
         let mut job = mini_job(3);
         let mut e = exec(1);
-        let mut rng = Rng::new(3);
         // run tasks 0..2 to done quickly, leave task 2 straggling
         for t in 0..2 {
             job.pop_pending();
@@ -130,7 +133,7 @@ mod tests {
         job.tasks[2].start_attempt(0, 0.0, 100.0, false); // the straggler
         let done = [4.0, 4.0, 4.0, 4.0];
         // at t=50 the straggler has run 50 > 3 * median(4) = 12
-        let d = fill_executor(&mut job, &mut e, 50.0, &mut rng, SpeculationCfg::default(), &done);
+        let d = fill_executor(&mut job, &mut e, 50.0, SpeculationCfg::default(), &done);
         assert_eq!(d.len(), 1);
         assert_eq!(d[0].task, 2);
         assert_eq!(job.tasks[2].attempts.len(), 2);
@@ -141,11 +144,10 @@ mod tests {
     fn speculation_disabled_idles() {
         let mut job = mini_job(1);
         let mut e = exec(1);
-        let mut rng = Rng::new(4);
         job.pop_pending();
         job.tasks[0].start_attempt(0, 0.0, 100.0, false);
         let cfg = SpeculationCfg { enabled: false, multiplier: 3.0 };
-        let d = fill_executor(&mut job, &mut e, 50.0, &mut rng, cfg, &[4.0; 8]);
+        let d = fill_executor(&mut job, &mut e, 50.0, cfg, &[4.0; 8]);
         assert!(d.is_empty());
     }
 
@@ -153,11 +155,10 @@ mod tests {
     fn no_duplicate_speculation() {
         let mut job = mini_job(1);
         let mut e = exec(2);
-        let mut rng = Rng::new(5);
         job.pop_pending();
         job.tasks[0].start_attempt(9, 0.0, 100.0, false);
         let done = [4.0; 8];
-        let d = fill_executor(&mut job, &mut e, 50.0, &mut rng, SpeculationCfg::default(), &done);
+        let d = fill_executor(&mut job, &mut e, 50.0, SpeculationCfg::default(), &done);
         // one speculative copy launched; second slot must NOT copy again
         assert_eq!(d.len(), 1);
         assert_eq!(e.free_slots(), 1);

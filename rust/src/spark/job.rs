@@ -1,9 +1,17 @@
 //! A Spark job: a batch of microtasks behind a single program barrier
 //! (§3.2's typical configuration), owned by one Mesos framework.
+//!
+//! A job's first-attempt task durations come pre-realized from its
+//! [`JobRecipe`] (sampled from the submission queue's RNG stream), and
+//! speculative re-attempts draw from the job's private stream — so the
+//! realized workload is identical for every scheduler (common random
+//! numbers) and a recorded scenario replays bit-exactly.
 
+use crate::rng::Rng;
 use crate::sim::events::{ExecutorId, JobId, TaskId};
 use crate::spark::task::{Task, TaskState};
 use crate::spark::workload::WorkloadSpec;
+use crate::workload::scenario::JobRecipe;
 
 /// Job lifecycle.
 #[derive(Debug, Clone, Copy, PartialEq, Eq)]
@@ -35,11 +43,24 @@ pub struct SparkJob {
     pub submitted_at: f64,
     pub finished_at: Option<f64>,
     done_count: usize,
+    /// Pre-realized first-attempt duration per task (from the recipe).
+    durations: Vec<f64>,
+    /// Private stream for speculative re-attempt durations.
+    rng: Rng,
 }
 
 impl SparkJob {
-    pub fn new(id: JobId, queue: usize, framework: usize, spec: WorkloadSpec, now: f64) -> Self {
+    /// Build from a realized recipe — the online simulator's path.
+    pub fn from_recipe(
+        id: JobId,
+        queue: usize,
+        framework: usize,
+        spec: WorkloadSpec,
+        recipe: &JobRecipe,
+        now: f64,
+    ) -> Self {
         let n = spec.tasks_per_job;
+        debug_assert_eq!(recipe.durations.len(), n, "recipe/spec task-count mismatch");
         SparkJob {
             id,
             queue,
@@ -53,7 +74,38 @@ impl SparkJob {
             submitted_at: now,
             finished_at: None,
             done_count: 0,
+            durations: recipe.durations.clone(),
+            rng: Rng::new(recipe.seed),
         }
+    }
+
+    /// Test/bench convenience: realize a recipe from a stream derived from
+    /// the job's identity.
+    pub fn new(id: JobId, queue: usize, framework: usize, spec: WorkloadSpec, now: f64) -> Self {
+        let mut rng = Rng::new(0xD1CE ^ ((queue as u64) << 32) ^ id as u64);
+        let recipe = JobRecipe::sample(&spec, &mut rng);
+        SparkJob::from_recipe(id, queue, framework, spec, &recipe, now)
+    }
+
+    /// First-attempt service time of task `t` (realized at submission).
+    pub fn first_attempt_duration(&self, t: TaskId) -> f64 {
+        self.durations[t]
+    }
+
+    /// Sample a speculative re-attempt's service time from the job's
+    /// private stream.
+    pub fn speculative_duration(&mut self) -> f64 {
+        self.spec.sample_duration(&mut self.rng)
+    }
+
+    /// The job's inherent service requirement: total task work spread over
+    /// its maximum parallelism, floored by its longest task — the slowdown
+    /// metric's denominator.
+    pub fn ideal_service(&self) -> f64 {
+        let total: f64 = self.durations.iter().sum();
+        let par = (self.spec.max_executors * self.spec.slots_per_executor).max(1) as f64;
+        let longest = self.durations.iter().cloned().fold(0.0, f64::max);
+        (total / par).max(longest).max(1e-9)
     }
 
     /// Next pending task, if any.
@@ -178,5 +230,38 @@ mod tests {
         let j = job();
         assert_eq!(j.median_done_duration(&[1.0, 2.0]), None);
         assert_eq!(j.median_done_duration(&[1.0, 2.0, 3.0, 10.0]), Some(3.0));
+    }
+
+    #[test]
+    fn recipe_durations_are_fixed_and_speculation_is_private() {
+        use crate::rng::Rng;
+        use crate::workload::scenario::JobRecipe;
+        let spec = {
+            let mut s = WorkloadSpec::pi();
+            s.tasks_per_job = 4;
+            s
+        };
+        let recipe = JobRecipe::sample(&spec, &mut Rng::new(9));
+        let a = SparkJob::from_recipe(0, 0, 0, spec.clone(), &recipe, 0.0);
+        let mut b = SparkJob::from_recipe(0, 0, 0, spec, &recipe, 0.0);
+        for t in 0..4 {
+            assert_eq!(a.first_attempt_duration(t), b.first_attempt_duration(t));
+            assert_eq!(a.first_attempt_duration(t), recipe.durations[t]);
+        }
+        // speculative draws are deterministic per recipe seed
+        let s1 = b.speculative_duration();
+        let mut c = SparkJob::from_recipe(0, 0, 0, a.spec.clone(), &recipe, 0.0);
+        assert_eq!(c.speculative_duration(), s1);
+    }
+
+    #[test]
+    fn ideal_service_bounds() {
+        let j = job(); // 4 tasks, 2 slots/exec, cap 3 executors
+        let longest = (0..4).map(|t| j.first_attempt_duration(t)).fold(0.0, f64::max);
+        let total: f64 = (0..4).map(|t| j.first_attempt_duration(t)).sum();
+        let ideal = j.ideal_service();
+        assert!(ideal >= longest - 1e-12);
+        assert!(ideal >= total / 6.0 - 1e-12);
+        assert!(ideal <= total + 1e-12);
     }
 }

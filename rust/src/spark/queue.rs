@@ -1,62 +1,88 @@
-//! Submission queues (paper §3.3): each group ("role") has five queues; a
-//! queue submits its next job as soon as its previous one finishes, so up
-//! to ten jobs run concurrently and each queue drains fifty jobs.
+//! Submission queues (paper §3.3, generalized by the scenario subsystem):
+//! a *closed* queue submits its next job as soon as its previous one
+//! finishes (the paper's batches — up to ten jobs run concurrently and each
+//! queue drains fifty); an *open* queue's jobs arrive at the realized times
+//! of its arrival process, independent of completions.
+//!
+//! Either way the queue serves pre-realized [`JobRecipe`]s in order, so the
+//! workload a scheduler sees is exactly the recorded scenario.
 
 use crate::spark::workload::WorkloadSpec;
+use crate::workload::scenario::{JobRecipe, RealizedQueue};
 
-/// One job-submission queue.
+/// One job-submission queue over a realized workload.
 #[derive(Debug, Clone)]
 pub struct SubmissionQueue {
     pub id: usize,
-    /// The group/role it belongs to ("Pi", "WordCount").
+    /// The group's job template ("Pi", "WordCount", …).
     pub spec: WorkloadSpec,
-    remaining: usize,
-    submitted: usize,
+    /// Closed loop (completion-triggered) vs open (timed arrivals).
+    pub closed: bool,
+    /// Absolute arrival times (empty for closed queues).
+    pub arrivals: Vec<f64>,
+    recipes: Vec<JobRecipe>,
+    next: usize,
 }
 
 impl SubmissionQueue {
-    pub fn new(id: usize, spec: WorkloadSpec, jobs: usize) -> Self {
-        SubmissionQueue { id, spec, remaining: jobs, submitted: 0 }
+    /// Build from one realized queue of a scenario.
+    pub fn new(id: usize, realized: RealizedQueue) -> Self {
+        SubmissionQueue {
+            id,
+            spec: realized.spec,
+            closed: realized.closed,
+            arrivals: realized.arrivals,
+            recipes: realized.recipes,
+            next: 0,
+        }
     }
 
-    /// Take the next job off the queue (None when drained).
-    pub fn next_job(&mut self) -> Option<WorkloadSpec> {
-        if self.remaining == 0 {
-            None
-        } else {
-            self.remaining -= 1;
-            self.submitted += 1;
-            Some(self.spec.clone())
-        }
+    /// Take the next job recipe off the queue (None when drained).
+    pub fn next_job(&mut self) -> Option<JobRecipe> {
+        let r = self.recipes.get(self.next)?.clone();
+        self.next += 1;
+        Some(r)
     }
 
     /// Put a taken job back (master's framework slots were all busy; the
     /// submission retries shortly).
     pub fn requeue(&mut self) {
-        self.remaining += 1;
-        self.submitted -= 1;
+        debug_assert!(self.next > 0, "requeue with nothing taken");
+        self.next = self.next.saturating_sub(1);
     }
 
     pub fn remaining(&self) -> usize {
-        self.remaining
+        self.recipes.len() - self.next
     }
 
     pub fn submitted(&self) -> usize {
-        self.submitted
+        self.next
     }
 
     pub fn is_drained(&self) -> bool {
-        self.remaining == 0
+        self.next >= self.recipes.len()
     }
 }
 
 #[cfg(test)]
 mod tests {
     use super::*;
+    use crate::rng::Rng;
+
+    fn realized(jobs: usize) -> RealizedQueue {
+        let spec = WorkloadSpec::pi();
+        let mut rng = Rng::new(5);
+        RealizedQueue {
+            closed: true,
+            arrivals: Vec::new(),
+            recipes: (0..jobs).map(|_| JobRecipe::sample(&spec, &mut rng)).collect(),
+            spec,
+        }
+    }
 
     #[test]
     fn drains_exactly_n_jobs() {
-        let mut q = SubmissionQueue::new(0, WorkloadSpec::pi(), 3);
+        let mut q = SubmissionQueue::new(0, realized(3));
         assert_eq!(q.remaining(), 3);
         for _ in 0..3 {
             assert!(q.next_job().is_some());
@@ -64,5 +90,15 @@ mod tests {
         assert!(q.next_job().is_none());
         assert!(q.is_drained());
         assert_eq!(q.submitted(), 3);
+    }
+
+    #[test]
+    fn requeue_replays_the_same_recipe() {
+        let mut q = SubmissionQueue::new(0, realized(2));
+        let a = q.next_job().unwrap();
+        q.requeue();
+        let b = q.next_job().unwrap();
+        assert_eq!(a, b, "requeued submission must not skip or reshuffle recipes");
+        assert_eq!(q.remaining(), 1);
     }
 }

@@ -1,9 +1,15 @@
-//! Workload specifications — the paper's two submission groups (§3.3).
+//! Workload specifications — the paper's two submission groups (§3.3) plus
+//! the synthetic job classes the scenario subsystem ([`crate::workload`])
+//! generates.
 //!
 //! * **Pi** — Monte-Carlo π estimation: executors need 2 CPUs + ~2 GB
 //!   (CPU-bottlenecked).
 //! * **WordCount** — word counting over a 700 MB+ document: executors need
 //!   1 CPU + ~3.5 GB (memory-bottlenecked).
+//! * **CpuHeavy / MemHeavy / IoHeavy / Mixed** — parameterized synthetic
+//!   classes (`workload::templates`) for heterogeneous-mix and r≥3
+//!   scenarios; their demand vectors and duration models are data, not
+//!   presets.
 //!
 //! Task counts and service times are not reported in the paper; the presets
 //! below give jobs a few executor-minutes of work so that ten concurrent
@@ -12,13 +18,22 @@
 
 use crate::resources::ResVec;
 
-/// Which task body the e2e example executes through the PJRT runtime.
+/// Which task body the e2e example executes through the PJRT runtime, and
+/// which Mesos role (submission group) the job belongs to.
 #[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
 pub enum WorkloadKind {
     /// Monte-Carlo π (pi_mc.hlo.txt).
     Pi,
     /// Token histogram word count (wordcount.hlo.txt).
     WordCount,
+    /// Synthetic CPU-bottlenecked class (scenario subsystem).
+    CpuHeavy,
+    /// Synthetic memory-bottlenecked class.
+    MemHeavy,
+    /// Synthetic I/O-bottlenecked class (third resource dimension).
+    IoHeavy,
+    /// Synthetic balanced-demand class.
+    Mixed,
 }
 
 impl WorkloadKind {
@@ -26,12 +41,56 @@ impl WorkloadKind {
         match self {
             WorkloadKind::Pi => "Pi",
             WorkloadKind::WordCount => "WordCount",
+            WorkloadKind::CpuHeavy => "CpuHeavy",
+            WorkloadKind::MemHeavy => "MemHeavy",
+            WorkloadKind::IoHeavy => "IoHeavy",
+            WorkloadKind::Mixed => "Mixed",
+        }
+    }
+
+    /// Inverse of [`WorkloadKind::label`] (trace deserialization).
+    pub fn from_label(s: &str) -> Option<WorkloadKind> {
+        Some(match s {
+            "Pi" => WorkloadKind::Pi,
+            "WordCount" => WorkloadKind::WordCount,
+            "CpuHeavy" => WorkloadKind::CpuHeavy,
+            "MemHeavy" => WorkloadKind::MemHeavy,
+            "IoHeavy" => WorkloadKind::IoHeavy,
+            "Mixed" => WorkloadKind::Mixed,
+            _ => return None,
+        })
+    }
+
+    /// Mesos role of the kind's submission group — fair shares aggregate
+    /// per role (§3.3: Pi = role 0, WordCount = role 1; synthetic classes
+    /// get their own groups).
+    pub fn role(&self) -> usize {
+        match self {
+            WorkloadKind::Pi => 0,
+            WorkloadKind::WordCount => 1,
+            WorkloadKind::CpuHeavy => 2,
+            WorkloadKind::MemHeavy => 3,
+            WorkloadKind::IoHeavy => 4,
+            WorkloadKind::Mixed => 5,
         }
     }
 }
 
+/// Task service-time model. `Lognormal` (+ straggler injection) is the
+/// paper-era default; `BoundedPareto` gives the heavy-tailed regimes the
+/// scenario subsystem studies.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub enum DurationModel {
+    /// Lognormal with `WorkloadSpec::duration_sigma`, mean
+    /// `mean_task_secs`, plus straggler injection.
+    Lognormal,
+    /// Bounded Pareto with tail index `alpha` on `[lo, cap * lo]`, rescaled
+    /// so the mean equals `mean_task_secs` exactly.
+    BoundedPareto { alpha: f64, cap: f64 },
+}
+
 /// Everything the simulator needs to know about one submission group's jobs.
-#[derive(Debug, Clone)]
+#[derive(Debug, Clone, PartialEq)]
 pub struct WorkloadSpec {
     pub kind: WorkloadKind,
     /// Per-executor resource demand `d_{n,·}` (a Mesos task's resources).
@@ -50,6 +109,8 @@ pub struct WorkloadSpec {
     pub straggler_prob: f64,
     /// …and the factor by which a straggler is slower.
     pub straggler_factor: f64,
+    /// Service-time distribution family.
+    pub duration: DurationModel,
 }
 
 impl WorkloadSpec {
@@ -65,6 +126,7 @@ impl WorkloadSpec {
             duration_sigma: 0.2,
             straggler_prob: 0.02,
             straggler_factor: 6.0,
+            duration: DurationModel::Lognormal,
         }
     }
 
@@ -80,15 +142,29 @@ impl WorkloadSpec {
             duration_sigma: 0.2,
             straggler_prob: 0.02,
             straggler_factor: 6.0,
+            duration: DurationModel::Lognormal,
         }
     }
 
     /// Sample one task attempt's service time.
     pub fn sample_duration(&self, rng: &mut crate::rng::Rng) -> f64 {
-        // lognormal with mean == mean_task_secs: mu = ln(mean) - sigma^2/2
-        let mu = self.mean_task_secs.ln() - self.duration_sigma * self.duration_sigma / 2.0;
-        let mut d = rng.lognormal(mu, self.duration_sigma);
-        if rng.chance(self.straggler_prob) {
+        let mut d = match self.duration {
+            DurationModel::Lognormal => {
+                // lognormal with mean == mean_task_secs: mu = ln(mean) - sigma^2/2
+                let mu =
+                    self.mean_task_secs.ln() - self.duration_sigma * self.duration_sigma / 2.0;
+                rng.lognormal(mu, self.duration_sigma)
+            }
+            DurationModel::BoundedPareto { alpha, cap } => {
+                // raw bounded Pareto on [1, cap]; rescale so the mean is
+                // exactly mean_task_secs (closed-form mean, alpha != 1)
+                let raw = rng.bounded_pareto(alpha, 1.0, cap);
+                let e_raw = alpha / (alpha - 1.0) * (1.0 - cap.powf(1.0 - alpha))
+                    / (1.0 - cap.powf(-alpha));
+                raw * self.mean_task_secs / e_raw
+            }
+        };
+        if self.straggler_prob > 0.0 && rng.chance(self.straggler_prob) {
             d *= self.straggler_factor;
         }
         d.max(1e-3)
@@ -135,5 +211,38 @@ mod tests {
         let xs: Vec<f64> = (0..200).map(|_| spec.sample_duration(&mut rng)).collect();
         let slow = xs.iter().filter(|d| **d > 3.0 * spec.mean_task_secs).count();
         assert!(slow > 50, "{slow}");
+    }
+
+    #[test]
+    fn pareto_model_mean_matches_and_tails_heavier() {
+        let mut spec = WorkloadSpec::pi();
+        spec.straggler_prob = 0.0;
+        spec.duration = DurationModel::BoundedPareto { alpha: 1.5, cap: 50.0 };
+        let mut rng = Rng::new(4);
+        let n = 40_000;
+        let xs: Vec<f64> = (0..n).map(|_| spec.sample_duration(&mut rng)).collect();
+        let mean = xs.iter().sum::<f64>() / n as f64;
+        assert!((mean - spec.mean_task_secs).abs() < 0.1 * spec.mean_task_secs, "{mean}");
+        // heavier tail than the lognormal at the same mean
+        let tail = xs.iter().filter(|x| **x > 4.0 * spec.mean_task_secs).count();
+        assert!(tail > n / 100, "{tail}");
+    }
+
+    #[test]
+    fn kind_label_roundtrip() {
+        for k in [
+            WorkloadKind::Pi,
+            WorkloadKind::WordCount,
+            WorkloadKind::CpuHeavy,
+            WorkloadKind::MemHeavy,
+            WorkloadKind::IoHeavy,
+            WorkloadKind::Mixed,
+        ] {
+            assert_eq!(WorkloadKind::from_label(k.label()), Some(k));
+        }
+        assert_eq!(WorkloadKind::from_label("Fortran"), None);
+        // paper groups keep their historical role ids
+        assert_eq!(WorkloadKind::Pi.role(), 0);
+        assert_eq!(WorkloadKind::WordCount.role(), 1);
     }
 }

@@ -5,4 +5,4 @@ pub mod prop;
 pub mod scenarios;
 
 pub use prop::{forall, Case};
-pub use scenarios::{scaled_state, scaled_state_with_load};
+pub use scenarios::{scaled_state, scaled_state_with_load, smoke_scenario};

@@ -1,10 +1,21 @@
-//! Shared scenario builders for tests and benches — notably the scale
-//! family the dynamic-dimension scoring core unlocked.
+//! Shared scenario builders for tests and benches — the scale family the
+//! dynamic-dimension scoring core unlocked, plus tiny named-scenario
+//! configurations for the workload subsystem's smoke/regression tests.
 
 use crate::cluster::{AgentPool, ServerType};
+use crate::error::Result;
+use crate::mesos::AllocatorMode;
 use crate::resources::ResVec;
 use crate::rng::Rng;
 use crate::scheduler::{AllocState, FrameworkEntry};
+use crate::sim::online::OnlineConfig;
+use crate::workload::scenario_config;
+
+/// A tiny instance of the named scenario (2 jobs/queue) — small enough for
+/// per-policy regression tests to run the whole registry.
+pub fn smoke_scenario(name: &str, policy: &str, seed: u64) -> Result<OnlineConfig> {
+    scenario_config(name, policy, AllocatorMode::Characterized, Some(2), seed)
+}
 
 /// An `m`-agent heterogeneous cluster ([`ServerType::scaled`]) with `n`
 /// frameworks alternating the paper's Pi / WordCount demand profiles.

@@ -1,0 +1,200 @@
+//! Arrival processes — how jobs enter a submission queue over time.
+//!
+//! The paper submits fixed batches: each queue resubmits the moment its
+//! previous job completes ([`ArrivalProcess::Closed`], the closed-loop
+//! special case). Online operation under real traffic needs *open*
+//! processes, where arrival times are a property of the workload, not of
+//! the scheduler:
+//!
+//! * [`ArrivalProcess::Poisson`] — memoryless arrivals at a constant rate.
+//! * [`ArrivalProcess::Bursty`] — a 2-state MMPP (on/off modulated
+//!   Poisson): exponentially-distributed ON phases at `rate_on` alternate
+//!   with OFF phases at `rate_off` (usually 0), producing arrival clumps.
+//! * [`ArrivalProcess::Diurnal`] — a sinusoidal rate curve sampled by
+//!   Lewis–Shedler thinning, modeling daily load cycles.
+//!
+//! All sampling is driven by the caller's [`Rng`] stream, so realized
+//! arrival sequences are reproducible and queue-independent (common random
+//! numbers across schedulers).
+
+use crate::rng::Rng;
+
+/// When a queue's jobs arrive.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub enum ArrivalProcess {
+    /// Closed loop: the next job is submitted when the previous one
+    /// finishes (the paper's batch behaviour). No pre-sampled times.
+    Closed,
+    /// Open Poisson arrivals at `rate` jobs/second.
+    Poisson { rate: f64 },
+    /// Open 2-state MMPP: ON phases (mean `mean_on` seconds, Poisson at
+    /// `rate_on`) alternating with OFF phases (mean `mean_off`, `rate_off`).
+    Bursty { rate_on: f64, rate_off: f64, mean_on: f64, mean_off: f64 },
+    /// Open non-homogeneous Poisson with rate
+    /// `base + amplitude * (1 + sin(2πt/period)) / 2`.
+    Diurnal { base: f64, amplitude: f64, period: f64 },
+}
+
+impl ArrivalProcess {
+    /// `true` when arrivals are completion-triggered rather than timed.
+    pub fn is_closed(&self) -> bool {
+        matches!(self, ArrivalProcess::Closed)
+    }
+
+    /// Short registry name (trace headers, reports).
+    pub fn label(&self) -> &'static str {
+        match self {
+            ArrivalProcess::Closed => "closed",
+            ArrivalProcess::Poisson { .. } => "poisson",
+            ArrivalProcess::Bursty { .. } => "bursty",
+            ArrivalProcess::Diurnal { .. } => "diurnal",
+        }
+    }
+
+    /// Realize `n` arrival times (ascending, seconds from run start).
+    /// Closed processes return an empty vector — their arrivals are events,
+    /// not times.
+    pub fn sample_times(&self, n: usize, rng: &mut Rng) -> Vec<f64> {
+        match *self {
+            ArrivalProcess::Closed => Vec::new(),
+            ArrivalProcess::Poisson { rate } => {
+                let mut t = 0.0;
+                (0..n)
+                    .map(|_| {
+                        t += rng.exponential(rate);
+                        t
+                    })
+                    .collect()
+            }
+            ArrivalProcess::Bursty { rate_on, rate_off, mean_on, mean_off } => {
+                let mut out = Vec::with_capacity(n);
+                let mut t = 0.0;
+                let mut on = true;
+                // end of the current phase
+                let mut phase_end = rng.exponential(1.0 / mean_on.max(1e-9));
+                while out.len() < n {
+                    let rate = if on { rate_on } else { rate_off };
+                    if rate <= 1e-12 {
+                        // silent phase: skip to its end
+                        t = phase_end;
+                        on = !on;
+                        let mean = if on { mean_on } else { mean_off };
+                        phase_end = t + rng.exponential(1.0 / mean.max(1e-9));
+                        continue;
+                    }
+                    let next = t + rng.exponential(rate);
+                    if next <= phase_end {
+                        t = next;
+                        out.push(t);
+                    } else {
+                        t = phase_end;
+                        on = !on;
+                        let mean = if on { mean_on } else { mean_off };
+                        phase_end = t + rng.exponential(1.0 / mean.max(1e-9));
+                    }
+                }
+                out
+            }
+            ArrivalProcess::Diurnal { base, amplitude, period } => {
+                // Lewis–Shedler thinning against the peak rate
+                let lambda_max = (base + amplitude).max(1e-9);
+                let mut out = Vec::with_capacity(n);
+                let mut t = 0.0;
+                while out.len() < n {
+                    t += rng.exponential(lambda_max);
+                    let lambda =
+                        base + amplitude * 0.5 * (1.0 + (std::f64::consts::TAU * t / period).sin());
+                    if rng.f64() * lambda_max < lambda {
+                        out.push(t);
+                    }
+                }
+                out
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn closed_has_no_times() {
+        let mut rng = Rng::new(1);
+        assert!(ArrivalProcess::Closed.sample_times(10, &mut rng).is_empty());
+        assert!(ArrivalProcess::Closed.is_closed());
+        assert!(!ArrivalProcess::Poisson { rate: 1.0 }.is_closed());
+    }
+
+    #[test]
+    fn poisson_mean_interarrival() {
+        let mut rng = Rng::new(2);
+        let rate = 0.5;
+        let times = ArrivalProcess::Poisson { rate }.sample_times(20_000, &mut rng);
+        assert_eq!(times.len(), 20_000);
+        assert!(times.windows(2).all(|w| w[0] <= w[1]), "sorted");
+        let mean_gap = times.last().unwrap() / times.len() as f64;
+        assert!((mean_gap - 1.0 / rate).abs() < 0.05 / rate, "{mean_gap}");
+    }
+
+    #[test]
+    fn bursty_clumps_more_than_poisson() {
+        let mut rng = Rng::new(3);
+        // same long-run rate (~0.1/s) for both processes
+        let bursty = ArrivalProcess::Bursty {
+            rate_on: 0.4,
+            rate_off: 0.0,
+            mean_on: 50.0,
+            mean_off: 150.0,
+        };
+        let poisson = ArrivalProcess::Poisson { rate: 0.1 };
+        let cv2 = |times: &[f64]| {
+            let gaps: Vec<f64> = times.windows(2).map(|w| w[1] - w[0]).collect();
+            let mean = gaps.iter().sum::<f64>() / gaps.len() as f64;
+            let var =
+                gaps.iter().map(|g| (g - mean) * (g - mean)).sum::<f64>() / gaps.len() as f64;
+            var / (mean * mean)
+        };
+        let b = cv2(&bursty.sample_times(4000, &mut rng));
+        let p = cv2(&poisson.sample_times(4000, &mut rng));
+        // a Poisson process has CV² ≈ 1; on/off modulation is overdispersed
+        assert!(p < 1.3, "{p}");
+        assert!(b > 1.5 * p, "bursty CV² {b} vs poisson {p}");
+    }
+
+    #[test]
+    fn bursty_all_off_rate_still_terminates() {
+        let mut rng = Rng::new(4);
+        let p = ArrivalProcess::Bursty {
+            rate_on: 1.0,
+            rate_off: 0.5,
+            mean_on: 10.0,
+            mean_off: 10.0,
+        };
+        let times = p.sample_times(500, &mut rng);
+        assert_eq!(times.len(), 500);
+        assert!(times.windows(2).all(|w| w[0] <= w[1]));
+    }
+
+    #[test]
+    fn diurnal_rate_oscillates() {
+        let mut rng = Rng::new(5);
+        let p = ArrivalProcess::Diurnal { base: 0.02, amplitude: 0.3, period: 1000.0 };
+        let times = p.sample_times(3000, &mut rng);
+        assert!(times.windows(2).all(|w| w[0] <= w[1]));
+        // count arrivals in peak vs trough quarter-phases of each cycle:
+        // sin peaks in [0.25, 0.5)·period... phase of peak of (1+sin(2πu)) is u=0.25
+        let phase = |t: f64| (t / 1000.0).fract();
+        let peak = times.iter().filter(|t| (0.0..0.5).contains(&phase(**t))).count();
+        let trough = times.len() - peak;
+        assert!(peak > trough * 2, "peak {peak} vs trough {trough}");
+    }
+
+    #[test]
+    fn deterministic_per_stream() {
+        let p = ArrivalProcess::Poisson { rate: 0.2 };
+        let a = p.sample_times(50, &mut Rng::new(9).split(3));
+        let b = p.sample_times(50, &mut Rng::new(9).split(3));
+        assert_eq!(a, b);
+    }
+}

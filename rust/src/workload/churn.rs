@@ -1,0 +1,125 @@
+//! Cluster churn — agents leaving and (re)joining the master while jobs
+//! are in flight.
+//!
+//! A down event models a *drain*: the agent deregisters, so the allocator
+//! stops offering it, but executors already placed there run to completion
+//! and release normally (Mesos maintenance-mode semantics). An up event
+//! re-registers the agent, returning its residual capacity to the offer
+//! pool.
+//!
+//! Churn is realized up front into a flat, time-sorted list of
+//! [`ChurnEvent`]s — either scripted, or sampled from [`ChurnModel::Flap`]
+//! (alternating exponential up/down phases per churnable agent) on a
+//! dedicated RNG stream so churn realization never perturbs workload
+//! sampling.
+
+use crate::rng::Rng;
+
+/// One scheduled agent state change.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct ChurnEvent {
+    /// Simulated time (seconds).
+    pub t: f64,
+    /// Agent (pool index).
+    pub agent: usize,
+    /// `true` = register (up), `false` = deregister (drain).
+    pub up: bool,
+}
+
+/// How churn events are produced.
+#[derive(Debug, Clone, PartialEq)]
+pub enum ChurnModel {
+    /// No churn.
+    None,
+    /// An explicit schedule (maintenance windows, Fig-9-style staging).
+    Scripted(Vec<ChurnEvent>),
+    /// Stochastic flapping: agents with id ≥ `min_up` alternate UP phases
+    /// (mean `mean_up` seconds) and DOWN phases (mean `mean_down`) until
+    /// `horizon`. Agents `0..min_up` never churn, so the cluster always
+    /// keeps a live core.
+    Flap { min_up: usize, mean_up: f64, mean_down: f64, horizon: f64 },
+}
+
+impl ChurnModel {
+    /// Realize the model into a time-sorted event list for an `agents`-sized
+    /// cluster. `rng` should be a dedicated split stream.
+    pub fn realize(&self, agents: usize, rng: &mut Rng) -> Vec<ChurnEvent> {
+        let mut events = match self {
+            ChurnModel::None => Vec::new(),
+            ChurnModel::Scripted(evs) => evs.clone(),
+            ChurnModel::Flap { min_up, mean_up, mean_down, horizon } => {
+                let mut out = Vec::new();
+                for agent in *min_up..agents {
+                    let mut t = rng.exponential(1.0 / mean_up.max(1e-9));
+                    let mut up_next = false; // first transition is a drain
+                    while t < *horizon {
+                        out.push(ChurnEvent { t, agent, up: up_next });
+                        let mean = if up_next { *mean_up } else { *mean_down };
+                        t += rng.exponential(1.0 / mean.max(1e-9));
+                        up_next = !up_next;
+                    }
+                    // leave every agent up at the horizon so late work can drain
+                    if !up_next {
+                        // last emitted event was an up (or none): nothing to close
+                    } else {
+                        out.push(ChurnEvent { t: *horizon, agent, up: true });
+                    }
+                }
+                out
+            }
+        };
+        events.sort_by(|a, b| a.t.partial_cmp(&b.t).unwrap().then(a.agent.cmp(&b.agent)));
+        events
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn none_and_scripted() {
+        let mut rng = Rng::new(1);
+        assert!(ChurnModel::None.realize(6, &mut rng).is_empty());
+        let script = vec![
+            ChurnEvent { t: 50.0, agent: 2, up: false },
+            ChurnEvent { t: 10.0, agent: 1, up: false },
+        ];
+        let evs = ChurnModel::Scripted(script).realize(6, &mut rng);
+        assert_eq!(evs.len(), 2);
+        assert!(evs[0].t <= evs[1].t, "sorted by time");
+        assert_eq!(evs[0].agent, 1);
+    }
+
+    #[test]
+    fn flap_protects_core_agents_and_ends_up() {
+        let mut rng = Rng::new(2);
+        let model =
+            ChurnModel::Flap { min_up: 4, mean_up: 100.0, mean_down: 30.0, horizon: 2000.0 };
+        let evs = model.realize(6, &mut rng);
+        assert!(!evs.is_empty());
+        assert!(evs.iter().all(|e| e.agent >= 4), "core agents never churn");
+        assert!(evs.windows(2).all(|w| w[0].t <= w[1].t), "sorted");
+        // per churnable agent: events alternate down/up starting with down,
+        // and the final state is up
+        for agent in 4..6 {
+            let seq: Vec<bool> = evs.iter().filter(|e| e.agent == agent).map(|e| e.up).collect();
+            if seq.is_empty() {
+                continue;
+            }
+            assert!(!seq[0], "first transition is a drain");
+            for w in seq.windows(2) {
+                assert_ne!(w[0], w[1], "strict alternation");
+            }
+            assert!(*seq.last().unwrap(), "agent {agent} left down at horizon");
+        }
+    }
+
+    #[test]
+    fn flap_deterministic_per_stream() {
+        let model = ChurnModel::Flap { min_up: 2, mean_up: 50.0, mean_down: 20.0, horizon: 500.0 };
+        let a = model.realize(5, &mut Rng::new(7).split(11));
+        let b = model.realize(5, &mut Rng::new(7).split(11));
+        assert_eq!(a, b);
+    }
+}

@@ -1,0 +1,39 @@
+//! Scenario workload subsystem: online workload generation and
+//! deterministic record/replay.
+//!
+//! The paper evaluates its schedulers on exactly two job groups submitted
+//! as fixed closed batches. This module generalizes the workload side of
+//! the experiment into *scenarios*:
+//!
+//! * [`arrival`] — arrival processes: closed batch (the paper's behaviour
+//!   as a special case), Poisson, bursty MMPP on/off, diurnal rate curves.
+//! * [`templates`] — a job-template generator: CPU-/memory-/I/O-bottleneck
+//!   and balanced demand vectors (including r≥3 resource dimensions) and
+//!   heavy-tailed (bounded-Pareto) task-duration models.
+//! * [`churn`] — cluster churn: scripted or stochastic agent drain/rejoin
+//!   schedules against the dynamic-dimension scheduler core.
+//! * [`scenario`] — scenario *realization*: every stochastic workload input
+//!   (arrival times, per-job demands and durations, churn) is sampled up
+//!   front from per-queue [`crate::rng::Rng::split`] streams keyed by queue
+//!   id, giving common random numbers across schedulers; plus the
+//!   `--scenario` registry of named scenario families.
+//! * [`trace`] — JSONL serialization of realized scenarios with **record**
+//!   and **replay** modes: a recorded trace, replayed, drives any scheduler
+//!   with the bit-identical workload sequence (regression-tested in
+//!   `tests/scenarios.rs`).
+//!
+//! The simulator ([`crate::sim::online`]) consumes only the realized form,
+//! so a live generated scenario and a replayed trace are indistinguishable
+//! to every scheduler.
+
+pub mod arrival;
+pub mod churn;
+pub mod scenario;
+pub mod templates;
+pub mod trace;
+
+pub use arrival::ArrivalProcess;
+pub use churn::{ChurnEvent, ChurnModel};
+pub use scenario::{
+    realize, scenario_config, JobRecipe, RealizedQueue, RealizedScenario, SCENARIO_NAMES,
+};

@@ -1,0 +1,331 @@
+//! Scenario realization and the named-scenario registry.
+//!
+//! A *scenario* is an [`OnlineConfig`] whose queues carry arrival
+//! processes, whose workloads may be any template, and whose cluster may
+//! churn. *Realizing* a scenario samples every stochastic workload input up
+//! front into a [`RealizedScenario`] — arrival times, per-job demand and
+//! task durations, churn events — so that:
+//!
+//! * every scheduler can be driven by the **identical realized sequence**
+//!   (common random numbers: per-queue [`Rng::split`] streams keyed by
+//!   queue id, a separate stream for churn — policies never touch them);
+//! * a realized scenario can be **recorded** to a JSONL trace
+//!   ([`crate::workload::trace`]) and **replayed** bit-identically.
+//!
+//! The registry ([`SCENARIO_NAMES`], [`scenario_config`]) names the
+//! standard scenario families the CLI (`--scenario`) and the CI smoke
+//! matrix run.
+
+use crate::cluster::ServerType;
+use crate::error::{Error, Result};
+use crate::mesos::AllocatorMode;
+use crate::rng::Rng;
+use crate::sim::online::{OnlineConfig, QueueSpec};
+use crate::spark::workload::WorkloadSpec;
+use crate::workload::arrival::ArrivalProcess;
+use crate::workload::churn::{ChurnEvent, ChurnModel};
+use crate::workload::templates;
+
+/// Stream-id base for per-queue sampling streams. Keying by queue id (not
+/// by draw order) is what keeps queues' samples independent: adding a
+/// queue, changing another queue's arrival process, or swapping the
+/// scheduler never perturbs this queue's realized jobs.
+const QUEUE_STREAM_BASE: u64 = 0x51_0000;
+/// Stream id for churn realization.
+const CHURN_STREAM: u64 = 0xC4;
+
+/// The sampling stream of queue `q` under scenario seed `seed`.
+pub fn queue_stream(seed: u64, q: usize) -> Rng {
+    Rng::new(seed).split(QUEUE_STREAM_BASE + q as u64)
+}
+
+/// Everything stochastic about one job, fixed at realization time: the
+/// first-attempt service time of each task, plus a private stream seed for
+/// any speculative re-attempts.
+#[derive(Debug, Clone, PartialEq)]
+pub struct JobRecipe {
+    /// First-attempt duration of task `t`.
+    pub durations: Vec<f64>,
+    /// Seed of the job's private stream (speculative re-sampling).
+    pub seed: u64,
+}
+
+impl JobRecipe {
+    /// Sample a recipe for one job of `spec` from the queue's stream.
+    pub fn sample(spec: &WorkloadSpec, rng: &mut Rng) -> JobRecipe {
+        JobRecipe {
+            durations: (0..spec.tasks_per_job).map(|_| spec.sample_duration(rng)).collect(),
+            seed: rng.next_u64(),
+        }
+    }
+}
+
+/// One queue's realized workload.
+#[derive(Debug, Clone, PartialEq)]
+pub struct RealizedQueue {
+    /// The job template every recipe was drawn from.
+    pub spec: WorkloadSpec,
+    /// Closed loop (completion-triggered submissions) vs open (timed).
+    pub closed: bool,
+    /// Absolute arrival times (empty for closed queues).
+    pub arrivals: Vec<f64>,
+    /// One recipe per job, in submission order.
+    pub recipes: Vec<JobRecipe>,
+}
+
+/// A fully realized scenario: the exact workload input sequence a run
+/// consumes, independent of the scheduler under test.
+#[derive(Debug, Clone, PartialEq)]
+pub struct RealizedScenario {
+    pub name: String,
+    pub seed: u64,
+    pub queues: Vec<RealizedQueue>,
+    pub churn: Vec<ChurnEvent>,
+}
+
+/// Realize `cfg`'s workload: sample every queue's arrivals and recipes from
+/// its own stream, and the churn schedule from the churn stream.
+pub fn realize(cfg: &OnlineConfig, name: &str) -> RealizedScenario {
+    let queues = cfg
+        .queues
+        .iter()
+        .enumerate()
+        .map(|(q, qs)| {
+            let mut rng = queue_stream(cfg.seed, q);
+            let arrivals = qs.arrival.sample_times(qs.jobs, &mut rng);
+            let recipes = (0..qs.jobs).map(|_| JobRecipe::sample(&qs.workload, &mut rng)).collect();
+            RealizedQueue {
+                spec: qs.workload.clone(),
+                closed: qs.arrival.is_closed(),
+                arrivals,
+                recipes,
+            }
+        })
+        .collect();
+    let churn = cfg.churn.realize(cfg.cluster.len(), &mut Rng::new(cfg.seed).split(CHURN_STREAM));
+    RealizedScenario { name: name.to_string(), seed: cfg.seed, queues, churn }
+}
+
+/// Every scenario name accepted by `--scenario` and the CI smoke matrix.
+pub const SCENARIO_NAMES: &[&str] = &[
+    "batch-baseline",  // the paper's closed batches (today's behaviour)
+    "poisson",         // open memoryless arrivals
+    "bursty",          // MMPP on/off arrival clumps
+    "diurnal",         // sinusoidal arrival-rate curve
+    "heavy-tail",      // bounded-Pareto task durations
+    "churn",           // agents drain and rejoin mid-run
+    "mixed-bottleneck", // r=3 resources, cpu/mem/io-bottlenecked mix
+];
+
+/// Build the named scenario's [`OnlineConfig`]. `jobs_override` scales the
+/// per-queue job count (CI smoke runs pass small values); `None` keeps the
+/// scenario's default.
+pub fn scenario_config(
+    name: &str,
+    policy: &str,
+    mode: AllocatorMode,
+    jobs_override: Option<usize>,
+    seed: u64,
+) -> Result<OnlineConfig> {
+    let jobs = |default: usize| jobs_override.unwrap_or(default);
+    // a shared trimmed pair of paper templates for the open-arrival mixes
+    let small_pi = || {
+        let mut w = WorkloadSpec::pi();
+        w.tasks_per_job = 16;
+        w.max_executors = 4;
+        w
+    };
+    let small_wc = || {
+        let mut w = WorkloadSpec::wordcount();
+        w.tasks_per_job = 12;
+        w.max_executors = 4;
+        w
+    };
+    let open_mix = |arrival: ArrivalProcess, jobs: usize| -> Vec<QueueSpec> {
+        (0..6)
+            .map(|q| {
+                let w = if q % 2 == 0 { small_pi() } else { small_wc() };
+                QueueSpec { workload: w, jobs, arrival }
+            })
+            .collect()
+    };
+
+    let mut cfg = match name {
+        "batch-baseline" => OnlineConfig::paper(policy, mode, jobs(10)),
+        "poisson" => {
+            let mut cfg = OnlineConfig::paper(policy, mode, jobs(8));
+            cfg.queues = open_mix(ArrivalProcess::Poisson { rate: 1.0 / 45.0 }, jobs(8));
+            cfg
+        }
+        "bursty" => {
+            let mut cfg = OnlineConfig::paper(policy, mode, jobs(8));
+            cfg.queues = open_mix(
+                ArrivalProcess::Bursty {
+                    rate_on: 0.1,
+                    rate_off: 0.0,
+                    mean_on: 80.0,
+                    mean_off: 240.0,
+                },
+                jobs(8),
+            );
+            cfg
+        }
+        "diurnal" => {
+            let mut cfg = OnlineConfig::paper(policy, mode, jobs(8));
+            cfg.queues = open_mix(
+                ArrivalProcess::Diurnal { base: 1.0 / 120.0, amplitude: 1.0 / 15.0, period: 900.0 },
+                jobs(8),
+            );
+            cfg
+        }
+        "heavy-tail" => {
+            let mut cfg = OnlineConfig::paper(policy, mode, jobs(8));
+            cfg.queues = (0..4)
+                .map(|q| {
+                    let base = if q % 2 == 0 { small_pi() } else { small_wc() };
+                    let w = templates::with_heavy_tail(base, 1.4, 80.0);
+                    QueueSpec::closed(w, jobs(8))
+                })
+                .collect();
+            cfg
+        }
+        "churn" => {
+            let mut cfg = OnlineConfig::paper(policy, mode, jobs(8));
+            cfg.queues = open_mix(ArrivalProcess::Poisson { rate: 1.0 / 60.0 }, jobs(8));
+            // agents 4 and 5 (the two type-3 servers) flap; the core four
+            // stay up so work always drains eventually
+            cfg.churn = ChurnModel::Flap {
+                min_up: 4,
+                mean_up: 400.0,
+                mean_down: 90.0,
+                horizon: 4000.0,
+            };
+            cfg
+        }
+        "mixed-bottleneck" => {
+            let mut cfg = OnlineConfig::paper(policy, mode, jobs(6));
+            cfg.cluster = ServerType::trio();
+            let mix = [
+                templates::cpu_heavy_r3(),
+                templates::mem_heavy_r3(),
+                templates::io_heavy_r3(),
+                templates::mixed_r3(),
+                templates::cpu_heavy_r3(),
+                templates::mem_heavy_r3(),
+            ];
+            cfg.queues =
+                mix.into_iter().map(|w| QueueSpec::closed(w, jobs(6))).collect();
+            cfg
+        }
+        other => {
+            return Err(Error::Config(format!(
+                "unknown scenario '{other}' (expected one of {SCENARIO_NAMES:?})"
+            )))
+        }
+    };
+    cfg.seed = seed;
+    Ok(cfg)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn registry_resolves_every_name() {
+        for name in SCENARIO_NAMES {
+            let cfg =
+                scenario_config(name, "drf", AllocatorMode::Characterized, Some(2), 7).unwrap();
+            assert!(!cfg.queues.is_empty(), "{name}");
+            assert!(cfg.queues.iter().all(|q| q.jobs == 2), "{name} honors jobs override");
+            let sc = realize(&cfg, name);
+            assert_eq!(sc.queues.len(), cfg.queues.len());
+            for (rq, qs) in sc.queues.iter().zip(&cfg.queues) {
+                assert_eq!(rq.recipes.len(), qs.jobs, "{name}");
+                assert_eq!(rq.closed, qs.arrival.is_closed());
+                if !rq.closed {
+                    assert_eq!(rq.arrivals.len(), qs.jobs);
+                }
+                for r in &rq.recipes {
+                    assert_eq!(r.durations.len(), qs.workload.tasks_per_job);
+                    assert!(r.durations.iter().all(|d| *d > 0.0));
+                }
+            }
+        }
+        assert!(scenario_config("warp", "drf", AllocatorMode::Characterized, None, 1).is_err());
+        assert!(SCENARIO_NAMES.len() >= 6);
+    }
+
+    #[test]
+    fn mixed_bottleneck_is_r3() {
+        let cfg = scenario_config(
+            "mixed-bottleneck",
+            "rpsdsf",
+            AllocatorMode::Characterized,
+            Some(2),
+            1,
+        )
+        .unwrap();
+        assert!(cfg.cluster.iter().all(|s| s.capacity.len() == 3));
+        assert!(cfg.queues.iter().all(|q| q.workload.executor_demand.len() == 3));
+    }
+
+    #[test]
+    fn churn_scenario_realizes_churn_and_others_do_not() {
+        let with = realize(
+            &scenario_config("churn", "drf", AllocatorMode::Characterized, Some(2), 3).unwrap(),
+            "churn",
+        );
+        assert!(!with.churn.is_empty());
+        assert!(with.churn.iter().all(|e| e.agent >= 4));
+        let without = realize(
+            &scenario_config("poisson", "drf", AllocatorMode::Characterized, Some(2), 3).unwrap(),
+            "poisson",
+        );
+        assert!(without.churn.is_empty());
+    }
+
+    #[test]
+    fn queue_streams_are_independent_of_queue_count() {
+        // common-random-numbers invariant: adding a queue must not perturb
+        // the existing queues' realized samples
+        let mut small =
+            scenario_config("poisson", "drf", AllocatorMode::Characterized, Some(4), 9).unwrap();
+        let mut large = small.clone();
+        large.queues.push(small.queues[0].clone());
+        let a = realize(&small, "a");
+        let b = realize(&large, "b");
+        for q in 0..small.queues.len() {
+            assert_eq!(a.queues[q].recipes, b.queues[q].recipes, "queue {q}");
+            assert_eq!(a.queues[q].arrivals, b.queues[q].arrivals, "queue {q}");
+        }
+        // ...and the realization never reads the policy or mode
+        small.policy = "rpsdsf".into();
+        small.mode = AllocatorMode::Oblivious;
+        let c = realize(&small, "c");
+        assert_eq!(a.queues, c.queues);
+        assert_eq!(a.churn, c.churn);
+    }
+
+    #[test]
+    fn changing_one_queue_leaves_others_untouched() {
+        let base =
+            scenario_config("poisson", "drf", AllocatorMode::Characterized, Some(4), 11).unwrap();
+        let mut tweaked = base.clone();
+        tweaked.queues[2].arrival = ArrivalProcess::Bursty {
+            rate_on: 0.2,
+            rate_off: 0.0,
+            mean_on: 30.0,
+            mean_off: 60.0,
+        };
+        let a = realize(&base, "a");
+        let b = realize(&tweaked, "b");
+        for q in 0..base.queues.len() {
+            if q == 2 {
+                assert_ne!(a.queues[q].arrivals, b.queues[q].arrivals);
+            } else {
+                assert_eq!(a.queues[q], b.queues[q], "queue {q} perturbed");
+            }
+        }
+    }
+}

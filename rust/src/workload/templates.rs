@@ -1,0 +1,167 @@
+//! Job-template generator: parameterized demand vectors and duration
+//! models beyond the paper's two presets.
+//!
+//! Templates are plain [`WorkloadSpec`] builders. The interesting knobs:
+//!
+//! * **Demand profile** — CPU-, memory-, I/O-bottlenecked or balanced,
+//!   including r≥3 resource dimensions (`(cpus, mem, io)`), which none of
+//!   the paper's configurations exercise.
+//! * **Duration model** — the lognormal default or heavy-tailed
+//!   bounded-Pareto sampling ([`DurationModel::BoundedPareto`]), where a
+//!   small fraction of tasks dominates total work.
+//!
+//! The matching r=3 cluster preset lives in
+//! [`crate::cluster::ServerType::trio`].
+
+use crate::resources::ResVec;
+use crate::spark::workload::{DurationModel, WorkloadKind, WorkloadSpec};
+
+/// Synthetic CPU-bottlenecked class (2-resource clusters): like Pi but with
+/// a harder CPU skew.
+pub fn cpu_heavy() -> WorkloadSpec {
+    WorkloadSpec {
+        kind: WorkloadKind::CpuHeavy,
+        executor_demand: ResVec::cpu_mem(3.0, 1.0),
+        slots_per_executor: 3,
+        tasks_per_job: 24,
+        max_executors: 6,
+        mean_task_secs: 4.0,
+        duration_sigma: 0.3,
+        straggler_prob: 0.02,
+        straggler_factor: 6.0,
+        duration: DurationModel::Lognormal,
+    }
+}
+
+/// Synthetic memory-bottlenecked class (2-resource clusters).
+pub fn mem_heavy() -> WorkloadSpec {
+    WorkloadSpec {
+        kind: WorkloadKind::MemHeavy,
+        executor_demand: ResVec::cpu_mem(1.0, 5.0),
+        slots_per_executor: 1,
+        tasks_per_job: 16,
+        max_executors: 6,
+        mean_task_secs: 6.0,
+        duration_sigma: 0.3,
+        straggler_prob: 0.02,
+        straggler_factor: 6.0,
+        duration: DurationModel::Lognormal,
+    }
+}
+
+/// CPU-bottlenecked class over `(cpus, mem, io)` — the r=3 family.
+pub fn cpu_heavy_r3() -> WorkloadSpec {
+    let mut w = cpu_heavy();
+    w.executor_demand = ResVec::new(&[4.0, 2.0, 1.0]);
+    w
+}
+
+/// Memory-bottlenecked class over `(cpus, mem, io)`.
+pub fn mem_heavy_r3() -> WorkloadSpec {
+    let mut w = mem_heavy();
+    w.executor_demand = ResVec::new(&[1.0, 6.0, 1.0]);
+    w
+}
+
+/// I/O-bottlenecked class over `(cpus, mem, io)`.
+pub fn io_heavy_r3() -> WorkloadSpec {
+    WorkloadSpec {
+        kind: WorkloadKind::IoHeavy,
+        executor_demand: ResVec::new(&[1.0, 2.0, 5.0]),
+        slots_per_executor: 1,
+        tasks_per_job: 16,
+        max_executors: 6,
+        mean_task_secs: 5.0,
+        duration_sigma: 0.25,
+        straggler_prob: 0.02,
+        straggler_factor: 6.0,
+        duration: DurationModel::Lognormal,
+    }
+}
+
+/// Balanced class over `(cpus, mem, io)` — no single bottleneck.
+pub fn mixed_r3() -> WorkloadSpec {
+    WorkloadSpec {
+        kind: WorkloadKind::Mixed,
+        executor_demand: ResVec::new(&[2.0, 3.0, 2.0]),
+        slots_per_executor: 2,
+        tasks_per_job: 24,
+        max_executors: 6,
+        mean_task_secs: 4.0,
+        duration_sigma: 0.25,
+        straggler_prob: 0.02,
+        straggler_factor: 6.0,
+        duration: DurationModel::Lognormal,
+    }
+}
+
+/// Swap a template's duration model for a heavy bounded-Pareto tail
+/// (straggler injection off — the tail itself is the hazard).
+pub fn with_heavy_tail(mut spec: WorkloadSpec, alpha: f64, cap: f64) -> WorkloadSpec {
+    spec.duration = DurationModel::BoundedPareto { alpha, cap };
+    spec.straggler_prob = 0.0;
+    spec
+}
+
+/// Resolve a template by registry name (config files, CLI).
+pub fn template_by_name(name: &str) -> Option<WorkloadSpec> {
+    Some(match name {
+        "pi" => WorkloadSpec::pi(),
+        "wordcount" => WorkloadSpec::wordcount(),
+        "cpu-heavy" => cpu_heavy(),
+        "mem-heavy" => mem_heavy(),
+        "cpu-heavy-r3" => cpu_heavy_r3(),
+        "mem-heavy-r3" => mem_heavy_r3(),
+        "io-heavy-r3" => io_heavy_r3(),
+        "mixed-r3" => mixed_r3(),
+        _ => return None,
+    })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn r3_templates_have_three_dims() {
+        for t in [cpu_heavy_r3(), mem_heavy_r3(), io_heavy_r3(), mixed_r3()] {
+            assert_eq!(t.executor_demand.len(), 3, "{:?}", t.kind);
+        }
+        assert_eq!(cpu_heavy().executor_demand.len(), 2);
+    }
+
+    #[test]
+    fn bottlenecks_are_where_advertised() {
+        let c = cpu_heavy_r3().executor_demand;
+        assert!(c.get(0) > c.get(1) && c.get(0) > c.get(2));
+        let m = mem_heavy_r3().executor_demand;
+        assert!(m.get(1) > m.get(0) && m.get(1) > m.get(2));
+        let i = io_heavy_r3().executor_demand;
+        assert!(i.get(2) > i.get(0) && i.get(2) > i.get(1));
+    }
+
+    #[test]
+    fn heavy_tail_swaps_model() {
+        let t = with_heavy_tail(WorkloadSpec::pi(), 1.5, 50.0);
+        assert_eq!(t.duration, DurationModel::BoundedPareto { alpha: 1.5, cap: 50.0 });
+        assert_eq!(t.straggler_prob, 0.0);
+        assert_eq!(t.kind, WorkloadKind::Pi);
+    }
+
+    #[test]
+    fn registry_resolves() {
+        for name in [
+            "pi",
+            "wordcount",
+            "cpu-heavy",
+            "mem-heavy",
+            "cpu-heavy-r3",
+            "mem-heavy-r3",
+            "io-heavy-r3",
+            "mixed-r3",
+        ] {
+            assert!(template_by_name(name).is_some(), "{name}");
+        }
+        assert!(template_by_name("gpu-heavy").is_none());
+    }
+}

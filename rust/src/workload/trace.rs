@@ -1,0 +1,334 @@
+//! Scenario trace: JSONL serialization of a [`RealizedScenario`].
+//!
+//! One JSON object per line:
+//!
+//! ```text
+//! {"trace":"mesos-fair-scenario","v":1,"name":"poisson","seed":"0x5eed","queues":6}
+//! {"ev":"queue","id":0,"closed":false,"kind":"Pi","demand":[2,2],...}
+//! {"ev":"job","queue":0,"idx":0,"t":12.5,"seed":"0x1a2b...","durations":[...]}
+//! {"ev":"churn","t":310.25,"agent":4,"up":false}
+//! ```
+//!
+//! Seeds are hex strings (JSON numbers are f64 and would corrupt 64-bit
+//! seeds); every f64 uses Rust's shortest-round-trip formatting, so
+//! `from_jsonl(to_jsonl(s)) == s` **bit-exactly** — the property the
+//! record→replay determinism tests build on.
+
+use crate::error::{Error, Result};
+use crate::metrics::json::Json;
+use crate::resources::ResVec;
+use crate::spark::workload::{DurationModel, WorkloadKind, WorkloadSpec};
+use crate::workload::churn::ChurnEvent;
+use crate::workload::scenario::{JobRecipe, RealizedQueue, RealizedScenario};
+
+const MAGIC: &str = "mesos-fair-scenario";
+const VERSION: f64 = 1.0;
+
+fn hex(v: u64) -> Json {
+    Json::Str(format!("{v:#x}"))
+}
+
+fn parse_hex(j: &Json, what: &str) -> Result<u64> {
+    let s = j
+        .as_str()
+        .ok_or_else(|| Error::Config(format!("trace: {what} must be a hex string")))?;
+    let digits = s.strip_prefix("0x").unwrap_or(s);
+    u64::from_str_radix(digits, 16)
+        .map_err(|_| Error::Config(format!("trace: bad {what} '{s}'")))
+}
+
+fn spec_to_json(id: usize, closed: bool, spec: &WorkloadSpec) -> Json {
+    let mut pairs = vec![
+        ("ev", Json::Str("queue".into())),
+        ("id", Json::Num(id as f64)),
+        ("closed", Json::Bool(closed)),
+        ("kind", Json::Str(spec.kind.label().into())),
+        ("demand", Json::arr_f64(spec.executor_demand.as_slice())),
+        ("slots", Json::Num(spec.slots_per_executor as f64)),
+        ("tasks", Json::Num(spec.tasks_per_job as f64)),
+        ("max_executors", Json::Num(spec.max_executors as f64)),
+        ("mean", Json::Num(spec.mean_task_secs)),
+        ("sigma", Json::Num(spec.duration_sigma)),
+        ("straggler_prob", Json::Num(spec.straggler_prob)),
+        ("straggler_factor", Json::Num(spec.straggler_factor)),
+    ];
+    match spec.duration {
+        DurationModel::Lognormal => pairs.push(("duration", Json::Str("lognormal".into()))),
+        DurationModel::BoundedPareto { alpha, cap } => {
+            pairs.push(("duration", Json::Str("pareto".into())));
+            pairs.push(("alpha", Json::Num(alpha)));
+            pairs.push(("cap", Json::Num(cap)));
+        }
+    }
+    Json::obj(pairs)
+}
+
+fn num(j: &Json, key: &str) -> Result<f64> {
+    j.get(key)
+        .and_then(|v| v.as_f64())
+        .ok_or_else(|| Error::Config(format!("trace: missing number '{key}'")))
+}
+
+fn spec_from_json(j: &Json) -> Result<WorkloadSpec> {
+    let kind_label = j
+        .get("kind")
+        .and_then(|v| v.as_str())
+        .ok_or_else(|| Error::Config("trace: queue missing 'kind'".into()))?;
+    let kind = WorkloadKind::from_label(kind_label)
+        .ok_or_else(|| Error::Config(format!("trace: unknown workload kind '{kind_label}'")))?;
+    let demand: Vec<f64> = j
+        .get("demand")
+        .and_then(|v| v.as_arr())
+        .ok_or_else(|| Error::Config("trace: queue missing 'demand'".into()))?
+        .iter()
+        .map(|v| v.as_f64().ok_or_else(|| Error::Config("trace: bad demand lane".into())))
+        .collect::<Result<_>>()?;
+    let duration = match j.get("duration").and_then(|v| v.as_str()) {
+        Some("pareto") => {
+            DurationModel::BoundedPareto { alpha: num(j, "alpha")?, cap: num(j, "cap")? }
+        }
+        _ => DurationModel::Lognormal,
+    };
+    Ok(WorkloadSpec {
+        kind,
+        executor_demand: ResVec::new(&demand),
+        slots_per_executor: num(j, "slots")? as usize,
+        tasks_per_job: num(j, "tasks")? as usize,
+        max_executors: num(j, "max_executors")? as usize,
+        mean_task_secs: num(j, "mean")?,
+        duration_sigma: num(j, "sigma")?,
+        straggler_prob: num(j, "straggler_prob")?,
+        straggler_factor: num(j, "straggler_factor")?,
+        duration,
+    })
+}
+
+/// Serialize a realized scenario to JSONL.
+pub fn to_jsonl(sc: &RealizedScenario) -> String {
+    let mut out = String::new();
+    out.push_str(
+        &Json::obj(vec![
+            ("trace", Json::Str(MAGIC.into())),
+            ("v", Json::Num(VERSION)),
+            ("name", Json::Str(sc.name.clone())),
+            ("seed", hex(sc.seed)),
+            ("queues", Json::Num(sc.queues.len() as f64)),
+        ])
+        .render(),
+    );
+    out.push('\n');
+    for (id, q) in sc.queues.iter().enumerate() {
+        out.push_str(&spec_to_json(id, q.closed, &q.spec).render());
+        out.push('\n');
+        for (idx, recipe) in q.recipes.iter().enumerate() {
+            let mut pairs = vec![
+                ("ev", Json::Str("job".into())),
+                ("queue", Json::Num(id as f64)),
+                ("idx", Json::Num(idx as f64)),
+            ];
+            if !q.closed {
+                pairs.push(("t", Json::Num(q.arrivals[idx])));
+            }
+            pairs.push(("seed", hex(recipe.seed)));
+            pairs.push(("durations", Json::arr_f64(&recipe.durations)));
+            out.push_str(&Json::obj(pairs).render());
+            out.push('\n');
+        }
+    }
+    for e in &sc.churn {
+        out.push_str(
+            &Json::obj(vec![
+                ("ev", Json::Str("churn".into())),
+                ("t", Json::Num(e.t)),
+                ("agent", Json::Num(e.agent as f64)),
+                ("up", Json::Bool(e.up)),
+            ])
+            .render(),
+        );
+        out.push('\n');
+    }
+    out
+}
+
+/// Parse a JSONL scenario trace.
+pub fn from_jsonl(text: &str) -> Result<RealizedScenario> {
+    let mut lines = text.lines().filter(|l| !l.trim().is_empty());
+    let header = Json::parse(
+        lines.next().ok_or_else(|| Error::Config("trace: empty file".into()))?,
+    )?;
+    if header.get("trace").and_then(|v| v.as_str()) != Some(MAGIC) {
+        return Err(Error::Config("trace: not a mesos-fair scenario trace".into()));
+    }
+    let version = num(&header, "v")?;
+    if version != VERSION {
+        return Err(Error::Config(format!(
+            "trace: format version {version} is not supported (this build reads v{VERSION})"
+        )));
+    }
+    let n_queues = num(&header, "queues")? as usize;
+    let name = header.get("name").and_then(|v| v.as_str()).unwrap_or("replay").to_string();
+    let seed = parse_hex(
+        header.get("seed").ok_or_else(|| Error::Config("trace: header missing seed".into()))?,
+        "seed",
+    )?;
+
+    let mut queues: Vec<Option<RealizedQueue>> = vec![None; n_queues];
+    let mut churn = Vec::new();
+    for line in lines {
+        let j = Json::parse(line)?;
+        match j.get("ev").and_then(|v| v.as_str()) {
+            Some("queue") => {
+                let id = num(&j, "id")? as usize;
+                if id >= n_queues {
+                    return Err(Error::Config(format!("trace: queue id {id} out of range")));
+                }
+                let closed = j.get("closed").and_then(|v| v.as_bool()).unwrap_or(true);
+                queues[id] = Some(RealizedQueue {
+                    spec: spec_from_json(&j)?,
+                    closed,
+                    arrivals: Vec::new(),
+                    recipes: Vec::new(),
+                });
+            }
+            Some("job") => {
+                let qid = num(&j, "queue")? as usize;
+                let q = queues
+                    .get_mut(qid)
+                    .and_then(|q| q.as_mut())
+                    .ok_or_else(|| Error::Config(format!("trace: job before queue {qid}")))?;
+                let idx = num(&j, "idx")? as usize;
+                if idx != q.recipes.len() {
+                    return Err(Error::Config(format!(
+                        "trace: queue {qid} job idx {idx} out of order (expected {})",
+                        q.recipes.len()
+                    )));
+                }
+                if !q.closed {
+                    q.arrivals.push(num(&j, "t")?);
+                }
+                let durations: Vec<f64> = j
+                    .get("durations")
+                    .and_then(|v| v.as_arr())
+                    .ok_or_else(|| Error::Config("trace: job missing durations".into()))?
+                    .iter()
+                    .map(|v| {
+                        v.as_f64().ok_or_else(|| Error::Config("trace: bad duration".into()))
+                    })
+                    .collect::<Result<_>>()?;
+                if durations.len() != q.spec.tasks_per_job {
+                    return Err(Error::Config(format!(
+                        "trace: queue {qid} job {idx} has {} durations but the spec declares \
+                         {} tasks",
+                        durations.len(),
+                        q.spec.tasks_per_job
+                    )));
+                }
+                let seed = parse_hex(
+                    j.get("seed")
+                        .ok_or_else(|| Error::Config("trace: job missing seed".into()))?,
+                    "job seed",
+                )?;
+                q.recipes.push(JobRecipe { durations, seed });
+            }
+            Some("churn") => churn.push(ChurnEvent {
+                t: num(&j, "t")?,
+                agent: num(&j, "agent")? as usize,
+                up: j
+                    .get("up")
+                    .and_then(|v| v.as_bool())
+                    .ok_or_else(|| Error::Config("trace: churn missing 'up'".into()))?,
+            }),
+            other => {
+                return Err(Error::Config(format!("trace: unknown event {other:?}")));
+            }
+        }
+    }
+    let queues = queues
+        .into_iter()
+        .enumerate()
+        .map(|(i, q)| q.ok_or_else(|| Error::Config(format!("trace: queue {i} missing"))))
+        .collect::<Result<Vec<_>>>()?;
+    Ok(RealizedScenario { name, seed, queues, churn })
+}
+
+/// Write a scenario trace file.
+pub fn write_file(sc: &RealizedScenario, path: &str) -> Result<()> {
+    std::fs::write(path, to_jsonl(sc))
+        .map_err(|e| Error::Config(format!("cannot write trace {path}: {e}")))
+}
+
+/// Read a scenario trace file.
+pub fn read_file(path: &str) -> Result<RealizedScenario> {
+    let text = std::fs::read_to_string(path)
+        .map_err(|e| Error::Config(format!("cannot read trace {path}: {e}")))?;
+    from_jsonl(&text)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::mesos::AllocatorMode;
+    use crate::workload::scenario::{realize, scenario_config, SCENARIO_NAMES};
+
+    #[test]
+    fn every_scenario_round_trips_bit_exactly() {
+        for name in SCENARIO_NAMES {
+            let cfg = scenario_config(name, "drf", AllocatorMode::Characterized, Some(2), 0xAB)
+                .unwrap();
+            let sc = realize(&cfg, name);
+            let text = to_jsonl(&sc);
+            let back = from_jsonl(&text).unwrap();
+            assert_eq!(sc, back, "{name}");
+            // serialization is itself deterministic
+            assert_eq!(text, to_jsonl(&back), "{name}");
+        }
+    }
+
+    #[test]
+    fn trace_lines_are_individual_json_objects() {
+        let cfg =
+            scenario_config("churn", "drf", AllocatorMode::Characterized, Some(1), 1).unwrap();
+        let sc = realize(&cfg, "churn");
+        let text = to_jsonl(&sc);
+        let mut kinds = std::collections::BTreeSet::new();
+        for line in text.lines() {
+            let j = Json::parse(line).unwrap();
+            if let Some(ev) = j.get("ev").and_then(|v| v.as_str()) {
+                kinds.insert(ev.to_string());
+            }
+        }
+        assert!(kinds.contains("queue") && kinds.contains("job") && kinds.contains("churn"));
+    }
+
+    #[test]
+    fn rejects_garbage_and_truncation() {
+        assert!(from_jsonl("").is_err());
+        assert!(from_jsonl("{\"trace\":\"other\"}").is_err());
+        // future format versions must be rejected, not mis-parsed
+        assert!(from_jsonl(
+            "{\"trace\":\"mesos-fair-scenario\",\"v\":2,\"name\":\"x\",\"seed\":\"0x1\",\"queues\":0}"
+        )
+        .is_err());
+        let cfg =
+            scenario_config("poisson", "drf", AllocatorMode::Characterized, Some(1), 2).unwrap();
+        let sc = realize(&cfg, "poisson");
+        let text = to_jsonl(&sc);
+        // drop the last queue's job lines -> queue present but truncation of
+        // a whole queue record must error
+        let head: Vec<&str> = text.lines().take(2).collect();
+        assert!(from_jsonl(&head.join("\n")).is_err(), "missing queues must error");
+        // a job line whose durations disagree with the queue's task count
+        let tampered: String = text
+            .lines()
+            .map(|l| {
+                if l.contains("\"ev\":\"job\"") && l.contains("\"idx\":0") {
+                    l.replacen("\"durations\":[", "\"durations\":[99.9,", 1)
+                } else {
+                    l.to_string()
+                }
+            })
+            .collect::<Vec<_>>()
+            .join("\n");
+        assert!(from_jsonl(&tampered).is_err(), "duration-count mismatch must error");
+    }
+}

@@ -1,0 +1,145 @@
+//! Scenario-subsystem integration tests: the record→replay determinism
+//! contract, common-random-number invariants across schedulers, and a
+//! smoke pass over the whole named-scenario registry.
+
+use mesos_fair::mesos::AllocatorMode;
+use mesos_fair::scheduler::POLICY_NAMES;
+use mesos_fair::sim::online::{OnlineResult, OnlineSim};
+use mesos_fair::testing::{forall, smoke_scenario};
+use mesos_fair::workload::{realize, scenario_config, trace, RealizedScenario, SCENARIO_NAMES};
+
+fn run_with(
+    name: &str,
+    policy: &str,
+    seed: u64,
+    scenario: RealizedScenario,
+) -> OnlineResult {
+    let cfg = smoke_scenario(name, policy, seed).unwrap();
+    OnlineSim::with_scenario(cfg, scenario).unwrap().run().unwrap()
+}
+
+/// Bit-exact equality of the observable outcome of two runs.
+fn assert_identical(a: &OnlineResult, b: &OnlineResult, ctx: &str) {
+    assert_eq!(a.jobs_completed, b.jobs_completed, "{ctx}: jobs");
+    assert_eq!(a.makespan, b.makespan, "{ctx}: makespan");
+    assert_eq!(a.grants, b.grants, "{ctx}: grants");
+    assert_eq!(a.trace.completions, b.trace.completions, "{ctx}: completion marks");
+    assert_eq!(a.trace.cpu.values(), b.trace.cpu.values(), "{ctx}: cpu series");
+    assert_eq!(a.trace.mem.values(), b.trace.mem.values(), "{ctx}: mem series");
+    assert_eq!(a.completion, b.completion, "{ctx}: completion stats");
+    assert_eq!(a.slowdown, b.slowdown, "{ctx}: slowdown stats");
+}
+
+#[test]
+fn record_replay_identical_for_every_policy() {
+    // the acceptance contract: a recorded scenario trace, replayed,
+    // reproduces bit-identical completion marks and allocated-fraction
+    // series for every registered policy
+    for scenario_name in ["poisson", "churn", "heavy-tail"] {
+        for &policy in POLICY_NAMES {
+            let cfg = smoke_scenario(scenario_name, policy, 0xFACE).unwrap();
+            let recorded = realize(&cfg, scenario_name);
+            let text = trace::to_jsonl(&recorded);
+            let replayed = trace::from_jsonl(&text).unwrap();
+            assert_eq!(recorded, replayed, "{scenario_name} trace round-trip");
+            let live = run_with(scenario_name, policy, 0xFACE, recorded);
+            let replay = run_with(scenario_name, policy, 0xFACE, replayed);
+            assert_identical(&live, &replay, &format!("{scenario_name}/{policy}"));
+        }
+    }
+}
+
+#[test]
+fn prop_record_replay_identical_across_seeds() {
+    forall(
+        0x7EAC_E5,
+        8,
+        |rng| {
+            (
+                SCENARIO_NAMES[rng.index(SCENARIO_NAMES.len())],
+                POLICY_NAMES[rng.index(POLICY_NAMES.len())],
+                rng.next_u64(),
+            )
+        },
+        |&(scenario_name, policy, seed)| {
+            let cfg = smoke_scenario(scenario_name, policy, seed).map_err(|e| e.to_string())?;
+            let recorded = realize(&cfg, scenario_name);
+            let replayed =
+                trace::from_jsonl(&trace::to_jsonl(&recorded)).map_err(|e| e.to_string())?;
+            if recorded != replayed {
+                return Err("trace round-trip not bit-exact".into());
+            }
+            let live = run_with(scenario_name, policy, seed, recorded);
+            let replay = run_with(scenario_name, policy, seed, replayed);
+            if live.makespan != replay.makespan
+                || live.trace.completions != replay.trace.completions
+                || live.trace.cpu.values() != replay.trace.cpu.values()
+                || live.trace.mem.values() != replay.trace.mem.values()
+            {
+                return Err(format!("replay diverged for {scenario_name}/{policy}"));
+            }
+            Ok(())
+        },
+    );
+}
+
+#[test]
+fn every_scenario_completes_under_drf_and_psdsf() {
+    // mirrors the CI smoke matrix
+    for name in SCENARIO_NAMES {
+        for policy in ["drf", "psdsf"] {
+            let cfg = smoke_scenario(name, policy, 0x5EED).unwrap();
+            let expected: usize = cfg.queues.iter().map(|q| q.jobs).sum();
+            let r = OnlineSim::new(cfg).unwrap().run().unwrap();
+            assert_eq!(r.jobs_completed, expected, "{name}/{policy}");
+            assert!(r.makespan > 0.0, "{name}/{policy}");
+            assert_eq!(r.completion.n, expected, "{name}/{policy}: per-job stats");
+            assert!(r.slowdown.p50 >= 1.0 - 1e-9, "{name}/{policy}: slowdown under 1");
+        }
+    }
+}
+
+#[test]
+fn schedulers_see_the_identical_realized_workload() {
+    // common random numbers: the realized scenario is a pure function of
+    // (scenario, seed) — never of the policy under test
+    let a = realize(&smoke_scenario("bursty", "drf", 42).unwrap(), "bursty");
+    let b = realize(&smoke_scenario("bursty", "rpsdsf", 42).unwrap(), "bursty");
+    assert_eq!(a.queues, b.queues);
+    assert_eq!(a.churn, b.churn);
+    // and an oblivious-mode run consumes the same realization too
+    let c = realize(
+        &scenario_config("bursty", "drf", AllocatorMode::Oblivious, Some(2), 42).unwrap(),
+        "bursty",
+    );
+    assert_eq!(a.queues, c.queues);
+}
+
+#[test]
+fn mixed_bottleneck_exercises_three_resource_dims() {
+    let cfg = smoke_scenario("mixed-bottleneck", "rpsdsf", 0xABC).unwrap();
+    assert_eq!(cfg.cluster[0].capacity.len(), 3);
+    let expected: usize = cfg.queues.iter().map(|q| q.jobs).sum();
+    let r = OnlineSim::new(cfg).unwrap().run().unwrap();
+    assert_eq!(r.jobs_completed, expected);
+    // cpu and mem lanes were both exercised
+    assert!(r.mean_cpu > 0.0 && r.mean_mem > 0.0);
+}
+
+#[test]
+fn heavy_tail_scenario_has_heavier_completion_tail() {
+    // under the same scheduler, the bounded-Pareto scenario's slowdown
+    // tail (p95/p50) should exceed the lognormal batch baseline's
+    let tail_ratio = |name: &str| {
+        let cfg = scenario_config(name, "drf", AllocatorMode::Characterized, Some(4), 0xBEEF)
+            .unwrap();
+        let r = OnlineSim::new(cfg).unwrap().run().unwrap();
+        r.completion.p95 / r.completion.p50.max(1e-9)
+    };
+    let heavy = tail_ratio("heavy-tail");
+    let base = tail_ratio("poisson");
+    assert!(
+        heavy > base * 0.8,
+        "heavy-tail p95/p50 {heavy:.2} unexpectedly far below baseline {base:.2}"
+    );
+}
