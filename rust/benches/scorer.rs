@@ -13,7 +13,7 @@ use mesos_fair::mesos::AllocatorMode;
 use mesos_fair::metrics::json::Json;
 use mesos_fair::resources::ResVec;
 use mesos_fair::rng::Rng;
-use mesos_fair::scheduler::{policy_by_name, IncrementalScorer, NativeScorer};
+use mesos_fair::scheduler::{policy_by_name, IncrementalScorer, NativeScorer, ScoringEngine};
 use mesos_fair::sim::online::{OnlineConfig, OnlineSim};
 use mesos_fair::testing::scaled_state_with_load;
 
@@ -147,6 +147,69 @@ fn main() {
         ]
     };
 
+    header("joint argmin at 1024x2048 — full n×m scan vs pruned index vs pruned+sharded");
+    let joint_rows = {
+        let (m, n) = (1024usize, 2048usize);
+        let mut st = scaled_state_with_load(m, n, 4 * m, &mut rng);
+        // steady-state shape: every framework holds at least one task and
+        // carries a distinct weight, so row scores (hence bounds) are
+        // distinct — the synthetic two-profile workload would otherwise tie
+        // hundreds of rows exactly, which no real mixed cluster does (the
+        // all-ties x_n = 0 regime is covered by the property tests and
+        // degrades gracefully to the full scan)
+        for fw in 0..n {
+            if st.total_tasks(fw) == 0.0 {
+                for ag in 0..m {
+                    if st.task_fits(fw, ag) {
+                        st.place_task(fw, ag).unwrap();
+                        break;
+                    }
+                }
+            }
+            st.framework_mut(fw).weight = 1.0 + fw as f64 / (8.0 * n as f64);
+        }
+        let policy = policy_by_name("rpsdsf").unwrap();
+        let candidates: Vec<usize> = (0..m).collect();
+        let mut engine = ScoringEngine::native();
+        let (si, set, bounds) = engine.scores_with_bounds(&mut st).unwrap();
+
+        // the three variants must agree before anything is timed
+        let reference = policy.pick_joint(set, si, &candidates);
+        assert_eq!(reference, policy.pick_joint_pruned(set, si, &candidates, bounds, 1));
+        for shards in [2, 4, 8] {
+            assert_eq!(
+                reference,
+                policy.pick_joint_pruned(set, si, &candidates, bounds, shards),
+                "{shards} shards"
+            );
+        }
+
+        let full = bench(&format!("joint/full-scan/{m}x{n}"), 3, 20, || {
+            std::hint::black_box(policy.pick_joint(set, si, &candidates));
+        });
+        println!("{}", full.render());
+        let pruned = bench(&format!("joint/pruned/{m}x{n}"), 10, 400, || {
+            std::hint::black_box(policy.pick_joint_pruned(set, si, &candidates, bounds, 1));
+        });
+        println!("{}", pruned.render());
+        let sharded = bench(&format!("joint/pruned+sharded/{m}x{n} (4 shards)"), 10, 400, || {
+            std::hint::black_box(policy.pick_joint_pruned(set, si, &candidates, bounds, 4));
+        });
+        println!("{}", sharded.render());
+        println!(
+            "  speedup: pruned {:.1}x, pruned+sharded {:.1}x over the full scan",
+            full.p50 / pruned.p50.max(1e-12),
+            full.p50 / sharded.p50.max(1e-12)
+        );
+        vec![
+            ("full", result_json(&full)),
+            ("pruned", result_json(&pruned)),
+            ("pruned_sharded", result_json(&sharded)),
+            ("speedup_pruned", Json::Num(full.p50 / pruned.p50.max(1e-12))),
+            ("speedup_pruned_sharded", Json::Num(full.p50 / sharded.p50.max(1e-12))),
+        ]
+    };
+
     header("allocation-cycle latency (one full cycle on a drained cluster)");
     let mut cycle_rows: Vec<Json> = Vec::new();
     for policy in ["drf", "psdsf", "rpsdsf", "bf-drf"] {
@@ -186,6 +249,7 @@ fn main() {
         ("bench", Json::Str("scorer".into())),
         ("sweep", Json::Arr(sweep_rows)),
         ("masking_256x512", Json::obj(masking_rows)),
+        ("joint_1024x2048", Json::obj(joint_rows)),
         ("cycles", Json::Arr(cycle_rows)),
         ("e2e", Json::Arr(e2e_rows)),
     ]);

@@ -112,6 +112,74 @@ pub fn selected(name: &str) -> bool {
     args.is_empty() || args.iter().any(|a| name.contains(a.as_str()))
 }
 
+/// Compare a freshly produced `BENCH_scorer.json` against a committed
+/// baseline and return the joint-argmin regressions (empty = pass). The CI
+/// bench-regression gate (`mesos-fair bench-diff`) drives this.
+///
+/// Two checks:
+/// * the pruned+sharded `pick_joint` must stay ≥ 5× faster than the full
+///   scan *within the current run* (absolute, machine-independent);
+/// * each variant's median, **normalized by the same run's full-scan
+///   median**, must not regress more than `max_regress` (default 0.25)
+///   against the baseline. Normalizing makes the gate robust to CI
+///   hardware differences — raw nanoseconds are not comparable across
+///   runners, relative cost is.
+///
+/// A baseline marked `"provisional": true` (committed before a real bench
+/// run of record existed) downgrades the normalized comparison to
+/// informational; the 5× floor still enforces.
+pub fn scorer_joint_regressions(
+    current: &crate::metrics::json::Json,
+    baseline: &crate::metrics::json::Json,
+    max_regress: f64,
+) -> crate::error::Result<Vec<String>> {
+    use crate::error::Error;
+    use crate::metrics::json::Json;
+    fn joint_p50(doc: &Json, variant: &str, which: &str) -> crate::error::Result<f64> {
+        doc.get("joint_1024x2048")
+            .and_then(|j| j.get(variant))
+            .and_then(|v| v.get("p50_s"))
+            .and_then(|v| v.as_f64())
+            .ok_or_else(|| {
+                Error::Experiment(format!(
+                    "{which} bench json: missing joint_1024x2048.{variant}.p50_s"
+                ))
+            })
+    }
+    let mut fails = Vec::new();
+    let cur_full = joint_p50(current, "full", "current")?;
+    if cur_full <= 0.0 {
+        return Err(Error::Experiment("current full-scan median is not positive".into()));
+    }
+    let sharded = joint_p50(current, "pruned_sharded", "current")?;
+    let speedup = cur_full / sharded.max(1e-12);
+    if speedup < 5.0 {
+        fails.push(format!(
+            "pruned+sharded joint argmin is only {speedup:.1}x faster than the full scan \
+             (floor: 5x)"
+        ));
+    }
+    let provisional = baseline.get("provisional").and_then(|v| v.as_bool()).unwrap_or(false);
+    let base_full = joint_p50(baseline, "full", "baseline")?;
+    for variant in ["pruned", "pruned_sharded"] {
+        let cur_norm = joint_p50(current, variant, "current")? / cur_full;
+        let base_norm = joint_p50(baseline, variant, "baseline")? / base_full;
+        if cur_norm > base_norm * (1.0 + max_regress) {
+            let msg = format!(
+                "joint {variant} median regressed {:.0}% vs baseline (normalized {cur_norm:.5} \
+                 vs {base_norm:.5})",
+                100.0 * (cur_norm / base_norm - 1.0)
+            );
+            if provisional {
+                println!("bench-diff note (provisional baseline, not enforced): {msg}");
+            } else {
+                fails.push(msg);
+            }
+        }
+    }
+    Ok(fails)
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -150,5 +218,54 @@ mod tests {
     fn render_contains_name() {
         let r = bench("named", 0, 3, || {});
         assert!(r.render().contains("named"));
+    }
+
+    fn joint_doc(full: f64, pruned: f64, sharded: f64, provisional: bool) -> Json {
+        let entry = |p50: f64| Json::obj(vec![("p50_s", Json::Num(p50))]);
+        let mut pairs = vec![(
+            "joint_1024x2048",
+            Json::obj(vec![
+                ("full", entry(full)),
+                ("pruned", entry(pruned)),
+                ("pruned_sharded", entry(sharded)),
+            ]),
+        )];
+        if provisional {
+            pairs.push(("provisional", Json::Bool(true)));
+        }
+        Json::obj(pairs)
+    }
+
+    use crate::metrics::json::Json;
+
+    #[test]
+    fn bench_diff_passes_when_medians_hold() {
+        let base = joint_doc(10e-3, 0.1e-3, 0.2e-3, false);
+        let cur = joint_doc(12e-3, 0.13e-3, 0.25e-3, false);
+        let fails = scorer_joint_regressions(&cur, &base, 0.25).unwrap();
+        assert!(fails.is_empty(), "{fails:?}");
+    }
+
+    #[test]
+    fn bench_diff_flags_median_regression_and_speedup_floor() {
+        let base = joint_doc(10e-3, 0.1e-3, 0.2e-3, false);
+        // pruned normalized median doubled -> regression
+        let cur = joint_doc(10e-3, 0.2e-3, 0.2e-3, false);
+        let fails = scorer_joint_regressions(&cur, &base, 0.25).unwrap();
+        assert_eq!(fails.len(), 1, "{fails:?}");
+        // sharded slower than full/5 -> speedup floor trips
+        let cur = joint_doc(10e-3, 0.1e-3, 4e-3, false);
+        let fails = scorer_joint_regressions(&cur, &base, 0.25).unwrap();
+        assert!(fails.iter().any(|f| f.contains("floor")), "{fails:?}");
+    }
+
+    #[test]
+    fn bench_diff_provisional_baseline_only_enforces_floor() {
+        let base = joint_doc(10e-3, 0.1e-3, 0.2e-3, true);
+        let cur = joint_doc(10e-3, 1.0e-3, 1.0e-3, true); // 10x speedup, bad normalized
+        let fails = scorer_joint_regressions(&cur, &base, 0.25).unwrap();
+        assert!(fails.is_empty(), "provisional baseline must not hard-fail: {fails:?}");
+        let missing = Json::obj(vec![]);
+        assert!(scorer_joint_regressions(&missing, &base, 0.25).is_err());
     }
 }

@@ -96,6 +96,8 @@ COMMANDS:
     online                 Run a single online experiment
     scenarios              Run the scenario smoke matrix (CI: every --scenario
                            under selected policies; writes BENCH_scenarios.json)
+    bench-diff CUR BASE    Compare BENCH_scorer.json joint-argmin medians
+                           against a committed baseline (CI regression gate)
     e2e                    End-to-end run with real PJRT task compute
     parity                 Cross-check the native and HLO scorers
     list                   List schedulers, figure ids and scenario names
@@ -112,7 +114,11 @@ COMMON FLAGS:
     --scenario NAME        Named scenario (see 'list'): batch-baseline|poisson|
                            bursty|diurnal|heavy-tail|churn|mixed-bottleneck
     --record FILE          Write the realized scenario trace (JSONL) before running
-    --replay FILE          Drive the run from a recorded scenario trace
+    --replay FILE          Drive the run from a recorded scenario trace (the
+                           header's scenario/seed/dims must match the config)
+    --shards N             Parallel scoring/argmin shards (bit-identical
+                           results at any count)                 [default: 1]
+    --max-regress F        bench-diff normalized-median threshold [default: 0.25]
     --homogeneous          Use the six type-3 cluster (§3.6)
     --staged               Staged agent registration (§3.7)
     --agents M             Scale scenario: M heterogeneous agents

@@ -7,6 +7,7 @@
 //! policy = "rpsdsf"          # scheduler registry name
 //! mode = "characterized"     # or "oblivious"
 //! seed = 42
+//! shards = 4                 # parallel scoring/argmin shards (default 1)
 //!
 //! [cluster]
 //! servers = ["type-1", "type-2", "type-3"]   # or "trio-cpu"/"trio-mem"/"trio-io" (r=3)
@@ -15,6 +16,7 @@
 //! workload = "pi"            # template: pi|wordcount|cpu-heavy|mem-heavy|
 //!                            #   cpu-heavy-r3|mem-heavy-r3|io-heavy-r3|mixed-r3
 //! jobs = 50
+//! weight = 2.0               # fair-share weight φ (default 1.0)
 //! tasks_per_job = 16         # optional overrides…
 //! max_executors = 4
 //! mean_task_secs = 4.0
@@ -197,7 +199,13 @@ pub fn parse_online_config(text: &str) -> Result<OnlineConfig> {
     }
     for q in doc.array("queue") {
         let jobs = q.get("jobs").and_then(|v| v.as_i64()).unwrap_or(50) as usize;
-        cfg.queues.push(QueueSpec { workload: workload(q)?, jobs, arrival: arrival(q)? });
+        let weight = table_f64(q, "weight").unwrap_or(1.0);
+        if !weight.is_finite() || weight <= 0.0 {
+            return Err(Error::Config(format!(
+                "queue weight must be a positive number, got {weight}"
+            )));
+        }
+        cfg.queues.push(QueueSpec { workload: workload(q)?, jobs, arrival: arrival(q)?, weight });
     }
     if cfg.queues.is_empty() {
         return Err(Error::Config("config defines no [[queue]] entries".into()));
@@ -237,6 +245,12 @@ pub fn parse_online_config(text: &str) -> Result<OnlineConfig> {
     if let Some(v) = doc.get("experiment.seed").and_then(|v| v.as_i64()) {
         cfg.seed = v as u64;
     }
+    if let Some(v) = doc.get("experiment.shards").and_then(|v| v.as_i64()) {
+        if v < 1 {
+            return Err(Error::Config(format!("experiment.shards must be >= 1, got {v}")));
+        }
+        cfg.shards = v as usize;
+    }
     if let Some(v) = doc.get("experiment.staged").and_then(|v| v.as_bool()) {
         cfg.staged = v;
     }
@@ -271,6 +285,7 @@ mod tests {
         seed = 7
         staged = true
         stage_interval = 30.0
+        shards = 4
 
         [cluster]
         servers = ["type-1", "type-2", "type-3"]
@@ -278,6 +293,7 @@ mod tests {
         [[queue]]
         workload = "pi"
         jobs = 20
+        weight = 2.0
         tasks_per_job = 16
 
         [[queue]]
@@ -293,11 +309,14 @@ mod tests {
         assert_eq!(cfg.seed, 7);
         assert!(cfg.staged);
         assert_eq!(cfg.stage_interval, 30.0);
+        assert_eq!(cfg.shards, 4);
         assert_eq!(cfg.cluster.len(), 3);
         assert_eq!(cfg.cluster[1].name, "type-2");
         assert_eq!(cfg.queues.len(), 2);
         assert_eq!(cfg.queues[0].workload.tasks_per_job, 16);
         assert_eq!(cfg.queues[0].jobs, 20);
+        assert_eq!(cfg.queues[0].weight, 2.0);
+        assert_eq!(cfg.queues[1].weight, 1.0);
         assert_eq!(cfg.queues[1].workload.tasks_per_job, WorkloadSpec::wordcount().tasks_per_job);
         assert!(cfg.queues.iter().all(|q| q.arrival == ArrivalProcess::Closed));
         assert_eq!(cfg.churn, ChurnModel::None);
@@ -397,6 +416,13 @@ mod tests {
         .is_err());
         // dimension mismatch: r=3 workload on the r=2 paper cluster
         assert!(parse_online_config("[[queue]]\nworkload = \"io-heavy-r3\"").is_err());
+        // non-positive queue weights and shard counts are rejected
+        assert!(parse_online_config("[[queue]]\nworkload = \"pi\"\nweight = 0.0").is_err());
+        assert!(parse_online_config("[[queue]]\nworkload = \"pi\"\nweight = -1.0").is_err());
+        assert!(parse_online_config(
+            "[experiment]\nshards = 0\n[[queue]]\nworkload = \"pi\""
+        )
+        .is_err());
         // mixed-dimension cluster
         assert!(parse_online_config(
             "[cluster]\nservers = [\"type-1\", \"trio-io\"]\n[[queue]]\nworkload = \"pi\""

@@ -44,14 +44,22 @@ pub struct IllustrativeTables {
     pub seed: u64,
 }
 
-/// Build the §2 instance.
+/// Build the §2 instance (the paper's φ = 1 everywhere).
 pub fn illustrative_state() -> AllocState {
+    illustrative_state_weighted([1.0, 1.0])
+}
+
+/// The §2 instance with explicit per-framework weights φ. The production
+/// weight path (queue config → `FrameworkEntry.weight` → every criterion's
+/// φ division) flows through here instead of hand-editing entries after
+/// construction.
+pub fn illustrative_state_weighted(phi: [f64; 2]) -> AllocState {
     let mut st = AllocState::new(AgentPool::new(&ServerType::illustrative()));
-    for d in [[5.0, 1.0], [1.0, 5.0]] {
+    for (d, w) in [[5.0, 1.0], [1.0, 5.0]].into_iter().zip(phi) {
         st.add_framework(FrameworkEntry {
             name: "f".into(),
             demand: ResVec::new(&d),
-            weight: 1.0,
+            weight: w,
             active: true,
         });
     }
@@ -198,5 +206,15 @@ mod tests {
     fn csv_has_row_per_policy() {
         let t = run_illustrative(3, 2);
         assert_eq!(t.to_csv().n_rows(), TABLE_POLICIES.len());
+    }
+
+    #[test]
+    fn weighted_state_carries_phi() {
+        let st = illustrative_state_weighted([2.0, 1.0]);
+        assert_eq!(st.framework(0).weight, 2.0);
+        assert_eq!(st.framework(1).weight, 1.0);
+        // and the default construction stays the paper's uniform weights
+        let base = illustrative_state();
+        assert!(base.frameworks().iter().all(|f| f.weight == 1.0));
     }
 }

@@ -12,7 +12,9 @@ use mesos_fair::mesos::AllocatorMode;
 use mesos_fair::metrics::json::Json;
 use mesos_fair::scheduler::{NativeScorer, Scorer, POLICY_NAMES};
 use mesos_fair::sim::online::{OnlineConfig, OnlineSim};
-use mesos_fair::workload::{realize, scenario_config, trace as scenario_trace, SCENARIO_NAMES};
+use mesos_fair::workload::{
+    realize, scenario_config, trace as scenario_trace, RealizedScenario, SCENARIO_NAMES,
+};
 
 fn main() {
     let code = match run() {
@@ -45,6 +47,7 @@ fn run() -> Result<()> {
         Some("figure") => cmd_figure(&args),
         Some("online") => cmd_online(&args),
         Some("scenarios") => cmd_scenarios(&args),
+        Some("bench-diff") => cmd_bench_diff(&args),
         Some("e2e") => cmd_e2e(&args),
         Some("parity") => cmd_parity(&args),
         Some("list") => {
@@ -100,6 +103,7 @@ fn cmd_online(args: &Args) -> Result<()> {
     // realized scenario, so a recorded trace reproduces the run bit-exactly
     let scenario = if let Some(path) = args.flag("replay") {
         let sc = scenario_trace::read_file(path)?;
+        validate_replay(&sc, args)?;
         // the scheduler-side RNG (RRR order, tie-breaks, release jitter)
         // must match the recorded run too, so adopt the trace's seed
         cfg.seed = sc.seed;
@@ -168,9 +172,46 @@ fn cmd_scenarios(args: &Args) -> Result<()> {
     Ok(())
 }
 
+/// `--replay` guard for what only the CLI knows: the user's explicit
+/// `--scenario` / `--seed` flags must agree with the trace header. The
+/// dimensional checks — `(agents, r)` dims and queue count against the
+/// active configuration — are enforced by `OnlineSim::with_scenario*`
+/// itself, so every construction path (CLI replay, TOML configs, library
+/// callers) refuses a mismatched scenario with a clear error.
+fn validate_replay(sc: &RealizedScenario, args: &Args) -> Result<()> {
+    if let Some(name) = args.flag("scenario") {
+        if name != sc.name {
+            return Err(Error::Config(format!(
+                "replay mismatch: the trace records scenario '{}' but --scenario asked for \
+                 '{name}' — drop --scenario or replay the matching trace",
+                sc.name
+            )));
+        }
+    }
+    if args.flag("seed").is_some() {
+        let seed = args.flag_u64("seed", 0)?;
+        if seed != sc.seed {
+            return Err(Error::Config(format!(
+                "replay mismatch: the trace was recorded with seed {:#x} but --seed gave \
+                 {seed:#x} — drop --seed to adopt the trace's",
+                sc.seed
+            )));
+        }
+    }
+    Ok(())
+}
+
 fn build_online_config(args: &Args) -> Result<OnlineConfig> {
+    let shards = args.flag_usize("shards", 1)?;
+    if shards == 0 {
+        return Err(Error::Config("--shards must be >= 1".into()));
+    }
     if let Some(path) = args.flag("config") {
-        return load_online_config(path);
+        let mut cfg = load_online_config(path)?;
+        if args.flag("shards").is_some() {
+            cfg.shards = shards;
+        }
+        return Ok(cfg);
     }
     let policy = args.flag_or("scheduler", "drf");
     let mode = match args.flag_or("mode", "characterized").as_str() {
@@ -179,28 +220,62 @@ fn build_online_config(args: &Args) -> Result<OnlineConfig> {
         other => return Err(Error::Config(format!("unknown mode '{other}'"))),
     };
     let seed = args.flag_u64("seed", 0x5EED)?;
-    if let Some(name) = args.flag("scenario") {
+    let mut cfg = if let Some(name) = args.flag("scenario") {
         // named scenario family; --jobs scales the per-queue job count
         let jobs = args.flag("jobs").map(|_| args.flag_usize("jobs", 0)).transpose()?;
-        return scenario_config(name, &policy, mode, jobs, seed);
-    }
-    let jobs = args.flag_usize("jobs", 50)?;
-    let mut cfg = if let Some(agents) = args.flag("agents") {
+        scenario_config(name, &policy, mode, jobs, seed)?
+    } else if let Some(agents) = args.flag("agents") {
         // the scale scenario family: --agents M [--queues N]
         let agents: usize = agents
             .parse()
             .map_err(|_| Error::Config("--agents expects an integer".into()))?;
         let queues = args.flag_usize("queues", 2 * agents)?;
+        let jobs = args.flag_usize("jobs", 50)?;
         OnlineConfig::scaled(&policy, mode, agents, queues, jobs)
     } else if args.has("staged") {
-        OnlineConfig::paper_staged(&policy, jobs)
+        OnlineConfig::paper_staged(&policy, args.flag_usize("jobs", 50)?)
     } else if args.has("homogeneous") {
-        OnlineConfig::paper_homogeneous(&policy, mode, jobs)
+        OnlineConfig::paper_homogeneous(&policy, mode, args.flag_usize("jobs", 50)?)
     } else {
-        OnlineConfig::paper(&policy, mode, jobs)
+        OnlineConfig::paper(&policy, mode, args.flag_usize("jobs", 50)?)
     };
     cfg.seed = seed;
+    cfg.shards = shards;
     Ok(cfg)
+}
+
+/// CI bench-regression gate: `bench-diff <current.json> <baseline.json>`.
+/// Fails when the joint-argmin medians regress beyond `--max-regress`
+/// (normalized by the same run's full-scan median, so CI hardware
+/// differences don't trip it) or the pruned+sharded speedup drops below
+/// the 5x floor. See `bench::scorer_joint_regressions`.
+fn cmd_bench_diff(args: &Args) -> Result<()> {
+    let current_path = args
+        .positional
+        .first()
+        .ok_or_else(|| Error::Config("bench-diff needs <current.json> <baseline.json>".into()))?;
+    let baseline_path = args
+        .positional
+        .get(1)
+        .ok_or_else(|| Error::Config("bench-diff needs <current.json> <baseline.json>".into()))?;
+    let max_regress: f64 = args
+        .flag_or("max-regress", "0.25")
+        .parse()
+        .map_err(|_| Error::Config("--max-regress expects a number".into()))?;
+    let load = |path: &str| -> Result<Json> {
+        let text = std::fs::read_to_string(path)
+            .map_err(|e| Error::Config(format!("cannot read {path}: {e}")))?;
+        Json::parse(&text)
+    };
+    let current = load(current_path)?;
+    let baseline = load(baseline_path)?;
+    let fails = mesos_fair::bench::scorer_joint_regressions(&current, &baseline, max_regress)?;
+    if fails.is_empty() {
+        println!("bench-diff OK: joint medians within {:.0}% of baseline", max_regress * 100.0);
+        Ok(())
+    } else {
+        Err(Error::Experiment(fails.join("; ")))
+    }
 }
 
 fn print_online(r: &mesos_fair::sim::online::OnlineResult) {

@@ -206,6 +206,12 @@ impl ScoreView for MaskedScores<'_> {
             None => self.base.feas(n, i),
         }
     }
+    #[inline]
+    fn overridden(&self, n: usize) -> bool {
+        // priority rows score NEW_FRAMEWORK_SCORE (below every cached
+        // value), so the engine's bounds do not cover them
+        self.mask.unknown[n]
+    }
 }
 
 /// One allocation cycle. Returns the grants applied. `no_inference[n]` marks
@@ -223,6 +229,7 @@ pub fn allocation_cycle(
 ) -> Result<Vec<Grant>> {
     let mut grants = Vec::new();
     let mut mask = CycleMask::new(state, handler, mode, no_inference);
+    let shards = engine.shards();
     // Hard bound: each iteration either grants (bounded by capacity) or
     // declines (bounded by n_frameworks * n_agents pairs).
     let max_iters = 10_000.max(4 * state.n_frameworks() * state.pool.len());
@@ -235,9 +242,11 @@ pub fn allocation_cycle(
         // The engine re-scores only what the last grant dirtied;
         // decline-only iterations are pure cache hits. The handler masks
         // are layered over the cached tensors via MaskedScores — nothing
-        // is cloned and the cache is never written.
+        // is cloned and the cache is never written. Joint picks go through
+        // the engine's pruned candidate index (bit-identical to the full
+        // n×m scan; see Policy::pick_joint_pruned).
         let pick = {
-            let (si, set) = engine.scores(state)?;
+            let (si, set, bounds) = engine.scores_with_bounds(state)?;
             let view = MaskedScores { base: set, mask: &mask };
             match policy.kind {
                 PolicyKind::PerAgent => {
@@ -251,7 +260,9 @@ pub fn allocation_cycle(
                     }
                     found
                 }
-                PolicyKind::Joint => policy.pick_joint(&view, si, &candidates),
+                PolicyKind::Joint => {
+                    policy.pick_joint_pruned(&view, si, &candidates, bounds, shards)
+                }
                 PolicyKind::BestFit => {
                     pick_bestfit_with_fallback(policy, &view, si, &candidates, no_inference, rng)
                 }

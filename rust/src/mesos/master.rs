@@ -65,6 +65,12 @@ impl Master {
         self.inference = rule;
     }
 
+    /// Parallel scoring/argmin shards for the engine (1 = serial; grants
+    /// are bit-identical at any count).
+    pub fn set_shards(&mut self, shards: usize) {
+        self.engine.set_shards(shards);
+    }
+
     /// `(full, incremental)` scorer pass counts (native engine only).
     pub fn rescore_stats(&self) -> Option<(u64, u64)> {
         self.engine.rescore_stats()

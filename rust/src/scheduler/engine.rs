@@ -25,10 +25,165 @@
 //! recompute (property-tested in `testing::prop`). The paper's ≤8-agent
 //! configurations therefore reproduce exactly, while 256-agent × 512-
 //! framework scenarios become tractable.
+//!
+//! ## The pruned candidate index ([`JointBounds`])
+//!
+//! At ≥1k frameworks the joint `(framework, agent)` argmin — not the
+//! re-scoring — dominates a cycle: every decision scans `n × m` pairs. The
+//! engine therefore maintains, next to the cached tensors, a per-framework
+//! *best-agent bound* for each pair criterion:
+//!
+//! ```text
+//! bound_crit[n] = min_i  crit(n, i)        (over ALL agents, masked or not)
+//! ```
+//!
+//! **Invariant:** `bound_crit[n]` is always ≤ the criterion score of every
+//! `(n, i)` pair a policy can read from the *cached* tensors — candidate
+//! subsets and per-cycle handler masks only ever *remove* pairs or flip
+//! feasibility off, never lower a base score, so the row minimum over all
+//! agents stays an admissible lower bound under any mask. The one exception
+//! is a view that rewrites scores *below* the cache (the allocator's
+//! unknown-demand priority rows); such rows self-identify through
+//! [`crate::scheduler::ScoreView::overridden`] and are always examined.
+//! [`crate::scheduler::Policy::pick_joint_pruned`] consults frameworks in
+//! ascending-bound order and stops as soon as the bound exceeds the current
+//! best score, which cannot skip any pair tied with or better than the
+//! final minimum — so the pruned argmin is bit-identical to the full scan.
+//!
+//! Maintenance mirrors the dirty log: rows whose `x_n` changed are
+//! rebuilt (`O(m)`); for everyone else only the dirty agents' columns are
+//! patched — a decrease updates the bound in `O(1)`, an increase at the
+//! remembered argmin column triggers an `O(m)` row rescan. Structural
+//! changes rebuild the whole index alongside the tensors.
+//!
+//! ## Parallel scoring shards
+//!
+//! With [`ScoringEngine::set_shards`] `> 1`, full recomputes and
+//! incremental patches partition their framework rows across
+//! `std::thread::scope` workers (each writing an exclusive
+//! `ScoreRowsMut` row-range view — race-free by construction, no new
+//! dependencies). Rows are arithmetically independent, so the tensors are
+//! bit-identical at any shard count.
 
 use crate::error::Result;
+use crate::scheduler::policy::Criterion;
 use crate::scheduler::scorer::NativeScorer;
-use crate::scheduler::{rpsdsf, AllocState, DirtyLog, ScoreInputs, ScoreSet, Scorer};
+use crate::scheduler::{rpsdsf, AllocState, DirtyLog, ScoreInputs, ScoreRowsMut, ScoreSet, Scorer};
+use crate::BIG;
+
+/// One fully refilled row's `(row, (psdsf_min, psdsf_arg, rpsdsf_min,
+/// rpsdsf_arg))`, accumulated in-pass by the fill so the pruning index
+/// never re-reads freshly written tensors serially.
+type RowMinima = (usize, (f64, usize, f64, usize));
+
+/// Per-framework best-agent lower bounds for the joint argmin — the pruned
+/// candidate index (see the module docs for the invariant it maintains).
+#[derive(Debug, Clone, Default)]
+pub struct JointBounds {
+    m: usize,
+    psdsf_min: Vec<f64>,
+    psdsf_arg: Vec<usize>,
+    rpsdsf_min: Vec<f64>,
+    rpsdsf_arg: Vec<usize>,
+}
+
+impl JointBounds {
+    /// Build the index for a freshly computed score set (test helper — the
+    /// engines maintain their index incrementally).
+    #[cfg(test)]
+    pub(crate) fn from_set(set: &ScoreSet) -> JointBounds {
+        let mut b = JointBounds::default();
+        b.rebuild(set);
+        b
+    }
+
+    /// Recompute every row bound from `set`.
+    pub(crate) fn rebuild(&mut self, set: &ScoreSet) {
+        let n = set.n();
+        self.m = set.m();
+        self.psdsf_min.clear();
+        self.psdsf_min.resize(n, BIG);
+        self.psdsf_arg.clear();
+        self.psdsf_arg.resize(n, 0);
+        self.rpsdsf_min.clear();
+        self.rpsdsf_min.resize(n, BIG);
+        self.rpsdsf_arg.clear();
+        self.rpsdsf_arg.resize(n, 0);
+        for k in 0..n {
+            self.rebuild_row(set, k);
+        }
+    }
+
+    /// Rescan one framework row (its `x_n` changed, or a patched column
+    /// invalidated the remembered argmin).
+    pub(crate) fn rebuild_row(&mut self, set: &ScoreSet, n: usize) {
+        let mut pm = BIG;
+        let mut pa = 0usize;
+        let mut rm = BIG;
+        let mut ra = 0usize;
+        for i in 0..self.m {
+            let p = set.psdsf(n, i);
+            if p < pm {
+                pm = p;
+                pa = i;
+            }
+            let v = set.rpsdsf(n, i);
+            if v < rm {
+                rm = v;
+                ra = i;
+            }
+        }
+        self.psdsf_min[n] = pm;
+        self.psdsf_arg[n] = pa;
+        self.rpsdsf_min[n] = rm;
+        self.rpsdsf_arg[n] = ra;
+    }
+
+    /// Overwrite one row's cached minima (computed in-pass by the fill,
+    /// with identical ascending-agent `<` accumulation — see
+    /// `NativeScorer::fill_row_rows_with_minima`).
+    pub(crate) fn set_row(&mut self, n: usize, pm: f64, pa: usize, rm: f64, ra: usize) {
+        self.psdsf_min[n] = pm;
+        self.psdsf_arg[n] = pa;
+        self.rpsdsf_min[n] = rm;
+        self.rpsdsf_arg[n] = ra;
+    }
+
+    /// Fold one freshly patched `(n, i)` cell into the row bounds. Called
+    /// for every dirty agent of a row, so a stale remembered argmin is
+    /// always caught when its own column is processed.
+    pub(crate) fn patch_pair(&mut self, set: &ScoreSet, n: usize, i: usize) {
+        let p = set.psdsf(n, i);
+        let v = set.rpsdsf(n, i);
+        if (p > self.psdsf_min[n] && self.psdsf_arg[n] == i)
+            || (v > self.rpsdsf_min[n] && self.rpsdsf_arg[n] == i)
+        {
+            // the previous row minimum rose: rescan the row
+            self.rebuild_row(set, n);
+            return;
+        }
+        if p <= self.psdsf_min[n] {
+            self.psdsf_min[n] = p;
+            self.psdsf_arg[n] = i;
+        }
+        if v <= self.rpsdsf_min[n] {
+            self.rpsdsf_min[n] = v;
+            self.rpsdsf_arg[n] = i;
+        }
+    }
+
+    /// Lower bound on `criterion.score(set, n, i)` over every agent `i`.
+    /// Exact row minimum for the per-server criteria; the global criteria
+    /// score identically on every agent, so no index is kept and the bound
+    /// is conservative (`-BIG`: such rows are never pruned).
+    pub fn row_bound(&self, criterion: Criterion, n: usize) -> f64 {
+        match criterion {
+            Criterion::PsDsf => self.psdsf_min[n],
+            Criterion::RPsDsf => self.rpsdsf_min[n],
+            Criterion::Drf | Criterion::Tsf => -BIG,
+        }
+    }
+}
 
 /// Incrementally-maintained native scoring state.
 #[derive(Debug, Clone)]
@@ -37,6 +192,10 @@ pub struct IncrementalScorer {
     set: ScoreSet,
     /// Cached per-agent residuals, flat `m × r`.
     res: Vec<f64>,
+    /// The pruned candidate index, kept in sync with `set`.
+    bounds: JointBounds,
+    /// Parallel scoring shards (1 = serial).
+    shards: usize,
     valid: bool,
     /// Full rebuild+recompute passes performed (perf accounting).
     pub full_rescores: u64,
@@ -58,10 +217,27 @@ impl IncrementalScorer {
             si: ScoreInputs::empty(),
             set: ScoreSet::sized(0, 0),
             res: Vec::new(),
+            bounds: JointBounds::default(),
+            shards: 1,
             valid: false,
             full_rescores: 0,
             incremental_rescores: 0,
             cached_hits: 0,
+        }
+    }
+
+    /// Set the parallel scoring shard count (1 = serial; tensors are
+    /// bit-identical at any count).
+    pub fn set_shards(&mut self, shards: usize) {
+        self.shards = shards.max(1);
+    }
+
+    /// Shards actually worth spawning for the current instance.
+    fn effective_shards(&self) -> usize {
+        if self.shards > 1 && self.si.n() >= self.shards {
+            self.shards
+        } else {
+            1
         }
     }
 
@@ -72,7 +248,12 @@ impl IncrementalScorer {
         if !self.valid || dirty.structural || !self.si.matches_shape(state) {
             self.si = state.score_inputs();
             self.res = rpsdsf::residuals(&self.si);
-            self.set = NativeScorer::compute_with_residuals(&self.si, &self.res);
+            self.set = NativeScorer::compute_with_residuals_sharded(
+                &self.si,
+                &self.res,
+                self.effective_shards(),
+            );
+            self.bounds.rebuild(&self.set);
             self.valid = true;
             self.full_rescores += 1;
         } else if !dirty.is_clean() {
@@ -94,15 +275,63 @@ impl IncrementalScorer {
         for &i in &dirty.agents {
             rpsdsf::agent_residuals_into(&self.si, i, &mut self.res[i * r..(i + 1) * r]);
         }
-        for n in 0..self.si.n() {
-            let xn_changed = dirty.frameworks.iter().any(|&dn| self.si.same_role(dn, n));
-            if xn_changed {
-                // every tensor entry of the row depends on x_n
-                NativeScorer::fill_row(&self.si, &self.res, &mut self.set, n);
+        let n_all = self.si.n();
+        // rows sharing a role with a dirty framework: their x_n changed, so
+        // every tensor entry of the row changes
+        let full_row: Vec<bool> = (0..n_all)
+            .map(|n| dirty.frameworks.iter().any(|&dn| self.si.same_role(dn, n)))
+            .collect();
+        let shards = self.effective_shards();
+        // Fill the dirty entries shard-by-shard (inline when serial). Fully
+        // refilled rows report their criterion minima from the same pass,
+        // so the pruning index update below is O(full rows), not a serial
+        // O(full rows × m) re-read of the fresh tensors — that pass would
+        // otherwise cap the parallel speedup when roles make every row full.
+        let minima: Vec<RowMinima> = {
+            let si = &self.si;
+            let res = &self.res[..];
+            let agents = &dirty.agents;
+            let full = &full_row;
+            let views = self.set.split_rows_mut(shards);
+            let process = |mut v: ScoreRowsMut<'_>| -> Vec<RowMinima> {
+                let mut out = Vec::new();
+                for n in v.n0()..v.n1() {
+                    if full[n] {
+                        let mins = NativeScorer::fill_row_rows_with_minima(si, res, &mut v, n);
+                        out.push((n, mins));
+                    } else {
+                        // only the residual-dependent entries on dirty
+                        // agents change
+                        for &i in agents {
+                            NativeScorer::fill_pair_rows(si, res, &mut v, n, i);
+                        }
+                    }
+                }
+                out
+            };
+            if shards <= 1 {
+                views.into_iter().flat_map(&process).collect()
             } else {
-                // only the residual-dependent entries on dirty agents change
+                let process = &process;
+                let mut all = Vec::new();
+                std::thread::scope(|s| {
+                    let handles: Vec<_> =
+                        views.into_iter().map(|v| s.spawn(move || process(v))).collect();
+                    for h in handles {
+                        all.extend(h.join().expect("scoring shard panicked"));
+                    }
+                });
+                all
+            }
+        };
+        // keep the pruned candidate index in sync with the patched tensors
+        for (n, (pm, pa, rm, ra)) in minima {
+            self.bounds.set_row(n, pm, pa, rm, ra);
+        }
+        for (n, &is_full) in full_row.iter().enumerate() {
+            if !is_full {
                 for &i in &dirty.agents {
-                    NativeScorer::fill_pair(&self.si, &self.res, &mut self.set, n, i);
+                    self.bounds.patch_pair(&self.set, n, i);
                 }
             }
         }
@@ -121,17 +350,25 @@ impl IncrementalScorer {
 /// changed, exactly like the old allocator-local cache.
 pub struct ScoringEngine {
     inner: EngineImpl,
+    /// Parallel shard count handed to scoring and the joint argmin.
+    shards: usize,
 }
 
 enum EngineImpl {
     Incremental(IncrementalScorer),
-    External { scorer: Box<dyn Scorer>, si: ScoreInputs, set: ScoreSet, valid: bool },
+    External {
+        scorer: Box<dyn Scorer>,
+        si: ScoreInputs,
+        set: ScoreSet,
+        bounds: JointBounds,
+        valid: bool,
+    },
 }
 
 impl ScoringEngine {
     /// The default engine: native math, incremental re-scoring.
     pub fn native() -> Self {
-        ScoringEngine { inner: EngineImpl::Incremental(IncrementalScorer::new()) }
+        ScoringEngine { inner: EngineImpl::Incremental(IncrementalScorer::new()), shards: 1 }
     }
 
     /// Drive an explicit backend with full (but cached) recomputes. Use
@@ -143,9 +380,25 @@ impl ScoringEngine {
                 scorer,
                 si: ScoreInputs::empty(),
                 set: ScoreSet::sized(0, 0),
+                bounds: JointBounds::default(),
                 valid: false,
             },
+            shards: 1,
         }
+    }
+
+    /// Set the parallel shard count for scoring and the joint argmin
+    /// (1 = serial; results are bit-identical at any count).
+    pub fn set_shards(&mut self, shards: usize) {
+        self.shards = shards.max(1);
+        if let EngineImpl::Incremental(inc) = &mut self.inner {
+            inc.set_shards(self.shards);
+        }
+    }
+
+    /// The configured shard count.
+    pub fn shards(&self) -> usize {
+        self.shards
     }
 
     /// Build from a backend, routing the native scorer through the
@@ -191,16 +444,31 @@ impl ScoringEngine {
     /// since the last call. Drains the state's dirty log — one state should
     /// be observed by one engine.
     pub fn scores(&mut self, state: &mut AllocState) -> Result<(&ScoreInputs, &ScoreSet)> {
+        let (si, set, _) = self.scores_with_bounds(state)?;
+        Ok((si, set))
+    }
+
+    /// Like [`ScoringEngine::scores`], additionally returning the pruned
+    /// candidate index maintained alongside the tensors — what
+    /// [`crate::scheduler::Policy::pick_joint_pruned`] consumes.
+    pub fn scores_with_bounds(
+        &mut self,
+        state: &mut AllocState,
+    ) -> Result<(&ScoreInputs, &ScoreSet, &JointBounds)> {
         match &mut self.inner {
-            EngineImpl::Incremental(inc) => Ok(inc.rescore(state)),
-            EngineImpl::External { scorer, si, set, valid } => {
+            EngineImpl::Incremental(inc) => {
+                inc.rescore(state);
+                Ok((&inc.si, &inc.set, &inc.bounds))
+            }
+            EngineImpl::External { scorer, si, set, bounds, valid } => {
                 let dirty = state.take_dirty();
                 if !*valid || !dirty.is_clean() || !si.matches_shape(state) {
                     *si = state.score_inputs();
                     *set = scorer.score(si)?;
+                    bounds.rebuild(set);
                     *valid = true;
                 }
-                Ok((&*si, &*set))
+                Ok((&*si, &*set, &*bounds))
             }
         }
     }
@@ -320,6 +588,73 @@ mod tests {
         assert_eq!(si.ctot(0), 100.0, "cache rebuilt from the drifted pool");
         assert_eq!(set, &NativeScorer::compute(&st.score_inputs()));
         assert_eq!(inc.full_rescores, 2);
+    }
+
+    #[test]
+    fn joint_bounds_stay_exact_row_minima() {
+        // after a mix of places/unplaces the index must hold the exact
+        // per-row minima of both pair criteria (the invariant pruning needs)
+        let mut rng = crate::rng::Rng::new(0xB0D5);
+        let mut st = crate::testing::scaled_state_with_load(5, 9, 20, &mut rng);
+        let mut engine = ScoringEngine::native();
+        engine.scores_with_bounds(&mut st).unwrap();
+        for step in 0..30 {
+            let (fw, ag) = (rng.index(9), rng.index(5));
+            if rng.chance(0.3) && st.tasks_on(fw, ag) >= 1.0 {
+                let d = st.framework(fw).demand;
+                st.unplace(fw, ag, &d, 1.0).unwrap();
+            } else if st.task_fits(fw, ag) {
+                st.place_task(fw, ag).unwrap();
+            }
+            let (_, set, bounds) = engine.scores_with_bounds(&mut st).unwrap();
+            for n in 0..set.n() {
+                let pmin = (0..set.m()).map(|i| set.psdsf(n, i)).fold(crate::BIG, f64::min);
+                let rmin = (0..set.m()).map(|i| set.rpsdsf(n, i)).fold(crate::BIG, f64::min);
+                assert_eq!(
+                    bounds.row_bound(Criterion::PsDsf, n),
+                    pmin,
+                    "psdsf bound row {n} step {step}"
+                );
+                assert_eq!(
+                    bounds.row_bound(Criterion::RPsDsf, n),
+                    rmin,
+                    "rpsdsf bound row {n} step {step}"
+                );
+            }
+        }
+    }
+
+    #[test]
+    fn sharded_engine_bit_identical_to_serial() {
+        let mut rng = crate::rng::Rng::new(0x54A2);
+        let mut st_a = crate::testing::scaled_state_with_load(6, 12, 24, &mut rng);
+        let mut st_b = st_a.clone();
+        let mut serial = ScoringEngine::native();
+        let mut sharded = ScoringEngine::native();
+        sharded.set_shards(4);
+        assert_eq!(sharded.shards(), 4);
+        for step in 0..25 {
+            let (fw, ag) = (rng.index(12), rng.index(6));
+            if st_a.task_fits(fw, ag) {
+                st_a.place_task(fw, ag).unwrap();
+                st_b.place_task(fw, ag).unwrap();
+            }
+            let set_a = serial.scores(&mut st_a).unwrap().1.clone();
+            let set_b = sharded.scores(&mut st_b).unwrap().1.clone();
+            assert_eq!(set_a, set_b, "tensors diverged at step {step}");
+            // the sharded engine's bounds must drive identical pruned picks
+            let p = crate::scheduler::policy_by_name("rpsdsf").unwrap();
+            let cands: Vec<usize> = (0..6).collect();
+            let pick_a = {
+                let (si, set, b) = serial.scores_with_bounds(&mut st_a).unwrap();
+                p.pick_joint_pruned(set, si, &cands, b, 1)
+            };
+            let pick_b = {
+                let (si, set, b) = sharded.scores_with_bounds(&mut st_b).unwrap();
+                p.pick_joint_pruned(set, si, &cands, b, 4)
+            };
+            assert_eq!(pick_a, pick_b, "pruned picks diverged at step {step}");
+        }
     }
 
     #[test]

@@ -32,6 +32,18 @@
 //! routes the native backend through the incremental path and any external
 //! backend (e.g. the HLO scorer) through cached full recomputes.
 //!
+//! ## Candidate pruning and parallel shards
+//!
+//! The engine additionally maintains [`engine::JointBounds`] — per-framework
+//! best-agent lower bounds over the pair criteria — so
+//! [`Policy::pick_joint_pruned`] can skip every framework whose cached bound
+//! cannot beat the current best instead of scanning all `n × m` pairs (the
+//! ≥1k-framework hot path). Scoring and the joint argmin both shard across
+//! `std::thread::scope` workers ([`ScoringEngine::set_shards`]); shard-local
+//! argmins merge by the full `(score, tie, framework, agent)` key, so
+//! results are bit-identical to the serial scan at any shard count
+//! (property-tested in `testing::prop`).
+//!
 //! * [`scorer::NativeScorer`] — pure-rust scoring (mirrors the L1 kernel).
 //! * `runtime::scorer::HloScorer` — the same math through the AOT-compiled
 //!   Pallas kernel via PJRT (parity-tested in `rust/tests/runtime_parity.rs`,
@@ -51,8 +63,8 @@ pub mod scorer;
 pub mod server_select;
 pub mod tsf;
 
-pub use engine::{IncrementalScorer, ScoringEngine};
-pub use policy::{BestFitMetric, Policy, PolicyKind};
+pub use engine::{IncrementalScorer, JointBounds, ScoringEngine};
+pub use policy::{BestFitMetric, Criterion, Policy, PolicyKind};
 pub use registry::{policy_by_name, POLICY_NAMES};
 pub use scorer::NativeScorer;
 
@@ -671,6 +683,120 @@ impl ScoreSet {
         let k = self.at(n, i);
         self.feas[k] = v;
     }
+
+    /// Split the tensors into up to `shards` disjoint, contiguous row-range
+    /// views — what each parallel scoring shard writes. Rows are
+    /// independent, so filling the views concurrently is race-free by
+    /// construction (each view owns exclusive `&mut` sub-slices).
+    pub(crate) fn split_rows_mut(&mut self, shards: usize) -> Vec<ScoreRowsMut<'_>> {
+        let shards = shards.max(1).min(self.n.max(1));
+        let per = self.n.div_ceil(shards);
+        let m = self.m;
+        let mut out = Vec::with_capacity(shards);
+        let mut drf = self.drf.as_mut_slice();
+        let mut tsf = self.tsf.as_mut_slice();
+        let mut psdsf = self.psdsf.as_mut_slice();
+        let mut rpsdsf = self.rpsdsf.as_mut_slice();
+        let mut fit = self.fit.as_mut_slice();
+        let mut feas = self.feas.as_mut_slice();
+        let mut n0 = 0usize;
+        while n0 < self.n {
+            let rows = per.min(self.n - n0);
+            let (d_head, d_tail) = std::mem::take(&mut drf).split_at_mut(rows);
+            drf = d_tail;
+            let (t_head, t_tail) = std::mem::take(&mut tsf).split_at_mut(rows);
+            tsf = t_tail;
+            let (p_head, p_tail) = std::mem::take(&mut psdsf).split_at_mut(rows * m);
+            psdsf = p_tail;
+            let (r_head, r_tail) = std::mem::take(&mut rpsdsf).split_at_mut(rows * m);
+            rpsdsf = r_tail;
+            let (f_head, f_tail) = std::mem::take(&mut fit).split_at_mut(rows * m);
+            fit = f_tail;
+            let (e_head, e_tail) = std::mem::take(&mut feas).split_at_mut(rows * m);
+            feas = e_tail;
+            out.push(ScoreRowsMut {
+                n0,
+                n1: n0 + rows,
+                m,
+                drf: d_head,
+                tsf: t_head,
+                psdsf: p_head,
+                rpsdsf: r_head,
+                fit: f_head,
+                feas: e_head,
+            });
+            n0 += rows;
+        }
+        out
+    }
+}
+
+/// One parallel scoring shard's exclusive view over a contiguous row range
+/// `[n0, n1)` of a [`ScoreSet`]'s tensors. Rows are addressed by their
+/// absolute framework index, so the fill helpers are shard-agnostic.
+#[derive(Debug)]
+pub(crate) struct ScoreRowsMut<'a> {
+    n0: usize,
+    n1: usize,
+    m: usize,
+    drf: &'a mut [f64],
+    tsf: &'a mut [f64],
+    psdsf: &'a mut [f64],
+    rpsdsf: &'a mut [f64],
+    fit: &'a mut [f64],
+    feas: &'a mut [bool],
+}
+
+impl ScoreRowsMut<'_> {
+    /// First (absolute) row of this shard.
+    pub(crate) fn n0(&self) -> usize {
+        self.n0
+    }
+
+    /// One past the last (absolute) row of this shard.
+    pub(crate) fn n1(&self) -> usize {
+        self.n1
+    }
+
+    #[inline]
+    fn at(&self, n: usize, i: usize) -> usize {
+        debug_assert!((self.n0..self.n1).contains(&n), "row {n} outside shard");
+        (n - self.n0) * self.m + i
+    }
+
+    #[inline]
+    pub(crate) fn set_drf(&mut self, n: usize, v: f64) {
+        self.drf[n - self.n0] = v;
+    }
+
+    #[inline]
+    pub(crate) fn set_tsf(&mut self, n: usize, v: f64) {
+        self.tsf[n - self.n0] = v;
+    }
+
+    #[inline]
+    pub(crate) fn set_psdsf(&mut self, n: usize, i: usize, v: f64) {
+        let k = self.at(n, i);
+        self.psdsf[k] = v;
+    }
+
+    #[inline]
+    pub(crate) fn set_rpsdsf(&mut self, n: usize, i: usize, v: f64) {
+        let k = self.at(n, i);
+        self.rpsdsf[k] = v;
+    }
+
+    #[inline]
+    pub(crate) fn set_fit(&mut self, n: usize, i: usize, v: f64) {
+        let k = self.at(n, i);
+        self.fit[k] = v;
+    }
+
+    #[inline]
+    pub(crate) fn set_feas(&mut self, n: usize, i: usize, v: bool) {
+        let k = self.at(n, i);
+        self.feas[k] = v;
+    }
 }
 
 /// Read-only access to score tensors — what the policies' argmin selection
@@ -692,6 +818,14 @@ pub trait ScoreView {
     fn fit(&self, n: usize, i: usize) -> f64;
     /// One-more-task feasibility.
     fn feas(&self, n: usize, i: usize) -> bool;
+    /// `true` when the view overrides row `n`'s scores *below* the cached
+    /// base tensors (e.g. the allocator's unknown-demand priority rows).
+    /// Pruning indexes built over the base tensors are not lower bounds for
+    /// such rows, so [`Policy::pick_joint_pruned`] must always examine
+    /// them. Plain [`ScoreSet`]s never override.
+    fn overridden(&self, _n: usize) -> bool {
+        false
+    }
 }
 
 impl ScoreView for ScoreSet {

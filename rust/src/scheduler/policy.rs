@@ -18,6 +18,7 @@
 pub use crate::scheduler::server_select::BestFitMetric;
 
 use crate::rng::Rng;
+use crate::scheduler::engine::JointBounds;
 use crate::scheduler::server_select;
 use crate::scheduler::{ScoreInputs, ScoreView};
 use crate::BIG;
@@ -152,22 +153,136 @@ impl Policy {
     ) -> Option<(usize, usize)> {
         let mut best: Option<(f64, f64, usize, usize)> = None;
         for n in 0..si.n() {
-            for &i in candidates {
-                if !set.feas(n, i) {
-                    continue;
+            self.scan_joint_row(set, n, candidates, &mut best);
+        }
+        best.map(|(_, _, n, i)| (n, i))
+    }
+
+    /// Fold framework `n`'s candidate pairs into the running joint argmin.
+    /// The `(score, tie, n, i)` key is a total order over distinct pairs,
+    /// so the resulting minimum is independent of scan order — the property
+    /// both the pruned scan and the shard merge rely on.
+    fn scan_joint_row<S: ScoreView + ?Sized>(
+        &self,
+        set: &S,
+        n: usize,
+        candidates: &[usize],
+        best: &mut Option<(f64, f64, usize, usize)>,
+    ) {
+        for &i in candidates {
+            if !set.feas(n, i) {
+                continue;
+            }
+            let s = self.criterion.score(set, n, i);
+            if s >= BIG {
+                continue;
+            }
+            let tie = match self.criterion {
+                Criterion::RPsDsf => set.fit(n, i),
+                _ => 0.0,
+            };
+            match *best {
+                Some((b, bt, bn, bi)) if (s, tie, n, i) >= (b, bt, bn, bi) => {}
+                _ => *best = Some((s, tie, n, i)),
+            }
+        }
+    }
+
+    /// [`Policy::pick_joint`] through the engine's pruned candidate index,
+    /// optionally sharded — **bit-identical to the full scan** at any shard
+    /// count.
+    ///
+    /// Serial path: frameworks are visited in ascending-bound order and the
+    /// scan stops once a framework's bound exceeds the current best score —
+    /// every pair scoring ≤ the final minimum lives in a visited row (a
+    /// skipped row's bound, hence its every score, is strictly above it),
+    /// so the `(score, tie, n, i)` minimum over visited rows equals the
+    /// full-scan minimum, ties included.
+    ///
+    /// Sharded path: an incumbent is seeded from the globally best-bounded
+    /// row, contiguous row ranges then scan in parallel (each pruning
+    /// against its own monotonically decreasing local best, which never
+    /// drops below the global minimum — the same skip argument applies),
+    /// and shard-local minima merge by the full key.
+    ///
+    /// Rows a view overrides below the cached tensors
+    /// ([`ScoreView::overridden`], e.g. the allocator's unknown-demand
+    /// priority rows) are never pruned: their bound is taken as `-BIG`.
+    pub fn pick_joint_pruned<S: ScoreView + Sync + ?Sized>(
+        &self,
+        set: &S,
+        si: &ScoreInputs,
+        candidates: &[usize],
+        bounds: &JointBounds,
+        shards: usize,
+    ) -> Option<(usize, usize)> {
+        let n_all = si.n();
+        if n_all == 0 || candidates.is_empty() {
+            return None;
+        }
+        let crit = self.criterion;
+        let row_bound = |k: usize| -> f64 {
+            if set.overridden(k) {
+                -BIG
+            } else {
+                bounds.row_bound(crit, k)
+            }
+        };
+        if shards <= 1 || n_all < shards {
+            let mut order: Vec<(f64, usize)> = (0..n_all).map(|k| (row_bound(k), k)).collect();
+            order.sort_by(|a, b| a.0.total_cmp(&b.0).then(a.1.cmp(&b.1)));
+            let mut best: Option<(f64, f64, usize, usize)> = None;
+            for &(bound, k) in &order {
+                if let Some((bs, _, _, _)) = best {
+                    if bound > bs {
+                        break;
+                    }
                 }
-                let s = self.criterion.score(set, n, i);
-                if s >= BIG {
-                    continue;
-                }
-                let tie = match self.criterion {
-                    Criterion::RPsDsf => set.fit(n, i),
-                    _ => 0.0,
-                };
-                match best {
-                    Some((b, bt, bn, bi)) if (s, tie, n, i) >= (b, bt, bn, bi) => {}
-                    _ => best = Some((s, tie, n, i)),
-                }
+                self.scan_joint_row(set, k, candidates, &mut best);
+            }
+            return best.map(|(_, _, n, i)| (n, i));
+        }
+        // seed the shared incumbent from the globally best-bounded row
+        let seed_row = (0..n_all)
+            .min_by(|&a, &b| row_bound(a).total_cmp(&row_bound(b)).then(a.cmp(&b)))
+            .expect("n_all > 0");
+        let mut incumbent: Option<(f64, f64, usize, usize)> = None;
+        self.scan_joint_row(set, seed_row, candidates, &mut incumbent);
+        let chunk = n_all.div_ceil(shards);
+        let mut locals: Vec<Option<(f64, f64, usize, usize)>> = Vec::with_capacity(shards);
+        std::thread::scope(|sc| {
+            let mut handles = Vec::with_capacity(shards);
+            let mut n0 = 0usize;
+            while n0 < n_all {
+                let n1 = (n0 + chunk).min(n_all);
+                handles.push(sc.spawn(move || {
+                    let mut best = incumbent;
+                    for k in n0..n1 {
+                        if let Some((bs, _, _, _)) = best {
+                            let bound = if set.overridden(k) {
+                                -BIG
+                            } else {
+                                bounds.row_bound(crit, k)
+                            };
+                            if bound > bs {
+                                continue;
+                            }
+                        }
+                        self.scan_joint_row(set, k, candidates, &mut best);
+                    }
+                    best
+                }));
+                n0 = n1;
+            }
+            for h in handles {
+                locals.push(h.join().expect("scoring shard panicked"));
+            }
+        });
+        let mut best = incumbent;
+        for local in locals.into_iter().flatten() {
+            match best {
+                Some(b) if local >= b => {}
+                _ => best = Some(local),
             }
         }
         best.map(|(_, _, n, i)| (n, i))
@@ -378,5 +493,48 @@ mod tests {
         // across both agents, the best profile match overall is picked first
         let (n, i) = p.pick_joint(&set, &si, &[0, 1]).unwrap();
         assert_eq!((n, i), (0, 0), "f1 (5,1) on the cpu-rich server is the tightest match");
+    }
+
+    #[test]
+    fn pruned_pick_matches_full_scan_including_ties() {
+        use crate::scheduler::engine::JointBounds;
+        // zero-allocation states are all-ties (every feasible pair scores
+        // 0) — the hardest case for pruning, which must not skip tied rows
+        for placements in [vec![], vec![(0, 0, 1)], vec![(0, 0, 3), (1, 1, 2)]] {
+            let st = illustrative(&placements);
+            let si = st.score_inputs();
+            let set = NativeScorer::compute(&si);
+            let bounds = JointBounds::from_set(&set);
+            for p in [
+                Policy::new("psdsf", Criterion::PsDsf, PolicyKind::Joint),
+                Policy::new("rpsdsf", Criterion::RPsDsf, PolicyKind::Joint),
+            ] {
+                for cands in [vec![0, 1], vec![1], vec![0], vec![]] {
+                    let full = p.pick_joint(&set, &si, &cands);
+                    for shards in [1, 2, 8] {
+                        assert_eq!(
+                            p.pick_joint_pruned(&set, &si, &cands, &bounds, shards),
+                            full,
+                            "{} cands {cands:?} shards {shards} x {placements:?}",
+                            p.name
+                        );
+                    }
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn pruned_pick_handles_saturated_state() {
+        use crate::scheduler::engine::JointBounds;
+        let st = illustrative(&[(0, 0, 20), (1, 1, 20)]);
+        let si = st.score_inputs();
+        let set = NativeScorer::compute(&si);
+        let bounds = JointBounds::from_set(&set);
+        let p = Policy::new("psdsf", Criterion::PsDsf, PolicyKind::Joint);
+        assert_eq!(p.pick_joint(&set, &si, &[0, 1]), None);
+        for shards in [1, 2, 8] {
+            assert_eq!(p.pick_joint_pruned(&set, &si, &[0, 1], &bounds, shards), None);
+        }
     }
 }

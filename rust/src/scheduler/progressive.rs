@@ -76,10 +76,15 @@ pub fn progressive_fill(
         },
         PolicyKind::Joint | PolicyKind::BestFit => loop {
             let candidates = state.pool.registered_ids();
+            let shards = engine.shards();
             let pick = {
-                let (si, set) = engine.scores(state)?;
+                let (si, set, bounds) = engine.scores_with_bounds(state)?;
                 match policy.kind {
-                    PolicyKind::Joint => policy.pick_joint(set, si, &candidates),
+                    // the pruned index consults only frameworks whose cached
+                    // bound can beat the current best — bit-identical picks
+                    PolicyKind::Joint => {
+                        policy.pick_joint_pruned(set, si, &candidates, bounds, shards)
+                    }
                     PolicyKind::BestFit => policy.pick_bestfit(set, si, &candidates, rng),
                     PolicyKind::PerAgent => unreachable!(),
                 }
@@ -212,6 +217,32 @@ mod tests {
         let c = run("rpsdsf", 1);
         let d = run("rpsdsf", 99); // joint policies use no randomness at all
         assert_eq!(c.x, d.x);
+    }
+
+    #[test]
+    fn weight_two_doubles_dominant_share() {
+        // weighted fairness: with identical demands, a weight-2 framework
+        // must end progressive filling holding ~2x the weight-1 framework's
+        // tasks (shares x_n·s/φ_n equalize) under both DRF and PS-DSF
+        for name in ["drf", "psdsf"] {
+            let types = vec![ServerType::new("s0".to_string(), ResVec::new(&[90.0, 90.0]))];
+            let mut st = AllocState::new(AgentPool::new(&types));
+            for w in [2.0, 1.0] {
+                st.add_framework(FrameworkEntry {
+                    name: format!("w{w}"),
+                    demand: ResVec::new(&[1.0, 1.0]),
+                    weight: w,
+                    active: true,
+                });
+            }
+            let policy = policy_by_name(name).unwrap();
+            let out =
+                progressive_fill(&mut st, &policy, &mut ScoringEngine::native(), &mut Rng::new(3))
+                    .unwrap();
+            let (x0, x1) = (out.x[0][0], out.x[1][0]);
+            assert_eq!(x0 + x1, 90.0, "{name}: the single server saturates");
+            assert!((x0 - 2.0 * x1).abs() <= 3.0, "{name}: weighted split {x0}:{x1}");
+        }
     }
 
     #[test]

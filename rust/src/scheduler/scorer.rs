@@ -15,7 +15,7 @@
 //! [`ScoreSet`] is bit-identical to a full recompute.
 
 use crate::error::Result;
-use crate::scheduler::{drf, psdsf, rpsdsf, tsf, ScoreInputs, ScoreSet, Scorer};
+use crate::scheduler::{drf, psdsf, rpsdsf, tsf, ScoreInputs, ScoreRowsMut, ScoreSet, Scorer};
 use crate::{is_big, BIG};
 
 /// Pure-rust implementation of [`Scorer`].
@@ -42,11 +42,72 @@ impl NativeScorer {
         set
     }
 
+    /// Full scoring pass split across `shards` parallel row shards. Every
+    /// row is computed by the exact same [`NativeScorer::pair_values`] /
+    /// [`NativeScorer::row_shares`] arithmetic and rows are independent, so
+    /// the result is bit-identical to the serial pass at any shard count.
+    pub(crate) fn compute_with_residuals_sharded(
+        si: &ScoreInputs,
+        res: &[f64],
+        shards: usize,
+    ) -> ScoreSet {
+        let n = si.n();
+        if shards <= 1 || n < 2 {
+            return Self::compute_with_residuals(si, res);
+        }
+        let mut set = ScoreSet::sized(n, si.m());
+        let views = set.split_rows_mut(shards);
+        std::thread::scope(|s| {
+            for mut v in views {
+                s.spawn(move || {
+                    for k in v.n0()..v.n1() {
+                        Self::fill_row_rows(si, res, &mut v, k);
+                    }
+                });
+            }
+        });
+        set
+    }
+
+    /// The global-share values of row `n`: `(drf, tsf)`.
+    #[inline]
+    pub(crate) fn row_shares(si: &ScoreInputs, n: usize) -> (f64, f64) {
+        (drf::dominant_share(si, n), tsf::task_share(si, n))
+    }
+
+    /// The four pair-tensor values for `(n, i)` in one pass:
+    /// `(psdsf, rpsdsf, fit, feas)`. Single source of truth for the pair
+    /// arithmetic — every fill path (serial, incremental patch, parallel
+    /// shard) funnels through here, which is what keeps them bit-identical.
+    #[inline]
+    pub(crate) fn pair_values(
+        si: &ScoreInputs,
+        res: &[f64],
+        n: usize,
+        i: usize,
+    ) -> (f64, f64, f64, bool) {
+        let ps = psdsf::virtual_share(si, n, i);
+        let ratio = rpsdsf::residual_ratio(si, res, n, i);
+        let rps = if is_big(ratio) {
+            BIG
+        } else {
+            (si.role_total(n) * ratio / si.phi(n)).min(BIG)
+        };
+        let r = si.r();
+        let feasible = si.fmask(n) > 0.5
+            && si.smask(i) > 0.5
+            && si.has_demand(n)
+            && (0..r).all(|rr| res[i * r + rr] + 1e-4 >= si.d(n, rr));
+        let fit = if feasible && !is_big(ratio) { ratio } else { BIG };
+        (ps, rps, fit, feasible)
+    }
+
     /// Re-score one framework row: its global shares and every pair tensor
     /// entry.
     pub(crate) fn fill_row(si: &ScoreInputs, res: &[f64], set: &mut ScoreSet, n: usize) {
-        set.set_drf(n, drf::dominant_share(si, n));
-        set.set_tsf(n, tsf::task_share(si, n));
+        let (d, t) = Self::row_shares(si, n);
+        set.set_drf(n, d);
+        set.set_tsf(n, t);
         for i in 0..si.m() {
             Self::fill_pair(si, res, set, n, i);
         }
@@ -55,21 +116,78 @@ impl NativeScorer {
     /// Re-score the residual-dependent tensors (and PS-DSF) for one
     /// `(framework, agent)` pair.
     pub(crate) fn fill_pair(si: &ScoreInputs, res: &[f64], set: &mut ScoreSet, n: usize, i: usize) {
-        set.set_psdsf(n, i, psdsf::virtual_share(si, n, i));
-        let ratio = rpsdsf::residual_ratio(si, res, n, i);
-        let rps = if is_big(ratio) {
-            BIG
-        } else {
-            (si.role_total(n) * ratio / si.phi(n)).min(BIG)
-        };
+        let (ps, rps, fit, feasible) = Self::pair_values(si, res, n, i);
+        set.set_psdsf(n, i, ps);
         set.set_rpsdsf(n, i, rps);
-        let r = si.r();
-        let feasible = si.fmask(n) > 0.5
-            && si.smask(i) > 0.5
-            && si.has_demand(n)
-            && (0..r).all(|rr| res[i * r + rr] + 1e-4 >= si.d(n, rr));
         set.set_feas(n, i, feasible);
-        set.set_fit(n, i, if feasible && !is_big(ratio) { ratio } else { BIG });
+        set.set_fit(n, i, fit);
+    }
+
+    /// [`NativeScorer::fill_row`] against a parallel row-shard view.
+    pub(crate) fn fill_row_rows(
+        si: &ScoreInputs,
+        res: &[f64],
+        rows: &mut ScoreRowsMut<'_>,
+        n: usize,
+    ) {
+        let (d, t) = Self::row_shares(si, n);
+        rows.set_drf(n, d);
+        rows.set_tsf(n, t);
+        for i in 0..si.m() {
+            Self::fill_pair_rows(si, res, rows, n, i);
+        }
+    }
+
+    /// [`NativeScorer::fill_row_rows`] that additionally returns the row's
+    /// `(psdsf_min, psdsf_arg, rpsdsf_min, rpsdsf_arg)`, accumulated in the
+    /// same ascending-agent order and with the same `<` comparisons as
+    /// `JointBounds::rebuild_row` — so the pruning index can be maintained
+    /// inside the (possibly parallel) fill pass instead of re-reading every
+    /// freshly written row serially afterwards.
+    pub(crate) fn fill_row_rows_with_minima(
+        si: &ScoreInputs,
+        res: &[f64],
+        rows: &mut ScoreRowsMut<'_>,
+        n: usize,
+    ) -> (f64, usize, f64, usize) {
+        let (d, t) = Self::row_shares(si, n);
+        rows.set_drf(n, d);
+        rows.set_tsf(n, t);
+        let mut pm = BIG;
+        let mut pa = 0usize;
+        let mut rm = BIG;
+        let mut ra = 0usize;
+        for i in 0..si.m() {
+            let (ps, rps, fit, feasible) = Self::pair_values(si, res, n, i);
+            rows.set_psdsf(n, i, ps);
+            rows.set_rpsdsf(n, i, rps);
+            rows.set_feas(n, i, feasible);
+            rows.set_fit(n, i, fit);
+            if ps < pm {
+                pm = ps;
+                pa = i;
+            }
+            if rps < rm {
+                rm = rps;
+                ra = i;
+            }
+        }
+        (pm, pa, rm, ra)
+    }
+
+    /// [`NativeScorer::fill_pair`] against a parallel row-shard view.
+    pub(crate) fn fill_pair_rows(
+        si: &ScoreInputs,
+        res: &[f64],
+        rows: &mut ScoreRowsMut<'_>,
+        n: usize,
+        i: usize,
+    ) {
+        let (ps, rps, fit, feasible) = Self::pair_values(si, res, n, i);
+        rows.set_psdsf(n, i, ps);
+        rows.set_rpsdsf(n, i, rps);
+        rows.set_feas(n, i, feasible);
+        rows.set_fit(n, i, fit);
     }
 }
 
@@ -144,6 +262,19 @@ mod tests {
         assert_eq!(set.tsf(1), 0.0);
         assert_eq!(set.psdsf(0, 0), 0.0);
         assert!(set.feas(0, 0) && set.feas(1, 1));
+    }
+
+    #[test]
+    fn sharded_compute_bit_identical_to_serial() {
+        let mut rng = crate::rng::Rng::new(0x5A4D);
+        let st = crate::testing::scaled_state_with_load(6, 13, 30, &mut rng);
+        let si = st.score_inputs();
+        let res = rpsdsf::residuals(&si);
+        let serial = NativeScorer::compute_with_residuals(&si, &res);
+        for shards in [1, 2, 3, 8, 64] {
+            let sharded = NativeScorer::compute_with_residuals_sharded(&si, &res, shards);
+            assert_eq!(serial, sharded, "{shards} shards");
+        }
     }
 
     #[test]

@@ -75,7 +75,12 @@ pub fn best_fit<S: ScoreView + ?Sized>(
 }
 
 /// Worst-fit baseline: the feasible agent maximizing how many further tasks
-/// of `n` it could host (i.e. minimizing nothing — the ablation's strawman).
+/// of `n` it could host — i.e. with the *smallest* demand/residual dominant
+/// ratio. The ratio is compared directly with a `(score, agent_id)` key,
+/// matching [`best_fit`]'s deterministic argmin: the former `-1.0/fit`
+/// inversion both lost precision near-tied ratios and kept the first
+/// candidate *seen* on exact ties, so the pick depended on candidate-visit
+/// order. Ties now break toward the lowest agent id under any permutation.
 pub fn max_residual<S: ScoreView + ?Sized>(
     set: &S,
     n: usize,
@@ -83,13 +88,16 @@ pub fn max_residual<S: ScoreView + ?Sized>(
 ) -> Option<usize> {
     let mut best: Option<(f64, usize)> = None;
     for &i in candidates {
-        if !set.feas(n, i) || set.fit(n, i) >= BIG {
+        if !set.feas(n, i) {
             continue;
         }
-        // larger hostable count == smaller fit ratio; invert the comparison
-        let score = -1.0 / set.fit(n, i).max(1e-30);
+        // smallest fit ratio == largest hostable count
+        let score = set.fit(n, i);
+        if score >= BIG {
+            continue;
+        }
         match best {
-            Some((b, _)) if score >= b => {}
+            Some((b, bi)) if (score, i) >= (b, bi) => {}
             _ => best = Some((score, i)),
         }
     }
@@ -176,5 +184,29 @@ mod tests {
         let _ = si;
         assert_eq!(max_residual(&set, 0, &[0, 1]), Some(0));
         assert_eq!(max_residual(&set, 1, &[0, 1]), Some(1));
+    }
+
+    #[test]
+    fn max_residual_tie_breaks_by_lowest_agent_id_under_permutation() {
+        // two identical servers give identical fit ratios; the pick must be
+        // the lowest agent id no matter the candidate-visit order (the old
+        // score-inversion kept whichever tied candidate was seen first)
+        let types = vec![
+            ServerType::new("twin-a".to_string(), ResVec::new(&[50.0, 50.0])),
+            ServerType::new("twin-b".to_string(), ResVec::new(&[50.0, 50.0])),
+        ];
+        let mut st = AllocState::new(AgentPool::new(&types));
+        st.add_framework(FrameworkEntry {
+            name: "f".into(),
+            demand: ResVec::new(&[2.0, 3.0]),
+            weight: 1.0,
+            active: true,
+        });
+        let si = st.score_inputs();
+        let set = NativeScorer::compute(&si);
+        assert_eq!(set.fit(0, 0), set.fit(0, 1), "residual ratios tied by construction");
+        for cands in [vec![0, 1], vec![1, 0]] {
+            assert_eq!(max_residual(&set, 0, &cands), Some(0), "order {cands:?}");
+        }
     }
 }

@@ -46,17 +46,27 @@ pub struct QueueSpec {
     pub jobs: usize,
     /// How this queue's jobs arrive (closed batch by default).
     pub arrival: ArrivalProcess,
+    /// Fair-share weight φ of this queue's frameworks (the paper uses 1).
+    /// Threaded through `Master::register_framework` and recorded in the
+    /// scenario trace, so weighted runs replay exactly.
+    pub weight: f64,
 }
 
 impl QueueSpec {
     /// A closed-loop batch queue (the paper's behaviour).
     pub fn closed(workload: WorkloadSpec, jobs: usize) -> Self {
-        QueueSpec { workload, jobs, arrival: ArrivalProcess::Closed }
+        QueueSpec { workload, jobs, arrival: ArrivalProcess::Closed, weight: 1.0 }
     }
 
     /// An open queue whose jobs arrive per `arrival`.
     pub fn open(workload: WorkloadSpec, jobs: usize, arrival: ArrivalProcess) -> Self {
-        QueueSpec { workload, jobs, arrival }
+        QueueSpec { workload, jobs, arrival, weight: 1.0 }
+    }
+
+    /// Builder-style fair-share weight override.
+    pub fn weighted(mut self, weight: f64) -> Self {
+        self.weight = weight;
+        self
     }
 }
 
@@ -89,6 +99,9 @@ pub struct OnlineConfig {
     pub speculation: SpeculationCfg,
     /// Cluster churn model (realized into a schedule at scenario time).
     pub churn: ChurnModel,
+    /// Parallel scoring/argmin shards for the native engine (1 = serial;
+    /// results are bit-identical at any count).
+    pub shards: usize,
     /// Safety cutoff (simulated seconds).
     pub max_sim_time: f64,
 }
@@ -118,6 +131,7 @@ impl OnlineConfig {
             release_mode: ReleaseMode::Pool,
             speculation: SpeculationCfg::default(),
             churn: ChurnModel::None,
+            shards: 1,
             max_sim_time: 1e7,
         }
     }
@@ -285,7 +299,21 @@ impl OnlineSim {
                 cfg.cluster.len()
             )));
         }
+        if scenario.agents != cfg.cluster.len() {
+            return Err(Error::Config(format!(
+                "scenario was realized for {} agents but the configuration has {} — \
+                 refusing to replay against a different cluster",
+                scenario.agents,
+                cfg.cluster.len()
+            )));
+        }
         let kinds = cfg.cluster.first().map(|s| s.capacity.len()).unwrap_or(2);
+        if scenario.kinds != kinds {
+            return Err(Error::Config(format!(
+                "scenario was realized with {} resource kinds but the cluster has {kinds}",
+                scenario.kinds
+            )));
+        }
         if let Some(bad) =
             scenario.queues.iter().find(|q| q.spec.executor_demand.len() != kinds)
         {
@@ -301,7 +329,8 @@ impl OnlineSim {
         } else {
             crate::cluster::AgentPool::new(&cfg.cluster)
         };
-        let master = Master::new(pool, policy, cfg.mode, scorer);
+        let mut master = Master::new(pool, policy, cfg.mode, scorer);
+        master.set_shards(cfg.shards.max(1));
         let label = format!("{}/{}", cfg.policy, cfg.mode.label());
         let queues: Vec<SubmissionQueue> = scenario
             .queues
@@ -473,7 +502,8 @@ impl OnlineSim {
         // per group (Pi = role 0, WordCount = role 1, synthetic classes
         // their own — WorkloadKind::role)
         let role = spec.kind.role();
-        match self.master.register_framework_in_role(name, declared, 1.0, role) {
+        let weight = self.queues[queue].weight;
+        match self.master.register_framework_in_role(name, declared, weight, role) {
             Ok(slot) => {
                 let job = SparkJob::from_recipe(job_id, queue, slot, spec, &recipe, now);
                 self.jobs.push(job);
@@ -777,6 +807,54 @@ mod tests {
             base.makespan != r.makespan || base.trace.cpu.values() != r.trace.cpu.values(),
             "an 80s outage of a third of the cluster left no trace"
         );
+    }
+
+    #[test]
+    fn queue_weight_reaches_framework_registration() {
+        let mut cfg = OnlineConfig::small("drf", AllocatorMode::Characterized);
+        cfg.queues[0].weight = 2.0;
+        let scenario = realize(&cfg, "weighted");
+        assert_eq!(scenario.queues[0].weight, 2.0, "realize must carry the queue weight");
+        assert_eq!(scenario.queues[1].weight, 1.0);
+        let mut sim = OnlineSim::with_scenario(cfg, scenario).unwrap();
+        sim.on_job_arrival(0, 0.0).unwrap();
+        sim.on_job_arrival(1, 0.0).unwrap();
+        assert_eq!(sim.master.state.framework(0).weight, 2.0);
+        assert_eq!(sim.master.state.framework(1).weight, 1.0);
+    }
+
+    #[test]
+    fn weighted_run_still_completes() {
+        let mut cfg = OnlineConfig::small("psdsf", AllocatorMode::Characterized);
+        cfg.queues[0].weight = 2.0;
+        cfg.seed = 11;
+        let r = OnlineSim::new(cfg).unwrap().run().unwrap();
+        assert_eq!(r.jobs_completed, 8);
+    }
+
+    #[test]
+    fn scenario_dim_mismatch_rejected() {
+        let cfg = OnlineConfig::small("drf", AllocatorMode::Characterized);
+        let mut wrong_agents = realize(&cfg, "x");
+        wrong_agents.agents = 3;
+        assert!(OnlineSim::with_scenario(cfg.clone(), wrong_agents).is_err());
+        let mut wrong_kinds = realize(&cfg, "x");
+        wrong_kinds.kinds = 3;
+        assert!(OnlineSim::with_scenario(cfg, wrong_kinds).is_err());
+    }
+
+    #[test]
+    fn sharded_run_bit_identical_to_serial() {
+        let mut serial = OnlineConfig::small("rpsdsf", AllocatorMode::Characterized);
+        serial.seed = 21;
+        let mut sharded = serial.clone();
+        sharded.shards = 4;
+        let a = OnlineSim::new(serial).unwrap().run().unwrap();
+        let b = OnlineSim::new(sharded).unwrap().run().unwrap();
+        assert_eq!(a.makespan, b.makespan);
+        assert_eq!(a.grants, b.grants);
+        assert_eq!(a.trace.cpu.values(), b.trace.cpu.values());
+        assert_eq!(a.trace.mem.values(), b.trace.mem.values());
     }
 
     #[test]

@@ -18,6 +18,8 @@ pub struct SubmissionQueue {
     pub spec: WorkloadSpec,
     /// Closed loop (completion-triggered) vs open (timed arrivals).
     pub closed: bool,
+    /// Fair-share weight φ this queue's frameworks register with.
+    pub weight: f64,
     /// Absolute arrival times (empty for closed queues).
     pub arrivals: Vec<f64>,
     recipes: Vec<JobRecipe>,
@@ -31,6 +33,7 @@ impl SubmissionQueue {
             id,
             spec: realized.spec,
             closed: realized.closed,
+            weight: realized.weight,
             arrivals: realized.arrivals,
             recipes: realized.recipes,
             next: 0,
@@ -74,6 +77,7 @@ mod tests {
         let mut rng = Rng::new(5);
         RealizedQueue {
             closed: true,
+            weight: 1.0,
             arrivals: Vec::new(),
             recipes: (0..jobs).map(|_| JobRecipe::sample(&spec, &mut rng)).collect(),
             spec,

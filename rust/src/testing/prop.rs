@@ -237,6 +237,208 @@ mod tests {
         }
     }
 
+    mod pruned_joint_equivalence {
+        //! The pruned-argmin contract: [`Policy::pick_joint_pruned`] (serial
+        //! and sharded) must return exactly the pair the full
+        //! [`NativeScorer`]-tensor scan returns — across random instances,
+        //! dirty-log churn (places, releases, agents going down and coming
+        //! back up), per-cycle handler masks, candidate subsets, and shard
+        //! counts 1/2/8.
+
+        use crate::cluster::{AgentPool, ServerType};
+        use crate::mesos::allocator::{AllocatorMode, CycleMask, MaskedScores, OfferHandler};
+        use crate::mesos::offer::Offer;
+        use crate::resources::ResVec;
+        use crate::rng::Rng;
+        use crate::scheduler::{
+            AllocState, Criterion, FrameworkEntry, Policy, PolicyKind, ScoringEngine,
+        };
+        use crate::testing::forall;
+
+        #[derive(Debug, Clone, Copy, PartialEq)]
+        enum Op {
+            Place,
+            Unplace,
+            AgentDown,
+            AgentUp,
+        }
+
+        #[derive(Debug, Clone)]
+        struct Seq {
+            m: usize,
+            n: usize,
+            shared_roles: bool,
+            oblivious: bool,
+            ops: Vec<Op>,
+            seed: u64,
+        }
+
+        fn gen_seq(rng: &mut Rng) -> Seq {
+            let ops = (0..8 + rng.index(20))
+                .map(|_| match rng.index(10) {
+                    0 => Op::AgentDown,
+                    1 => Op::AgentUp,
+                    2 | 3 => Op::Unplace,
+                    _ => Op::Place,
+                })
+                .collect();
+            Seq {
+                m: 2 + rng.index(5),
+                n: 2 + rng.index(14), // up to 15 rows: shards=8 goes parallel
+                shared_roles: rng.chance(0.4),
+                oblivious: rng.chance(0.3),
+                ops,
+                seed: rng.next_u64(),
+            }
+        }
+
+        fn build(seq: &Seq, rng: &mut Rng) -> AllocState {
+            let types: Vec<ServerType> = (0..seq.m)
+                .map(|i| {
+                    ServerType::new(
+                        format!("s{i}"),
+                        ResVec::new(&[rng.range(6.0, 40.0).round(), rng.range(6.0, 40.0).round()]),
+                    )
+                })
+                .collect();
+            let mut st = AllocState::new(AgentPool::new(&types));
+            for k in 0..seq.n {
+                st.add_framework(FrameworkEntry {
+                    name: format!("f{k}"),
+                    demand: ResVec::new(&[
+                        rng.range(0.5, 5.0).round().max(1.0),
+                        rng.range(0.5, 5.0).round().max(1.0),
+                    ]),
+                    weight: if rng.chance(0.25) { 2.0 } else { 1.0 },
+                    active: true,
+                });
+                if seq.shared_roles {
+                    st.set_role(k, k % 3);
+                }
+            }
+            st
+        }
+
+        fn apply(op: Op, st: &mut AllocState, rng: &mut Rng) {
+            let (n, m) = (st.n_frameworks(), st.pool.len());
+            match op {
+                Op::Place => {
+                    for _ in 0..8 {
+                        let fw = rng.index(n);
+                        let ag = rng.index(m);
+                        if st.pool.agent(ag).registered && st.task_fits(fw, ag) {
+                            st.place_task(fw, ag).unwrap();
+                            return;
+                        }
+                    }
+                }
+                Op::Unplace => {
+                    for _ in 0..8 {
+                        let fw = rng.index(n);
+                        let ag = rng.index(m);
+                        if st.tasks_on(fw, ag) >= 1.0 {
+                            let d = st.framework(fw).demand;
+                            st.unplace(fw, ag, &d, 1.0).unwrap();
+                            return;
+                        }
+                    }
+                }
+                Op::AgentDown => {
+                    let ag = rng.index(m);
+                    if st.pool.agent(ag).registered {
+                        st.agent_down(ag);
+                    }
+                }
+                Op::AgentUp => {
+                    let ag = rng.index(m);
+                    if !st.pool.agent(ag).registered {
+                        st.agent_up(ag);
+                    }
+                }
+            }
+        }
+
+        /// Wants-driven handler with a fixed per-framework appetite mask.
+        struct MaskHandler {
+            wants: Vec<bool>,
+        }
+        impl OfferHandler for MaskHandler {
+            fn wants(&self, n: usize) -> bool {
+                self.wants[n]
+            }
+            fn accept(&mut self, offer: &Offer) -> (f64, ResVec) {
+                (0.0, ResVec::zero(offer.resources.len()))
+            }
+        }
+
+        #[test]
+        fn prop_pruned_and_sharded_joint_pick_equal_full_scan() {
+            forall(0x9A17, 40, gen_seq, |seq| {
+                let mut rng = Rng::new(seq.seed);
+                let mut st = build(seq, &mut rng);
+                let mut engine = ScoringEngine::native();
+                let policies = [
+                    Policy::new("psdsf", Criterion::PsDsf, PolicyKind::Joint),
+                    Policy::new("rpsdsf", Criterion::RPsDsf, PolicyKind::Joint),
+                ];
+                engine.scores_with_bounds(&mut st).map_err(|e| e.to_string())?;
+                for (step, &op) in seq.ops.iter().enumerate() {
+                    apply(op, &mut st, &mut rng);
+                    // a random candidate subset of the registered agents
+                    let candidates: Vec<usize> = st
+                        .pool
+                        .registered_ids()
+                        .into_iter()
+                        .filter(|_| rng.chance(0.8))
+                        .collect();
+                    // a random handler mask (+ unknown rows when oblivious)
+                    let handler = MaskHandler {
+                        wants: (0..st.n_frameworks()).map(|_| rng.chance(0.85)).collect(),
+                    };
+                    let mode = if seq.oblivious {
+                        AllocatorMode::Oblivious
+                    } else {
+                        AllocatorMode::Characterized
+                    };
+                    let no_inference: Vec<bool> = (0..st.n_frameworks())
+                        .map(|_| seq.oblivious && rng.chance(0.3))
+                        .collect();
+                    let mut mask = CycleMask::new(&st, &handler, mode, &no_inference);
+                    for _ in 0..rng.index(4) {
+                        mask.decline(rng.index(st.n_frameworks()), rng.index(st.pool.len()));
+                    }
+                    let (si, set, bounds) =
+                        engine.scores_with_bounds(&mut st).map_err(|e| e.to_string())?;
+                    let view = MaskedScores { base: set, mask: &mask };
+                    for p in &policies {
+                        let plain_full = p.pick_joint(set, si, &candidates);
+                        let masked_full = p.pick_joint(&view, si, &candidates);
+                        for shards in [1usize, 2, 8] {
+                            let plain = p.pick_joint_pruned(set, si, &candidates, bounds, shards);
+                            if plain != plain_full {
+                                return Err(format!(
+                                    "step {step} ({op:?}) {}: pruned({shards}) {plain:?} != \
+                                     full {plain_full:?}",
+                                    p.name
+                                ));
+                            }
+                            let masked =
+                                p.pick_joint_pruned(&view, si, &candidates, bounds, shards);
+                            if masked != masked_full {
+                                return Err(format!(
+                                    "step {step} ({op:?}) {}: masked pruned({shards}) \
+                                     {masked:?} != full {masked_full:?}",
+                                    p.name
+                                ));
+                            }
+                        }
+                    }
+                }
+                Ok(())
+            });
+        }
+    }
+
     #[test]
     fn passes_true_property() {
         forall(1, 100, |rng| rng.below(100), |x| {

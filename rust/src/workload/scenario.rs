@@ -67,6 +67,8 @@ pub struct RealizedQueue {
     pub spec: WorkloadSpec,
     /// Closed loop (completion-triggered submissions) vs open (timed).
     pub closed: bool,
+    /// Fair-share weight φ of this queue's frameworks.
+    pub weight: f64,
     /// Absolute arrival times (empty for closed queues).
     pub arrivals: Vec<f64>,
     /// One recipe per job, in submission order.
@@ -79,6 +81,11 @@ pub struct RealizedQueue {
 pub struct RealizedScenario {
     pub name: String,
     pub seed: u64,
+    /// Cluster size the scenario was realized for — recorded in the trace
+    /// header so `--replay` can refuse a mismatched configuration.
+    pub agents: usize,
+    /// Resource kinds (`r`) of the realizing cluster.
+    pub kinds: usize,
     pub queues: Vec<RealizedQueue>,
     pub churn: Vec<ChurnEvent>,
 }
@@ -97,13 +104,21 @@ pub fn realize(cfg: &OnlineConfig, name: &str) -> RealizedScenario {
             RealizedQueue {
                 spec: qs.workload.clone(),
                 closed: qs.arrival.is_closed(),
+                weight: qs.weight,
                 arrivals,
                 recipes,
             }
         })
         .collect();
     let churn = cfg.churn.realize(cfg.cluster.len(), &mut Rng::new(cfg.seed).split(CHURN_STREAM));
-    RealizedScenario { name: name.to_string(), seed: cfg.seed, queues, churn }
+    RealizedScenario {
+        name: name.to_string(),
+        seed: cfg.seed,
+        agents: cfg.cluster.len(),
+        kinds: cfg.cluster.first().map(|s| s.capacity.len()).unwrap_or(2),
+        queues,
+        churn,
+    }
 }
 
 /// Every scenario name accepted by `--scenario` and the CI smoke matrix.
@@ -145,7 +160,7 @@ pub fn scenario_config(
         (0..6)
             .map(|q| {
                 let w = if q % 2 == 0 { small_pi() } else { small_wc() };
-                QueueSpec { workload: w, jobs, arrival }
+                QueueSpec { workload: w, jobs, arrival, weight: 1.0 }
             })
             .collect()
     };

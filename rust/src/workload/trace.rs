@@ -3,11 +3,15 @@
 //! One JSON object per line:
 //!
 //! ```text
-//! {"trace":"mesos-fair-scenario","v":1,"name":"poisson","seed":"0x5eed","queues":6}
-//! {"ev":"queue","id":0,"closed":false,"kind":"Pi","demand":[2,2],...}
+//! {"trace":"mesos-fair-scenario","v":2,"name":"poisson","seed":"0x5eed","agents":6,"r":2,"queues":6}
+//! {"ev":"queue","id":0,"closed":false,"weight":1,"kind":"Pi","demand":[2,2],...}
 //! {"ev":"job","queue":0,"idx":0,"t":12.5,"seed":"0x1a2b...","durations":[...]}
 //! {"ev":"churn","t":310.25,"agent":4,"up":false}
 //! ```
+//!
+//! The v2 header records the realizing cluster's `(agents, r)` dims and the
+//! scenario name/seed, so `--replay` validates a trace against the active
+//! configuration instead of silently replaying a mismatched one.
 //!
 //! Seeds are hex strings (JSON numbers are f64 and would corrupt 64-bit
 //! seeds); every f64 uses Rust's shortest-round-trip formatting, so
@@ -22,7 +26,7 @@ use crate::workload::churn::ChurnEvent;
 use crate::workload::scenario::{JobRecipe, RealizedQueue, RealizedScenario};
 
 const MAGIC: &str = "mesos-fair-scenario";
-const VERSION: f64 = 1.0;
+const VERSION: f64 = 2.0;
 
 fn hex(v: u64) -> Json {
     Json::Str(format!("{v:#x}"))
@@ -37,11 +41,12 @@ fn parse_hex(j: &Json, what: &str) -> Result<u64> {
         .map_err(|_| Error::Config(format!("trace: bad {what} '{s}'")))
 }
 
-fn spec_to_json(id: usize, closed: bool, spec: &WorkloadSpec) -> Json {
+fn spec_to_json(id: usize, closed: bool, weight: f64, spec: &WorkloadSpec) -> Json {
     let mut pairs = vec![
         ("ev", Json::Str("queue".into())),
         ("id", Json::Num(id as f64)),
         ("closed", Json::Bool(closed)),
+        ("weight", Json::Num(weight)),
         ("kind", Json::Str(spec.kind.label().into())),
         ("demand", Json::arr_f64(spec.executor_demand.as_slice())),
         ("slots", Json::Num(spec.slots_per_executor as f64)),
@@ -112,13 +117,15 @@ pub fn to_jsonl(sc: &RealizedScenario) -> String {
             ("v", Json::Num(VERSION)),
             ("name", Json::Str(sc.name.clone())),
             ("seed", hex(sc.seed)),
+            ("agents", Json::Num(sc.agents as f64)),
+            ("r", Json::Num(sc.kinds as f64)),
             ("queues", Json::Num(sc.queues.len() as f64)),
         ])
         .render(),
     );
     out.push('\n');
     for (id, q) in sc.queues.iter().enumerate() {
-        out.push_str(&spec_to_json(id, q.closed, &q.spec).render());
+        out.push_str(&spec_to_json(id, q.closed, q.weight, &q.spec).render());
         out.push('\n');
         for (idx, recipe) in q.recipes.iter().enumerate() {
             let mut pairs = vec![
@@ -171,6 +178,8 @@ pub fn from_jsonl(text: &str) -> Result<RealizedScenario> {
         header.get("seed").ok_or_else(|| Error::Config("trace: header missing seed".into()))?,
         "seed",
     )?;
+    let agents = num(&header, "agents")? as usize;
+    let kinds = num(&header, "r")? as usize;
 
     let mut queues: Vec<Option<RealizedQueue>> = vec![None; n_queues];
     let mut churn = Vec::new();
@@ -183,9 +192,11 @@ pub fn from_jsonl(text: &str) -> Result<RealizedScenario> {
                     return Err(Error::Config(format!("trace: queue id {id} out of range")));
                 }
                 let closed = j.get("closed").and_then(|v| v.as_bool()).unwrap_or(true);
+                let weight = j.get("weight").and_then(|v| v.as_f64()).unwrap_or(1.0);
                 queues[id] = Some(RealizedQueue {
                     spec: spec_from_json(&j)?,
                     closed,
+                    weight,
                     arrivals: Vec::new(),
                     recipes: Vec::new(),
                 });
@@ -248,7 +259,7 @@ pub fn from_jsonl(text: &str) -> Result<RealizedScenario> {
         .enumerate()
         .map(|(i, q)| q.ok_or_else(|| Error::Config(format!("trace: queue {i} missing"))))
         .collect::<Result<Vec<_>>>()?;
-    Ok(RealizedScenario { name, seed, queues, churn })
+    Ok(RealizedScenario { name, seed, agents, kinds, queues, churn })
 }
 
 /// Write a scenario trace file.
@@ -301,12 +312,42 @@ mod tests {
     }
 
     #[test]
+    fn weight_round_trips_through_the_trace() {
+        let mut cfg =
+            scenario_config("poisson", "drf", AllocatorMode::Characterized, Some(2), 5).unwrap();
+        cfg.queues[0].weight = 2.5;
+        let sc = realize(&cfg, "weighted");
+        let back = from_jsonl(&to_jsonl(&sc)).unwrap();
+        assert_eq!(back.queues[0].weight, 2.5);
+        assert_eq!(back.queues[1].weight, 1.0);
+        assert_eq!(back, sc);
+    }
+
+    #[test]
+    fn header_records_cluster_dims() {
+        let cfg =
+            scenario_config("poisson", "drf", AllocatorMode::Characterized, Some(1), 9).unwrap();
+        let sc = realize(&cfg, "poisson");
+        let text = to_jsonl(&sc);
+        let header = Json::parse(text.lines().next().unwrap()).unwrap();
+        assert_eq!(header.get("agents").and_then(|v| v.as_f64()), Some(6.0));
+        assert_eq!(header.get("r").and_then(|v| v.as_f64()), Some(2.0));
+        let back = from_jsonl(&text).unwrap();
+        assert_eq!((back.agents, back.kinds), (6, 2));
+    }
+
+    #[test]
     fn rejects_garbage_and_truncation() {
         assert!(from_jsonl("").is_err());
         assert!(from_jsonl("{\"trace\":\"other\"}").is_err());
         // future format versions must be rejected, not mis-parsed
         assert!(from_jsonl(
-            "{\"trace\":\"mesos-fair-scenario\",\"v\":2,\"name\":\"x\",\"seed\":\"0x1\",\"queues\":0}"
+            "{\"trace\":\"mesos-fair-scenario\",\"v\":3,\"name\":\"x\",\"seed\":\"0x1\",\"queues\":0}"
+        )
+        .is_err());
+        // v1 traces lack the (agents, r) dims this build validates against
+        assert!(from_jsonl(
+            "{\"trace\":\"mesos-fair-scenario\",\"v\":1,\"name\":\"x\",\"seed\":\"0x1\",\"queues\":0}"
         )
         .is_err());
         let cfg =
