@@ -13,7 +13,9 @@ use mesos_fair::mesos::AllocatorMode;
 use mesos_fair::metrics::json::Json;
 use mesos_fair::resources::ResVec;
 use mesos_fair::rng::Rng;
-use mesos_fair::scheduler::{policy_by_name, IncrementalScorer, NativeScorer, ScoringEngine};
+use mesos_fair::scheduler::{
+    policy_by_name, rpsdsf, IncrementalScorer, KernelKind, NativeScorer, ScoringEngine,
+};
 use mesos_fair::sim::online::{OnlineConfig, OnlineSim};
 use mesos_fair::testing::scaled_state_with_load;
 
@@ -65,6 +67,50 @@ fn main() {
             ("full", result_json(&full)),
             ("incremental", result_json(&incr)),
             ("speedup", Json::Num(full.mean / incr.mean.max(1e-12))),
+        ]));
+    }
+
+    header("row-fill kernels — scalar vs batched (SoA) over precomputed residuals");
+    let mut kernel_rows: Vec<Json> = Vec::new();
+    for &(m, n) in &[(256usize, 512usize), (1024usize, 2048usize)] {
+        let st = scaled_state_with_load(m, n, 4 * m, &mut rng);
+        let si = st.score_inputs();
+        // residuals are shared, cache-hostile O(n·m·r) work identical in
+        // both kernels — precompute them so the timing isolates the row
+        // fill the kernels actually differ on
+        let res = rpsdsf::residuals(&si);
+        assert_eq!(
+            NativeScorer::compute_rows(&si, &res, KernelKind::Scalar, 1),
+            NativeScorer::compute_rows(&si, &res, KernelKind::Batched, 1),
+            "kernels must agree before anything is timed"
+        );
+        let iters = if m >= 1024 { 12 } else { 60 };
+        let scalar = bench(&format!("kernel/scalar/{m}x{n}"), 5, iters, || {
+            std::hint::black_box(NativeScorer::compute_rows(
+                &si,
+                &res,
+                KernelKind::Scalar,
+                1,
+            ));
+        });
+        println!("{}", scalar.render());
+        let batched = bench(&format!("kernel/batched/{m}x{n}"), 5, iters, || {
+            std::hint::black_box(NativeScorer::compute_rows(
+                &si,
+                &res,
+                KernelKind::Batched,
+                1,
+            ));
+        });
+        println!("{}", batched.render());
+        let speedup = scalar.p50 / batched.p50.max(1e-12);
+        println!("  batched speedup: {speedup:.2}x");
+        kernel_rows.push(Json::obj(vec![
+            ("agents", Json::Num(m as f64)),
+            ("frameworks", Json::Num(n as f64)),
+            ("scalar", result_json(&scalar)),
+            ("batched", result_json(&batched)),
+            ("speedup", Json::Num(speedup)),
         ]));
     }
 
@@ -248,6 +294,7 @@ fn main() {
     let doc = Json::obj(vec![
         ("bench", Json::Str("scorer".into())),
         ("sweep", Json::Arr(sweep_rows)),
+        ("kernels", Json::Arr(kernel_rows)),
         ("masking_256x512", Json::obj(masking_rows)),
         ("joint_1024x2048", Json::obj(joint_rows)),
         ("cycles", Json::Arr(cycle_rows)),

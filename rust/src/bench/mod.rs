@@ -180,6 +180,67 @@ pub fn scorer_joint_regressions(
     Ok(fails)
 }
 
+/// Companion gate for the row-fill kernels: the batched (SoA) kernel must
+/// stay meaningfully faster than the scalar reference at the large
+/// 1024×2048 size. Returns regressions (empty = pass); composed with
+/// [`scorer_joint_regressions`] by `mesos-fair bench-diff`.
+///
+/// Two checks, both on the `kernels` speedup (`scalar p50 / batched p50`,
+/// a within-run ratio and therefore hardware-independent):
+/// * absolute floor: the current speedup must be ≥ 1.2×;
+/// * against the baseline: the current speedup must not fall below
+///   `baseline speedup * (1 - max_regress)`.
+///
+/// A `"provisional": true` baseline downgrades the baseline comparison to
+/// informational (the absolute floor still enforces); a baseline with no
+/// `kernels` section (predating the batched kernel) is noted and skipped.
+pub fn scorer_kernel_regressions(
+    current: &crate::metrics::json::Json,
+    baseline: &crate::metrics::json::Json,
+    max_regress: f64,
+) -> crate::error::Result<Vec<String>> {
+    use crate::error::Error;
+    use crate::metrics::json::Json;
+    fn kernel_speedup(doc: &Json, agents: f64) -> Option<f64> {
+        doc.get("kernels")?
+            .as_arr()?
+            .iter()
+            .find(|row| row.get("agents").and_then(|v| v.as_f64()) == Some(agents))
+            .and_then(|row| row.get("speedup"))
+            .and_then(|v| v.as_f64())
+    }
+    const KERNEL_FLOOR: f64 = 1.2;
+    let cur = kernel_speedup(current, 1024.0).ok_or_else(|| {
+        Error::Experiment("current bench json: missing kernels row for 1024 agents".into())
+    })?;
+    let mut fails = Vec::new();
+    if cur < KERNEL_FLOOR {
+        fails.push(format!(
+            "batched kernel is only {cur:.2}x faster than scalar at 1024x2048 \
+             (floor: {KERNEL_FLOOR}x)"
+        ));
+    }
+    let provisional = baseline.get("provisional").and_then(|v| v.as_bool()).unwrap_or(false);
+    match kernel_speedup(baseline, 1024.0) {
+        None => println!("bench-diff note: baseline has no kernels section, skipping comparison"),
+        Some(base) => {
+            if cur < base * (1.0 - max_regress) {
+                let msg = format!(
+                    "kernel speedup regressed to {cur:.2}x vs {base:.2}x baseline \
+                     (threshold: {:.2}x)",
+                    base * (1.0 - max_regress)
+                );
+                if provisional {
+                    println!("bench-diff note (provisional baseline, not enforced): {msg}");
+                } else {
+                    fails.push(msg);
+                }
+            }
+        }
+    }
+    Ok(fails)
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -267,5 +328,61 @@ mod tests {
         assert!(fails.is_empty(), "provisional baseline must not hard-fail: {fails:?}");
         let missing = Json::obj(vec![]);
         assert!(scorer_joint_regressions(&missing, &base, 0.25).is_err());
+    }
+
+    fn kernel_doc(speedup_1024: Option<f64>, provisional: bool) -> Json {
+        let mut pairs = Vec::new();
+        if let Some(s) = speedup_1024 {
+            let row = |agents: f64, speedup: f64| {
+                Json::obj(vec![("agents", Json::Num(agents)), ("speedup", Json::Num(speedup))])
+            };
+            pairs.push(("kernels", Json::Arr(vec![row(256.0, 1.4), row(1024.0, s)])));
+        }
+        if provisional {
+            pairs.push(("provisional", Json::Bool(true)));
+        }
+        Json::obj(pairs)
+    }
+
+    #[test]
+    fn kernel_gate_passes_within_threshold() {
+        let base = kernel_doc(Some(1.8), false);
+        let cur = kernel_doc(Some(1.6), false); // -11% vs baseline, above 1.2x floor
+        let fails = scorer_kernel_regressions(&cur, &base, 0.25).unwrap();
+        assert!(fails.is_empty(), "{fails:?}");
+    }
+
+    #[test]
+    fn kernel_gate_flags_floor_and_baseline_regression() {
+        let base = kernel_doc(Some(1.8), false);
+        // below the absolute 1.2x floor AND below base*(1-0.25)
+        let cur = kernel_doc(Some(1.1), false);
+        let fails = scorer_kernel_regressions(&cur, &base, 0.25).unwrap();
+        assert_eq!(fails.len(), 2, "{fails:?}");
+        assert!(fails.iter().any(|f| f.contains("floor")), "{fails:?}");
+        assert!(fails.iter().any(|f| f.contains("regressed")), "{fails:?}");
+        // above the floor but regressed more than 25% vs baseline
+        let cur = kernel_doc(Some(1.3), false);
+        let fails = scorer_kernel_regressions(&cur, &base, 0.25).unwrap();
+        assert_eq!(fails.len(), 1, "{fails:?}");
+    }
+
+    #[test]
+    fn kernel_gate_handles_missing_and_provisional_baselines() {
+        // current must carry a kernels row at 1024 agents
+        let base = kernel_doc(Some(1.8), false);
+        assert!(scorer_kernel_regressions(&kernel_doc(None, false), &base, 0.25).is_err());
+        // baseline without kernels: comparison skipped, floor still enforced
+        let no_kernels = Json::obj(vec![]);
+        let fails =
+            scorer_kernel_regressions(&kernel_doc(Some(1.6), false), &no_kernels, 0.25).unwrap();
+        assert!(fails.is_empty(), "{fails:?}");
+        let fails =
+            scorer_kernel_regressions(&kernel_doc(Some(1.0), false), &no_kernels, 0.25).unwrap();
+        assert_eq!(fails.len(), 1, "{fails:?}");
+        // provisional baseline downgrades the comparison but not the floor
+        let base = kernel_doc(Some(3.0), true);
+        let fails = scorer_kernel_regressions(&kernel_doc(Some(1.5), false), &base, 0.25).unwrap();
+        assert!(fails.is_empty(), "provisional baseline must not hard-fail: {fails:?}");
     }
 }

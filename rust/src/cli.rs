@@ -118,6 +118,8 @@ COMMON FLAGS:
                            header's scenario/seed/dims must match the config)
     --shards N             Parallel scoring/argmin shards (bit-identical
                            results at any count)                 [default: 1]
+    --kernel K             Row-fill kernel: scalar|batched (bit-identical
+                           results either way)            [default: batched]
     --max-regress F        bench-diff normalized-median threshold [default: 0.25]
     --homogeneous          Use the six type-3 cluster (§3.6)
     --staged               Staged agent registration (§3.7)

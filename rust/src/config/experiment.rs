@@ -8,6 +8,7 @@
 //! mode = "characterized"     # or "oblivious"
 //! seed = 42
 //! shards = 4                 # parallel scoring/argmin shards (default 1)
+//! kernel = "batched"         # row-fill kernel: "scalar" | "batched" (default)
 //!
 //! [cluster]
 //! servers = ["type-1", "type-2", "type-3"]   # or "trio-cpu"/"trio-mem"/"trio-io" (r=3)
@@ -44,6 +45,7 @@ use crate::cluster::ServerType;
 use crate::config::toml::{TomlDoc, TomlTable};
 use crate::error::{Error, Result};
 use crate::mesos::AllocatorMode;
+use crate::scheduler::KernelKind;
 use crate::sim::online::{OnlineConfig, QueueSpec};
 use crate::spark::workload::DurationModel;
 use crate::workload::arrival::ArrivalProcess;
@@ -251,6 +253,9 @@ pub fn parse_online_config(text: &str) -> Result<OnlineConfig> {
         }
         cfg.shards = v as usize;
     }
+    if let Some(v) = doc.get("experiment.kernel").and_then(|v| v.as_str()) {
+        cfg.kernel = KernelKind::from_name(v)?;
+    }
     if let Some(v) = doc.get("experiment.staged").and_then(|v| v.as_bool()) {
         cfg.staged = v;
     }
@@ -286,6 +291,7 @@ mod tests {
         staged = true
         stage_interval = 30.0
         shards = 4
+        kernel = "scalar"
 
         [cluster]
         servers = ["type-1", "type-2", "type-3"]
@@ -310,6 +316,7 @@ mod tests {
         assert!(cfg.staged);
         assert_eq!(cfg.stage_interval, 30.0);
         assert_eq!(cfg.shards, 4);
+        assert_eq!(cfg.kernel, crate::scheduler::KernelKind::Scalar);
         assert_eq!(cfg.cluster.len(), 3);
         assert_eq!(cfg.cluster[1].name, "type-2");
         assert_eq!(cfg.queues.len(), 2);

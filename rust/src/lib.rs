@@ -1,3 +1,4 @@
+#![cfg_attr(feature = "simd", feature(portable_simd))]
 //! # mesos-fair
 //!
 //! A reproduction of *“Online Scheduling of Spark Workloads with Mesos using

@@ -10,7 +10,7 @@ use mesos_fair::error::{Error, Result};
 use mesos_fair::exp::{run_figure, run_illustrative, FIGURE_IDS};
 use mesos_fair::mesos::AllocatorMode;
 use mesos_fair::metrics::json::Json;
-use mesos_fair::scheduler::{NativeScorer, Scorer, POLICY_NAMES};
+use mesos_fair::scheduler::{KernelKind, NativeScorer, Scorer, POLICY_NAMES};
 use mesos_fair::sim::online::{OnlineConfig, OnlineSim};
 use mesos_fair::workload::{
     realize, scenario_config, trace as scenario_trace, RealizedScenario, SCENARIO_NAMES,
@@ -206,10 +206,14 @@ fn build_online_config(args: &Args) -> Result<OnlineConfig> {
     if shards == 0 {
         return Err(Error::Config("--shards must be >= 1".into()));
     }
+    let kernel = args.flag("kernel").map(KernelKind::from_name).transpose()?;
     if let Some(path) = args.flag("config") {
         let mut cfg = load_online_config(path)?;
         if args.flag("shards").is_some() {
             cfg.shards = shards;
+        }
+        if let Some(k) = kernel {
+            cfg.kernel = k;
         }
         return Ok(cfg);
     }
@@ -241,14 +245,19 @@ fn build_online_config(args: &Args) -> Result<OnlineConfig> {
     };
     cfg.seed = seed;
     cfg.shards = shards;
+    if let Some(k) = kernel {
+        cfg.kernel = k;
+    }
     Ok(cfg)
 }
 
 /// CI bench-regression gate: `bench-diff <current.json> <baseline.json>`.
 /// Fails when the joint-argmin medians regress beyond `--max-regress`
 /// (normalized by the same run's full-scan median, so CI hardware
-/// differences don't trip it) or the pruned+sharded speedup drops below
-/// the 5x floor. See `bench::scorer_joint_regressions`.
+/// differences don't trip it), the pruned+sharded speedup drops below the
+/// 5x floor, or the batched-kernel speedup over scalar falls under its
+/// floor / regresses against the baseline. See
+/// `bench::scorer_joint_regressions` and `bench::scorer_kernel_regressions`.
 fn cmd_bench_diff(args: &Args) -> Result<()> {
     let current_path = args
         .positional
@@ -269,9 +278,13 @@ fn cmd_bench_diff(args: &Args) -> Result<()> {
     };
     let current = load(current_path)?;
     let baseline = load(baseline_path)?;
-    let fails = mesos_fair::bench::scorer_joint_regressions(&current, &baseline, max_regress)?;
+    let mut fails = mesos_fair::bench::scorer_joint_regressions(&current, &baseline, max_regress)?;
+    fails.extend(mesos_fair::bench::scorer_kernel_regressions(&current, &baseline, max_regress)?);
     if fails.is_empty() {
-        println!("bench-diff OK: joint medians within {:.0}% of baseline", max_regress * 100.0);
+        println!(
+            "bench-diff OK: joint medians and kernel speedup within {:.0}% of baseline",
+            max_regress * 100.0
+        );
         Ok(())
     } else {
         Err(Error::Experiment(fails.join("; ")))

@@ -8,7 +8,7 @@ use crate::mesos::allocator::{allocation_cycle, AllocatorMode, Grant, OfferHandl
 use crate::mesos::framework::{DemandTracker, InferenceRule};
 use crate::resources::ResVec;
 use crate::rng::Rng;
-use crate::scheduler::{AllocState, FrameworkEntry, Policy, Scorer, ScoringEngine};
+use crate::scheduler::{AllocState, FrameworkEntry, KernelKind, Policy, Scorer, ScoringEngine};
 use std::collections::HashMap;
 
 /// The master. Owns the allocator state (pool + frameworks + x matrix), the
@@ -69,6 +69,12 @@ impl Master {
     /// are bit-identical at any count).
     pub fn set_shards(&mut self, shards: usize) {
         self.engine.set_shards(shards);
+    }
+
+    /// Row-fill kernel for the engine (`--kernel scalar|batched`; grants
+    /// are bit-identical either way).
+    pub fn set_kernel(&mut self, kernel: KernelKind) {
+        self.engine.set_kernel(kernel);
     }
 
     /// `(full, incremental)` scorer pass counts (native engine only).

@@ -66,6 +66,7 @@
 //! bit-identical at any shard count.
 
 use crate::error::Result;
+use crate::scheduler::kernel::{KernelKind, NO_AGENT, SoaBuffers};
 use crate::scheduler::policy::Criterion;
 use crate::scheduler::scorer::NativeScorer;
 use crate::scheduler::{rpsdsf, AllocState, DirtyLog, ScoreInputs, ScoreRowsMut, ScoreSet, Scorer};
@@ -104,23 +105,26 @@ impl JointBounds {
         self.psdsf_min.clear();
         self.psdsf_min.resize(n, BIG);
         self.psdsf_arg.clear();
-        self.psdsf_arg.resize(n, 0);
+        self.psdsf_arg.resize(n, NO_AGENT);
         self.rpsdsf_min.clear();
         self.rpsdsf_min.resize(n, BIG);
         self.rpsdsf_arg.clear();
-        self.rpsdsf_arg.resize(n, 0);
+        self.rpsdsf_arg.resize(n, NO_AGENT);
         for k in 0..n {
             self.rebuild_row(set, k);
         }
     }
 
     /// Rescan one framework row (its `x_n` changed, or a patched column
-    /// invalidated the remembered argmin).
+    /// invalidated the remembered argmin). Args stay [`NO_AGENT`] when no
+    /// agent's score beats [`BIG`] — an all-infeasible row has no
+    /// remembered column, so [`JointBounds::patch_pair`]'s stale-argmin
+    /// rescan can never alias agent `0`.
     pub(crate) fn rebuild_row(&mut self, set: &ScoreSet, n: usize) {
         let mut pm = BIG;
-        let mut pa = 0usize;
+        let mut pa = NO_AGENT;
         let mut rm = BIG;
-        let mut ra = 0usize;
+        let mut ra = NO_AGENT;
         for i in 0..self.m {
             let p = set.psdsf(n, i);
             if p < pm {
@@ -162,14 +166,25 @@ impl JointBounds {
             self.rebuild_row(set, n);
             return;
         }
+        // `p >= BIG` ⟺ `p == BIG` (scores clamp via `.min(BIG)`): a cell at
+        // the BIG ceiling is unreadable, so it must not become the
+        // remembered argmin — keep the [`NO_AGENT`] sentinel instead, as
+        // `rebuild_row`'s strict-`<` fold would.
         if p <= self.psdsf_min[n] {
             self.psdsf_min[n] = p;
-            self.psdsf_arg[n] = i;
+            self.psdsf_arg[n] = if p >= BIG { NO_AGENT } else { i };
         }
         if v <= self.rpsdsf_min[n] {
             self.rpsdsf_min[n] = v;
-            self.rpsdsf_arg[n] = i;
+            self.rpsdsf_arg[n] = if v >= BIG { NO_AGENT } else { i };
         }
+    }
+
+    /// The remembered argmin columns of row `n` (test hook for the
+    /// all-infeasible sentinel behavior).
+    #[cfg(test)]
+    pub(crate) fn args_row(&self, n: usize) -> (usize, usize) {
+        (self.psdsf_arg[n], self.rpsdsf_arg[n])
     }
 
     /// Lower bound on `criterion.score(set, n, i)` over every agent `i`.
@@ -192,6 +207,12 @@ pub struct IncrementalScorer {
     set: ScoreSet,
     /// Cached per-agent residuals, flat `m × r`.
     res: Vec<f64>,
+    /// Structure-of-arrays mirror of `si`/`res` for the batched kernels —
+    /// `Some` iff `kernel` is [`KernelKind::Batched`]. Rebuilt on full
+    /// rescores, residual columns patched in place on incremental ones.
+    soa: Option<SoaBuffers>,
+    /// Which row-fill kernel the engine runs (bit-identical either way).
+    kernel: KernelKind,
     /// The pruned candidate index, kept in sync with `set`.
     bounds: JointBounds,
     /// Parallel scoring shards (1 = serial).
@@ -217,6 +238,8 @@ impl IncrementalScorer {
             si: ScoreInputs::empty(),
             set: ScoreSet::sized(0, 0),
             res: Vec::new(),
+            soa: None,
+            kernel: KernelKind::default(),
             bounds: JointBounds::default(),
             shards: 1,
             valid: false,
@@ -230,6 +253,21 @@ impl IncrementalScorer {
     /// bit-identical at any count).
     pub fn set_shards(&mut self, shards: usize) {
         self.shards = shards.max(1);
+    }
+
+    /// Select the row-fill kernel (`--kernel scalar|batched`). Tensors are
+    /// bit-identical either way; switching drops the cache so the SoA
+    /// buffers are (re)built or released on the next rescore.
+    pub fn set_kernel(&mut self, kernel: KernelKind) {
+        if self.kernel != kernel {
+            self.kernel = kernel;
+            self.valid = false;
+        }
+    }
+
+    /// The active row-fill kernel.
+    pub fn kernel(&self) -> KernelKind {
+        self.kernel
     }
 
     /// Shards actually worth spawning for the current instance.
@@ -248,9 +286,14 @@ impl IncrementalScorer {
         if !self.valid || dirty.structural || !self.si.matches_shape(state) {
             self.si = state.score_inputs();
             self.res = rpsdsf::residuals(&self.si);
-            self.set = NativeScorer::compute_with_residuals_sharded(
+            self.soa = match self.kernel {
+                KernelKind::Batched => Some(SoaBuffers::build(&self.si, &self.res)),
+                KernelKind::Scalar => None,
+            };
+            self.set = NativeScorer::compute_with_residuals_soa(
                 &self.si,
                 &self.res,
+                self.soa.as_ref(),
                 self.effective_shards(),
             );
             self.bounds.rebuild(&self.set);
@@ -274,6 +317,9 @@ impl IncrementalScorer {
         self.si.recompute_role_totals();
         for &i in &dirty.agents {
             rpsdsf::agent_residuals_into(&self.si, i, &mut self.res[i * r..(i + 1) * r]);
+            if let Some(soa) = &mut self.soa {
+                soa.patch_agent(&self.res, i);
+            }
         }
         let n_all = self.si.n();
         // rows sharing a role with a dirty framework: their x_n changed, so
@@ -290,6 +336,7 @@ impl IncrementalScorer {
         let minima: Vec<RowMinima> = {
             let si = &self.si;
             let res = &self.res[..];
+            let soa = self.soa.as_ref();
             let agents = &dirty.agents;
             let full = &full_row;
             let views = self.set.split_rows_mut(shards);
@@ -297,7 +344,8 @@ impl IncrementalScorer {
                 let mut out = Vec::new();
                 for n in v.n0()..v.n1() {
                     if full[n] {
-                        let mins = NativeScorer::fill_row_rows_with_minima(si, res, &mut v, n);
+                        let mins =
+                            NativeScorer::fill_row_rows_with_minima(si, res, soa, &mut v, n);
                         out.push((n, mins));
                     } else {
                         // only the residual-dependent entries on dirty
@@ -399,6 +447,23 @@ impl ScoringEngine {
     /// The configured shard count.
     pub fn shards(&self) -> usize {
         self.shards
+    }
+
+    /// Select the row-fill kernel for the native-incremental path
+    /// (`--kernel scalar|batched`). External backends run their own math
+    /// and ignore this — their results are unaffected either way.
+    pub fn set_kernel(&mut self, kernel: KernelKind) {
+        if let EngineImpl::Incremental(inc) = &mut self.inner {
+            inc.set_kernel(kernel);
+        }
+    }
+
+    /// The active row-fill kernel, when this engine has one.
+    pub fn kernel(&self) -> Option<KernelKind> {
+        match &self.inner {
+            EngineImpl::Incremental(inc) => Some(inc.kernel()),
+            EngineImpl::External { .. } => None,
+        }
     }
 
     /// Build from a backend, routing the native scorer through the
@@ -654,6 +719,63 @@ mod tests {
                 p.pick_joint_pruned(set, si, &cands, b, 4)
             };
             assert_eq!(pick_a, pick_b, "pruned picks diverged at step {step}");
+        }
+    }
+
+    #[test]
+    fn all_infeasible_rows_report_no_agent_sentinel() {
+        // A zero-demand framework scores BIG on every agent; every path
+        // that maintains the pruning index (full rebuild, per-pair patch,
+        // in-pass full-row fill) must report NO_AGENT for such rows rather
+        // than defaulting to agent 0.
+        let mut st = illustrative();
+        st.add_framework(FrameworkEntry {
+            name: "idle".into(),
+            demand: ResVec::zero(2),
+            weight: 1.0,
+            active: true,
+        });
+        let mut inc = IncrementalScorer::new();
+        inc.rescore(&mut st); // full rebuild path
+        assert_eq!(inc.bounds.args_row(2), (NO_AGENT, NO_AGENT));
+        assert_ne!(inc.bounds.args_row(0).0, NO_AGENT, "feasible row keeps a real argmin");
+
+        st.place_task(0, 0).unwrap();
+        inc.rescore(&mut st); // patch_pair path: row 2's cells stay BIG
+        assert_eq!(inc.bounds.args_row(2), (NO_AGENT, NO_AGENT));
+        assert_eq!(inc.incremental_rescores, 1);
+
+        // share a role so row 2 becomes a fully refilled row on the next
+        // incremental pass (the fill_row_rows_with_minima path)
+        st.set_role(0, 7);
+        st.set_role(2, 7);
+        inc.rescore(&mut st); // structural → full rebuild
+        st.place_task(0, 1).unwrap();
+        inc.rescore(&mut st);
+        assert_eq!(inc.incremental_rescores, 2);
+        assert_eq!(inc.bounds.args_row(2), (NO_AGENT, NO_AGENT));
+    }
+
+    #[test]
+    fn scalar_and_batched_engines_agree() {
+        let mut rng = crate::rng::Rng::new(0x6E41);
+        let mut st_a = crate::testing::scaled_state_with_load(6, 12, 24, &mut rng);
+        let mut st_b = st_a.clone();
+        let mut scalar = ScoringEngine::native();
+        scalar.set_kernel(KernelKind::Scalar);
+        let mut batched = ScoringEngine::native();
+        batched.set_kernel(KernelKind::Batched);
+        assert_eq!(scalar.kernel(), Some(KernelKind::Scalar));
+        assert_eq!(batched.kernel(), Some(KernelKind::Batched));
+        for step in 0..20 {
+            let (fw, ag) = (rng.index(12), rng.index(6));
+            if st_a.task_fits(fw, ag) {
+                st_a.place_task(fw, ag).unwrap();
+                st_b.place_task(fw, ag).unwrap();
+            }
+            let set_a = scalar.scores(&mut st_a).unwrap().1.clone();
+            let set_b = batched.scores(&mut st_b).unwrap().1.clone();
+            assert_eq!(set_a, set_b, "kernels diverged at step {step}");
         }
     }
 

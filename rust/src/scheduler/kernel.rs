@@ -1,0 +1,418 @@
+//! Batched scoring kernels — whole-agent-row criterion math over
+//! structure-of-arrays inputs.
+//!
+//! [`crate::scheduler::scorer::NativeScorer::pair_values`] walks one
+//! `(framework, agent)` pair at a time through strided [`ScoreInputs`]
+//! accessors, which defeats vectorization for exactly the share math the
+//! paper evaluates at every offer cycle. This module computes a full agent
+//! row per call instead: [`SoaBuffers`] holds capacities and residuals
+//! *transposed* to `r × m` so each resource's agent lane is contiguous,
+//! and [`fill_row_batched`] sweeps the row in [`LANES`]-wide f64 chunks —
+//! PS-DSF, R-PS-DSF, best-fit ratio, and feasibility in one pass, with the
+//! per-row min/argmin folded in-line so `JointBounds` row rebuilds ride
+//! the same sweep.
+//!
+//! Two lane backends share the kernel body via the tiny ops in [`lanes`]:
+//! with the `simd` cargo feature (nightly), `std::simd` vectors; by
+//! default, fixed-width `[f64; LANES]` arrays written so the chunked loop
+//! autovectorizes on stable. Both are **bit-identical** to the scalar
+//! per-pair path: identical operation order (`(role_total * ratio) / φ`
+//! then `.min(BIG)`), identical `<`/`<=`/`>=` comparisons, identical
+//! [`BIG`] and [`FEAS_EPS`] semantics, and ascending-agent argmin
+//! tie-order. The row tail (`m % LANES` agents) and the `--kernel scalar`
+//! A/B path both funnel through `pair_values`, the single source of truth
+//! the equivalence is proved against (`testing::prop::kernel_equivalence`).
+
+use crate::error::{Error, Result};
+use crate::scheduler::policy::FEAS_EPS;
+use crate::scheduler::scorer::NativeScorer;
+use crate::scheduler::{RowMut, ScoreInputs};
+use crate::{is_big, BIG};
+
+/// Argmin sentinel for rows where no agent's score beats [`BIG`] — i.e.
+/// the row has no readable candidate at all. Distinct from agent `0` so
+/// pruning bounds built from all-infeasible rows can't alias a real agent.
+pub const NO_AGENT: usize = usize::MAX;
+
+/// Fixed kernel lane width. Four f64 lanes = one 256-bit AVX2 register;
+/// on narrower ISAs the compiler splits the lane into two 128-bit halves,
+/// which still beats the strided per-pair walk.
+pub(crate) const LANES: usize = 4;
+
+/// Which row-fill kernel the scoring engine runs — `--kernel
+/// scalar|batched` on the CLI, `experiment.kernel` in config files.
+/// Both produce bit-identical [`crate::scheduler::ScoreSet`]s; `Scalar`
+/// exists for A/B benchmarking and as the always-correct reference.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Default)]
+pub enum KernelKind {
+    /// Per-pair scalar arithmetic (`NativeScorer::pair_values`).
+    Scalar,
+    /// Lane-batched structure-of-arrays row sweep (this module).
+    #[default]
+    Batched,
+}
+
+impl KernelKind {
+    /// Parse a CLI/config spelling.
+    pub fn from_name(name: &str) -> Result<KernelKind> {
+        match name {
+            "scalar" => Ok(KernelKind::Scalar),
+            "batched" => Ok(KernelKind::Batched),
+            other => Err(Error::Config(format!(
+                "unknown kernel '{other}' (expected 'scalar' or 'batched')"
+            ))),
+        }
+    }
+
+    /// The canonical spelling, for labels and round-tripping.
+    pub fn label(&self) -> &'static str {
+        match self {
+            KernelKind::Scalar => "scalar",
+            KernelKind::Batched => "batched",
+        }
+    }
+}
+
+/// Structure-of-arrays mirror of the kernel's read set: nominal
+/// capacities and current residuals transposed to flat `r × m`
+/// (`[rr * m + i]`), so broadcasting one demand scalar against an agent
+/// lane is a contiguous load. Built once per full rescore; residual
+/// columns are patched in place when the incremental engine re-derives a
+/// dirty agent ([`SoaBuffers::patch_agent`]), keeping the batched patch
+/// path allocation-free.
+#[derive(Debug, Clone)]
+pub(crate) struct SoaBuffers {
+    m: usize,
+    r: usize,
+    /// Capacities `c[i][rr]` transposed: `c_t[rr * m + i]`.
+    c_t: Vec<f64>,
+    /// Residuals `res[i * r + rr]` transposed: `res_t[rr * m + i]`.
+    res_t: Vec<f64>,
+}
+
+impl SoaBuffers {
+    /// Transpose `si`'s capacities and the flat `m × r` residual buffer.
+    pub(crate) fn build(si: &ScoreInputs, res: &[f64]) -> Self {
+        let (m, r) = (si.m(), si.r());
+        debug_assert_eq!(res.len(), m * r);
+        let mut c_t = vec![0.0; m * r];
+        let mut res_t = vec![0.0; m * r];
+        for i in 0..m {
+            for rr in 0..r {
+                c_t[rr * m + i] = si.c(i, rr);
+                res_t[rr * m + i] = res[i * r + rr];
+            }
+        }
+        SoaBuffers { m, r, c_t, res_t }
+    }
+
+    /// Re-copy agent `i`'s residual column from the (already re-derived)
+    /// flat buffer. Capacities only change on structural events, which
+    /// force a full rebuild — so residuals are the only thing the
+    /// incremental patch path has to keep in sync.
+    pub(crate) fn patch_agent(&mut self, res: &[f64], i: usize) {
+        debug_assert!(i < self.m);
+        for rr in 0..self.r {
+            self.res_t[rr * self.m + i] = res[i * self.r + rr];
+        }
+    }
+}
+
+/// Load one lane starting at `s[0]` (caller guarantees `s.len() >= LANES`).
+#[inline]
+fn load(s: &[f64]) -> [f64; LANES] {
+    let mut v = [0.0; LANES];
+    v.copy_from_slice(&s[..LANES]);
+    v
+}
+
+/// The three lane ops the kernel body is written against. Each variant is
+/// a few lines; keeping them behind one interface means the `simd` build
+/// and the autovectorizing default share every line of kernel logic.
+#[cfg(feature = "simd")]
+mod lanes {
+    use super::LANES;
+    use std::simd::cmp::SimdPartialOrd;
+    use std::simd::num::SimdFloat;
+    use std::simd::{Mask, Simd};
+
+    /// `max(acc, d / den)` per lane — the dominant-ratio fold step.
+    /// `Simd::simd_max` matches `f64::max` for non-NaN inputs, and the
+    /// fold never produces NaN on lanes that survive the bad-lane masks
+    /// (`d > 0` and the denominators are screened by `or_nonpos`).
+    #[inline]
+    pub(super) fn max_div(acc: [f64; LANES], d: f64, den: [f64; LANES]) -> [f64; LANES] {
+        let q = Simd::<f64, LANES>::splat(d) / Simd::from_array(den);
+        Simd::from_array(acc).simd_max(q).to_array()
+    }
+
+    /// `bad | (v <= 0)` per lane — marks exhausted/absent denominators.
+    #[inline]
+    pub(super) fn or_nonpos(bad: [bool; LANES], v: [f64; LANES]) -> [bool; LANES] {
+        (Mask::<i64, LANES>::from_array(bad) | Simd::from_array(v).simd_le(Simd::splat(0.0)))
+            .to_array()
+    }
+
+    /// `ok & (res + eps >= d)` per lane — the feasibility fold step.
+    #[inline]
+    pub(super) fn and_fits(
+        ok: [bool; LANES],
+        res: [f64; LANES],
+        eps: f64,
+        d: f64,
+    ) -> [bool; LANES] {
+        (Mask::<i64, LANES>::from_array(ok)
+            & (Simd::from_array(res) + Simd::splat(eps)).simd_ge(Simd::splat(d)))
+        .to_array()
+    }
+}
+
+#[cfg(not(feature = "simd"))]
+mod lanes {
+    use super::LANES;
+
+    /// `max(acc, d / den)` per lane — the dominant-ratio fold step.
+    /// Same `f64::max` the scalar path's `Option` fold uses.
+    #[inline]
+    pub(super) fn max_div(acc: [f64; LANES], d: f64, den: [f64; LANES]) -> [f64; LANES] {
+        std::array::from_fn(|l| acc[l].max(d / den[l]))
+    }
+
+    /// `bad | (v <= 0)` per lane — marks exhausted/absent denominators.
+    #[inline]
+    pub(super) fn or_nonpos(bad: [bool; LANES], v: [f64; LANES]) -> [bool; LANES] {
+        std::array::from_fn(|l| bad[l] | (v[l] <= 0.0))
+    }
+
+    /// `ok & (res + eps >= d)` per lane — the feasibility fold step.
+    #[inline]
+    pub(super) fn and_fits(
+        ok: [bool; LANES],
+        res: [f64; LANES],
+        eps: f64,
+        d: f64,
+    ) -> [bool; LANES] {
+        std::array::from_fn(|l| ok[l] & (res[l] + eps >= d))
+    }
+}
+
+/// Fill framework `n`'s pair tensors (PS-DSF, R-PS-DSF, fit, feasibility)
+/// for every agent in one batched sweep, returning the row's
+/// `(psdsf_min, psdsf_arg, rpsdsf_min, rpsdsf_arg)` with the same strict-`<`
+/// ascending-agent fold as `JointBounds::rebuild_row` ([`NO_AGENT`] when
+/// nothing beats [`BIG`]).
+///
+/// Bit-identity with `pair_values`, lane by lane:
+/// - an inactive framework or zero-demand row short-circuits to all-BIG /
+///   infeasible, exactly what the per-pair masks produce;
+/// - the dominant ratios fold `max(acc, d/denom)` in ascending-resource
+///   order starting from `0.0` — equal to the scalar `Option` fold because
+///   every surviving quotient is strictly positive;
+/// - lanes whose demanded denominator is `<= 0` are mask-discarded to BIG
+///   rather than early-returned, which yields the same value;
+/// - feasibility folds `res + FEAS_EPS >= d` over *all* resources
+///   (including undemanded ones), as the scalar `all` does;
+/// - finalization applies the identical expression tree:
+///   `(role_total * ratio) / φ` then `.min(BIG)`, the same `is_big` gates
+///   for R-PS-DSF and fit.
+pub(crate) fn fill_row_batched(
+    si: &ScoreInputs,
+    res: &[f64],
+    soa: &SoaBuffers,
+    n: usize,
+    row: RowMut<'_>,
+) -> (f64, usize, f64, usize) {
+    let m = si.m();
+    debug_assert_eq!(soa.m, m);
+    let mut pm = BIG;
+    let mut pa = NO_AGENT;
+    let mut rm = BIG;
+    let mut ra = NO_AGENT;
+    if si.fmask(n) < 0.5 || !si.has_demand(n) {
+        // Masked row: every pair is BIG/infeasible and the minima stay at
+        // the sentinel — matching pair_values' fmask / has_demand gates.
+        row.psdsf.fill(BIG);
+        row.rpsdsf.fill(BIG);
+        row.fit.fill(BIG);
+        row.feas.fill(false);
+        return (pm, pa, rm, ra);
+    }
+    let r = si.r();
+    let rt = si.role_total(n);
+    let phi = si.phi(n);
+    let d_row = si.d_row(n);
+    let smask = si.smask_slice();
+    let mut i0 = 0usize;
+    while i0 + LANES <= m {
+        let mut ps_acc = [0.0f64; LANES];
+        let mut ps_bad = [false; LANES];
+        let mut rr_acc = [0.0f64; LANES];
+        let mut res_bad = [false; LANES];
+        let mut fits = [true; LANES];
+        for (rr, &d) in d_row.iter().enumerate() {
+            let res_lane = load(&soa.res_t[rr * m + i0..]);
+            fits = lanes::and_fits(fits, res_lane, FEAS_EPS, d);
+            if d > 0.0 {
+                let c_lane = load(&soa.c_t[rr * m + i0..]);
+                ps_bad = lanes::or_nonpos(ps_bad, c_lane);
+                ps_acc = lanes::max_div(ps_acc, d, c_lane);
+                res_bad = lanes::or_nonpos(res_bad, res_lane);
+                rr_acc = lanes::max_div(rr_acc, d, res_lane);
+            }
+        }
+        for l in 0..LANES {
+            let i = i0 + l;
+            let active = smask[i] > 0.5;
+            let ps = if !active || ps_bad[l] {
+                BIG
+            } else {
+                (rt * ps_acc[l] / phi).min(BIG)
+            };
+            let ratio = if !active || res_bad[l] { BIG } else { rr_acc[l].min(BIG) };
+            let rps = if is_big(ratio) { BIG } else { (rt * ratio / phi).min(BIG) };
+            let feasible = active && fits[l];
+            let fit = if feasible && !is_big(ratio) { ratio } else { BIG };
+            row.psdsf[i] = ps;
+            row.rpsdsf[i] = rps;
+            row.fit[i] = fit;
+            row.feas[i] = feasible;
+            if ps < pm {
+                pm = ps;
+                pa = i;
+            }
+            if rps < rm {
+                rm = rps;
+                ra = i;
+            }
+        }
+        i0 += LANES;
+    }
+    for i in i0..m {
+        let (ps, rps, fit, feasible) = NativeScorer::pair_values(si, res, n, i);
+        row.psdsf[i] = ps;
+        row.rpsdsf[i] = rps;
+        row.fit[i] = fit;
+        row.feas[i] = feasible;
+        if ps < pm {
+            pm = ps;
+            pa = i;
+        }
+        if rps < rm {
+            rm = rps;
+            ra = i;
+        }
+    }
+    (pm, pa, rm, ra)
+}
+
+/// The `--kernel scalar` row fill: `pair_values` per agent, with the same
+/// min/argmin fold and [`NO_AGENT`] sentinel as [`fill_row_batched`].
+pub(crate) fn fill_row_scalar(
+    si: &ScoreInputs,
+    res: &[f64],
+    n: usize,
+    row: RowMut<'_>,
+) -> (f64, usize, f64, usize) {
+    let mut pm = BIG;
+    let mut pa = NO_AGENT;
+    let mut rm = BIG;
+    let mut ra = NO_AGENT;
+    for i in 0..si.m() {
+        let (ps, rps, fit, feasible) = NativeScorer::pair_values(si, res, n, i);
+        row.psdsf[i] = ps;
+        row.rpsdsf[i] = rps;
+        row.fit[i] = fit;
+        row.feas[i] = feasible;
+        if ps < pm {
+            pm = ps;
+            pa = i;
+        }
+        if rps < rm {
+            rm = rps;
+            ra = i;
+        }
+    }
+    (pm, pa, rm, ra)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::scheduler::rpsdsf;
+
+    #[test]
+    fn kernel_kind_parses_and_round_trips() {
+        assert_eq!(KernelKind::from_name("scalar").unwrap(), KernelKind::Scalar);
+        assert_eq!(KernelKind::from_name("batched").unwrap(), KernelKind::Batched);
+        assert!(KernelKind::from_name("turbo").is_err());
+        assert_eq!(KernelKind::default(), KernelKind::Batched);
+        for k in [KernelKind::Scalar, KernelKind::Batched] {
+            assert_eq!(KernelKind::from_name(k.label()).unwrap(), k);
+        }
+    }
+
+    #[test]
+    fn batched_rows_bit_identical_to_scalar_across_widths() {
+        // Widths straddling the lane boundary (tail of 0..LANES-1 agents),
+        // plus a deactivated framework, a zero-demand framework, and a
+        // downed agent — every mask the kernel folds.
+        for m in [1usize, 2, 3, 4, 5, 7, 8, 13] {
+            let mut rng = crate::rng::Rng::new(0xBEEF + m as u64);
+            let mut st = crate::testing::scaled_state_with_load(m, 9, 4 * m, &mut rng);
+            st.deactivate(2);
+            st.framework_mut(4).demand = crate::resources::ResVec::zero(2);
+            st.mark_structural();
+            if m > 2 {
+                st.agent_down(1);
+            }
+            let si = st.score_inputs();
+            let res = rpsdsf::residuals(&si);
+            let soa = SoaBuffers::build(&si, &res);
+            for n in 0..si.n() {
+                let mut a = crate::scheduler::ScoreSet::sized(si.n(), m);
+                let mut b = crate::scheduler::ScoreSet::sized(si.n(), m);
+                let ma = fill_row_batched(&si, &res, &soa, n, a.row_mut(n));
+                let mb = fill_row_scalar(&si, &res, n, b.row_mut(n));
+                assert_eq!(a, b, "m={m} n={n}");
+                assert_eq!(ma, mb, "minima m={m} n={n}");
+            }
+        }
+    }
+
+    #[test]
+    fn masked_row_returns_sentinel_minima() {
+        let mut st = crate::testing::scaled_state(5, 3);
+        st.deactivate(1);
+        let si = st.score_inputs();
+        let res = rpsdsf::residuals(&si);
+        let soa = SoaBuffers::build(&si, &res);
+        let mut set = crate::scheduler::ScoreSet::sized(3, 5);
+        let (pm, pa, rm, ra) = fill_row_batched(&si, &res, &soa, 1, set.row_mut(1));
+        assert!(crate::is_big(pm) && crate::is_big(rm));
+        assert_eq!((pa, ra), (NO_AGENT, NO_AGENT));
+        for i in 0..5 {
+            assert!(crate::is_big(set.psdsf(1, i)) && !set.feas(1, i));
+        }
+    }
+
+    #[test]
+    fn patch_agent_matches_fresh_build() {
+        let mut rng = crate::rng::Rng::new(77);
+        let mut st = crate::testing::scaled_state_with_load(6, 8, 20, &mut rng);
+        let si = st.score_inputs();
+        let mut res = rpsdsf::residuals(&si);
+        let mut soa = SoaBuffers::build(&si, &res);
+        // Mutate allocations, re-derive two agents' residuals, patch them.
+        st.place_task(0, 2).unwrap();
+        st.place_task(3, 5).unwrap();
+        let si2 = st.score_inputs();
+        for i in [2usize, 5] {
+            let r = si2.r();
+            rpsdsf::agent_residuals_into(&si2, i, &mut res[i * r..(i + 1) * r]);
+            soa.patch_agent(&res, i);
+        }
+        let fresh = SoaBuffers::build(&si2, &res);
+        assert_eq!(soa.c_t, fresh.c_t);
+        assert_eq!(soa.res_t, fresh.res_t);
+    }
+}

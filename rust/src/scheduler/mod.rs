@@ -44,6 +44,24 @@
 //! results are bit-identical to the serial scan at any shard count
 //! (property-tested in `testing::prop`).
 //!
+//! ## Batched row kernels
+//!
+//! The per-pair arithmetic itself runs through [`kernel`]: a full agent row
+//! of PS-DSF / R-PS-DSF / fit / feasibility is computed per call over
+//! structure-of-arrays inputs ([`kernel::SoaBuffers`] holds capacities and
+//! residuals transposed to `r × m`, so each resource's agent lane is
+//! contiguous) in [`kernel::LANES`]-wide f64 chunks. With the `simd` cargo
+//! feature the lanes are `std::simd` vectors (nightly); the default build
+//! uses fixed-width arrays that autovectorize. Both are bit-identical to
+//! the per-pair scalar path (same `<` comparisons, ascending-agent tie
+//! order, [`BIG`]/[`policy::FEAS_EPS`] semantics — property-tested in
+//! `testing::prop::kernel_equivalence`), and the row pass folds the
+//! per-row min/argmin in-line so [`JointBounds`] rebuilds ride the same
+//! batched sweep. `--kernel scalar|batched` selects the path at runtime
+//! ([`engine::ScoringEngine::set_kernel`]) for A/B runs; `mesos-fair
+//! bench-diff` gates both the joint-argmin medians and the batched-kernel
+//! speedup against `benches/baseline_scorer.json`.
+//!
 //! * [`scorer::NativeScorer`] — pure-rust scoring (mirrors the L1 kernel).
 //! * `runtime::scorer::HloScorer` — the same math through the AOT-compiled
 //!   Pallas kernel via PJRT (parity-tested in `rust/tests/runtime_parity.rs`,
@@ -54,6 +72,7 @@
 
 pub mod drf;
 pub mod engine;
+pub mod kernel;
 pub mod policy;
 pub mod progressive;
 pub mod psdsf;
@@ -64,6 +83,7 @@ pub mod server_select;
 pub mod tsf;
 
 pub use engine::{IncrementalScorer, JointBounds, ScoringEngine};
+pub use kernel::{KernelKind, NO_AGENT};
 pub use policy::{BestFitMetric, Criterion, Policy, PolicyKind};
 pub use registry::{policy_by_name, POLICY_NAMES};
 pub use scorer::NativeScorer;
@@ -508,6 +528,20 @@ impl ScoreInputs {
         (0..self.r).any(|rr| self.d(n, rr) > 0.0)
     }
 
+    /// Framework `n`'s contiguous demand row `d[n][0..r]` — the batched
+    /// kernels broadcast one demand scalar across an agent lane, so they
+    /// want the row once, not `r` strided accessor calls per lane.
+    #[inline]
+    pub(crate) fn d_row(&self, n: usize) -> &[f64] {
+        &self.d[n * self.r..(n + 1) * self.r]
+    }
+
+    /// The full agent registration mask as a contiguous lane.
+    #[inline]
+    pub(crate) fn smask_slice(&self) -> &[f64] {
+        &self.smask
+    }
+
     /// `true` when this snapshot still structurally matches `state`:
     /// same framework/agent/resource counts, agent registration mask and
     /// nominal capacities — everything scoring reads from the pool
@@ -684,6 +718,19 @@ impl ScoreSet {
         self.feas[k] = v;
     }
 
+    /// Exclusive view of row `n`'s four pair-tensor slices — what the
+    /// batched row kernels write through.
+    #[inline]
+    pub(crate) fn row_mut(&mut self, n: usize) -> RowMut<'_> {
+        let k = n * self.m;
+        RowMut {
+            psdsf: &mut self.psdsf[k..k + self.m],
+            rpsdsf: &mut self.rpsdsf[k..k + self.m],
+            fit: &mut self.fit[k..k + self.m],
+            feas: &mut self.feas[k..k + self.m],
+        }
+    }
+
     /// Split the tensors into up to `shards` disjoint, contiguous row-range
     /// views — what each parallel scoring shard writes. Rows are
     /// independent, so filling the views concurrently is race-free by
@@ -797,6 +844,30 @@ impl ScoreRowsMut<'_> {
         let k = self.at(n, i);
         self.feas[k] = v;
     }
+
+    /// Exclusive view of (absolute) row `n`'s pair-tensor slices within
+    /// this shard — same shape as [`ScoreSet::row_mut`].
+    #[inline]
+    pub(crate) fn row_mut(&mut self, n: usize) -> RowMut<'_> {
+        let k = (n - self.n0) * self.m;
+        RowMut {
+            psdsf: &mut self.psdsf[k..k + self.m],
+            rpsdsf: &mut self.rpsdsf[k..k + self.m],
+            fit: &mut self.fit[k..k + self.m],
+            feas: &mut self.feas[k..k + self.m],
+        }
+    }
+}
+
+/// One framework row's pair tensors as contiguous `&mut` agent lanes — the
+/// unit of work for the batched kernels in [`kernel`]. Constructed by
+/// [`ScoreSet::row_mut`] / [`ScoreRowsMut::row_mut`], so the same kernel
+/// code serves the serial, sharded, and incremental-patch fill paths.
+pub(crate) struct RowMut<'a> {
+    pub(crate) psdsf: &'a mut [f64],
+    pub(crate) rpsdsf: &'a mut [f64],
+    pub(crate) fit: &'a mut [f64],
+    pub(crate) feas: &'a mut [bool],
 }
 
 /// Read-only access to score tensors — what the policies' argmin selection

@@ -26,6 +26,14 @@ use crate::BIG;
 /// Relative tolerance for score-tie detection.
 pub const TIE_EPS: f64 = 1e-9;
 
+/// Absolute slack for the residual-capacity feasibility test
+/// (`residual + FEAS_EPS >= demand` in `NativeScorer::pair_values` and
+/// the batched kernels). Coarser than [`TIE_EPS`] on purpose: residuals
+/// are sums/differences of task-count multiples of demands, so they
+/// accumulate absolute error, while tie detection compares two
+/// similarly-computed shares and can afford a relative test.
+pub const FEAS_EPS: f64 = 1e-4;
+
 /// `true` iff `a` and `b` are equal up to [`TIE_EPS`] relative to their
 /// magnitude (absolute near zero) — the shared tie test for every random
 /// tie-break in the scheduler.
@@ -373,6 +381,17 @@ mod tests {
             }
         }
         st
+    }
+
+    #[test]
+    fn epsilons_are_pinned() {
+        // Changing either constant changes which placements are feasible /
+        // which ties break randomly — i.e. the paper-facing results. Pin
+        // both so a drift shows up as a deliberate test edit, not a silent
+        // behavior change.
+        assert_eq!(TIE_EPS, 1e-9);
+        assert_eq!(FEAS_EPS, 1e-4);
+        assert!(FEAS_EPS > TIE_EPS);
     }
 
     #[test]

@@ -15,6 +15,8 @@
 //! [`ScoreSet`] is bit-identical to a full recompute.
 
 use crate::error::Result;
+use crate::scheduler::kernel::{self, KernelKind, SoaBuffers};
+use crate::scheduler::policy::FEAS_EPS;
 use crate::scheduler::{drf, psdsf, rpsdsf, tsf, ScoreInputs, ScoreRowsMut, ScoreSet, Scorer};
 use crate::{is_big, BIG};
 
@@ -27,45 +29,65 @@ impl NativeScorer {
         NativeScorer
     }
 
-    /// Score synchronously without the trait plumbing.
+    /// Score synchronously without the trait plumbing (batched kernel).
     pub fn compute(si: &ScoreInputs) -> ScoreSet {
         let res = rpsdsf::residuals(si);
-        Self::compute_with_residuals(si, &res)
+        Self::compute_rows(si, &res, KernelKind::Batched, 1)
     }
 
-    /// Full scoring pass given precomputed residuals (flat `m × r`).
-    pub(crate) fn compute_with_residuals(si: &ScoreInputs, res: &[f64]) -> ScoreSet {
-        let mut set = ScoreSet::sized(si.n(), si.m());
-        for n in 0..si.n() {
-            Self::fill_row(si, res, &mut set, n);
-        }
-        set
+    /// Scalar-kernel variant of [`NativeScorer::compute`] — the
+    /// `--kernel scalar` A/B reference path.
+    pub fn compute_scalar(si: &ScoreInputs) -> ScoreSet {
+        let res = rpsdsf::residuals(si);
+        Self::compute_rows(si, &res, KernelKind::Scalar, 1)
     }
 
-    /// Full scoring pass split across `shards` parallel row shards. Every
-    /// row is computed by the exact same [`NativeScorer::pair_values`] /
-    /// [`NativeScorer::row_shares`] arithmetic and rows are independent, so
-    /// the result is bit-identical to the serial pass at any shard count.
-    pub(crate) fn compute_with_residuals_sharded(
+    /// Row-fill pass over precomputed residuals (flat `m × r`) with an
+    /// explicit kernel and shard count — the benchable core, excluding the
+    /// residual recompute both kernels share.
+    pub fn compute_rows(
         si: &ScoreInputs,
         res: &[f64],
+        kernel: KernelKind,
+        shards: usize,
+    ) -> ScoreSet {
+        let soa = match kernel {
+            KernelKind::Batched => Some(SoaBuffers::build(si, res)),
+            KernelKind::Scalar => None,
+        };
+        Self::compute_with_residuals_soa(si, res, soa.as_ref(), shards)
+    }
+
+    /// Full scoring pass, optionally batched (`soa` present) and split
+    /// across `shards` parallel row shards. Rows are independent and every
+    /// row runs the exact same kernel arithmetic, so the result is
+    /// bit-identical across kernels and at any shard count.
+    pub(crate) fn compute_with_residuals_soa(
+        si: &ScoreInputs,
+        res: &[f64],
+        soa: Option<&SoaBuffers>,
         shards: usize,
     ) -> ScoreSet {
         let n = si.n();
-        if shards <= 1 || n < 2 {
-            return Self::compute_with_residuals(si, res);
-        }
         let mut set = ScoreSet::sized(n, si.m());
-        let views = set.split_rows_mut(shards);
-        std::thread::scope(|s| {
-            for mut v in views {
-                s.spawn(move || {
-                    for k in v.n0()..v.n1() {
-                        Self::fill_row_rows(si, res, &mut v, k);
-                    }
-                });
+        if shards <= 1 || n < 2 {
+            for mut v in set.split_rows_mut(1) {
+                for k in v.n0()..v.n1() {
+                    Self::fill_row_rows(si, res, soa, &mut v, k);
+                }
             }
-        });
+        } else {
+            let views = set.split_rows_mut(shards);
+            std::thread::scope(|s| {
+                for mut v in views {
+                    s.spawn(move || {
+                        for k in v.n0()..v.n1() {
+                            Self::fill_row_rows(si, res, soa, &mut v, k);
+                        }
+                    });
+                }
+            });
+        }
         set
     }
 
@@ -97,85 +119,51 @@ impl NativeScorer {
         let feasible = si.fmask(n) > 0.5
             && si.smask(i) > 0.5
             && si.has_demand(n)
-            && (0..r).all(|rr| res[i * r + rr] + 1e-4 >= si.d(n, rr));
+            && (0..r).all(|rr| res[i * r + rr] + FEAS_EPS >= si.d(n, rr));
         let fit = if feasible && !is_big(ratio) { ratio } else { BIG };
         (ps, rps, fit, feasible)
     }
 
-    /// Re-score one framework row: its global shares and every pair tensor
-    /// entry.
-    pub(crate) fn fill_row(si: &ScoreInputs, res: &[f64], set: &mut ScoreSet, n: usize) {
-        let (d, t) = Self::row_shares(si, n);
-        set.set_drf(n, d);
-        set.set_tsf(n, t);
-        for i in 0..si.m() {
-            Self::fill_pair(si, res, set, n, i);
-        }
-    }
-
-    /// Re-score the residual-dependent tensors (and PS-DSF) for one
-    /// `(framework, agent)` pair.
-    pub(crate) fn fill_pair(si: &ScoreInputs, res: &[f64], set: &mut ScoreSet, n: usize, i: usize) {
-        let (ps, rps, fit, feasible) = Self::pair_values(si, res, n, i);
-        set.set_psdsf(n, i, ps);
-        set.set_rpsdsf(n, i, rps);
-        set.set_feas(n, i, feasible);
-        set.set_fit(n, i, fit);
-    }
-
-    /// [`NativeScorer::fill_row`] against a parallel row-shard view.
+    /// Re-score one framework row against a row-shard view: global shares
+    /// plus every pair tensor entry, through the selected kernel
+    /// (batched when `soa` is present, scalar otherwise).
     pub(crate) fn fill_row_rows(
         si: &ScoreInputs,
         res: &[f64],
+        soa: Option<&SoaBuffers>,
         rows: &mut ScoreRowsMut<'_>,
         n: usize,
     ) {
-        let (d, t) = Self::row_shares(si, n);
-        rows.set_drf(n, d);
-        rows.set_tsf(n, t);
-        for i in 0..si.m() {
-            Self::fill_pair_rows(si, res, rows, n, i);
-        }
+        let _ = Self::fill_row_rows_with_minima(si, res, soa, rows, n);
     }
 
     /// [`NativeScorer::fill_row_rows`] that additionally returns the row's
     /// `(psdsf_min, psdsf_arg, rpsdsf_min, rpsdsf_arg)`, accumulated in the
     /// same ascending-agent order and with the same `<` comparisons as
-    /// `JointBounds::rebuild_row` — so the pruning index can be maintained
-    /// inside the (possibly parallel) fill pass instead of re-reading every
+    /// `JointBounds::rebuild_row` (args are [`kernel::NO_AGENT`] when no
+    /// score beats `BIG`) — so the pruning index can be maintained inside
+    /// the (possibly parallel) fill pass instead of re-reading every
     /// freshly written row serially afterwards.
     pub(crate) fn fill_row_rows_with_minima(
         si: &ScoreInputs,
         res: &[f64],
+        soa: Option<&SoaBuffers>,
         rows: &mut ScoreRowsMut<'_>,
         n: usize,
     ) -> (f64, usize, f64, usize) {
         let (d, t) = Self::row_shares(si, n);
         rows.set_drf(n, d);
         rows.set_tsf(n, t);
-        let mut pm = BIG;
-        let mut pa = 0usize;
-        let mut rm = BIG;
-        let mut ra = 0usize;
-        for i in 0..si.m() {
-            let (ps, rps, fit, feasible) = Self::pair_values(si, res, n, i);
-            rows.set_psdsf(n, i, ps);
-            rows.set_rpsdsf(n, i, rps);
-            rows.set_feas(n, i, feasible);
-            rows.set_fit(n, i, fit);
-            if ps < pm {
-                pm = ps;
-                pa = i;
-            }
-            if rps < rm {
-                rm = rps;
-                ra = i;
-            }
+        let row = rows.row_mut(n);
+        match soa {
+            Some(s) => kernel::fill_row_batched(si, res, s, n, row),
+            None => kernel::fill_row_scalar(si, res, n, row),
         }
-        (pm, pa, rm, ra)
     }
 
-    /// [`NativeScorer::fill_pair`] against a parallel row-shard view.
+    /// Recompute one `(n, i)` pair in a parallel row-shard view (the
+    /// incremental column-patch path; whole-row work goes through the
+    /// batched kernels instead).
     pub(crate) fn fill_pair_rows(
         si: &ScoreInputs,
         res: &[f64],
@@ -265,16 +253,19 @@ mod tests {
     }
 
     #[test]
-    fn sharded_compute_bit_identical_to_serial() {
+    fn sharded_compute_bit_identical_to_serial_for_both_kernels() {
         let mut rng = crate::rng::Rng::new(0x5A4D);
         let st = crate::testing::scaled_state_with_load(6, 13, 30, &mut rng);
         let si = st.score_inputs();
         let res = rpsdsf::residuals(&si);
-        let serial = NativeScorer::compute_with_residuals(&si, &res);
-        for shards in [1, 2, 3, 8, 64] {
-            let sharded = NativeScorer::compute_with_residuals_sharded(&si, &res, shards);
-            assert_eq!(serial, sharded, "{shards} shards");
+        let serial = NativeScorer::compute_rows(&si, &res, KernelKind::Scalar, 1);
+        for kernel in [KernelKind::Scalar, KernelKind::Batched] {
+            for shards in [1, 2, 3, 8, 64] {
+                let sharded = NativeScorer::compute_rows(&si, &res, kernel, shards);
+                assert_eq!(serial, sharded, "{shards} shards, {} kernel", kernel.label());
+            }
         }
+        assert_eq!(NativeScorer::compute(&si), NativeScorer::compute_scalar(&si));
     }
 
     #[test]

@@ -25,7 +25,7 @@ use crate::mesos::OfferHandler;
 use crate::metrics::DistStats;
 use crate::resources::ResVec;
 use crate::rng::Rng;
-use crate::scheduler::{policy_by_name, NativeScorer, Scorer};
+use crate::scheduler::{policy_by_name, KernelKind, NativeScorer, Scorer};
 use crate::sim::engine::EventQueue;
 use crate::sim::events::{EventKind, JobId};
 use crate::sim::trace::TraceRecorder;
@@ -102,6 +102,9 @@ pub struct OnlineConfig {
     /// Parallel scoring/argmin shards for the native engine (1 = serial;
     /// results are bit-identical at any count).
     pub shards: usize,
+    /// Row-fill kernel for the native engine (`--kernel scalar|batched`;
+    /// results are bit-identical either way).
+    pub kernel: KernelKind,
     /// Safety cutoff (simulated seconds).
     pub max_sim_time: f64,
 }
@@ -132,6 +135,7 @@ impl OnlineConfig {
             speculation: SpeculationCfg::default(),
             churn: ChurnModel::None,
             shards: 1,
+            kernel: KernelKind::default(),
             max_sim_time: 1e7,
         }
     }
@@ -331,6 +335,7 @@ impl OnlineSim {
         };
         let mut master = Master::new(pool, policy, cfg.mode, scorer);
         master.set_shards(cfg.shards.max(1));
+        master.set_kernel(cfg.kernel);
         let label = format!("{}/{}", cfg.policy, cfg.mode.label());
         let queues: Vec<SubmissionQueue> = scenario
             .queues

@@ -439,6 +439,247 @@ mod tests {
         }
     }
 
+    mod kernel_equivalence {
+        //! The batched-kernel contract (`--kernel` A/B): a batched-kernel
+        //! engine must stay **bit-identical** to a scalar-kernel engine —
+        //! all six tensors, the pruning index's row bounds, and the pruned
+        //! joint pick tuples (ties included, under per-cycle handler masks)
+        //! — across random instances, place/release churn, agents going
+        //! down and coming back up, and shard counts 1/2/8.
+
+        use crate::cluster::{AgentPool, ServerType};
+        use crate::mesos::allocator::{AllocatorMode, CycleMask, MaskedScores, OfferHandler};
+        use crate::mesos::offer::Offer;
+        use crate::resources::ResVec;
+        use crate::rng::Rng;
+        use crate::scheduler::{
+            AllocState, Criterion, FrameworkEntry, KernelKind, Policy, PolicyKind, ScoringEngine,
+        };
+        use crate::testing::forall;
+
+        #[derive(Debug, Clone, Copy, PartialEq)]
+        enum Op {
+            Place,
+            Unplace,
+            AgentDown,
+            AgentUp,
+        }
+
+        #[derive(Debug, Clone)]
+        struct Seq {
+            m: usize,
+            n: usize,
+            shared_roles: bool,
+            oblivious: bool,
+            shards: usize,
+            ops: Vec<Op>,
+            seed: u64,
+        }
+
+        fn gen_seq(rng: &mut Rng) -> Seq {
+            let ops = (0..8 + rng.index(20))
+                .map(|_| match rng.index(10) {
+                    0 => Op::AgentDown,
+                    1 => Op::AgentUp,
+                    2 | 3 => Op::Unplace,
+                    _ => Op::Place,
+                })
+                .collect();
+            Seq {
+                // m spans the lane boundary: tails of 0..LANES-1 agents
+                m: 2 + rng.index(9),
+                n: 2 + rng.index(14),
+                shared_roles: rng.chance(0.4),
+                oblivious: rng.chance(0.3),
+                shards: [1, 2, 8][rng.index(3)],
+                ops,
+                seed: rng.next_u64(),
+            }
+        }
+
+        fn build(seq: &Seq, rng: &mut Rng) -> AllocState {
+            let types: Vec<ServerType> = (0..seq.m)
+                .map(|i| {
+                    ServerType::new(
+                        format!("s{i}"),
+                        ResVec::new(&[rng.range(6.0, 40.0).round(), rng.range(6.0, 40.0).round()]),
+                    )
+                })
+                .collect();
+            let mut st = AllocState::new(AgentPool::new(&types));
+            for k in 0..seq.n {
+                st.add_framework(FrameworkEntry {
+                    name: format!("f{k}"),
+                    demand: ResVec::new(&[
+                        rng.range(0.5, 5.0).round().max(1.0),
+                        rng.range(0.5, 5.0).round().max(1.0),
+                    ]),
+                    weight: if rng.chance(0.25) { 2.0 } else { 1.0 },
+                    active: true,
+                });
+                if seq.shared_roles {
+                    st.set_role(k, k % 3);
+                }
+            }
+            st
+        }
+
+        /// Apply one op to BOTH mirrored states, drawing randomness once so
+        /// the scalar- and batched-kernel engines observe identical
+        /// mutation sequences.
+        fn apply_both(op: Op, a: &mut AllocState, b: &mut AllocState, rng: &mut Rng) {
+            let (n, m) = (a.n_frameworks(), a.pool.len());
+            match op {
+                Op::Place => {
+                    for _ in 0..8 {
+                        let fw = rng.index(n);
+                        let ag = rng.index(m);
+                        if a.pool.agent(ag).registered && a.task_fits(fw, ag) {
+                            a.place_task(fw, ag).unwrap();
+                            b.place_task(fw, ag).unwrap();
+                            return;
+                        }
+                    }
+                }
+                Op::Unplace => {
+                    for _ in 0..8 {
+                        let fw = rng.index(n);
+                        let ag = rng.index(m);
+                        if a.tasks_on(fw, ag) >= 1.0 {
+                            let d = a.framework(fw).demand;
+                            a.unplace(fw, ag, &d, 1.0).unwrap();
+                            b.unplace(fw, ag, &d, 1.0).unwrap();
+                            return;
+                        }
+                    }
+                }
+                Op::AgentDown => {
+                    let ag = rng.index(m);
+                    if a.pool.agent(ag).registered {
+                        a.agent_down(ag);
+                        b.agent_down(ag);
+                    }
+                }
+                Op::AgentUp => {
+                    let ag = rng.index(m);
+                    if !a.pool.agent(ag).registered {
+                        a.agent_up(ag);
+                        b.agent_up(ag);
+                    }
+                }
+            }
+        }
+
+        /// Wants-driven handler with a fixed per-framework appetite mask.
+        struct MaskHandler {
+            wants: Vec<bool>,
+        }
+        impl OfferHandler for MaskHandler {
+            fn wants(&self, n: usize) -> bool {
+                self.wants[n]
+            }
+            fn accept(&mut self, offer: &Offer) -> (f64, ResVec) {
+                (0.0, ResVec::zero(offer.resources.len()))
+            }
+        }
+
+        #[test]
+        fn prop_batched_kernel_bit_identical_to_scalar() {
+            forall(0x51D0, 30, gen_seq, |seq| {
+                let mut rng = Rng::new(seq.seed);
+                let mut st_s = build(seq, &mut rng);
+                let mut st_b = st_s.clone();
+                let mut scalar = ScoringEngine::native();
+                scalar.set_kernel(KernelKind::Scalar);
+                let mut batched = ScoringEngine::native();
+                batched.set_kernel(KernelKind::Batched);
+                batched.set_shards(seq.shards);
+                let policies = [
+                    Policy::new("psdsf", Criterion::PsDsf, PolicyKind::Joint),
+                    Policy::new("rpsdsf", Criterion::RPsDsf, PolicyKind::Joint),
+                ];
+                scalar.scores_with_bounds(&mut st_s).map_err(|e| e.to_string())?;
+                batched.scores_with_bounds(&mut st_b).map_err(|e| e.to_string())?;
+                for (step, &op) in seq.ops.iter().enumerate() {
+                    apply_both(op, &mut st_s, &mut st_b, &mut rng);
+                    let candidates: Vec<usize> = st_s
+                        .pool
+                        .registered_ids()
+                        .into_iter()
+                        .filter(|_| rng.chance(0.8))
+                        .collect();
+                    let handler = MaskHandler {
+                        wants: (0..st_s.n_frameworks()).map(|_| rng.chance(0.85)).collect(),
+                    };
+                    let mode = if seq.oblivious {
+                        AllocatorMode::Oblivious
+                    } else {
+                        AllocatorMode::Characterized
+                    };
+                    let no_inference: Vec<bool> = (0..st_s.n_frameworks())
+                        .map(|_| seq.oblivious && rng.chance(0.3))
+                        .collect();
+                    let mut mask = CycleMask::new(&st_s, &handler, mode, &no_inference);
+                    for _ in 0..rng.index(4) {
+                        mask.decline(rng.index(st_s.n_frameworks()), rng.index(st_s.pool.len()));
+                    }
+                    let (si_s, set_s, bounds_s) =
+                        scalar.scores_with_bounds(&mut st_s).map_err(|e| e.to_string())?;
+                    let (si_b, set_b, bounds_b) =
+                        batched.scores_with_bounds(&mut st_b).map_err(|e| e.to_string())?;
+                    if si_s != si_b {
+                        return Err(format!("inputs diverged after step {step} ({op:?})"));
+                    }
+                    if set_s != set_b {
+                        return Err(format!(
+                            "tensors diverged after step {step} ({op:?}): batched must be \
+                             bit-identical to scalar"
+                        ));
+                    }
+                    for crit in [Criterion::PsDsf, Criterion::RPsDsf] {
+                        for n in 0..set_s.n() {
+                            let (lo_s, lo_b) =
+                                (bounds_s.row_bound(crit, n), bounds_b.row_bound(crit, n));
+                            if lo_s != lo_b {
+                                return Err(format!(
+                                    "step {step} ({op:?}): {crit:?} bound row {n}: \
+                                     scalar {lo_s} != batched {lo_b}"
+                                ));
+                            }
+                        }
+                    }
+                    let view_s = MaskedScores { base: set_s, mask: &mask };
+                    let view_b = MaskedScores { base: set_b, mask: &mask };
+                    for p in &policies {
+                        let plain_full = p.pick_joint(set_s, si_s, &candidates);
+                        let masked_full = p.pick_joint(&view_s, si_s, &candidates);
+                        for shards in [1usize, 2, 8] {
+                            let plain =
+                                p.pick_joint_pruned(set_b, si_b, &candidates, bounds_b, shards);
+                            if plain != plain_full {
+                                return Err(format!(
+                                    "step {step} ({op:?}) {}: batched pruned({shards}) \
+                                     {plain:?} != scalar full {plain_full:?}",
+                                    p.name
+                                ));
+                            }
+                            let masked =
+                                p.pick_joint_pruned(&view_b, si_b, &candidates, bounds_b, shards);
+                            if masked != masked_full {
+                                return Err(format!(
+                                    "step {step} ({op:?}) {}: batched masked pruned({shards}) \
+                                     {masked:?} != scalar full {masked_full:?}",
+                                    p.name
+                                ));
+                            }
+                        }
+                    }
+                }
+                Ok(())
+            });
+        }
+    }
+
     #[test]
     fn passes_true_property() {
         forall(1, 100, |rng| rng.below(100), |x| {
