@@ -86,7 +86,8 @@ pub fn bench_adaptive<F: FnMut()>(
 
 fn summarize(name: &str, times: &[f64]) -> BenchResult {
     let mut sorted = times.to_vec();
-    sorted.sort_by(|a, b| a.partial_cmp(b).unwrap());
+    // total_cmp: a NaN measurement must not abort a whole bench suite
+    sorted.sort_by(f64::total_cmp);
     let s = Summary::of(times);
     BenchResult {
         name: name.to_string(),

@@ -96,6 +96,10 @@ COMMANDS:
     online                 Run a single online experiment
     scenarios              Run the scenario smoke matrix (CI: every --scenario
                            under selected policies; writes BENCH_scenarios.json)
+    explain                Reconstruct why a framework won or starved from a
+                           recorded decision trace (--trace FILE --job QUERY)
+    obs-report F...        Render phase-timing/counter tables (+ per-cycle
+                           chart) from one or more --obs .summary.json files
     bench-diff CUR BASE    Compare BENCH_scorer.json joint-argmin medians
                            against a committed baseline (CI regression gate)
     e2e                    End-to-end run with real PJRT task compute
@@ -116,6 +120,14 @@ COMMON FLAGS:
     --record FILE          Write the realized scenario trace (JSONL) before running
     --replay FILE          Drive the run from a recorded scenario trace (the
                            header's scenario/seed/dims must match the config)
+    --obs [PATH|DIR]       Attach the scheduler flight recorder. online: bare
+                           --obs prints the phase table; --obs PATH also spills
+                           the decision trace (JSONL) + PATH.summary.json.
+                           scenarios: --obs DIR writes both per run into DIR.
+                           Grants are bit-identical with or without it.
+    --trace FILE           explain: the --obs decision trace to read
+    --job QUERY            explain: framework slot id or name substring
+    --limit N              explain: lost-decision rows to show   [default: 10]
     --shards N             Parallel scoring/argmin shards (bit-identical
                            results at any count)                 [default: 1]
     --kernel K             Row-fill kernel: scalar|batched (bit-identical

@@ -9,6 +9,8 @@
 //! seed = 42
 //! shards = 4                 # parallel scoring/argmin shards (default 1)
 //! kernel = "batched"         # row-fill kernel: "scalar" | "batched" (default)
+//! obs = true                 # attach the flight recorder (default false);
+//!                            # grants are bit-identical either way
 //!
 //! [cluster]
 //! servers = ["type-1", "type-2", "type-3"]   # or "trio-cpu"/"trio-mem"/"trio-io" (r=3)
@@ -256,6 +258,9 @@ pub fn parse_online_config(text: &str) -> Result<OnlineConfig> {
     if let Some(v) = doc.get("experiment.kernel").and_then(|v| v.as_str()) {
         cfg.kernel = KernelKind::from_name(v)?;
     }
+    if let Some(v) = doc.get("experiment.obs").and_then(|v| v.as_bool()) {
+        cfg.obs = v;
+    }
     if let Some(v) = doc.get("experiment.staged").and_then(|v| v.as_bool()) {
         cfg.staged = v;
     }
@@ -292,6 +297,7 @@ mod tests {
         stage_interval = 30.0
         shards = 4
         kernel = "scalar"
+        obs = true
 
         [cluster]
         servers = ["type-1", "type-2", "type-3"]
@@ -317,6 +323,7 @@ mod tests {
         assert_eq!(cfg.stage_interval, 30.0);
         assert_eq!(cfg.shards, 4);
         assert_eq!(cfg.kernel, crate::scheduler::KernelKind::Scalar);
+        assert!(cfg.obs);
         assert_eq!(cfg.cluster.len(), 3);
         assert_eq!(cfg.cluster[1].name, "type-2");
         assert_eq!(cfg.queues.len(), 2);

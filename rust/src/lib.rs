@@ -52,6 +52,15 @@
 //! `churn`, `mixed-bottleneck` — see [`workload::scenario`] for their
 //! definitions and `config::experiment` for the scenario TOML schema.
 //!
+//! ## Observability
+//!
+//! The [`obs`] flight recorder (CLI `--obs`) threads a zero-overhead-
+//! when-off sink through the allocation loop: deterministic per-decision
+//! events (winning score, runner-up margin, accept/decline, churn)
+//! spill to JSONL next to the workload traces, monotonic cycle-phase
+//! timings aggregate into per-phase histograms, and `mesos-fair
+//! explain` / `obs-report` answer *why* a framework won or starved.
+//!
 //! ## Layering
 //!
 //! * **Layer 3 (this crate)** — the coordinator: a faithful discrete-event
@@ -96,6 +105,7 @@ pub mod error;
 pub mod exp;
 pub mod mesos;
 pub mod metrics;
+pub mod obs;
 pub mod resources;
 pub mod rng;
 #[cfg(feature = "hlo")]

@@ -10,6 +10,7 @@ use mesos_fair::error::{Error, Result};
 use mesos_fair::exp::{run_figure, run_illustrative, FIGURE_IDS};
 use mesos_fair::mesos::AllocatorMode;
 use mesos_fair::metrics::json::Json;
+use mesos_fair::obs::{explain as obs_explain, report as obs_report, trace as obs_trace};
 use mesos_fair::scheduler::{KernelKind, NativeScorer, Scorer, POLICY_NAMES};
 use mesos_fair::sim::online::{OnlineConfig, OnlineSim};
 use mesos_fair::workload::{
@@ -47,6 +48,8 @@ fn run() -> Result<()> {
         Some("figure") => cmd_figure(&args),
         Some("online") => cmd_online(&args),
         Some("scenarios") => cmd_scenarios(&args),
+        Some("explain") => cmd_explain(&args),
+        Some("obs-report") => cmd_obs_report(&args),
         Some("bench-diff") => cmd_bench_diff(&args),
         Some("e2e") => cmd_e2e(&args),
         Some("parity") => cmd_parity(&args),
@@ -117,8 +120,62 @@ fn cmd_online(args: &Args) -> Result<()> {
         scenario_trace::write_file(&scenario, path)?;
         println!("recorded scenario trace to {path}");
     }
+    // capture the trace header before `cfg` moves into the sim
+    let obs_meta = obs_trace::ObsMeta {
+        policy: cfg.policy.clone(),
+        mode: cfg.mode.label().to_string(),
+        scenario: scenario.name.clone(),
+        seed: cfg.seed,
+    };
     let result = OnlineSim::with_scenario_scorer(cfg, scenario, scorer)?.run()?;
     print_online(&result);
+    if let (Some(path), Some(summary)) = (args.flag("obs"), &result.obs) {
+        obs_trace::write_file(&obs_meta, &summary.events, path)?;
+        let summary_path = format!("{path}.summary.json");
+        obs_report::write_summary(&result.label, summary, &summary_path)?;
+        println!("wrote obs trace to {path} (+ {summary_path})");
+    }
+    Ok(())
+}
+
+/// `mesos-fair explain --trace FILE --job QUERY [--limit N]`: reconstruct
+/// why a framework won (or kept losing) from a recorded decision trace.
+fn cmd_explain(args: &Args) -> Result<()> {
+    let path = args
+        .flag("trace")
+        .ok_or_else(|| Error::Config("explain needs --trace FILE (an --obs trace)".into()))?;
+    let query = args
+        .flag("job")
+        .ok_or_else(|| Error::Config("explain needs --job QUERY (slot id or name part)".into()))?;
+    let limit = args.flag_usize("limit", 10)?;
+    let trace = obs_trace::read_file(path)?;
+    println!(
+        "trace: scenario '{}' policy {} mode {} seed {:#x} ({} events)",
+        trace.meta.scenario,
+        trace.meta.policy,
+        trace.meta.mode,
+        trace.meta.seed,
+        trace.events.len()
+    );
+    let ex = obs_explain::explain(&trace, query)?;
+    print!("{}", ex.render(limit));
+    Ok(())
+}
+
+/// `mesos-fair obs-report <summary.json>...`: render phase/counter tables
+/// (and an overlaid per-cycle chart) from one or more timing summaries.
+fn cmd_obs_report(args: &Args) -> Result<()> {
+    if args.positional.is_empty() {
+        return Err(Error::Config(
+            "obs-report needs one or more .summary.json files (see --obs)".into(),
+        ));
+    }
+    let docs = args
+        .positional
+        .iter()
+        .map(|p| obs_report::read_summary(p))
+        .collect::<Result<Vec<_>>>()?;
+    print!("{}", obs_report::render(&docs));
     Ok(())
 }
 
@@ -128,11 +185,16 @@ fn cmd_scenarios(args: &Args) -> Result<()> {
     let jobs = args.flag_usize("jobs", 2)?;
     let seed = args.flag_u64("seed", 0x5EED)?;
     let policies = args.flag_or("policies", "drf,psdsf");
+    // --obs DIR turns on the flight recorder for every run and drops one
+    // decision trace + timing summary per (scenario, policy) into DIR
+    let obs_dir = args.flag("obs");
     let mut rows: Vec<Json> = Vec::new();
     for name in SCENARIO_NAMES {
         for policy in policies.split(',').filter(|p| !p.is_empty()) {
-            let cfg =
+            let mut cfg =
                 scenario_config(name, policy, AllocatorMode::Characterized, Some(jobs), seed)?;
+            cfg.obs = obs_dir.is_some();
+            let run_seed = cfg.seed;
             let expected: usize = cfg.queues.iter().map(|q| q.jobs).sum();
             let t0 = std::time::Instant::now();
             let r = OnlineSim::new(cfg)?.run()?;
@@ -148,7 +210,7 @@ fn cmd_scenarios(args: &Args) -> Result<()> {
                     r.jobs_completed, expected
                 )));
             }
-            rows.push(Json::obj(vec![
+            let mut row = vec![
                 ("scenario", Json::Str(name.to_string())),
                 ("policy", Json::Str(policy.to_string())),
                 ("jobs", Json::Num(r.jobs_completed as f64)),
@@ -159,7 +221,31 @@ fn cmd_scenarios(args: &Args) -> Result<()> {
                 ("completion_p95", Json::Num(r.completion.p95)),
                 ("slowdown_p95", Json::Num(r.slowdown.p95)),
                 ("wall_seconds", Json::Num(wall)),
-            ]));
+            ];
+            if let Some(s) = &r.obs {
+                // engine counters ride along in BENCH_scenarios.json
+                row.push(("obs_cycles", Json::Num(s.cycles as f64)));
+                row.push(("full_rescores", Json::Num(s.counters.full_rescores as f64)));
+                row.push((
+                    "incremental_rescores",
+                    Json::Num(s.counters.incremental_rescores as f64),
+                ));
+                row.push(("rows_patched", Json::Num(s.counters.rows_patched as f64)));
+                row.push(("kernel_rows_filled", Json::Num(s.counters.kernel_rows_filled as f64)));
+                row.push(("shard_imbalance", Json::Num(s.counters.shard_imbalance(s.shards))));
+            }
+            rows.push(Json::obj(row));
+            if let (Some(dir), Some(s)) = (obs_dir, &r.obs) {
+                let meta = obs_trace::ObsMeta {
+                    policy: policy.to_string(),
+                    mode: AllocatorMode::Characterized.label().to_string(),
+                    scenario: name.to_string(),
+                    seed: run_seed,
+                };
+                let base = format!("{dir}/obs_{name}_{policy}");
+                obs_trace::write_file(&meta, &s.events, &format!("{base}.jsonl"))?;
+                obs_report::write_summary(&r.label, s, &format!("{base}.summary.json"))?;
+            }
         }
     }
     let doc = Json::obj(vec![
@@ -169,6 +255,9 @@ fn cmd_scenarios(args: &Args) -> Result<()> {
     ]);
     doc.write_to("BENCH_scenarios.json")?;
     println!("wrote BENCH_scenarios.json");
+    if let Some(dir) = obs_dir {
+        println!("wrote obs traces + summaries under {dir}/");
+    }
     Ok(())
 }
 
@@ -215,6 +304,9 @@ fn build_online_config(args: &Args) -> Result<OnlineConfig> {
         if let Some(k) = kernel {
             cfg.kernel = k;
         }
+        if args.has("obs") {
+            cfg.obs = true;
+        }
         return Ok(cfg);
     }
     let policy = args.flag_or("scheduler", "drf");
@@ -248,6 +340,7 @@ fn build_online_config(args: &Args) -> Result<OnlineConfig> {
     if let Some(k) = kernel {
         cfg.kernel = k;
     }
+    cfg.obs = args.has("obs");
     Ok(cfg)
 }
 
@@ -317,6 +410,9 @@ fn print_online(r: &mesos_fair::sim::online::OnlineResult) {
         );
     }
     println!("allocator     : {} cycles, {} grants", r.cycles, r.grants);
+    if let Some(s) = &r.obs {
+        print!("{}", obs_report::phase_table(s));
+    }
 }
 
 #[cfg(feature = "hlo")]

@@ -21,6 +21,7 @@
 use crate::cluster::AgentId;
 use crate::error::Result;
 use crate::mesos::offer::Offer;
+use crate::obs::{ObsEvent, ObsPhase, ObsSink};
 use crate::resources::ResVec;
 use crate::rng::Rng;
 use crate::scheduler::engine::ScoringEngine;
@@ -217,6 +218,14 @@ impl ScoreView for MaskedScores<'_> {
 /// One allocation cycle. Returns the grants applied. `no_inference[n]` marks
 /// frameworks whose demand is still unknown (oblivious mode only; empty
 /// slice in characterized mode).
+///
+/// `obs` is the flight-recorder sink ([`crate::obs::NoopSink`] when
+/// tracing is off). With a disabled sink no event is built, no clock is
+/// read and the sharded joint argmin runs as usual; with an enabled sink
+/// the joint pick switches to the serial counted scan (bit-identical
+/// result, adds rows-scanned/pruned accounting) and each decision emits
+/// structured events. The decision sequence itself never depends on the
+/// sink — contender reconstruction consumes no RNG draws.
 #[allow(clippy::too_many_arguments)]
 pub fn allocation_cycle(
     state: &mut AllocState,
@@ -226,10 +235,15 @@ pub fn allocation_cycle(
     handler: &mut dyn OfferHandler,
     no_inference: &[bool],
     rng: &mut Rng,
+    obs: &mut dyn ObsSink,
 ) -> Result<Vec<Grant>> {
     let mut grants = Vec::new();
     let mut mask = CycleMask::new(state, handler, mode, no_inference);
     let shards = engine.shards();
+    let obs_on = obs.enabled();
+    let mut cycle_id = 0u64;
+    let mut iters = 0u32;
+    let mut declines = 0u32;
     // Hard bound: each iteration either grants (bounded by capacity) or
     // declines (bounded by n_frameworks * n_agents pairs).
     let max_iters = 10_000.max(4 * state.n_frameworks() * state.pool.len());
@@ -239,16 +253,24 @@ pub fn allocation_cycle(
         if candidates.is_empty() {
             break;
         }
+        if obs_on && iters == 0 {
+            cycle_id = obs.begin_cycle(&candidates);
+        }
         // The engine re-scores only what the last grant dirtied;
         // decline-only iterations are pure cache hits. The handler masks
         // are layered over the cached tensors via MaskedScores — nothing
         // is cloned and the cache is never written. Joint picks go through
         // the engine's pruned candidate index (bit-identical to the full
         // n×m scan; see Policy::pick_joint_pruned).
-        let pick = {
-            let (si, set, bounds) = engine.scores_with_bounds(state)?;
+        let (pick, decision) = {
+            let t0 = obs_on.then(std::time::Instant::now);
+            let (si, set, bounds) = engine.scores_with_bounds_obs(state, obs)?;
+            if let Some(t0) = t0 {
+                obs.span(ObsPhase::ScoreRecompute, t0.elapsed().as_secs_f64());
+            }
             let view = MaskedScores { base: set, mask: &mask };
-            match policy.kind {
+            let t0 = obs_on.then(std::time::Instant::now);
+            let (pick, scanned, pruned) = match policy.kind {
                 PolicyKind::PerAgent => {
                     let order = server_select::rrr_order(&candidates, rng);
                     let mut found = None;
@@ -258,17 +280,62 @@ pub fn allocation_cycle(
                             break;
                         }
                     }
-                    found
+                    (found, 0, 0)
                 }
                 PolicyKind::Joint => {
-                    policy.pick_joint_pruned(&view, si, &candidates, bounds, shards)
+                    if obs_on {
+                        policy.pick_joint_pruned_counted(&view, si, &candidates, bounds)
+                    } else {
+                        (policy.pick_joint_pruned(&view, si, &candidates, bounds, shards), 0, 0)
+                    }
                 }
-                PolicyKind::BestFit => {
-                    pick_bestfit_with_fallback(policy, &view, si, &candidates, no_inference, rng)
-                }
+                PolicyKind::BestFit => (
+                    pick_bestfit_with_fallback(policy, &view, si, &candidates, no_inference, rng),
+                    0,
+                    0,
+                ),
+            };
+            if let Some(t0) = t0 {
+                obs.span(ObsPhase::JointArgmin, t0.elapsed().as_secs_f64());
             }
+            let decision = match pick {
+                Some((n, i)) if obs_on => {
+                    // per-agent policies only weighed frameworks on the
+                    // picked agent; joint/best-fit weighed every candidate
+                    let dec_cands: &[usize] = match policy.kind {
+                        PolicyKind::PerAgent => std::slice::from_ref(&i),
+                        PolicyKind::Joint | PolicyKind::BestFit => &candidates,
+                    };
+                    let contenders = policy.contenders(&view, si, dec_cands);
+                    let runner_up = contenders
+                        .iter()
+                        .filter(|c| c.framework != n)
+                        .min_by(|a, b| {
+                            a.score.total_cmp(&b.score).then(a.framework.cmp(&b.framework))
+                        })
+                        .copied();
+                    Some(ObsEvent::Decision {
+                        cycle: cycle_id,
+                        iter: iters,
+                        framework: n,
+                        agent: i,
+                        score: policy.criterion.score(&view, n, i),
+                        runner_up,
+                        contenders,
+                        rows_scanned: scanned,
+                        rows_pruned: pruned,
+                    })
+                }
+                _ => None,
+            };
+            (pick, decision)
         };
         let Some((n, i)) = pick else { break };
+        if let Some(d) = decision {
+            obs.record(d);
+        }
+        let it = iters;
+        iters += 1;
 
         let offered = match mode {
             // the whole residual of the agent (coarse-grained offer)
@@ -277,15 +344,47 @@ pub fn allocation_cycle(
             AllocatorMode::Characterized => state.framework(n).demand,
         };
         let offer = Offer::new(n, i, offered);
+        let t0 = obs_on.then(std::time::Instant::now);
         let (count, amount) = handler.accept(&offer);
+        if let Some(t0) = t0 {
+            obs.span(ObsPhase::OfferDispatch, t0.elapsed().as_secs_f64());
+        }
         if count <= 0.0 {
             mask.decline(n, i);
+            if obs_on {
+                declines += 1;
+                obs.record(ObsEvent::Decline {
+                    cycle: cycle_id,
+                    iter: it,
+                    framework: n,
+                    agent: i,
+                    reason: "handler-declined".into(),
+                });
+            }
             continue;
         }
         debug_assert!(amount.fits_within(&offer.resources));
         state.place(n, i, &amount, count)?;
         mask.after_grant(n, i, state, handler);
+        if obs_on {
+            obs.record(ObsEvent::Accept {
+                cycle: cycle_id,
+                iter: it,
+                framework: n,
+                agent: i,
+                count,
+                amount: amount.as_slice().to_vec(),
+            });
+        }
         grants.push(Grant { framework: n, agent: i, amount, count });
+    }
+    if obs_on && iters > 0 {
+        obs.record(ObsEvent::CycleEnd {
+            cycle: cycle_id,
+            iters,
+            grants: grants.len() as u32,
+            declines,
+        });
     }
     Ok(grants)
 }
@@ -326,6 +425,7 @@ fn pick_bestfit_with_fallback<S: ScoreView + ?Sized>(
 mod tests {
     use super::*;
     use crate::cluster::{AgentPool, ServerType};
+    use crate::obs::{FlightRecorder, NoopSink};
     use crate::scheduler::{policy_by_name, FrameworkEntry, NativeScorer};
     use std::collections::HashSet;
 
@@ -387,6 +487,7 @@ mod tests {
             &mut h,
             &[],
             &mut rng,
+            &mut NoopSink,
         )
         .unwrap();
         assert!(!grants.is_empty());
@@ -415,6 +516,7 @@ mod tests {
             &mut h,
             &no_inf,
             &mut rng,
+            &mut NoopSink,
         )
         .unwrap();
         // coarse grants: at least one multi-executor chunk
@@ -435,6 +537,7 @@ mod tests {
             &mut h,
             &[],
             &mut Rng::new(3),
+            &mut NoopSink,
         )
         .unwrap();
         assert!(grants.is_empty());
@@ -465,6 +568,7 @@ mod tests {
             &mut h,
             &[],
             &mut Rng::new(4),
+            &mut NoopSink,
         )
         .unwrap();
         // at most one offer per (framework, agent) pair
@@ -487,11 +591,88 @@ mod tests {
             &mut h,
             &[],
             &mut Rng::new(5),
+            &mut NoopSink,
         )
         .unwrap();
         for a in st.pool.agents() {
             assert!(a.residual().non_negative(), "agent {} over-allocated", a.id);
         }
+    }
+
+    #[test]
+    fn recorded_cycle_matches_silent_run_and_emits_consistent_events() {
+        use crate::obs::ObsEvent;
+        // identical inputs, one traced and one silent: the grant sequence
+        // must be bit-identical (tracing must not perturb decisions), and
+        // the trace must tell the same story as the grants
+        let (mut st_a, mut h_a) = paper_state();
+        let (mut st_b, mut h_b) = paper_state();
+        let policy = policy_by_name("rpsdsf").unwrap();
+        let silent = allocation_cycle(
+            &mut st_a,
+            &policy,
+            &mut ScoringEngine::native(),
+            AllocatorMode::Characterized,
+            &mut h_a,
+            &[],
+            &mut Rng::new(7),
+            &mut NoopSink,
+        )
+        .unwrap();
+        let mut rec = FlightRecorder::new(1024);
+        let traced = allocation_cycle(
+            &mut st_b,
+            &policy,
+            &mut ScoringEngine::native(),
+            AllocatorMode::Characterized,
+            &mut h_b,
+            &[],
+            &mut Rng::new(7),
+            &mut rec,
+        )
+        .unwrap();
+        assert_eq!(silent, traced, "tracing changed the decisions");
+
+        let events: Vec<_> = rec.events().cloned().collect();
+        let decisions: Vec<_> = events
+            .iter()
+            .filter_map(|e| match e {
+                ObsEvent::Decision { framework, agent, contenders, score, .. } => {
+                    Some((*framework, *agent, contenders.clone(), *score))
+                }
+                _ => None,
+            })
+            .collect();
+        let accepts: Vec<_> = events
+            .iter()
+            .filter_map(|e| match e {
+                ObsEvent::Accept { framework, agent, .. } => Some((*framework, *agent)),
+                _ => None,
+            })
+            .collect();
+        assert_eq!(accepts.len(), traced.len(), "one accept event per grant");
+        for (g, (fw, ag)) in traced.iter().zip(&accepts) {
+            assert_eq!((g.framework, g.agent), (*fw, *ag));
+        }
+        assert!(decisions.len() >= traced.len(), "every grant came from a decision");
+        for (fw, _ag, contenders, score) in &decisions {
+            // the winner is always among its own contenders, at its winning
+            // score (its agent may differ under fit-tiebreak, never its score)
+            let me = contenders
+                .iter()
+                .find(|c| c.framework == *fw)
+                .expect("winner listed as contender");
+            assert_eq!(me.score, *score);
+        }
+        let ends: Vec<_> = events
+            .iter()
+            .filter_map(|e| match e {
+                ObsEvent::CycleEnd { iters, grants, .. } => Some((*iters, *grants)),
+                _ => None,
+            })
+            .collect();
+        assert_eq!(ends.len(), 1);
+        assert_eq!(ends[0].1 as usize, traced.len());
     }
 
     #[test]

@@ -6,6 +6,7 @@ use crate::cluster::{AgentId, AgentPool};
 use crate::error::{Error, Result};
 use crate::mesos::allocator::{allocation_cycle, AllocatorMode, Grant, OfferHandler};
 use crate::mesos::framework::{DemandTracker, InferenceRule};
+use crate::obs::{FlightRecorder, NoopSink, ObsEvent, ObsSink};
 use crate::resources::ResVec;
 use crate::rng::Rng;
 use crate::scheduler::{AllocState, FrameworkEntry, KernelKind, Policy, Scorer, ScoringEngine};
@@ -23,6 +24,9 @@ pub struct Master {
     /// persists across its jobs' churn, like Mesos' role-level accounting.
     trackers: HashMap<usize, DemandTracker>,
     inference: InferenceRule,
+    /// Attached flight recorder (`--obs`); `None` routes the allocator
+    /// through a [`NoopSink`] — no events, no clock reads.
+    obs: Option<FlightRecorder>,
     /// Cycles run (for perf accounting).
     pub cycles: u64,
     /// Grants applied over the run.
@@ -56,9 +60,32 @@ impl Master {
             engine,
             trackers: HashMap::new(),
             inference: InferenceRule::Mean,
+            obs: None,
             cycles: 0,
             total_grants: 0,
         }
+    }
+
+    /// Attach a flight recorder of `capacity` events (CLI `--obs`):
+    /// subsequent cycles record decision events and phase timings. Grants
+    /// are bit-identical with or without a recorder attached.
+    pub fn enable_obs(&mut self, capacity: usize) {
+        self.obs = Some(FlightRecorder::new(capacity));
+    }
+
+    /// Detach and return the recorder (end of run), if one was attached.
+    pub fn take_obs(&mut self) -> Option<FlightRecorder> {
+        self.obs.take()
+    }
+
+    /// Engine perf counters in the obs wire shape.
+    pub fn engine_counters(&self) -> crate::obs::EngineCounters {
+        self.engine.counters()
+    }
+
+    /// The engine's configured shard count (for imbalance ratios).
+    pub fn engine_shards(&self) -> usize {
+        self.engine.shards()
     }
 
     pub fn set_inference_rule(&mut self, rule: InferenceRule) {
@@ -90,6 +117,19 @@ impl Master {
     /// the artifact's framework dim errors here (the caller retries after
     /// releases) instead of aborting mid-cycle inside the scorer.
     pub fn register_framework(
+        &mut self,
+        name: String,
+        declared: Option<ResVec>,
+        weight: f64,
+    ) -> Result<usize> {
+        let n = self.register_framework_inner(name, declared, weight)?;
+        self.record_framework_up(n);
+        Ok(n)
+    }
+
+    /// Slot assignment without the obs event (shared by both public
+    /// registration paths, which record after the role is final).
+    fn register_framework_inner(
         &mut self,
         name: String,
         declared: Option<ResVec>,
@@ -135,9 +175,24 @@ impl Master {
         weight: f64,
         role: usize,
     ) -> Result<usize> {
-        let n = self.register_framework(name, declared, weight)?;
+        let n = self.register_framework_inner(name, declared, weight)?;
         self.state.set_role(n, role);
+        self.record_framework_up(n);
         Ok(n)
+    }
+
+    /// Record a framework-up event (slot ↔ name binding — slots are reused
+    /// after a drain, so `explain` replays these to resolve names).
+    fn record_framework_up(&mut self, n: usize) {
+        if let Some(rec) = &mut self.obs {
+            let f = self.state.framework(n);
+            rec.record(ObsEvent::FrameworkUp {
+                framework: n,
+                name: f.name.clone(),
+                role: self.state.role_of(n),
+                weight: f.weight,
+            });
+        }
     }
 
     /// Run one allocation cycle against the given offer handler.
@@ -164,6 +219,11 @@ impl Master {
                 }
             }
         }
+        let mut noop = NoopSink;
+        let sink: &mut dyn ObsSink = match &mut self.obs {
+            Some(rec) => rec,
+            None => &mut noop,
+        };
         let grants = allocation_cycle(
             &mut self.state,
             &self.policy,
@@ -172,6 +232,7 @@ impl Master {
             handler,
             &no_inference,
             rng,
+            sink,
         )?;
         let kinds = self.state.pool.resource_kinds();
         for g in &grants {
@@ -204,11 +265,17 @@ impl Master {
     /// Mark a framework complete (stops scoring; slot reused once drained).
     pub fn finish_framework(&mut self, framework: usize) {
         self.state.deactivate(framework);
+        if let Some(rec) = &mut self.obs {
+            rec.record(ObsEvent::FrameworkDown { framework });
+        }
     }
 
     /// Register a pending agent (Fig-9 staging, churn rejoin).
     pub fn agent_up(&mut self, agent: AgentId) {
         self.state.agent_up(agent);
+        if let Some(rec) = &mut self.obs {
+            rec.record(ObsEvent::AgentUp { agent });
+        }
     }
 
     /// Drain an agent (churn): it deregisters and receives no further
@@ -216,6 +283,9 @@ impl Master {
     /// hosting executors terminate.
     pub fn agent_down(&mut self, agent: AgentId) {
         self.state.agent_down(agent);
+        if let Some(rec) = &mut self.obs {
+            rec.record(ObsEvent::AgentDown { agent });
+        }
     }
 
     /// Allocated fraction per resource over registered agents.
@@ -341,6 +411,37 @@ mod tests {
         let mut h3 = TakeN { d: pi, want: 40, have: 0 };
         let g3 = m.allocate(&mut h3, &mut Rng::new(10)).unwrap();
         assert!(g3.iter().any(|g| g.agent == drained), "rejoined agent receives grants");
+    }
+
+    #[test]
+    fn obs_recorder_captures_lifecycle_and_decisions() {
+        let mut m = master(AllocatorMode::Characterized);
+        m.enable_obs(256);
+        let pi = ResVec::cpu_mem(2.0, 2.0);
+        let n = m.register_framework("pi-0".into(), Some(pi), 1.0).unwrap();
+        let mut h = TakeN { d: pi, want: 2, have: 0 };
+        let grants = m.allocate(&mut h, &mut Rng::new(11)).unwrap();
+        assert!(!grants.is_empty());
+        m.finish_framework(n);
+        let rec = m.take_obs().expect("recorder attached");
+        assert!(m.take_obs().is_none(), "recorder detaches once");
+        let events: Vec<ObsEvent> = rec.events().cloned().collect();
+        let up = events.iter().any(|e| match e {
+            ObsEvent::FrameworkUp { framework, name, .. } => *framework == n && name == "pi-0",
+            _ => false,
+        });
+        assert!(up, "registration recorded: {events:?}");
+        assert!(events.iter().any(|e| matches!(e, ObsEvent::Accept { .. })));
+        let down = events
+            .iter()
+            .any(|e| matches!(e, ObsEvent::FrameworkDown { framework } if *framework == n));
+        assert!(down, "completion recorded");
+        // tracing must not perturb the decisions
+        let mut m2 = master(AllocatorMode::Characterized);
+        m2.register_framework("pi-0".into(), Some(pi), 1.0).unwrap();
+        let mut h2 = TakeN { d: pi, want: 2, have: 0 };
+        let g2 = m2.allocate(&mut h2, &mut Rng::new(11)).unwrap();
+        assert_eq!(grants, g2);
     }
 
     #[test]

@@ -350,6 +350,43 @@ mod tests {
     }
 
     #[test]
+    fn control_chars_escape_to_single_line() {
+        // every control char below 0x20 must leave the rendered document
+        // as one line of printable ASCII-or-UTF-8 (JSONL depends on this)
+        let s: String = (1u32..0x20).map(|c| char::from_u32(c).unwrap()).collect();
+        let v = Json::Str(s);
+        let text = v.render();
+        assert_eq!(text.lines().count(), 1);
+        assert!(!text.chars().any(|c| (c as u32) < 0x20), "{text}");
+        assert_eq!(Json::parse(&text).unwrap(), v);
+        // the named short escapes \b and \f parse back too
+        assert_eq!(Json::parse("\"\\b\\f\"").unwrap(), Json::Str("\u{8}\u{c}".into()));
+    }
+
+    #[test]
+    fn unicode_and_mixed_escapes_round_trip() {
+        let v = Json::Str("π ≈ 3.14159 — \"快\" \\ crab: 🦀\r\n\tend".into());
+        let text = v.render();
+        assert_eq!(text.lines().count(), 1);
+        assert_eq!(Json::parse(&text).unwrap(), v);
+        // \u escapes decode, including the replacement of lone surrogates
+        assert_eq!(Json::parse("\"\\u0041\"").unwrap(), Json::Str("A".into()));
+        assert_eq!(Json::parse("\"\\ud800\"").unwrap(), Json::Str("\u{fffd}".into()));
+        assert!(Json::parse("\"\\uZZZZ\"").is_err());
+        assert!(Json::parse("\"\\u00\"").is_err());
+    }
+
+    #[test]
+    fn object_keys_escape_like_values() {
+        let mut m = BTreeMap::new();
+        m.insert("we\"ird\nkey".to_string(), Json::Num(1.0));
+        let v = Json::Obj(m);
+        let text = v.render();
+        assert_eq!(text.lines().count(), 1);
+        assert_eq!(Json::parse(&text).unwrap(), v);
+    }
+
+    #[test]
     fn rejects_trailing_garbage() {
         assert!(Json::parse("{} x").is_err());
         assert!(Json::parse("[1, 2").is_err());

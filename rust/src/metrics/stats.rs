@@ -81,13 +81,20 @@ pub struct DistStats {
 }
 
 impl DistStats {
-    /// Summarize a sample (empty input yields zeros).
+    /// The all-zeros summary of an empty series.
+    pub fn empty() -> DistStats {
+        DistStats { n: 0, mean: 0.0, p50: 0.0, p95: 0.0, p99: 0.0, max: 0.0 }
+    }
+
+    /// Summarize a sample (empty input yields zeros). NaN samples sort
+    /// after every finite value (`total_cmp`) rather than panicking, so a
+    /// poisoned series degrades to NaN tails instead of aborting a run.
     pub fn of(xs: &[f64]) -> DistStats {
         if xs.is_empty() {
-            return DistStats { n: 0, mean: 0.0, p50: 0.0, p95: 0.0, p99: 0.0, max: 0.0 };
+            return DistStats::empty();
         }
         let mut sorted = xs.to_vec();
-        sorted.sort_by(|a, b| a.partial_cmp(b).unwrap());
+        sorted.sort_by(f64::total_cmp);
         DistStats {
             n: xs.len(),
             mean: xs.iter().sum::<f64>() / xs.len() as f64,
@@ -191,6 +198,33 @@ mod tests {
         assert!(d.p50 <= d.p95 && d.p95 <= d.p99 && d.p99 <= d.max);
         assert_eq!(d.max, 100.0);
         assert_eq!(DistStats::of(&[]).n, 0);
+    }
+
+    #[test]
+    fn dist_stats_empty_and_single() {
+        // the empty summary is all zeros, not NaN from 0/0
+        let e = DistStats::of(&[]);
+        assert_eq!(e, DistStats::empty());
+        assert_eq!(e.mean, 0.0);
+        assert_eq!(e.max, 0.0);
+        // a single sample is every percentile
+        let d = DistStats::of(&[7.5]);
+        assert_eq!(d.n, 1);
+        assert_eq!(d.mean, 7.5);
+        assert_eq!(d.p50, 7.5);
+        assert_eq!(d.p99, 7.5);
+        assert_eq!(d.max, 7.5);
+    }
+
+    #[test]
+    fn dist_stats_tolerates_nan_samples() {
+        // regression: partial_cmp().unwrap() used to panic here. NaN now
+        // sorts last, so the low percentiles stay finite and only the
+        // tail reports the poison.
+        let d = DistStats::of(&[2.0, f64::NAN, 1.0, 3.0]);
+        assert_eq!(d.n, 4);
+        assert!(d.p50.is_finite());
+        assert!(d.max.is_nan());
     }
 
     #[test]

@@ -1,0 +1,312 @@
+//! `mesos-fair explain` — reconstruct from a decision trace why a
+//! framework won or starved.
+//!
+//! A decision trace records, for every pick, each framework's best
+//! feasible `(agent, score)` pair ([`super::Contender`]). Walking the
+//! trace while tracking `framework-slot -> name` bindings (slots are
+//! reused after a framework drains, so [`super::ObsEvent::FrameworkUp`]
+//! rebinds) lets this module answer the fairness question the paper's
+//! end metrics can't: *at each decision a job lost, what did it score
+//! versus the winner, and by how much?*
+
+use super::trace::ObsTrace;
+use super::ObsEvent;
+use crate::error::{Error, Result};
+use std::collections::HashMap;
+
+/// One decision the queried framework was feasible for but lost.
+#[derive(Debug, Clone, PartialEq)]
+pub struct LostDecision {
+    pub cycle: u64,
+    pub iter: u32,
+    /// The losing framework's slot and name at that moment.
+    pub slot: usize,
+    pub name: String,
+    /// Its best feasible score (lower is better) and the agent it was on.
+    pub own_score: f64,
+    pub own_agent: usize,
+    /// Who won instead.
+    pub winner_slot: usize,
+    pub winner_name: String,
+    pub winner_score: f64,
+}
+
+impl LostDecision {
+    /// How far from winning: `own_score - winner_score` (≥ 0 up to ties).
+    pub fn margin(&self) -> f64 {
+        self.own_score - self.winner_score
+    }
+}
+
+/// The reconstructed story of one query over a trace.
+#[derive(Debug, Clone)]
+pub struct Explanation {
+    pub query: String,
+    /// Distinct framework names that matched the query, in first-seen order.
+    pub matched: Vec<String>,
+    /// Decisions a matching framework won.
+    pub won: usize,
+    /// Offers accepted / declined by matching frameworks.
+    pub accepted: usize,
+    pub declined: usize,
+    /// Every decision a matching framework was feasible for but lost.
+    pub lost: Vec<LostDecision>,
+}
+
+/// `true` if `name`/`slot` match the query: a decimal query matches the
+/// slot id exactly, anything else matches as a name substring.
+fn matches(query: &str, slot: usize, name: &str) -> bool {
+    if let Ok(id) = query.parse::<usize>() {
+        return id == slot;
+    }
+    name.contains(query)
+}
+
+/// Replay `trace` and reconstruct every decision involving a framework
+/// matching `query` (name substring, or a decimal slot id). Errors if
+/// nothing in the trace matches.
+pub fn explain(trace: &ObsTrace, query: &str) -> Result<Explanation> {
+    let mut names: HashMap<usize, String> = HashMap::new();
+    let mut matched: Vec<String> = Vec::new();
+    let mut won = 0usize;
+    let mut accepted = 0usize;
+    let mut declined = 0usize;
+    let mut lost: Vec<LostDecision> = Vec::new();
+    let name_of = |names: &HashMap<usize, String>, slot: usize| -> String {
+        names.get(&slot).cloned().unwrap_or_else(|| format!("slot-{slot}"))
+    };
+    for e in &trace.events {
+        match e {
+            ObsEvent::FrameworkUp { framework, name, .. } => {
+                if matches(query, *framework, name) && !matched.iter().any(|m| m == name) {
+                    matched.push(name.clone());
+                }
+                names.insert(*framework, name.clone());
+            }
+            ObsEvent::Decision { cycle, iter, framework, score, contenders, .. } => {
+                let winner_name = name_of(&names, *framework);
+                if matches(query, *framework, &winner_name) {
+                    won += 1;
+                    continue;
+                }
+                for c in contenders {
+                    let n = name_of(&names, c.framework);
+                    if c.framework != *framework && matches(query, c.framework, &n) {
+                        lost.push(LostDecision {
+                            cycle: *cycle,
+                            iter: *iter,
+                            slot: c.framework,
+                            name: n,
+                            own_score: c.score,
+                            own_agent: c.agent,
+                            winner_slot: *framework,
+                            winner_name: winner_name.clone(),
+                            winner_score: *score,
+                        });
+                    }
+                }
+            }
+            ObsEvent::Accept { framework, .. } => {
+                if matches(query, *framework, &name_of(&names, *framework)) {
+                    accepted += 1;
+                }
+            }
+            ObsEvent::Decline { framework, .. } => {
+                if matches(query, *framework, &name_of(&names, *framework)) {
+                    declined += 1;
+                }
+            }
+            _ => {}
+        }
+    }
+    if matched.is_empty() && won == 0 && lost.is_empty() {
+        return Err(Error::Experiment(format!(
+            "explain: no framework matching '{query}' appears in the trace \
+             (try a name substring like 'pi-q0' or a slot id)"
+        )));
+    }
+    Ok(Explanation { query: query.to_string(), matched, won, accepted, declined, lost })
+}
+
+impl Explanation {
+    /// Human-readable report; at most `limit` lost decisions are listed
+    /// (the most starved — largest margin — first).
+    pub fn render(&self, limit: usize) -> String {
+        use std::fmt::Write as _;
+        let mut out = String::new();
+        let who = if self.matched.is_empty() {
+            "(matched by slot id)".to_string()
+        } else {
+            self.matched.join(", ")
+        };
+        let _ = writeln!(
+            out,
+            "query '{}' matched {} framework(s): {who}",
+            self.query,
+            self.matched.len()
+        );
+        let _ = writeln!(
+            out,
+            "decisions won  : {} ({} accepted, {} declined)",
+            self.won, self.accepted, self.declined
+        );
+        let _ = writeln!(out, "decisions lost : {} (feasible but outscored)", self.lost.len());
+        let mut ranked: Vec<&LostDecision> = self.lost.iter().collect();
+        ranked.sort_by(|a, b| {
+            b.margin().total_cmp(&a.margin()).then(a.cycle.cmp(&b.cycle)).then(a.iter.cmp(&b.iter))
+        });
+        for d in ranked.iter().take(limit) {
+            let _ = writeln!(
+                out,
+                "  cycle {:>5} iter {:>3}: {} scored {:.6} (agent {}) but {} won at {:.6} \
+                 — margin {:.6}",
+                d.cycle,
+                d.iter,
+                d.name,
+                d.own_score,
+                d.own_agent,
+                d.winner_name,
+                d.winner_score,
+                d.margin()
+            );
+        }
+        if self.lost.len() > limit {
+            let _ = writeln!(out, "  ... {} more (raise --limit)", self.lost.len() - limit);
+        }
+        out
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::super::trace::{ObsMeta, ObsTrace};
+    use super::super::Contender;
+    use super::*;
+
+    fn trace_with(events: Vec<ObsEvent>) -> ObsTrace {
+        ObsTrace {
+            meta: ObsMeta {
+                policy: "drf".into(),
+                mode: "characterized".into(),
+                scenario: "test".into(),
+                seed: 1,
+            },
+            events,
+        }
+    }
+
+    fn decision(cycle: u64, winner: usize, score: f64, contenders: Vec<Contender>) -> ObsEvent {
+        ObsEvent::Decision {
+            cycle,
+            iter: 0,
+            framework: winner,
+            agent: 0,
+            score,
+            runner_up: None,
+            contenders,
+            rows_scanned: 0,
+            rows_pruned: 0,
+        }
+    }
+
+    #[test]
+    fn reconstructs_won_and_lost_decisions() {
+        let t = trace_with(vec![
+            ObsEvent::FrameworkUp { framework: 0, name: "pi-q0-j0".into(), role: 0, weight: 1.0 },
+            ObsEvent::FrameworkUp { framework: 1, name: "wc-q1-j0".into(), role: 0, weight: 1.0 },
+            decision(
+                1,
+                0,
+                0.1,
+                vec![
+                    Contender { framework: 0, agent: 0, score: 0.1 },
+                    Contender { framework: 1, agent: 1, score: 0.3 },
+                ],
+            ),
+            ObsEvent::Accept {
+                cycle: 1,
+                iter: 0,
+                framework: 0,
+                agent: 0,
+                count: 1.0,
+                amount: vec![1.0, 1.0],
+            },
+            decision(
+                2,
+                0,
+                0.15,
+                vec![
+                    Contender { framework: 0, agent: 0, score: 0.15 },
+                    Contender { framework: 1, agent: 0, score: 0.4 },
+                ],
+            ),
+        ]);
+        let ex = explain(&t, "wc").unwrap();
+        assert_eq!(ex.matched, vec!["wc-q1-j0".to_string()]);
+        assert_eq!(ex.won, 0);
+        assert_eq!(ex.lost.len(), 2);
+        // winning-vs-runner-up reconstruction: own score vs the winner's
+        assert_eq!(ex.lost[0].own_score, 0.3);
+        assert_eq!(ex.lost[0].winner_score, 0.1);
+        assert!((ex.lost[0].margin() - 0.2).abs() < 1e-12);
+        assert_eq!(ex.lost[0].winner_name, "pi-q0-j0");
+        let ex = explain(&t, "pi-q0").unwrap();
+        assert_eq!(ex.won, 2);
+        assert_eq!(ex.accepted, 1);
+        assert!(ex.lost.is_empty());
+        assert!(ex.render(10).contains("decisions won  : 2"));
+    }
+
+    #[test]
+    fn slot_reuse_rebinds_names() {
+        let t = trace_with(vec![
+            ObsEvent::FrameworkUp { framework: 0, name: "pi-q0-j0".into(), role: 0, weight: 1.0 },
+            decision(1, 0, 0.1, vec![Contender { framework: 0, agent: 0, score: 0.1 }]),
+            ObsEvent::FrameworkDown { framework: 0 },
+            ObsEvent::FrameworkUp { framework: 0, name: "wc-q1-j9".into(), role: 1, weight: 1.0 },
+            decision(2, 0, 0.2, vec![Contender { framework: 0, agent: 0, score: 0.2 }]),
+        ]);
+        // each name only wins the decision made while it held the slot
+        assert_eq!(explain(&t, "pi-q0-j0").unwrap().won, 1);
+        assert_eq!(explain(&t, "wc-q1-j9").unwrap().won, 1);
+        // a slot-id query sees both
+        assert_eq!(explain(&t, "0").unwrap().won, 2);
+    }
+
+    #[test]
+    fn unmatched_query_errors() {
+        let t = trace_with(vec![ObsEvent::FrameworkUp {
+            framework: 0,
+            name: "pi-q0-j0".into(),
+            role: 0,
+            weight: 1.0,
+        }]);
+        assert!(explain(&t, "nope").is_err());
+    }
+
+    #[test]
+    fn render_caps_listing_at_limit() {
+        let mut events = vec![
+            ObsEvent::FrameworkUp { framework: 0, name: "win".into(), role: 0, weight: 1.0 },
+            ObsEvent::FrameworkUp { framework: 1, name: "lose".into(), role: 0, weight: 1.0 },
+        ];
+        for c in 0..5 {
+            events.push(decision(
+                c + 1,
+                0,
+                0.1,
+                vec![
+                    Contender { framework: 0, agent: 0, score: 0.1 },
+                    Contender { framework: 1, agent: 0, score: 0.2 + c as f64 },
+                ],
+            ));
+        }
+        let ex = explain(&trace_with(events), "lose").unwrap();
+        assert_eq!(ex.lost.len(), 5);
+        let r = ex.render(2);
+        assert!(r.contains("... 3 more"));
+        // largest margin listed first
+        let first = r.lines().find(|l| l.contains("cycle")).unwrap();
+        assert!(first.contains("cycle     5"), "{first}");
+    }
+}

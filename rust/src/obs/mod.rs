@@ -1,0 +1,426 @@
+//! Scheduler flight recorder — decision tracing and cycle-phase timing.
+//!
+//! The allocation loop (PRs 3–4) prunes candidates, shards argmins, and
+//! batches row kernels, but none of that machinery reports what it did on
+//! a real run. This module is the observability substrate that closes the
+//! gap:
+//!
+//! * **Decision tracing** — every offer cycle emits structured
+//!   [`ObsEvent`]s (cycle candidate set, the winning `(framework, agent)`
+//!   pair with its criterion score and runner-up margin, accept/decline,
+//!   framework/agent churn) into a bounded ring buffer
+//!   ([`FlightRecorder`]), spillable to JSONL ([`trace`]) alongside the
+//!   workload traces.
+//! * **Cycle-phase timing** — monotonic-clock spans over the four hot
+//!   phases ([`ObsPhase`]) aggregated into per-phase
+//!   [`DistStats`] histograms, plus cumulative [`EngineCounters`]
+//!   (rescores, dirty rows patched, kernel rows filled, pruning and
+//!   shard-balance ratios) surfaced in `sim::online::OnlineResult` and
+//!   the `BENCH_*.json` exports.
+//! * **Query tools** — [`explain`] reconstructs from a trace why a
+//!   framework won or starved; [`report`] renders a per-policy
+//!   cycle-time/counter table (`mesos-fair explain` / `obs-report`).
+//!
+//! ## Zero overhead when off, deterministic when on
+//!
+//! Instrumented call sites hold a `&mut dyn ObsSink` and gate **all**
+//! event construction and clock reads on [`ObsSink::enabled`] — with the
+//! default [`NoopSink`] the off-path cost is one virtual bool load per
+//! cycle, which the CI bench-diff gate keeps honest. When recording,
+//! events carry *no* wall-clock data (timings live in a separate summary
+//! artifact) and the decision context is computed without consuming any
+//! RNG draws, so the recorded event stream is **bit-identical across
+//! replays** of the same workload trace at any shard count —
+//! property-tested like the scorer (`tests/obs.rs`).
+
+pub mod explain;
+pub mod report;
+pub mod trace;
+
+use crate::metrics::DistStats;
+use std::collections::VecDeque;
+
+/// Default [`FlightRecorder`] ring capacity — roomy enough that the CI
+/// smoke scenarios never wrap, small enough to bound memory on long runs.
+pub const DEFAULT_EVENT_CAPACITY: usize = 1 << 18;
+
+/// The four timed phases of one offer iteration. Spans are recorded in
+/// seconds from a monotonic clock, only while a recording sink is
+/// attached; `BoundsPatch` is the incremental `JointBounds` maintenance
+/// *inside* `ScoreRecompute` (so the two overlap by construction), and
+/// `JointArgmin` covers whichever pick path the policy uses (the joint
+/// pruned scan, the per-agent argmin, or best-fit).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum ObsPhase {
+    /// `ScoringEngine::scores_with_bounds` — full or incremental rescore.
+    ScoreRecompute,
+    /// Incremental `JointBounds` row/argmin maintenance during a patch.
+    BoundsPatch,
+    /// The decision argmin over the masked score view.
+    JointArgmin,
+    /// `OfferHandler::accept` — the framework side of the offer.
+    OfferDispatch,
+}
+
+impl ObsPhase {
+    /// All phases, in reporting order.
+    pub const ALL: [ObsPhase; 4] = [
+        ObsPhase::ScoreRecompute,
+        ObsPhase::BoundsPatch,
+        ObsPhase::JointArgmin,
+        ObsPhase::OfferDispatch,
+    ];
+
+    /// Canonical spelling (JSON keys, report headers).
+    pub fn label(&self) -> &'static str {
+        match self {
+            ObsPhase::ScoreRecompute => "score-recompute",
+            ObsPhase::BoundsPatch => "bounds-patch",
+            ObsPhase::JointArgmin => "joint-argmin",
+            ObsPhase::OfferDispatch => "offer-dispatch",
+        }
+    }
+
+    fn index(&self) -> usize {
+        match self {
+            ObsPhase::ScoreRecompute => 0,
+            ObsPhase::BoundsPatch => 1,
+            ObsPhase::JointArgmin => 2,
+            ObsPhase::OfferDispatch => 3,
+        }
+    }
+}
+
+/// One framework's best feasible `(agent, score)` under the deciding
+/// criterion at the moment of a decision — the context [`explain`] uses
+/// to show a losing framework what it scored vs the winner.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct Contender {
+    pub framework: usize,
+    pub agent: usize,
+    pub score: f64,
+}
+
+/// One structured flight-recorder event. Events are **deterministic**:
+/// they carry scores, ids and amounts but never clock readings, so two
+/// replays of the same workload trace produce byte-identical JSONL.
+#[derive(Debug, Clone, PartialEq)]
+pub enum ObsEvent {
+    /// An offer cycle opened with this candidate (available-agent) set.
+    CycleStart { cycle: u64, candidates: Vec<usize> },
+    /// The allocator picked `(framework, agent)`. `score` is the winning
+    /// criterion value; `runner_up` is the best contender from any
+    /// *other* framework (its margin is `runner_up.score - score`);
+    /// `contenders` lists every framework's best feasible pair;
+    /// `rows_scanned`/`rows_pruned` report the joint pruned scan (both 0
+    /// for per-agent and best-fit picks).
+    Decision {
+        cycle: u64,
+        iter: u32,
+        framework: usize,
+        agent: usize,
+        score: f64,
+        runner_up: Option<Contender>,
+        contenders: Vec<Contender>,
+        rows_scanned: u32,
+        rows_pruned: u32,
+    },
+    /// The framework accepted the offer: `count` tasks of `amount` each.
+    Accept { cycle: u64, iter: u32, framework: usize, agent: usize, count: f64, amount: Vec<f64> },
+    /// The framework declined the offer (masked for the rest of the cycle).
+    Decline { cycle: u64, iter: u32, framework: usize, agent: usize, reason: String },
+    /// The cycle closed after `iters` offer iterations.
+    CycleEnd { cycle: u64, iters: u32, grants: u32, declines: u32 },
+    /// A framework registered (or reclaimed a drained slot — slots are
+    /// reused, so `explain` rebinds `framework -> name` at each event).
+    FrameworkUp { framework: usize, name: String, role: usize, weight: f64 },
+    /// A framework finished and released its slot.
+    FrameworkDown { framework: usize },
+    /// An agent joined (churn rejoin or staged bring-up).
+    AgentUp { agent: usize },
+    /// An agent drained out of the pool.
+    AgentDown { agent: usize },
+}
+
+impl ObsEvent {
+    /// The `"ev"` discriminator used by the JSONL encoding.
+    pub fn kind(&self) -> &'static str {
+        match self {
+            ObsEvent::CycleStart { .. } => "cycle",
+            ObsEvent::Decision { .. } => "decision",
+            ObsEvent::Accept { .. } => "accept",
+            ObsEvent::Decline { .. } => "decline",
+            ObsEvent::CycleEnd { .. } => "cycle-end",
+            ObsEvent::FrameworkUp { .. } => "fw-up",
+            ObsEvent::FrameworkDown { .. } => "fw-down",
+            ObsEvent::AgentUp { .. } => "agent-up",
+            ObsEvent::AgentDown { .. } => "agent-down",
+        }
+    }
+}
+
+/// Cumulative scoring-engine work counters. Maintained unconditionally
+/// (plain integer adds on paths that already count rescores) and
+/// snapshotted into [`ObsSummary`]; the external (HLO) backend reports
+/// zeros beyond what it tracks.
+#[derive(Debug, Clone, Copy, Default, PartialEq)]
+pub struct EngineCounters {
+    /// Full tensor recomputes (structural dirt or shape change).
+    pub full_rescores: u64,
+    /// Incremental patches (row/column dirt only).
+    pub incremental_rescores: u64,
+    /// Rescore calls answered entirely from cache.
+    pub cached_hits: u64,
+    /// Dirty framework rows re-derived by incremental patches.
+    pub rows_patched: u64,
+    /// Individual `(framework, agent)` pairs refilled by patches.
+    pub pairs_patched: u64,
+    /// Whole rows swept by the batched row kernel (rebuilds + patches).
+    pub kernel_rows_filled: u64,
+    /// Per-pass maximum shard work (cells), summed over passes.
+    pub shard_cells_max: u64,
+    /// Per-pass total work (cells), summed over passes.
+    pub shard_cells_total: u64,
+}
+
+impl EngineCounters {
+    /// Shard-imbalance ratio: `1.0` is a perfectly even split, `shards`
+    /// is everything on one worker. Derived from the accumulated
+    /// per-pass max/total cell counts; `1.0` when unsharded or idle.
+    pub fn shard_imbalance(&self, shards: usize) -> f64 {
+        if shards <= 1 || self.shard_cells_total == 0 {
+            return 1.0;
+        }
+        self.shard_cells_max as f64 * shards as f64 / self.shard_cells_total as f64
+    }
+}
+
+/// Where instrumented call sites send what they observe. The allocation
+/// loop, master, and engine hold a `&mut dyn ObsSink`; with the default
+/// [`NoopSink`] every hook collapses to a `false` check, so callers must
+/// gate event construction (and `Instant::now()` reads) on [`enabled`].
+///
+/// [`enabled`]: ObsSink::enabled
+pub trait ObsSink {
+    /// `false` for the no-op sink: skip all observation work.
+    fn enabled(&self) -> bool;
+    /// Open a new offer cycle over `candidates`; returns its 1-based id
+    /// (`0` on the no-op sink).
+    fn begin_cycle(&mut self, candidates: &[usize]) -> u64;
+    /// Append one event to the trace.
+    fn record(&mut self, event: ObsEvent);
+    /// Record one monotonic-clock phase span, in seconds.
+    fn span(&mut self, phase: ObsPhase, seconds: f64);
+}
+
+/// The default sink: observation off, every hook a no-op.
+#[derive(Debug, Clone, Copy, Default)]
+pub struct NoopSink;
+
+impl ObsSink for NoopSink {
+    fn enabled(&self) -> bool {
+        false
+    }
+
+    fn begin_cycle(&mut self, _candidates: &[usize]) -> u64 {
+        0
+    }
+
+    fn record(&mut self, _event: ObsEvent) {}
+
+    fn span(&mut self, _phase: ObsPhase, _seconds: f64) {}
+}
+
+/// The recording sink: a bounded event ring plus per-phase span samples.
+/// When the ring is full the **oldest** event is dropped (and counted),
+/// so the drop policy is deterministic and the tail of a long run — the
+/// part a starvation query cares about — is always retained.
+#[derive(Debug, Clone)]
+pub struct FlightRecorder {
+    capacity: usize,
+    events: VecDeque<ObsEvent>,
+    dropped: u64,
+    cycles: u64,
+    spans: [Vec<f64>; 4],
+    /// Sum of span seconds inside the currently open cycle.
+    open_cycle_seconds: f64,
+    /// Per-cycle total observed seconds (the `obs-report` time series).
+    cycle_seconds: Vec<f64>,
+}
+
+impl FlightRecorder {
+    pub fn new(capacity: usize) -> FlightRecorder {
+        FlightRecorder {
+            capacity: capacity.max(1),
+            events: VecDeque::new(),
+            dropped: 0,
+            cycles: 0,
+            spans: [Vec::new(), Vec::new(), Vec::new(), Vec::new()],
+            open_cycle_seconds: 0.0,
+            cycle_seconds: Vec::new(),
+        }
+    }
+
+    /// Events currently retained (after any ring drops).
+    pub fn events(&self) -> impl Iterator<Item = &ObsEvent> {
+        self.events.iter()
+    }
+
+    /// Events dropped from the front of the ring.
+    pub fn dropped(&self) -> u64 {
+        self.dropped
+    }
+
+    /// Cycles opened via [`ObsSink::begin_cycle`].
+    pub fn cycles(&self) -> u64 {
+        self.cycles
+    }
+
+    /// Close the recorder: fold span samples into per-phase [`DistStats`]
+    /// and attach the engine-counter snapshot. `shards` is the engine's
+    /// scoring-shard count, carried so reports can derive the
+    /// shard-imbalance ratio.
+    pub fn into_summary(mut self, counters: EngineCounters, shards: usize) -> ObsSummary {
+        if self.cycles > 0 {
+            self.cycle_seconds.push(self.open_cycle_seconds);
+        }
+        let phases = ObsPhase::ALL
+            .iter()
+            .map(|p| PhaseStats { phase: *p, dist: DistStats::of(&self.spans[p.index()]) })
+            .collect();
+        ObsSummary {
+            cycles: self.cycles,
+            dropped: self.dropped,
+            events: self.events.into_iter().collect(),
+            phases,
+            counters,
+            shards: shards.max(1),
+            cycle_seconds: self.cycle_seconds,
+        }
+    }
+}
+
+impl ObsSink for FlightRecorder {
+    fn enabled(&self) -> bool {
+        true
+    }
+
+    fn begin_cycle(&mut self, candidates: &[usize]) -> u64 {
+        if self.cycles > 0 {
+            self.cycle_seconds.push(self.open_cycle_seconds);
+        }
+        self.open_cycle_seconds = 0.0;
+        self.cycles += 1;
+        let cycle = self.cycles;
+        self.record(ObsEvent::CycleStart { cycle, candidates: candidates.to_vec() });
+        cycle
+    }
+
+    fn record(&mut self, event: ObsEvent) {
+        if self.events.len() == self.capacity {
+            self.events.pop_front();
+            self.dropped += 1;
+        }
+        self.events.push_back(event);
+    }
+
+    fn span(&mut self, phase: ObsPhase, seconds: f64) {
+        self.spans[phase.index()].push(seconds);
+        self.open_cycle_seconds += seconds;
+    }
+}
+
+/// Per-phase span distribution (seconds).
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct PhaseStats {
+    pub phase: ObsPhase,
+    pub dist: DistStats,
+}
+
+/// Everything one observed run produced: the (deterministic) event
+/// trace plus the (wall-clock) phase histograms, counters, and per-cycle
+/// time series. Carried on `sim::online::OnlineResult::obs`; the event
+/// half spills to JSONL via [`trace`], the timing half via [`report`].
+#[derive(Debug, Clone)]
+pub struct ObsSummary {
+    pub cycles: u64,
+    pub dropped: u64,
+    pub events: Vec<ObsEvent>,
+    pub phases: Vec<PhaseStats>,
+    pub counters: EngineCounters,
+    /// Scoring-shard count of the observed engine (for imbalance ratios).
+    pub shards: usize,
+    pub cycle_seconds: Vec<f64>,
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn noop_sink_is_off() {
+        let mut s = NoopSink;
+        assert!(!s.enabled());
+        assert_eq!(s.begin_cycle(&[0, 1]), 0);
+        s.record(ObsEvent::AgentUp { agent: 0 });
+        s.span(ObsPhase::JointArgmin, 1.0);
+    }
+
+    #[test]
+    fn recorder_assigns_cycle_ids_and_keeps_events() {
+        let mut r = FlightRecorder::new(16);
+        assert_eq!(r.begin_cycle(&[0, 1]), 1);
+        r.record(ObsEvent::CycleEnd { cycle: 1, iters: 0, grants: 0, declines: 0 });
+        assert_eq!(r.begin_cycle(&[1]), 2);
+        assert_eq!(r.cycles(), 2);
+        let kinds: Vec<_> = r.events().map(|e| e.kind()).collect();
+        assert_eq!(kinds, vec!["cycle", "cycle-end", "cycle"]);
+        assert_eq!(r.dropped(), 0);
+    }
+
+    #[test]
+    fn ring_drops_oldest_deterministically() {
+        let mut r = FlightRecorder::new(2);
+        for agent in 0..5 {
+            r.record(ObsEvent::AgentUp { agent });
+        }
+        assert_eq!(r.dropped(), 3);
+        let kept: Vec<_> = r.events().cloned().collect();
+        assert_eq!(
+            kept,
+            vec![ObsEvent::AgentUp { agent: 3 }, ObsEvent::AgentUp { agent: 4 }]
+        );
+    }
+
+    #[test]
+    fn summary_folds_spans_and_cycle_series() {
+        let mut r = FlightRecorder::new(8);
+        r.begin_cycle(&[0]);
+        r.span(ObsPhase::ScoreRecompute, 0.5);
+        r.span(ObsPhase::JointArgmin, 0.25);
+        r.begin_cycle(&[0]);
+        r.span(ObsPhase::ScoreRecompute, 1.5);
+        let s = r.into_summary(EngineCounters::default(), 1);
+        assert_eq!(s.cycles, 2);
+        assert_eq!(s.cycle_seconds, vec![0.75, 1.5]);
+        assert_eq!(s.phases.len(), ObsPhase::ALL.len());
+        let recompute = &s.phases[0];
+        assert_eq!(recompute.phase, ObsPhase::ScoreRecompute);
+        assert_eq!(recompute.dist.n, 2);
+        assert!((recompute.dist.mean - 1.0).abs() < 1e-12);
+        // phases with no samples summarize to zeros, not a panic
+        assert_eq!(s.phases[1].dist.n, 0);
+    }
+
+    #[test]
+    fn shard_imbalance_ratio() {
+        let c = EngineCounters {
+            shard_cells_max: 60,
+            shard_cells_total: 100,
+            ..EngineCounters::default()
+        };
+        assert!((c.shard_imbalance(2) - 1.2).abs() < 1e-12);
+        assert_eq!(c.shard_imbalance(1), 1.0);
+        assert_eq!(EngineCounters::default().shard_imbalance(4), 1.0);
+    }
+}

@@ -1,0 +1,336 @@
+//! `mesos-fair obs-report` — the timing half of an observed run.
+//!
+//! The decision trace ([`crate::obs::trace`]) is deterministic; the
+//! wall-clock measurements are not, so they spill to a separate
+//! `*.summary.json` artifact written here. `obs-report` reads one
+//! summary per policy run and renders a per-policy phase/counter table
+//! plus an overlaid per-cycle observed-time chart via
+//! [`crate::metrics::plot`].
+
+use super::{EngineCounters, ObsSummary};
+use crate::bench::fmt_secs;
+use crate::error::{Error, Result};
+use crate::metrics::json::Json;
+use crate::metrics::plot;
+use crate::metrics::{DistStats, TimeSeries};
+
+/// `"obs"` magic of a summary document.
+pub const MAGIC: &str = "mesos-fair-obs-summary";
+/// Summary format version.
+pub const VERSION: f64 = 1.0;
+
+fn num(j: &Json, key: &str) -> Result<f64> {
+    j.get(key)
+        .and_then(|v| v.as_f64())
+        .ok_or_else(|| Error::Config(format!("obs summary: missing number '{key}'")))
+}
+
+fn dist_from(j: &Json) -> Result<DistStats> {
+    Ok(DistStats {
+        n: num(j, "n")? as usize,
+        mean: num(j, "mean")?,
+        p50: num(j, "p50")?,
+        p95: num(j, "p95")?,
+        p99: num(j, "p99")?,
+        max: num(j, "max")?,
+    })
+}
+
+fn counters_json(c: &EngineCounters, shards: usize) -> Json {
+    Json::obj(vec![
+        ("full_rescores", Json::Num(c.full_rescores as f64)),
+        ("incremental_rescores", Json::Num(c.incremental_rescores as f64)),
+        ("cached_hits", Json::Num(c.cached_hits as f64)),
+        ("rows_patched", Json::Num(c.rows_patched as f64)),
+        ("pairs_patched", Json::Num(c.pairs_patched as f64)),
+        ("kernel_rows_filled", Json::Num(c.kernel_rows_filled as f64)),
+        ("shard_cells_max", Json::Num(c.shard_cells_max as f64)),
+        ("shard_cells_total", Json::Num(c.shard_cells_total as f64)),
+        ("shard_imbalance", Json::Num(c.shard_imbalance(shards))),
+    ])
+}
+
+fn counters_from(j: &Json) -> Result<EngineCounters> {
+    Ok(EngineCounters {
+        full_rescores: num(j, "full_rescores")? as u64,
+        incremental_rescores: num(j, "incremental_rescores")? as u64,
+        cached_hits: num(j, "cached_hits")? as u64,
+        rows_patched: num(j, "rows_patched")? as u64,
+        pairs_patched: num(j, "pairs_patched")? as u64,
+        kernel_rows_filled: num(j, "kernel_rows_filled")? as u64,
+        shard_cells_max: num(j, "shard_cells_max")? as u64,
+        shard_cells_total: num(j, "shard_cells_total")? as u64,
+    })
+}
+
+/// Encode a run's timing summary (phase histograms, engine counters,
+/// per-cycle observed seconds) as one JSON document.
+pub fn summary_json(label: &str, s: &ObsSummary) -> Json {
+    let phases = s
+        .phases
+        .iter()
+        .map(|p| {
+            Json::obj(vec![
+                ("phase", Json::Str(p.phase.label().to_string())),
+                ("n", Json::Num(p.dist.n as f64)),
+                ("mean", Json::Num(p.dist.mean)),
+                ("p50", Json::Num(p.dist.p50)),
+                ("p95", Json::Num(p.dist.p95)),
+                ("p99", Json::Num(p.dist.p99)),
+                ("max", Json::Num(p.dist.max)),
+            ])
+        })
+        .collect();
+    Json::obj(vec![
+        ("obs", Json::Str(MAGIC.to_string())),
+        ("v", Json::Num(VERSION)),
+        ("label", Json::Str(label.to_string())),
+        ("cycles", Json::Num(s.cycles as f64)),
+        ("events", Json::Num(s.events.len() as f64)),
+        ("dropped", Json::Num(s.dropped as f64)),
+        ("shards", Json::Num(s.shards as f64)),
+        ("phases", Json::Arr(phases)),
+        ("counters", counters_json(&s.counters, s.shards)),
+        ("cycle_seconds", Json::arr_f64(&s.cycle_seconds)),
+    ])
+}
+
+/// Write the timing summary for a run labeled `label` to `path`.
+pub fn write_summary(label: &str, s: &ObsSummary, path: &str) -> Result<()> {
+    summary_json(label, s).write_to(path)
+}
+
+/// A summary document read back for reporting.
+#[derive(Debug, Clone)]
+pub struct SummaryDoc {
+    pub label: String,
+    pub cycles: u64,
+    pub events: u64,
+    pub dropped: u64,
+    pub shards: usize,
+    pub phases: Vec<(String, DistStats)>,
+    pub counters: EngineCounters,
+    pub imbalance: f64,
+    pub cycle_seconds: Vec<f64>,
+}
+
+/// Parse a summary document produced by [`summary_json`].
+pub fn parse_summary(text: &str) -> Result<SummaryDoc> {
+    let j = Json::parse(text)?;
+    let magic = j.get("obs").and_then(|v| v.as_str()).unwrap_or("");
+    if magic != MAGIC {
+        return Err(Error::Config(format!(
+            "obs summary: bad magic '{magic}' (expected '{MAGIC}')"
+        )));
+    }
+    let phases = j
+        .get("phases")
+        .and_then(|v| v.as_arr())
+        .ok_or_else(|| Error::Config("obs summary: missing phases".into()))?
+        .iter()
+        .map(|p| {
+            let name = p
+                .get("phase")
+                .and_then(|v| v.as_str())
+                .ok_or_else(|| Error::Config("obs summary: phase missing name".into()))?;
+            Ok((name.to_string(), dist_from(p)?))
+        })
+        .collect::<Result<Vec<_>>>()?;
+    let counters_j =
+        j.get("counters").ok_or_else(|| Error::Config("obs summary: missing counters".into()))?;
+    let cycle_seconds = j
+        .get("cycle_seconds")
+        .and_then(|v| v.as_arr())
+        .map(|a| a.iter().filter_map(|v| v.as_f64()).collect())
+        .unwrap_or_default();
+    Ok(SummaryDoc {
+        label: j
+            .get("label")
+            .and_then(|v| v.as_str())
+            .unwrap_or("(unlabeled)")
+            .to_string(),
+        cycles: num(&j, "cycles")? as u64,
+        events: num(&j, "events")? as u64,
+        dropped: num(&j, "dropped")? as u64,
+        shards: num(&j, "shards")? as usize,
+        phases,
+        counters: counters_from(counters_j)?,
+        imbalance: num(counters_j, "shard_imbalance")?,
+        cycle_seconds,
+    })
+}
+
+/// Read one summary file.
+pub fn read_summary(path: &str) -> Result<SummaryDoc> {
+    parse_summary(&std::fs::read_to_string(path)?)
+}
+
+fn phase_lines(out: &mut String, phases: &[(String, DistStats)]) {
+    use std::fmt::Write as _;
+    let _ = writeln!(
+        out,
+        "  {:<16} {:>10} {:>10} {:>10} {:>10} {:>8}",
+        "phase", "p50", "p95", "p99", "max", "n"
+    );
+    for (name, d) in phases {
+        let _ = writeln!(
+            out,
+            "  {:<16} {:>10} {:>10} {:>10} {:>10} {:>8}",
+            name,
+            fmt_secs(d.p50),
+            fmt_secs(d.p95),
+            fmt_secs(d.p99),
+            fmt_secs(d.max),
+            d.n
+        );
+    }
+}
+
+fn counter_lines(out: &mut String, c: &EngineCounters, imbalance: f64) {
+    use std::fmt::Write as _;
+    let _ = writeln!(
+        out,
+        "  engine: {} full / {} incremental / {} cached rescores",
+        c.full_rescores, c.incremental_rescores, c.cached_hits
+    );
+    let _ = writeln!(
+        out,
+        "          {} rows patched, {} pairs patched, {} kernel rows filled, \
+         shard imbalance {imbalance:.3}",
+        c.rows_patched, c.pairs_patched, c.kernel_rows_filled
+    );
+}
+
+/// The `print_online` block for a live observed run — the same table
+/// `obs-report` renders, minus the cross-run chart.
+pub fn phase_table(s: &ObsSummary) -> String {
+    use std::fmt::Write as _;
+    let mut out = String::new();
+    let _ = writeln!(
+        out,
+        "obs           : {} cycles, {} events ({} dropped), {} shards",
+        s.cycles,
+        s.events.len(),
+        s.dropped,
+        s.shards
+    );
+    let phases: Vec<(String, DistStats)> =
+        s.phases.iter().map(|p| (p.phase.label().to_string(), p.dist)).collect();
+    phase_lines(&mut out, &phases);
+    counter_lines(&mut out, &s.counters, s.counters.shard_imbalance(s.shards));
+    out
+}
+
+/// Render the `obs-report` output: one phase/counter block per summary,
+/// then an overlaid per-cycle observed-time chart (skipped when no run
+/// recorded any spans).
+pub fn render(docs: &[SummaryDoc]) -> String {
+    use std::fmt::Write as _;
+    let mut out = String::new();
+    for d in docs {
+        let _ = writeln!(
+            out,
+            "== {} ==  {} cycles, {} events ({} dropped), {} shards",
+            d.label, d.cycles, d.events, d.dropped, d.shards
+        );
+        phase_lines(&mut out, &d.phases);
+        counter_lines(&mut out, &d.counters, d.imbalance);
+        out.push('\n');
+    }
+    let series: Vec<TimeSeries> = docs
+        .iter()
+        .filter(|d| !d.cycle_seconds.is_empty())
+        .map(|d| {
+            let mut s = TimeSeries::new(d.label.clone());
+            for (k, v) in d.cycle_seconds.iter().enumerate() {
+                s.push(k as f64, *v);
+            }
+            s
+        })
+        .collect();
+    let ymax = series
+        .iter()
+        .flat_map(|s| s.values().iter().copied())
+        .fold(0.0f64, f64::max);
+    if !series.is_empty() && ymax > 0.0 {
+        let refs: Vec<&TimeSeries> = series.iter().collect();
+        let _ = writeln!(out, "per-cycle observed seconds (x = offer cycle):");
+        out.push_str(&plot::render(&refs, 72, 12, ymax * 1.05));
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::super::{FlightRecorder, ObsEvent, ObsPhase, ObsSink};
+    use super::*;
+
+    fn sample_summary() -> ObsSummary {
+        let mut r = FlightRecorder::new(64);
+        r.begin_cycle(&[0, 1]);
+        r.span(ObsPhase::ScoreRecompute, 2.0e-6);
+        r.span(ObsPhase::JointArgmin, 1.0e-6);
+        r.record(ObsEvent::CycleEnd { cycle: 1, iters: 1, grants: 1, declines: 0 });
+        r.begin_cycle(&[1]);
+        r.span(ObsPhase::ScoreRecompute, 4.0e-6);
+        let counters = EngineCounters {
+            full_rescores: 1,
+            incremental_rescores: 3,
+            cached_hits: 2,
+            rows_patched: 5,
+            pairs_patched: 10,
+            kernel_rows_filled: 20,
+            shard_cells_max: 60,
+            shard_cells_total: 100,
+        };
+        r.into_summary(counters, 2)
+    }
+
+    #[test]
+    fn summary_round_trips_through_json() {
+        let s = sample_summary();
+        let text = summary_json("drf/characterized", &s).render();
+        let doc = parse_summary(&text).unwrap();
+        assert_eq!(doc.label, "drf/characterized");
+        assert_eq!(doc.cycles, 2);
+        assert_eq!(doc.shards, 2);
+        assert_eq!(doc.counters, s.counters);
+        assert!((doc.imbalance - 1.2).abs() < 1e-12);
+        assert_eq!(doc.phases.len(), ObsPhase::ALL.len());
+        assert_eq!(doc.phases[0].0, "score-recompute");
+        assert_eq!(doc.phases[0].1.n, 2);
+        assert_eq!(doc.cycle_seconds.len(), 2);
+        assert!(parse_summary("{\"obs\":\"nope\"}").is_err());
+    }
+
+    #[test]
+    fn report_renders_tables_and_chart() {
+        let s = sample_summary();
+        let text = summary_json("drf/characterized", &s).render();
+        let doc = parse_summary(&text).unwrap();
+        let out = render(&[doc.clone(), doc]);
+        assert!(out.contains("== drf/characterized =="));
+        assert!(out.contains("score-recompute"));
+        assert!(out.contains("shard imbalance 1.200"));
+        assert!(out.contains("per-cycle observed seconds"));
+    }
+
+    #[test]
+    fn report_without_spans_skips_chart() {
+        let r = FlightRecorder::new(4);
+        let s = r.into_summary(EngineCounters::default(), 1);
+        let text = summary_json("empty", &s).render();
+        let doc = parse_summary(&text).unwrap();
+        let out = render(&[doc]);
+        assert!(out.contains("== empty =="));
+        assert!(!out.contains("per-cycle"));
+    }
+
+    #[test]
+    fn phase_table_names_all_phases() {
+        let t = phase_table(&sample_summary());
+        for p in ObsPhase::ALL {
+            assert!(t.contains(p.label()), "{t}");
+        }
+    }
+}

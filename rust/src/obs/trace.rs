@@ -1,0 +1,436 @@
+//! JSONL spill format for flight-recorder decision traces.
+//!
+//! Same shape as the workload traces ([`crate::workload::trace`]): one
+//! header object naming the run (policy, mode, scenario, hex seed), then
+//! one JSON object per line with an `"ev"` discriminator. Events are
+//! deterministic (no wall-clock fields — timings live in the companion
+//! summary written by [`crate::obs::report`]), so two replays of the same
+//! workload trace serialize to **byte-identical** files; `mesos-fair
+//! explain` reads this format back via [`read_file`].
+
+use super::{Contender, ObsEvent};
+use crate::error::{Error, Result};
+use crate::metrics::json::Json;
+
+/// First-line magic distinguishing decision traces from workload traces.
+pub const MAGIC: &str = "mesos-fair-obs";
+/// Format version, bumped on breaking encoding changes.
+pub const VERSION: f64 = 1.0;
+
+/// Run identity carried in the trace header.
+#[derive(Debug, Clone, PartialEq)]
+pub struct ObsMeta {
+    pub policy: String,
+    pub mode: String,
+    pub scenario: String,
+    pub seed: u64,
+}
+
+/// A parsed decision trace: header + event stream.
+#[derive(Debug, Clone, PartialEq)]
+pub struct ObsTrace {
+    pub meta: ObsMeta,
+    pub events: Vec<ObsEvent>,
+}
+
+fn hex(v: u64) -> Json {
+    Json::Str(format!("{v:#x}"))
+}
+
+fn parse_hex(j: &Json, what: &str) -> Result<u64> {
+    let s = j
+        .as_str()
+        .ok_or_else(|| Error::Config(format!("obs trace: {what} must be a hex string")))?;
+    let t = s.strip_prefix("0x").unwrap_or(s);
+    u64::from_str_radix(t, 16)
+        .map_err(|_| Error::Config(format!("obs trace: bad hex in {what}: '{s}'")))
+}
+
+fn num(j: &Json, key: &str) -> Result<f64> {
+    j.get(key)
+        .and_then(|v| v.as_f64())
+        .ok_or_else(|| Error::Config(format!("obs trace: missing number '{key}'")))
+}
+
+fn idx(j: &Json, key: &str) -> Result<usize> {
+    Ok(num(j, key)? as usize)
+}
+
+fn text(j: &Json, key: &str) -> Result<String> {
+    j.get(key)
+        .and_then(|v| v.as_str())
+        .map(str::to_string)
+        .ok_or_else(|| Error::Config(format!("obs trace: missing string '{key}'")))
+}
+
+fn ids_json(ids: &[usize]) -> Json {
+    Json::Arr(ids.iter().map(|i| Json::Num(*i as f64)).collect())
+}
+
+fn ids_from(j: &Json, key: &str) -> Result<Vec<usize>> {
+    j.get(key)
+        .and_then(|v| v.as_arr())
+        .ok_or_else(|| Error::Config(format!("obs trace: missing array '{key}'")))?
+        .iter()
+        .map(|v| {
+            v.as_f64()
+                .map(|x| x as usize)
+                .ok_or_else(|| Error::Config(format!("obs trace: non-numeric id in '{key}'")))
+        })
+        .collect()
+}
+
+fn f64s_from(j: &Json, key: &str) -> Result<Vec<f64>> {
+    j.get(key)
+        .and_then(|v| v.as_arr())
+        .ok_or_else(|| Error::Config(format!("obs trace: missing array '{key}'")))?
+        .iter()
+        .map(|v| {
+            v.as_f64()
+                .ok_or_else(|| Error::Config(format!("obs trace: non-numeric value in '{key}'")))
+        })
+        .collect()
+}
+
+fn contender_json(c: &Contender) -> Json {
+    Json::Arr(vec![
+        Json::Num(c.framework as f64),
+        Json::Num(c.agent as f64),
+        Json::Num(c.score),
+    ])
+}
+
+fn contender_from(j: &Json) -> Result<Contender> {
+    let a = j
+        .as_arr()
+        .filter(|a| a.len() == 3)
+        .ok_or_else(|| Error::Config("obs trace: contender must be [fw, agent, score]".into()))?;
+    let f =
+        |k: usize| a[k].as_f64().ok_or_else(|| Error::Config("obs trace: bad contender".into()));
+    Ok(Contender { framework: f(0)? as usize, agent: f(1)? as usize, score: f(2)? })
+}
+
+/// Encode one event as a single JSON object.
+pub fn event_json(e: &ObsEvent) -> Json {
+    let ev = Json::Str(e.kind().to_string());
+    match e {
+        ObsEvent::CycleStart { cycle, candidates } => Json::obj(vec![
+            ("ev", ev),
+            ("id", Json::Num(*cycle as f64)),
+            ("candidates", ids_json(candidates)),
+        ]),
+        ObsEvent::Decision {
+            cycle,
+            iter,
+            framework,
+            agent,
+            score,
+            runner_up,
+            contenders,
+            rows_scanned,
+            rows_pruned,
+        } => {
+            let mut pairs = vec![
+                ("ev", ev),
+                ("cycle", Json::Num(*cycle as f64)),
+                ("iter", Json::Num(*iter as f64)),
+                ("fw", Json::Num(*framework as f64)),
+                ("agent", Json::Num(*agent as f64)),
+                ("score", Json::Num(*score)),
+                ("contenders", Json::Arr(contenders.iter().map(contender_json).collect())),
+                ("scanned", Json::Num(*rows_scanned as f64)),
+                ("pruned", Json::Num(*rows_pruned as f64)),
+            ];
+            if let Some(r) = runner_up {
+                pairs.push(("runner", contender_json(r)));
+            }
+            Json::obj(pairs)
+        }
+        ObsEvent::Accept { cycle, iter, framework, agent, count, amount } => Json::obj(vec![
+            ("ev", ev),
+            ("cycle", Json::Num(*cycle as f64)),
+            ("iter", Json::Num(*iter as f64)),
+            ("fw", Json::Num(*framework as f64)),
+            ("agent", Json::Num(*agent as f64)),
+            ("count", Json::Num(*count)),
+            ("amount", Json::arr_f64(amount)),
+        ]),
+        ObsEvent::Decline { cycle, iter, framework, agent, reason } => Json::obj(vec![
+            ("ev", ev),
+            ("cycle", Json::Num(*cycle as f64)),
+            ("iter", Json::Num(*iter as f64)),
+            ("fw", Json::Num(*framework as f64)),
+            ("agent", Json::Num(*agent as f64)),
+            ("reason", Json::Str(reason.clone())),
+        ]),
+        ObsEvent::CycleEnd { cycle, iters, grants, declines } => Json::obj(vec![
+            ("ev", ev),
+            ("cycle", Json::Num(*cycle as f64)),
+            ("iters", Json::Num(*iters as f64)),
+            ("grants", Json::Num(*grants as f64)),
+            ("declines", Json::Num(*declines as f64)),
+        ]),
+        ObsEvent::FrameworkUp { framework, name, role, weight } => Json::obj(vec![
+            ("ev", ev),
+            ("fw", Json::Num(*framework as f64)),
+            ("name", Json::Str(name.clone())),
+            ("role", Json::Num(*role as f64)),
+            ("weight", Json::Num(*weight)),
+        ]),
+        ObsEvent::FrameworkDown { framework } => {
+            Json::obj(vec![("ev", ev), ("fw", Json::Num(*framework as f64))])
+        }
+        ObsEvent::AgentUp { agent } => {
+            Json::obj(vec![("ev", ev), ("agent", Json::Num(*agent as f64))])
+        }
+        ObsEvent::AgentDown { agent } => {
+            Json::obj(vec![("ev", ev), ("agent", Json::Num(*agent as f64))])
+        }
+    }
+}
+
+/// Decode one event line.
+pub fn event_from(j: &Json) -> Result<ObsEvent> {
+    let kind = text(j, "ev")?;
+    match kind.as_str() {
+        "cycle" => Ok(ObsEvent::CycleStart {
+            cycle: num(j, "id")? as u64,
+            candidates: ids_from(j, "candidates")?,
+        }),
+        "decision" => {
+            let runner_up = match j.get("runner") {
+                Some(r) => Some(contender_from(r)?),
+                None => None,
+            };
+            let contenders = j
+                .get("contenders")
+                .and_then(|v| v.as_arr())
+                .ok_or_else(|| Error::Config("obs trace: decision missing contenders".into()))?
+                .iter()
+                .map(contender_from)
+                .collect::<Result<Vec<_>>>()?;
+            Ok(ObsEvent::Decision {
+                cycle: num(j, "cycle")? as u64,
+                iter: num(j, "iter")? as u32,
+                framework: idx(j, "fw")?,
+                agent: idx(j, "agent")?,
+                score: num(j, "score")?,
+                runner_up,
+                contenders,
+                rows_scanned: num(j, "scanned")? as u32,
+                rows_pruned: num(j, "pruned")? as u32,
+            })
+        }
+        "accept" => Ok(ObsEvent::Accept {
+            cycle: num(j, "cycle")? as u64,
+            iter: num(j, "iter")? as u32,
+            framework: idx(j, "fw")?,
+            agent: idx(j, "agent")?,
+            count: num(j, "count")?,
+            amount: f64s_from(j, "amount")?,
+        }),
+        "decline" => Ok(ObsEvent::Decline {
+            cycle: num(j, "cycle")? as u64,
+            iter: num(j, "iter")? as u32,
+            framework: idx(j, "fw")?,
+            agent: idx(j, "agent")?,
+            reason: text(j, "reason")?,
+        }),
+        "cycle-end" => Ok(ObsEvent::CycleEnd {
+            cycle: num(j, "cycle")? as u64,
+            iters: num(j, "iters")? as u32,
+            grants: num(j, "grants")? as u32,
+            declines: num(j, "declines")? as u32,
+        }),
+        "fw-up" => Ok(ObsEvent::FrameworkUp {
+            framework: idx(j, "fw")?,
+            name: text(j, "name")?,
+            role: idx(j, "role")?,
+            weight: num(j, "weight")?,
+        }),
+        "fw-down" => Ok(ObsEvent::FrameworkDown { framework: idx(j, "fw")? }),
+        "agent-up" => Ok(ObsEvent::AgentUp { agent: idx(j, "agent")? }),
+        "agent-down" => Ok(ObsEvent::AgentDown { agent: idx(j, "agent")? }),
+        other => Err(Error::Config(format!("obs trace: unknown event kind '{other}'"))),
+    }
+}
+
+/// Serialize a decision trace: header line, then one event per line.
+pub fn to_jsonl(meta: &ObsMeta, events: &[ObsEvent]) -> String {
+    let header = Json::obj(vec![
+        ("trace", Json::Str(MAGIC.to_string())),
+        ("v", Json::Num(VERSION)),
+        ("policy", Json::Str(meta.policy.clone())),
+        ("mode", Json::Str(meta.mode.clone())),
+        ("scenario", Json::Str(meta.scenario.clone())),
+        ("seed", hex(meta.seed)),
+    ]);
+    let mut out = header.render();
+    out.push('\n');
+    for e in events {
+        out.push_str(&event_json(e).render());
+        out.push('\n');
+    }
+    out
+}
+
+/// Parse a decision trace produced by [`to_jsonl`].
+pub fn from_jsonl(textual: &str) -> Result<ObsTrace> {
+    let mut lines = textual.lines().filter(|l| !l.trim().is_empty());
+    let header =
+        Json::parse(lines.next().ok_or_else(|| Error::Config("obs trace: empty file".into()))?)?;
+    let magic = text(&header, "trace")?;
+    if magic != MAGIC {
+        return Err(Error::Config(format!("obs trace: bad magic '{magic}' (expected '{MAGIC}')")));
+    }
+    let v = num(&header, "v")?;
+    if v != VERSION {
+        return Err(Error::Config(format!("obs trace: unsupported version {v} (have {VERSION})")));
+    }
+    let meta = ObsMeta {
+        policy: text(&header, "policy")?,
+        mode: text(&header, "mode")?,
+        scenario: text(&header, "scenario")?,
+        seed: parse_hex(
+            header.get("seed").ok_or_else(|| Error::Config("obs trace: missing seed".into()))?,
+            "seed",
+        )?,
+    };
+    let events = lines
+        .map(|line| Json::parse(line).and_then(|j| event_from(&j)))
+        .collect::<Result<Vec<_>>>()?;
+    Ok(ObsTrace { meta, events })
+}
+
+/// Write a decision trace to `path`.
+pub fn write_file(meta: &ObsMeta, events: &[ObsEvent], path: &str) -> Result<()> {
+    std::fs::write(path, to_jsonl(meta, events))?;
+    Ok(())
+}
+
+/// Read a decision trace from `path`.
+pub fn read_file(path: &str) -> Result<ObsTrace> {
+    from_jsonl(&std::fs::read_to_string(path)?)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn sample_events() -> Vec<ObsEvent> {
+        vec![
+            ObsEvent::AgentUp { agent: 1 },
+            ObsEvent::FrameworkUp {
+                framework: 0,
+                name: "pi-q0-j0".into(),
+                role: 0,
+                weight: 1.5,
+            },
+            ObsEvent::CycleStart { cycle: 1, candidates: vec![0, 1] },
+            ObsEvent::Decision {
+                cycle: 1,
+                iter: 0,
+                framework: 0,
+                agent: 1,
+                score: 0.125,
+                runner_up: Some(Contender { framework: 2, agent: 0, score: 0.25 }),
+                contenders: vec![
+                    Contender { framework: 0, agent: 1, score: 0.125 },
+                    Contender { framework: 2, agent: 0, score: 0.25 },
+                ],
+                rows_scanned: 2,
+                rows_pruned: 5,
+            },
+            ObsEvent::Accept {
+                cycle: 1,
+                iter: 0,
+                framework: 0,
+                agent: 1,
+                count: 2.0,
+                amount: vec![2.0, 4.0, 0.5],
+            },
+            ObsEvent::Decision {
+                cycle: 1,
+                iter: 1,
+                framework: 2,
+                agent: 0,
+                score: 0.25,
+                runner_up: None,
+                contenders: vec![Contender { framework: 2, agent: 0, score: 0.25 }],
+                rows_scanned: 0,
+                rows_pruned: 0,
+            },
+            ObsEvent::Decline {
+                cycle: 1,
+                iter: 1,
+                framework: 2,
+                agent: 0,
+                reason: "handler-declined".into(),
+            },
+            ObsEvent::CycleEnd { cycle: 1, iters: 2, grants: 1, declines: 1 },
+            ObsEvent::FrameworkDown { framework: 0 },
+            ObsEvent::AgentDown { agent: 1 },
+        ]
+    }
+
+    #[test]
+    fn every_event_kind_round_trips_bit_exactly() {
+        let meta = ObsMeta {
+            policy: "drf".into(),
+            mode: "characterized".into(),
+            scenario: "mixed-bottleneck".into(),
+            seed: 0xC0FFEE,
+        };
+        let events = sample_events();
+        let textual = to_jsonl(&meta, &events);
+        let back = from_jsonl(&textual).unwrap();
+        assert_eq!(back.meta, meta);
+        assert_eq!(back.events, events);
+        // serialize -> parse -> serialize is byte-stable
+        assert_eq!(to_jsonl(&back.meta, &back.events), textual);
+    }
+
+    #[test]
+    fn header_escapes_awkward_scenario_names() {
+        let meta = ObsMeta {
+            policy: "tsf".into(),
+            mode: "oblivious".into(),
+            scenario: "ad \"hoc\" \\ trace\nwith newline".into(),
+            seed: u64::MAX,
+        };
+        let textual = to_jsonl(&meta, &[]);
+        // still one header line: the newline must have been escaped
+        assert_eq!(textual.lines().count(), 1);
+        let back = from_jsonl(&textual).unwrap();
+        assert_eq!(back.meta, meta);
+        assert!(back.events.is_empty());
+    }
+
+    #[test]
+    fn rejects_bad_magic_and_version() {
+        assert!(from_jsonl("").is_err());
+        assert!(from_jsonl("{\"trace\":\"something-else\",\"v\":1}").is_err());
+        let meta = ObsMeta {
+            policy: "drf".into(),
+            mode: "characterized".into(),
+            scenario: "poisson".into(),
+            seed: 1,
+        };
+        let bumped = to_jsonl(&meta, &[]).replace("\"v\":1", "\"v\":99");
+        assert!(from_jsonl(&bumped).is_err());
+        assert!(from_jsonl("{\"trace\":\"mesos-fair-obs\",\"v\":1,\"policy\":\"d\",\"mode\":\"c\",\"scenario\":\"s\",\"seed\":\"zz\"}").is_err());
+    }
+
+    #[test]
+    fn unknown_event_kind_is_an_error() {
+        let meta = ObsMeta {
+            policy: "drf".into(),
+            mode: "characterized".into(),
+            scenario: "poisson".into(),
+            seed: 7,
+        };
+        let mut textual = to_jsonl(&meta, &[]);
+        textual.push_str("{\"ev\":\"warp\"}\n");
+        assert!(from_jsonl(&textual).is_err());
+    }
+}

@@ -66,6 +66,7 @@
 //! bit-identical at any shard count.
 
 use crate::error::Result;
+use crate::obs::{ObsPhase, ObsSink};
 use crate::scheduler::kernel::{KernelKind, NO_AGENT, SoaBuffers};
 use crate::scheduler::policy::Criterion;
 use crate::scheduler::scorer::NativeScorer;
@@ -224,6 +225,19 @@ pub struct IncrementalScorer {
     pub incremental_rescores: u64,
     /// Calls answered from cache with no state change at all.
     pub cached_hits: u64,
+    /// Dirty framework rows re-copied from the state by patches.
+    pub rows_patched: u64,
+    /// Residual-dependent `(framework, agent)` cells re-filled by patches
+    /// (partial rows only — full rows count in `kernel_rows_filled`).
+    pub pairs_patched: u64,
+    /// Framework rows run through the row-fill kernel (full recomputes plus
+    /// fully refilled rows of incremental patches).
+    pub kernel_rows_filled: u64,
+    /// Busiest shard's fill work per pass, in tensor cells, accumulated
+    /// over all passes (`split_rows_mut` row-range chunking).
+    pub shard_cells_max: u64,
+    /// Total fill work in tensor cells, accumulated over all passes.
+    pub shard_cells_total: u64,
 }
 
 impl Default for IncrementalScorer {
@@ -246,6 +260,25 @@ impl IncrementalScorer {
             full_rescores: 0,
             incremental_rescores: 0,
             cached_hits: 0,
+            rows_patched: 0,
+            pairs_patched: 0,
+            kernel_rows_filled: 0,
+            shard_cells_max: 0,
+            shard_cells_total: 0,
+        }
+    }
+
+    /// Snapshot of the perf counters in the obs wire shape.
+    pub fn counters(&self) -> crate::obs::EngineCounters {
+        crate::obs::EngineCounters {
+            full_rescores: self.full_rescores,
+            incremental_rescores: self.incremental_rescores,
+            cached_hits: self.cached_hits,
+            rows_patched: self.rows_patched,
+            pairs_patched: self.pairs_patched,
+            kernel_rows_filled: self.kernel_rows_filled,
+            shard_cells_max: self.shard_cells_max,
+            shard_cells_total: self.shard_cells_total,
         }
     }
 
@@ -282,6 +315,19 @@ impl IncrementalScorer {
     /// Bring the cached tensors up to date with `state` (draining its dirty
     /// log) and return them.
     pub fn rescore(&mut self, state: &mut AllocState) -> (&ScoreInputs, &ScoreSet) {
+        self.rescore_obs(state, None)
+    }
+
+    /// Like [`IncrementalScorer::rescore`], additionally timing the
+    /// pruning-index sync into `obs` (phase `bounds-patch`) when a sink is
+    /// attached and enabled. `None` runs the exact pre-obs path: no dynamic
+    /// calls, no clock reads, identical tensors.
+    pub fn rescore_obs(
+        &mut self,
+        state: &mut AllocState,
+        mut obs: Option<&mut dyn ObsSink>,
+    ) -> (&ScoreInputs, &ScoreSet) {
+        let timing = matches!(&obs, Some(o) if o.enabled());
         let dirty = state.take_dirty();
         if !self.valid || dirty.structural || !self.si.matches_shape(state) {
             self.si = state.score_inputs();
@@ -296,11 +342,20 @@ impl IncrementalScorer {
                 self.soa.as_ref(),
                 self.effective_shards(),
             );
+            let t0 = timing.then(std::time::Instant::now);
             self.bounds.rebuild(&self.set);
+            if let (Some(t0), Some(o)) = (t0, obs.as_deref_mut()) {
+                o.span(ObsPhase::BoundsPatch, t0.elapsed().as_secs_f64());
+            }
+            let (n, m) = (self.si.n() as u64, self.si.m() as u64);
+            let per = self.si.n().div_ceil(self.effective_shards()) as u64;
+            self.kernel_rows_filled += n;
+            self.shard_cells_max += per.min(n) * m;
+            self.shard_cells_total += n * m;
             self.valid = true;
             self.full_rescores += 1;
         } else if !dirty.is_clean() {
-            self.patch(state, &dirty);
+            self.patch(state, &dirty, obs);
             self.incremental_rescores += 1;
         } else {
             self.cached_hits += 1;
@@ -309,7 +364,7 @@ impl IncrementalScorer {
     }
 
     /// Apply a non-structural dirty log to the cached tensors.
-    fn patch(&mut self, state: &AllocState, dirty: &DirtyLog) {
+    fn patch(&mut self, state: &AllocState, dirty: &DirtyLog, obs: Option<&mut dyn ObsSink>) {
         let r = self.si.r();
         for &n in &dirty.frameworks {
             self.si.refresh_row(state, n);
@@ -328,6 +383,29 @@ impl IncrementalScorer {
             .map(|n| dirty.frameworks.iter().any(|&dn| self.si.same_role(dn, n)))
             .collect();
         let shards = self.effective_shards();
+        // perf accounting: fill work in tensor cells, chunked exactly like
+        // `split_rows_mut`, so the shard-imbalance ratio reflects the real
+        // per-worker load of this pass
+        let m = self.si.m() as u64;
+        let per = n_all.div_ceil(shards).max(1);
+        let mut start = 0;
+        let mut max_cells = 0u64;
+        let mut total_cells = 0u64;
+        while start < n_all {
+            let end = (start + per).min(n_all);
+            let cells: u64 = (start..end)
+                .map(|n| if full_row[n] { m } else { dirty.agents.len() as u64 })
+                .sum();
+            max_cells = max_cells.max(cells);
+            total_cells += cells;
+            start = end;
+        }
+        let full_rows = full_row.iter().filter(|&&f| f).count() as u64;
+        self.rows_patched += dirty.frameworks.len() as u64;
+        self.pairs_patched += (n_all as u64 - full_rows) * dirty.agents.len() as u64;
+        self.kernel_rows_filled += full_rows;
+        self.shard_cells_max += max_cells;
+        self.shard_cells_total += total_cells;
         // Fill the dirty entries shard-by-shard (inline when serial). Fully
         // refilled rows report their criterion minima from the same pass,
         // so the pruning index update below is O(full rows), not a serial
@@ -373,6 +451,10 @@ impl IncrementalScorer {
             }
         };
         // keep the pruned candidate index in sync with the patched tensors
+        let t0 = match &obs {
+            Some(o) if o.enabled() => Some(std::time::Instant::now()),
+            _ => None,
+        };
         for (n, (pm, pa, rm, ra)) in minima {
             self.bounds.set_row(n, pm, pa, rm, ra);
         }
@@ -382,6 +464,9 @@ impl IncrementalScorer {
                     self.bounds.patch_pair(&self.set, n, i);
                 }
             }
+        }
+        if let (Some(t0), Some(o)) = (t0, obs) {
+            o.span(ObsPhase::BoundsPatch, t0.elapsed().as_secs_f64());
         }
     }
 
@@ -537,6 +622,46 @@ impl ScoringEngine {
             }
         }
     }
+
+    /// Like [`ScoringEngine::scores_with_bounds`], with an attached obs
+    /// sink: the engine times its pruning-index maintenance into the
+    /// `bounds-patch` phase. With a disabled sink this takes the exact
+    /// plain path — no clock reads, bit-identical tensors.
+    pub fn scores_with_bounds_obs(
+        &mut self,
+        state: &mut AllocState,
+        obs: &mut dyn ObsSink,
+    ) -> Result<(&ScoreInputs, &ScoreSet, &JointBounds)> {
+        match &mut self.inner {
+            EngineImpl::Incremental(inc) => {
+                inc.rescore_obs(state, Some(obs));
+                Ok((&inc.si, &inc.set, &inc.bounds))
+            }
+            EngineImpl::External { scorer, si, set, bounds, valid } => {
+                let dirty = state.take_dirty();
+                if !*valid || !dirty.is_clean() || !si.matches_shape(state) {
+                    *si = state.score_inputs();
+                    *set = scorer.score(si)?;
+                    let t0 = obs.enabled().then(std::time::Instant::now);
+                    bounds.rebuild(set);
+                    if let Some(t0) = t0 {
+                        obs.span(ObsPhase::BoundsPatch, t0.elapsed().as_secs_f64());
+                    }
+                    *valid = true;
+                }
+                Ok((&*si, &*set, &*bounds))
+            }
+        }
+    }
+
+    /// Engine perf counters in the obs wire shape (zeros for external
+    /// backends — they run their own math outside the incremental path).
+    pub fn counters(&self) -> crate::obs::EngineCounters {
+        match &self.inner {
+            EngineImpl::Incremental(inc) => inc.counters(),
+            EngineImpl::External { .. } => crate::obs::EngineCounters::default(),
+        }
+    }
 }
 
 impl std::fmt::Debug for ScoringEngine {
@@ -618,6 +743,32 @@ mod tests {
         inc.rescore(&mut st);
         assert_eq!(inc.full_rescores, 1);
         assert_eq!(inc.cached_hits, 2);
+    }
+
+    #[test]
+    fn counters_track_fill_work() {
+        let mut st = illustrative();
+        let mut inc = IncrementalScorer::new();
+        let (n, m) = {
+            let (si, _) = inc.rescore(&mut st); // initial full pass
+            (si.n() as u64, si.m() as u64)
+        };
+        let c0 = inc.counters();
+        assert_eq!(c0.full_rescores, 1);
+        assert_eq!(c0.kernel_rows_filled, n, "full pass fills every row");
+        assert_eq!(c0.shard_cells_total, n * m);
+        assert_eq!(c0.shard_cells_max, n * m, "serial: one shard does all the work");
+        assert!((c0.shard_imbalance(1) - 1.0).abs() < 1e-12);
+        st.place_task(0, 0).unwrap();
+        inc.rescore(&mut st);
+        let c = inc.counters();
+        assert_eq!(c.incremental_rescores, 1);
+        assert_eq!(c.rows_patched, 1, "one dirty framework row re-copied");
+        // the placer's row is fully refilled; everyone else (distinct
+        // default roles) only patches the one dirty agent column
+        assert_eq!(c.kernel_rows_filled, n + 1);
+        assert_eq!(c.pairs_patched, n - 1);
+        assert_eq!(c.shard_cells_total, n * m + m + (n - 1));
     }
 
     #[test]

@@ -62,6 +62,24 @@
 //! bench-diff` gates both the joint-argmin medians and the batched-kernel
 //! speedup against `benches/baseline_scorer.json`.
 //!
+//! ## Observability
+//!
+//! The allocation loop is threaded with a flight recorder
+//! ([`crate::obs`]): every offer cycle can emit structured decision events
+//! (candidate set, per-criterion winning score and runner-up margin,
+//! accept/decline, framework/agent churn) and monotonic-clock spans over
+//! the score-recompute / bounds-patch / joint-argmin / offer-dispatch
+//! phases. Instrumentation sits behind the [`crate::obs::ObsSink`] trait
+//! with a no-op default, and every event construction and `Instant::now()`
+//! call is gated on `enabled()`, so the off path costs nothing beyond a
+//! few unconditional engine counters ([`engine::IncrementalScorer`] tracks
+//! rows patched, kernel rows filled and shard fill-work cells the same way
+//! it always counted rescores). Recording never perturbs scheduling:
+//! contender reconstruction consumes no RNG draws and the traced joint
+//! pick is the counted serial scan, bit-identical to the sharded one —
+//! replays spill byte-identical JSONL traces (`rust/tests/obs.rs`), which
+//! `mesos-fair explain` and `obs-report` read back.
+//!
 //! * [`scorer::NativeScorer`] — pure-rust scoring (mirrors the L1 kernel).
 //! * `runtime::scorer::HloScorer` — the same math through the AOT-compiled
 //!   Pallas kernel via PJRT (parity-tested in `rust/tests/runtime_parity.rs`,

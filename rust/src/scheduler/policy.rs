@@ -296,6 +296,88 @@ impl Policy {
         best.map(|(_, _, n, i)| (n, i))
     }
 
+    /// The serial pruned scan of [`Policy::pick_joint_pruned`], reporting
+    /// alongside the pick how many framework rows the bound let it visit
+    /// (`scanned`) vs skip (`pruned`) — the flight recorder's decision
+    /// context (`obs::ObsEvent::Decision`). The pick is identical to
+    /// `pick_joint_pruned` at any shard count (the sharded path is
+    /// bit-identical to the serial one by construction), so the allocator
+    /// can route through this variant while recording without changing
+    /// what it grants; the counts are deterministic because the serial
+    /// visit order is.
+    pub fn pick_joint_pruned_counted<S: ScoreView + ?Sized>(
+        &self,
+        set: &S,
+        si: &ScoreInputs,
+        candidates: &[usize],
+        bounds: &JointBounds,
+    ) -> (Option<(usize, usize)>, u32, u32) {
+        let n_all = si.n();
+        if n_all == 0 || candidates.is_empty() {
+            return (None, 0, 0);
+        }
+        let crit = self.criterion;
+        let row_bound = |k: usize| -> f64 {
+            if set.overridden(k) {
+                -BIG
+            } else {
+                bounds.row_bound(crit, k)
+            }
+        };
+        let mut order: Vec<(f64, usize)> = (0..n_all).map(|k| (row_bound(k), k)).collect();
+        order.sort_by(|a, b| a.0.total_cmp(&b.0).then(a.1.cmp(&b.1)));
+        let mut best: Option<(f64, f64, usize, usize)> = None;
+        let mut scanned = 0u32;
+        for &(bound, k) in &order {
+            if let Some((bs, _, _, _)) = best {
+                if bound > bs {
+                    break;
+                }
+            }
+            scanned += 1;
+            self.scan_joint_row(set, k, candidates, &mut best);
+        }
+        (best.map(|(_, _, n, i)| (n, i)), scanned, n_all as u32 - scanned)
+    }
+
+    /// Every framework's best feasible `(agent, score)` pair over
+    /// `candidates` under this policy's criterion — the decision context
+    /// the flight recorder attaches to each pick so `mesos-fair explain`
+    /// can show a losing framework what it scored vs the winner.
+    /// Deterministic (strict `(score, agent)` fold, no RNG draws), so
+    /// recording it never perturbs the allocation stream.
+    pub fn contenders<S: ScoreView + ?Sized>(
+        &self,
+        set: &S,
+        si: &ScoreInputs,
+        candidates: &[usize],
+    ) -> Vec<crate::obs::Contender> {
+        let mut out = Vec::new();
+        for n in 0..si.n() {
+            let mut best: Option<(f64, usize)> = None;
+            for &i in candidates {
+                if !set.feas(n, i) {
+                    continue;
+                }
+                let s = self.criterion.score(set, n, i);
+                if s >= BIG {
+                    continue;
+                }
+                let better = match best {
+                    None => true,
+                    Some((bs, bi)) => (s, i) < (bs, bi),
+                };
+                if better {
+                    best = Some((s, i));
+                }
+            }
+            if let Some((score, agent)) = best {
+                out.push(crate::obs::Contender { framework: n, agent, score });
+            }
+        }
+        out
+    }
+
     /// BF-DRF-style two-stage pick: framework by the global criterion among
     /// frameworks feasible on some candidate (near-equal scores break
     /// uniformly at random, like [`Policy::pick_for_agent`] — same-role
@@ -541,6 +623,57 @@ mod tests {
                 }
             }
         }
+    }
+
+    #[test]
+    fn counted_pick_matches_pruned_and_reports_rows() {
+        use crate::scheduler::engine::JointBounds;
+        for placements in [vec![], vec![(0, 0, 3), (1, 1, 2)]] {
+            let st = illustrative(&placements);
+            let si = st.score_inputs();
+            let set = NativeScorer::compute(&si);
+            let bounds = JointBounds::from_set(&set);
+            for p in [
+                Policy::new("psdsf", Criterion::PsDsf, PolicyKind::Joint),
+                Policy::new("rpsdsf", Criterion::RPsDsf, PolicyKind::Joint),
+            ] {
+                let (pick, scanned, pruned) =
+                    p.pick_joint_pruned_counted(&set, &si, &[0, 1], &bounds);
+                assert_eq!(pick, p.pick_joint_pruned(&set, &si, &[0, 1], &bounds, 2));
+                assert_eq!(scanned as usize + pruned as usize, si.n());
+                assert!(pick.is_none() || scanned >= 1);
+            }
+        }
+        let st = illustrative(&[]);
+        let si = st.score_inputs();
+        let set = NativeScorer::compute(&si);
+        let bounds = JointBounds::from_set(&set);
+        let p = Policy::new("psdsf", Criterion::PsDsf, PolicyKind::Joint);
+        assert_eq!(p.pick_joint_pruned_counted(&set, &si, &[], &bounds), (None, 0, 0));
+    }
+
+    #[test]
+    fn contenders_list_best_feasible_pair_per_framework() {
+        let st = illustrative(&[(0, 0, 1), (1, 1, 1)]);
+        let si = st.score_inputs();
+        let set = NativeScorer::compute(&si);
+        let p = Policy::new("psdsf", Criterion::PsDsf, PolicyKind::Joint);
+        let cs = p.contenders(&set, &si, &[0, 1]);
+        assert_eq!(cs.len(), 2);
+        assert_eq!((cs[0].framework, cs[1].framework), (0, 1));
+        for c in &cs {
+            // each contender's score is the minimum over both agents
+            let min = (0..2)
+                .filter(|&i| set.feas(c.framework, i))
+                .map(|i| p.criterion.score(&set, c.framework, i))
+                .fold(f64::INFINITY, f64::min);
+            assert_eq!(c.score, min);
+        }
+        // saturated state -> no contenders
+        let st = illustrative(&[(0, 0, 20), (1, 1, 20)]);
+        let si = st.score_inputs();
+        let set = NativeScorer::compute(&si);
+        assert!(p.contenders(&set, &si, &[0, 1]).is_empty());
     }
 
     #[test]

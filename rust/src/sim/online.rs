@@ -23,6 +23,7 @@ use crate::mesos::master::Master;
 use crate::mesos::offer::Offer;
 use crate::mesos::OfferHandler;
 use crate::metrics::DistStats;
+use crate::obs::ObsSummary;
 use crate::resources::ResVec;
 use crate::rng::Rng;
 use crate::scheduler::{policy_by_name, KernelKind, NativeScorer, Scorer};
@@ -105,6 +106,10 @@ pub struct OnlineConfig {
     /// Row-fill kernel for the native engine (`--kernel scalar|batched`;
     /// results are bit-identical either way).
     pub kernel: KernelKind,
+    /// Attach the obs flight recorder (CLI `--obs`): decision traces and
+    /// cycle-phase timings land in [`OnlineResult::obs`]. Grants are
+    /// bit-identical with or without it.
+    pub obs: bool,
     /// Safety cutoff (simulated seconds).
     pub max_sim_time: f64,
 }
@@ -136,6 +141,7 @@ impl OnlineConfig {
             churn: ChurnModel::None,
             shards: 1,
             kernel: KernelKind::default(),
+            obs: false,
             max_sim_time: 1e7,
         }
     }
@@ -245,6 +251,9 @@ pub struct OnlineResult {
     pub completion: DistStats,
     /// Per-job slowdown (completion / inherent service) distribution.
     pub slowdown: DistStats,
+    /// Flight-recorder output ([`OnlineConfig::obs`]): decision events,
+    /// per-phase timing histograms and engine counters.
+    pub obs: Option<ObsSummary>,
 }
 
 /// The online simulator.
@@ -336,6 +345,9 @@ impl OnlineSim {
         let mut master = Master::new(pool, policy, cfg.mode, scorer);
         master.set_shards(cfg.shards.max(1));
         master.set_kernel(cfg.kernel);
+        if cfg.obs {
+            master.enable_obs(crate::obs::DEFAULT_EVENT_CAPACITY);
+        }
         let label = format!("{}/{}", cfg.policy, cfg.mode.label());
         let queues: Vec<SubmissionQueue> = scenario
             .queues
@@ -471,6 +483,9 @@ impl OnlineSim {
                 slowdowns.push(ct / j.ideal_service());
             }
         }
+        let counters = self.master.engine_counters();
+        let engine_shards = self.master.engine_shards();
+        let obs = self.master.take_obs().map(|rec| rec.into_summary(counters, engine_shards));
         Ok(OnlineResult {
             label: format!("{}/{}", self.cfg.policy, self.cfg.mode.label()),
             makespan,
@@ -485,6 +500,7 @@ impl OnlineSim {
             tasks_done: self.tasks_done,
             completion: DistStats::of(&completions),
             slowdown: DistStats::of(&slowdowns),
+            obs,
             trace: self.trace,
         })
     }
@@ -860,6 +876,26 @@ mod tests {
         assert_eq!(a.grants, b.grants);
         assert_eq!(a.trace.cpu.values(), b.trace.cpu.values());
         assert_eq!(a.trace.mem.values(), b.trace.mem.values());
+    }
+
+    #[test]
+    fn obs_run_matches_silent_run_and_summarizes() {
+        let mut cfg = OnlineConfig::small("psdsf", AllocatorMode::Characterized);
+        cfg.seed = 29;
+        let silent = OnlineSim::new(cfg.clone()).unwrap().run().unwrap();
+        assert!(silent.obs.is_none(), "no recorder unless asked");
+        cfg.obs = true;
+        let traced = OnlineSim::new(cfg).unwrap().run().unwrap();
+        assert_eq!(silent.makespan, traced.makespan, "tracing changed the run");
+        assert_eq!(silent.grants, traced.grants);
+        assert_eq!(silent.trace.cpu.values(), traced.trace.cpu.values());
+        let s = traced.obs.expect("summary attached");
+        assert!(s.cycles > 0);
+        assert!(!s.events.is_empty());
+        assert_eq!(s.dropped, 0, "small run fits the ring");
+        assert!(s.counters.full_rescores > 0);
+        // every phase present in the histogram table
+        assert_eq!(s.phases.len(), crate::obs::ObsPhase::ALL.len());
     }
 
     #[test]

@@ -1,0 +1,155 @@
+//! Flight-recorder integration tests: the determinism contract (decision
+//! traces are bit-identical across replays, and attaching the recorder
+//! never changes a single grant) plus the `explain` acceptance path on
+//! the mixed-bottleneck scenario.
+
+use mesos_fair::obs::trace::{from_jsonl, to_jsonl, ObsMeta};
+use mesos_fair::obs::{explain::explain, ObsEvent};
+use mesos_fair::sim::online::{OnlineResult, OnlineSim};
+use mesos_fair::testing::smoke_scenario;
+use mesos_fair::workload::{realize, trace as scenario_trace};
+
+/// Run `scenario_name` under `policy` from a replayed copy of `recorded`,
+/// with or without the flight recorder attached.
+fn run(scenario_name: &str, policy: &str, seed: u64, recorded: &str, obs: bool) -> OnlineResult {
+    let mut cfg = smoke_scenario(scenario_name, policy, seed).unwrap();
+    cfg.obs = obs;
+    let scenario = scenario_trace::from_jsonl(recorded).unwrap();
+    OnlineSim::with_scenario(cfg, scenario).unwrap().run().unwrap()
+}
+
+#[test]
+fn traces_bit_identical_across_replays_and_grants_unchanged() {
+    // the tentpole's determinism contract, per policy: two replays of the
+    // same recorded scenario serialize to byte-identical decision traces,
+    // and the recorder itself never perturbs the schedule
+    for policy in ["drf", "tsf", "psdsf"] {
+        let seed = 0x0B5EED;
+        let cfg = smoke_scenario("poisson", policy, seed).unwrap();
+        let recorded = scenario_trace::to_jsonl(&realize(&cfg, "poisson"));
+
+        let silent = run("poisson", policy, seed, &recorded, false);
+        assert!(silent.obs.is_none(), "{policy}: no summary without --obs");
+
+        let a = run("poisson", policy, seed, &recorded, true);
+        let b = run("poisson", policy, seed, &recorded, true);
+
+        // attaching the recorder changes nothing observable
+        assert_eq!(silent.grants, a.grants, "{policy}: grants drifted under obs");
+        assert_eq!(silent.makespan, a.makespan, "{policy}: makespan drifted under obs");
+        assert_eq!(silent.trace.completions, a.trace.completions, "{policy}: completions");
+
+        let meta = ObsMeta {
+            policy: policy.to_string(),
+            mode: "characterized".to_string(),
+            scenario: "poisson".to_string(),
+            seed,
+        };
+        let sa = a.obs.expect("obs summary");
+        let sb = b.obs.expect("obs summary");
+        assert_eq!(sa.dropped, 0, "{policy}: ring buffer overflowed in a smoke run");
+        let ta = to_jsonl(&meta, &sa.events);
+        let tb = to_jsonl(&meta, &sb.events);
+        assert_eq!(ta, tb, "{policy}: replayed decision traces differ");
+        // and the serialized form round-trips losslessly
+        let back = from_jsonl(&ta).unwrap();
+        assert_eq!(back.events, sa.events, "{policy}: trace round-trip");
+    }
+}
+
+#[test]
+fn explain_reconstructs_a_starved_framework_in_mixed_bottleneck() {
+    // acceptance: with --obs on, `explain` must reconstruct the winning-
+    // vs-runner-up score for at least one starved framework
+    let seed = 0xFA13;
+    let mut cfg = smoke_scenario("mixed-bottleneck", "psdsf", seed).unwrap();
+    cfg.obs = true;
+    let scenario = realize(&cfg, "mixed-bottleneck");
+    let r = OnlineSim::with_scenario(cfg, scenario).unwrap().run().unwrap();
+    let summary = r.obs.expect("obs summary");
+    let trace = mesos_fair::obs::trace::ObsTrace {
+        meta: ObsMeta {
+            policy: "psdsf".into(),
+            mode: "characterized".into(),
+            scenario: "mixed-bottleneck".into(),
+            seed,
+        },
+        events: summary.events,
+    };
+    // every framework slot the run ever bound
+    let slots: Vec<usize> = trace
+        .events
+        .iter()
+        .filter_map(|e| match e {
+            ObsEvent::FrameworkUp { framework, .. } => Some(*framework),
+            _ => None,
+        })
+        .collect();
+    assert!(!slots.is_empty(), "no frameworks registered?");
+    let mut starved = None;
+    for slot in slots {
+        let ex = explain(&trace, &slot.to_string()).unwrap();
+        if !ex.lost.is_empty() {
+            starved = Some(ex);
+            break;
+        }
+    }
+    let ex = starved.expect("some framework lost at least one contested decision");
+    for d in &ex.lost {
+        // the loser can never have outscored the winner (lower is better)
+        assert!(d.margin() >= -1e-12, "negative margin: {d:?}");
+        assert!(d.own_score.is_finite() && d.winner_score.is_finite(), "{d:?}");
+        assert_ne!(d.slot, d.winner_slot, "{d:?}");
+    }
+    let rendered = ex.render(5);
+    assert!(rendered.contains("decisions lost"), "{rendered}");
+    assert!(rendered.contains("margin"), "{rendered}");
+}
+
+#[test]
+fn cycle_events_are_internally_consistent() {
+    // accept/decline events per cycle must agree with that cycle's
+    // CycleEnd tallies, and every accept follows a decision for the same
+    // (framework, agent) — the invariants `explain` relies on
+    let seed = 0xC0DE;
+    let mut cfg = smoke_scenario("batch-baseline", "drf", seed).unwrap();
+    cfg.obs = true;
+    let scenario = realize(&cfg, "batch-baseline");
+    let r = OnlineSim::with_scenario(cfg, scenario).unwrap().run().unwrap();
+    let events: Vec<ObsEvent> = r.obs.expect("obs summary").events;
+    let mut last_decision: Option<(usize, usize)> = None;
+    let mut grants_in_cycle = 0u32;
+    let mut declines_in_cycle = 0u32;
+    let mut checked_cycles = 0usize;
+    for e in &events {
+        match e {
+            ObsEvent::CycleStart { candidates, .. } => {
+                assert!(!candidates.is_empty(), "cycle opened with no candidates");
+                grants_in_cycle = 0;
+                declines_in_cycle = 0;
+            }
+            ObsEvent::Decision { framework, agent, score, contenders, .. } => {
+                last_decision = Some((*framework, *agent));
+                assert!(score.is_finite());
+                let me = contenders.iter().find(|c| c.framework == *framework);
+                let me = me.expect("winner among its own contenders");
+                assert_eq!(me.score, *score, "winner's contender score mismatch");
+            }
+            ObsEvent::Accept { framework, agent, .. } => {
+                assert_eq!(last_decision, Some((*framework, *agent)), "accept without decision");
+                grants_in_cycle += 1;
+            }
+            ObsEvent::Decline { framework, agent, .. } => {
+                assert_eq!(last_decision, Some((*framework, *agent)), "decline without decision");
+                declines_in_cycle += 1;
+            }
+            ObsEvent::CycleEnd { grants, declines, .. } => {
+                assert_eq!(*grants, grants_in_cycle, "CycleEnd grants tally");
+                assert_eq!(*declines, declines_in_cycle, "CycleEnd declines tally");
+                checked_cycles += 1;
+            }
+            _ => {}
+        }
+    }
+    assert!(checked_cycles > 0, "no complete cycles recorded");
+}
