@@ -14,7 +14,7 @@ use mesos_fair::metrics::json::Json;
 use mesos_fair::resources::ResVec;
 use mesos_fair::rng::Rng;
 use mesos_fair::scheduler::{
-    policy_by_name, rpsdsf, IncrementalScorer, KernelKind, NativeScorer, ScoringEngine,
+    policy_by_name, pool, rpsdsf, IncrementalScorer, KernelKind, NativeScorer, ScoringEngine,
 };
 use mesos_fair::sim::online::{OnlineConfig, OnlineSim};
 use mesos_fair::testing::scaled_state_with_load;
@@ -256,6 +256,93 @@ fn main() {
         ]
     };
 
+    header("joint argmin at 16384x2048 — linear-pruned sort-scan vs tournament tree");
+    let argmin16k_rows = {
+        let (m, n) = (2048usize, 16384usize);
+        let mut st = scaled_state_with_load(m, n, 4 * m, &mut rng);
+        // same steady-state shape as the 1024x2048 sweep: distinct weights
+        // keep row bounds distinct, so the tree's verify set stays small
+        for fw in 0..n {
+            if st.total_tasks(fw) == 0.0 {
+                for ag in 0..m {
+                    if st.task_fits(fw, ag) {
+                        st.place_task(fw, ag).unwrap();
+                        break;
+                    }
+                }
+            }
+            st.framework_mut(fw).weight = 1.0 + fw as f64 / (8.0 * n as f64);
+        }
+        let policy = policy_by_name("rpsdsf").unwrap();
+        let candidates: Vec<usize> = (0..m).collect();
+        let mut engine = ScoringEngine::native();
+        // the initial 16k x 2k fill is the expensive part; shard it across
+        // the persistent pool (results are bit-identical at any count)
+        engine.set_shards(pool::auto_shards());
+        let (si, set, bounds) = engine.scores_with_bounds(&mut st).unwrap();
+
+        // all argmin paths must agree before anything is timed
+        let reference = policy.pick_joint(set, si, &candidates);
+        assert_eq!(reference, policy.pick_joint_pruned_linear(set, si, &candidates, bounds));
+        for shards in [1usize, 2, 8] {
+            assert_eq!(
+                reference,
+                policy.pick_joint_pruned(set, si, &candidates, bounds, shards),
+                "{shards} shards"
+            );
+        }
+
+        let linear = bench(&format!("argmin16k/linear-pruned/{m}x{n}"), 5, 200, || {
+            std::hint::black_box(policy.pick_joint_pruned_linear(set, si, &candidates, bounds));
+        });
+        println!("{}", linear.render());
+        let tree = bench(&format!("argmin16k/tree/{m}x{n}"), 10, 400, || {
+            std::hint::black_box(policy.pick_joint_pruned(set, si, &candidates, bounds, 1));
+        });
+        println!("{}", tree.render());
+        let speedup_tree = linear.p50 / tree.p50.max(1e-12);
+        println!("  tree speedup over the linear-pruned sort-scan: {speedup_tree:.1}x");
+
+        // dispatch-latency arm: the same 8 shard jobs through the
+        // persistent pool vs a fresh per-pass thread::scope spawn — the
+        // overhead every sharded rescore used to pay each allocation cycle
+        let payload: Vec<f64> = (0..4096).map(|i| (i as f64).sqrt()).collect();
+        let chunk = payload.len() / 8;
+        let pooled = bench("argmin16k/dispatch/pooled (8 jobs)", 20, 400, || {
+            let jobs: Vec<_> = (0..8)
+                .map(|k| {
+                    let p = &payload;
+                    move || p[k * chunk..(k + 1) * chunk].iter().sum::<f64>()
+                })
+                .collect();
+            std::hint::black_box(pool::global().run(jobs).0);
+        });
+        println!("{}", pooled.render());
+        let scoped = bench("argmin16k/dispatch/scoped (8 jobs)", 20, 400, || {
+            let mut outs = vec![0.0f64; 8];
+            std::thread::scope(|s| {
+                for (k, out) in outs.iter_mut().enumerate() {
+                    let p = &payload;
+                    s.spawn(move || *out = p[k * chunk..(k + 1) * chunk].iter().sum::<f64>());
+                }
+            });
+            std::hint::black_box(&outs);
+        });
+        println!("{}", scoped.render());
+        let dispatch_speedup = scoped.p50 / pooled.p50.max(1e-12);
+        println!("  pooled dispatch vs scoped spawn: {dispatch_speedup:.1}x");
+        vec![
+            ("agents", Json::Num(m as f64)),
+            ("frameworks", Json::Num(n as f64)),
+            ("linear", result_json(&linear)),
+            ("tree", result_json(&tree)),
+            ("speedup_tree", Json::Num(speedup_tree)),
+            ("dispatch_pooled", result_json(&pooled)),
+            ("dispatch_scoped", result_json(&scoped)),
+            ("dispatch_speedup", Json::Num(dispatch_speedup)),
+        ]
+    };
+
     header("allocation-cycle latency (one full cycle on a drained cluster)");
     let mut cycle_rows: Vec<Json> = Vec::new();
     for policy in ["drf", "psdsf", "rpsdsf", "bf-drf"] {
@@ -297,6 +384,7 @@ fn main() {
         ("kernels", Json::Arr(kernel_rows)),
         ("masking_256x512", Json::obj(masking_rows)),
         ("joint_1024x2048", Json::obj(joint_rows)),
+        ("argmin_16k", Json::obj(argmin16k_rows)),
         ("cycles", Json::Arr(cycle_rows)),
         ("e2e", Json::Arr(e2e_rows)),
     ]);

@@ -242,6 +242,74 @@ pub fn scorer_kernel_regressions(
     Ok(fails)
 }
 
+/// Gate for the 16k-framework joint-argmin sweep: the tournament-tree
+/// descent must stay meaningfully sub-linear against the serial
+/// sort-scan reference at 16384×2048. Returns regressions (empty = pass);
+/// composed with the other scorer gates by `mesos-fair bench-diff`.
+///
+/// Two checks on `argmin_16k.speedup_tree` (`linear p50 / tree p50` — a
+/// within-run ratio, hence hardware-independent):
+/// * absolute floor: the current tree speedup must be ≥ 5×;
+/// * against the baseline: it must not fall below
+///   `baseline speedup_tree * (1 - max_regress)`.
+///
+/// The pool-vs-scoped dispatch medians ride in the same section but are
+/// informational only — dispatch latency is dominated by OS scheduling
+/// noise on shared CI runners, so it is printed, not enforced. A
+/// `"provisional": true` baseline downgrades the baseline comparison to
+/// informational (the 5× floor still enforces); a baseline with no
+/// `argmin_16k` section (predating the tree index) is noted and skipped.
+pub fn scorer_argmin16k_regressions(
+    current: &crate::metrics::json::Json,
+    baseline: &crate::metrics::json::Json,
+    max_regress: f64,
+) -> crate::error::Result<Vec<String>> {
+    use crate::error::Error;
+    use crate::metrics::json::Json;
+    fn tree_speedup(doc: &Json) -> Option<f64> {
+        doc.get("argmin_16k")?.get("speedup_tree")?.as_f64()
+    }
+    const TREE_FLOOR: f64 = 5.0;
+    let cur = tree_speedup(current).ok_or_else(|| {
+        Error::Experiment("current bench json: missing argmin_16k.speedup_tree".into())
+    })?;
+    let mut fails = Vec::new();
+    if cur < TREE_FLOOR {
+        fails.push(format!(
+            "tree argmin is only {cur:.1}x faster than the linear-pruned sort-scan at \
+             16384x2048 (floor: {TREE_FLOOR}x)"
+        ));
+    }
+    if let Some(d) = current
+        .get("argmin_16k")
+        .and_then(|j| j.get("dispatch_speedup"))
+        .and_then(|v| v.as_f64())
+    {
+        println!("bench-diff note: pool dispatch is {d:.1}x a scoped spawn (informational)");
+    }
+    let provisional = baseline.get("provisional").and_then(|v| v.as_bool()).unwrap_or(false);
+    match tree_speedup(baseline) {
+        None => {
+            println!("bench-diff note: baseline has no argmin_16k section, skipping comparison")
+        }
+        Some(base) => {
+            if cur < base * (1.0 - max_regress) {
+                let msg = format!(
+                    "tree argmin speedup regressed to {cur:.1}x vs {base:.1}x baseline \
+                     (threshold: {:.1}x)",
+                    base * (1.0 - max_regress)
+                );
+                if provisional {
+                    println!("bench-diff note (provisional baseline, not enforced): {msg}");
+                } else {
+                    fails.push(msg);
+                }
+            }
+        }
+    }
+    Ok(fails)
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -366,6 +434,62 @@ mod tests {
         let cur = kernel_doc(Some(1.3), false);
         let fails = scorer_kernel_regressions(&cur, &base, 0.25).unwrap();
         assert_eq!(fails.len(), 1, "{fails:?}");
+    }
+
+    fn argmin16k_doc(speedup_tree: Option<f64>, provisional: bool) -> Json {
+        let mut pairs = Vec::new();
+        if let Some(s) = speedup_tree {
+            pairs.push(("argmin_16k", Json::obj(vec![("speedup_tree", Json::Num(s))])));
+        }
+        if provisional {
+            pairs.push(("provisional", Json::Bool(true)));
+        }
+        Json::obj(pairs)
+    }
+
+    #[test]
+    fn argmin16k_gate_passes_within_threshold() {
+        let base = argmin16k_doc(Some(40.0), false);
+        let cur = argmin16k_doc(Some(35.0), false); // -12% vs baseline, above 5x floor
+        let fails = scorer_argmin16k_regressions(&cur, &base, 0.25).unwrap();
+        assert!(fails.is_empty(), "{fails:?}");
+    }
+
+    #[test]
+    fn argmin16k_gate_flags_floor_and_baseline_regression() {
+        let base = argmin16k_doc(Some(40.0), false);
+        // below the absolute 5x floor AND below base*(1-0.25)
+        let cur = argmin16k_doc(Some(3.0), false);
+        let fails = scorer_argmin16k_regressions(&cur, &base, 0.25).unwrap();
+        assert_eq!(fails.len(), 2, "{fails:?}");
+        assert!(fails.iter().any(|f| f.contains("floor")), "{fails:?}");
+        assert!(fails.iter().any(|f| f.contains("regressed")), "{fails:?}");
+        // above the floor but regressed more than 25% vs baseline
+        let cur = argmin16k_doc(Some(12.0), false);
+        let fails = scorer_argmin16k_regressions(&cur, &base, 0.25).unwrap();
+        assert_eq!(fails.len(), 1, "{fails:?}");
+    }
+
+    #[test]
+    fn argmin16k_gate_handles_missing_and_provisional_baselines() {
+        let base = argmin16k_doc(Some(40.0), false);
+        // current must carry the sweep
+        assert!(scorer_argmin16k_regressions(&argmin16k_doc(None, false), &base, 0.25).is_err());
+        // baseline without the section: comparison skipped, floor still enforced
+        let no_section = Json::obj(vec![]);
+        let fails =
+            scorer_argmin16k_regressions(&argmin16k_doc(Some(20.0), false), &no_section, 0.25)
+                .unwrap();
+        assert!(fails.is_empty(), "{fails:?}");
+        let fails =
+            scorer_argmin16k_regressions(&argmin16k_doc(Some(2.0), false), &no_section, 0.25)
+                .unwrap();
+        assert_eq!(fails.len(), 1, "{fails:?}");
+        // provisional baseline downgrades the comparison but not the floor
+        let base = argmin16k_doc(Some(80.0), true);
+        let fails =
+            scorer_argmin16k_regressions(&argmin16k_doc(Some(10.0), false), &base, 0.25).unwrap();
+        assert!(fails.is_empty(), "provisional baseline must not hard-fail: {fails:?}");
     }
 
     #[test]

@@ -128,15 +128,19 @@ COMMON FLAGS:
     --trace FILE           explain: the --obs decision trace to read
     --job QUERY            explain: framework slot id or name substring
     --limit N              explain: lost-decision rows to show   [default: 10]
-    --shards N             Parallel scoring/argmin shards (bit-identical
-                           results at any count)                 [default: 1]
+    --shards N|auto        Parallel scoring/argmin shards (bit-identical
+                           results at any count); 'auto' = detected core
+                           count                                 [default: 1]
     --kernel K             Row-fill kernel: scalar|batched (bit-identical
                            results either way)            [default: batched]
     --max-regress F        bench-diff normalized-median threshold [default: 0.25]
     --homogeneous          Use the six type-3 cluster (§3.6)
     --staged               Staged agent registration (§3.7)
-    --agents M             Scale scenario: M heterogeneous agents
+    --agents M             Scale scenario: M heterogeneous agents [default: 64]
     --queues N             Concurrent queues for --agents   [default: 2*M]
+    --frameworks N         Scale scenario: pin N concurrent frameworks
+                           (= N single-job queues; overrides --queues —
+                           reaches 16k-32k with --jobs 1)
     --policies A,B         Policies for the scenarios matrix  [default: drf,psdsf]
     --csv DIR              Also write CSV outputs to DIR
 ";

@@ -7,7 +7,8 @@
 //! policy = "rpsdsf"          # scheduler registry name
 //! mode = "characterized"     # or "oblivious"
 //! seed = 42
-//! shards = 4                 # parallel scoring/argmin shards (default 1)
+//! shards = 4                 # parallel scoring/argmin shards (default 1);
+//!                            # "auto" = detected core count
 //! kernel = "batched"         # row-fill kernel: "scalar" | "batched" (default)
 //! obs = true                 # attach the flight recorder (default false);
 //!                            # grants are bit-identical either way
@@ -249,11 +250,26 @@ pub fn parse_online_config(text: &str) -> Result<OnlineConfig> {
     if let Some(v) = doc.get("experiment.seed").and_then(|v| v.as_i64()) {
         cfg.seed = v as u64;
     }
-    if let Some(v) = doc.get("experiment.shards").and_then(|v| v.as_i64()) {
-        if v < 1 {
-            return Err(Error::Config(format!("experiment.shards must be >= 1, got {v}")));
+    if let Some(v) = doc.get("experiment.shards") {
+        // `shards = "auto"` resolves to the detected core count at load
+        // time, so the rest of the stack only ever sees a concrete count
+        if let Some(s) = v.as_str() {
+            if s != "auto" {
+                return Err(Error::Config(format!(
+                    "experiment.shards must be an integer >= 1 or \"auto\", got '{s}'"
+                )));
+            }
+            cfg.shards = OnlineConfig::auto_shards();
+        } else if let Some(n) = v.as_i64() {
+            if n < 1 {
+                return Err(Error::Config(format!("experiment.shards must be >= 1, got {n}")));
+            }
+            cfg.shards = n as usize;
+        } else {
+            return Err(Error::Config(
+                "experiment.shards must be an integer >= 1 or \"auto\"".into(),
+            ));
         }
-        cfg.shards = v as usize;
     }
     if let Some(v) = doc.get("experiment.kernel").and_then(|v| v.as_str()) {
         cfg.kernel = KernelKind::from_name(v)?;
@@ -334,6 +350,16 @@ mod tests {
         assert_eq!(cfg.queues[1].workload.tasks_per_job, WorkloadSpec::wordcount().tasks_per_job);
         assert!(cfg.queues.iter().all(|q| q.arrival == ArrivalProcess::Closed));
         assert_eq!(cfg.churn, ChurnModel::None);
+    }
+
+    #[test]
+    fn shards_auto_resolves_to_core_count() {
+        let cfg = parse_online_config(
+            "[experiment]\nshards = \"auto\"\n[[queue]]\nworkload = \"pi\"\njobs = 1",
+        )
+        .unwrap();
+        assert!(cfg.shards >= 1);
+        assert_eq!(cfg.shards, OnlineConfig::auto_shards());
     }
 
     #[test]
@@ -435,6 +461,10 @@ mod tests {
         assert!(parse_online_config("[[queue]]\nworkload = \"pi\"\nweight = -1.0").is_err());
         assert!(parse_online_config(
             "[experiment]\nshards = 0\n[[queue]]\nworkload = \"pi\""
+        )
+        .is_err());
+        assert!(parse_online_config(
+            "[experiment]\nshards = \"many\"\n[[queue]]\nworkload = \"pi\""
         )
         .is_err());
         // mixed-dimension cluster

@@ -290,11 +290,25 @@ fn validate_replay(sc: &RealizedScenario, args: &Args) -> Result<()> {
     Ok(())
 }
 
-fn build_online_config(args: &Args) -> Result<OnlineConfig> {
-    let shards = args.flag_usize("shards", 1)?;
-    if shards == 0 {
-        return Err(Error::Config("--shards must be >= 1".into()));
+/// `--shards N|auto`: a concrete shard count, or the detected core count.
+fn parse_shards(args: &Args) -> Result<usize> {
+    match args.flag("shards") {
+        None => Ok(1),
+        Some("auto") => Ok(OnlineConfig::auto_shards()),
+        Some(v) => {
+            let n: usize = v.parse().map_err(|_| {
+                Error::Config(format!("--shards expects an integer or 'auto', got '{v}'"))
+            })?;
+            if n == 0 {
+                return Err(Error::Config("--shards must be >= 1".into()));
+            }
+            Ok(n)
+        }
     }
+}
+
+fn build_online_config(args: &Args) -> Result<OnlineConfig> {
+    let shards = parse_shards(args)?;
     let kernel = args.flag("kernel").map(KernelKind::from_name).transpose()?;
     if let Some(path) = args.flag("config") {
         let mut cfg = load_online_config(path)?;
@@ -320,12 +334,17 @@ fn build_online_config(args: &Args) -> Result<OnlineConfig> {
         // named scenario family; --jobs scales the per-queue job count
         let jobs = args.flag("jobs").map(|_| args.flag_usize("jobs", 0)).transpose()?;
         scenario_config(name, &policy, mode, jobs, seed)?
-    } else if let Some(agents) = args.flag("agents") {
-        // the scale scenario family: --agents M [--queues N]
-        let agents: usize = agents
-            .parse()
-            .map_err(|_| Error::Config("--agents expects an integer".into()))?;
-        let queues = args.flag_usize("queues", 2 * agents)?;
+    } else if args.flag("agents").is_some() || args.flag("frameworks").is_some() {
+        // the scale scenario family: --agents M [--queues N | --frameworks N].
+        // Each scaled queue keeps one job in flight, so `--frameworks N`
+        // (= N queues) pins the concurrent framework count directly — the
+        // 16k/32k-framework argmin sweeps run as
+        // `--frameworks 16384 --agents 64 --jobs 1 --shards auto`.
+        let agents = args.flag_usize("agents", 64)?;
+        let queues = match args.flag("frameworks") {
+            Some(_) => args.flag_usize("frameworks", 0)?,
+            None => args.flag_usize("queues", 2 * agents)?,
+        };
         let jobs = args.flag_usize("jobs", 50)?;
         OnlineConfig::scaled(&policy, mode, agents, queues, jobs)
     } else if args.has("staged") {
@@ -348,9 +367,12 @@ fn build_online_config(args: &Args) -> Result<OnlineConfig> {
 /// Fails when the joint-argmin medians regress beyond `--max-regress`
 /// (normalized by the same run's full-scan median, so CI hardware
 /// differences don't trip it), the pruned+sharded speedup drops below the
-/// 5x floor, or the batched-kernel speedup over scalar falls under its
-/// floor / regresses against the baseline. See
-/// `bench::scorer_joint_regressions` and `bench::scorer_kernel_regressions`.
+/// 5x floor, the batched-kernel speedup over scalar falls under its
+/// floor / regresses against the baseline, or the 16k-framework
+/// tournament-tree argmin loses its 5x edge over the linear-pruned
+/// sort-scan. See `bench::scorer_joint_regressions`,
+/// `bench::scorer_kernel_regressions` and
+/// `bench::scorer_argmin16k_regressions`.
 fn cmd_bench_diff(args: &Args) -> Result<()> {
     let current_path = args
         .positional
@@ -373,9 +395,14 @@ fn cmd_bench_diff(args: &Args) -> Result<()> {
     let baseline = load(baseline_path)?;
     let mut fails = mesos_fair::bench::scorer_joint_regressions(&current, &baseline, max_regress)?;
     fails.extend(mesos_fair::bench::scorer_kernel_regressions(&current, &baseline, max_regress)?);
+    fails.extend(mesos_fair::bench::scorer_argmin16k_regressions(
+        &current,
+        &baseline,
+        max_regress,
+    )?);
     if fails.is_empty() {
         println!(
-            "bench-diff OK: joint medians and kernel speedup within {:.0}% of baseline",
+            "bench-diff OK: joint/argmin-16k medians and kernel speedup within {:.0}% of baseline",
             max_regress * 100.0
         );
         Ok(())

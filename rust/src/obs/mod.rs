@@ -181,6 +181,16 @@ pub struct EngineCounters {
     pub shard_cells_max: u64,
     /// Per-pass total work (cells), summed over passes.
     pub shard_cells_total: u64,
+    /// Current depth of the pruning index's tournament trees — the levels
+    /// one bound update climbs, `⌈log2 n⌉` at n frameworks. (The joint
+    /// argmin's verify-set size rides each decision event as
+    /// `rows_scanned`.)
+    pub tree_depth: u64,
+    /// Sharded fill passes dispatched to the persistent worker pool.
+    pub pool_dispatches: u64,
+    /// Accumulated pool dispatch latency (enqueue + wake) in ns across
+    /// those passes.
+    pub pool_dispatch_ns: u64,
 }
 
 impl EngineCounters {
@@ -422,5 +432,19 @@ mod tests {
         assert!((c.shard_imbalance(2) - 1.2).abs() < 1e-12);
         assert_eq!(c.shard_imbalance(1), 1.0);
         assert_eq!(EngineCounters::default().shard_imbalance(4), 1.0);
+    }
+
+    #[test]
+    fn shard_imbalance_guards_zero_total() {
+        // regression: a sharded-but-idle engine (shards > 1 configured,
+        // no fill passes yet, shard_cells_total == 0) must report a
+        // finite neutral ratio — a naive max*shards/total would emit
+        // NaN/inf into the BENCH_scenarios.json column
+        let idle = EngineCounters { tree_depth: 14, ..EngineCounters::default() };
+        for shards in [2, 4, 64] {
+            let r = idle.shard_imbalance(shards);
+            assert!(r.is_finite(), "idle imbalance at {shards} shards must be finite");
+            assert_eq!(r, 1.0);
+        }
     }
 }

@@ -47,6 +47,9 @@ fn counters_json(c: &EngineCounters, shards: usize) -> Json {
         ("shard_cells_max", Json::Num(c.shard_cells_max as f64)),
         ("shard_cells_total", Json::Num(c.shard_cells_total as f64)),
         ("shard_imbalance", Json::Num(c.shard_imbalance(shards))),
+        ("tree_depth", Json::Num(c.tree_depth as f64)),
+        ("pool_dispatches", Json::Num(c.pool_dispatches as f64)),
+        ("pool_dispatch_ns", Json::Num(c.pool_dispatch_ns as f64)),
     ])
 }
 
@@ -60,6 +63,9 @@ fn counters_from(j: &Json) -> Result<EngineCounters> {
         kernel_rows_filled: num(j, "kernel_rows_filled")? as u64,
         shard_cells_max: num(j, "shard_cells_max")? as u64,
         shard_cells_total: num(j, "shard_cells_total")? as u64,
+        tree_depth: num(j, "tree_depth")? as u64,
+        pool_dispatches: num(j, "pool_dispatches")? as u64,
+        pool_dispatch_ns: num(j, "pool_dispatch_ns")? as u64,
     })
 }
 
@@ -199,6 +205,13 @@ fn counter_lines(out: &mut String, c: &EngineCounters, imbalance: f64) {
          shard imbalance {imbalance:.3}",
         c.rows_patched, c.pairs_patched, c.kernel_rows_filled
     );
+    let _ = writeln!(
+        out,
+        "          argmin tree depth {}, {} pool dispatches ({} total)",
+        c.tree_depth,
+        c.pool_dispatches,
+        fmt_secs(c.pool_dispatch_ns as f64 * 1e-9)
+    );
 }
 
 /// The `print_online` block for a live observed run — the same table
@@ -282,6 +295,9 @@ mod tests {
             kernel_rows_filled: 20,
             shard_cells_max: 60,
             shard_cells_total: 100,
+            tree_depth: 4,
+            pool_dispatches: 7,
+            pool_dispatch_ns: 3_500,
         };
         r.into_summary(counters, 2)
     }
@@ -312,6 +328,7 @@ mod tests {
         assert!(out.contains("== drf/characterized =="));
         assert!(out.contains("score-recompute"));
         assert!(out.contains("shard imbalance 1.200"));
+        assert!(out.contains("argmin tree depth 4, 7 pool dispatches"));
         assert!(out.contains("per-cycle observed seconds"));
     }
 

@@ -78,15 +78,47 @@ use crate::BIG;
 /// never re-reads freshly written tensors serially.
 type RowMinima = (usize, (f64, usize, f64, usize));
 
+/// Tournament-tree sentinel: an empty subtree (padding leaves past `n`).
+const NO_ROW: usize = usize::MAX;
+
 /// Per-framework best-agent lower bounds for the joint argmin — the pruned
-/// candidate index (see the module docs for the invariant it maintains).
+/// candidate index (see the module docs for the invariant it maintains) —
+/// plus a tournament (segment) tree per pair criterion over the `(bound,
+/// row)` keys, so the best-bounded rows surface in O(log n) instead of a
+/// linear scan (see the "Sub-linear argmin" module docs).
 #[derive(Debug, Clone, Default)]
 pub struct JointBounds {
     m: usize,
+    /// Tree capacity: `n.next_power_of_two()` (0 when the index is empty).
+    /// Leaves live at `cap + row`, the root at node 1.
+    cap: usize,
     psdsf_min: Vec<f64>,
     psdsf_arg: Vec<usize>,
     rpsdsf_min: Vec<f64>,
     rpsdsf_arg: Vec<usize>,
+    /// `tree[v]` = the row winning subtree `v` under the `(bound, row)`
+    /// key (ties impossible: rows are distinct), or [`NO_ROW`] for padding.
+    /// Keys are read live from `*_min`, so the tree stores only rows and a
+    /// bound change climbs leaf→root recomputing winners.
+    tree_psdsf: Vec<usize>,
+    tree_rpsdsf: Vec<usize>,
+}
+
+/// Subtree winner under the `(mins[row], row)` total order ([`NO_ROW`]
+/// loses to everything). Leaves sit in row order, so the row tie-break
+/// matches the serial scan's "first row wins" on equal bounds.
+#[inline]
+fn winner(mins: &[f64], a: usize, b: usize) -> usize {
+    if a == NO_ROW {
+        return b;
+    }
+    if b == NO_ROW {
+        return a;
+    }
+    match mins[a].total_cmp(&mins[b]).then(a.cmp(&b)) {
+        std::cmp::Ordering::Greater => b,
+        _ => a,
+    }
 }
 
 impl JointBounds {
@@ -99,7 +131,8 @@ impl JointBounds {
         b
     }
 
-    /// Recompute every row bound from `set`.
+    /// Recompute every row bound from `set` and rebuild both tournament
+    /// trees bottom-up (O(n·m) scan + O(n) build — no per-row climbs).
     pub(crate) fn rebuild(&mut self, set: &ScoreSet) {
         let n = set.n();
         self.m = set.m();
@@ -112,21 +145,37 @@ impl JointBounds {
         self.rpsdsf_arg.clear();
         self.rpsdsf_arg.resize(n, NO_AGENT);
         for k in 0..n {
-            self.rebuild_row(set, k);
+            let (pm, pa, rm, ra) = Self::scan_row(set, self.m, k);
+            self.psdsf_min[k] = pm;
+            self.psdsf_arg[k] = pa;
+            self.rpsdsf_min[k] = rm;
+            self.rpsdsf_arg[k] = ra;
+        }
+        self.cap = if n == 0 { 0 } else { n.next_power_of_two() };
+        self.tree_psdsf.clear();
+        self.tree_psdsf.resize(2 * self.cap, NO_ROW);
+        self.tree_rpsdsf.clear();
+        self.tree_rpsdsf.resize(2 * self.cap, NO_ROW);
+        for k in 0..n {
+            self.tree_psdsf[self.cap + k] = k;
+            self.tree_rpsdsf[self.cap + k] = k;
+        }
+        for v in (1..self.cap).rev() {
+            self.tree_psdsf[v] =
+                winner(&self.psdsf_min, self.tree_psdsf[2 * v], self.tree_psdsf[2 * v + 1]);
+            self.tree_rpsdsf[v] =
+                winner(&self.rpsdsf_min, self.tree_rpsdsf[2 * v], self.tree_rpsdsf[2 * v + 1]);
         }
     }
 
-    /// Rescan one framework row (its `x_n` changed, or a patched column
-    /// invalidated the remembered argmin). Args stay [`NO_AGENT`] when no
-    /// agent's score beats [`BIG`] — an all-infeasible row has no
-    /// remembered column, so [`JointBounds::patch_pair`]'s stale-argmin
-    /// rescan can never alias agent `0`.
-    pub(crate) fn rebuild_row(&mut self, set: &ScoreSet, n: usize) {
+    /// Strict-`<` fold of row `n`'s pair scores (the shared kernel of
+    /// `rebuild` and `rebuild_row`).
+    fn scan_row(set: &ScoreSet, m: usize, n: usize) -> (f64, usize, f64, usize) {
         let mut pm = BIG;
         let mut pa = NO_AGENT;
         let mut rm = BIG;
         let mut ra = NO_AGENT;
-        for i in 0..self.m {
+        for i in 0..m {
             let p = set.psdsf(n, i);
             if p < pm {
                 pm = p;
@@ -138,32 +187,67 @@ impl JointBounds {
                 ra = i;
             }
         }
+        (pm, pa, rm, ra)
+    }
+
+    /// Recompute the tournament winners on the leaf→root path of row `n`
+    /// after its bounds changed (O(log n); keys are read live from the
+    /// bound vectors, so only winner rows need restating).
+    fn update_row_key(&mut self, n: usize) {
+        if self.cap == 0 {
+            return;
+        }
+        let mut v = (self.cap + n) / 2;
+        while v >= 1 {
+            self.tree_psdsf[v] =
+                winner(&self.psdsf_min, self.tree_psdsf[2 * v], self.tree_psdsf[2 * v + 1]);
+            self.tree_rpsdsf[v] =
+                winner(&self.rpsdsf_min, self.tree_rpsdsf[2 * v], self.tree_rpsdsf[2 * v + 1]);
+            v /= 2;
+        }
+    }
+
+    /// Rescan one framework row (its `x_n` changed, or a patched column
+    /// invalidated the remembered argmin). Args stay [`NO_AGENT`] when no
+    /// agent's score beats [`BIG`] — an all-infeasible row has no
+    /// remembered column, so [`JointBounds::patch_pair`]'s stale-argmin
+    /// rescan can never alias agent `0`.
+    pub(crate) fn rebuild_row(&mut self, set: &ScoreSet, n: usize) {
+        let (pm, pa, rm, ra) = Self::scan_row(set, self.m, n);
         self.psdsf_min[n] = pm;
         self.psdsf_arg[n] = pa;
         self.rpsdsf_min[n] = rm;
         self.rpsdsf_arg[n] = ra;
+        self.update_row_key(n);
     }
 
     /// Overwrite one row's cached minima (computed in-pass by the fill,
     /// with identical ascending-agent `<` accumulation — see
     /// `NativeScorer::fill_row_rows_with_minima`).
     pub(crate) fn set_row(&mut self, n: usize, pm: f64, pa: usize, rm: f64, ra: usize) {
+        let changed = self.psdsf_min[n] != pm || self.rpsdsf_min[n] != rm;
         self.psdsf_min[n] = pm;
         self.psdsf_arg[n] = pa;
         self.rpsdsf_min[n] = rm;
         self.rpsdsf_arg[n] = ra;
+        if changed {
+            self.update_row_key(n);
+        }
     }
 
     /// Fold one freshly patched `(n, i)` cell into the row bounds. Called
     /// for every dirty agent of a row, so a stale remembered argmin is
-    /// always caught when its own column is processed.
+    /// always caught when its own column is processed. Tree winners are
+    /// restated only when a bound actually moved, keeping the common
+    /// no-change case O(1).
     pub(crate) fn patch_pair(&mut self, set: &ScoreSet, n: usize, i: usize) {
         let p = set.psdsf(n, i);
         let v = set.rpsdsf(n, i);
         if (p > self.psdsf_min[n] && self.psdsf_arg[n] == i)
             || (v > self.rpsdsf_min[n] && self.rpsdsf_arg[n] == i)
         {
-            // the previous row minimum rose: rescan the row
+            // the previous row minimum rose: rescan the row (restates the
+            // tree path itself)
             self.rebuild_row(set, n);
             return;
         }
@@ -171,13 +255,19 @@ impl JointBounds {
         // the BIG ceiling is unreadable, so it must not become the
         // remembered argmin — keep the [`NO_AGENT`] sentinel instead, as
         // `rebuild_row`'s strict-`<` fold would.
+        let mut changed = false;
         if p <= self.psdsf_min[n] {
+            changed |= p != self.psdsf_min[n];
             self.psdsf_min[n] = p;
             self.psdsf_arg[n] = if p >= BIG { NO_AGENT } else { i };
         }
         if v <= self.rpsdsf_min[n] {
+            changed |= v != self.rpsdsf_min[n];
             self.rpsdsf_min[n] = v;
             self.rpsdsf_arg[n] = if v >= BIG { NO_AGENT } else { i };
+        }
+        if changed {
+            self.update_row_key(n);
         }
     }
 
@@ -198,6 +288,115 @@ impl JointBounds {
             Criterion::RPsDsf => self.rpsdsf_min[n],
             Criterion::Drf | Criterion::Tsf => -BIG,
         }
+    }
+
+    /// Depth of the tournament trees — the levels one bound update climbs
+    /// (0 for an empty or single-row index). Surfaced as an obs counter.
+    pub fn depth(&self) -> u32 {
+        if self.cap <= 1 {
+            0
+        } else {
+            self.cap.trailing_zeros()
+        }
+    }
+
+    /// The globally minimum `(bound, row)` leaf for a per-server criterion
+    /// (`None` for the global criteria, which keep no tree, or an empty
+    /// index) — an O(1) root read.
+    pub fn min_row(&self, criterion: Criterion) -> Option<usize> {
+        let tree = match criterion {
+            Criterion::PsDsf => &self.tree_psdsf,
+            Criterion::RPsDsf => &self.tree_rpsdsf,
+            Criterion::Drf | Criterion::Tsf => return None,
+        };
+        match tree.get(1) {
+            Some(&w) if w != NO_ROW => Some(w),
+            _ => None,
+        }
+    }
+
+    /// Enumerate rows in ascending `(bound, row)` order for a per-server
+    /// criterion (`None` for the global criteria). Yielding `k` rows costs
+    /// O(k log n) via best-first descent over the tournament tree, so a
+    /// consumer that stops early never pays for the rows it pruned.
+    pub fn ascend(&self, criterion: Criterion) -> Option<BoundAscent<'_>> {
+        let (mins, tree) = match criterion {
+            Criterion::PsDsf => (&self.psdsf_min[..], &self.tree_psdsf[..]),
+            Criterion::RPsDsf => (&self.rpsdsf_min[..], &self.tree_rpsdsf[..]),
+            Criterion::Drf | Criterion::Tsf => return None,
+        };
+        Some(BoundAscent::new(mins, tree, self.cap))
+    }
+}
+
+/// Best-first traversal of one tournament tree, yielding `(bound, row)` in
+/// ascending key order: a frontier heap holds subtree roots keyed by their
+/// winner's `(bound, row)`; popping an internal node pushes its children,
+/// popping a leaf yields it. A node's key is the minimum over its subtree,
+/// so leaves surface in globally sorted order, each after O(log n) heap
+/// traffic.
+pub struct BoundAscent<'a> {
+    mins: &'a [f64],
+    tree: &'a [usize],
+    cap: usize,
+    heap: std::collections::BinaryHeap<std::cmp::Reverse<AscentKey>>,
+}
+
+#[derive(PartialEq)]
+struct AscentKey {
+    bound: f64,
+    row: usize,
+    node: usize,
+}
+
+impl Eq for AscentKey {}
+
+impl Ord for AscentKey {
+    fn cmp(&self, other: &Self) -> std::cmp::Ordering {
+        self.bound
+            .total_cmp(&other.bound)
+            .then(self.row.cmp(&other.row))
+            .then(self.node.cmp(&other.node))
+    }
+}
+
+impl PartialOrd for AscentKey {
+    fn partial_cmp(&self, other: &Self) -> Option<std::cmp::Ordering> {
+        Some(self.cmp(other))
+    }
+}
+
+impl<'a> BoundAscent<'a> {
+    fn new(mins: &'a [f64], tree: &'a [usize], cap: usize) -> Self {
+        let mut heap = std::collections::BinaryHeap::new();
+        if cap > 0 && tree[1] != NO_ROW {
+            let row = tree[1];
+            heap.push(std::cmp::Reverse(AscentKey { bound: mins[row], row, node: 1 }));
+        }
+        BoundAscent { mins, tree, cap, heap }
+    }
+}
+
+impl Iterator for BoundAscent<'_> {
+    type Item = (f64, usize);
+
+    fn next(&mut self) -> Option<(f64, usize)> {
+        while let Some(std::cmp::Reverse(k)) = self.heap.pop() {
+            if k.node >= self.cap {
+                return Some((k.bound, k.row));
+            }
+            for child in [2 * k.node, 2 * k.node + 1] {
+                let row = self.tree[child];
+                if row != NO_ROW {
+                    self.heap.push(std::cmp::Reverse(AscentKey {
+                        bound: self.mins[row],
+                        row,
+                        node: child,
+                    }));
+                }
+            }
+        }
+        None
     }
 }
 
@@ -238,6 +437,12 @@ pub struct IncrementalScorer {
     pub shard_cells_max: u64,
     /// Total fill work in tensor cells, accumulated over all passes.
     pub shard_cells_total: u64,
+    /// Sharded fill passes handed to the persistent worker pool.
+    pub pool_dispatches: u64,
+    /// Accumulated pool dispatch latency (enqueue + wake) over those
+    /// passes, in ns — the overhead a per-pass `thread::scope` spawn
+    /// would multiply.
+    pub pool_dispatch_ns: u64,
 }
 
 impl Default for IncrementalScorer {
@@ -265,6 +470,8 @@ impl IncrementalScorer {
             kernel_rows_filled: 0,
             shard_cells_max: 0,
             shard_cells_total: 0,
+            pool_dispatches: 0,
+            pool_dispatch_ns: 0,
         }
     }
 
@@ -279,6 +486,9 @@ impl IncrementalScorer {
             kernel_rows_filled: self.kernel_rows_filled,
             shard_cells_max: self.shard_cells_max,
             shard_cells_total: self.shard_cells_total,
+            tree_depth: self.bounds.depth() as u64,
+            pool_dispatches: self.pool_dispatches,
+            pool_dispatch_ns: self.pool_dispatch_ns,
         }
     }
 
@@ -336,12 +546,18 @@ impl IncrementalScorer {
                 KernelKind::Batched => Some(SoaBuffers::build(&self.si, &self.res)),
                 KernelKind::Scalar => None,
             };
-            self.set = NativeScorer::compute_with_residuals_soa(
+            let shards = self.effective_shards();
+            let (set, dispatch_ns) = NativeScorer::compute_with_residuals_soa_stats(
                 &self.si,
                 &self.res,
                 self.soa.as_ref(),
-                self.effective_shards(),
+                shards,
             );
+            self.set = set;
+            if shards > 1 {
+                self.pool_dispatches += 1;
+                self.pool_dispatch_ns += dispatch_ns;
+            }
             let t0 = timing.then(std::time::Instant::now);
             self.bounds.rebuild(&self.set);
             if let (Some(t0), Some(o)) = (t0, obs.as_deref_mut()) {
@@ -411,7 +627,7 @@ impl IncrementalScorer {
         // so the pruning index update below is O(full rows), not a serial
         // O(full rows × m) re-read of the fresh tensors — that pass would
         // otherwise cap the parallel speedup when roles make every row full.
-        let minima: Vec<RowMinima> = {
+        let (minima, dispatch_ns): (Vec<RowMinima>, u64) = {
             let si = &self.si;
             let res = &self.res[..];
             let soa = self.soa.as_ref();
@@ -422,8 +638,7 @@ impl IncrementalScorer {
                 let mut out = Vec::new();
                 for n in v.n0()..v.n1() {
                     if full[n] {
-                        let mins =
-                            NativeScorer::fill_row_rows_with_minima(si, res, soa, &mut v, n);
+                        let mins = NativeScorer::fill_row_rows_with_minima(si, res, soa, &mut v, n);
                         out.push((n, mins));
                     } else {
                         // only the residual-dependent entries on dirty
@@ -436,20 +651,20 @@ impl IncrementalScorer {
                 out
             };
             if shards <= 1 {
-                views.into_iter().flat_map(&process).collect()
+                (views.into_iter().flat_map(&process).collect(), 0)
             } else {
+                // one job per row-range view, on the persistent pool —
+                // sharded patches no longer pay spawn latency every cycle
                 let process = &process;
-                let mut all = Vec::new();
-                std::thread::scope(|s| {
-                    let handles: Vec<_> =
-                        views.into_iter().map(|v| s.spawn(move || process(v))).collect();
-                    for h in handles {
-                        all.extend(h.join().expect("scoring shard panicked"));
-                    }
-                });
-                all
+                let jobs: Vec<_> = views.into_iter().map(|v| move || process(v)).collect();
+                let (outs, ns) = crate::scheduler::pool::global().run(jobs);
+                (outs.into_iter().flatten().collect(), ns)
             }
         };
+        if shards > 1 {
+            self.pool_dispatches += 1;
+            self.pool_dispatch_ns += dispatch_ns;
+        }
         // keep the pruned candidate index in sync with the patched tensors
         let t0 = match &obs {
             Some(o) if o.enabled() => Some(std::time::Instant::now()),
@@ -837,6 +1052,38 @@ mod tests {
                     "rpsdsf bound row {n} step {step}"
                 );
             }
+        }
+    }
+
+    #[test]
+    fn tournament_tree_enumerates_ascending_bounds_under_churn() {
+        // after every churn step the tree ascent must equal the explicit
+        // (bound, row) sort, the root must be its head, and the reported
+        // depth must cover the row count
+        let mut rng = crate::rng::Rng::new(0x7E13);
+        let mut st = crate::testing::scaled_state_with_load(5, 9, 20, &mut rng);
+        let mut engine = ScoringEngine::native();
+        engine.scores_with_bounds(&mut st).unwrap();
+        for step in 0..25 {
+            let (fw, ag) = (rng.index(9), rng.index(5));
+            if rng.chance(0.3) && st.tasks_on(fw, ag) >= 1.0 {
+                let d = st.framework(fw).demand;
+                st.unplace(fw, ag, &d, 1.0).unwrap();
+            } else if st.task_fits(fw, ag) {
+                st.place_task(fw, ag).unwrap();
+            }
+            let (_, set, bounds) = engine.scores_with_bounds(&mut st).unwrap();
+            assert!(1usize << bounds.depth() >= set.n(), "depth covers all rows");
+            for crit in [Criterion::PsDsf, Criterion::RPsDsf] {
+                let got: Vec<(f64, usize)> = bounds.ascend(crit).unwrap().collect();
+                let mut want: Vec<(f64, usize)> =
+                    (0..set.n()).map(|k| (bounds.row_bound(crit, k), k)).collect();
+                want.sort_by(|a, b| a.0.total_cmp(&b.0).then(a.1.cmp(&b.1)));
+                assert_eq!(got, want, "{crit:?} ascent diverged at step {step}");
+                assert_eq!(bounds.min_row(crit), want.first().map(|&(_, k)| k));
+            }
+            assert!(bounds.ascend(Criterion::Drf).is_none(), "global criteria keep no tree");
+            assert_eq!(bounds.min_row(Criterion::Tsf), None);
         }
     }
 

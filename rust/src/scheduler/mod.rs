@@ -38,11 +38,49 @@
 //! best-agent lower bounds over the pair criteria — so
 //! [`Policy::pick_joint_pruned`] can skip every framework whose cached bound
 //! cannot beat the current best instead of scanning all `n × m` pairs (the
-//! ≥1k-framework hot path). Scoring and the joint argmin both shard across
-//! `std::thread::scope` workers ([`ScoringEngine::set_shards`]); shard-local
+//! ≥1k-framework hot path). Sharded work (`--shards N|auto`,
+//! [`ScoringEngine::set_shards`]) dispatches to a persistent worker pool
+//! ([`pool`]) with a deterministic shard→row-range assignment; shard-local
 //! argmins merge by the full `(score, tie, framework, agent)` key, so
 //! results are bit-identical to the serial scan at any shard count
 //! (property-tested in `testing::prop`).
+//!
+//! ## Sub-linear argmin
+//!
+//! At 16k–32k frameworks even the *pruned* decision cost matters, so
+//! [`JointBounds`] additionally maintains one tournament (segment) tree
+//! per pair criterion over the per-row bound keys.
+//!
+//! **Invariants.** The tree has `cap = n.next_power_of_two()` leaves; leaf
+//! `cap + k` represents row `k` (rows `n..cap` are a `NO_ROW` padding
+//! sentinel that loses every comparison). An internal node stores the
+//! winning *row index* of its subtree, where "wins" means smaller
+//! `(bound, row)` under `f64::total_cmp` — keys are always read live from
+//! the bound vectors, so a node never caches a stale key. Every bound
+//! mutation ([`JointBounds::set_row`] / `patch_pair` / `rebuild_row`)
+//! climbs leaf→root in `O(log n)`, recomputing winners; full rebuilds fill
+//! leaves and fold winners bottom-up in `O(n)`.
+//!
+//! **Verification bound.** A decision descends the tree best-first
+//! ([`JointBounds::ascend`] yields rows in ascending `(bound, row)`
+//! order), scoring each visited row's candidate agents, and stops at the
+//! first row whose bound exceeds the incumbent score — bounds are true
+//! row minima, so no unvisited row can win. The rows visited before that
+//! stop are exactly the rows the PR 3 sort-scan would have scanned (the
+//! decision's `rows_scanned` obs field), but reached in
+//! `O(k log n)` heap steps instead of an `Θ(n log n)` sort.
+//!
+//! **Determinism.** Leaves sit in row order and ties resolve to the
+//! smaller row at every level, so the ascent enumerates the same sequence
+//! the serial sort-scan produces, and the fold over visited rows compares
+//! the full `(score, tie, framework, agent)` tuple — the pick is
+//! bit-identical to the serial full scan, ties included. Under `--shards`,
+//! a descent that has not converged within `max(64, n/shards)` visits
+//! falls back to a pooled chunked rescan seeded with the incumbent; the
+//! fold is an idempotent min, so re-visiting rows cannot change the
+//! winner. Property coverage: `testing::prop::pruned_joint_equivalence`,
+//! `kernel_equivalence`, and `massed_churn_tree_maintenance` (n ≥ 4096
+//! churn bursts across shard counts).
 //!
 //! ## Batched row kernels
 //!
@@ -92,6 +130,7 @@ pub mod drf;
 pub mod engine;
 pub mod kernel;
 pub mod policy;
+pub mod pool;
 pub mod progressive;
 pub mod psdsf;
 pub mod registry;

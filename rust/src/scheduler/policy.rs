@@ -196,26 +196,41 @@ impl Policy {
         }
     }
 
-    /// [`Policy::pick_joint`] through the engine's pruned candidate index,
-    /// optionally sharded — **bit-identical to the full scan** at any shard
-    /// count.
+    /// [`Policy::pick_joint`] through the engine's pruned candidate index —
+    /// **bit-identical to the full scan** at any shard count.
     ///
-    /// Serial path: frameworks are visited in ascending-bound order and the
-    /// scan stops once a framework's bound exceeds the current best score —
-    /// every pair scoring ≤ the final minimum lives in a visited row (a
-    /// skipped row's bound, hence its every score, is strictly above it),
-    /// so the `(score, tie, n, i)` minimum over visited rows equals the
-    /// full-scan minimum, ties included.
+    /// The `(score, tie, n, i)` fold is a minimum over a total order, so
+    /// visiting *any* superset of the rows whose bound is ≤ the final best
+    /// score yields an identical pick — which licenses every path below to
+    /// choose its own visit order:
     ///
-    /// Sharded path: an incumbent is seeded from the globally best-bounded
-    /// row, contiguous row ranges then scan in parallel (each pruning
-    /// against its own monotonically decreasing local best, which never
-    /// drops below the global minimum — the same skip argument applies),
-    /// and shard-local minima merge by the full key.
+    /// * **Overridden rows first.** Rows a view rewrites below the cached
+    ///   tensors ([`ScoreView::overridden`], e.g. the allocator's
+    ///   unknown-demand priority rows) have no valid bound and are scanned
+    ///   unconditionally (a no-op loop for plain sets, whose `overridden`
+    ///   is constant `false`).
+    /// * **Tree descent.** Remaining rows arrive in ascending `(bound,
+    ///   row)` order from the tournament tree ([`JointBounds::ascend`],
+    ///   O(log n) per row) and the walk stops at the first bound above the
+    ///   current best score — every pair scoring ≤ the final minimum lives
+    ///   in a visited row (a skipped row's bound, hence its every score,
+    ///   is strictly above it), so the minimum over visited rows equals
+    ///   the full-scan minimum, ties included. Steady-state decisions
+    ///   verify only the few rows whose bound can still beat the champion.
+    /// * **Sharded fallback.** Massed ties (e.g. every framework at
+    ///   `x_n = 0` scoring 0) defeat any bound order — the verify set is
+    ///   the whole instance. When `shards > 1` and the descent is still
+    ///   running after `n / shards` rows, the remaining work moves to the
+    ///   persistent pool: contiguous row ranges rescan *all* rows against
+    ///   the incumbent (re-visiting a row re-folds the same minimum —
+    ///   harmless), each shard pruning against its own monotonically
+    ///   decreasing local best, and shard-local minima merge by the full
+    ///   key. A row skipped by a shard has bound above that shard's final
+    ///   local best ≥ the merged minimum, so nothing tied or better is
+    ///   ever lost.
     ///
-    /// Rows a view overrides below the cached tensors
-    /// ([`ScoreView::overridden`], e.g. the allocator's unknown-demand
-    /// priority rows) are never pruned: their bound is taken as `-BIG`.
+    /// The global criteria (DRF/TSF) keep no per-row bound (all `-BIG`) and
+    /// route straight to the full scan, as the linear reference did.
     pub fn pick_joint_pruned<S: ScoreView + Sync + ?Sized>(
         &self,
         set: &S,
@@ -229,41 +244,49 @@ impl Policy {
             return None;
         }
         let crit = self.criterion;
-        let row_bound = |k: usize| -> f64 {
+        if !crit.is_per_server() {
+            return self.pick_joint(set, si, candidates);
+        }
+        let mut best: Option<(f64, f64, usize, usize)> = None;
+        for k in 0..n_all {
             if set.overridden(k) {
-                -BIG
-            } else {
-                bounds.row_bound(crit, k)
-            }
-        };
-        if shards <= 1 || n_all < shards {
-            let mut order: Vec<(f64, usize)> = (0..n_all).map(|k| (row_bound(k), k)).collect();
-            order.sort_by(|a, b| a.0.total_cmp(&b.0).then(a.1.cmp(&b.1)));
-            let mut best: Option<(f64, f64, usize, usize)> = None;
-            for &(bound, k) in &order {
-                if let Some((bs, _, _, _)) = best {
-                    if bound > bs {
-                        break;
-                    }
-                }
                 self.scan_joint_row(set, k, candidates, &mut best);
             }
+        }
+        let ascent = bounds.ascend(crit).expect("per-server criterion keeps a tree");
+        // past this many tree visits a chunked scan is no more expensive
+        // than continuing the descent — hand the rest to the pool
+        let visit_cap =
+            if shards <= 1 || n_all < shards { usize::MAX } else { n_all.div_ceil(shards).max(64) };
+        let mut visited = 0usize;
+        let mut exhausted = true;
+        for (bound, k) in ascent {
+            if let Some((bs, _, _, _)) = best {
+                if bound > bs {
+                    break;
+                }
+            }
+            if visited >= visit_cap {
+                exhausted = false;
+                break;
+            }
+            if !set.overridden(k) {
+                self.scan_joint_row(set, k, candidates, &mut best);
+            }
+            visited += 1;
+        }
+        if exhausted {
             return best.map(|(_, _, n, i)| (n, i));
         }
-        // seed the shared incumbent from the globally best-bounded row
-        let seed_row = (0..n_all)
-            .min_by(|&a, &b| row_bound(a).total_cmp(&row_bound(b)).then(a.cmp(&b)))
-            .expect("n_all > 0");
-        let mut incumbent: Option<(f64, f64, usize, usize)> = None;
-        self.scan_joint_row(set, seed_row, candidates, &mut incumbent);
+        // sharded remainder: rescan everything against the incumbent
+        let incumbent = best;
         let chunk = n_all.div_ceil(shards);
-        let mut locals: Vec<Option<(f64, f64, usize, usize)>> = Vec::with_capacity(shards);
-        std::thread::scope(|sc| {
-            let mut handles = Vec::with_capacity(shards);
-            let mut n0 = 0usize;
-            while n0 < n_all {
-                let n1 = (n0 + chunk).min(n_all);
-                handles.push(sc.spawn(move || {
+        let ranges: Vec<(usize, usize)> =
+            (0..n_all).step_by(chunk).map(|n0| (n0, (n0 + chunk).min(n_all))).collect();
+        let jobs: Vec<_> = ranges
+            .into_iter()
+            .map(|(n0, n1)| {
+                move || {
                     let mut best = incumbent;
                     for k in n0..n1 {
                         if let Some((bs, _, _, _)) = best {
@@ -279,13 +302,10 @@ impl Policy {
                         self.scan_joint_row(set, k, candidates, &mut best);
                     }
                     best
-                }));
-                n0 = n1;
-            }
-            for h in handles {
-                locals.push(h.join().expect("scoring shard panicked"));
-            }
-        });
+                }
+            })
+            .collect();
+        let (locals, _dispatch_ns) = crate::scheduler::pool::global().run(jobs);
         let mut best = incumbent;
         for local in locals.into_iter().flatten() {
             match best {
@@ -296,15 +316,56 @@ impl Policy {
         best.map(|(_, _, n, i)| (n, i))
     }
 
-    /// The serial pruned scan of [`Policy::pick_joint_pruned`], reporting
-    /// alongside the pick how many framework rows the bound let it visit
-    /// (`scanned`) vs skip (`pruned`) — the flight recorder's decision
-    /// context (`obs::ObsEvent::Decision`). The pick is identical to
-    /// `pick_joint_pruned` at any shard count (the sharded path is
-    /// bit-identical to the serial one by construction), so the allocator
-    /// can route through this variant while recording without changing
-    /// what it grants; the counts are deterministic because the serial
-    /// visit order is.
+    /// The PR 3 serial reference: sort every row by `(bound, row)` and
+    /// scan ascending until the bound passes the best score. Θ(n log n)
+    /// per decision regardless of how few rows survive the bound test —
+    /// kept as the comparison arm for the `argmin_16k` bench and the
+    /// tree-vs-linear property tests ([`Policy::pick_joint_pruned`] is the
+    /// production path).
+    pub fn pick_joint_pruned_linear<S: ScoreView + ?Sized>(
+        &self,
+        set: &S,
+        si: &ScoreInputs,
+        candidates: &[usize],
+        bounds: &JointBounds,
+    ) -> Option<(usize, usize)> {
+        let n_all = si.n();
+        if n_all == 0 || candidates.is_empty() {
+            return None;
+        }
+        let crit = self.criterion;
+        let row_bound = |k: usize| -> f64 {
+            if set.overridden(k) {
+                -BIG
+            } else {
+                bounds.row_bound(crit, k)
+            }
+        };
+        let mut order: Vec<(f64, usize)> = (0..n_all).map(|k| (row_bound(k), k)).collect();
+        order.sort_by(|a, b| a.0.total_cmp(&b.0).then(a.1.cmp(&b.1)));
+        let mut best: Option<(f64, f64, usize, usize)> = None;
+        for &(bound, k) in &order {
+            if let Some((bs, _, _, _)) = best {
+                if bound > bs {
+                    break;
+                }
+            }
+            self.scan_joint_row(set, k, candidates, &mut best);
+        }
+        best.map(|(_, _, n, i)| (n, i))
+    }
+
+    /// The serial sort-scan of [`Policy::pick_joint_pruned_linear`],
+    /// reporting alongside the pick how many framework rows the bound let
+    /// it visit (`scanned`) vs skip (`pruned`) — the flight recorder's
+    /// decision context (`obs::ObsEvent::Decision`), where `scanned` is
+    /// the tree path's verify-set size: the tree descends the same
+    /// ascending `(bound, row)` sequence this sort produces and stops at
+    /// the same first bound above the best score. The pick is identical
+    /// to [`Policy::pick_joint_pruned`] at any shard count, so the
+    /// allocator can route through this variant while recording without
+    /// changing what it grants; the counts are deterministic because the
+    /// serial visit order is.
     pub fn pick_joint_pruned_counted<S: ScoreView + ?Sized>(
         &self,
         set: &S,
@@ -612,6 +673,12 @@ mod tests {
             ] {
                 for cands in [vec![0, 1], vec![1], vec![0], vec![]] {
                     let full = p.pick_joint(&set, &si, &cands);
+                    assert_eq!(
+                        p.pick_joint_pruned_linear(&set, &si, &cands, &bounds),
+                        full,
+                        "linear ref: {} cands {cands:?} x {placements:?}",
+                        p.name
+                    );
                     for shards in [1, 2, 8] {
                         assert_eq!(
                             p.pick_joint_pruned(&set, &si, &cands, &bounds, shards),
@@ -685,6 +752,7 @@ mod tests {
         let bounds = JointBounds::from_set(&set);
         let p = Policy::new("psdsf", Criterion::PsDsf, PolicyKind::Joint);
         assert_eq!(p.pick_joint(&set, &si, &[0, 1]), None);
+        assert_eq!(p.pick_joint_pruned_linear(&set, &si, &[0, 1], &bounds), None);
         for shards in [1, 2, 8] {
             assert_eq!(p.pick_joint_pruned(&set, &si, &[0, 1], &bounds, shards), None);
         }

@@ -1,0 +1,276 @@
+//! A persistent worker pool for the sharded scoring paths.
+//!
+//! PR 3 parallelized full rescores, incremental patches, and the sharded
+//! joint argmin with per-pass `std::thread::scope` spawns. That is correct
+//! but pays thread creation + teardown on *every allocation cycle* — tens
+//! of microseconds per pass, which at 16k-framework scale rivals the work
+//! itself. This pool spawns its workers once (first use), parks them on a
+//! condvar, and dispatches jobs through a shared queue, so a sharded pass
+//! costs one lock + one wake instead of `shards` spawns.
+//!
+//! Design:
+//! * **Parked workers, channel dispatch.** A process-wide set of
+//!   [`auto_shards`] workers blocks on a `Mutex<VecDeque<Job>> + Condvar`
+//!   queue (std-only; `mpsc::Sender` is not `Sync` on our MSRV). Workers
+//!   never exit — they are leaked for the process lifetime, exactly like
+//!   the threads `thread::scope` would re-create each pass.
+//! * **Deterministic shard→range assignment.** Callers build one job per
+//!   shard (the same contiguous row ranges `split_rows_mut` hands out) and
+//!   results return in job order, so *which worker* runs a shard never
+//!   affects the output — results are bit-identical to the scoped spawns
+//!   by construction.
+//! * **Scoped borrows via a completion latch.** Jobs may capture
+//!   non-`'static` borrows (score tensors, candidate slices). [`WorkerPool::run`]
+//!   erases the lifetime to enqueue them, then blocks on a latch that only
+//!   opens after every job has finished writing its result slot — the
+//!   borrows cannot outlive the call, which is the same guarantee
+//!   `thread::scope` gives (see the safety note in `run`).
+//! * **Panic propagation.** A panicking job is caught in place (the worker
+//!   survives for the next pass), the first payload is stashed, and `run`
+//!   re-raises it on the caller after the latch opens — matching the
+//!   `join().expect(...)` behavior of the scoped code it replaces.
+//!
+//! The caller runs the final job inline while the workers chew the rest,
+//! so a `shards`-way pass occupies `shards` cores even when the pool is
+//! saturated by a concurrent caller (tests run many engines at once).
+
+use std::collections::VecDeque;
+use std::panic::{catch_unwind, resume_unwind, AssertUnwindSafe};
+use std::sync::{Condvar, Mutex, OnceLock};
+use std::time::Instant;
+
+/// A lifetime-erased unit of work (see the safety note in
+/// [`WorkerPool::run`] for why `'static` is sound here).
+type Job = Box<dyn FnOnce() + Send + 'static>;
+
+struct Queue {
+    jobs: Mutex<VecDeque<Job>>,
+    ready: Condvar,
+}
+
+/// Count-down latch: `run` blocks until every job of its batch has
+/// completed (result written or panic stashed).
+struct Latch {
+    remaining: Mutex<usize>,
+    done: Condvar,
+}
+
+impl Latch {
+    fn new(n: usize) -> Latch {
+        Latch { remaining: Mutex::new(n), done: Condvar::new() }
+    }
+
+    fn count_down(&self) {
+        let mut g = self.remaining.lock().unwrap();
+        *g -= 1;
+        if *g == 0 {
+            self.done.notify_all();
+        }
+    }
+
+    fn wait(&self) {
+        let mut g = self.remaining.lock().unwrap();
+        while *g > 0 {
+            g = self.done.wait(g).unwrap();
+        }
+    }
+}
+
+/// The persistent scoring pool (one per process, see [`global`]).
+pub struct WorkerPool {
+    queue: &'static Queue,
+    workers: usize,
+}
+
+static POOL: OnceLock<WorkerPool> = OnceLock::new();
+
+/// The shard count `--shards auto` resolves to: the machine's available
+/// parallelism (clamped to [1, 64] — beyond that the per-shard row ranges
+/// of realistic instances are too thin to help).
+pub fn auto_shards() -> usize {
+    std::thread::available_parallelism().map(|n| n.get()).unwrap_or(1).clamp(1, 64)
+}
+
+/// The process-wide pool, spawning its workers on first use.
+pub fn global() -> &'static WorkerPool {
+    POOL.get_or_init(|| WorkerPool::start(auto_shards()))
+}
+
+fn worker_loop(queue: &'static Queue) {
+    loop {
+        let job = {
+            let mut g = queue.jobs.lock().unwrap();
+            loop {
+                if let Some(j) = g.pop_front() {
+                    break j;
+                }
+                g = queue.ready.wait(g).unwrap();
+            }
+        };
+        // jobs are pre-wrapped in catch_unwind by `run`, so a panicking
+        // shard never takes the worker down with it
+        job();
+    }
+}
+
+impl WorkerPool {
+    fn start(workers: usize) -> WorkerPool {
+        let queue: &'static Queue =
+            Box::leak(Box::new(Queue { jobs: Mutex::new(VecDeque::new()), ready: Condvar::new() }));
+        // the caller of `run` executes one job inline, so `workers - 1`
+        // threads saturate `workers` cores; keep at least one so a
+        // single-core machine still drains concurrent callers
+        for k in 0..workers.saturating_sub(1).max(1) {
+            std::thread::Builder::new()
+                .name(format!("score-shard-{k}"))
+                .spawn(move || worker_loop(queue))
+                .expect("spawn scoring pool worker");
+        }
+        WorkerPool { queue, workers }
+    }
+
+    /// Worker parallelism the pool was sized for.
+    pub fn workers(&self) -> usize {
+        self.workers
+    }
+
+    /// Run `jobs` to completion and return `(results in job order,
+    /// dispatch latency in ns)` — the latency covers enqueue + wake, i.e.
+    /// the fixed overhead a scoped spawn would pay in thread creation.
+    ///
+    /// The final job runs inline on the caller while workers drain the
+    /// rest; the call returns only after every job finished.
+    pub fn run<T, F>(&self, jobs: Vec<F>) -> (Vec<T>, u64)
+    where
+        T: Send,
+        F: FnOnce() -> T + Send,
+    {
+        let count = jobs.len();
+        if count == 0 {
+            return (Vec::new(), 0);
+        }
+        let slots: Vec<Mutex<Option<T>>> = (0..count).map(|_| Mutex::new(None)).collect();
+        let latch = Latch::new(count);
+        let panic_slot: Mutex<Option<Box<dyn std::any::Any + Send>>> = Mutex::new(None);
+        let mut wrapped: Vec<Job> = Vec::with_capacity(count);
+        for (slot, job) in slots.iter().zip(jobs) {
+            let latch = &latch;
+            let panic_slot = &panic_slot;
+            let wrapper = move || {
+                match catch_unwind(AssertUnwindSafe(job)) {
+                    Ok(v) => *slot.lock().unwrap() = Some(v),
+                    Err(p) => {
+                        let mut g = panic_slot.lock().unwrap();
+                        if g.is_none() {
+                            *g = Some(p);
+                        }
+                    }
+                }
+                latch.count_down();
+            };
+            let erased: Box<dyn FnOnce() + Send + '_> = Box::new(wrapper);
+            // SAFETY: the wrapper borrows only `slots`, `latch` and
+            // `panic_slot`, all of which outlive this call: every enqueued
+            // wrapper runs `latch.count_down()` as its last action, and
+            // `latch.wait()` below does not return until all `count` of
+            // them have done so — after which no worker holds a reference
+            // into this frame. Nothing else escapes: results are moved out
+            // of `slots` only after the wait, and a panic payload is
+            // `'static` by definition. This is the `thread::scope`
+            // guarantee, enforced dynamically by the latch.
+            let erased: Job = unsafe { std::mem::transmute(erased) };
+            wrapped.push(erased);
+        }
+        let inline = wrapped.pop().expect("count >= 1");
+        let t0 = Instant::now();
+        if !wrapped.is_empty() {
+            let mut q = self.queue.jobs.lock().unwrap();
+            q.extend(wrapped);
+            drop(q);
+            self.queue.ready.notify_all();
+        }
+        let dispatch_ns = t0.elapsed().as_nanos() as u64;
+        inline();
+        latch.wait();
+        if let Some(p) = panic_slot.lock().unwrap().take() {
+            resume_unwind(p);
+        }
+        let results = slots
+            .into_iter()
+            .map(|m| m.into_inner().unwrap().expect("job completed without a result"))
+            .collect();
+        (results, dispatch_ns)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn results_return_in_job_order() {
+        let jobs: Vec<_> = (0..13).map(|i| move || i * i).collect();
+        let (out, _) = global().run(jobs);
+        assert_eq!(out, (0..13).map(|i| i * i).collect::<Vec<_>>());
+    }
+
+    #[test]
+    fn jobs_borrow_caller_data() {
+        // the thread::scope-style use: jobs read borrowed slices and
+        // return computed values; the latch guarantees the borrows end
+        // before the data goes out of scope
+        let data: Vec<u64> = (0..10_000).collect();
+        let chunk = data.len().div_ceil(4);
+        let jobs: Vec<_> = (0..4)
+            .map(|s| {
+                let part = &data[s * chunk..((s + 1) * chunk).min(data.len())];
+                move || part.iter().sum::<u64>()
+            })
+            .collect();
+        let (sums, _) = global().run(jobs);
+        assert_eq!(sums.iter().sum::<u64>(), data.iter().sum::<u64>());
+    }
+
+    #[test]
+    fn concurrent_callers_do_not_interleave_results() {
+        let handles: Vec<_> = (0..4)
+            .map(|c| {
+                std::thread::spawn(move || {
+                    for _ in 0..50 {
+                        let jobs: Vec<_> = (0..8).map(|i| move || (c, i)).collect();
+                        let (out, _) = global().run(jobs);
+                        for (i, &(gc, gi)) in out.iter().enumerate() {
+                            assert_eq!((gc, gi), (c, i));
+                        }
+                    }
+                })
+            })
+            .collect();
+        for h in handles {
+            h.join().unwrap();
+        }
+    }
+
+    #[test]
+    fn panicking_job_propagates_and_pool_survives() {
+        let caught = std::panic::catch_unwind(|| {
+            let jobs: Vec<Box<dyn FnOnce() -> usize + Send>> = vec![
+                Box::new(|| 1),
+                Box::new(|| panic!("shard blew up")),
+                Box::new(|| 3),
+            ];
+            global().run(jobs);
+        });
+        assert!(caught.is_err(), "panic must propagate to the caller");
+        // the pool keeps serving after a panicked batch
+        let (out, _) = global().run(vec![|| 7usize]);
+        assert_eq!(out, vec![7]);
+    }
+
+    #[test]
+    fn auto_shards_is_positive_and_bounded() {
+        let s = auto_shards();
+        assert!((1..=64).contains(&s));
+        assert!(global().workers() >= 1);
+    }
+}

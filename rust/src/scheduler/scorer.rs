@@ -68,8 +68,21 @@ impl NativeScorer {
         soa: Option<&SoaBuffers>,
         shards: usize,
     ) -> ScoreSet {
+        Self::compute_with_residuals_soa_stats(si, res, soa, shards).0
+    }
+
+    /// [`NativeScorer::compute_with_residuals_soa`] reporting the pool
+    /// dispatch latency of the sharded pass in ns (0 when serial) — the
+    /// engine accumulates it into the obs counters.
+    pub(crate) fn compute_with_residuals_soa_stats(
+        si: &ScoreInputs,
+        res: &[f64],
+        soa: Option<&SoaBuffers>,
+        shards: usize,
+    ) -> (ScoreSet, u64) {
         let n = si.n();
         let mut set = ScoreSet::sized(n, si.m());
+        let mut dispatch_ns = 0;
         if shards <= 1 || n < 2 {
             for mut v in set.split_rows_mut(1) {
                 for k in v.n0()..v.n1() {
@@ -77,18 +90,24 @@ impl NativeScorer {
                 }
             }
         } else {
-            let views = set.split_rows_mut(shards);
-            std::thread::scope(|s| {
-                for mut v in views {
-                    s.spawn(move || {
+            // deterministic shard→range assignment: one job per
+            // `split_rows_mut` view, dispatched to the persistent pool
+            // (results are per-row writes into disjoint views, so which
+            // worker runs which shard cannot matter)
+            let jobs: Vec<_> = set
+                .split_rows_mut(shards)
+                .into_iter()
+                .map(|mut v| {
+                    move || {
                         for k in v.n0()..v.n1() {
                             Self::fill_row_rows(si, res, soa, &mut v, k);
                         }
-                    });
-                }
-            });
+                    }
+                })
+                .collect();
+            dispatch_ns = crate::scheduler::pool::global().run(jobs).1;
         }
-        set
+        (set, dispatch_ns)
     }
 
     /// The global-share values of row `n`: `(drf, tsf)`.

@@ -190,6 +190,15 @@ impl OnlineConfig {
         cfg
     }
 
+    /// Resolve `--shards auto` / `shards = "auto"`: the detected core
+    /// count ([`std::thread::available_parallelism`]), clamped to the
+    /// persistent scoring pool's bounds. Config front-ends resolve the
+    /// string form through here at parse time, so [`OnlineConfig::shards`]
+    /// is always a concrete count.
+    pub fn auto_shards() -> usize {
+        crate::scheduler::pool::auto_shards()
+    }
+
     /// A small fast configuration for tests.
     pub fn small(policy: &str, mode: AllocatorMode) -> Self {
         let mut cfg = OnlineConfig::paper(policy, mode, 2);

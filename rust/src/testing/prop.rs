@@ -680,6 +680,188 @@ mod tests {
         }
     }
 
+    mod massed_churn_tree_maintenance {
+        //! The tournament-tree contract at scale: after bursts of agent
+        //! down/rejoin and framework register/deregister churn at
+        //! n ≥ 4096 rows (crossing the tree's power-of-two capacity
+        //! boundary), the incrementally maintained `JointBounds` trees must
+        //! still agree with a full scan — the tree root equals the explicit
+        //! `(bound, row)` argmin over every row, and the tree-guided
+        //! [`Policy::pick_joint_pruned`] returns exactly the pair (tie
+        //! tuples included) of both the full n×m scan and the serial
+        //! sort-scan reference [`Policy::pick_joint_pruned_linear`]. The
+        //! two alternating demand profiles of `scaled_state` make score
+        //! ties massive, so tie-breaking order is genuinely exercised.
+
+        use crate::resources::ResVec;
+        use crate::rng::Rng;
+        use crate::scheduler::{
+            AllocState, Criterion, FrameworkEntry, Policy, PolicyKind, ScoringEngine,
+        };
+        use crate::testing::{forall, scaled_state_with_load};
+
+        #[derive(Debug, Clone, Copy, PartialEq)]
+        enum Burst {
+            /// Register this many fresh frameworks.
+            Register(usize),
+            /// Release + deactivate this many random active frameworks.
+            Deregister(usize),
+            /// Take one random registered agent down.
+            AgentDown,
+            /// Bring one random downed agent back.
+            AgentRejoin,
+            /// Up to this many random feasible placements.
+            Place(usize),
+        }
+
+        #[derive(Debug, Clone)]
+        struct Seq {
+            n0: usize,
+            shards: usize,
+            bursts: Vec<Burst>,
+            seed: u64,
+        }
+
+        const M: usize = 6;
+
+        fn gen_seq(rng: &mut Rng) -> Seq {
+            let bursts = (0..5)
+                .map(|_| match rng.index(8) {
+                    0 => Burst::AgentDown,
+                    1 => Burst::AgentRejoin,
+                    2 | 3 => Burst::Deregister(64 + rng.index(96)),
+                    4 | 5 => Burst::Register(64 + rng.index(96)),
+                    _ => Burst::Place(32 + rng.index(64)),
+                })
+                .collect();
+            Seq {
+                // straddle the 4096 power-of-two capacity boundary so
+                // register bursts force a tree regrowth
+                n0: 4090 + rng.index(20),
+                shards: [1, 2, 8][rng.index(3)],
+                bursts,
+                seed: rng.next_u64(),
+            }
+        }
+
+        fn apply(burst: Burst, st: &mut AllocState, rng: &mut Rng) {
+            match burst {
+                Burst::Register(count) => {
+                    for _ in 0..count {
+                        let k = st.n_frameworks();
+                        let d = if k % 2 == 0 {
+                            ResVec::cpu_mem(2.0, 2.0)
+                        } else {
+                            ResVec::cpu_mem(1.0, 3.5)
+                        };
+                        st.add_framework(FrameworkEntry {
+                            name: format!("f{k}"),
+                            demand: d,
+                            weight: if rng.chance(0.1) { 2.0 } else { 1.0 },
+                            active: true,
+                        });
+                    }
+                }
+                Burst::Deregister(count) => {
+                    for _ in 0..count {
+                        let fw = rng.index(st.n_frameworks());
+                        if !st.framework(fw).active {
+                            continue;
+                        }
+                        for ag in 0..st.pool.len() {
+                            let k = st.tasks_on(fw, ag);
+                            if k >= 1.0 {
+                                let d = st.framework(fw).demand;
+                                st.unplace(fw, ag, &d.scaled(k), k).unwrap();
+                            }
+                        }
+                        st.deactivate(fw);
+                    }
+                }
+                Burst::AgentDown => {
+                    let ag = rng.index(st.pool.len());
+                    if st.pool.agent(ag).registered {
+                        st.agent_down(ag);
+                    }
+                }
+                Burst::AgentRejoin => {
+                    let ag = rng.index(st.pool.len());
+                    if !st.pool.agent(ag).registered {
+                        st.agent_up(ag);
+                    }
+                }
+                Burst::Place(count) => {
+                    for _ in 0..count {
+                        let fw = rng.index(st.n_frameworks());
+                        let ag = rng.index(st.pool.len());
+                        if st.pool.agent(ag).registered && st.task_fits(fw, ag) {
+                            st.place_task(fw, ag).unwrap();
+                        }
+                    }
+                }
+            }
+        }
+
+        #[test]
+        fn prop_tree_argmin_survives_massed_churn() {
+            forall(0xA5ED, 3, gen_seq, |seq| {
+                let mut rng = Rng::new(seq.seed);
+                let mut st = scaled_state_with_load(M, seq.n0, 2000, &mut rng);
+                let mut engine = ScoringEngine::native();
+                engine.set_shards(seq.shards);
+                let policies = [
+                    Policy::new("psdsf", Criterion::PsDsf, PolicyKind::Joint),
+                    Policy::new("rpsdsf", Criterion::RPsDsf, PolicyKind::Joint),
+                ];
+                engine.scores_with_bounds(&mut st).map_err(|e| e.to_string())?;
+                for (step, &burst) in seq.bursts.iter().enumerate() {
+                    apply(burst, &mut st, &mut rng);
+                    let candidates: Vec<usize> = st.pool.registered_ids();
+                    let (si, set, bounds) =
+                        engine.scores_with_bounds(&mut st).map_err(|e| e.to_string())?;
+                    for crit in [Criterion::PsDsf, Criterion::RPsDsf] {
+                        // tree root vs explicit full scan over the bound keys
+                        let full_scan = (0..set.n()).min_by(|&a, &b| {
+                            bounds
+                                .row_bound(crit, a)
+                                .total_cmp(&bounds.row_bound(crit, b))
+                                .then(a.cmp(&b))
+                        });
+                        if bounds.min_row(crit) != full_scan {
+                            return Err(format!(
+                                "step {step} ({burst:?}) {crit:?}: tree root {:?} != \
+                                 full bound scan {full_scan:?} at n={}",
+                                bounds.min_row(crit),
+                                set.n()
+                            ));
+                        }
+                    }
+                    for p in &policies {
+                        let full = p.pick_joint(set, si, &candidates);
+                        let linear = p.pick_joint_pruned_linear(set, si, &candidates, bounds);
+                        if linear != full {
+                            return Err(format!(
+                                "step {step} ({burst:?}) {}: linear {linear:?} != full {full:?}",
+                                p.name
+                            ));
+                        }
+                        let tree = p.pick_joint_pruned(set, si, &candidates, bounds, seq.shards);
+                        if tree != full {
+                            return Err(format!(
+                                "step {step} ({burst:?}) {}: tree({}) {tree:?} != \
+                                 full {full:?} at n={}",
+                                p.name,
+                                seq.shards,
+                                set.n()
+                            ));
+                        }
+                    }
+                }
+                Ok(())
+            });
+        }
+    }
+
     #[test]
     fn passes_true_property() {
         forall(1, 100, |rng| rng.below(100), |x| {
