@@ -77,6 +77,15 @@ impl Args {
         }
     }
 
+    pub fn flag_f64(&self, name: &str, default: f64) -> Result<f64> {
+        match self.flag(name) {
+            None => Ok(default),
+            Some(v) => v
+                .parse()
+                .map_err(|_| Error::Config(format!("--{name} expects a number, got '{v}'"))),
+        }
+    }
+
     pub fn has(&self, switch: &str) -> bool {
         self.switches.iter().any(|s| s == switch) || self.flags.contains_key(switch)
     }
@@ -94,6 +103,10 @@ COMMANDS:
     tables                 Reproduce Tables 1-4 (progressive filling, 200 trials)
     figure <3..9>          Reproduce one online figure
     online                 Run a single online experiment
+    import <trace.csv>     Convert a production trace (Google cluster-data
+                           task_events / Alibaba batch_task CSV) into a v3
+                           streaming scenario trace (--trace-format,
+                           --out FILE)
     scenarios              Run the scenario smoke matrix (CI: every --scenario
                            under selected policies; writes BENCH_scenarios.json)
     explain                Reconstruct why a framework won or starved from a
@@ -117,9 +130,27 @@ COMMON FLAGS:
     --config FILE          Online experiment TOML (see config/)
     --scenario NAME        Named scenario (see 'list'): batch-baseline|poisson|
                            bursty|diurnal|heavy-tail|churn|mixed-bottleneck
-    --record FILE          Write the realized scenario trace (JSONL) before running
-    --replay FILE          Drive the run from a recorded scenario trace (the
-                           header's scenario/seed/dims must match the config)
+    --record FILE          Write the scenario trace (v3 streaming JSONL) before
+                           running; the run then replays it bit-exactly
+    --replay FILE          Drive the run from a recorded scenario trace — v3
+                           traces stream with bounded lookahead, v2 traces
+                           load eagerly (the header's scenario/seed/dims must
+                           match the config)
+    --chunk N              v3 record round-robin chunk size     [default: 256]
+    --trace-import FILE    online: drive the run from a production trace CSV
+                           (tenant classes become the queue set)
+    --trace-format F       google|alibaba                     [default: google]
+    --import-queues N      Max tenant-class queues to keep      [default: 8]
+    --import-max-jobs N    Cap on imported jobs (0 = all)       [default: 0]
+    --out FILE             import: output trace path [default: <in>.trace.jsonl]
+    --arrival-rate R       Make every queue open-Poisson at R jobs/s
+                           (overrides closed-batch arrivals)
+    --stats-threshold N    Samples per series before completion/slowdown
+                           metrics spill to P2 streaming quantiles [default: 32768]
+    --sample-dt F          Utilization sampling period, seconds [default: 5]
+    --tasks N              Override tasks-per-job on every queue
+    --task-secs F          Override mean task seconds on every queue
+    --max-executors N      Override max executors per job on every queue
     --obs [PATH|DIR]       Attach the scheduler flight recorder. online: bare
                            --obs prints the phase table; --obs PATH also spills
                            the decision trace (JSONL) + PATH.summary.json.

@@ -42,7 +42,19 @@
 //! time = 120.0
 //! agent = 5
 //! up = false
+//!
+//! [import]                   # optional: stream the workload from a
+//! path = "trace.csv"         # production trace instead of [[queue]]s
+//! format = "google"          # google | alibaba
+//! max_queues = 8             # tenant classes kept (default 8)
+//! max_jobs = 100000          # 0 = unlimited
+//! max_tasks_per_job = 64
+//! default_duration = 30.0    # seconds, for tasks with no end event
 //! ```
+//!
+//! `experiment.stats_threshold` (default 32768) bounds per-job metric
+//! memory: above it, completion/slowdown distributions switch from exact
+//! to P² streaming quantiles.
 
 use crate::cluster::ServerType;
 use crate::config::toml::{TomlDoc, TomlTable};
@@ -53,6 +65,7 @@ use crate::sim::online::{OnlineConfig, QueueSpec};
 use crate::spark::workload::DurationModel;
 use crate::workload::arrival::ArrivalProcess;
 use crate::workload::churn::{ChurnEvent, ChurnModel};
+use crate::workload::import::{ImportFormat, ImportOptions, ImportSpec};
 use crate::workload::templates::template_by_name;
 
 /// Resolve a server-type name from config.
@@ -212,8 +225,32 @@ pub fn parse_online_config(text: &str) -> Result<OnlineConfig> {
         }
         cfg.queues.push(QueueSpec { workload: workload(q)?, jobs, arrival: arrival(q)?, weight });
     }
-    if cfg.queues.is_empty() {
-        return Err(Error::Config("config defines no [[queue]] entries".into()));
+    // [import]: stream the workload out of a production trace instead of
+    // (or alongside nothing — the trace defines the queue set) [[queue]]s
+    if let Some(path) = doc.get("import.path").and_then(|v| v.as_str()) {
+        let fmt_name = doc.get("import.format").and_then(|v| v.as_str()).unwrap_or("google");
+        let format = ImportFormat::from_name(fmt_name).ok_or_else(|| {
+            Error::Config(format!("unknown import format '{fmt_name}' (google|alibaba)"))
+        })?;
+        let mut options = ImportOptions::default();
+        if let Some(v) = doc.get("import.max_queues").and_then(|v| v.as_i64()) {
+            options.max_queues = v.max(1) as usize;
+        }
+        if let Some(v) = doc.get("import.max_jobs").and_then(|v| v.as_i64()) {
+            options.max_jobs = v.max(0) as usize;
+        }
+        if let Some(v) = doc.get("import.max_tasks_per_job").and_then(|v| v.as_i64()) {
+            options.max_tasks_per_job = v.max(1) as usize;
+        }
+        if let Some(v) = doc.get("import.default_duration").and_then(|v| v.as_f64()) {
+            options.default_duration = v;
+        }
+        cfg.import = Some(ImportSpec { path: path.to_string(), format, options });
+    }
+    if cfg.queues.is_empty() && cfg.import.is_none() {
+        return Err(Error::Config(
+            "config defines no [[queue]] entries and no [import] trace".into(),
+        ));
     }
     let kinds = cfg.cluster.first().map(|s| s.capacity.len()).unwrap_or(2);
     for s in &cfg.cluster {
@@ -288,6 +325,14 @@ pub fn parse_online_config(text: &str) -> Result<OnlineConfig> {
     }
     if let Some(v) = doc.get("experiment.release_jitter").and_then(|v| v.as_f64()) {
         cfg.release_jitter = v;
+    }
+    if let Some(v) = doc.get("experiment.stats_threshold").and_then(|v| v.as_i64()) {
+        if v < 1 {
+            return Err(Error::Config(format!(
+                "experiment.stats_threshold must be >= 1, got {v}"
+            )));
+        }
+        cfg.stats_threshold = v as usize;
     }
     Ok(cfg)
 }
@@ -477,5 +522,42 @@ mod tests {
             "[[queue]]\nworkload = \"pi\"\n[[churn_event]]\ntime = 1.0\nagent = 99\nup = false"
         )
         .is_err());
+        // stats threshold must be positive
+        assert!(parse_online_config(
+            "[experiment]\nstats_threshold = 0\n[[queue]]\nworkload = \"pi\""
+        )
+        .is_err());
+    }
+
+    #[test]
+    fn import_table_parses_and_replaces_queues() {
+        let cfg = parse_online_config(
+            r#"
+            [experiment]
+            policy = "drf"
+            stats_threshold = 1000
+
+            [import]
+            path = "/data/task_events.csv"
+            format = "alibaba"
+            max_queues = 4
+            max_jobs = 1000
+            "#,
+        )
+        .unwrap();
+        assert!(cfg.queues.is_empty(), "the trace defines the queue set");
+        let import = cfg.import.expect("import spec parsed");
+        assert_eq!(import.path, "/data/task_events.csv");
+        assert_eq!(import.format, crate::workload::import::ImportFormat::Alibaba);
+        assert_eq!(import.options.max_queues, 4);
+        assert_eq!(import.options.max_jobs, 1000);
+        assert_eq!(cfg.stats_threshold, 1000);
+    }
+
+    #[test]
+    fn import_format_validated() {
+        assert!(parse_online_config("[import]\npath = \"x.csv\"\nformat = \"swim\"").is_err());
+        // a [[queue]]-less config without [import] still errors
+        assert!(parse_online_config("[experiment]\npolicy = \"drf\"").is_err());
     }
 }

@@ -14,7 +14,8 @@ use mesos_fair::obs::{explain as obs_explain, report as obs_report, trace as obs
 use mesos_fair::scheduler::{KernelKind, NativeScorer, Scorer, POLICY_NAMES};
 use mesos_fair::sim::online::{OnlineConfig, OnlineSim};
 use mesos_fair::workload::{
-    realize, scenario_config, trace as scenario_trace, RealizedScenario, SCENARIO_NAMES,
+    import::import_stream, scenario_config, trace as scenario_trace, ArrivalProcess, ImportFormat,
+    ImportSpec, WorkloadStream, SCENARIO_NAMES,
 };
 
 fn main() {
@@ -47,6 +48,7 @@ fn run() -> Result<()> {
         Some("tables") => cmd_tables(&args),
         Some("figure") => cmd_figure(&args),
         Some("online") => cmd_online(&args),
+        Some("import") => cmd_import(&args),
         Some("scenarios") => cmd_scenarios(&args),
         Some("explain") => cmd_explain(&args),
         Some("obs-report") => cmd_obs_report(&args),
@@ -102,32 +104,80 @@ fn cmd_figure(args: &Args) -> Result<()> {
 fn cmd_online(args: &Args) -> Result<()> {
     let mut cfg = build_online_config(args)?;
     let scorer = scorer_backend(args)?;
-    // replay > record > live realization; either way the sim consumes one
-    // realized scenario, so a recorded trace reproduces the run bit-exactly
-    let scenario = if let Some(path) = args.flag("replay") {
-        let sc = scenario_trace::read_file(path)?;
-        validate_replay(&sc, args)?;
-        // the scheduler-side RNG (RRR order, tie-breaks, release jitter)
-        // must match the recorded run too, so adopt the trace's seed
-        cfg.seed = sc.seed;
-        println!("replaying scenario '{}' (seed {:#x}) from {path}", sc.name, sc.seed);
-        sc
+    let chunk = args.flag_usize("chunk", scenario_trace::DEFAULT_CHUNK)?;
+    if chunk == 0 {
+        return Err(Error::Config("--chunk must be >= 1".into()));
+    }
+    // replay > import > live sampling; every path yields one WorkloadStream,
+    // so the sim pulls jobs lazily regardless of provenance
+    let stream = if let Some(path) = args.flag("replay") {
+        if scenario_trace::file_version(path)? >= 3 {
+            let stream = scenario_trace::open_stream(path)?;
+            validate_replay(&stream.name, stream.seed, args)?;
+            // the scheduler-side RNG (RRR order, tie-breaks, release jitter)
+            // must match the recorded run too, so adopt the trace's seed
+            cfg.seed = stream.seed;
+            if stream.imported {
+                // the trace carries its own tenant-class queue set
+                cfg.queues.clear();
+                cfg.import = None;
+            }
+            println!(
+                "replaying scenario '{}' (seed {:#x}, v3 streaming) from {path}",
+                stream.name, stream.seed
+            );
+            stream
+        } else {
+            let sc = scenario_trace::read_file(path)?;
+            validate_replay(&sc.name, sc.seed, args)?;
+            cfg.seed = sc.seed;
+            println!(
+                "replaying scenario '{}' (seed {:#x}, v2 eager) from {path}",
+                sc.name, sc.seed
+            );
+            WorkloadStream::from_realized(sc)
+        }
+    } else if let Some(spec) = cfg.import.clone() {
+        let (stream, stats) = import_stream(&spec, &cfg)?;
+        println!(
+            "imported {} ({}): {} rows, {} jobs seen, {} kept across {} tenant classes \
+             ({} parse errors)",
+            spec.path,
+            spec.format.label(),
+            stats.rows,
+            stats.jobs,
+            stats.kept_jobs,
+            stats.queues,
+            stats.parse_errors
+        );
+        stream
     } else {
         let name = args.flag_or("scenario", "adhoc");
-        realize(&cfg, &name)
+        WorkloadStream::sampled(&cfg, &name)
     };
-    if let Some(path) = args.flag("record") {
-        scenario_trace::write_file(&scenario, path)?;
-        println!("recorded scenario trace to {path}");
-    }
+    // --record serializes the stream (consuming it) and re-opens the written
+    // file for the run: the recorded trace provably drives this very run,
+    // and re-recording a replayed v3 trace is byte-identical
+    let stream = if let Some(path) = args.flag("record") {
+        scenario_trace::write_stream_file(stream, path, chunk)?;
+        println!("recorded scenario trace to {path} (v3 streaming, chunk {chunk})");
+        let stream = scenario_trace::open_stream(path)?;
+        if stream.imported {
+            cfg.queues.clear();
+            cfg.import = None;
+        }
+        stream
+    } else {
+        stream
+    };
     // capture the trace header before `cfg` moves into the sim
     let obs_meta = obs_trace::ObsMeta {
         policy: cfg.policy.clone(),
         mode: cfg.mode.label().to_string(),
-        scenario: scenario.name.clone(),
+        scenario: stream.name.clone(),
         seed: cfg.seed,
     };
-    let result = OnlineSim::with_scenario_scorer(cfg, scenario, scorer)?.run()?;
+    let result = OnlineSim::with_stream_scorer(cfg, stream, scorer)?.run()?;
     print_online(&result);
     if let (Some(path), Some(summary)) = (args.flag("obs"), &result.obs) {
         obs_trace::write_file(&obs_meta, &summary.events, path)?;
@@ -220,6 +270,9 @@ fn cmd_scenarios(args: &Args) -> Result<()> {
                 ("completion_p50", Json::Num(r.completion.p50)),
                 ("completion_p95", Json::Num(r.completion.p95)),
                 ("slowdown_p95", Json::Num(r.slowdown.p95)),
+                ("slowdown_p99", Json::Num(r.slowdown.p99)),
+                ("jobs_streamed", Json::Num(r.stream.jobs_streamed as f64)),
+                ("stream_lookahead", Json::Num(r.stream.max_lookahead as f64)),
                 ("wall_seconds", Json::Num(wall)),
             ];
             if let Some(s) = &r.obs {
@@ -264,29 +317,79 @@ fn cmd_scenarios(args: &Args) -> Result<()> {
 /// `--replay` guard for what only the CLI knows: the user's explicit
 /// `--scenario` / `--seed` flags must agree with the trace header. The
 /// dimensional checks — `(agents, r)` dims and queue count against the
-/// active configuration — are enforced by `OnlineSim::with_scenario*`
+/// active configuration — are enforced by `OnlineSim::with_stream*`
 /// itself, so every construction path (CLI replay, TOML configs, library
 /// callers) refuses a mismatched scenario with a clear error.
-fn validate_replay(sc: &RealizedScenario, args: &Args) -> Result<()> {
+fn validate_replay(trace_name: &str, trace_seed: u64, args: &Args) -> Result<()> {
     if let Some(name) = args.flag("scenario") {
-        if name != sc.name {
+        if name != trace_name {
             return Err(Error::Config(format!(
-                "replay mismatch: the trace records scenario '{}' but --scenario asked for \
-                 '{name}' — drop --scenario or replay the matching trace",
-                sc.name
+                "replay mismatch: the trace records scenario '{trace_name}' but --scenario asked \
+                 for '{name}' — drop --scenario or replay the matching trace"
             )));
         }
     }
     if args.flag("seed").is_some() {
         let seed = args.flag_u64("seed", 0)?;
-        if seed != sc.seed {
+        if seed != trace_seed {
             return Err(Error::Config(format!(
-                "replay mismatch: the trace was recorded with seed {:#x} but --seed gave \
-                 {seed:#x} — drop --seed to adopt the trace's",
-                sc.seed
+                "replay mismatch: the trace was recorded with seed {trace_seed:#x} but --seed \
+                 gave {seed:#x} — drop --seed to adopt the trace's"
             )));
         }
     }
+    Ok(())
+}
+
+/// Shared `--trace-format` / `--import-*` flag parsing for the `online`
+/// `--trace-import` path and the standalone `import` command.
+fn import_spec(args: &Args, path: &str) -> Result<ImportSpec> {
+    let format_name = args.flag_or("trace-format", "google");
+    let format = ImportFormat::from_name(&format_name).ok_or_else(|| {
+        Error::Config(format!("unknown trace format '{format_name}' (google|alibaba)"))
+    })?;
+    let mut spec = ImportSpec::new(path, format);
+    spec.options.max_queues = args.flag_usize("import-queues", spec.options.max_queues)?;
+    spec.options.max_jobs = args.flag_usize("import-max-jobs", spec.options.max_jobs)?;
+    if spec.options.max_queues == 0 {
+        return Err(Error::Config("--import-queues must be >= 1".into()));
+    }
+    Ok(spec)
+}
+
+/// `mesos-fair import <trace.csv> --trace-format google|alibaba [--out F]`:
+/// convert a production trace CSV into a v3 streaming scenario trace
+/// without ever materializing it — classification pass, then a lazy
+/// re-parse pass drained straight into the chunked writer.
+fn cmd_import(args: &Args) -> Result<()> {
+    let input = args.positional.first().ok_or_else(|| {
+        Error::Config("import needs an input CSV: import <trace.csv> --trace-format google".into())
+    })?;
+    let spec = import_spec(args, input)?;
+    let default_out = format!("{input}.trace.jsonl");
+    let out = args.flag_or("out", &default_out);
+    let chunk = args.flag_usize("chunk", scenario_trace::DEFAULT_CHUNK)?;
+    if chunk == 0 {
+        return Err(Error::Config("--chunk must be >= 1".into()));
+    }
+    // the import borrows a stock cluster's dimensions and the CLI seed;
+    // replaying the written trace against any 2-resource config works
+    let mut cfg = OnlineConfig::paper("drf", AllocatorMode::Characterized, 1);
+    cfg.seed = args.flag_u64("seed", 0x5EED)?;
+    let (stream, stats) = import_stream(&spec, &cfg)?;
+    scenario_trace::write_stream_file(stream, &out, chunk)?;
+    println!(
+        "imported {} ({}): {} rows, {} jobs seen, {} kept across {} tenant classes \
+         ({} parse errors)",
+        spec.path,
+        spec.format.label(),
+        stats.rows,
+        stats.jobs,
+        stats.kept_jobs,
+        stats.queues,
+        stats.parse_errors
+    );
+    println!("wrote {out} (v3 streaming, chunk {chunk})");
     Ok(())
 }
 
@@ -321,6 +424,7 @@ fn build_online_config(args: &Args) -> Result<OnlineConfig> {
         if args.has("obs") {
             cfg.obs = true;
         }
+        apply_stream_flags(args, &mut cfg)?;
         return Ok(cfg);
     }
     let policy = args.flag_or("scheduler", "drf");
@@ -360,7 +464,71 @@ fn build_online_config(args: &Args) -> Result<OnlineConfig> {
         cfg.kernel = k;
     }
     cfg.obs = args.has("obs");
+    apply_stream_flags(args, &mut cfg)?;
     Ok(cfg)
+}
+
+/// Streaming/import flags shared by every config source: `--trace-import`
+/// swaps the queue set for a production trace's tenant classes,
+/// `--arrival-rate` opens every queue into a Poisson stream, and the
+/// per-queue workload overrides (`--tasks`, `--task-secs`,
+/// `--max-executors`) let the million-job CI smoke shape synthetic load
+/// without a config file.
+fn apply_stream_flags(args: &Args, cfg: &mut OnlineConfig) -> Result<()> {
+    if let Some(path) = args.flag("trace-import") {
+        cfg.import = Some(import_spec(args, path)?);
+        // the trace's tenant classes define the queue set
+        cfg.queues.clear();
+    }
+    if args.flag("arrival-rate").is_some() {
+        let rate = args.flag_f64("arrival-rate", 0.0)?;
+        if rate <= 0.0 {
+            return Err(Error::Config("--arrival-rate must be > 0".into()));
+        }
+        for q in &mut cfg.queues {
+            q.arrival = ArrivalProcess::Poisson { rate };
+        }
+    }
+    let threshold = args.flag_usize("stats-threshold", cfg.stats_threshold)?;
+    if threshold == 0 {
+        return Err(Error::Config("--stats-threshold must be >= 1".into()));
+    }
+    cfg.stats_threshold = threshold;
+    if args.flag("sample-dt").is_some() {
+        let dt = args.flag_f64("sample-dt", 0.0)?;
+        if dt <= 0.0 {
+            return Err(Error::Config("--sample-dt must be > 0".into()));
+        }
+        cfg.sample_dt = dt;
+    }
+    if args.flag("tasks").is_some() {
+        let tasks = args.flag_usize("tasks", 0)?;
+        if tasks == 0 {
+            return Err(Error::Config("--tasks must be >= 1".into()));
+        }
+        for q in &mut cfg.queues {
+            q.workload.tasks_per_job = tasks;
+        }
+    }
+    if args.flag("task-secs").is_some() {
+        let secs = args.flag_f64("task-secs", 0.0)?;
+        if secs <= 0.0 {
+            return Err(Error::Config("--task-secs must be > 0".into()));
+        }
+        for q in &mut cfg.queues {
+            q.workload.mean_task_secs = secs;
+        }
+    }
+    if args.flag("max-executors").is_some() {
+        let m = args.flag_usize("max-executors", 0)?;
+        if m == 0 {
+            return Err(Error::Config("--max-executors must be >= 1".into()));
+        }
+        for q in &mut cfg.queues {
+            q.workload.max_executors = m;
+        }
+    }
+    Ok(())
 }
 
 /// CI bench-regression gate: `bench-diff <current.json> <baseline.json>`.
@@ -436,6 +604,18 @@ fn print_online(r: &mesos_fair::sim::online::OnlineResult) {
             r.slowdown.p50, r.slowdown.p95, r.slowdown.p99, r.slowdown.max
         );
     }
+    for (class, d) in &r.class_slowdown {
+        println!(
+            "class {class:9}: {:6} jobs  slowdown p50 {:.2}  p95 {:.2}  p99 {:.2}",
+            d.n, d.p50, d.p95, d.p99
+        );
+    }
+    let s = &r.stream;
+    println!(
+        "stream        : {} jobs streamed  lookahead<={}  parse errors {}  \
+         peak {} jobs / {} executors live",
+        s.jobs_streamed, s.max_lookahead, s.parse_errors, s.peak_active_jobs, s.peak_live_executors
+    );
     println!("allocator     : {} cycles, {} grants", r.cycles, r.grants);
     if let Some(s) = &r.obs {
         print!("{}", obs_report::phase_table(s));

@@ -9,4 +9,4 @@ pub mod series;
 pub mod stats;
 
 pub use series::TimeSeries;
-pub use stats::{DistStats, Summary};
+pub use stats::{DistStats, P2Quantile, StreamingDist, Summary};

@@ -106,6 +106,212 @@ impl DistStats {
     }
 }
 
+/// Jain & Chlamtac's P² streaming quantile estimator: tracks one quantile
+/// in O(1) memory with five markers whose heights are adjusted by
+/// piecewise-parabolic interpolation as samples stream in. Exact for the
+/// first five samples; the approximation error is well under a percent for
+/// smooth distributions at the sample counts million-job runs produce.
+#[derive(Debug, Clone)]
+pub struct P2Quantile {
+    q: f64,
+    /// Marker heights (estimates of the 0, q/2, q, (1+q)/2, 1 quantiles).
+    h: [f64; 5],
+    /// Actual marker positions (1-based sample ranks).
+    pos: [f64; 5],
+    /// Desired marker positions.
+    want: [f64; 5],
+    /// Per-sample increments of the desired positions.
+    dwant: [f64; 5],
+    /// Bootstrap buffer for the first five samples.
+    init: Vec<f64>,
+}
+
+impl P2Quantile {
+    pub fn new(q: f64) -> P2Quantile {
+        P2Quantile {
+            q,
+            h: [0.0; 5],
+            pos: [1.0, 2.0, 3.0, 4.0, 5.0],
+            want: [1.0, 1.0 + 2.0 * q, 1.0 + 4.0 * q, 3.0 + 2.0 * q, 5.0],
+            dwant: [0.0, q / 2.0, q, (1.0 + q) / 2.0, 1.0],
+            init: Vec::with_capacity(5),
+        }
+    }
+
+    pub fn push(&mut self, x: f64) {
+        if self.init.len() < 5 {
+            self.init.push(x);
+            if self.init.len() == 5 {
+                self.init.sort_by(f64::total_cmp);
+                for (h, v) in self.h.iter_mut().zip(&self.init) {
+                    *h = *v;
+                }
+            }
+            return;
+        }
+        // locate the cell and clamp the extreme markers
+        let k = if x < self.h[0] {
+            self.h[0] = x;
+            0
+        } else if x >= self.h[4] {
+            self.h[4] = x;
+            3
+        } else {
+            (1..4).find(|&i| x < self.h[i]).unwrap_or(4) - 1
+        };
+        for p in self.pos.iter_mut().skip(k + 1) {
+            *p += 1.0;
+        }
+        for (w, d) in self.want.iter_mut().zip(&self.dwant) {
+            *w += d;
+        }
+        // nudge interior markers toward their desired positions
+        for i in 1..4 {
+            let d = self.want[i] - self.pos[i];
+            if (d >= 1.0 && self.pos[i + 1] - self.pos[i] > 1.0)
+                || (d <= -1.0 && self.pos[i - 1] - self.pos[i] < -1.0)
+            {
+                let d = d.signum();
+                let parabolic = self.h[i]
+                    + d / (self.pos[i + 1] - self.pos[i - 1])
+                        * ((self.pos[i] - self.pos[i - 1] + d)
+                            * (self.h[i + 1] - self.h[i])
+                            / (self.pos[i + 1] - self.pos[i])
+                            + (self.pos[i + 1] - self.pos[i] - d)
+                                * (self.h[i] - self.h[i - 1])
+                                / (self.pos[i] - self.pos[i - 1]));
+                self.h[i] = if self.h[i - 1] < parabolic && parabolic < self.h[i + 1] {
+                    parabolic
+                } else {
+                    // parabolic prediction left the bracket: linear step
+                    let j = if d > 0.0 { i + 1 } else { i - 1 };
+                    self.h[i]
+                        + d * (self.h[j] - self.h[i]) / (self.pos[j] - self.pos[i])
+                };
+                self.pos[i] += d;
+            }
+        }
+    }
+
+    /// Current estimate (exact while fewer than five samples were pushed).
+    pub fn value(&self) -> f64 {
+        if self.init.len() < 5 {
+            if self.init.is_empty() {
+                return 0.0;
+            }
+            let mut sorted = self.init.clone();
+            sorted.sort_by(f64::total_cmp);
+            return percentile(&sorted, self.q);
+        }
+        self.h[2]
+    }
+}
+
+/// Memory-bounded distribution accumulator behind per-job completion and
+/// slowdown reporting. Exact below `threshold` samples (buffers and sorts,
+/// matching [`DistStats::of`] bit-for-bit); above it the buffer is
+/// replayed into P² estimators for p50/p95/p99 and dropped, so million-job
+/// runs hold O(1) metrics state per series. `n`, `mean` and `max` stay
+/// exact either way.
+#[derive(Debug, Clone)]
+pub struct StreamingDist {
+    threshold: usize,
+    buf: Vec<f64>,
+    est: Option<Vec<P2Quantile>>,
+    n: usize,
+    sum: f64,
+    max: f64,
+}
+
+impl StreamingDist {
+    /// Default spill threshold: small enough to bound memory, large enough
+    /// that every paper-scale run stays on the exact path.
+    pub const DEFAULT_THRESHOLD: usize = 32_768;
+
+    pub fn new() -> StreamingDist {
+        StreamingDist::with_threshold(Self::DEFAULT_THRESHOLD)
+    }
+
+    pub fn with_threshold(threshold: usize) -> StreamingDist {
+        StreamingDist {
+            threshold: threshold.max(8),
+            buf: Vec::new(),
+            est: None,
+            n: 0,
+            sum: 0.0,
+            max: 0.0,
+        }
+    }
+
+    pub fn push(&mut self, x: f64) {
+        self.n += 1;
+        self.sum += x;
+        if self.n == 1 || x.total_cmp(&self.max) == std::cmp::Ordering::Greater {
+            self.max = x;
+        }
+        match &mut self.est {
+            Some(est) => {
+                for e in est.iter_mut() {
+                    e.push(x);
+                }
+            }
+            None => {
+                self.buf.push(x);
+                if self.buf.len() > self.threshold {
+                    let mut est = vec![
+                        P2Quantile::new(0.50),
+                        P2Quantile::new(0.95),
+                        P2Quantile::new(0.99),
+                    ];
+                    for &v in &self.buf {
+                        for e in est.iter_mut() {
+                            e.push(v);
+                        }
+                    }
+                    self.est = Some(est);
+                    self.buf = Vec::new();
+                }
+            }
+        }
+    }
+
+    pub fn len(&self) -> usize {
+        self.n
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.n == 0
+    }
+
+    /// `true` while the percentiles are still computed from the full
+    /// sample (below the spill threshold).
+    pub fn is_exact(&self) -> bool {
+        self.est.is_none()
+    }
+
+    /// Summarize. Below the threshold this is bit-identical to
+    /// [`DistStats::of`] over the same samples.
+    pub fn finish(&self) -> DistStats {
+        match &self.est {
+            None => DistStats::of(&self.buf),
+            Some(est) => DistStats {
+                n: self.n,
+                mean: self.sum / self.n as f64,
+                p50: est[0].value(),
+                p95: est[1].value(),
+                p99: est[2].value(),
+                max: self.max,
+            },
+        }
+    }
+}
+
+impl Default for StreamingDist {
+    fn default() -> Self {
+        StreamingDist::new()
+    }
+}
+
 /// Welford online accumulator — used by long traces to avoid storing every
 /// sample.
 #[derive(Debug, Clone, Default)]
@@ -225,6 +431,66 @@ mod tests {
         assert_eq!(d.n, 4);
         assert!(d.p50.is_finite());
         assert!(d.max.is_nan());
+    }
+
+    #[test]
+    fn streaming_dist_exact_below_threshold() {
+        // the exactness regression the streaming-metrics satellite requires:
+        // below the spill threshold the streaming path must be bit-identical
+        // to the batch DistStats over the same samples
+        let xs: Vec<f64> = (0..1000).map(|i| ((i * 37) % 997) as f64 * 0.31).collect();
+        let mut s = StreamingDist::with_threshold(2000);
+        for &x in &xs {
+            s.push(x);
+        }
+        assert!(s.is_exact());
+        assert_eq!(s.finish(), DistStats::of(&xs));
+    }
+
+    #[test]
+    fn streaming_dist_spills_and_stays_close() {
+        let xs: Vec<f64> = (0..20_000).map(|i| ((i * 7919) % 20_011) as f64).collect();
+        let mut s = StreamingDist::with_threshold(256);
+        for &x in &xs {
+            s.push(x);
+        }
+        assert!(!s.is_exact());
+        let approx = s.finish();
+        let exact = DistStats::of(&xs);
+        assert_eq!(approx.n, exact.n);
+        assert!((approx.mean - exact.mean).abs() < 1e-9, "mean stays exact");
+        assert_eq!(approx.max, exact.max, "max stays exact");
+        // P² estimates on a (scrambled) uniform grid land within ~2%
+        let rel = |a: f64, b: f64| (a - b).abs() / b.abs().max(1.0);
+        assert!(rel(approx.p50, exact.p50) < 0.02, "p50 {} vs {}", approx.p50, exact.p50);
+        assert!(rel(approx.p95, exact.p95) < 0.02, "p95 {} vs {}", approx.p95, exact.p95);
+        assert!(rel(approx.p99, exact.p99) < 0.02, "p99 {} vs {}", approx.p99, exact.p99);
+    }
+
+    #[test]
+    fn streaming_dist_tiny_samples_match_batch() {
+        for n in 0..6 {
+            let xs: Vec<f64> = (0..n).map(|i| (i as f64) * 1.5 + 0.25).collect();
+            let mut s = StreamingDist::new();
+            for &x in &xs {
+                s.push(x);
+            }
+            assert_eq!(s.finish(), DistStats::of(&xs), "n={n}");
+        }
+    }
+
+    #[test]
+    fn p2_quantile_median_of_known_stream() {
+        // the worked example from Jain & Chlamtac's paper tracks the median
+        let obs = [
+            0.02, 0.15, 0.74, 3.39, 0.83, 22.37, 10.15, 15.43, 38.62, 15.92, 34.60, 10.28,
+            1.47, 0.40, 0.05, 11.39, 0.27, 0.42, 0.09, 11.37,
+        ];
+        let mut p2 = P2Quantile::new(0.5);
+        for &x in &obs {
+            p2.push(x);
+        }
+        assert!((p2.value() - 4.44).abs() < 0.1, "{}", p2.value());
     }
 
     #[test]

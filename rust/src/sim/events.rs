@@ -13,8 +13,15 @@ pub type TaskId = usize;
 /// What can happen in the online cluster.
 #[derive(Debug, Clone, PartialEq)]
 pub enum EventKind {
-    /// A submission queue submits its next job.
+    /// A submission queue submits its next job. For open queues this is a
+    /// *scheduled arrival*: handling it also pulls the queue's following
+    /// arrival from the workload stream (bounded lookahead — one scheduled
+    /// arrival per queue in the event horizon).
     JobArrival { queue: usize },
+    /// A submission that found every framework slot busy retries. Distinct
+    /// from [`EventKind::JobArrival`] so retries never advance the arrival
+    /// stream a second time.
+    JobRetry { queue: usize },
     /// A task attempt finishes on an executor. `duration` is the attempt's
     /// sampled service time (recorded for the driver's speculation median).
     TaskFinish { job: JobId, exec: ExecutorId, task: TaskId, attempt: u32, duration: f64 },
@@ -45,7 +52,9 @@ impl EventKind {
             EventKind::AgentUp { .. } => 0,
             EventKind::AgentDown { .. } => 1,
             EventKind::Release { .. } => 2,
-            EventKind::JobArrival { .. } => 3,
+            // retries share the arrivals' ordering class: a retry is the
+            // same submission, delayed
+            EventKind::JobArrival { .. } | EventKind::JobRetry { .. } => 3,
             EventKind::Allocate => 4,
             EventKind::TaskFinish { .. } => 5,
             EventKind::Sample => 6,

@@ -9,12 +9,22 @@
 //! new allocation cycles; a sampler records the allocated CPU/mem fractions
 //! the figures plot.
 //!
-//! The workload side is a [`RealizedScenario`]
-//! ([`crate::workload::scenario`]): closed queues resubmit on completion
-//! (the paper's batches), open queues arrive at pre-realized times
-//! (Poisson / bursty / diurnal), agents churn per the realized schedule,
-//! and every task duration was fixed at realization — so the same
-//! scenario, recorded and replayed, drives any scheduler identically.
+//! The workload side is a [`WorkloadStream`]
+//! ([`crate::workload::stream`]): closed queues pull their next job from
+//! the stream on completion (the paper's batches), open queues keep
+//! exactly one scheduled arrival per queue in the event horizon and pull
+//! the following one when it fires (bounded lookahead), agents churn per
+//! the realized schedule, and every task duration is fixed by the stream —
+//! so the same scenario, recorded and replayed, drives any scheduler
+//! identically. Eager [`RealizedScenario`]s still work through the
+//! [`WorkloadStream::from_realized`] adapter.
+//!
+//! Million-job scale is why the simulator is memory-bounded end to end:
+//! job and executor state live in free-list slabs that retire once a job's
+//! last in-flight task event fires (losing speculative attempts finish
+//! after completion, hence the per-job in-flight refcount), and per-job
+//! completion/slowdown metrics spill into streaming quantile estimators
+//! ([`StreamingDist`]) past a threshold instead of holding every sample.
 
 use crate::cluster::{ReleaseMode, ServerType};
 use crate::error::{Error, Result};
@@ -22,7 +32,7 @@ use crate::mesos::allocator::{AllocatorMode, Grant};
 use crate::mesos::master::Master;
 use crate::mesos::offer::Offer;
 use crate::mesos::OfferHandler;
-use crate::metrics::DistStats;
+use crate::metrics::{DistStats, StreamingDist};
 use crate::obs::ObsSummary;
 use crate::resources::ResVec;
 use crate::rng::Rng;
@@ -37,8 +47,12 @@ use crate::spark::queue::SubmissionQueue;
 use crate::spark::workload::{WorkloadKind, WorkloadSpec};
 use crate::workload::arrival::ArrivalProcess;
 use crate::workload::churn::{ChurnEvent, ChurnModel};
-use crate::workload::scenario::{realize, RealizedScenario};
-use std::collections::HashMap;
+use crate::workload::import::ImportSpec;
+use crate::workload::scenario::RealizedScenario;
+use crate::workload::stream::{Demux, WorkloadStream};
+use std::cell::RefCell;
+use std::collections::{BTreeMap, HashMap};
+use std::rc::Rc;
 
 /// One submission queue's configuration.
 #[derive(Debug, Clone)]
@@ -110,6 +124,14 @@ pub struct OnlineConfig {
     /// cycle-phase timings land in [`OnlineResult::obs`]. Grants are
     /// bit-identical with or without it.
     pub obs: bool,
+    /// Per-series sample count above which completion/slowdown metrics
+    /// spill from exact buffers into P² streaming quantile estimators
+    /// (`--stats-threshold`; million-job runs keep O(1) metrics memory).
+    pub stats_threshold: usize,
+    /// Drive the run from a production trace instead of `queues`
+    /// (`--trace-import FILE --trace-format google|alibaba`). The queue
+    /// set then comes from the trace's tenant classes.
+    pub import: Option<ImportSpec>,
     /// Safety cutoff (simulated seconds).
     pub max_sim_time: f64,
 }
@@ -142,6 +164,8 @@ impl OnlineConfig {
             shards: 1,
             kernel: KernelKind::default(),
             obs: false,
+            stats_threshold: StreamingDist::DEFAULT_THRESHOLD,
+            import: None,
             max_sim_time: 1e7,
         }
     }
@@ -237,6 +261,23 @@ impl TaskCompute for NoCompute {
     }
 }
 
+/// Workload-stream counters of one run (obs: jobs streamed, realized
+/// lookahead depth, importer parse errors, slab high-water marks).
+#[derive(Debug, Clone, Copy, Default, PartialEq)]
+pub struct StreamStats {
+    /// Jobs pulled from the workload stream.
+    pub jobs_streamed: u64,
+    /// Peak number of jobs buffered between the stream and the simulator
+    /// (queue retry/arrival buffers plus the trace demux).
+    pub max_lookahead: usize,
+    /// Importer rows skipped or repaired (0 for synthetic streams).
+    pub parse_errors: u64,
+    /// Peak concurrently-live jobs (slab occupancy high-water mark).
+    pub peak_active_jobs: usize,
+    /// Peak concurrently-live executors.
+    pub peak_live_executors: usize,
+}
+
 /// Aggregated outcome of one online run.
 #[derive(Debug, Clone)]
 pub struct OnlineResult {
@@ -260,6 +301,12 @@ pub struct OnlineResult {
     pub completion: DistStats,
     /// Per-job slowdown (completion / inherent service) distribution.
     pub slowdown: DistStats,
+    /// Per-queue-class slowdown distributions (SLO percentiles per tenant
+    /// class — workload kind for synthetic scenarios, tenant tag for
+    /// imported traces), sorted by class name.
+    pub class_slowdown: Vec<(String, DistStats)>,
+    /// Workload-stream counters (jobs streamed, lookahead, parse errors).
+    pub stream: StreamStats,
     /// Flight-recorder output ([`OnlineConfig::obs`]): decision events,
     /// per-phase timing histograms and engine counters.
     pub obs: Option<ObsSummary>,
@@ -273,8 +320,16 @@ pub struct OnlineSim {
     rng: Rng,
     queues: Vec<SubmissionQueue>,
     churn: Vec<ChurnEvent>,
-    jobs: Vec<SparkJob>,
-    executors: Vec<Executor>,
+    /// Job slab: slots retire (and recycle through `free_jobs`) once a
+    /// job's last in-flight task event has fired.
+    jobs: Vec<Option<SparkJob>>,
+    free_jobs: Vec<usize>,
+    /// Outstanding TaskFinish events per job slot — a job retires only at
+    /// zero, since losing speculative attempts fire after completion.
+    inflight: Vec<u32>,
+    /// Executor slab, recycled with its job.
+    executors: Vec<Option<Executor>>,
+    free_execs: Vec<usize>,
     fw_to_job: HashMap<usize, JobId>,
     done_durations: Vec<Vec<f64>>,
     trace: TraceRecorder,
@@ -282,6 +337,22 @@ pub struct OnlineSim {
     tasks_done: usize,
     /// An Allocate event is already queued (coalesces triggers).
     alloc_pending: bool,
+    /// Monotonic submission counter (job display names survive slot reuse).
+    job_seq: usize,
+    /// Jobs submitted but not yet completed.
+    active_jobs: usize,
+    live_execs: usize,
+    makespan: f64,
+    completion: StreamingDist,
+    slowdown: StreamingDist,
+    class_slowdown: BTreeMap<String, StreamingDist>,
+    /// Current / peak jobs buffered between stream and simulator.
+    lookahead_now: usize,
+    peak_lookahead: usize,
+    peak_active_jobs: usize,
+    peak_live_execs: usize,
+    /// Shared demux of file/import streams (lookahead + parse counters).
+    demux: Option<Rc<RefCell<Demux>>>,
 }
 
 impl OnlineSim {
@@ -290,59 +361,77 @@ impl OnlineSim {
     }
 
     /// Build with an explicit scoring backend (`--scorer hlo` uses the
-    /// PJRT-backed one). Realizes the configured workload live.
+    /// PJRT-backed one). Streams the configured workload live.
     pub fn with_scorer(cfg: OnlineConfig, scorer: Box<dyn Scorer>) -> Result<Self> {
-        let scenario = realize(&cfg, "adhoc");
-        Self::with_scenario_scorer(cfg, scenario, scorer)
+        let stream = WorkloadStream::sampled(&cfg, "adhoc");
+        Self::with_stream_scorer(cfg, stream, scorer)
     }
 
-    /// Build from an explicit realized scenario (trace replay).
+    /// Build from an eagerly realized scenario (v2 trace replay, tests).
     pub fn with_scenario(cfg: OnlineConfig, scenario: RealizedScenario) -> Result<Self> {
         Self::with_scenario_scorer(cfg, scenario, Box::new(NativeScorer::new()))
     }
 
-    /// Build from a realized scenario and an explicit scoring backend.
+    /// Build from a realized scenario and an explicit scoring backend —
+    /// a thin adapter over the streaming constructor.
     pub fn with_scenario_scorer(
         cfg: OnlineConfig,
         scenario: RealizedScenario,
         scorer: Box<dyn Scorer>,
     ) -> Result<Self> {
-        if scenario.queues.len() != cfg.queues.len() {
+        Self::with_stream_scorer(cfg, WorkloadStream::from_realized(scenario), scorer)
+    }
+
+    /// Build from a workload stream.
+    pub fn with_stream(cfg: OnlineConfig, stream: WorkloadStream) -> Result<Self> {
+        Self::with_stream_scorer(cfg, stream, Box::new(NativeScorer::new()))
+    }
+
+    /// Build from a workload stream and an explicit scoring backend — the
+    /// core constructor every other one funnels into.
+    pub fn with_stream_scorer(
+        cfg: OnlineConfig,
+        stream: WorkloadStream,
+        scorer: Box<dyn Scorer>,
+    ) -> Result<Self> {
+        // imported streams define their own queue set; otherwise the
+        // stream must line up with the configured queues
+        if !stream.imported && stream.queues.len() != cfg.queues.len() {
             return Err(Error::Config(format!(
                 "scenario has {} queues but the configuration has {}",
-                scenario.queues.len(),
+                stream.queues.len(),
                 cfg.queues.len()
             )));
         }
-        if let Some(bad) = scenario.churn.iter().find(|e| e.agent >= cfg.cluster.len()) {
+        if let Some(bad) = stream.churn.iter().find(|e| e.agent >= cfg.cluster.len()) {
             return Err(Error::Config(format!(
                 "scenario churn references agent {} but the cluster has {} agents",
                 bad.agent,
                 cfg.cluster.len()
             )));
         }
-        if scenario.agents != cfg.cluster.len() {
+        if stream.agents != cfg.cluster.len() {
             return Err(Error::Config(format!(
                 "scenario was realized for {} agents but the configuration has {} — \
                  refusing to replay against a different cluster",
-                scenario.agents,
+                stream.agents,
                 cfg.cluster.len()
             )));
         }
         let kinds = cfg.cluster.first().map(|s| s.capacity.len()).unwrap_or(2);
-        if scenario.kinds != kinds {
+        if stream.kinds != kinds {
             return Err(Error::Config(format!(
                 "scenario was realized with {} resource kinds but the cluster has {kinds}",
-                scenario.kinds
+                stream.kinds
             )));
         }
         if let Some(bad) =
-            scenario.queues.iter().find(|q| q.spec.executor_demand.len() != kinds)
+            stream.queues.iter().find(|q| q.meta.spec.executor_demand.len() != kinds)
         {
             return Err(Error::Config(format!(
                 "scenario workload '{}' has {} resource dims but the cluster has {kinds}",
-                bad.spec.kind.label(),
-                bad.spec.executor_demand.len()
+                bad.meta.spec.kind.label(),
+                bad.meta.spec.executor_demand.len()
             )));
         }
         let policy = policy_by_name(&cfg.policy)?;
@@ -358,27 +447,45 @@ impl OnlineSim {
             master.enable_obs(crate::obs::DEFAULT_EVENT_CAPACITY);
         }
         let label = format!("{}/{}", cfg.policy, cfg.mode.label());
-        let queues: Vec<SubmissionQueue> = scenario
+        let demux = stream.demux.clone();
+        let churn = stream.churn;
+        let queues: Vec<SubmissionQueue> = stream
             .queues
             .into_iter()
             .enumerate()
-            .map(|(i, rq)| SubmissionQueue::new(i, rq))
+            .map(|(i, qs)| SubmissionQueue::new(i, qs.meta, qs.source))
             .collect();
         let rng = Rng::new(cfg.seed);
+        let stats_threshold = cfg.stats_threshold;
         Ok(OnlineSim {
             master,
             events: EventQueue::new(),
             rng,
             queues,
-            churn: scenario.churn,
+            churn,
             jobs: Vec::new(),
+            free_jobs: Vec::new(),
+            inflight: Vec::new(),
             executors: Vec::new(),
+            free_execs: Vec::new(),
             fw_to_job: HashMap::new(),
             done_durations: Vec::new(),
             trace: TraceRecorder::new(&label),
             group_finish: HashMap::new(),
             tasks_done: 0,
             alloc_pending: false,
+            job_seq: 0,
+            active_jobs: 0,
+            live_execs: 0,
+            makespan: 0.0,
+            completion: StreamingDist::with_threshold(stats_threshold),
+            slowdown: StreamingDist::with_threshold(stats_threshold),
+            class_slowdown: BTreeMap::new(),
+            lookahead_now: 0,
+            peak_lookahead: 0,
+            peak_active_jobs: 0,
+            peak_live_execs: 0,
+            demux,
             cfg,
         })
     }
@@ -415,12 +522,14 @@ impl OnlineSim {
             if self.queues[q].closed {
                 self.events.schedule(0.0, EventKind::JobArrival { queue: q });
             } else {
-                let times = self.queues[q].arrivals.clone();
-                for t in times {
+                // bounded lookahead: only the next arrival per queue lives in
+                // the event horizon; each JobArrival pulls its successor
+                if let Some(t) = self.queues[q].schedule_next()? {
                     self.events.schedule(t, EventKind::JobArrival { queue: q });
                 }
             }
         }
+        self.note_lookahead();
         self.events.schedule(0.0, EventKind::Sample);
 
         while let Some(ev) = self.events.pop() {
@@ -436,7 +545,8 @@ impl OnlineSim {
                 EventKind::AgentDown { agent } => {
                     self.master.agent_down(agent);
                 }
-                EventKind::JobArrival { queue } => self.on_job_arrival(queue, now)?,
+                EventKind::JobArrival { queue } => self.on_job_arrival(queue, now, false)?,
+                EventKind::JobRetry { queue } => self.on_job_arrival(queue, now, true)?,
                 EventKind::Allocate => {
                     self.alloc_pending = false;
                     self.allocate(now)?;
@@ -470,11 +580,6 @@ impl OnlineSim {
         let t_end = self.events.now();
         self.trace.sample(t_end, &self.master.state.pool);
 
-        let makespan = self
-            .jobs
-            .iter()
-            .filter_map(|j| j.finished_at)
-            .fold(0.0, f64::max);
         let cpu_summary = self.trace.cpu.summary();
         let mem_summary = self.trace.mem.summary();
         let mut group_finish: Vec<(String, f64)> = self
@@ -483,21 +588,31 @@ impl OnlineSim {
             .map(|(k, v)| (k.to_string(), *v))
             .collect();
         group_finish.sort_by(|a, b| a.0.cmp(&b.0));
-        let mut completions = Vec::new();
-        let mut slowdowns = Vec::new();
-        for j in &self.jobs {
-            if let Some(done) = j.finished_at {
-                let ct = done - j.submitted_at;
-                completions.push(ct);
-                slowdowns.push(ct / j.ideal_service());
+        let (demux_lookahead, parse_errors) = match &self.demux {
+            Some(d) => {
+                let d = d.borrow();
+                (d.max_buffered, d.parse_errors())
             }
-        }
+            None => (0, 0),
+        };
+        let stream = StreamStats {
+            jobs_streamed: self.queues.iter().map(|q| q.pulled() as u64).sum(),
+            max_lookahead: self.peak_lookahead.max(demux_lookahead),
+            parse_errors,
+            peak_active_jobs: self.peak_active_jobs,
+            peak_live_executors: self.peak_live_execs,
+        };
+        let class_slowdown: Vec<(String, DistStats)> = self
+            .class_slowdown
+            .into_iter()
+            .map(|(k, v)| (k, v.finish()))
+            .collect();
         let counters = self.master.engine_counters();
         let engine_shards = self.master.engine_shards();
         let obs = self.master.take_obs().map(|rec| rec.into_summary(counters, engine_shards));
         Ok(OnlineResult {
             label: format!("{}/{}", self.cfg.policy, self.cfg.mode.label()),
-            makespan,
+            makespan: self.makespan,
             jobs_completed: self.trace.jobs_completed(),
             mean_cpu: cpu_summary.mean,
             mean_mem: mem_summary.mean,
@@ -507,45 +622,77 @@ impl OnlineSim {
             cycles: self.master.cycles,
             grants: self.master.total_grants,
             tasks_done: self.tasks_done,
-            completion: DistStats::of(&completions),
-            slowdown: DistStats::of(&slowdowns),
+            completion: self.completion.finish(),
+            slowdown: self.slowdown.finish(),
+            class_slowdown,
+            stream,
             obs,
             trace: self.trace,
         })
     }
 
     fn finished(&self) -> bool {
-        self.queues.iter().all(|q| q.is_drained())
-            && self.jobs.iter().all(|j| j.is_finished())
+        self.active_jobs == 0 && self.queues.iter().all(|q| q.is_drained())
     }
 
-    fn on_job_arrival(&mut self, queue: usize, now: f64) -> Result<()> {
-        let Some(recipe) = self.queues[queue].next_job() else { return Ok(()) };
+    /// Track the peak number of jobs buffered between sources and the sim.
+    fn note_lookahead(&mut self) {
+        self.lookahead_now = self.queues.iter().map(|q| q.buffered()).sum();
+        if self.lookahead_now > self.peak_lookahead {
+            self.peak_lookahead = self.lookahead_now;
+        }
+    }
+
+    fn on_job_arrival(&mut self, queue: usize, now: f64, is_retry: bool) -> Result<()> {
+        let Some(recipe) = self.queues[queue].next_job()? else { return Ok(()) };
+        // a fresh arrival on an open queue pulls its successor into the
+        // event horizon; retries must NOT advance the stream
+        if !is_retry && !self.queues[queue].closed {
+            if let Some(t) = self.queues[queue].schedule_next()? {
+                self.events.schedule(t, EventKind::JobArrival { queue });
+            }
+        }
+        self.note_lookahead();
         let spec = self.queues[queue].spec.clone();
-        let job_id = self.jobs.len();
-        let name = format!("{}-q{}-j{}", spec.kind.label(), queue, job_id);
+        let job_id = match self.free_jobs.pop() {
+            Some(slot) => slot,
+            None => {
+                self.jobs.push(None);
+                self.done_durations.push(Vec::new());
+                self.inflight.push(0);
+                self.jobs.len() - 1
+            }
+        };
+        let name = format!("{}-q{}-j{}", spec.kind.label(), queue, self.job_seq);
+        self.job_seq += 1;
         let declared = match self.cfg.mode {
             AllocatorMode::Characterized => Some(spec.executor_demand),
             AllocatorMode::Oblivious => None,
         };
         // the paper's submission groups are Mesos roles: shares aggregate
-        // per group (Pi = role 0, WordCount = role 1, synthetic classes
-        // their own — WorkloadKind::role)
-        let role = spec.kind.role();
+        // per group (Pi = role 0, WordCount = role 1, synthetic classes and
+        // imported tenants their own — queue metadata decides)
+        let role = self.queues[queue].role;
         let weight = self.queues[queue].weight;
         match self.master.register_framework_in_role(name, declared, weight, role) {
             Ok(slot) => {
                 let job = SparkJob::from_recipe(job_id, queue, slot, spec, &recipe, now);
-                self.jobs.push(job);
-                self.done_durations.push(Vec::new());
+                self.jobs[job_id] = Some(job);
+                self.done_durations[job_id].clear();
+                self.inflight[job_id] = 0;
+                self.active_jobs += 1;
+                if self.active_jobs > self.peak_active_jobs {
+                    self.peak_active_jobs = self.active_jobs;
+                }
                 self.fw_to_job.insert(slot, job_id);
                 self.request_allocation();
             }
             Err(_) => {
                 // all framework slots busy (releases in flight): requeue the
                 // submission and retry shortly
-                self.queues[queue].requeue();
-                self.events.schedule_in(1.0, EventKind::JobArrival { queue });
+                self.free_jobs.push(job_id);
+                self.queues[queue].requeue(recipe);
+                self.events.schedule_in(1.0, EventKind::JobRetry { queue });
             }
         }
         Ok(())
@@ -578,8 +725,14 @@ impl OnlineSim {
             let count = g.count as usize;
             let per_exec = g.amount.scaled(1.0 / g.count);
             for _ in 0..count {
-                let exec_id = self.executors.len();
-                let job = &mut self.jobs[job_id];
+                let exec_id = match self.free_execs.pop() {
+                    Some(slot) => slot,
+                    None => {
+                        self.executors.push(None);
+                        self.executors.len() - 1
+                    }
+                };
+                let job = self.jobs[job_id].as_mut().expect("grant for retired job");
                 let slots = job.spec.slots_per_executor;
                 let mut exec = Executor::new(exec_id, job_id, g.agent, per_exec, slots);
                 job.pending_executors = job.pending_executors.saturating_sub(1);
@@ -591,7 +744,11 @@ impl OnlineSim {
                     self.cfg.speculation,
                     &self.done_durations[job_id],
                 );
-                self.executors.push(exec);
+                self.executors[exec_id] = Some(exec);
+                self.live_execs += 1;
+                if self.live_execs > self.peak_live_execs {
+                    self.peak_live_execs = self.live_execs;
+                }
                 self.schedule_dispatches(job_id, exec_id, &dispatches, now);
             }
         }
@@ -600,6 +757,7 @@ impl OnlineSim {
 
     fn schedule_dispatches(&mut self, job: JobId, exec: usize, ds: &[Dispatch], now: f64) {
         let _ = now;
+        self.inflight[job] += ds.len() as u32;
         for d in ds {
             self.events.schedule_in(
                 d.duration,
@@ -625,23 +783,26 @@ impl OnlineSim {
         now: f64,
         compute: &mut dyn TaskCompute,
     ) -> Result<()> {
-        self.executors[exec_id].vacate();
-        let won = self.jobs[job_id].tasks[task].finish_attempt(attempt, now);
+        self.inflight[job_id] -= 1;
+        self.executors[exec_id].as_mut().expect("finish on retired executor").vacate();
+        let job = self.jobs[job_id].as_mut().expect("finish on retired job");
+        let won = job.tasks[task].finish_attempt(attempt, now);
         if won {
             self.tasks_done += 1;
             self.done_durations[job_id].push(duration);
-            let kind = self.jobs[job_id].spec.kind;
+            let kind = job.spec.kind;
             compute.run_task(kind, (job_id as u64) << 20 | task as u64)?;
-            let job_done = self.jobs[job_id].mark_task_done(task, now);
+            let job_done = self.jobs[job_id].as_mut().unwrap().mark_task_done(task, now);
             if job_done {
                 self.complete_job(job_id, now)?;
+                self.maybe_retire(job_id);
                 return Ok(());
             }
         }
         // keep this executor busy if the job still has work
-        if !self.jobs[job_id].is_finished() {
-            let job = &mut self.jobs[job_id];
-            let exec = &mut self.executors[exec_id];
+        if !self.jobs[job_id].as_ref().unwrap().is_finished() {
+            let job = self.jobs[job_id].as_mut().unwrap();
+            let exec = self.executors[exec_id].as_mut().unwrap();
             let dispatches = fill_executor(
                 job,
                 exec,
@@ -651,38 +812,71 @@ impl OnlineSim {
             );
             self.schedule_dispatches(job_id, exec_id, &dispatches, now);
         }
+        self.maybe_retire(job_id);
         Ok(())
+    }
+
+    /// Recycle a finished job's slab slot once its last in-flight task
+    /// event (losing speculative attempts included) has fired — keeps
+    /// long replays at O(concurrency) memory instead of O(jobs).
+    fn maybe_retire(&mut self, job_id: JobId) {
+        let done = matches!(&self.jobs[job_id], Some(j) if j.is_finished())
+            && self.inflight[job_id] == 0;
+        if !done {
+            return;
+        }
+        let job = self.jobs[job_id].take().expect("retire checked occupancy");
+        for eid in job.executors {
+            if self.executors[eid].take().is_some() {
+                self.free_execs.push(eid);
+                self.live_execs -= 1;
+            }
+        }
+        self.done_durations[job_id] = Vec::new();
+        self.free_jobs.push(job_id);
     }
 
     fn complete_job(&mut self, job_id: JobId, now: f64) -> Result<()> {
         self.trace.job_completed(now);
-        let queue = self.jobs[job_id].queue;
-        let slot = self.jobs[job_id].framework;
-        let kind_label = self.jobs[job_id].spec.kind.label();
+        let job = self.jobs[job_id].as_ref().expect("complete on retired job");
+        let queue = job.queue;
+        let slot = job.framework;
+        let kind_label = job.spec.kind.label();
+        let ct = now - job.submitted_at;
+        let sd = ct / job.ideal_service();
+        let exec_ids = job.executors.clone();
+        self.completion.push(ct);
+        self.slowdown.push(sd);
+        let class = self.queues[queue].class.clone();
+        let threshold = self.cfg.stats_threshold;
+        self.class_slowdown
+            .entry(class)
+            .or_insert_with(|| StreamingDist::with_threshold(threshold))
+            .push(sd);
+        if now > self.makespan {
+            self.makespan = now;
+        }
+        self.active_jobs -= 1;
         let entry = self.group_finish.entry(kind_label).or_insert(0.0);
         *entry = entry.max(now);
 
         // executors terminate with the job (§3.2); their resources reach the
         // allocator staggered by up to release_jitter seconds (§3.5.3)
-        let exec_ids = self.jobs[job_id].executors.clone();
         for eid in exec_ids {
-            let exec = &mut self.executors[eid];
+            let exec = self.executors[eid].as_mut().expect("release on retired executor");
             exec.terminated = true;
+            let agent = exec.agent;
+            let amount = exec.demand;
             let jitter = self.rng.f64() * self.cfg.release_jitter;
             self.events.schedule_in(
                 jitter,
-                EventKind::Release {
-                    framework: slot,
-                    agent: exec.agent,
-                    amount: exec.demand,
-                    count: 1.0,
-                },
+                EventKind::Release { framework: slot, agent, amount, count: 1.0 },
             );
         }
         self.master.finish_framework(slot);
         self.fw_to_job.remove(&slot);
-        // a closed queue submits its next job right away; open queues'
-        // arrivals were scheduled up front
+        // a closed queue submits its next job right away; an open queue's
+        // next arrival is already in the event horizon
         if self.queues[queue].closed {
             self.events.schedule(now, EventKind::JobArrival { queue });
         }
@@ -692,7 +886,7 @@ impl OnlineSim {
 
 /// The Spark side of the offer protocol.
 struct SparkOfferHandler<'a> {
-    jobs: &'a mut Vec<SparkJob>,
+    jobs: &'a mut Vec<Option<SparkJob>>,
     fw_to_job: &'a HashMap<usize, JobId>,
 }
 
@@ -700,7 +894,8 @@ impl OfferHandler for SparkOfferHandler<'_> {
     fn wants(&self, framework: usize) -> bool {
         self.fw_to_job
             .get(&framework)
-            .map(|j| self.jobs[*j].executors_wanted() > 0)
+            .and_then(|j| self.jobs[*j].as_ref())
+            .map(|job| job.executors_wanted() > 0)
             .unwrap_or(false)
     }
 
@@ -708,7 +903,9 @@ impl OfferHandler for SparkOfferHandler<'_> {
         let Some(&job_id) = self.fw_to_job.get(&offer.framework) else {
             return (0.0, ResVec::zero(offer.resources.len()));
         };
-        let job = &mut self.jobs[job_id];
+        let Some(job) = self.jobs[job_id].as_mut() else {
+            return (0.0, ResVec::zero(offer.resources.len()));
+        };
         let d = job.spec.executor_demand;
         let fit = offer.executors_that_fit(&d) as usize;
         let take = fit.min(job.executors_wanted());
@@ -723,6 +920,7 @@ impl OfferHandler for SparkOfferHandler<'_> {
 #[cfg(test)]
 mod tests {
     use super::*;
+    use crate::workload::scenario::realize;
 
     fn run(policy: &str, mode: AllocatorMode, seed: u64) -> OnlineResult {
         let mut cfg = OnlineConfig::small(policy, mode);
@@ -847,8 +1045,8 @@ mod tests {
         assert_eq!(scenario.queues[0].weight, 2.0, "realize must carry the queue weight");
         assert_eq!(scenario.queues[1].weight, 1.0);
         let mut sim = OnlineSim::with_scenario(cfg, scenario).unwrap();
-        sim.on_job_arrival(0, 0.0).unwrap();
-        sim.on_job_arrival(1, 0.0).unwrap();
+        sim.on_job_arrival(0, 0.0, false).unwrap();
+        sim.on_job_arrival(1, 0.0, false).unwrap();
         assert_eq!(sim.master.state.framework(0).weight, 2.0);
         assert_eq!(sim.master.state.framework(1).weight, 1.0);
     }
@@ -920,5 +1118,65 @@ mod tests {
         let expected: usize = cfg.queues.iter().map(|q| q.jobs).sum();
         let r = OnlineSim::new(cfg).unwrap().run().unwrap();
         assert_eq!(r.jobs_completed, expected);
+    }
+
+    #[test]
+    fn streamed_run_matches_eager_scenario_run() {
+        // the lazily-streamed workload must drive the simulator through the
+        // exact same trajectory as its eager realization
+        let mut cfg = OnlineConfig::small("drf", AllocatorMode::Characterized);
+        for q in &mut cfg.queues {
+            q.arrival = ArrivalProcess::Poisson { rate: 0.05 };
+        }
+        cfg.seed = 31;
+        let scenario = realize(&cfg, "adhoc");
+        let eager = OnlineSim::with_scenario(cfg.clone(), scenario).unwrap().run().unwrap();
+        let lazy = OnlineSim::new(cfg).unwrap().run().unwrap();
+        assert_eq!(eager.makespan, lazy.makespan);
+        assert_eq!(eager.grants, lazy.grants);
+        assert_eq!(eager.completion, lazy.completion);
+        assert_eq!(eager.slowdown, lazy.slowdown);
+        assert_eq!(eager.trace.cpu.values(), lazy.trace.cpu.values());
+        assert_eq!(eager.trace.mem.values(), lazy.trace.mem.values());
+    }
+
+    #[test]
+    fn stream_stats_report_lookahead_and_classes() {
+        let mut cfg = OnlineConfig::small("drf", AllocatorMode::Characterized);
+        for q in &mut cfg.queues {
+            q.arrival = ArrivalProcess::Poisson { rate: 0.05 };
+        }
+        cfg.seed = 37;
+        let r = OnlineSim::new(cfg).unwrap().run().unwrap();
+        assert_eq!(r.jobs_completed, 8);
+        assert_eq!(r.stream.jobs_streamed, 8);
+        // open queues hold exactly one pulled arrival each in the horizon
+        assert!(r.stream.max_lookahead >= 1);
+        assert!(r.stream.max_lookahead <= 8);
+        assert_eq!(r.stream.parse_errors, 0);
+        assert!(r.stream.peak_active_jobs >= 1);
+        assert!(r.stream.peak_live_executors >= 1);
+        // per-class slowdowns cover every workload class and sum to the total
+        let class_n: usize = r.class_slowdown.iter().map(|(_, d)| d.n).sum();
+        assert_eq!(class_n, 8);
+        for (class, d) in &r.class_slowdown {
+            assert!(!class.is_empty());
+            assert!(d.p50 >= 1.0 - 1e-9, "{class}: {d:?}");
+        }
+    }
+
+    #[test]
+    fn slab_recycles_job_slots_on_long_closed_runs() {
+        // 1 queue x 6 jobs, closed: at most one job is ever active, so the
+        // slab must stay O(1) instead of O(jobs)
+        let mut cfg = OnlineConfig::small("drf", AllocatorMode::Characterized);
+        cfg.queues.truncate(1);
+        cfg.queues[0].jobs = 6;
+        cfg.seed = 41;
+        let sim = OnlineSim::new(cfg).unwrap();
+        let r = sim.run().unwrap();
+        assert_eq!(r.jobs_completed, 6);
+        assert_eq!(r.stream.peak_active_jobs, 1);
+        assert_eq!(r.completion.n, 6);
     }
 }

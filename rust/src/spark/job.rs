@@ -59,8 +59,9 @@ impl SparkJob {
         recipe: &JobRecipe,
         now: f64,
     ) -> Self {
-        let n = spec.tasks_per_job;
-        debug_assert_eq!(recipe.durations.len(), n, "recipe/spec task-count mismatch");
+        // the recipe is authoritative: sampled recipes carry exactly
+        // spec.tasks_per_job durations, imported production jobs vary
+        let n = recipe.durations.len();
         SparkJob {
             id,
             queue,

@@ -4,14 +4,22 @@
 //! queue drains fifty); an *open* queue's jobs arrive at the realized times
 //! of its arrival process, independent of completions.
 //!
-//! Either way the queue serves pre-realized [`JobRecipe`]s in order, so the
-//! workload a scheduler sees is exactly the recorded scenario.
+//! Since the streaming-realization refactor the queue serves jobs straight
+//! from a lazy [`JobSource`] instead of a pre-realized recipe vector:
+//! closed queues pull on demand, open queues hold exactly one pulled job
+//! per scheduled arrival (`schedule_next` → `next_job`), and failed
+//! registrations park their recipe in a retry buffer. Per-queue FIFO order
+//! is preserved — retries drain before buffered arrivals, which drain
+//! before fresh pulls — so the workload a scheduler sees is still exactly
+//! the recorded scenario.
 
+use crate::error::{Error, Result};
 use crate::spark::workload::WorkloadSpec;
-use crate::workload::scenario::{JobRecipe, RealizedQueue};
+use crate::workload::scenario::JobRecipe;
+use crate::workload::stream::{JobSource, QueueMeta};
+use std::collections::VecDeque;
 
-/// One job-submission queue over a realized workload.
-#[derive(Debug, Clone)]
+/// One job-submission queue over a lazy workload source.
 pub struct SubmissionQueue {
     pub id: usize,
     /// The group's job template ("Pi", "WordCount", …).
@@ -20,50 +28,134 @@ pub struct SubmissionQueue {
     pub closed: bool,
     /// Fair-share weight φ this queue's frameworks register with.
     pub weight: f64,
-    /// Absolute arrival times (empty for closed queues).
-    pub arrivals: Vec<f64>,
-    recipes: Vec<JobRecipe>,
-    next: usize,
+    /// Mesos role this queue's frameworks register in.
+    pub role: usize,
+    /// Tenant-class label for per-class SLO reporting.
+    pub class: String,
+    source: Box<dyn JobSource>,
+    /// Jobs pulled for already-scheduled arrivals, not yet submitted.
+    awaiting: VecDeque<JobRecipe>,
+    /// Submissions bounced by a full master, retried ahead of `awaiting`.
+    retry: VecDeque<JobRecipe>,
+    exhausted: bool,
+    pulled: usize,
+    submitted: usize,
 }
 
 impl SubmissionQueue {
-    /// Build from one realized queue of a scenario.
-    pub fn new(id: usize, realized: RealizedQueue) -> Self {
+    /// Build from one queue of a workload stream.
+    pub fn new(id: usize, meta: QueueMeta, source: Box<dyn JobSource>) -> Self {
         SubmissionQueue {
             id,
-            spec: realized.spec,
-            closed: realized.closed,
-            weight: realized.weight,
-            arrivals: realized.arrivals,
-            recipes: realized.recipes,
-            next: 0,
+            spec: meta.spec,
+            closed: meta.closed,
+            weight: meta.weight,
+            role: meta.role,
+            class: meta.class,
+            source,
+            awaiting: VecDeque::new(),
+            retry: VecDeque::new(),
+            exhausted: false,
+            pulled: 0,
+            submitted: 0,
         }
     }
 
-    /// Take the next job recipe off the queue (None when drained).
-    pub fn next_job(&mut self) -> Option<JobRecipe> {
-        let r = self.recipes.get(self.next)?.clone();
-        self.next += 1;
-        Some(r)
+    fn pull(&mut self) -> Result<Option<JobRecipe>> {
+        if self.exhausted {
+            return Ok(None);
+        }
+        match self.source.next_job()? {
+            Some(j) => {
+                self.pulled += 1;
+                if self.source.size_hint() == Some(self.pulled) {
+                    self.exhausted = true;
+                }
+                Ok(Some(j.recipe))
+            }
+            None => {
+                self.exhausted = true;
+                Ok(None)
+            }
+        }
+    }
+
+    /// Open queues: pull the next arrival into the event horizon. Returns
+    /// its absolute arrival time for event scheduling, `None` when the
+    /// source is dry. The recipe waits in the arrival buffer until the
+    /// scheduled [`crate::sim::events::EventKind::JobArrival`] fires.
+    pub fn schedule_next(&mut self) -> Result<Option<f64>> {
+        if self.closed || self.exhausted {
+            return Ok(None);
+        }
+        match self.source.next_job()? {
+            Some(j) => {
+                self.pulled += 1;
+                if self.source.size_hint() == Some(self.pulled) {
+                    self.exhausted = true;
+                }
+                let t = j.t.ok_or_else(|| {
+                    Error::Config(format!(
+                        "open queue {} streamed job {} without an arrival time",
+                        self.id, j.idx
+                    ))
+                })?;
+                self.awaiting.push_back(j.recipe);
+                Ok(Some(t))
+            }
+            None => {
+                self.exhausted = true;
+                Ok(None)
+            }
+        }
+    }
+
+    /// Take the next submission: bounced retries first, then the buffered
+    /// scheduled arrival, then (closed queues) a fresh pull.
+    pub fn next_job(&mut self) -> Result<Option<JobRecipe>> {
+        if let Some(r) = self.retry.pop_front() {
+            self.submitted += 1;
+            return Ok(Some(r));
+        }
+        if let Some(r) = self.awaiting.pop_front() {
+            self.submitted += 1;
+            return Ok(Some(r));
+        }
+        if self.closed {
+            if let Some(r) = self.pull()? {
+                self.submitted += 1;
+                return Ok(Some(r));
+            }
+        }
+        Ok(None)
     }
 
     /// Put a taken job back (master's framework slots were all busy; the
-    /// submission retries shortly).
-    pub fn requeue(&mut self) {
-        debug_assert!(self.next > 0, "requeue with nothing taken");
-        self.next = self.next.saturating_sub(1);
+    /// submission retries shortly). Called in submission order, so the
+    /// retry buffer preserves per-queue FIFO.
+    pub fn requeue(&mut self, recipe: JobRecipe) {
+        debug_assert!(self.submitted > 0, "requeue with nothing taken");
+        self.submitted = self.submitted.saturating_sub(1);
+        self.retry.push_back(recipe);
     }
 
-    pub fn remaining(&self) -> usize {
-        self.recipes.len() - self.next
-    }
-
+    /// Jobs handed to the simulator so far.
     pub fn submitted(&self) -> usize {
-        self.next
+        self.submitted
+    }
+
+    /// Jobs pulled from the source so far (≥ `submitted`).
+    pub fn pulled(&self) -> usize {
+        self.pulled
+    }
+
+    /// Jobs sitting between the source and the simulator (lookahead).
+    pub fn buffered(&self) -> usize {
+        self.retry.len() + self.awaiting.len()
     }
 
     pub fn is_drained(&self) -> bool {
-        self.next >= self.recipes.len()
+        self.exhausted && self.retry.is_empty() && self.awaiting.is_empty()
     }
 }
 
@@ -71,38 +163,66 @@ impl SubmissionQueue {
 mod tests {
     use super::*;
     use crate::rng::Rng;
+    use crate::workload::stream::{BufferedSource, StreamedJob};
 
-    fn realized(jobs: usize) -> RealizedQueue {
+    fn queue(jobs: usize, closed: bool) -> SubmissionQueue {
         let spec = WorkloadSpec::pi();
         let mut rng = Rng::new(5);
-        RealizedQueue {
-            closed: true,
-            weight: 1.0,
-            arrivals: Vec::new(),
-            recipes: (0..jobs).map(|_| JobRecipe::sample(&spec, &mut rng)).collect(),
-            spec,
-        }
+        let items: std::collections::VecDeque<StreamedJob> = (0..jobs)
+            .map(|idx| StreamedJob {
+                idx,
+                t: if closed { None } else { Some(idx as f64 * 10.0) },
+                recipe: JobRecipe::sample(&spec, &mut rng),
+            })
+            .collect();
+        let meta = QueueMeta::of(spec, closed, 1.0);
+        SubmissionQueue::new(0, meta, Box::new(BufferedSource::new(items)))
     }
 
     #[test]
-    fn drains_exactly_n_jobs() {
-        let mut q = SubmissionQueue::new(0, realized(3));
-        assert_eq!(q.remaining(), 3);
+    fn closed_queue_drains_exactly_n_jobs() {
+        let mut q = queue(3, true);
         for _ in 0..3 {
-            assert!(q.next_job().is_some());
+            assert!(q.next_job().unwrap().is_some());
         }
-        assert!(q.next_job().is_none());
+        assert!(q.next_job().unwrap().is_none());
         assert!(q.is_drained());
         assert_eq!(q.submitted(), 3);
+        assert_eq!(q.pulled(), 3);
+    }
+
+    #[test]
+    fn open_queue_buffers_one_scheduled_arrival() {
+        let mut q = queue(2, false);
+        assert_eq!(q.schedule_next().unwrap(), Some(0.0));
+        assert_eq!(q.buffered(), 1);
+        // the scheduled arrival fires: submit it, schedule the next
+        assert!(q.next_job().unwrap().is_some());
+        assert_eq!(q.schedule_next().unwrap(), Some(10.0));
+        assert!(q.next_job().unwrap().is_some());
+        assert_eq!(q.schedule_next().unwrap(), None);
+        assert!(q.is_drained());
     }
 
     #[test]
     fn requeue_replays_the_same_recipe() {
-        let mut q = SubmissionQueue::new(0, realized(2));
-        let a = q.next_job().unwrap();
-        q.requeue();
-        let b = q.next_job().unwrap();
+        let mut q = queue(2, true);
+        let a = q.next_job().unwrap().unwrap();
+        q.requeue(a.clone());
+        let b = q.next_job().unwrap().unwrap();
         assert_eq!(a, b, "requeued submission must not skip or reshuffle recipes");
-        assert_eq!(q.remaining(), 1);
+        assert_eq!(q.submitted(), 2);
+        assert!(!q.is_drained());
+    }
+
+    #[test]
+    fn retries_drain_before_buffered_arrivals() {
+        let mut q = queue(3, false);
+        q.schedule_next().unwrap();
+        let first = q.next_job().unwrap().unwrap();
+        q.schedule_next().unwrap();
+        q.requeue(first.clone());
+        // the retry must come back before the buffered second arrival
+        assert_eq!(q.next_job().unwrap().unwrap(), first);
     }
 }

@@ -16,6 +16,15 @@
 //! All sampling is driven by the caller's [`Rng`] stream, so realized
 //! arrival sequences are reproducible and queue-independent (common random
 //! numbers across schedulers).
+//!
+//! Sampling comes in two equivalent forms: the eager [`sample_times`]
+//! batch (realizes all `n` arrivals up front) and the incremental
+//! [`ArrivalIter`] the streaming pipeline pulls from one arrival at a
+//! time. `sample_times` is implemented *on top of* the iterator, so the
+//! two consume the RNG stream draw-for-draw identically — the
+//! bit-identity half of the streaming contract is true by construction.
+//!
+//! [`sample_times`]: ArrivalProcess::sample_times
 
 use crate::rng::Rng;
 
@@ -51,64 +60,132 @@ impl ArrivalProcess {
         }
     }
 
+    /// Start the incremental arrival sampler. Any phase state that the
+    /// batch sampler draws before its first arrival (the bursty phase
+    /// length) is drawn here, so construction consumes exactly the draws
+    /// [`ArrivalProcess::sample_times`] would before its loop.
+    pub fn iter_times(&self, rng: &mut Rng) -> ArrivalIter {
+        let state = match *self {
+            ArrivalProcess::Closed => IterState::Closed,
+            ArrivalProcess::Poisson { rate } => IterState::Poisson { rate, t: 0.0 },
+            ArrivalProcess::Bursty { rate_on, rate_off, mean_on, mean_off } => IterState::Bursty {
+                rate_on,
+                rate_off,
+                mean_on,
+                mean_off,
+                t: 0.0,
+                on: true,
+                phase_end: rng.exponential(1.0 / mean_on.max(1e-9)),
+            },
+            ArrivalProcess::Diurnal { base, amplitude, period } => IterState::Diurnal {
+                base,
+                amplitude,
+                period,
+                lambda_max: (base + amplitude).max(1e-9),
+                t: 0.0,
+            },
+        };
+        ArrivalIter { state }
+    }
+
     /// Realize `n` arrival times (ascending, seconds from run start).
     /// Closed processes return an empty vector — their arrivals are events,
     /// not times.
     pub fn sample_times(&self, n: usize, rng: &mut Rng) -> Vec<f64> {
-        match *self {
-            ArrivalProcess::Closed => Vec::new(),
-            ArrivalProcess::Poisson { rate } => {
-                let mut t = 0.0;
-                (0..n)
-                    .map(|_| {
-                        t += rng.exponential(rate);
-                        t
-                    })
-                    .collect()
+        let mut it = self.iter_times(rng);
+        let mut out = Vec::with_capacity(if self.is_closed() { 0 } else { n });
+        while out.len() < n {
+            match it.next_time(rng) {
+                Some(t) => out.push(t),
+                None => break,
             }
-            ArrivalProcess::Bursty { rate_on, rate_off, mean_on, mean_off } => {
-                let mut out = Vec::with_capacity(n);
-                let mut t = 0.0;
-                let mut on = true;
-                // end of the current phase
-                let mut phase_end = rng.exponential(1.0 / mean_on.max(1e-9));
-                while out.len() < n {
-                    let rate = if on { rate_on } else { rate_off };
+        }
+        out
+    }
+
+    /// Consume the draws of `n` arrivals without materializing them — used
+    /// by the streaming realizer to fast-forward a cloned queue stream to
+    /// where the batch sampler's recipe draws would begin.
+    pub fn skip_times(&self, n: usize, rng: &mut Rng) {
+        let mut it = self.iter_times(rng);
+        for _ in 0..n {
+            if it.next_time(rng).is_none() {
+                break;
+            }
+        }
+    }
+}
+
+/// Incremental arrival sampler — the streaming twin of
+/// [`ArrivalProcess::sample_times`]. Carries only O(1) process state (the
+/// current clock, and for MMPP the on/off phase), so a million-arrival
+/// queue never holds its arrival times in memory.
+#[derive(Debug, Clone)]
+pub struct ArrivalIter {
+    state: IterState,
+}
+
+#[derive(Debug, Clone)]
+enum IterState {
+    Closed,
+    Poisson { rate: f64, t: f64 },
+    Bursty {
+        rate_on: f64,
+        rate_off: f64,
+        mean_on: f64,
+        mean_off: f64,
+        t: f64,
+        on: bool,
+        phase_end: f64,
+    },
+    Diurnal { base: f64, amplitude: f64, period: f64, lambda_max: f64, t: f64 },
+}
+
+impl ArrivalIter {
+    /// Draw the next arrival time (ascending). `None` for closed processes,
+    /// whose arrivals are completion events, not times. Consumes exactly the
+    /// draws the corresponding `sample_times` iteration would.
+    pub fn next_time(&mut self, rng: &mut Rng) -> Option<f64> {
+        match &mut self.state {
+            IterState::Closed => None,
+            IterState::Poisson { rate, t } => {
+                *t += rng.exponential(*rate);
+                Some(*t)
+            }
+            IterState::Bursty { rate_on, rate_off, mean_on, mean_off, t, on, phase_end } => {
+                loop {
+                    let rate = if *on { *rate_on } else { *rate_off };
                     if rate <= 1e-12 {
                         // silent phase: skip to its end
-                        t = phase_end;
-                        on = !on;
-                        let mean = if on { mean_on } else { mean_off };
-                        phase_end = t + rng.exponential(1.0 / mean.max(1e-9));
+                        *t = *phase_end;
+                        *on = !*on;
+                        let mean = if *on { *mean_on } else { *mean_off };
+                        *phase_end = *t + rng.exponential(1.0 / mean.max(1e-9));
                         continue;
                     }
-                    let next = t + rng.exponential(rate);
-                    if next <= phase_end {
-                        t = next;
-                        out.push(t);
-                    } else {
-                        t = phase_end;
-                        on = !on;
-                        let mean = if on { mean_on } else { mean_off };
-                        phase_end = t + rng.exponential(1.0 / mean.max(1e-9));
+                    let next = *t + rng.exponential(rate);
+                    if next <= *phase_end {
+                        *t = next;
+                        return Some(*t);
                     }
+                    *t = *phase_end;
+                    *on = !*on;
+                    let mean = if *on { *mean_on } else { *mean_off };
+                    *phase_end = *t + rng.exponential(1.0 / mean.max(1e-9));
                 }
-                out
             }
-            ArrivalProcess::Diurnal { base, amplitude, period } => {
+            IterState::Diurnal { base, amplitude, period, lambda_max, t } => {
                 // Lewis–Shedler thinning against the peak rate
-                let lambda_max = (base + amplitude).max(1e-9);
-                let mut out = Vec::with_capacity(n);
-                let mut t = 0.0;
-                while out.len() < n {
-                    t += rng.exponential(lambda_max);
-                    let lambda =
-                        base + amplitude * 0.5 * (1.0 + (std::f64::consts::TAU * t / period).sin());
-                    if rng.f64() * lambda_max < lambda {
-                        out.push(t);
+                loop {
+                    *t += rng.exponential(*lambda_max);
+                    let lambda = *base
+                        + *amplitude
+                            * 0.5
+                            * (1.0 + (std::f64::consts::TAU * *t / *period).sin());
+                    if rng.f64() * *lambda_max < lambda {
+                        return Some(*t);
                     }
                 }
-                out
             }
         }
     }
@@ -196,5 +273,33 @@ mod tests {
         let a = p.sample_times(50, &mut Rng::new(9).split(3));
         let b = p.sample_times(50, &mut Rng::new(9).split(3));
         assert_eq!(a, b);
+    }
+
+    #[test]
+    fn iterator_matches_batch_draw_for_draw() {
+        let processes = [
+            ArrivalProcess::Poisson { rate: 0.3 },
+            ArrivalProcess::Bursty { rate_on: 0.4, rate_off: 0.0, mean_on: 50.0, mean_off: 150.0 },
+            ArrivalProcess::Bursty { rate_on: 1.0, rate_off: 0.5, mean_on: 10.0, mean_off: 10.0 },
+            ArrivalProcess::Diurnal { base: 0.02, amplitude: 0.3, period: 1000.0 },
+        ];
+        for p in processes {
+            let batch = p.sample_times(300, &mut Rng::new(13).split(5));
+            let mut rng = Rng::new(13).split(5);
+            let mut it = p.iter_times(&mut rng);
+            let lazy: Vec<f64> = (0..300).map(|_| it.next_time(&mut rng).unwrap()).collect();
+            assert_eq!(batch, lazy, "{}", p.label());
+            // both consumers must leave the stream in the identical state
+            let mut rng2 = Rng::new(13).split(5);
+            p.skip_times(300, &mut rng2);
+            assert_eq!(rng.next_u64(), rng2.next_u64(), "{}", p.label());
+        }
+    }
+
+    #[test]
+    fn closed_iterator_yields_nothing() {
+        let mut rng = Rng::new(1);
+        let mut it = ArrivalProcess::Closed.iter_times(&mut rng);
+        assert!(it.next_time(&mut rng).is_none());
     }
 }

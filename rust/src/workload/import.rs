@@ -1,0 +1,808 @@
+//! Production-trace importers: turn public cluster traces into workload
+//! streams without ever holding the full trace in memory.
+//!
+//! Two CSV schemas are understood (see the crate-level workload docs):
+//!
+//! * [`ImportFormat::Google`] — Google cluster-data `task_events` rows
+//!   `time(µs), missing_info, job_id, task_index, machine_id, event_type,
+//!   user, scheduling_class, priority, cpu_request, memory_request, …`.
+//!   SUBMIT (0) events define a job's arrival and per-task demand;
+//!   FINISH/EVICT/FAIL/KILL/LOST (4/2/3/5/6) events bound task durations
+//!   against the task's last SUBMIT/SCHEDULE time.
+//! * [`ImportFormat::Alibaba`] — Alibaba cluster-trace `batch_task` rows
+//!   `task_name, instance_num, job_name, task_type, status, start_time(s),
+//!   end_time(s), plan_cpu(%·100), plan_mem`. Each task contributes
+//!   `instance_num` instances of duration `end - start`.
+//!
+//! Import is two-pass and streaming. Pass 1 aggregates jobs into tenant
+//! classes — keyed by tag (scheduling class / task type) and log₂ demand
+//! bucket — and keeps the `max_queues` most populous classes, each
+//! becoming one open queue whose mean demand/duration parameterize its
+//! [`WorkloadSpec`]. Pass 2 re-reads the file lazily behind a
+//! [`crate::workload::stream::Demux`], emitting [`StreamedJob`]s in file
+//! order as the simulation pulls them; jobs of dropped classes and
+//! malformed rows are counted, never silently lost. Both passes bound
+//! per-job state by `max_tasks_per_job` and the pending-job table by a
+//! fixed cap, so memory stays O(cap), not O(trace).
+
+use crate::error::{Error, Result};
+use crate::resources::ResVec;
+use crate::rng::Rng;
+use crate::sim::online::OnlineConfig;
+use crate::spark::workload::{DurationModel, WorkloadKind, WorkloadSpec};
+use crate::workload::scenario::JobRecipe;
+use crate::workload::stream::{
+    Demux, DemuxSource, JobFeed, QueueMeta, QueueStream, StreamedJob, WorkloadStream,
+};
+use std::collections::{BTreeMap, HashMap};
+use std::fs::File;
+use std::io::{BufRead, BufReader, Lines};
+use std::path::Path;
+
+/// Which public trace schema a file follows.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum ImportFormat {
+    /// Google cluster-data `task_events` CSV.
+    Google,
+    /// Alibaba cluster-trace `batch_task` CSV.
+    Alibaba,
+}
+
+impl ImportFormat {
+    pub fn from_name(s: &str) -> Option<ImportFormat> {
+        match s {
+            "google" => Some(ImportFormat::Google),
+            "alibaba" => Some(ImportFormat::Alibaba),
+            _ => None,
+        }
+    }
+
+    pub fn label(&self) -> &'static str {
+        match self {
+            ImportFormat::Google => "google",
+            ImportFormat::Alibaba => "alibaba",
+        }
+    }
+
+    /// Seconds per native time unit (Google stamps in microseconds).
+    fn time_scale(&self) -> f64 {
+        match self {
+            ImportFormat::Google => 1e-6,
+            ImportFormat::Alibaba => 1.0,
+        }
+    }
+
+    /// Cores per native CPU-request unit (Alibaba's plan_cpu is % ·100).
+    fn cpu_scale(&self) -> f64 {
+        match self {
+            ImportFormat::Google => 1.0,
+            ImportFormat::Alibaba => 0.01,
+        }
+    }
+}
+
+/// Importer knobs, all with workable defaults.
+#[derive(Debug, Clone)]
+pub struct ImportOptions {
+    /// Tenant classes (= queues) to keep, most populous first.
+    pub max_queues: usize,
+    /// Per-task-duration samples retained per job; excess instances are
+    /// dropped (counted, and the recipe keeps the retained sample).
+    pub max_tasks_per_job: usize,
+    /// Duration assigned to tasks whose end event is missing (seconds).
+    pub default_duration: f64,
+    /// Stop after this many jobs (0 = unlimited) — smoke-test clamp.
+    pub max_jobs: usize,
+}
+
+impl Default for ImportOptions {
+    fn default() -> Self {
+        ImportOptions {
+            max_queues: 8,
+            max_tasks_per_job: 64,
+            default_duration: 30.0,
+            max_jobs: 0,
+        }
+    }
+}
+
+/// A fully specified import: file, schema, knobs.
+#[derive(Debug, Clone)]
+pub struct ImportSpec {
+    pub path: String,
+    pub format: ImportFormat,
+    pub options: ImportOptions,
+}
+
+impl ImportSpec {
+    pub fn new(path: &str, format: ImportFormat) -> ImportSpec {
+        ImportSpec { path: path.to_string(), format, options: ImportOptions::default() }
+    }
+}
+
+/// What the import found — reported by the CLI and asserted in CI.
+#[derive(Debug, Clone, Default, PartialEq)]
+pub struct ImportStats {
+    /// Data rows read (excluding blank lines).
+    pub rows: u64,
+    /// Jobs assembled from the trace.
+    pub jobs: u64,
+    /// Jobs falling into the kept tenant classes.
+    pub kept_jobs: u64,
+    /// Tenant classes kept (= queues of the resulting stream).
+    pub queues: usize,
+    /// Malformed rows skipped.
+    pub parse_errors: u64,
+}
+
+/// One job assembled from trace rows, before classification.
+#[derive(Debug, Clone)]
+struct RawJob {
+    /// Tenant tag (Google scheduling class, Alibaba task type).
+    tag: String,
+    /// Arrival in seconds (native stamp × time scale), unnormalized.
+    arrival: f64,
+    /// Mean per-task CPU / memory request, in cores / native mem units.
+    cpu: f64,
+    mem: f64,
+    /// Retained first-attempt durations, seconds (≥ 1 entry).
+    durations: Vec<f64>,
+    /// Total task instances, including ones beyond the retention cap.
+    tasks: usize,
+}
+
+/// Streaming producer of [`RawJob`]s in trace order. Both parsers flush a
+/// pending job when the bounded table overflows (oldest last-touched
+/// first) and drain the rest, submission-ordered, at end of file.
+trait RawSource {
+    fn next_raw(&mut self) -> Result<Option<RawJob>>;
+    fn rows(&self) -> u64;
+    fn parse_errors(&self) -> u64;
+}
+
+/// Pending-job table cap: jobs whose rows interleave across more than
+/// this many other jobs get flushed early (counted per flush as complete
+/// as they are at that point).
+const PENDING_CAP: usize = 4096;
+
+struct Pending {
+    tag: String,
+    arrival: f64,
+    cpu_sum: f64,
+    mem_sum: f64,
+    req_n: u64,
+    durations: Vec<f64>,
+    tasks: usize,
+    /// Start stamp per retained task index (Google only).
+    starts: HashMap<u32, f64>,
+    last_touch: u64,
+}
+
+impl Pending {
+    fn raw(self, default_duration: f64) -> RawJob {
+        let mut durations = self.durations;
+        if durations.is_empty() {
+            durations.push(default_duration);
+        }
+        let n = self.req_n.max(1) as f64;
+        RawJob {
+            tag: self.tag,
+            arrival: self.arrival,
+            cpu: self.cpu_sum / n,
+            mem: self.mem_sum / n,
+            durations,
+            tasks: self.tasks.max(1),
+        }
+    }
+}
+
+/// Shared flush/evict machinery over a keyed pending table.
+struct PendingTable<K: Ord + Clone> {
+    jobs: BTreeMap<K, Pending>,
+    /// Jobs evicted or drained, ready to emit (arrival-sorted at EOF).
+    ready: Vec<RawJob>,
+    touch: u64,
+    opts: ImportOptions,
+}
+
+impl<K: Ord + Clone> PendingTable<K> {
+    fn new(opts: ImportOptions) -> Self {
+        PendingTable { jobs: BTreeMap::new(), ready: Vec::new(), touch: 0, opts }
+    }
+
+    fn touch(&mut self) -> u64 {
+        self.touch += 1;
+        self.touch
+    }
+
+    /// Evict the least-recently-touched job once over capacity.
+    fn evict_if_full(&mut self) {
+        if self.jobs.len() <= PENDING_CAP {
+            return;
+        }
+        if let Some(key) = self
+            .jobs
+            .iter()
+            .min_by_key(|(k, p)| (p.last_touch, (*k).clone()))
+            .map(|(k, _)| k.clone())
+        {
+            let p = self.jobs.remove(&key).unwrap();
+            let dd = self.opts.default_duration;
+            self.ready.push(p.raw(dd));
+        }
+    }
+
+    /// Drain every pending job at end of file, submission-ordered.
+    fn drain_eof(&mut self) {
+        let jobs = std::mem::take(&mut self.jobs);
+        let dd = self.opts.default_duration;
+        for (_, p) in jobs {
+            self.ready.push(p.raw(dd));
+        }
+        self.ready.sort_by(|a, b| a.arrival.total_cmp(&b.arrival));
+        // emit from the front: reverse so pop() yields ascending arrivals
+        self.ready.reverse();
+    }
+}
+
+/// Google cluster-data `task_events` parser.
+struct GoogleParser {
+    lines: Lines<BufReader<File>>,
+    table: PendingTable<u64>,
+    eof: bool,
+    rows: u64,
+    errors: u64,
+}
+
+impl GoogleParser {
+    fn open(path: &str, opts: ImportOptions) -> Result<GoogleParser> {
+        let file = File::open(path).map_err(Error::Io)?;
+        Ok(GoogleParser {
+            lines: BufReader::new(file).lines(),
+            table: PendingTable::new(opts),
+            eof: false,
+            rows: 0,
+            errors: 0,
+        })
+    }
+
+    fn ingest(&mut self, line: &str) {
+        let cols: Vec<&str> = line.split(',').collect();
+        if cols.len() < 11 {
+            self.errors += 1;
+            return;
+        }
+        let (Ok(time), Ok(job_id), Ok(event)) = (
+            cols[0].trim().parse::<f64>(),
+            cols[2].trim().parse::<u64>(),
+            cols[5].trim().parse::<u32>(),
+        ) else {
+            self.errors += 1;
+            return;
+        };
+        let task_index = cols[3].trim().parse::<u32>().unwrap_or(0);
+        let t = time * ImportFormat::Google.time_scale();
+        let touch = self.table.touch();
+        let max_tasks = self.table.opts.max_tasks_per_job;
+        match event {
+            // SUBMIT (0) / SCHEDULE (1): job + task bookkeeping
+            0 | 1 => {
+                let entry = self.table.jobs.entry(job_id).or_insert_with(|| Pending {
+                    tag: format!("sc{}", cols[7].trim()),
+                    arrival: t,
+                    cpu_sum: 0.0,
+                    mem_sum: 0.0,
+                    req_n: 0,
+                    durations: Vec::new(),
+                    tasks: 0,
+                    starts: HashMap::new(),
+                    last_touch: touch,
+                });
+                entry.last_touch = touch;
+                entry.arrival = entry.arrival.min(t);
+                if event == 0 {
+                    if let (Ok(cpu), Ok(mem)) =
+                        (cols[9].trim().parse::<f64>(), cols[10].trim().parse::<f64>())
+                    {
+                        entry.cpu_sum += cpu * ImportFormat::Google.cpu_scale();
+                        entry.mem_sum += mem;
+                        entry.req_n += 1;
+                    }
+                    entry.tasks = entry.tasks.max(task_index as usize + 1);
+                }
+                if (task_index as usize) < max_tasks {
+                    entry.starts.insert(task_index, t);
+                }
+                self.table.evict_if_full();
+            }
+            // FINISH (4) / EVICT (2) / FAIL (3) / KILL (5) / LOST (6):
+            // the attempt ends; duration = end - last start
+            2..=6 => {
+                if let Some(entry) = self.table.jobs.get_mut(&job_id) {
+                    entry.last_touch = touch;
+                    if let Some(start) = entry.starts.remove(&task_index) {
+                        if entry.durations.len() < max_tasks {
+                            entry.durations.push((t - start).max(1e-3));
+                        }
+                    }
+                }
+            }
+            _ => self.errors += 1,
+        }
+    }
+}
+
+impl RawSource for GoogleParser {
+    fn next_raw(&mut self) -> Result<Option<RawJob>> {
+        loop {
+            if let Some(job) = self.table.ready.pop() {
+                return Ok(Some(job));
+            }
+            if self.eof {
+                return Ok(None);
+            }
+            match self.lines.next() {
+                None => {
+                    self.eof = true;
+                    self.table.drain_eof();
+                }
+                Some(line) => {
+                    let line = line.map_err(Error::Io)?;
+                    let line = line.trim();
+                    if line.is_empty() {
+                        continue;
+                    }
+                    self.rows += 1;
+                    self.ingest(line);
+                    // only evictions surface jobs before EOF; loop re-checks
+                }
+            }
+        }
+    }
+
+    fn rows(&self) -> u64 {
+        self.rows
+    }
+
+    fn parse_errors(&self) -> u64 {
+        self.errors
+    }
+}
+
+/// Alibaba cluster-trace `batch_task` parser.
+struct AlibabaParser {
+    lines: Lines<BufReader<File>>,
+    table: PendingTable<String>,
+    eof: bool,
+    rows: u64,
+    errors: u64,
+}
+
+impl AlibabaParser {
+    fn open(path: &str, opts: ImportOptions) -> Result<AlibabaParser> {
+        let file = File::open(path).map_err(Error::Io)?;
+        Ok(AlibabaParser {
+            lines: BufReader::new(file).lines(),
+            table: PendingTable::new(opts),
+            eof: false,
+            rows: 0,
+            errors: 0,
+        })
+    }
+
+    fn ingest(&mut self, line: &str) {
+        let cols: Vec<&str> = line.split(',').collect();
+        if cols.len() < 9 {
+            self.errors += 1;
+            return;
+        }
+        let job_name = cols[2].trim().to_string();
+        let (Ok(instances), Ok(start), Ok(end)) = (
+            cols[1].trim().parse::<u64>(),
+            cols[5].trim().parse::<f64>(),
+            cols[6].trim().parse::<f64>(),
+        ) else {
+            self.errors += 1;
+            return;
+        };
+        let duration = if end > start {
+            (end - start) * ImportFormat::Alibaba.time_scale()
+        } else {
+            self.table.opts.default_duration
+        };
+        let cpu = cols[7].trim().parse::<f64>().unwrap_or(100.0)
+            * ImportFormat::Alibaba.cpu_scale();
+        let mem = cols[8].trim().parse::<f64>().unwrap_or(0.1);
+        let touch = self.table.touch();
+        let max_tasks = self.table.opts.max_tasks_per_job;
+        let entry = self.table.jobs.entry(job_name).or_insert_with(|| Pending {
+            tag: cols[3].trim().to_string(),
+            arrival: start,
+            cpu_sum: 0.0,
+            mem_sum: 0.0,
+            req_n: 0,
+            durations: Vec::new(),
+            tasks: 0,
+            starts: HashMap::new(),
+            last_touch: touch,
+        });
+        entry.last_touch = touch;
+        entry.arrival = entry.arrival.min(start);
+        entry.cpu_sum += cpu;
+        entry.mem_sum += mem;
+        entry.req_n += 1;
+        entry.tasks += instances as usize;
+        for _ in 0..instances {
+            if entry.durations.len() >= max_tasks {
+                break;
+            }
+            entry.durations.push(duration.max(1e-3));
+        }
+        self.table.evict_if_full();
+    }
+}
+
+impl RawSource for AlibabaParser {
+    fn next_raw(&mut self) -> Result<Option<RawJob>> {
+        loop {
+            if let Some(job) = self.table.ready.pop() {
+                return Ok(Some(job));
+            }
+            if self.eof {
+                return Ok(None);
+            }
+            match self.lines.next() {
+                None => {
+                    self.eof = true;
+                    self.table.drain_eof();
+                }
+                Some(line) => {
+                    let line = line.map_err(Error::Io)?;
+                    let line = line.trim();
+                    if line.is_empty() {
+                        continue;
+                    }
+                    self.rows += 1;
+                    self.ingest(line);
+                }
+            }
+        }
+    }
+
+    fn rows(&self) -> u64 {
+        self.rows
+    }
+
+    fn parse_errors(&self) -> u64 {
+        self.errors
+    }
+}
+
+fn open_parser(spec: &ImportSpec) -> Result<Box<dyn RawSource>> {
+    Ok(match spec.format {
+        ImportFormat::Google => Box::new(GoogleParser::open(&spec.path, spec.options.clone())?),
+        ImportFormat::Alibaba => Box::new(AlibabaParser::open(&spec.path, spec.options.clone())?),
+    })
+}
+
+/// Tenant-class key: tag plus log₂ buckets of mean CPU/memory request —
+/// jobs of one tag with order-of-magnitude-similar demand share a queue.
+fn class_key(job: &RawJob) -> (String, i32, i32) {
+    let bucket = |x: f64| {
+        if x <= 0.0 {
+            i32::MIN
+        } else {
+            x.log2().floor() as i32
+        }
+    };
+    (job.tag.clone(), bucket(job.cpu), bucket(job.mem))
+}
+
+#[derive(Default, Clone)]
+struct ClassAgg {
+    count: u64,
+    cpu_sum: f64,
+    mem_sum: f64,
+    dur_sum: f64,
+    dur_n: u64,
+    tasks_sum: u64,
+    first_arrival: f64,
+}
+
+/// Pass 2: the lazily re-parsed trace as a [`JobFeed`].
+struct ImportFeed {
+    parser: Box<dyn RawSource>,
+    classes: HashMap<(String, i32, i32), usize>,
+    /// Arrival offset so the stream starts at t = 0.
+    t0: f64,
+    next_idx: Vec<usize>,
+    last_t: Vec<f64>,
+    seed: u64,
+    emitted: usize,
+    max_jobs: usize,
+    /// Jobs of dropped tenant classes, surfaced through `parse_errors`.
+    skipped: u64,
+}
+
+impl JobFeed for ImportFeed {
+    fn next_item(&mut self) -> Result<Option<(usize, StreamedJob)>> {
+        loop {
+            if self.max_jobs > 0 && self.emitted >= self.max_jobs {
+                return Ok(None);
+            }
+            let Some(raw) = self.parser.next_raw()? else { return Ok(None) };
+            let Some(&q) = self.classes.get(&class_key(&raw)) else {
+                self.skipped += 1;
+                continue;
+            };
+            // arrivals within a queue must be nondecreasing; jobs flushed
+            // early by the pending-table cap can land out of order and are
+            // clamped to the queue's frontier
+            let t = (raw.arrival - self.t0).max(0.0).max(self.last_t[q]);
+            self.last_t[q] = t;
+            let idx = self.next_idx[q];
+            self.next_idx[q] += 1;
+            self.emitted += 1;
+            // a private per-job stream seed, derived deterministically from
+            // the stream seed and submission index (mirrors JobRecipe::sample)
+            let seed = Rng::new(self.seed ^ (self.emitted as u64)).next_u64();
+            let recipe = JobRecipe { durations: raw.durations, seed };
+            return Ok(Some((q, StreamedJob { idx, t: Some(t), recipe })));
+        }
+    }
+
+    fn parse_errors(&self) -> u64 {
+        self.parser.parse_errors() + self.skipped
+    }
+}
+
+/// A [`WorkloadSpec`] for one kept tenant class, parameterized by its
+/// pass-1 means. Imported demand vectors are always 2-dimensional
+/// (CPU, memory) — the schemas carry nothing else.
+fn class_spec(agg: &ClassAgg) -> WorkloadSpec {
+    let n = agg.count.max(1) as f64;
+    let cpu = (agg.cpu_sum / n).max(0.05);
+    let mem = (agg.mem_sum / n).max(0.05);
+    let mean_dur = if agg.dur_n > 0 { agg.dur_sum / agg.dur_n as f64 } else { 30.0 };
+    let tasks = ((agg.tasks_sum as f64 / n).round() as usize).max(1);
+    WorkloadSpec {
+        kind: WorkloadKind::Mixed,
+        executor_demand: ResVec::cpu_mem(cpu, mem),
+        slots_per_executor: 1,
+        tasks_per_job: tasks,
+        max_executors: ((tasks + 1) / 2).clamp(1, 8),
+        mean_task_secs: mean_dur.max(1e-3),
+        duration_sigma: 0.0,
+        straggler_prob: 0.0,
+        straggler_factor: 1.0,
+        duration: DurationModel::Lognormal,
+    }
+}
+
+/// Import a production trace as a workload stream: pass 1 aggregates
+/// tenant classes, pass 2 feeds the returned stream lazily. The stream is
+/// marked `imported` — its queue set comes from the trace, and each class
+/// gets its own Mesos role (= queue index) so fair shares and SLO
+/// percentiles aggregate per tenant.
+pub fn import_stream(spec: &ImportSpec, cfg: &OnlineConfig) -> Result<(WorkloadStream, ImportStats)> {
+    let kinds = cfg.cluster.first().map(|s| s.capacity.len()).unwrap_or(2);
+    if kinds != 2 {
+        return Err(Error::Config(format!(
+            "trace import produces 2-dimensional (CPU, memory) demands but the cluster has r={kinds}"
+        )));
+    }
+    // pass 1: aggregate classes
+    let mut parser = open_parser(spec)?;
+    let mut aggs: BTreeMap<(String, i32, i32), ClassAgg> = BTreeMap::new();
+    let mut jobs = 0u64;
+    let limit = spec.options.max_jobs;
+    while let Some(raw) = parser.next_raw()? {
+        if limit > 0 && jobs >= limit as u64 {
+            break;
+        }
+        jobs += 1;
+        let agg = aggs.entry(class_key(&raw)).or_insert_with(|| ClassAgg {
+            first_arrival: raw.arrival,
+            ..ClassAgg::default()
+        });
+        agg.count += 1;
+        agg.cpu_sum += raw.cpu;
+        agg.mem_sum += raw.mem;
+        agg.dur_sum += raw.durations.iter().sum::<f64>();
+        agg.dur_n += raw.durations.len() as u64;
+        agg.tasks_sum += raw.tasks as u64;
+        agg.first_arrival = agg.first_arrival.min(raw.arrival);
+    }
+    if jobs == 0 {
+        return Err(Error::Config(format!(
+            "trace import found no jobs in '{}' ({} rows, {} parse errors)",
+            spec.path,
+            parser.rows(),
+            parser.parse_errors()
+        )));
+    }
+    // keep the most populous classes; ties break on the (ordered) key
+    let mut ranked: Vec<(&(String, i32, i32), &ClassAgg)> = aggs.iter().collect();
+    ranked.sort_by(|a, b| b.1.count.cmp(&a.1.count).then_with(|| a.0.cmp(b.0)));
+    ranked.truncate(spec.options.max_queues.max(1));
+    let kept_jobs: u64 = ranked.iter().map(|(_, a)| a.count).sum();
+    let t0 = ranked.iter().map(|(_, a)| a.first_arrival).fold(f64::INFINITY, f64::min);
+    let stats = ImportStats {
+        rows: parser.rows(),
+        jobs,
+        kept_jobs,
+        queues: ranked.len(),
+        parse_errors: parser.parse_errors(),
+    };
+    // pass 2: the lazy feed behind a demux
+    let classes: HashMap<(String, i32, i32), usize> =
+        ranked.iter().enumerate().map(|(q, (key, _))| ((*key).clone(), q)).collect();
+    let n_queues = ranked.len();
+    let feed = ImportFeed {
+        parser: open_parser(spec)?,
+        classes,
+        t0,
+        next_idx: vec![0; n_queues],
+        last_t: vec![0.0; n_queues],
+        seed: cfg.seed,
+        emitted: 0,
+        max_jobs: limit,
+        skipped: 0,
+    };
+    let demux = Demux::new(Box::new(feed), n_queues);
+    let queues: Vec<QueueStream> = ranked
+        .iter()
+        .enumerate()
+        .map(|(q, (key, agg))| QueueStream {
+            meta: QueueMeta {
+                spec: class_spec(agg),
+                closed: false,
+                weight: 1.0,
+                role: q,
+                class: key.0.clone(),
+            },
+            source: Box::new(DemuxSource::new(demux.clone(), q, None)),
+        })
+        .collect();
+    let basename = Path::new(&spec.path)
+        .file_name()
+        .map(|s| s.to_string_lossy().into_owned())
+        .unwrap_or_else(|| spec.path.clone());
+    let stream = WorkloadStream {
+        name: format!("import:{basename}"),
+        seed: cfg.seed,
+        agents: cfg.cluster.len(),
+        kinds,
+        imported: true,
+        queues,
+        churn: Vec::new(),
+        demux: Some(demux),
+    };
+    Ok((stream, stats))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::io::Write;
+
+    fn write_tmp(name: &str, content: &str) -> String {
+        let path = std::env::temp_dir().join(name);
+        let mut f = File::create(&path).unwrap();
+        f.write_all(content.as_bytes()).unwrap();
+        path.to_string_lossy().into_owned()
+    }
+
+    /// 3 jobs: two of scheduling class 0 (same demand bucket), one of
+    /// class 2; job 300 has a task with no end event (default duration).
+    fn google_fixture() -> String {
+        write_tmp(
+            "mesos-fair-google-test.csv",
+            "\
+0,,100,0,,0,u1,0,,0.05,0.02\n\
+1000000,,100,1,,0,u1,0,,0.05,0.02\n\
+2000000,,100,0,,1,u1,0,,,\n\
+5000000,,100,0,,4,u1,0,,,\n\
+6000000,,100,1,,4,u1,0,,,\n\
+3000000,,200,0,,0,u2,2,,0.25,0.12\n\
+9000000,,200,0,,4,u2,2,,,\n\
+4000000,,300,0,,0,u3,0,,0.05,0.02\n\
+not,a,valid,row\n",
+        )
+    }
+
+    fn cfg() -> OnlineConfig {
+        crate::sim::online::OnlineConfig::small("drf", crate::mesos::AllocatorMode::Characterized)
+    }
+
+    #[test]
+    fn google_import_classifies_and_streams() {
+        let spec = ImportSpec::new(&google_fixture(), ImportFormat::Google);
+        let (stream, stats) = import_stream(&spec, &cfg()).unwrap();
+        assert_eq!(stats.jobs, 3);
+        assert_eq!(stats.queues, 2);
+        assert_eq!(stats.kept_jobs, 3);
+        assert_eq!(stats.parse_errors, 1, "the malformed row is counted");
+        assert!(stream.imported);
+        assert_eq!(stream.queues.len(), 2);
+        // the sc0 class (2 jobs) outranks sc2 (1 job)
+        assert_eq!(stream.queues[0].meta.class, "sc0");
+        assert_eq!(stream.queues[1].meta.class, "sc2");
+        assert_eq!(stream.queues[0].meta.role, 0);
+        assert_eq!(stream.queues[1].meta.role, 1);
+        let sc = stream.realize_all().unwrap();
+        assert_eq!(sc.queues[0].recipes.len(), 2);
+        assert_eq!(sc.queues[1].recipes.len(), 1);
+        // job 100: task 0 rescheduled at 2s and finished at 5s (3s run);
+        // task 1 submitted at 1s, finished at 6s (5s run)
+        let j100 = &sc.queues[0].recipes[0];
+        assert_eq!(j100.durations.len(), 2);
+        assert!((j100.durations[0] - 3.0).abs() < 1e-9);
+        assert!((j100.durations[1] - 5.0).abs() < 1e-9);
+        // job 300 never finished: default duration stands in
+        let j300 = &sc.queues[0].recipes[1];
+        assert_eq!(j300.durations, vec![ImportOptions::default().default_duration]);
+        // arrivals normalized to the earliest kept job and per-queue sorted
+        assert_eq!(sc.queues[0].arrivals[0], 0.0);
+        assert!(sc.queues[0].arrivals.windows(2).all(|w| w[0] <= w[1]));
+    }
+
+    #[test]
+    fn alibaba_import_groups_by_job_name() {
+        let path = write_tmp(
+            "mesos-fair-alibaba-test.csv",
+            "\
+task_A1,2,j_1,A,Terminated,100,160,100,0.3\n\
+task_A2,1,j_1,A,Terminated,120,150,100,0.3\n\
+task_B1,3,j_2,B,Terminated,200,230,200,0.6\n\
+bogus\n",
+        );
+        let spec = ImportSpec::new(&path, ImportFormat::Alibaba);
+        let (stream, stats) = import_stream(&spec, &cfg()).unwrap();
+        assert_eq!(stats.jobs, 2);
+        assert_eq!(stats.queues, 2);
+        assert_eq!(stats.parse_errors, 1);
+        let sc = stream.realize_all().unwrap();
+        let total: usize = sc.queues.iter().map(|q| q.recipes.len()).sum();
+        assert_eq!(total, 2);
+        // j_1: 2 instances of 60s + 1 of 30s
+        let j1 = sc
+            .queues
+            .iter()
+            .flat_map(|q| q.recipes.iter())
+            .find(|r| r.durations.len() == 3)
+            .expect("j_1 has 3 task instances");
+        assert_eq!(j1.durations, vec![60.0, 60.0, 30.0]);
+        // plan_cpu 100 → 1.0 cores
+        let q1 = sc.queues.iter().find(|q| q.spec.kind == WorkloadKind::Mixed).unwrap();
+        assert!(q1.spec.executor_demand.as_slice()[0] >= 0.05);
+    }
+
+    #[test]
+    fn max_jobs_clamps_both_passes() {
+        let spec = ImportSpec {
+            path: google_fixture(),
+            format: ImportFormat::Google,
+            options: ImportOptions { max_jobs: 1, ..ImportOptions::default() },
+        };
+        let (stream, stats) = import_stream(&spec, &cfg()).unwrap();
+        assert_eq!(stats.jobs, 1);
+        let sc = stream.realize_all().unwrap();
+        let total: usize = sc.queues.iter().map(|q| q.recipes.len()).sum();
+        assert_eq!(total, 1);
+    }
+
+    #[test]
+    fn missing_file_is_an_error() {
+        let spec = ImportSpec::new("/nonexistent/trace.csv", ImportFormat::Google);
+        assert!(import_stream(&spec, &cfg()).is_err());
+    }
+
+    #[test]
+    fn format_names_round_trip() {
+        for f in [ImportFormat::Google, ImportFormat::Alibaba] {
+            assert_eq!(ImportFormat::from_name(f.label()), Some(f));
+        }
+        assert_eq!(ImportFormat::from_name("swim"), None);
+    }
+}

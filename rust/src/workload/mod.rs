@@ -1,5 +1,5 @@
-//! Scenario workload subsystem: online workload generation and
-//! deterministic record/replay.
+//! Scenario workload subsystem: streaming workload realization,
+//! deterministic record/replay, and production-trace import.
 //!
 //! The paper evaluates its schedulers on exactly two job groups submitted
 //! as fixed closed batches. This module generalizes the workload side of
@@ -7,33 +7,75 @@
 //!
 //! * [`arrival`] — arrival processes: closed batch (the paper's behaviour
 //!   as a special case), Poisson, bursty MMPP on/off, diurnal rate curves.
+//!   Each process samples eagerly (`sample_times`) or one event at a time
+//!   (`iter_times`) with bit-identical draws.
 //! * [`templates`] — a job-template generator: CPU-/memory-/I/O-bottleneck
 //!   and balanced demand vectors (including r≥3 resource dimensions) and
 //!   heavy-tailed (bounded-Pareto) task-duration models.
 //! * [`churn`] — cluster churn: scripted or stochastic agent drain/rejoin
 //!   schedules against the dynamic-dimension scheduler core.
-//! * [`scenario`] — scenario *realization*: every stochastic workload input
-//!   (arrival times, per-job demands and durations, churn) is sampled up
-//!   front from per-queue [`crate::rng::Rng::split`] streams keyed by queue
-//!   id, giving common random numbers across schedulers; plus the
-//!   `--scenario` registry of named scenario families.
-//! * [`trace`] — JSONL serialization of realized scenarios with **record**
-//!   and **replay** modes: a recorded trace, replayed, drives any scheduler
-//!   with the bit-identical workload sequence (regression-tested in
-//!   `tests/scenarios.rs`).
+//! * [`scenario`] — eager scenario *realization* plus the `--scenario`
+//!   registry of named scenario families. Since the streaming refactor the
+//!   eager path is a thin adapter that drains a [`stream::WorkloadStream`].
+//! * [`stream`] — the lazy pipeline: a [`stream::WorkloadStream`] yields
+//!   [`stream::StreamedJob`]s per queue in arrival order with bounded
+//!   lookahead, so million-job replays run at O(concurrency) memory.
+//! * [`trace`] — JSONL serialization with **record** and **replay** modes.
+//! * [`import`] — production-trace importers (Google cluster-data,
+//!   Alibaba cluster-trace) that stream job recipes out of CSV files.
 //!
-//! The simulator ([`crate::sim::online`]) consumes only the realized form,
-//! so a live generated scenario and a replayed trace are indistinguishable
-//! to every scheduler.
+//! # Streaming vs eager duality
+//!
+//! Both forms draw from the same per-queue [`crate::rng::Rng::split`]
+//! streams keyed by queue id ([`scenario::queue_stream`]), giving common
+//! random numbers across schedulers, and are bit-identical to each other:
+//! `WorkloadStream::sampled(cfg).realize_all()` equals `realize(cfg)`, and
+//! a simulator driven by either produces the same trajectory (property
+//! tests in `tests/streaming.rs`). The eager form remains the convenient
+//! in-memory representation for small scenarios and v2-trace replay; the
+//! stream is the scalable path the simulator actually consumes.
+//!
+//! # Trace format (JSONL)
+//!
+//! Version 2 (eager layout): header line, then each queue line followed by
+//! *all* of its job lines, then churn. Replay requires materializing every
+//! queue. Version 3 (streaming layout): header carries `"v":3` and a
+//! `"chunk"` size; queue lines and churn come first, then job lines in
+//! round-robin chunks across queues, preserving per-queue order. A v3
+//! reader ([`trace::open_stream`]) replays with only `chunk × queues` jobs
+//! buffered. [`trace::from_jsonl`] accepts both versions eagerly;
+//! [`trace::write_stream`] records v3 without materializing.
+//!
+//! # Importer schemas
+//!
+//! [`import`] understands two public production trace formats:
+//!
+//! * **Google cluster-data** `task_events` CSV — columns time(µs), job id,
+//!   task index, event type, user, scheduling class, CPU and memory
+//!   request. SUBMIT events define arrival; FINISH/EVICT/FAIL/KILL/LOST
+//!   bound task durations.
+//! * **Alibaba cluster-trace** `batch_task` CSV — task name, instance
+//!   count, job name, task type, status, start/end seconds, planned CPU
+//!   (percent) and normalized memory.
+//!
+//! Jobs are bucketed into at most `max_queues` tenant classes by tag and
+//! demand, each class becoming one open queue whose role feeds per-class
+//! SLO reporting. Parsing is two-pass and streaming: the first pass
+//! aggregates class statistics, the second re-reads the file lazily as the
+//! simulation advances, so the full trace never resides in memory.
 
 pub mod arrival;
 pub mod churn;
+pub mod import;
 pub mod scenario;
+pub mod stream;
 pub mod templates;
 pub mod trace;
 
 pub use arrival::ArrivalProcess;
 pub use churn::{ChurnEvent, ChurnModel};
+pub use import::{ImportFormat, ImportOptions, ImportSpec, ImportStats};
 pub use scenario::{
     realize, scenario_config, JobRecipe, RealizedQueue, RealizedScenario, SCENARIO_NAMES,
 };
+pub use stream::{JobSource, QueueMeta, StreamedJob, WorkloadStream};

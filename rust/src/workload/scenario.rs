@@ -39,6 +39,11 @@ pub fn queue_stream(seed: u64, q: usize) -> Rng {
     Rng::new(seed).split(QUEUE_STREAM_BASE + q as u64)
 }
 
+/// The churn-realization stream under scenario seed `seed`.
+pub fn churn_stream(seed: u64) -> Rng {
+    Rng::new(seed).split(CHURN_STREAM)
+}
+
 /// Everything stochastic about one job, fixed at realization time: the
 /// first-attempt service time of each task, plus a private stream seed for
 /// any speculative re-attempts.
@@ -92,33 +97,15 @@ pub struct RealizedScenario {
 
 /// Realize `cfg`'s workload: sample every queue's arrivals and recipes from
 /// its own stream, and the churn schedule from the churn stream.
+///
+/// This is now a thin adapter over the streaming realizer
+/// ([`crate::workload::stream::WorkloadStream::sampled`]) — draining the
+/// lazy stream yields the identical draws, so eager callers (tests, small
+/// studies, v2 trace writing) keep their exact historical output.
 pub fn realize(cfg: &OnlineConfig, name: &str) -> RealizedScenario {
-    let queues = cfg
-        .queues
-        .iter()
-        .enumerate()
-        .map(|(q, qs)| {
-            let mut rng = queue_stream(cfg.seed, q);
-            let arrivals = qs.arrival.sample_times(qs.jobs, &mut rng);
-            let recipes = (0..qs.jobs).map(|_| JobRecipe::sample(&qs.workload, &mut rng)).collect();
-            RealizedQueue {
-                spec: qs.workload.clone(),
-                closed: qs.arrival.is_closed(),
-                weight: qs.weight,
-                arrivals,
-                recipes,
-            }
-        })
-        .collect();
-    let churn = cfg.churn.realize(cfg.cluster.len(), &mut Rng::new(cfg.seed).split(CHURN_STREAM));
-    RealizedScenario {
-        name: name.to_string(),
-        seed: cfg.seed,
-        agents: cfg.cluster.len(),
-        kinds: cfg.cluster.first().map(|s| s.capacity.len()).unwrap_or(2),
-        queues,
-        churn,
-    }
+    crate::workload::stream::WorkloadStream::sampled(cfg, name)
+        .realize_all()
+        .expect("sampled workload streams cannot fail")
 }
 
 /// Every scenario name accepted by `--scenario` and the CI smoke matrix.

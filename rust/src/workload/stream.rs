@@ -1,0 +1,456 @@
+//! Lazily-realized workload streams — scenario realization that yields
+//! jobs one at a time instead of materializing them up front.
+//!
+//! [`WorkloadStream`] is the streaming twin of
+//! [`RealizedScenario`]: per queue it carries a [`JobSource`] that yields
+//! [`StreamedJob`]s in submission order (arrival times ascending within a
+//! queue), so a million-job replay holds O(queues) workload state instead
+//! of O(jobs). Three source families exist:
+//!
+//! * [`SampledSource`] — live sampling. Arrivals come from the queue's
+//!   [`crate::workload::arrival::ArrivalIter`]; recipes come from a second
+//!   clone of the same per-queue stream fast-forwarded past all arrival
+//!   draws, so the lazily pulled sequence is **bit-identical** to the
+//!   eager batch realizer draw-for-draw (the common-random-numbers
+//!   guarantee survives: per-queue streams are still keyed by queue id
+//!   alone). `realize()` is now a thin adapter that drains this source.
+//! * [`BufferedSource`] — an already-materialized queue (eager
+//!   realization, v2 trace replay) served from memory.
+//! * [`DemuxSource`] — queues of a shared sequential [`JobFeed`] (a v3
+//!   trace file, a production-trace importer) demultiplexed with bounded
+//!   lookahead: pulling queue *q* buffers out-of-queue jobs until *q*'s
+//!   next job appears in file order. The peak buffer depth and the feed's
+//!   parse-error count are surfaced as stream counters.
+//!
+//! The simulator consumes only the stream form; `RealizedScenario` and the
+//! eager path survive as [`WorkloadStream::from_realized`] /
+//! [`WorkloadStream::realize_all`] adapters.
+
+use crate::error::{Error, Result};
+use crate::rng::Rng;
+use crate::sim::online::{OnlineConfig, QueueSpec};
+use crate::spark::workload::WorkloadSpec;
+use crate::workload::arrival::ArrivalIter;
+use crate::workload::churn::ChurnEvent;
+use crate::workload::scenario::{
+    churn_stream, queue_stream, JobRecipe, RealizedQueue, RealizedScenario,
+};
+use std::cell::RefCell;
+use std::collections::VecDeque;
+use std::rc::Rc;
+
+/// One job pulled from a stream: its submission-order index within its
+/// queue, its arrival time (`None` for closed queues — their arrivals are
+/// completion events) and its realized recipe.
+#[derive(Debug, Clone, PartialEq)]
+pub struct StreamedJob {
+    pub idx: usize,
+    pub t: Option<f64>,
+    pub recipe: JobRecipe,
+}
+
+/// Scheduling-relevant metadata of one streamed queue — everything the
+/// simulator needs besides the jobs themselves.
+#[derive(Debug, Clone)]
+pub struct QueueMeta {
+    /// The job template recipes were drawn from (or reconstructed for).
+    pub spec: WorkloadSpec,
+    /// Closed loop (completion-triggered submissions) vs open (timed).
+    pub closed: bool,
+    /// Fair-share weight φ of this queue's frameworks.
+    pub weight: f64,
+    /// Mesos role the queue's frameworks register in (fair shares
+    /// aggregate per role). Defaults to the workload kind's role; trace
+    /// imports give each tenant class its own role.
+    pub role: usize,
+    /// Tenant-class label for per-class SLO reporting — the workload
+    /// kind's label by default, the tenant tag for imported traces.
+    pub class: String,
+}
+
+impl QueueMeta {
+    /// Metadata with the kind-derived default role and class label.
+    pub fn of(spec: WorkloadSpec, closed: bool, weight: f64) -> QueueMeta {
+        let role = spec.kind.role();
+        let class = spec.kind.label().to_string();
+        QueueMeta { spec, closed, weight, role, class }
+    }
+}
+
+/// A queue's lazily-realized job sequence.
+pub trait JobSource {
+    /// Pull the next job in submission order (`None` when exhausted).
+    fn next_job(&mut self) -> Result<Option<StreamedJob>>;
+
+    /// Total jobs this source will yield, when known up front.
+    fn size_hint(&self) -> Option<usize> {
+        None
+    }
+}
+
+/// Live per-queue sampling, bit-identical to the eager batch realizer.
+pub struct SampledSource {
+    spec: WorkloadSpec,
+    jobs: usize,
+    closed: bool,
+    arrivals: ArrivalIter,
+    arrival_rng: Rng,
+    recipe_rng: Rng,
+    next: usize,
+}
+
+impl SampledSource {
+    /// Split queue `q`'s stream the way the batch realizer consumes it:
+    /// the arrival iterator replays the arrival draws incrementally, while
+    /// `recipe_rng` is a clone fast-forwarded past all `jobs` arrival
+    /// draws — exactly where the batch sampler's recipe draws begin.
+    pub fn new(qs: &QueueSpec, seed: u64, q: usize) -> SampledSource {
+        let mut arrival_rng = queue_stream(seed, q);
+        let mut recipe_rng = arrival_rng.clone();
+        qs.arrival.skip_times(qs.jobs, &mut recipe_rng);
+        let arrivals = qs.arrival.iter_times(&mut arrival_rng);
+        SampledSource {
+            spec: qs.workload.clone(),
+            jobs: qs.jobs,
+            closed: qs.arrival.is_closed(),
+            arrivals,
+            arrival_rng,
+            recipe_rng,
+            next: 0,
+        }
+    }
+}
+
+impl JobSource for SampledSource {
+    fn next_job(&mut self) -> Result<Option<StreamedJob>> {
+        if self.next >= self.jobs {
+            return Ok(None);
+        }
+        let t = if self.closed {
+            None
+        } else {
+            Some(
+                self.arrivals
+                    .next_time(&mut self.arrival_rng)
+                    .expect("open arrival iterators are infinite"),
+            )
+        };
+        let recipe = JobRecipe::sample(&self.spec, &mut self.recipe_rng);
+        let idx = self.next;
+        self.next += 1;
+        Ok(Some(StreamedJob { idx, t, recipe }))
+    }
+
+    fn size_hint(&self) -> Option<usize> {
+        Some(self.jobs)
+    }
+}
+
+/// An already-materialized queue served from memory (eager realization or
+/// v2 trace replay).
+pub struct BufferedSource {
+    jobs: VecDeque<StreamedJob>,
+    total: usize,
+}
+
+impl BufferedSource {
+    pub fn new(jobs: VecDeque<StreamedJob>) -> BufferedSource {
+        let total = jobs.len();
+        BufferedSource { jobs, total }
+    }
+}
+
+impl JobSource for BufferedSource {
+    fn next_job(&mut self) -> Result<Option<StreamedJob>> {
+        Ok(self.jobs.pop_front())
+    }
+
+    fn size_hint(&self) -> Option<usize> {
+        Some(self.total)
+    }
+}
+
+/// A shared sequential producer of `(queue, job)` items in file order —
+/// a v3 trace reader or a production-trace importer pass.
+pub trait JobFeed {
+    /// The next item in file order (`None` at end of input).
+    fn next_item(&mut self) -> Result<Option<(usize, StreamedJob)>>;
+
+    /// Input rows skipped or repaired so far (importer counters).
+    fn parse_errors(&self) -> u64 {
+        0
+    }
+}
+
+/// Demultiplexes a [`JobFeed`] into per-queue sources with bounded
+/// lookahead: pulling queue `q` advances the feed, buffering jobs destined
+/// for other queues until their sources pull them.
+pub struct Demux {
+    feed: Box<dyn JobFeed>,
+    buffers: Vec<VecDeque<StreamedJob>>,
+    exhausted: bool,
+    buffered_now: usize,
+    /// High-water mark of jobs buffered across all queues — the stream's
+    /// realized lookahead depth.
+    pub max_buffered: usize,
+}
+
+impl Demux {
+    pub fn new(feed: Box<dyn JobFeed>, n_queues: usize) -> Rc<RefCell<Demux>> {
+        Rc::new(RefCell::new(Demux {
+            feed,
+            buffers: (0..n_queues).map(|_| VecDeque::new()).collect(),
+            exhausted: false,
+            buffered_now: 0,
+            max_buffered: 0,
+        }))
+    }
+
+    /// Parse-error count of the underlying feed.
+    pub fn parse_errors(&self) -> u64 {
+        self.feed.parse_errors()
+    }
+
+    fn pull_for(&mut self, q: usize) -> Result<Option<StreamedJob>> {
+        if let Some(j) = self.buffers[q].pop_front() {
+            self.buffered_now -= 1;
+            return Ok(Some(j));
+        }
+        while !self.exhausted {
+            match self.feed.next_item()? {
+                None => self.exhausted = true,
+                Some((dest, job)) => {
+                    if dest >= self.buffers.len() {
+                        return Err(Error::Config(format!(
+                            "stream item addresses queue {dest} but the stream has {} queues",
+                            self.buffers.len()
+                        )));
+                    }
+                    if dest == q {
+                        return Ok(Some(job));
+                    }
+                    self.buffers[dest].push_back(job);
+                    self.buffered_now += 1;
+                    self.max_buffered = self.max_buffered.max(self.buffered_now);
+                }
+            }
+        }
+        Ok(None)
+    }
+}
+
+/// One queue's view of a shared [`Demux`].
+pub struct DemuxSource {
+    demux: Rc<RefCell<Demux>>,
+    queue: usize,
+    total: Option<usize>,
+}
+
+impl DemuxSource {
+    pub fn new(demux: Rc<RefCell<Demux>>, queue: usize, total: Option<usize>) -> DemuxSource {
+        DemuxSource { demux, queue, total }
+    }
+}
+
+impl JobSource for DemuxSource {
+    fn next_job(&mut self) -> Result<Option<StreamedJob>> {
+        self.demux.borrow_mut().pull_for(self.queue)
+    }
+
+    fn size_hint(&self) -> Option<usize> {
+        self.total
+    }
+}
+
+/// One queue of a workload stream: metadata plus its lazy job sequence.
+pub struct QueueStream {
+    pub meta: QueueMeta,
+    pub source: Box<dyn JobSource>,
+}
+
+/// The streaming form of a scenario: what the simulator pulls jobs from.
+/// Churn stays eagerly realized — its schedule is O(agents), not O(jobs).
+pub struct WorkloadStream {
+    pub name: String,
+    pub seed: u64,
+    /// Cluster size the stream was realized for (replay guard).
+    pub agents: usize,
+    /// Resource kinds (`r`) of the realizing cluster.
+    pub kinds: usize,
+    /// `true` for production-trace imports, whose queue set comes from the
+    /// trace rather than the configuration.
+    pub imported: bool,
+    pub queues: Vec<QueueStream>,
+    pub churn: Vec<ChurnEvent>,
+    /// Shared demux behind [`DemuxSource`] queues (file/import streams) —
+    /// kept here so lookahead/parse counters survive the run.
+    pub demux: Option<Rc<RefCell<Demux>>>,
+}
+
+impl WorkloadStream {
+    /// The live-sampled stream of `cfg`'s workload — the streaming twin of
+    /// the eager realizer, bit-identical draw-for-draw.
+    pub fn sampled(cfg: &OnlineConfig, name: &str) -> WorkloadStream {
+        let queues = cfg
+            .queues
+            .iter()
+            .enumerate()
+            .map(|(q, qs)| QueueStream {
+                meta: QueueMeta::of(qs.workload.clone(), qs.arrival.is_closed(), qs.weight),
+                source: Box::new(SampledSource::new(qs, cfg.seed, q)),
+            })
+            .collect();
+        let churn = cfg.churn.realize(cfg.cluster.len(), &mut churn_stream(cfg.seed));
+        WorkloadStream {
+            name: name.to_string(),
+            seed: cfg.seed,
+            agents: cfg.cluster.len(),
+            kinds: cfg.cluster.first().map(|s| s.capacity.len()).unwrap_or(2),
+            imported: false,
+            queues,
+            churn,
+            demux: None,
+        }
+    }
+
+    /// Adapt an already-materialized scenario (v2 replay, tests) into the
+    /// stream form the simulator consumes.
+    pub fn from_realized(sc: RealizedScenario) -> WorkloadStream {
+        let queues = sc
+            .queues
+            .into_iter()
+            .map(|rq| {
+                let meta = QueueMeta::of(rq.spec, rq.closed, rq.weight);
+                let arrivals = rq.arrivals;
+                let jobs: VecDeque<StreamedJob> = rq
+                    .recipes
+                    .into_iter()
+                    .enumerate()
+                    .map(|(idx, recipe)| StreamedJob {
+                        idx,
+                        t: if meta.closed { None } else { arrivals.get(idx).copied() },
+                        recipe,
+                    })
+                    .collect();
+                QueueStream { meta, source: Box::new(BufferedSource::new(jobs)) }
+            })
+            .collect();
+        WorkloadStream {
+            name: sc.name,
+            seed: sc.seed,
+            agents: sc.agents,
+            kinds: sc.kinds,
+            imported: false,
+            queues,
+            churn: sc.churn,
+            demux: None,
+        }
+    }
+
+    /// Drain every queue into the eager form (the legacy `realize()` path
+    /// and the record writer's materializing fallback).
+    pub fn realize_all(self) -> Result<RealizedScenario> {
+        let WorkloadStream { name, seed, agents, kinds, mut queues, churn, .. } = self;
+        let mut realized = Vec::with_capacity(queues.len());
+        for qs in &mut queues {
+            let mut arrivals = Vec::new();
+            let mut recipes = Vec::new();
+            while let Some(j) = qs.source.next_job()? {
+                if let Some(t) = j.t {
+                    arrivals.push(t);
+                }
+                recipes.push(j.recipe);
+            }
+            realized.push(RealizedQueue {
+                spec: qs.meta.spec.clone(),
+                closed: qs.meta.closed,
+                weight: qs.meta.weight,
+                arrivals,
+                recipes,
+            });
+        }
+        Ok(RealizedScenario { name, seed, agents, kinds, queues: realized, churn })
+    }
+
+    /// `(peak lookahead depth, parse errors)` of the shared demux — zero
+    /// for sampled/buffered streams, which need no lookahead.
+    pub fn stream_counters(&self) -> (usize, u64) {
+        match &self.demux {
+            Some(d) => {
+                let d = d.borrow();
+                (d.max_buffered, d.parse_errors())
+            }
+            None => (0, 0),
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::mesos::AllocatorMode;
+    use crate::workload::scenario::{realize, scenario_config};
+
+    #[test]
+    fn sampled_stream_drains_to_the_eager_realization() {
+        for name in crate::workload::scenario::SCENARIO_NAMES {
+            let cfg =
+                scenario_config(name, "drf", AllocatorMode::Characterized, Some(3), 0xA1).unwrap();
+            let eager = realize(&cfg, name);
+            let drained = WorkloadStream::sampled(&cfg, name).realize_all().unwrap();
+            assert_eq!(eager, drained, "{name}");
+        }
+    }
+
+    #[test]
+    fn from_realized_round_trips() {
+        let cfg =
+            scenario_config("poisson", "drf", AllocatorMode::Characterized, Some(4), 7).unwrap();
+        let eager = realize(&cfg, "poisson");
+        let back = WorkloadStream::from_realized(eager.clone()).realize_all().unwrap();
+        assert_eq!(eager, back);
+    }
+
+    struct ListFeed {
+        items: VecDeque<(usize, StreamedJob)>,
+    }
+
+    impl JobFeed for ListFeed {
+        fn next_item(&mut self) -> Result<Option<(usize, StreamedJob)>> {
+            Ok(self.items.pop_front())
+        }
+    }
+
+    fn job(idx: usize, t: f64) -> StreamedJob {
+        StreamedJob { idx, t: Some(t), recipe: JobRecipe { durations: vec![1.0], seed: 9 } }
+    }
+
+    #[test]
+    fn demux_preserves_per_queue_order_and_counts_lookahead() {
+        let items: VecDeque<(usize, StreamedJob)> = VecDeque::from(vec![
+            (1, job(0, 1.0)),
+            (0, job(0, 2.0)),
+            (1, job(1, 3.0)),
+            (0, job(1, 4.0)),
+        ]);
+        let demux = Demux::new(Box::new(ListFeed { items }), 2);
+        let mut q0 = DemuxSource::new(demux.clone(), 0, Some(2));
+        let mut q1 = DemuxSource::new(demux.clone(), 1, Some(2));
+        // pulling q0 first forces both q1 jobs into the buffer
+        assert_eq!(q0.next_job().unwrap().unwrap().idx, 0);
+        assert_eq!(q0.next_job().unwrap().unwrap().idx, 1);
+        assert_eq!(q1.next_job().unwrap().unwrap().idx, 0);
+        assert_eq!(q1.next_job().unwrap().unwrap().idx, 1);
+        assert!(q0.next_job().unwrap().is_none());
+        assert!(q1.next_job().unwrap().is_none());
+        assert_eq!(demux.borrow().max_buffered, 2);
+    }
+
+    #[test]
+    fn demux_rejects_out_of_range_queue() {
+        let items = VecDeque::from(vec![(5, job(0, 1.0))]);
+        let demux = Demux::new(Box::new(ListFeed { items }), 2);
+        let mut q0 = DemuxSource::new(demux, 0, None);
+        assert!(q0.next_job().is_err());
+    }
+}

@@ -1,6 +1,9 @@
-//! Scenario trace: JSONL serialization of a [`RealizedScenario`].
+//! Scenario trace: JSONL serialization of workloads, record and replay.
 //!
-//! One JSON object per line:
+//! One JSON object per line. Two layouts exist:
+//!
+//! **v2 (eager)** — header, then each queue line followed by *all* of its
+//! job lines, then churn. Replaying requires materializing every queue:
 //!
 //! ```text
 //! {"trace":"mesos-fair-scenario","v":2,"name":"poisson","seed":"0x5eed","agents":6,"r":2,"queues":6}
@@ -9,14 +12,25 @@
 //! {"ev":"churn","t":310.25,"agent":4,"up":false}
 //! ```
 //!
-//! The v2 header records the realizing cluster's `(agents, r)` dims and the
-//! scenario name/seed, so `--replay` validates a trace against the active
-//! configuration instead of silently replaying a mismatched one.
+//! **v3 (streaming)** — header (with `"chunk"` and `"import"`), then *all*
+//! queue lines, then churn, then job lines in round-robin chunks across
+//! queues with per-queue `idx` ascending. A reader needs only
+//! `chunk × queues` jobs of lookahead, so million-job traces replay at
+//! O(chunk) memory through [`open_stream`]. Imported traces additionally
+//! carry `"role"`/`"class"` per queue and `"import":true` in the header.
+//!
+//! [`from_jsonl`] accepts both versions eagerly (v3 import traces are
+//! directed to the streaming reader, since [`RealizedScenario`] cannot
+//! carry per-queue roles); [`write_stream`] records v3 without ever
+//! materializing a queue; [`to_jsonl`] remains the v2 writer for
+//! compatibility with previously recorded traces.
 //!
 //! Seeds are hex strings (JSON numbers are f64 and would corrupt 64-bit
 //! seeds); every f64 uses Rust's shortest-round-trip formatting, so
-//! `from_jsonl(to_jsonl(s)) == s` **bit-exactly** — the property the
-//! record→replay determinism tests build on.
+//! `from_jsonl(to_jsonl(s)) == s` **bit-exactly**, and re-serializing a
+//! streamed v3 trace with the same chunk size reproduces the file
+//! byte-for-byte — the properties the record→replay determinism tests
+//! build on.
 
 use crate::error::{Error, Result};
 use crate::metrics::json::Json;
@@ -24,9 +38,18 @@ use crate::resources::ResVec;
 use crate::spark::workload::{DurationModel, WorkloadKind, WorkloadSpec};
 use crate::workload::churn::ChurnEvent;
 use crate::workload::scenario::{JobRecipe, RealizedQueue, RealizedScenario};
+use crate::workload::stream::{
+    Demux, DemuxSource, JobFeed, QueueMeta, QueueStream, StreamedJob, WorkloadStream,
+};
+use std::fs::File;
+use std::io::{BufRead, BufReader, BufWriter, Lines, Write};
 
 const MAGIC: &str = "mesos-fair-scenario";
 const VERSION: f64 = 2.0;
+const VERSION_V3: f64 = 3.0;
+
+/// Jobs per queue per round in the v3 round-robin job section.
+pub const DEFAULT_CHUNK: usize = 256;
 
 fn hex(v: u64) -> Json {
     Json::Str(format!("{v:#x}"))
@@ -41,7 +64,7 @@ fn parse_hex(j: &Json, what: &str) -> Result<u64> {
         .map_err(|_| Error::Config(format!("trace: bad {what} '{s}'")))
 }
 
-fn spec_to_json(id: usize, closed: bool, weight: f64, spec: &WorkloadSpec) -> Json {
+fn spec_pairs(id: usize, closed: bool, weight: f64, spec: &WorkloadSpec) -> Vec<(&'static str, Json)> {
     let mut pairs = vec![
         ("ev", Json::Str("queue".into())),
         ("id", Json::Num(id as f64)),
@@ -65,7 +88,11 @@ fn spec_to_json(id: usize, closed: bool, weight: f64, spec: &WorkloadSpec) -> Js
             pairs.push(("cap", Json::Num(cap)));
         }
     }
-    Json::obj(pairs)
+    pairs
+}
+
+fn spec_to_json(id: usize, closed: bool, weight: f64, spec: &WorkloadSpec) -> Json {
+    Json::obj(spec_pairs(id, closed, weight, spec))
 }
 
 fn num(j: &Json, key: &str) -> Result<f64> {
@@ -108,7 +135,41 @@ fn spec_from_json(j: &Json) -> Result<WorkloadSpec> {
     })
 }
 
-/// Serialize a realized scenario to JSONL.
+fn job_to_json(queue: usize, job: &StreamedJob) -> Json {
+    let mut pairs = vec![
+        ("ev", Json::Str("job".into())),
+        ("queue", Json::Num(queue as f64)),
+        ("idx", Json::Num(job.idx as f64)),
+    ];
+    if let Some(t) = job.t {
+        pairs.push(("t", Json::Num(t)));
+    }
+    pairs.push(("seed", hex(job.recipe.seed)));
+    pairs.push(("durations", Json::arr_f64(&job.recipe.durations)));
+    Json::obj(pairs)
+}
+
+fn churn_to_json(e: &ChurnEvent) -> Json {
+    Json::obj(vec![
+        ("ev", Json::Str("churn".into())),
+        ("t", Json::Num(e.t)),
+        ("agent", Json::Num(e.agent as f64)),
+        ("up", Json::Bool(e.up)),
+    ])
+}
+
+fn churn_from_json(j: &Json) -> Result<ChurnEvent> {
+    Ok(ChurnEvent {
+        t: num(j, "t")?,
+        agent: num(j, "agent")? as usize,
+        up: j
+            .get("up")
+            .and_then(|v| v.as_bool())
+            .ok_or_else(|| Error::Config("trace: churn missing 'up'".into()))?,
+    })
+}
+
+/// Serialize a realized scenario to v2 JSONL (the eager layout).
 pub fn to_jsonl(sc: &RealizedScenario) -> String {
     let mut out = String::new();
     out.push_str(
@@ -143,34 +204,132 @@ pub fn to_jsonl(sc: &RealizedScenario) -> String {
         }
     }
     for e in &sc.churn {
-        out.push_str(
-            &Json::obj(vec![
-                ("ev", Json::Str("churn".into())),
-                ("t", Json::Num(e.t)),
-                ("agent", Json::Num(e.agent as f64)),
-                ("up", Json::Bool(e.up)),
-            ])
-            .render(),
-        );
+        out.push_str(&churn_to_json(e).render());
         out.push('\n');
     }
     out
 }
 
-/// Parse a JSONL scenario trace.
-pub fn from_jsonl(text: &str) -> Result<RealizedScenario> {
-    let mut lines = text.lines().filter(|l| !l.trim().is_empty());
-    let header = Json::parse(
-        lines.next().ok_or_else(|| Error::Config("trace: empty file".into()))?,
-    )?;
+/// Record a workload stream as v3 JSONL, draining it queue-by-queue in
+/// `chunk`-sized round-robin slices — nothing is materialized, so a
+/// million-job stream records at O(chunk) memory. Re-serializing a
+/// [`open_stream`]-read trace with the same chunk reproduces the bytes.
+pub fn write_stream(
+    mut stream: WorkloadStream,
+    out: &mut dyn Write,
+    chunk: usize,
+) -> Result<()> {
+    let chunk = chunk.max(1);
+    let n = stream.queues.len();
+    let mut header = vec![
+        ("trace", Json::Str(MAGIC.into())),
+        ("v", Json::Num(VERSION_V3)),
+        ("name", Json::Str(stream.name.clone())),
+        ("seed", hex(stream.seed)),
+        ("agents", Json::Num(stream.agents as f64)),
+        ("r", Json::Num(stream.kinds as f64)),
+        ("queues", Json::Num(n as f64)),
+        ("chunk", Json::Num(chunk as f64)),
+    ];
+    if stream.imported {
+        header.push(("import", Json::Bool(true)));
+    }
+    writeln!(out, "{}", Json::obj(header).render()).map_err(Error::Io)?;
+    for (id, qs) in stream.queues.iter().enumerate() {
+        let mut pairs = spec_pairs(id, qs.meta.closed, qs.meta.weight, &qs.meta.spec);
+        if qs.meta.role != qs.meta.spec.kind.role() {
+            pairs.push(("role", Json::Num(qs.meta.role as f64)));
+        }
+        if qs.meta.class != qs.meta.spec.kind.label() {
+            pairs.push(("class", Json::Str(qs.meta.class.clone())));
+        }
+        if let Some(total) = qs.source.size_hint() {
+            pairs.push(("jobs", Json::Num(total as f64)));
+        }
+        writeln!(out, "{}", Json::obj(pairs).render()).map_err(Error::Io)?;
+    }
+    for e in &stream.churn {
+        writeln!(out, "{}", churn_to_json(e).render()).map_err(Error::Io)?;
+    }
+    let mut exhausted = vec![false; n];
+    while exhausted.iter().any(|e| !e) {
+        for q in 0..n {
+            if exhausted[q] {
+                continue;
+            }
+            for _ in 0..chunk {
+                match stream.queues[q].source.next_job()? {
+                    None => {
+                        exhausted[q] = true;
+                        break;
+                    }
+                    Some(job) => {
+                        writeln!(out, "{}", job_to_json(q, &job).render()).map_err(Error::Io)?;
+                    }
+                }
+            }
+        }
+    }
+    Ok(())
+}
+
+/// Record a workload stream to a v3 trace file (see [`write_stream`]).
+pub fn write_stream_file(stream: WorkloadStream, path: &str, chunk: usize) -> Result<()> {
+    let file = File::create(path)
+        .map_err(|e| Error::Config(format!("cannot write trace {path}: {e}")))?;
+    let mut out = BufWriter::new(file);
+    write_stream(stream, &mut out, chunk)?;
+    out.flush().map_err(Error::Io)
+}
+
+fn parse_header(line: &str) -> Result<Json> {
+    let header = Json::parse(line)?;
     if header.get("trace").and_then(|v| v.as_str()) != Some(MAGIC) {
         return Err(Error::Config("trace: not a mesos-fair scenario trace".into()));
     }
+    Ok(header)
+}
+
+/// Peek a trace file's format version (replay dispatch).
+pub fn file_version(path: &str) -> Result<u64> {
+    let file = File::open(path)
+        .map_err(|e| Error::Config(format!("cannot read trace {path}: {e}")))?;
+    let mut lines = BufReader::new(file).lines();
+    let first = loop {
+        match lines.next() {
+            None => return Err(Error::Config("trace: empty file".into())),
+            Some(line) => {
+                let line = line.map_err(Error::Io)?;
+                if !line.trim().is_empty() {
+                    break line;
+                }
+            }
+        }
+    };
+    let header = parse_header(&first)?;
+    Ok(num(&header, "v")? as u64)
+}
+
+/// Parse a JSONL scenario trace (v2 or v3) eagerly. Imported v3 traces
+/// carry per-queue roles a [`RealizedScenario`] cannot represent — replay
+/// those through [`open_stream`].
+pub fn from_jsonl(text: &str) -> Result<RealizedScenario> {
+    let mut lines = text.lines().filter(|l| !l.trim().is_empty());
+    let header =
+        parse_header(lines.next().ok_or_else(|| Error::Config("trace: empty file".into()))?)?;
     let version = num(&header, "v")?;
-    if version != VERSION {
+    if version != VERSION && version != VERSION_V3 {
         return Err(Error::Config(format!(
-            "trace: format version {version} is not supported (this build reads v{VERSION})"
+            "trace: format version {version} is not supported (this build reads v{VERSION} \
+             and v{VERSION_V3})"
         )));
+    }
+    if header.get("import").and_then(|v| v.as_bool()) == Some(true) {
+        return Err(Error::Config(
+            "trace: imported v3 traces carry per-queue tenant roles; replay them streamed \
+             (open_stream / --replay) instead of materializing"
+                .into(),
+        ));
     }
     let n_queues = num(&header, "queues")? as usize;
     let name = header.get("name").and_then(|v| v.as_str()).unwrap_or("replay").to_string();
@@ -226,7 +385,9 @@ pub fn from_jsonl(text: &str) -> Result<RealizedScenario> {
                         v.as_f64().ok_or_else(|| Error::Config("trace: bad duration".into()))
                     })
                     .collect::<Result<_>>()?;
-                if durations.len() != q.spec.tasks_per_job {
+                // v2 jobs always carry exactly the spec's task count; v3
+                // admits variable-task jobs (production imports)
+                if version == VERSION && durations.len() != q.spec.tasks_per_job {
                     return Err(Error::Config(format!(
                         "trace: queue {qid} job {idx} has {} durations but the spec declares \
                          {} tasks",
@@ -241,14 +402,7 @@ pub fn from_jsonl(text: &str) -> Result<RealizedScenario> {
                 )?;
                 q.recipes.push(JobRecipe { durations, seed });
             }
-            Some("churn") => churn.push(ChurnEvent {
-                t: num(&j, "t")?,
-                agent: num(&j, "agent")? as usize,
-                up: j
-                    .get("up")
-                    .and_then(|v| v.as_bool())
-                    .ok_or_else(|| Error::Config("trace: churn missing 'up'".into()))?,
-            }),
+            Some("churn") => churn.push(churn_from_json(&j)?),
             other => {
                 return Err(Error::Config(format!("trace: unknown event {other:?}")));
             }
@@ -262,13 +416,190 @@ pub fn from_jsonl(text: &str) -> Result<RealizedScenario> {
     Ok(RealizedScenario { name, seed, agents, kinds, queues, churn })
 }
 
-/// Write a scenario trace file.
+/// The job section of a v3 trace file as a [`JobFeed`].
+struct TraceFeed {
+    lines: Lines<BufReader<File>>,
+    /// The first job line, consumed while scanning past the queue/churn
+    /// prologue.
+    pending: Option<(usize, StreamedJob)>,
+    closed: Vec<bool>,
+    next_idx: Vec<usize>,
+}
+
+impl TraceFeed {
+    fn job_from_json(&self, j: &Json) -> Result<(usize, StreamedJob)> {
+        let qid = num(j, "queue")? as usize;
+        if qid >= self.closed.len() {
+            return Err(Error::Config(format!("trace: job queue {qid} out of range")));
+        }
+        let idx = num(j, "idx")? as usize;
+        let t = if self.closed[qid] { None } else { Some(num(j, "t")?) };
+        let durations: Vec<f64> = j
+            .get("durations")
+            .and_then(|v| v.as_arr())
+            .ok_or_else(|| Error::Config("trace: job missing durations".into()))?
+            .iter()
+            .map(|v| v.as_f64().ok_or_else(|| Error::Config("trace: bad duration".into())))
+            .collect::<Result<_>>()?;
+        let seed = parse_hex(
+            j.get("seed").ok_or_else(|| Error::Config("trace: job missing seed".into()))?,
+            "job seed",
+        )?;
+        Ok((qid, StreamedJob { idx, t, recipe: JobRecipe { durations, seed } }))
+    }
+
+    fn check(&mut self, item: (usize, StreamedJob)) -> Result<(usize, StreamedJob)> {
+        let (q, job) = item;
+        if job.idx != self.next_idx[q] {
+            return Err(Error::Config(format!(
+                "trace: queue {q} job idx {} out of order (expected {})",
+                job.idx, self.next_idx[q]
+            )));
+        }
+        self.next_idx[q] += 1;
+        Ok((q, job))
+    }
+}
+
+impl JobFeed for TraceFeed {
+    fn next_item(&mut self) -> Result<Option<(usize, StreamedJob)>> {
+        if let Some(item) = self.pending.take() {
+            return self.check(item).map(Some);
+        }
+        for line in self.lines.by_ref() {
+            let line = line.map_err(Error::Io)?;
+            if line.trim().is_empty() {
+                continue;
+            }
+            let j = Json::parse(&line)?;
+            match j.get("ev").and_then(|v| v.as_str()) {
+                Some("job") => {
+                    let item = self.job_from_json(&j)?;
+                    return self.check(item).map(Some);
+                }
+                other => {
+                    return Err(Error::Config(format!(
+                        "trace: unexpected event {other:?} in the v3 job section"
+                    )));
+                }
+            }
+        }
+        Ok(None)
+    }
+}
+
+/// Open a v3 trace as a lazily-replayed [`WorkloadStream`]: the prologue
+/// (header, queues, churn) is read eagerly, the job section streams on
+/// demand behind a [`Demux`] with bounded lookahead.
+pub fn open_stream(path: &str) -> Result<WorkloadStream> {
+    let file = File::open(path)
+        .map_err(|e| Error::Config(format!("cannot read trace {path}: {e}")))?;
+    let mut lines = BufReader::new(file).lines();
+    let first = loop {
+        match lines.next() {
+            None => return Err(Error::Config("trace: empty file".into())),
+            Some(line) => {
+                let line = line.map_err(Error::Io)?;
+                if !line.trim().is_empty() {
+                    break line;
+                }
+            }
+        }
+    };
+    let header = parse_header(&first)?;
+    let version = num(&header, "v")?;
+    if version != VERSION_V3 {
+        return Err(Error::Config(format!(
+            "trace: streaming replay reads v{VERSION_V3} traces; this file is v{version} \
+             (replay v2 traces eagerly via from_jsonl)"
+        )));
+    }
+    let n_queues = num(&header, "queues")? as usize;
+    let name = header.get("name").and_then(|v| v.as_str()).unwrap_or("replay").to_string();
+    let seed = parse_hex(
+        header.get("seed").ok_or_else(|| Error::Config("trace: header missing seed".into()))?,
+        "seed",
+    )?;
+    let agents = num(&header, "agents")? as usize;
+    let kinds = num(&header, "r")? as usize;
+    let imported = header.get("import").and_then(|v| v.as_bool()) == Some(true);
+
+    // prologue: queue metadata and churn precede every job line
+    let mut metas: Vec<Option<(QueueMeta, Option<usize>)>> = vec![None; n_queues];
+    let mut churn: Vec<ChurnEvent> = Vec::new();
+    let mut first_job: Option<Json> = None;
+    for line in lines.by_ref() {
+        let line = line.map_err(Error::Io)?;
+        if line.trim().is_empty() {
+            continue;
+        }
+        let j = Json::parse(&line)?;
+        match j.get("ev").and_then(|v| v.as_str()) {
+            Some("queue") => {
+                let id = num(&j, "id")? as usize;
+                if id >= n_queues {
+                    return Err(Error::Config(format!("trace: queue id {id} out of range")));
+                }
+                let spec = spec_from_json(&j)?;
+                let closed = j.get("closed").and_then(|v| v.as_bool()).unwrap_or(true);
+                let weight = j.get("weight").and_then(|v| v.as_f64()).unwrap_or(1.0);
+                let role = j
+                    .get("role")
+                    .and_then(|v| v.as_f64())
+                    .map(|r| r as usize)
+                    .unwrap_or_else(|| spec.kind.role());
+                let class = j
+                    .get("class")
+                    .and_then(|v| v.as_str())
+                    .unwrap_or(spec.kind.label())
+                    .to_string();
+                let total = j.get("jobs").and_then(|v| v.as_f64()).map(|n| n as usize);
+                metas[id] = Some((QueueMeta { spec, closed, weight, role, class }, total));
+            }
+            Some("churn") => churn.push(churn_from_json(&j)?),
+            Some("job") => {
+                first_job = Some(j);
+                break;
+            }
+            other => {
+                return Err(Error::Config(format!("trace: unknown event {other:?}")));
+            }
+        }
+    }
+    let metas: Vec<(QueueMeta, Option<usize>)> = metas
+        .into_iter()
+        .enumerate()
+        .map(|(i, m)| m.ok_or_else(|| Error::Config(format!("trace: queue {i} missing"))))
+        .collect::<Result<_>>()?;
+    let mut feed = TraceFeed {
+        lines,
+        pending: None,
+        closed: metas.iter().map(|(m, _)| m.closed).collect(),
+        next_idx: vec![0; n_queues],
+    };
+    if let Some(j) = first_job {
+        let item = feed.job_from_json(&j)?;
+        feed.pending = Some(item);
+    }
+    let demux = Demux::new(Box::new(feed), n_queues);
+    let queues: Vec<QueueStream> = metas
+        .into_iter()
+        .enumerate()
+        .map(|(q, (meta, total))| QueueStream {
+            meta,
+            source: Box::new(DemuxSource::new(demux.clone(), q, total)),
+        })
+        .collect();
+    Ok(WorkloadStream { name, seed, agents, kinds, imported, queues, churn, demux: Some(demux) })
+}
+
+/// Write a scenario trace file (v2, eager layout).
 pub fn write_file(sc: &RealizedScenario, path: &str) -> Result<()> {
     std::fs::write(path, to_jsonl(sc))
         .map_err(|e| Error::Config(format!("cannot write trace {path}: {e}")))
 }
 
-/// Read a scenario trace file.
+/// Read a scenario trace file eagerly (v2 or non-imported v3).
 pub fn read_file(path: &str) -> Result<RealizedScenario> {
     let text = std::fs::read_to_string(path)
         .map_err(|e| Error::Config(format!("cannot read trace {path}: {e}")))?;
@@ -293,6 +624,88 @@ mod tests {
             // serialization is itself deterministic
             assert_eq!(text, to_jsonl(&back), "{name}");
         }
+    }
+
+    #[test]
+    fn v3_stream_round_trips_against_the_eager_form() {
+        for name in SCENARIO_NAMES {
+            let cfg = scenario_config(name, "drf", AllocatorMode::Characterized, Some(2), 0xC3)
+                .unwrap();
+            let eager = realize(&cfg, name);
+            let mut buf: Vec<u8> = Vec::new();
+            write_stream(WorkloadStream::sampled(&cfg, name), &mut buf, 2).unwrap();
+            let text = String::from_utf8(buf).unwrap();
+            let back = from_jsonl(&text).unwrap();
+            assert_eq!(eager, back, "{name}");
+        }
+    }
+
+    #[test]
+    fn v3_file_streams_and_reserializes_byte_identically() {
+        let cfg =
+            scenario_config("poisson", "drf", AllocatorMode::Characterized, Some(3), 0xD4).unwrap();
+        let path = std::env::temp_dir().join("mesos-fair-v3-roundtrip.jsonl");
+        let path = path.to_string_lossy().into_owned();
+        write_stream_file(WorkloadStream::sampled(&cfg, "poisson"), &path, 2).unwrap();
+        assert_eq!(file_version(&path).unwrap(), 3);
+        // streamed replay drains to the eager realization
+        let streamed = open_stream(&path).unwrap();
+        assert_eq!(streamed.realize_all().unwrap(), realize(&cfg, "poisson"));
+        // recording while replaying reproduces the file byte-for-byte
+        let original = std::fs::read_to_string(&path).unwrap();
+        let mut buf: Vec<u8> = Vec::new();
+        write_stream(open_stream(&path).unwrap(), &mut buf, 2).unwrap();
+        assert_eq!(original, String::from_utf8(buf).unwrap());
+    }
+
+    #[test]
+    fn v3_job_chunks_interleave_across_queues() {
+        let cfg =
+            scenario_config("poisson", "drf", AllocatorMode::Characterized, Some(4), 0xE5).unwrap();
+        let mut buf: Vec<u8> = Vec::new();
+        write_stream(WorkloadStream::sampled(&cfg, "poisson"), &mut buf, 1).unwrap();
+        let text = String::from_utf8(buf).unwrap();
+        let job_queues: Vec<usize> = text
+            .lines()
+            .filter_map(|l| {
+                let j = Json::parse(l).ok()?;
+                if j.get("ev")?.as_str()? == "job" {
+                    Some(j.get("queue")?.as_f64()? as usize)
+                } else {
+                    None
+                }
+            })
+            .collect();
+        // chunk=1 round-robin: the first |queues| job lines hit distinct queues
+        let n = cfg.queues.len();
+        assert!(job_queues.len() >= n);
+        let first: std::collections::BTreeSet<usize> =
+            job_queues.iter().take(n).copied().collect();
+        assert_eq!(first.len(), n, "round-robin chunks must interleave queues");
+    }
+
+    #[test]
+    fn v3_out_of_order_job_rejected_by_stream_reader() {
+        let cfg =
+            scenario_config("poisson", "drf", AllocatorMode::Characterized, Some(2), 3).unwrap();
+        let mut buf: Vec<u8> = Vec::new();
+        write_stream(WorkloadStream::sampled(&cfg, "poisson"), &mut buf, 2).unwrap();
+        let tampered: String = String::from_utf8(buf)
+            .unwrap()
+            .lines()
+            .map(|l| {
+                if l.contains("\"ev\":\"job\"") && l.contains("\"idx\":1") {
+                    l.replace("\"idx\":1", "\"idx\":7")
+                } else {
+                    l.to_string()
+                }
+            })
+            .collect::<Vec<_>>()
+            .join("\n");
+        let path = std::env::temp_dir().join("mesos-fair-v3-tampered.jsonl");
+        std::fs::write(&path, tampered).unwrap();
+        let stream = open_stream(&path.to_string_lossy()).unwrap();
+        assert!(stream.realize_all().is_err(), "idx gaps must not replay silently");
     }
 
     #[test]
@@ -342,12 +755,18 @@ mod tests {
         assert!(from_jsonl("{\"trace\":\"other\"}").is_err());
         // future format versions must be rejected, not mis-parsed
         assert!(from_jsonl(
-            "{\"trace\":\"mesos-fair-scenario\",\"v\":3,\"name\":\"x\",\"seed\":\"0x1\",\"queues\":0}"
+            "{\"trace\":\"mesos-fair-scenario\",\"v\":4,\"name\":\"x\",\"seed\":\"0x1\",\"queues\":0}"
         )
         .is_err());
         // v1 traces lack the (agents, r) dims this build validates against
         assert!(from_jsonl(
             "{\"trace\":\"mesos-fair-scenario\",\"v\":1,\"name\":\"x\",\"seed\":\"0x1\",\"queues\":0}"
+        )
+        .is_err());
+        // imported v3 traces cannot be materialized (tenant roles)
+        assert!(from_jsonl(
+            "{\"trace\":\"mesos-fair-scenario\",\"v\":3,\"name\":\"x\",\"seed\":\"0x1\",\
+             \"agents\":6,\"r\":2,\"queues\":0,\"chunk\":256,\"import\":true}"
         )
         .is_err());
         let cfg =

@@ -1,0 +1,180 @@
+//! Streaming-pipeline integration tests: the lazily-realized workload
+//! stream drives the simulator bit-identically to the eager realizer for
+//! every named scenario, v2 traces still replay, v3 traces stream with
+//! bounded lookahead and re-record byte-identically, and the
+//! production-trace importers round-trip through the v3 writer.
+
+use mesos_fair::mesos::AllocatorMode;
+use mesos_fair::scheduler::POLICY_NAMES;
+use mesos_fair::sim::online::{OnlineConfig, OnlineResult, OnlineSim};
+use mesos_fair::testing::{forall, smoke_scenario};
+use mesos_fair::workload::{
+    import::import_stream, realize, trace, ImportFormat, ImportSpec, WorkloadStream,
+    SCENARIO_NAMES,
+};
+
+const GOOGLE_FIXTURE: &str =
+    concat!(env!("CARGO_MANIFEST_DIR"), "/tests/data/google_task_events.csv");
+const ALIBABA_FIXTURE: &str =
+    concat!(env!("CARGO_MANIFEST_DIR"), "/tests/data/alibaba_batch_task.csv");
+
+/// Bit-exact equality of the observable outcome of two runs.
+fn assert_identical(a: &OnlineResult, b: &OnlineResult, ctx: &str) {
+    assert_eq!(a.jobs_completed, b.jobs_completed, "{ctx}: jobs");
+    assert_eq!(a.makespan, b.makespan, "{ctx}: makespan");
+    assert_eq!(a.grants, b.grants, "{ctx}: grants");
+    assert_eq!(a.trace.completions, b.trace.completions, "{ctx}: completion marks");
+    assert_eq!(a.trace.cpu.values(), b.trace.cpu.values(), "{ctx}: cpu series");
+    assert_eq!(a.trace.mem.values(), b.trace.mem.values(), "{ctx}: mem series");
+    assert_eq!(a.completion, b.completion, "{ctx}: completion stats");
+    assert_eq!(a.slowdown, b.slowdown, "{ctx}: slowdown stats");
+    assert_eq!(a.class_slowdown, b.class_slowdown, "{ctx}: per-class stats");
+}
+
+fn tmp(name: &str) -> String {
+    std::env::temp_dir().join(name).to_string_lossy().into_owned()
+}
+
+#[test]
+fn lazy_stream_runs_identically_to_eager_for_every_scenario() {
+    for name in SCENARIO_NAMES {
+        for policy in ["drf", "rpsdsf"] {
+            let cfg = smoke_scenario(name, policy, 0xFEED).unwrap();
+            let eager =
+                OnlineSim::with_scenario(cfg.clone(), realize(&cfg, name)).unwrap().run().unwrap();
+            let lazy = OnlineSim::with_stream(cfg.clone(), WorkloadStream::sampled(&cfg, name))
+                .unwrap()
+                .run()
+                .unwrap();
+            assert_identical(&eager, &lazy, &format!("{name}/{policy}"));
+        }
+    }
+}
+
+#[test]
+fn prop_lazy_eager_equivalence_across_policies_and_seeds() {
+    forall(
+        0x57_AEA1,
+        8,
+        |rng| {
+            (
+                SCENARIO_NAMES[rng.index(SCENARIO_NAMES.len())],
+                POLICY_NAMES[rng.index(POLICY_NAMES.len())],
+                rng.next_u64(),
+            )
+        },
+        |&(name, policy, seed)| {
+            let cfg = smoke_scenario(name, policy, seed).map_err(|e| e.to_string())?;
+            let eager = OnlineSim::with_scenario(cfg.clone(), realize(&cfg, name))
+                .map_err(|e| e.to_string())?
+                .run()
+                .map_err(|e| e.to_string())?;
+            let lazy = OnlineSim::with_stream(cfg.clone(), WorkloadStream::sampled(&cfg, name))
+                .map_err(|e| e.to_string())?
+                .run()
+                .map_err(|e| e.to_string())?;
+            if eager.makespan != lazy.makespan
+                || eager.grants != lazy.grants
+                || eager.trace.completions != lazy.trace.completions
+                || eager.slowdown != lazy.slowdown
+            {
+                return Err(format!("lazy/eager diverged for {name}/{policy}"));
+            }
+            Ok(())
+        },
+    );
+}
+
+#[test]
+fn v2_trace_replay_matches_the_streaming_run() {
+    // backward compat: a v2 (eager-layout) trace still replays, and the
+    // replayed run equals the lazily-streamed one
+    for name in ["poisson", "churn"] {
+        let cfg = smoke_scenario(name, "drf", 0xB2).unwrap();
+        let text = trace::to_jsonl(&realize(&cfg, name)); // v2 writer
+        let replayed = trace::from_jsonl(&text).unwrap();
+        let v2 = OnlineSim::with_scenario(cfg.clone(), replayed).unwrap().run().unwrap();
+        let lazy = OnlineSim::with_stream(cfg.clone(), WorkloadStream::sampled(&cfg, name))
+            .unwrap()
+            .run()
+            .unwrap();
+        assert_identical(&v2, &lazy, name);
+    }
+}
+
+#[test]
+fn v3_trace_records_streams_and_rerecords_byte_identically() {
+    let name = "bursty";
+    let cfg = smoke_scenario(name, "psdsf", 0xC3).unwrap();
+    let p1 = tmp("mesos-fair-streaming-v3-a.jsonl");
+    let p2 = tmp("mesos-fair-streaming-v3-b.jsonl");
+    trace::write_stream_file(WorkloadStream::sampled(&cfg, name), &p1, 4).unwrap();
+    assert_eq!(trace::file_version(&p1).unwrap(), 3);
+    let replayed =
+        OnlineSim::with_stream(cfg.clone(), trace::open_stream(&p1).unwrap()).unwrap().run().unwrap();
+    let live = OnlineSim::with_stream(cfg.clone(), WorkloadStream::sampled(&cfg, name))
+        .unwrap()
+        .run()
+        .unwrap();
+    assert_identical(&live, &replayed, "v3 replay");
+    // re-recording the replayed stream reproduces the file byte-for-byte
+    trace::write_stream_file(trace::open_stream(&p1).unwrap(), &p2, 4).unwrap();
+    assert_eq!(std::fs::read(&p1).unwrap(), std::fs::read(&p2).unwrap());
+}
+
+#[test]
+fn google_fixture_imports_classifies_and_streams() {
+    let cfg = OnlineConfig::small("drf", AllocatorMode::Characterized);
+    let spec = ImportSpec::new(GOOGLE_FIXTURE, ImportFormat::Google);
+    let (stream, stats) = import_stream(&spec, &cfg).unwrap();
+    assert_eq!(stats.jobs, 12);
+    assert_eq!(stats.kept_jobs, 12);
+    assert_eq!(stats.queues, 3);
+    assert_eq!(stats.parse_errors, 2, "both malformed fixture rows counted");
+    assert!(stream.imported);
+    let r = OnlineSim::with_stream(cfg, stream).unwrap().run().unwrap();
+    assert_eq!(r.jobs_completed, 12);
+    assert_eq!(r.stream.jobs_streamed, 12);
+    assert_eq!(r.stream.parse_errors, 2);
+    // per-tenant-class SLO percentiles, sorted by class name
+    let classes: Vec<&str> = r.class_slowdown.iter().map(|(c, _)| c.as_str()).collect();
+    assert_eq!(classes, ["sc0", "sc1", "sc2"]);
+    let per_class_n: usize = r.class_slowdown.iter().map(|(_, d)| d.n).sum();
+    assert_eq!(per_class_n, 12);
+    for (class, d) in &r.class_slowdown {
+        assert!(d.p50 >= 1.0 - 1e-9, "{class}: slowdown under 1");
+        assert!(d.p99 >= d.p50, "{class}: quantiles ordered");
+    }
+}
+
+#[test]
+fn alibaba_fixture_imports_and_completes() {
+    let cfg = OnlineConfig::small("drf", AllocatorMode::Characterized);
+    let spec = ImportSpec::new(ALIBABA_FIXTURE, ImportFormat::Alibaba);
+    let (stream, stats) = import_stream(&spec, &cfg).unwrap();
+    assert_eq!(stats.jobs, 4);
+    assert_eq!(stats.queues, 2);
+    assert_eq!(stats.parse_errors, 1);
+    let r = OnlineSim::with_stream(cfg, stream).unwrap().run().unwrap();
+    assert_eq!(r.jobs_completed, 4);
+    assert_eq!(r.class_slowdown.len(), 2);
+}
+
+#[test]
+fn imported_trace_round_trips_through_the_v3_writer() {
+    let cfg = OnlineConfig::small("drf", AllocatorMode::Characterized);
+    let spec = ImportSpec::new(GOOGLE_FIXTURE, ImportFormat::Google);
+    let p1 = tmp("mesos-fair-import-a.jsonl");
+    let p2 = tmp("mesos-fair-import-b.jsonl");
+    let (stream, _) = import_stream(&spec, &cfg).unwrap();
+    trace::write_stream_file(stream, &p1, 2).unwrap();
+    let reopened = trace::open_stream(&p1).unwrap();
+    assert!(reopened.imported, "the v3 header keeps the import marker");
+    let replayed = OnlineSim::with_stream(cfg.clone(), reopened).unwrap().run().unwrap();
+    let (direct, _) = import_stream(&spec, &cfg).unwrap();
+    let live = OnlineSim::with_stream(cfg.clone(), direct).unwrap().run().unwrap();
+    assert_identical(&live, &replayed, "import replay");
+    // record-during-replay (the CI spot check) stays byte-identical
+    trace::write_stream_file(trace::open_stream(&p1).unwrap(), &p2, 2).unwrap();
+    assert_eq!(std::fs::read(&p1).unwrap(), std::fs::read(&p2).unwrap());
+}
