@@ -129,7 +129,8 @@ COMMON FLAGS:
     --scorer BACKEND       native|hlo                         [default: native]
     --config FILE          Online experiment TOML (see config/)
     --scenario NAME        Named scenario (see 'list'): batch-baseline|poisson|
-                           bursty|diurnal|heavy-tail|churn|mixed-bottleneck
+                           bursty|diurnal|heavy-tail|churn|revocation|
+                           preempt-deadline|mixed-bottleneck
     --record FILE          Write the scenario trace (v3 streaming JSONL) before
                            running; the run then replays it bit-exactly
     --replay FILE          Drive the run from a recorded scenario trace — v3
@@ -151,6 +152,11 @@ COMMON FLAGS:
     --tasks N              Override tasks-per-job on every queue
     --task-secs F          Override mean task seconds on every queue
     --max-executors N      Override max executors per job on every queue
+    --preempt P            Kill-based preemption for deadline-class jobs:
+                           off|priority|share                 [default: off]
+    --kill-rate R          Abrupt agent kills at R per up-second per agent
+                           (in-flight work lost and re-queued; agent 0 is
+                           sheltered so the cluster never empties)
     --obs [PATH|DIR]       Attach the scheduler flight recorder. online: bare
                            --obs prints the phase table; --obs PATH also spills
                            the decision trace (JSONL) + PATH.summary.json.

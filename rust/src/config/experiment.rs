@@ -12,6 +12,8 @@
 //! kernel = "batched"         # row-fill kernel: "scalar" | "batched" (default)
 //! obs = true                 # attach the flight recorder (default false);
 //!                            # grants are bit-identical either way
+//! preempt = "priority"       # kill-based preemption for deadline jobs:
+//!                            # "off" (default) | "priority" | "share"
 //!
 //! [cluster]
 //! servers = ["type-1", "type-2", "type-3"]   # or "trio-cpu"/"trio-mem"/"trio-io" (r=3)
@@ -21,6 +23,10 @@
 //!                            #   cpu-heavy-r3|mem-heavy-r3|io-heavy-r3|mixed-r3
 //! jobs = 50
 //! weight = 2.0               # fair-share weight φ (default 1.0)
+//! deadline = 300.0           # optional SLO: complete within this many
+//!                            # seconds of submission (default: none)
+//! priority = 10              # preemption priority (default 0); only
+//!                            # strictly lower priorities can be victims
 //! tasks_per_job = 16         # optional overrides…
 //! max_executors = 4
 //! mean_task_secs = 4.0
@@ -37,11 +43,14 @@
 //! mean_up = 400.0
 //! mean_down = 90.0
 //! horizon = 4000.0
+//! kill = true                # downs are abrupt kills (in-flight work
+//!                            # lost + re-queued) instead of drains
 //!
 //! [[churn_event]]            # …or an explicit schedule
 //! time = 120.0
 //! agent = 5
 //! up = false
+//! kill = true                # optional: this down is a kill, not a drain
 //!
 //! [import]                   # optional: stream the workload from a
 //! path = "trace.csv"         # production trace instead of [[queue]]s
@@ -60,8 +69,9 @@ use crate::cluster::ServerType;
 use crate::config::toml::{TomlDoc, TomlTable};
 use crate::error::{Error, Result};
 use crate::mesos::AllocatorMode;
-use crate::scheduler::KernelKind;
+use crate::scheduler::{KernelKind, PreemptPolicy};
 use crate::sim::online::{OnlineConfig, QueueSpec};
+use crate::spark::job::JobClass;
 use crate::spark::workload::DurationModel;
 use crate::workload::arrival::ArrivalProcess;
 use crate::workload::churn::{ChurnEvent, ChurnModel};
@@ -170,6 +180,7 @@ fn churn(doc: &TomlDoc) -> Result<ChurnModel> {
                     .get("up")
                     .and_then(|v| v.as_bool())
                     .ok_or_else(|| Error::Config("churn_event missing 'up'".into()))?,
+                kill: t.get("kill").and_then(|v| v.as_bool()).unwrap_or(false),
             })
         })
         .collect::<Result<_>>()?;
@@ -178,11 +189,15 @@ fn churn(doc: &TomlDoc) -> Result<ChurnModel> {
     }
     if let Some(table) = doc.tables.get("churn") {
         if !table.is_empty() {
-            return Ok(ChurnModel::Flap {
-                min_up: table.get("min_up").and_then(|v| v.as_i64()).unwrap_or(1) as usize,
-                mean_up: table_f64(table, "mean_up").unwrap_or(300.0),
-                mean_down: table_f64(table, "mean_down").unwrap_or(60.0),
-                horizon: table_f64(table, "horizon").unwrap_or(3600.0),
+            let min_up = table.get("min_up").and_then(|v| v.as_i64()).unwrap_or(1) as usize;
+            let mean_up = table_f64(table, "mean_up").unwrap_or(300.0);
+            let mean_down = table_f64(table, "mean_down").unwrap_or(60.0);
+            let horizon = table_f64(table, "horizon").unwrap_or(3600.0);
+            let kill = table.get("kill").and_then(|v| v.as_bool()).unwrap_or(false);
+            return Ok(if kill {
+                ChurnModel::Kill { min_up, mean_up, mean_down, horizon }
+            } else {
+                ChurnModel::Flap { min_up, mean_up, mean_down, horizon }
             });
         }
     }
@@ -223,7 +238,22 @@ pub fn parse_online_config(text: &str) -> Result<OnlineConfig> {
                 "queue weight must be a positive number, got {weight}"
             )));
         }
-        cfg.queues.push(QueueSpec { workload: workload(q)?, jobs, arrival: arrival(q)?, weight });
+        let deadline = table_f64(q, "deadline");
+        if let Some(d) = deadline {
+            if !d.is_finite() || d <= 0.0 {
+                return Err(Error::Config(format!(
+                    "queue deadline must be a positive number, got {d}"
+                )));
+            }
+        }
+        let priority = q.get("priority").and_then(|v| v.as_i64()).unwrap_or(0) as i32;
+        cfg.queues.push(QueueSpec {
+            workload: workload(q)?,
+            jobs,
+            arrival: arrival(q)?,
+            weight,
+            class: JobClass::new(deadline, priority),
+        });
     }
     // [import]: stream the workload out of a production trace instead of
     // (or alongside nothing — the trace defines the queue set) [[queue]]s
@@ -313,6 +343,11 @@ pub fn parse_online_config(text: &str) -> Result<OnlineConfig> {
     }
     if let Some(v) = doc.get("experiment.obs").and_then(|v| v.as_bool()) {
         cfg.obs = v;
+    }
+    if let Some(v) = doc.get("experiment.preempt").and_then(|v| v.as_str()) {
+        cfg.preempt = PreemptPolicy::from_name(v).ok_or_else(|| {
+            Error::Config(format!("unknown preempt policy '{v}' (off|priority|share)"))
+        })?;
     }
     if let Some(v) = doc.get("experiment.staged").and_then(|v| v.as_bool()) {
         cfg.staged = v;
@@ -453,6 +488,58 @@ mod tests {
     }
 
     #[test]
+    fn parses_preemption_and_deadline_classes() {
+        let cfg = parse_online_config(
+            r#"
+            [experiment]
+            policy = "drf"
+            preempt = "priority"
+
+            [[queue]]
+            workload = "pi"
+            jobs = 4
+            deadline = 300.0
+            priority = 10
+
+            [[queue]]
+            workload = "wordcount"
+            jobs = 4
+
+            [churn]
+            min_up = 2
+            mean_up = 200.0
+            mean_down = 50.0
+            horizon = 1000.0
+            kill = true
+            "#,
+        )
+        .unwrap();
+        assert_eq!(cfg.preempt, Some(PreemptPolicy::Priority));
+        assert_eq!(cfg.queues[0].class, JobClass::new(Some(300.0), 10));
+        assert!(cfg.queues[1].class.is_default());
+        assert!(matches!(cfg.churn, ChurnModel::Kill { min_up: 2, .. }));
+
+        // "off" is explicit and valid; omitting the key also means off
+        let off = parse_online_config(
+            "[experiment]\npreempt = \"off\"\n[[queue]]\nworkload = \"pi\"",
+        )
+        .unwrap();
+        assert_eq!(off.preempt, None);
+        let default = parse_online_config("[[queue]]\nworkload = \"pi\"").unwrap();
+        assert_eq!(default.preempt, None);
+    }
+
+    #[test]
+    fn rejects_bad_preempt_and_deadline() {
+        assert!(parse_online_config(
+            "[experiment]\npreempt = \"oracle\"\n[[queue]]\nworkload = \"pi\""
+        )
+        .is_err());
+        assert!(parse_online_config("[[queue]]\nworkload = \"pi\"\ndeadline = 0.0").is_err());
+        assert!(parse_online_config("[[queue]]\nworkload = \"pi\"\ndeadline = -5.0").is_err());
+    }
+
+    #[test]
     fn scripted_churn_events_win() {
         let cfg = parse_online_config(
             r#"
@@ -469,14 +556,23 @@ mod tests {
             time = 150.0
             agent = 3
             up = true
+
+            [[churn_event]]
+            time = 200.0
+            agent = 4
+            up = false
+            kill = true
             "#,
         )
         .unwrap();
         match cfg.churn {
             ChurnModel::Scripted(evs) => {
-                assert_eq!(evs.len(), 2);
+                assert_eq!(evs.len(), 3);
                 assert_eq!(evs[0].agent, 3);
                 assert!(!evs[0].up);
+                assert!(!evs[0].kill, "kill defaults to false (drain)");
+                assert!(evs[2].kill, "explicit kill = true parsed");
+                assert!(!evs[2].up);
             }
             other => panic!("expected scripted churn, got {other:?}"),
         }

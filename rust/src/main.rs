@@ -11,11 +11,11 @@ use mesos_fair::exp::{run_figure, run_illustrative, FIGURE_IDS};
 use mesos_fair::mesos::AllocatorMode;
 use mesos_fair::metrics::json::Json;
 use mesos_fair::obs::{explain as obs_explain, report as obs_report, trace as obs_trace};
-use mesos_fair::scheduler::{KernelKind, NativeScorer, Scorer, POLICY_NAMES};
+use mesos_fair::scheduler::{KernelKind, NativeScorer, PreemptPolicy, Scorer, POLICY_NAMES};
 use mesos_fair::sim::online::{OnlineConfig, OnlineSim};
 use mesos_fair::workload::{
-    import::import_stream, scenario_config, trace as scenario_trace, ArrivalProcess, ImportFormat,
-    ImportSpec, WorkloadStream, SCENARIO_NAMES,
+    churn::ChurnModel, import::import_stream, scenario_config, trace as scenario_trace,
+    ArrivalProcess, ImportFormat, ImportSpec, WorkloadStream, SCENARIO_NAMES,
 };
 
 fn main() {
@@ -273,6 +273,20 @@ fn cmd_scenarios(args: &Args) -> Result<()> {
                 ("slowdown_p99", Json::Num(r.slowdown.p99)),
                 ("jobs_streamed", Json::Num(r.stream.jobs_streamed as f64)),
                 ("stream_lookahead", Json::Num(r.stream.max_lookahead as f64)),
+                // SLO columns: zero/NaN-free defaults when the scenario has
+                // no deadline classes or kills
+                (
+                    "deadline_miss_rate",
+                    Json::Num(if r.deadline_jobs > 0 {
+                        r.deadline_misses as f64 / r.deadline_jobs as f64
+                    } else {
+                        0.0
+                    }),
+                ),
+                ("tardiness_p99", Json::Num(if r.deadline_jobs > 0 { r.tardiness.p99 } else { 0.0 })),
+                ("revocations", Json::Num(r.revocations as f64)),
+                ("preemptions", Json::Num(r.preemptions as f64)),
+                ("reattempts", Json::Num(r.reattempts as f64)),
                 ("wall_seconds", Json::Num(wall)),
             ];
             if let Some(s) = &r.obs {
@@ -528,6 +542,26 @@ fn apply_stream_flags(args: &Args, cfg: &mut OnlineConfig) -> Result<()> {
             q.workload.max_executors = m;
         }
     }
+    if let Some(name) = args.flag("preempt") {
+        cfg.preempt = PreemptPolicy::from_name(name).ok_or_else(|| {
+            Error::Config(format!("unknown preempt policy '{name}' (off|priority|share)"))
+        })?;
+    }
+    if args.flag("kill-rate").is_some() {
+        // mean time between kills per flappable agent = 1/R; downs are
+        // abrupt (work lost + re-queued), agent 0 is sheltered so the
+        // cluster never empties
+        let rate = args.flag_f64("kill-rate", 0.0)?;
+        if rate <= 0.0 {
+            return Err(Error::Config("--kill-rate must be > 0".into()));
+        }
+        cfg.churn = ChurnModel::Kill {
+            min_up: 1,
+            mean_up: 1.0 / rate,
+            mean_down: 60.0,
+            horizon: 3600.0,
+        };
+    }
     Ok(())
 }
 
@@ -608,6 +642,25 @@ fn print_online(r: &mesos_fair::sim::online::OnlineResult) {
         println!(
             "class {class:9}: {:6} jobs  slowdown p50 {:.2}  p95 {:.2}  p99 {:.2}",
             d.n, d.p50, d.p95, d.p99
+        );
+    }
+    // SLO + revocation lines only appear when the run exercised them, so
+    // preemption-off output stays byte-identical to previous releases
+    if r.deadline_jobs > 0 {
+        println!(
+            "deadlines     : {}/{} missed ({:.1}%)  tardiness p50 {:.1}s  p99 {:.1}s  max {:.1}s",
+            r.deadline_misses,
+            r.deadline_jobs,
+            100.0 * r.deadline_misses as f64 / r.deadline_jobs as f64,
+            r.tardiness.p50,
+            r.tardiness.p99,
+            r.tardiness.max
+        );
+    }
+    if r.revocations > 0 || r.preemptions > 0 {
+        println!(
+            "revocations   : {} ({} by preemption)  task re-attempts {}",
+            r.revocations, r.preemptions, r.reattempts
         );
     }
     let s = &r.stream;

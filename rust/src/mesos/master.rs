@@ -288,6 +288,45 @@ impl Master {
         }
     }
 
+    /// Kill an agent (fault injection): deregisters like a drain — the
+    /// caller then revokes every executor still on it via
+    /// [`Master::revoke`], which works on deregistered agents the same way
+    /// releases do.
+    pub fn agent_killed(&mut self, agent: AgentId) {
+        self.state.agent_down(agent);
+        if let Some(rec) = &mut self.obs {
+            rec.record(ObsEvent::AgentDown { agent });
+        }
+    }
+
+    /// Revoke a framework's reservation on `agent` *without* a normal task
+    /// finish: unplace it (identically to [`Master::release`] — the
+    /// accounting does not care why resources came back) and record a
+    /// `Revoke` decision event so `explain` can show why the work died.
+    pub fn revoke(
+        &mut self,
+        framework: usize,
+        agent: AgentId,
+        amount: &ResVec,
+        count: f64,
+    ) -> Result<()> {
+        self.release(framework, agent, amount, count)?;
+        if let Some(rec) = &mut self.obs {
+            rec.record(ObsEvent::Revoke { framework, agent, count });
+        }
+        Ok(())
+    }
+
+    /// Record a preemption decision: `framework`'s executor on `agent` is
+    /// revoked in favor of starved deadline framework `by`. The revocation
+    /// accounting itself flows through [`Master::revoke`] when the
+    /// `ExecutorRevoked` event fires.
+    pub fn record_preempt(&mut self, framework: usize, agent: AgentId, by: usize) {
+        if let Some(rec) = &mut self.obs {
+            rec.record(ObsEvent::Preempt { framework, agent, by });
+        }
+    }
+
     /// Allocated fraction per resource over registered agents.
     pub fn utilization(&self) -> Vec<f64> {
         self.state.pool.utilization()
@@ -411,6 +450,38 @@ mod tests {
         let mut h3 = TakeN { d: pi, want: 40, have: 0 };
         let g3 = m.allocate(&mut h3, &mut Rng::new(10)).unwrap();
         assert!(g3.iter().any(|g| g.agent == drained), "rejoined agent receives grants");
+    }
+
+    #[test]
+    fn kill_revocation_frees_reservations_and_slot_is_reusable() {
+        // Regression (latent drain assumption): the drained-slot reuse scan
+        // requires every tasks_on cell of an inactive framework to be zero.
+        // A kill must therefore unplace the victim's reservations *before*
+        // the framework deactivates, or the slot would leak forever.
+        let mut m = master(AllocatorMode::Characterized);
+        m.enable_obs(64);
+        let pi = ResVec::cpu_mem(2.0, 2.0);
+        let n = m.register_framework("victim".into(), Some(pi), 1.0).unwrap();
+        let mut h = TakeN { d: pi, want: 3, have: 0 };
+        let grants = m.allocate(&mut h, &mut Rng::new(21)).unwrap();
+        assert_eq!(grants.iter().map(|g| g.count).sum::<f64>(), 3.0);
+        let dead = grants[0].agent;
+        m.agent_killed(dead);
+        // revoke everything the framework held on the killed agent
+        for g in grants.iter().filter(|g| g.agent == dead) {
+            m.revoke(n, g.agent, &g.amount, g.count).unwrap();
+        }
+        assert_eq!(m.state.pool.agent(dead).reserved().as_slice(), &[0.0, 0.0]);
+        // surviving reservations release normally, then the slot drains
+        for g in grants.iter().filter(|g| g.agent != dead) {
+            m.release(n, g.agent, &g.amount, g.count).unwrap();
+        }
+        m.finish_framework(n);
+        let n2 = m.register_framework("next".into(), Some(pi), 1.0).unwrap();
+        assert_eq!(n2, n, "fully revoked+released slot is reusable");
+        let events: Vec<ObsEvent> = m.take_obs().unwrap().events().cloned().collect();
+        assert!(events.iter().any(|e| matches!(e, ObsEvent::Revoke { framework, .. } if *framework == n)));
+        m.record_preempt(0, 1, 2); // detached recorder: must be a no-op
     }
 
     #[test]

@@ -468,6 +468,35 @@ mod tests {
     }
 
     #[test]
+    fn streaming_dist_threshold_boundary_cross_check() {
+        // the exact→P² handoff happens at exactly threshold+1 samples:
+        // n == threshold is still the bit-exact batch path, one more
+        // sample spills, and the spilled estimate must agree with the
+        // exact percentiles over the identical prefix-replayed stream
+        let threshold = 512;
+        let xs: Vec<f64> = (0..threshold + 1).map(|i| ((i * 193) % 1009) as f64 * 0.7).collect();
+        let mut s = StreamingDist::with_threshold(threshold);
+        for &x in &xs[..threshold] {
+            s.push(x);
+        }
+        assert!(s.is_exact(), "n == threshold stays exact");
+        assert_eq!(s.finish(), DistStats::of(&xs[..threshold]));
+        s.push(xs[threshold]);
+        assert!(!s.is_exact(), "threshold + 1 spills to P²");
+        let approx = s.finish();
+        let exact = DistStats::of(&xs);
+        assert_eq!(approx.n, exact.n);
+        assert_eq!(approx.max, exact.max);
+        assert!((approx.mean - exact.mean).abs() < 1e-9);
+        // the estimators were seeded by replaying the full buffer, so the
+        // first post-spill summary is still close to exact
+        let rel = |a: f64, b: f64| (a - b).abs() / b.abs().max(1.0);
+        assert!(rel(approx.p50, exact.p50) < 0.02, "p50 {} vs {}", approx.p50, exact.p50);
+        assert!(rel(approx.p95, exact.p95) < 0.02, "p95 {} vs {}", approx.p95, exact.p95);
+        assert!(rel(approx.p99, exact.p99) < 0.03, "p99 {} vs {}", approx.p99, exact.p99);
+    }
+
+    #[test]
     fn streaming_dist_tiny_samples_match_batch() {
         for n in 0..6 {
             let xs: Vec<f64> = (0..n).map(|i| (i as f64) * 1.5 + 0.25).collect();

@@ -49,6 +49,10 @@ pub struct Explanation {
     /// Offers accepted / declined by matching frameworks.
     pub accepted: usize,
     pub declined: usize,
+    /// Executors a matching framework lost to revocation (agent kills or
+    /// preemption), and times it was chosen as a preemption victim.
+    pub revoked: usize,
+    pub preempted: usize,
     /// Every decision a matching framework was feasible for but lost.
     pub lost: Vec<LostDecision>,
 }
@@ -71,6 +75,8 @@ pub fn explain(trace: &ObsTrace, query: &str) -> Result<Explanation> {
     let mut won = 0usize;
     let mut accepted = 0usize;
     let mut declined = 0usize;
+    let mut revoked = 0usize;
+    let mut preempted = 0usize;
     let mut lost: Vec<LostDecision> = Vec::new();
     let name_of = |names: &HashMap<usize, String>, slot: usize| -> String {
         names.get(&slot).cloned().unwrap_or_else(|| format!("slot-{slot}"))
@@ -116,6 +122,16 @@ pub fn explain(trace: &ObsTrace, query: &str) -> Result<Explanation> {
                     declined += 1;
                 }
             }
+            ObsEvent::Revoke { framework, .. } => {
+                if matches(query, *framework, &name_of(&names, *framework)) {
+                    revoked += 1;
+                }
+            }
+            ObsEvent::Preempt { framework, .. } => {
+                if matches(query, *framework, &name_of(&names, *framework)) {
+                    preempted += 1;
+                }
+            }
             _ => {}
         }
     }
@@ -125,7 +141,16 @@ pub fn explain(trace: &ObsTrace, query: &str) -> Result<Explanation> {
              (try a name substring like 'pi-q0' or a slot id)"
         )));
     }
-    Ok(Explanation { query: query.to_string(), matched, won, accepted, declined, lost })
+    Ok(Explanation {
+        query: query.to_string(),
+        matched,
+        won,
+        accepted,
+        declined,
+        revoked,
+        preempted,
+        lost,
+    })
 }
 
 impl Explanation {
@@ -151,6 +176,13 @@ impl Explanation {
             self.won, self.accepted, self.declined
         );
         let _ = writeln!(out, "decisions lost : {} (feasible but outscored)", self.lost.len());
+        if self.revoked > 0 || self.preempted > 0 {
+            let _ = writeln!(
+                out,
+                "executors revoked : {} ({} by preemption)",
+                self.revoked, self.preempted
+            );
+        }
         let mut ranked: Vec<&LostDecision> = self.lost.iter().collect();
         ranked.sort_by(|a, b| {
             b.margin().total_cmp(&a.margin()).then(a.cycle.cmp(&b.cycle)).then(a.iter.cmp(&b.iter))
@@ -271,6 +303,26 @@ mod tests {
         assert_eq!(explain(&t, "wc-q1-j9").unwrap().won, 1);
         // a slot-id query sees both
         assert_eq!(explain(&t, "0").unwrap().won, 2);
+    }
+
+    #[test]
+    fn counts_revocations_and_preemptions() {
+        let t = trace_with(vec![
+            ObsEvent::FrameworkUp { framework: 0, name: "pi-q0-j0".into(), role: 0, weight: 1.0 },
+            ObsEvent::FrameworkUp { framework: 1, name: "wc-q1-j0".into(), role: 0, weight: 1.0 },
+            decision(1, 0, 0.1, vec![Contender { framework: 0, agent: 0, score: 0.1 }]),
+            ObsEvent::Preempt { framework: 0, agent: 2, by: 1 },
+            ObsEvent::Revoke { framework: 0, agent: 2, count: 1.0 },
+            ObsEvent::Revoke { framework: 0, agent: 3, count: 2.0 },
+        ]);
+        let ex = explain(&t, "pi-q0").unwrap();
+        assert_eq!(ex.revoked, 2);
+        assert_eq!(ex.preempted, 1);
+        assert!(ex.render(5).contains("executors revoked : 2 (1 by preemption)"));
+        let ex = explain(&t, "wc").unwrap();
+        assert_eq!(ex.revoked, 0);
+        assert_eq!(ex.preempted, 0);
+        assert!(!ex.render(5).contains("executors revoked"));
     }
 
     #[test]

@@ -140,6 +140,14 @@ pub enum ObsEvent {
     AgentUp { agent: usize },
     /// An agent drained out of the pool.
     AgentDown { agent: usize },
+    /// A framework's executor reservation on `agent` was revoked without a
+    /// task finish (agent kill or preemption): `count` executors died with
+    /// their in-flight attempts.
+    Revoke { framework: usize, agent: usize, count: f64 },
+    /// Preemption decision: `framework`'s executor on `agent` was selected
+    /// as the victim for starved deadline framework `by`. The matching
+    /// [`ObsEvent::Revoke`] follows when the revocation event fires.
+    Preempt { framework: usize, agent: usize, by: usize },
 }
 
 impl ObsEvent {
@@ -155,6 +163,8 @@ impl ObsEvent {
             ObsEvent::FrameworkDown { .. } => "fw-down",
             ObsEvent::AgentUp { .. } => "agent-up",
             ObsEvent::AgentDown { .. } => "agent-down",
+            ObsEvent::Revoke { .. } => "revoke",
+            ObsEvent::Preempt { .. } => "preempt",
         }
     }
 }

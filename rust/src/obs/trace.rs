@@ -186,6 +186,18 @@ pub fn event_json(e: &ObsEvent) -> Json {
         ObsEvent::AgentDown { agent } => {
             Json::obj(vec![("ev", ev), ("agent", Json::Num(*agent as f64))])
         }
+        ObsEvent::Revoke { framework, agent, count } => Json::obj(vec![
+            ("ev", ev),
+            ("fw", Json::Num(*framework as f64)),
+            ("agent", Json::Num(*agent as f64)),
+            ("count", Json::Num(*count)),
+        ]),
+        ObsEvent::Preempt { framework, agent, by } => Json::obj(vec![
+            ("ev", ev),
+            ("fw", Json::Num(*framework as f64)),
+            ("agent", Json::Num(*agent as f64)),
+            ("by", Json::Num(*by as f64)),
+        ]),
     }
 }
 
@@ -251,6 +263,16 @@ pub fn event_from(j: &Json) -> Result<ObsEvent> {
         "fw-down" => Ok(ObsEvent::FrameworkDown { framework: idx(j, "fw")? }),
         "agent-up" => Ok(ObsEvent::AgentUp { agent: idx(j, "agent")? }),
         "agent-down" => Ok(ObsEvent::AgentDown { agent: idx(j, "agent")? }),
+        "revoke" => Ok(ObsEvent::Revoke {
+            framework: idx(j, "fw")?,
+            agent: idx(j, "agent")?,
+            count: num(j, "count")?,
+        }),
+        "preempt" => Ok(ObsEvent::Preempt {
+            framework: idx(j, "fw")?,
+            agent: idx(j, "agent")?,
+            by: idx(j, "by")?,
+        }),
         other => Err(Error::Config(format!("obs trace: unknown event kind '{other}'"))),
     }
 }
@@ -368,6 +390,8 @@ mod tests {
                 reason: "handler-declined".into(),
             },
             ObsEvent::CycleEnd { cycle: 1, iters: 2, grants: 1, declines: 1 },
+            ObsEvent::Preempt { framework: 2, agent: 0, by: 0 },
+            ObsEvent::Revoke { framework: 2, agent: 0, count: 1.0 },
             ObsEvent::FrameworkDown { framework: 0 },
             ObsEvent::AgentDown { agent: 1 },
         ]

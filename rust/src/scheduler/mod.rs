@@ -118,6 +118,30 @@
 //! replays spill byte-identical JSONL traces (`rust/tests/obs.rs`), which
 //! `mesos-fair explain` and `obs-report` read back.
 //!
+//! ## Preemption
+//!
+//! When a deadline-class job ([`crate::spark::job::JobClass`]) is starved —
+//! active, zero executors held or pending, and still wanting some — the
+//! online simulator asks [`Policy::select_victim`] for an executor to
+//! revoke under `--preempt priority|share`
+//! ([`policy::PreemptPolicy`]). Invariants:
+//!
+//! * **Strict priority descent.** Candidates are pre-filtered to executors
+//!   of *strictly lower* priority jobs whose eviction frees enough of the
+//!   agent for one requester executor, so a chain of preemptions strictly
+//!   decreases priority and can never cycle or ping-pong between equals.
+//! * **Determinism.** Victim selection is a pure total-order argmin
+//!   (priority / dominant share / executor id — no RNG), and revocations
+//!   are delivered as `ExecutorRevoked` events in the same class as agent
+//!   churn, so two runs of a kill/preempt scenario under one seed are
+//!   bit-identical (property-tested across policies × kernels × shards).
+//! * **CRN interaction.** A revoked task re-queues and its re-attempt
+//!   duration draws from the *job's private* RNG stream (the speculation
+//!   stream), never the scheduler's — the realized workload stays common
+//!   across policies, and preemption-off runs consume exactly the
+//!   pre-preemption draw sequence (zero-cost when off, also
+//!   property-tested).
+//!
 //! * [`scorer::NativeScorer`] — pure-rust scoring (mirrors the L1 kernel).
 //! * `runtime::scorer::HloScorer` — the same math through the AOT-compiled
 //!   Pallas kernel via PJRT (parity-tested in `rust/tests/runtime_parity.rs`,
@@ -141,7 +165,9 @@ pub mod tsf;
 
 pub use engine::{IncrementalScorer, JointBounds, ScoringEngine};
 pub use kernel::{KernelKind, NO_AGENT};
-pub use policy::{BestFitMetric, Criterion, Policy, PolicyKind};
+pub use policy::{
+    BestFitMetric, Criterion, Policy, PolicyKind, PreemptCandidate, PreemptPolicy,
+};
 pub use registry::{policy_by_name, POLICY_NAMES};
 pub use scorer::NativeScorer;
 

@@ -60,6 +60,51 @@ fn pick_min_with_random_ties(scores: &[(usize, f64)], rng: &mut Rng) -> Option<u
     }
 }
 
+/// Which ordering ranks preemption victims when a deadline-class job
+/// cannot be placed. Both orderings are total and RNG-free, so preemption
+/// decisions are deterministic and never perturb the allocation stream.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Default)]
+pub enum PreemptPolicy {
+    /// Lowest victim priority first, then largest dominant share, then
+    /// smallest executor id.
+    #[default]
+    Priority,
+    /// Largest dominant share first (evict whoever holds the most of its
+    /// agent), then lowest priority, then smallest executor id.
+    Share,
+}
+
+impl PreemptPolicy {
+    pub fn from_name(name: &str) -> Option<Option<PreemptPolicy>> {
+        match name {
+            "off" | "none" => Some(None),
+            "priority" => Some(Some(PreemptPolicy::Priority)),
+            "share" => Some(Some(PreemptPolicy::Share)),
+            _ => None,
+        }
+    }
+
+    pub fn label(&self) -> &'static str {
+        match self {
+            PreemptPolicy::Priority => "priority",
+            PreemptPolicy::Share => "share",
+        }
+    }
+}
+
+/// One evictable executor, as seen by [`Policy::select_victim`].
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct PreemptCandidate {
+    /// Executor slab id (the final, deterministic tie-break).
+    pub exec: usize,
+    /// Owning job's id.
+    pub job: usize,
+    /// Owning job's preemption priority.
+    pub priority: i32,
+    /// The executor's dominant share of its agent's total capacity.
+    pub share: f64,
+}
+
 /// Which fairness criterion ranks frameworks.
 #[derive(Debug, Clone, Copy, PartialEq, Eq)]
 pub enum Criterion {
@@ -474,6 +519,36 @@ impl Policy {
         Some((n, i))
     }
 
+    /// Preemption hook: pick the victim executor among `candidates` under
+    /// `preempt`'s ordering. The caller has already filtered candidates to
+    /// strictly-lower-priority jobs whose eviction would let the requester
+    /// fit, so any ordering here only affects *which* victim dies, never
+    /// whether preemption cascades (strict priority descent rules out
+    /// cycles). Deterministic — no RNG draws, ties break by executor id —
+    /// so enabling preemption cannot perturb the allocator's tie-break
+    /// stream and kill runs replay bit-exactly.
+    pub fn select_victim(
+        &self,
+        preempt: PreemptPolicy,
+        candidates: &[PreemptCandidate],
+    ) -> Option<PreemptCandidate> {
+        candidates
+            .iter()
+            .min_by(|a, b| match preempt {
+                PreemptPolicy::Priority => a
+                    .priority
+                    .cmp(&b.priority)
+                    .then(b.share.total_cmp(&a.share))
+                    .then(a.exec.cmp(&b.exec)),
+                PreemptPolicy::Share => b
+                    .share
+                    .total_cmp(&a.share)
+                    .then(a.priority.cmp(&b.priority))
+                    .then(a.exec.cmp(&b.exec)),
+            })
+            .copied()
+    }
+
     /// One allocation decision over an agent pool, dispatching on the
     /// policy kind. For `PerAgent` the caller supplies this cycle's RRR
     /// permutation via `order`; the first agent with a feasible framework
@@ -741,6 +816,36 @@ mod tests {
         let si = st.score_inputs();
         let set = NativeScorer::compute(&si);
         assert!(p.contenders(&set, &si, &[0, 1]).is_empty());
+    }
+
+    #[test]
+    fn victim_selection_orderings_and_tie_breaks() {
+        let p = Policy::new("drf", Criterion::Drf, PolicyKind::PerAgent);
+        let cands = [
+            PreemptCandidate { exec: 4, job: 1, priority: 0, share: 0.5 },
+            PreemptCandidate { exec: 2, job: 2, priority: -1, share: 0.1 },
+            PreemptCandidate { exec: 7, job: 3, priority: -1, share: 0.9 },
+            PreemptCandidate { exec: 1, job: 4, priority: 0, share: 0.9 },
+        ];
+        // lowest priority wins; among the two priority -1 jobs the larger
+        // share (exec 7) is evicted first
+        assert_eq!(p.select_victim(PreemptPolicy::Priority, &cands).unwrap().exec, 7);
+        // share-first: execs 7 and 1 tie at 0.9 -> lower priority wins
+        assert_eq!(p.select_victim(PreemptPolicy::Share, &cands).unwrap().exec, 7);
+        // full tie -> smallest exec id
+        let tied = [
+            PreemptCandidate { exec: 9, job: 1, priority: 0, share: 0.3 },
+            PreemptCandidate { exec: 3, job: 2, priority: 0, share: 0.3 },
+        ];
+        for m in [PreemptPolicy::Priority, PreemptPolicy::Share] {
+            assert_eq!(p.select_victim(m, &tied).unwrap().exec, 3);
+        }
+        assert_eq!(p.select_victim(PreemptPolicy::Priority, &[]), None);
+        // name registry round-trip
+        assert_eq!(PreemptPolicy::from_name("off"), Some(None));
+        assert_eq!(PreemptPolicy::from_name("priority"), Some(Some(PreemptPolicy::Priority)));
+        assert_eq!(PreemptPolicy::from_name("share"), Some(Some(PreemptPolicy::Share)));
+        assert_eq!(PreemptPolicy::from_name("violent"), None);
     }
 
     #[test]

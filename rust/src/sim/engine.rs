@@ -117,7 +117,10 @@ mod tests {
     fn simultaneous_events_class_ordered() {
         let mut q = EventQueue::new();
         q.schedule(1.0, EventKind::Sample);
-        q.schedule(1.0, EventKind::TaskFinish { job: 0, exec: 0, task: 0, attempt: 0, duration: 1.0 });
+        q.schedule(
+            1.0,
+            EventKind::TaskFinish { job: 0, exec: 0, task: 0, attempt: 0, duration: 1.0, epoch: 0 },
+        );
         q.schedule(1.0, EventKind::JobArrival { queue: 0 });
         q.schedule(1.0, EventKind::AgentUp { agent: 0 });
         q.schedule(1.0, EventKind::AgentDown { agent: 1 });

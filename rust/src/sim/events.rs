@@ -24,7 +24,11 @@ pub enum EventKind {
     JobRetry { queue: usize },
     /// A task attempt finishes on an executor. `duration` is the attempt's
     /// sampled service time (recorded for the driver's speculation median).
-    TaskFinish { job: JobId, exec: ExecutorId, task: TaskId, attempt: u32, duration: f64 },
+    /// `epoch` snapshots the executor slot's revocation epoch at dispatch:
+    /// a finish whose epoch no longer matches the slot's is stale — its
+    /// executor was killed (and the slot possibly recycled) while the
+    /// attempt was in flight, so the event is dropped.
+    TaskFinish { job: JobId, exec: ExecutorId, task: TaskId, attempt: u32, duration: f64, epoch: u32 },
     /// A completed job's executor resources reach the allocator (possibly
     /// staggered after completion — §3.5.3's observation).
     Release { framework: usize, agent: AgentId, amount: ResVec, count: f64 },
@@ -34,6 +38,15 @@ pub enum EventKind {
     /// An agent drains: it deregisters and receives no further offers,
     /// while executors already placed there run to completion (churn).
     AgentDown { agent: AgentId },
+    /// An agent is *killed*: it deregisters and every executor on it is
+    /// revoked immediately — in-flight attempts are lost and their tasks
+    /// re-queued (no drain). The fault-injection counterpart of
+    /// [`EventKind::AgentDown`].
+    AgentKilled { agent: AgentId },
+    /// A single executor is revoked (preemption): its reservation is
+    /// unplaced, running attempts are lost, and the owning job re-queues
+    /// the affected tasks.
+    ExecutorRevoked { job: JobId, exec: ExecutorId },
     /// Deferred allocation cycle — Mesos batches allocation on an interval
     /// timer (`--allocation_interval`, default 1s), which pools the releases
     /// of a completing job so the allocator chooses among *all* freed
@@ -50,7 +63,13 @@ impl EventKind {
     pub fn class_order(&self) -> u8 {
         match self {
             EventKind::AgentUp { .. } => 0,
-            EventKind::AgentDown { .. } => 1,
+            // kills and per-executor revocations share the drain's class:
+            // topology changes land before arrivals and allocation, so a
+            // kill scheduled at an Allocate's timestamp is processed first
+            // (the offer cycle sees the post-kill cluster)
+            EventKind::AgentDown { .. }
+            | EventKind::AgentKilled { .. }
+            | EventKind::ExecutorRevoked { .. } => 1,
             EventKind::Release { .. } => 2,
             // retries share the arrivals' ordering class: a retry is the
             // same submission, delayed

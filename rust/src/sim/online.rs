@@ -36,13 +36,15 @@ use crate::metrics::{DistStats, StreamingDist};
 use crate::obs::ObsSummary;
 use crate::resources::ResVec;
 use crate::rng::Rng;
-use crate::scheduler::{policy_by_name, KernelKind, NativeScorer, Scorer};
+use crate::scheduler::{
+    policy_by_name, KernelKind, NativeScorer, PreemptCandidate, PreemptPolicy, Scorer,
+};
 use crate::sim::engine::EventQueue;
 use crate::sim::events::{EventKind, JobId};
 use crate::sim::trace::TraceRecorder;
 use crate::spark::driver::{fill_executor, Dispatch, SpeculationCfg};
 use crate::spark::executor::Executor;
-use crate::spark::job::SparkJob;
+use crate::spark::job::{JobClass, SparkJob};
 use crate::spark::queue::SubmissionQueue;
 use crate::spark::workload::{WorkloadKind, WorkloadSpec};
 use crate::workload::arrival::ArrivalProcess;
@@ -65,22 +67,37 @@ pub struct QueueSpec {
     /// Threaded through `Master::register_framework` and recorded in the
     /// scenario trace, so weighted runs replay exactly.
     pub weight: f64,
+    /// Deadline/priority class stamped on every job this queue submits
+    /// (best-effort by default — no deadline, priority 0).
+    pub class: JobClass,
 }
 
 impl QueueSpec {
     /// A closed-loop batch queue (the paper's behaviour).
     pub fn closed(workload: WorkloadSpec, jobs: usize) -> Self {
-        QueueSpec { workload, jobs, arrival: ArrivalProcess::Closed, weight: 1.0 }
+        QueueSpec {
+            workload,
+            jobs,
+            arrival: ArrivalProcess::Closed,
+            weight: 1.0,
+            class: JobClass::default(),
+        }
     }
 
     /// An open queue whose jobs arrive per `arrival`.
     pub fn open(workload: WorkloadSpec, jobs: usize, arrival: ArrivalProcess) -> Self {
-        QueueSpec { workload, jobs, arrival, weight: 1.0 }
+        QueueSpec { workload, jobs, arrival, weight: 1.0, class: JobClass::default() }
     }
 
     /// Builder-style fair-share weight override.
     pub fn weighted(mut self, weight: f64) -> Self {
         self.weight = weight;
+        self
+    }
+
+    /// Builder-style deadline/priority class override.
+    pub fn with_class(mut self, class: JobClass) -> Self {
+        self.class = class;
         self
     }
 }
@@ -114,6 +131,11 @@ pub struct OnlineConfig {
     pub speculation: SpeculationCfg,
     /// Cluster churn model (realized into a schedule at scenario time).
     pub churn: ChurnModel,
+    /// Kill-based preemption (`--preempt priority|share`): when a
+    /// deadline-class job is starved of executors, revoke one executor of a
+    /// strictly-lower-priority job per allocation cycle. `None` (default)
+    /// never preempts — runs are bit-identical to the pre-SLO simulator.
+    pub preempt: Option<PreemptPolicy>,
     /// Parallel scoring/argmin shards for the native engine (1 = serial;
     /// results are bit-identical at any count).
     pub shards: usize,
@@ -161,6 +183,7 @@ impl OnlineConfig {
             release_mode: ReleaseMode::Pool,
             speculation: SpeculationCfg::default(),
             churn: ChurnModel::None,
+            preempt: None,
             shards: 1,
             kernel: KernelKind::default(),
             obs: false,
@@ -305,6 +328,19 @@ pub struct OnlineResult {
     /// class — workload kind for synthetic scenarios, tenant tag for
     /// imported traces), sorted by class name.
     pub class_slowdown: Vec<(String, DistStats)>,
+    /// Tardiness (`max(0, completion − deadline)`) over deadline-class
+    /// jobs; `n == 0` when the workload has no deadlines.
+    pub tardiness: DistStats,
+    /// Deadline-class jobs completed / of those, completed past deadline.
+    pub deadline_jobs: usize,
+    pub deadline_misses: usize,
+    /// Executors lost without drain (agent kills + preemption), and the
+    /// subset evicted by the preemption hook.
+    pub revocations: u64,
+    pub preemptions: u64,
+    /// Tasks whose sole in-flight attempt died with a revoked executor and
+    /// were re-queued for a speculative re-draw.
+    pub reattempts: u64,
     /// Workload-stream counters (jobs streamed, lookahead, parse errors).
     pub stream: StreamStats,
     /// Flight-recorder output ([`OnlineConfig::obs`]): decision events,
@@ -330,6 +366,11 @@ pub struct OnlineSim {
     /// Executor slab, recycled with its job.
     executors: Vec<Option<Executor>>,
     free_execs: Vec<usize>,
+    /// Revocation epoch per executor *slot*, bumped when the slot's
+    /// occupant is killed. A [`EventKind::TaskFinish`] whose stamped epoch
+    /// mismatches is stale (its executor died mid-flight) and is dropped —
+    /// the guard that makes abrupt loss safe against slab recycling.
+    exec_epoch: Vec<u32>,
     fw_to_job: HashMap<usize, JobId>,
     done_durations: Vec<Vec<f64>>,
     trace: TraceRecorder,
@@ -346,6 +387,13 @@ pub struct OnlineSim {
     completion: StreamingDist,
     slowdown: StreamingDist,
     class_slowdown: BTreeMap<String, StreamingDist>,
+    /// SLO accounting over deadline-class jobs.
+    tardiness: StreamingDist,
+    deadline_jobs: usize,
+    deadline_misses: usize,
+    revocations: u64,
+    preemptions: u64,
+    reattempts: u64,
     /// Current / peak jobs buffered between stream and simulator.
     lookahead_now: usize,
     peak_lookahead: usize,
@@ -468,6 +516,7 @@ impl OnlineSim {
             inflight: Vec::new(),
             executors: Vec::new(),
             free_execs: Vec::new(),
+            exec_epoch: Vec::new(),
             fw_to_job: HashMap::new(),
             done_durations: Vec::new(),
             trace: TraceRecorder::new(&label),
@@ -481,6 +530,12 @@ impl OnlineSim {
             completion: StreamingDist::with_threshold(stats_threshold),
             slowdown: StreamingDist::with_threshold(stats_threshold),
             class_slowdown: BTreeMap::new(),
+            tardiness: StreamingDist::with_threshold(stats_threshold),
+            deadline_jobs: 0,
+            deadline_misses: 0,
+            revocations: 0,
+            preemptions: 0,
+            reattempts: 0,
             lookahead_now: 0,
             peak_lookahead: 0,
             peak_active_jobs: 0,
@@ -513,6 +568,8 @@ impl OnlineSim {
         for ev in &self.churn {
             let kind = if ev.up {
                 EventKind::AgentUp { agent: ev.agent }
+            } else if ev.kill {
+                EventKind::AgentKilled { agent: ev.agent }
             } else {
                 EventKind::AgentDown { agent: ev.agent }
             };
@@ -545,14 +602,32 @@ impl OnlineSim {
                 EventKind::AgentDown { agent } => {
                     self.master.agent_down(agent);
                 }
+                EventKind::AgentKilled { agent } => {
+                    self.on_agent_killed(agent)?;
+                }
+                EventKind::ExecutorRevoked { job, exec } => {
+                    // stale if the slot moved on since the eviction was
+                    // scheduled (its job finished in the same instant)
+                    let live = self.executors[exec]
+                        .as_ref()
+                        .is_some_and(|e| e.job == job && !e.terminated);
+                    if live {
+                        self.revoke_executor(exec)?;
+                        self.request_allocation();
+                    }
+                }
                 EventKind::JobArrival { queue } => self.on_job_arrival(queue, now, false)?,
                 EventKind::JobRetry { queue } => self.on_job_arrival(queue, now, true)?,
                 EventKind::Allocate => {
                     self.alloc_pending = false;
                     self.allocate(now)?;
                 }
-                EventKind::TaskFinish { job, exec, task, attempt, duration } => {
-                    self.on_task_finish(job, exec, task, attempt, duration, now, compute)?;
+                EventKind::TaskFinish { job, exec, task, attempt, duration, epoch } => {
+                    // epoch guard: the attempt's executor was revoked after
+                    // dispatch — the work is lost, the event is stale
+                    if epoch == self.exec_epoch[exec] {
+                        self.on_task_finish(job, exec, task, attempt, duration, now, compute)?;
+                    }
                 }
                 EventKind::Release { framework, agent, amount, count } => {
                     self.master.release(framework, agent, &amount, count)?;
@@ -625,6 +700,12 @@ impl OnlineSim {
             completion: self.completion.finish(),
             slowdown: self.slowdown.finish(),
             class_slowdown,
+            tardiness: self.tardiness.finish(),
+            deadline_jobs: self.deadline_jobs,
+            deadline_misses: self.deadline_misses,
+            revocations: self.revocations,
+            preemptions: self.preemptions,
+            reattempts: self.reattempts,
             stream,
             obs,
             trace: self.trace,
@@ -676,7 +757,8 @@ impl OnlineSim {
         let weight = self.queues[queue].weight;
         match self.master.register_framework_in_role(name, declared, weight, role) {
             Ok(slot) => {
-                let job = SparkJob::from_recipe(job_id, queue, slot, spec, &recipe, now);
+                let mut job = SparkJob::from_recipe(job_id, queue, slot, spec, &recipe, now);
+                job.class = self.queues[queue].job_class;
                 self.jobs[job_id] = Some(job);
                 self.done_durations[job_id].clear();
                 self.inflight[job_id] = 0;
@@ -716,7 +798,123 @@ impl OnlineSim {
             };
             self.master.allocate(&mut handler, &mut self.rng)?
         };
-        self.materialize(&grants, now)
+        self.materialize(&grants, now)?;
+        if self.cfg.preempt.is_some() {
+            self.maybe_preempt(now);
+        }
+        Ok(())
+    }
+
+    /// Abrupt agent loss: deregister the agent and revoke every live
+    /// executor on it *without* drain — in-flight attempts are lost and
+    /// sole-attempt tasks re-queued. Already-terminated executors keep
+    /// their scheduled [`EventKind::Release`] (kill after completion must
+    /// not double-release).
+    fn on_agent_killed(&mut self, agent: usize) -> Result<()> {
+        self.master.agent_killed(agent);
+        let victims: Vec<usize> = self
+            .executors
+            .iter()
+            .enumerate()
+            .filter(|(_, e)| e.as_ref().is_some_and(|e| e.agent == agent && !e.terminated))
+            .map(|(i, _)| i)
+            .collect();
+        for eid in victims {
+            self.revoke_executor(eid)?;
+        }
+        self.request_allocation();
+        Ok(())
+    }
+
+    /// Kill one live executor: drop its in-flight attempts (their
+    /// [`EventKind::TaskFinish`] events go stale via the slot's bumped
+    /// epoch), re-queue tasks whose only attempt died, release the
+    /// reservation, and recycle the slot. No scheduler-RNG draws — kill
+    /// paths stay off the common-random-numbers streams.
+    fn revoke_executor(&mut self, eid: usize) -> Result<()> {
+        let exec = self.executors[eid].take().expect("revoke on empty executor slot");
+        debug_assert!(!exec.terminated, "revoking a terminated executor double-releases");
+        let job_id = exec.job;
+        self.exec_epoch[eid] = self.exec_epoch[eid].wrapping_add(1);
+        self.revocations += 1;
+        self.inflight[job_id] -= exec.busy_slots() as u32;
+        let job = self.jobs[job_id].as_mut().expect("revoke on retired job");
+        let slot = job.framework;
+        for t in 0..job.tasks.len() {
+            let (_, requeue) = job.tasks[t].revoke_executor(eid);
+            if requeue {
+                job.requeue_task(t);
+                self.reattempts += 1;
+            }
+        }
+        job.executors.retain(|&e| e != eid);
+        self.free_execs.push(eid);
+        self.live_execs -= 1;
+        self.master.revoke(slot, exec.agent, &exec.demand, 1.0)
+    }
+
+    /// Kill-based preemption (`--preempt`): for each deadline-class job
+    /// that is starved (active, wants executors, has none live or pending),
+    /// pick one executor of a strictly-lower-priority job whose eviction
+    /// makes the requester placeable, and schedule its revocation *now*.
+    /// Victim selection is [`crate::scheduler::Policy::select_victim`] —
+    /// fully deterministic, no RNG draws. Strictly-descending priority
+    /// means preemption chains terminate.
+    fn maybe_preempt(&mut self, now: f64) {
+        let Some(preempt) = self.cfg.preempt else { return };
+        let total = self.master.state.pool.total_capacity();
+        let mut chosen: Vec<usize> = Vec::new();
+        for rid in 0..self.jobs.len() {
+            let Some(req) = self.jobs[rid].as_ref() else { continue };
+            if req.class.deadline.is_none()
+                || req.is_finished()
+                || !req.executors.is_empty()
+                || req.pending_executors > 0
+                || req.executors_wanted() == 0
+            {
+                continue;
+            }
+            let demand = req.spec.executor_demand;
+            let priority = req.class.priority;
+            let candidates: Vec<PreemptCandidate> = self
+                .executors
+                .iter()
+                .enumerate()
+                .filter_map(|(eid, e)| {
+                    let e = e.as_ref()?;
+                    if e.terminated || chosen.contains(&eid) {
+                        return None;
+                    }
+                    let victim = self.jobs[e.job].as_ref()?;
+                    if victim.class.priority >= priority {
+                        return None;
+                    }
+                    let agent = self.master.state.pool.agent(e.agent);
+                    // eviction must actually make the requester placeable
+                    if !agent.registered
+                        || !demand.fits_within(&(agent.residual() + e.demand))
+                    {
+                        return None;
+                    }
+                    let share = e.demand.dominant_ratio_over(&total).unwrap_or(0.0);
+                    Some(PreemptCandidate {
+                        exec: eid,
+                        job: e.job,
+                        priority: victim.class.priority,
+                        share,
+                    })
+                })
+                .collect();
+            if let Some(v) = self.master.policy.select_victim(preempt, &candidates) {
+                let victim_fw = self.jobs[v.job].as_ref().expect("candidate job live").framework;
+                let agent = self.executors[v.exec].as_ref().expect("candidate exec live").agent;
+                self.master.record_preempt(victim_fw, agent, self.jobs[rid].as_ref().unwrap().framework);
+                self.preemptions += 1;
+                chosen.push(v.exec);
+                // class 1: the eviction lands before the next Allocate
+                self.events.schedule(now, EventKind::ExecutorRevoked { job: v.job, exec: v.exec });
+            }
+        }
     }
 
     fn materialize(&mut self, grants: &[Grant], now: f64) -> Result<()> {
@@ -729,6 +927,7 @@ impl OnlineSim {
                     Some(slot) => slot,
                     None => {
                         self.executors.push(None);
+                        self.exec_epoch.push(0);
                         self.executors.len() - 1
                     }
                 };
@@ -758,6 +957,7 @@ impl OnlineSim {
     fn schedule_dispatches(&mut self, job: JobId, exec: usize, ds: &[Dispatch], now: f64) {
         let _ = now;
         self.inflight[job] += ds.len() as u32;
+        let epoch = self.exec_epoch[exec];
         for d in ds {
             self.events.schedule_in(
                 d.duration,
@@ -767,6 +967,7 @@ impl OnlineSim {
                     task: d.task,
                     attempt: d.attempt,
                     duration: d.duration,
+                    epoch,
                 },
             );
         }
@@ -845,6 +1046,13 @@ impl OnlineSim {
         let ct = now - job.submitted_at;
         let sd = ct / job.ideal_service();
         let exec_ids = job.executors.clone();
+        if let Some(deadline) = job.class.deadline {
+            self.deadline_jobs += 1;
+            self.tardiness.push((ct - deadline).max(0.0));
+            if ct > deadline {
+                self.deadline_misses += 1;
+            }
+        }
         self.completion.push(ct);
         self.slowdown.push(sd);
         let class = self.queues[queue].class.clone();
@@ -1019,10 +1227,10 @@ mod tests {
         cfg.seed = 17;
         // take two agents out for a mid-run window
         cfg.churn = ChurnModel::Scripted(vec![
-            ChurnEvent { t: 10.0, agent: 4, up: false },
-            ChurnEvent { t: 10.0, agent: 5, up: false },
-            ChurnEvent { t: 90.0, agent: 4, up: true },
-            ChurnEvent { t: 90.0, agent: 5, up: true },
+            ChurnEvent::new(10.0, 4, false),
+            ChurnEvent::new(10.0, 5, false),
+            ChurnEvent::new(90.0, 4, true),
+            ChurnEvent::new(90.0, 5, true),
         ]);
         let r = OnlineSim::new(cfg.clone()).unwrap().run().unwrap();
         assert_eq!(r.jobs_completed, 8, "churn must not lose jobs");
@@ -1163,6 +1371,124 @@ mod tests {
             assert!(!class.is_empty());
             assert!(d.p50 >= 1.0 - 1e-9, "{class}: {d:?}");
         }
+    }
+
+    #[test]
+    fn scripted_kills_lose_work_but_jobs_still_complete() {
+        let mut cfg = OnlineConfig::small("drf", AllocatorMode::Characterized);
+        cfg.seed = 43;
+        // kill two agents mid-run while work is in flight, bring them back
+        cfg.churn = ChurnModel::Scripted(vec![
+            ChurnEvent::kill(8.0, 4),
+            ChurnEvent::kill(8.0, 5),
+            ChurnEvent::new(120.0, 4, true),
+            ChurnEvent::new(120.0, 5, true),
+        ]);
+        let r = OnlineSim::new(cfg.clone()).unwrap().run().unwrap();
+        assert_eq!(r.jobs_completed, 8, "kills must not lose jobs");
+        assert!(r.revocations > 0, "agents 4/5 had executors at t=8");
+        assert!(r.reattempts > 0, "in-flight tasks were lost and re-queued");
+        assert_eq!(r.preemptions, 0, "no preemption policy configured");
+        // drain-based churn at the same times differs: kills redo work
+        cfg.churn = ChurnModel::Scripted(vec![
+            ChurnEvent::new(8.0, 4, false),
+            ChurnEvent::new(8.0, 5, false),
+            ChurnEvent::new(120.0, 4, true),
+            ChurnEvent::new(120.0, 5, true),
+        ]);
+        let drain = OnlineSim::new(cfg).unwrap().run().unwrap();
+        assert_eq!(drain.revocations, 0);
+        assert!(
+            drain.makespan != r.makespan || drain.trace.cpu.values() != r.trace.cpu.values(),
+            "losing in-flight work must alter the trajectory vs draining"
+        );
+    }
+
+    #[test]
+    fn kill_runs_are_deterministic_under_crn() {
+        for policy in ["drf", "psdsf"] {
+            let mut cfg = OnlineConfig::small(policy, AllocatorMode::Characterized);
+            cfg.seed = 47;
+            cfg.churn = ChurnModel::Kill {
+                min_up: 3,
+                mean_up: 60.0,
+                mean_down: 30.0,
+                horizon: 600.0,
+            };
+            let a = OnlineSim::new(cfg.clone()).unwrap().run().unwrap();
+            let b = OnlineSim::new(cfg).unwrap().run().unwrap();
+            assert_eq!(a.jobs_completed, 8, "{policy}");
+            assert_eq!(a.makespan, b.makespan, "{policy}");
+            assert_eq!(a.revocations, b.revocations, "{policy}");
+            assert_eq!(a.reattempts, b.reattempts, "{policy}");
+            assert_eq!(a.completion, b.completion, "{policy}");
+            assert_eq!(a.trace.cpu.values(), b.trace.cpu.values(), "{policy}");
+        }
+    }
+
+    #[test]
+    fn kill_of_agent_with_zero_executors_is_harmless() {
+        let mut cfg = OnlineConfig::small("drf", AllocatorMode::Characterized);
+        cfg.seed = 53;
+        // t=0.5: nothing has been allocated yet (allocation_interval = 1.0)
+        cfg.churn = ChurnModel::Scripted(vec![
+            ChurnEvent::kill(0.5, 5),
+            ChurnEvent::new(30.0, 5, true),
+        ]);
+        let r = OnlineSim::new(cfg).unwrap().run().unwrap();
+        assert_eq!(r.jobs_completed, 8);
+        assert_eq!(r.revocations, 0, "no executors existed on the killed agent");
+    }
+
+    #[test]
+    fn preempt_deadline_scenario_completes_and_tracks_slo() {
+        let cfg = crate::workload::scenario::scenario_config(
+            "preempt-deadline",
+            "drf",
+            AllocatorMode::Characterized,
+            Some(2),
+            59,
+        )
+        .unwrap();
+        let expected: usize = cfg.queues.iter().map(|q| q.jobs).sum();
+        let r = OnlineSim::new(cfg).unwrap().run().unwrap();
+        assert_eq!(r.jobs_completed, expected);
+        // queues 0–3 are deadline-class: 4 queues × 2 jobs
+        assert_eq!(r.deadline_jobs, 8);
+        assert!(r.deadline_misses <= r.deadline_jobs);
+        assert_eq!(r.tardiness.n, 8, "one tardiness sample per deadline job");
+        assert!(r.tardiness.p99 >= 0.0);
+        assert_eq!(r.preemptions, r.revocations, "only preemption revokes here");
+    }
+
+    #[test]
+    fn revocation_scenario_from_registry_completes() {
+        let cfg = crate::workload::scenario::scenario_config(
+            "revocation",
+            "drf",
+            AllocatorMode::Characterized,
+            Some(1),
+            61,
+        )
+        .unwrap();
+        let expected: usize = cfg.queues.iter().map(|q| q.jobs).sum();
+        let r = OnlineSim::new(cfg).unwrap().run().unwrap();
+        assert_eq!(r.jobs_completed, expected);
+    }
+
+    #[test]
+    fn preemption_off_is_bit_identical_to_pre_slo_runs() {
+        // zero-cost-when-off: the preempt hook must not perturb anything —
+        // same grants, same trace, same RNG consumption
+        let mut cfg = OnlineConfig::small("psdsf", AllocatorMode::Characterized);
+        cfg.seed = 67;
+        let base = OnlineSim::new(cfg.clone()).unwrap().run().unwrap();
+        cfg.queues[0].class = JobClass::new(Some(1e9), 5); // classes alone: no-op
+        let classed = OnlineSim::new(cfg).unwrap().run().unwrap();
+        assert_eq!(base.makespan, classed.makespan);
+        assert_eq!(base.grants, classed.grants);
+        assert_eq!(base.trace.cpu.values(), classed.trace.cpu.values());
+        assert_eq!(classed.deadline_jobs, 2, "but SLO accounting sees them");
     }
 
     #[test]

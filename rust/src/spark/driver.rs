@@ -49,7 +49,15 @@ pub fn fill_executor(
     let mut out = Vec::new();
     while exec.free_slots() > 0 && !job.is_finished() {
         if let Some(t) = job.pop_pending() {
-            let dur = job.first_attempt_duration(t);
+            // fresh tasks run their recipe's pre-realized duration; a task
+            // back in the queue after a revocation draws a re-attempt from
+            // the job's private stream (same streams as speculation, so
+            // CRN and record/replay hold under kills too)
+            let dur = if job.tasks[t].attempted() {
+                job.speculative_duration()
+            } else {
+                job.first_attempt_duration(t)
+            };
             let attempt = job.tasks[t].start_attempt(exec.id, now, now + dur, false);
             exec.occupy();
             out.push(Dispatch { task: t, attempt, duration: dur });
@@ -149,6 +157,25 @@ mod tests {
         let cfg = SpeculationCfg { enabled: false, multiplier: 3.0 };
         let d = fill_executor(&mut job, &mut e, 50.0, cfg, &[4.0; 8]);
         assert!(d.is_empty());
+    }
+
+    #[test]
+    fn revoked_task_redispatches_with_private_stream_duration() {
+        let mut job = mini_job(2);
+        let mut e = exec(1);
+        let d = fill_executor(&mut job, &mut e, 0.0, SpeculationCfg::default(), &[]);
+        assert_eq!(d[0].duration, job.first_attempt_duration(0));
+        // the executor dies; task 0 re-queues
+        job.tasks[0].revoke_executor(0);
+        job.requeue_task(0);
+        e.vacate();
+        // the expected re-attempt draw, from an identical twin job
+        let mut twin = mini_job(2);
+        let expected = twin.speculative_duration();
+        let d2 = fill_executor(&mut job, &mut e, 10.0, SpeculationCfg::default(), &[]);
+        assert_eq!(d2[0].task, 0);
+        assert_eq!(d2[0].attempt, 1, "a re-attempt, not a restart of attempt 0");
+        assert_eq!(d2[0].duration, expected, "re-attempts draw from the job's private stream");
     }
 
     #[test]

@@ -13,6 +13,39 @@ use crate::spark::task::{Task, TaskState};
 use crate::spark::workload::WorkloadSpec;
 use crate::workload::scenario::JobRecipe;
 
+/// SLO class of a job: an optional completion deadline (seconds after
+/// submission) and a preemption priority. The default class (`deadline:
+/// None, priority: 0`) is the pre-SLO behavior: no tardiness accounting,
+/// never a preemption requester, and a victim only to strictly higher
+/// priorities.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct JobClass {
+    /// Relative deadline: the job should complete within this many seconds
+    /// of submission. `None` = best-effort (no SLO).
+    pub deadline: Option<f64>,
+    /// Preemption priority — only *strictly higher* priority deadline jobs
+    /// may evict this job's executors.
+    pub priority: i32,
+}
+
+impl Default for JobClass {
+    fn default() -> Self {
+        JobClass { deadline: None, priority: 0 }
+    }
+}
+
+impl JobClass {
+    pub fn new(deadline: Option<f64>, priority: i32) -> Self {
+        JobClass { deadline, priority }
+    }
+
+    /// `true` iff this is the default best-effort class (serialized traces
+    /// omit default classes so pre-SLO trace bytes are unchanged).
+    pub fn is_default(&self) -> bool {
+        self.deadline.is_none() && self.priority == 0
+    }
+}
+
 /// Job lifecycle.
 #[derive(Debug, Clone, Copy, PartialEq, Eq)]
 pub enum JobState {
@@ -40,6 +73,8 @@ pub struct SparkJob {
     /// materialized (keeps `executors_wanted` honest mid-cycle).
     pub pending_executors: usize,
     pub state: JobState,
+    /// SLO class (deadline/priority) inherited from the submission queue.
+    pub class: JobClass,
     pub submitted_at: f64,
     pub finished_at: Option<f64>,
     done_count: usize,
@@ -72,6 +107,7 @@ impl SparkJob {
             executors: Vec::new(),
             pending_executors: 0,
             state: JobState::Running,
+            class: JobClass::default(),
             submitted_at: now,
             finished_at: None,
             done_count: 0,
@@ -112,6 +148,16 @@ impl SparkJob {
     /// Next pending task, if any.
     pub fn pop_pending(&mut self) -> Option<TaskId> {
         self.pending.pop()
+    }
+
+    /// Put a revoked task back at the *head* of the pending queue (it is
+    /// pushed onto the pop-end, so the driver re-dispatches lost work
+    /// before starting fresh tasks — deterministic, id-ordered at the call
+    /// site).
+    pub fn requeue_task(&mut self, t: TaskId) {
+        debug_assert!(!self.tasks[t].is_done(), "re-queueing a done task");
+        debug_assert!(!self.pending.contains(&t), "task {t} already pending");
+        self.pending.push(t);
     }
 
     pub fn pending_count(&self) -> usize {
@@ -224,6 +270,26 @@ mod tests {
         j.pop_pending();
         j.pop_pending();
         assert_eq!(j.executors_wanted(), 1); // 1 pending, ceil(1/2) = 1
+    }
+
+    #[test]
+    fn requeued_task_is_redispatched_first() {
+        let mut j = job();
+        assert_eq!(j.pop_pending(), Some(0));
+        assert_eq!(j.pop_pending(), Some(1));
+        j.tasks[0].start_attempt(0, 0.0, 5.0, false);
+        j.tasks[0].revoke_executor(0);
+        j.requeue_task(0);
+        assert_eq!(j.pop_pending(), Some(0), "revoked work resumes before fresh tasks");
+        assert_eq!(j.pop_pending(), Some(2));
+    }
+
+    #[test]
+    fn default_class_is_best_effort() {
+        let j = job();
+        assert!(j.class.is_default());
+        assert!(!JobClass::new(Some(300.0), 0).is_default());
+        assert!(!JobClass::new(None, 5).is_default());
     }
 
     #[test]

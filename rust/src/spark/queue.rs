@@ -32,6 +32,8 @@ pub struct SubmissionQueue {
     pub role: usize,
     /// Tenant-class label for per-class SLO reporting.
     pub class: String,
+    /// Deadline/priority class stamped on every submitted job.
+    pub job_class: crate::spark::job::JobClass,
     source: Box<dyn JobSource>,
     /// Jobs pulled for already-scheduled arrivals, not yet submitted.
     awaiting: VecDeque<JobRecipe>,
@@ -52,6 +54,7 @@ impl SubmissionQueue {
             weight: meta.weight,
             role: meta.role,
             class: meta.class,
+            job_class: meta.job_class,
             source,
             awaiting: VecDeque::new(),
             retry: VecDeque::new(),

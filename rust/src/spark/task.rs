@@ -71,6 +71,28 @@ impl Task {
         }
     }
 
+    /// Drop every attempt running on `exec` (the executor was revoked).
+    /// Returns `(dropped, requeue)`: how many attempts were lost, and
+    /// whether the task must go back to the driver's pending queue (it is
+    /// not done and has no surviving attempt).
+    pub fn revoke_executor(&mut self, exec: ExecutorId) -> (usize, bool) {
+        let before = self.attempts.len();
+        self.attempts.retain(|a| a.exec != exec);
+        let dropped = before - self.attempts.len();
+        let requeue = !self.is_done() && dropped > 0 && self.attempts.is_empty();
+        if requeue {
+            self.state = TaskState::Pending;
+        }
+        (dropped, requeue)
+    }
+
+    /// `true` once any attempt has ever started — a re-queued (revoked)
+    /// task's next dispatch is a *re-attempt*, whose duration draws from
+    /// the job's private stream instead of the recipe.
+    pub fn attempted(&self) -> bool {
+        self.next_attempt > 0
+    }
+
     pub fn is_done(&self) -> bool {
         matches!(self.state, TaskState::Done { .. })
     }
@@ -133,5 +155,34 @@ mod tests {
     fn pending_task_not_straggling() {
         let t = Task::new();
         assert!(!t.is_straggling(100.0, 1.0));
+    }
+
+    #[test]
+    fn revoke_requeues_only_when_no_attempt_survives() {
+        // sole attempt revoked -> back to Pending
+        let mut t = Task::new();
+        t.start_attempt(3, 0.0, 10.0, false);
+        assert!(t.attempted());
+        assert_eq!(t.revoke_executor(3), (1, true));
+        assert_eq!(t.state, TaskState::Pending);
+        assert!(t.attempted(), "re-queued task remembers it ran before");
+        // speculative copy survives on another executor -> still Running
+        let mut t = Task::new();
+        t.start_attempt(0, 0.0, 30.0, false);
+        t.start_attempt(1, 5.0, 12.0, true);
+        assert_eq!(t.revoke_executor(0), (1, false));
+        assert!(t.is_running());
+        assert_eq!(t.attempts.len(), 1);
+        // done task never re-queues
+        let mut t = Task::new();
+        let a = t.start_attempt(2, 0.0, 1.0, false);
+        t.finish_attempt(a, 1.0);
+        assert_eq!(t.revoke_executor(2), (0, false));
+        assert!(t.is_done());
+        // executor with none of this task's attempts: no-op
+        let mut t = Task::new();
+        t.start_attempt(4, 0.0, 1.0, false);
+        assert_eq!(t.revoke_executor(9), (0, false));
+        assert!(t.is_running());
     }
 }

@@ -706,8 +706,13 @@ mod tests {
             Register(usize),
             /// Release + deactivate this many random active frameworks.
             Deregister(usize),
-            /// Take one random registered agent down.
+            /// Take one random registered agent down (drain: placements
+            /// stay until their executors terminate).
             AgentDown,
+            /// Kill one random registered agent: every placement on it is
+            /// revoked abruptly before it deregisters, the way
+            /// `OnlineSim::on_agent_killed` unwinds executors.
+            AgentKill,
             /// Bring one random downed agent back.
             AgentRejoin,
             /// Up to this many random feasible placements.
@@ -726,11 +731,12 @@ mod tests {
 
         fn gen_seq(rng: &mut Rng) -> Seq {
             let bursts = (0..5)
-                .map(|_| match rng.index(8) {
+                .map(|_| match rng.index(9) {
                     0 => Burst::AgentDown,
-                    1 => Burst::AgentRejoin,
-                    2 | 3 => Burst::Deregister(64 + rng.index(96)),
-                    4 | 5 => Burst::Register(64 + rng.index(96)),
+                    1 => Burst::AgentKill,
+                    2 => Burst::AgentRejoin,
+                    3 | 4 => Burst::Deregister(64 + rng.index(96)),
+                    5 | 6 => Burst::Register(64 + rng.index(96)),
                     _ => Burst::Place(32 + rng.index(64)),
                 })
                 .collect();
@@ -781,6 +787,19 @@ mod tests {
                 Burst::AgentDown => {
                     let ag = rng.index(st.pool.len());
                     if st.pool.agent(ag).registered {
+                        st.agent_down(ag);
+                    }
+                }
+                Burst::AgentKill => {
+                    let ag = rng.index(st.pool.len());
+                    if st.pool.agent(ag).registered {
+                        for fw in 0..st.n_frameworks() {
+                            let k = st.tasks_on(fw, ag);
+                            if k >= 1.0 {
+                                let d = st.framework(fw).demand;
+                                st.unplace(fw, ag, &d.scaled(k), k).unwrap();
+                            }
+                        }
                         st.agent_down(ag);
                     }
                 }

@@ -5,7 +5,9 @@
 //! stops offering it, but executors already placed there run to completion
 //! and release normally (Mesos maintenance-mode semantics). An up event
 //! re-registers the agent, returning its residual capacity to the offer
-//! pool.
+//! pool. A down event with `kill: true` instead models an abrupt loss:
+//! every executor on the agent is revoked and in-flight attempts are lost
+//! ([`ChurnModel::Kill`], the fault-injection axis).
 //!
 //! Churn is realized up front into a flat, time-sorted list of
 //! [`ChurnEvent`]s — either scripted, or sampled from [`ChurnModel::Flap`]
@@ -24,6 +26,21 @@ pub struct ChurnEvent {
     pub agent: usize,
     /// `true` = register (up), `false` = deregister (drain).
     pub up: bool,
+    /// For down events: `true` = abrupt kill (executors revoked, in-flight
+    /// work lost) instead of a graceful drain. Ignored on up events.
+    pub kill: bool,
+}
+
+impl ChurnEvent {
+    /// A graceful up/drain event (`kill: false`), the pre-kill vocabulary.
+    pub fn new(t: f64, agent: usize, up: bool) -> Self {
+        ChurnEvent { t, agent, up, kill: false }
+    }
+
+    /// An abrupt kill at `t`.
+    pub fn kill(t: f64, agent: usize) -> Self {
+        ChurnEvent { t, agent, up: false, kill: true }
+    }
 }
 
 /// How churn events are produced.
@@ -38,6 +55,11 @@ pub enum ChurnModel {
     /// `horizon`. Agents `0..min_up` never churn, so the cluster always
     /// keeps a live core.
     Flap { min_up: usize, mean_up: f64, mean_down: f64, horizon: f64 },
+    /// Like [`ChurnModel::Flap`] but every down event is an abrupt *kill*:
+    /// executors on the agent are revoked and in-flight attempts lost.
+    /// Same phase process (and therefore the same realized times per RNG
+    /// stream as the equivalent `Flap`) — only the down semantics differ.
+    Kill { min_up: usize, mean_up: f64, mean_down: f64, horizon: f64 },
 }
 
 impl ChurnModel {
@@ -48,29 +70,45 @@ impl ChurnModel {
             ChurnModel::None => Vec::new(),
             ChurnModel::Scripted(evs) => evs.clone(),
             ChurnModel::Flap { min_up, mean_up, mean_down, horizon } => {
-                let mut out = Vec::new();
-                for agent in *min_up..agents {
-                    let mut t = rng.exponential(1.0 / mean_up.max(1e-9));
-                    let mut up_next = false; // first transition is a drain
-                    while t < *horizon {
-                        out.push(ChurnEvent { t, agent, up: up_next });
-                        let mean = if up_next { *mean_up } else { *mean_down };
-                        t += rng.exponential(1.0 / mean.max(1e-9));
-                        up_next = !up_next;
-                    }
-                    // leave every agent up at the horizon so late work can drain
-                    if !up_next {
-                        // last emitted event was an up (or none): nothing to close
-                    } else {
-                        out.push(ChurnEvent { t: *horizon, agent, up: true });
-                    }
-                }
-                out
+                flap_events(*min_up, *mean_up, *mean_down, *horizon, false, agents, rng)
+            }
+            ChurnModel::Kill { min_up, mean_up, mean_down, horizon } => {
+                flap_events(*min_up, *mean_up, *mean_down, *horizon, true, agents, rng)
             }
         };
         events.sort_by(|a, b| a.t.partial_cmp(&b.t).unwrap().then(a.agent.cmp(&b.agent)));
         events
     }
+}
+
+/// Shared alternating up/down phase sampler for `Flap` and `Kill` — the
+/// realized times are identical per stream; only the down events' `kill`
+/// flag differs.
+fn flap_events(
+    min_up: usize,
+    mean_up: f64,
+    mean_down: f64,
+    horizon: f64,
+    kill: bool,
+    agents: usize,
+    rng: &mut Rng,
+) -> Vec<ChurnEvent> {
+    let mut out = Vec::new();
+    for agent in min_up..agents {
+        let mut t = rng.exponential(1.0 / mean_up.max(1e-9));
+        let mut up_next = false; // first transition is a drain
+        while t < horizon {
+            out.push(ChurnEvent { t, agent, up: up_next, kill: kill && !up_next });
+            let mean = if up_next { mean_up } else { mean_down };
+            t += rng.exponential(1.0 / mean.max(1e-9));
+            up_next = !up_next;
+        }
+        // leave every agent up at the horizon so late work can drain
+        if up_next {
+            out.push(ChurnEvent { t: horizon, agent, up: true, kill: false });
+        }
+    }
+    out
 }
 
 #[cfg(test)]
@@ -81,10 +119,7 @@ mod tests {
     fn none_and_scripted() {
         let mut rng = Rng::new(1);
         assert!(ChurnModel::None.realize(6, &mut rng).is_empty());
-        let script = vec![
-            ChurnEvent { t: 50.0, agent: 2, up: false },
-            ChurnEvent { t: 10.0, agent: 1, up: false },
-        ];
+        let script = vec![ChurnEvent::new(50.0, 2, false), ChurnEvent::new(10.0, 1, false)];
         let evs = ChurnModel::Scripted(script).realize(6, &mut rng);
         assert_eq!(evs.len(), 2);
         assert!(evs[0].t <= evs[1].t, "sorted by time");
@@ -121,5 +156,19 @@ mod tests {
         let a = model.realize(5, &mut Rng::new(7).split(11));
         let b = model.realize(5, &mut Rng::new(7).split(11));
         assert_eq!(a, b);
+    }
+
+    #[test]
+    fn kill_matches_flap_times_with_kill_downs() {
+        let flap = ChurnModel::Flap { min_up: 2, mean_up: 50.0, mean_down: 20.0, horizon: 500.0 };
+        let kill = ChurnModel::Kill { min_up: 2, mean_up: 50.0, mean_down: 20.0, horizon: 500.0 };
+        let a = flap.realize(5, &mut Rng::new(7).split(11));
+        let b = kill.realize(5, &mut Rng::new(7).split(11));
+        assert_eq!(a.len(), b.len());
+        for (fa, ka) in a.iter().zip(&b) {
+            assert_eq!((fa.t, fa.agent, fa.up), (ka.t, ka.agent, ka.up));
+            assert!(!fa.kill, "flap downs are drains");
+            assert_eq!(ka.kill, !ka.up, "every kill-model down is a kill, ups never are");
+        }
     }
 }

@@ -660,6 +660,7 @@ pub fn import_stream(spec: &ImportSpec, cfg: &OnlineConfig) -> Result<(WorkloadS
                 weight: 1.0,
                 role: q,
                 class: key.0.clone(),
+                job_class: crate::spark::job::JobClass::default(),
             },
             source: Box::new(DemuxSource::new(demux.clone(), q, None)),
         })
@@ -776,6 +777,55 @@ bogus\n",
         // plan_cpu 100 → 1.0 cores
         let q1 = sc.queues.iter().find(|q| q.spec.kind == WorkloadKind::Mixed).unwrap();
         assert!(q1.spec.executor_demand.as_slice()[0] >= 0.05);
+    }
+
+    #[test]
+    fn google_malformed_rows_count_instead_of_panicking() {
+        // one good job plus every malformed-row shape the parser must
+        // survive: a truncated line, a non-numeric timestamp, an unknown
+        // event type, a duplicate SUBMIT for the same task id (a
+        // reschedule, NOT an error) and a FINISH whose start was already
+        // consumed (ignored)
+        let path = write_tmp(
+            "mesos-fair-google-malformed.csv",
+            "\
+0,,100,0,,0,u1,0,,0.05,0.02\n\
+1000000,,100\n\
+oops,,100,0,,0,u1,0,,0.05,0.02\n\
+2000000,,100,0,,9,u1,0,,0.05,0.02\n\
+3000000,,100,0,,0,u1,0,,0.05,0.02\n\
+5000000,,100,0,,4,u1,0,,,\n\
+6000000,,100,0,,4,u1,0,,,\n",
+        );
+        let spec = ImportSpec::new(&path, ImportFormat::Google);
+        let (stream, stats) = import_stream(&spec, &cfg()).unwrap();
+        assert_eq!(stats.parse_errors, 3, "truncated + bad timestamp + bad event");
+        assert_eq!(stats.jobs, 1, "malformed rows never invent or drop jobs");
+        let sc = stream.realize_all().unwrap();
+        let recipes: Vec<_> = sc.queues.iter().flat_map(|q| q.recipes.iter()).collect();
+        assert_eq!(recipes.len(), 1);
+        // the duplicate SUBMIT at 3s reschedules task 0, so the 5s FINISH
+        // pairs with it: one 2s duration, and the stale FINISH is a no-op
+        assert_eq!(recipes[0].durations, vec![2.0]);
+    }
+
+    #[test]
+    fn alibaba_malformed_rows_count_instead_of_panicking() {
+        let path = write_tmp(
+            "mesos-fair-alibaba-malformed.csv",
+            "\
+task_A1,2,j_1,A,Terminated,100,160,100,0.3\n\
+task_A2,1,j_1\n\
+task_A3,one,j_1,A,Terminated,100,160,100,0.3\n\
+task_A4,1,j_1,A,Terminated,when,160,100,0.3\n",
+        );
+        let spec = ImportSpec::new(&path, ImportFormat::Alibaba);
+        let (stream, stats) = import_stream(&spec, &cfg()).unwrap();
+        assert_eq!(stats.parse_errors, 3, "truncated + bad count + bad timestamp");
+        assert_eq!(stats.jobs, 1);
+        let sc = stream.realize_all().unwrap();
+        let total: usize = sc.queues.iter().map(|q| q.recipes.len()).sum();
+        assert_eq!(total, 1);
     }
 
     #[test]

@@ -20,7 +20,9 @@ use crate::cluster::ServerType;
 use crate::error::{Error, Result};
 use crate::mesos::AllocatorMode;
 use crate::rng::Rng;
+use crate::scheduler::PreemptPolicy;
 use crate::sim::online::{OnlineConfig, QueueSpec};
+use crate::spark::job::JobClass;
 use crate::spark::workload::WorkloadSpec;
 use crate::workload::arrival::ArrivalProcess;
 use crate::workload::churn::{ChurnEvent, ChurnModel};
@@ -74,6 +76,8 @@ pub struct RealizedQueue {
     pub closed: bool,
     /// Fair-share weight φ of this queue's frameworks.
     pub weight: f64,
+    /// Deadline/priority class of every job this queue submits.
+    pub class: JobClass,
     /// Absolute arrival times (empty for closed queues).
     pub arrivals: Vec<f64>,
     /// One recipe per job, in submission order.
@@ -117,6 +121,8 @@ pub const SCENARIO_NAMES: &[&str] = &[
     "heavy-tail",      // bounded-Pareto task durations
     "churn",           // agents drain and rejoin mid-run
     "mixed-bottleneck", // r=3 resources, cpu/mem/io-bottlenecked mix
+    "revocation",       // agents killed abruptly — in-flight tasks lost
+    "preempt-deadline", // deadline/priority tiers with kill-based preemption
 ];
 
 /// Build the named scenario's [`OnlineConfig`]. `jobs_override` scales the
@@ -147,7 +153,7 @@ pub fn scenario_config(
         (0..6)
             .map(|q| {
                 let w = if q % 2 == 0 { small_pi() } else { small_wc() };
-                QueueSpec { workload: w, jobs, arrival, weight: 1.0 }
+                QueueSpec { workload: w, jobs, arrival, weight: 1.0, class: JobClass::default() }
             })
             .collect()
     };
@@ -202,6 +208,44 @@ pub fn scenario_config(
                 mean_down: 90.0,
                 horizon: 4000.0,
             };
+            cfg
+        }
+        "revocation" => {
+            // the churn mix, but downed agents are *killed*: executors are
+            // revoked without drain and their in-flight work is lost
+            let mut cfg = OnlineConfig::paper(policy, mode, jobs(8));
+            cfg.queues = open_mix(ArrivalProcess::Poisson { rate: 1.0 / 60.0 }, jobs(8));
+            cfg.churn = ChurnModel::Kill {
+                min_up: 4,
+                mean_up: 400.0,
+                mean_down: 90.0,
+                horizon: 4000.0,
+            };
+            cfg
+        }
+        "preempt-deadline" => {
+            // two deadline tiers sharing the cluster with best-effort
+            // queues; priority preemption may kill best-effort executors
+            // when a deadline job starves
+            let mut cfg = OnlineConfig::paper(policy, mode, jobs(6));
+            cfg.queues = (0..6)
+                .map(|q| {
+                    let w = if q % 2 == 0 { small_pi() } else { small_wc() };
+                    let class = match q {
+                        0 | 1 => JobClass::new(Some(300.0), 10),
+                        2 | 3 => JobClass::new(Some(900.0), 5),
+                        _ => JobClass::default(),
+                    };
+                    QueueSpec {
+                        workload: w,
+                        jobs: jobs(6),
+                        arrival: ArrivalProcess::Poisson { rate: 1.0 / 60.0 },
+                        weight: 1.0,
+                        class,
+                    }
+                })
+                .collect();
+            cfg.preempt = Some(PreemptPolicy::Priority);
             cfg
         }
         "mixed-bottleneck" => {
@@ -285,6 +329,32 @@ mod tests {
             "poisson",
         );
         assert!(without.churn.is_empty());
+    }
+
+    #[test]
+    fn revocation_scenario_kills_and_deadline_scenario_classes() {
+        let rev =
+            scenario_config("revocation", "drf", AllocatorMode::Characterized, Some(2), 3).unwrap();
+        let sc = realize(&rev, "revocation");
+        assert!(!sc.churn.is_empty());
+        assert!(sc.churn.iter().filter(|e| !e.up).all(|e| e.kill), "downs are kills");
+        assert!(sc.churn.iter().filter(|e| e.up).all(|e| !e.kill), "ups never kill");
+        let pd = scenario_config(
+            "preempt-deadline",
+            "drf",
+            AllocatorMode::Characterized,
+            Some(2),
+            3,
+        )
+        .unwrap();
+        assert!(pd.preempt.is_some());
+        assert_eq!(pd.queues[0].class, JobClass::new(Some(300.0), 10));
+        assert_eq!(pd.queues[2].class, JobClass::new(Some(900.0), 5));
+        assert!(pd.queues[4].class.is_default());
+        // realized queues carry the class through to replay
+        let sc = realize(&pd, "pd");
+        assert_eq!(sc.queues[1].class, pd.queues[1].class);
+        assert!(sc.queues[5].class.is_default());
     }
 
     #[test]

@@ -29,6 +29,7 @@
 use crate::error::{Error, Result};
 use crate::rng::Rng;
 use crate::sim::online::{OnlineConfig, QueueSpec};
+use crate::spark::job::JobClass;
 use crate::spark::workload::WorkloadSpec;
 use crate::workload::arrival::ArrivalIter;
 use crate::workload::churn::ChurnEvent;
@@ -66,6 +67,9 @@ pub struct QueueMeta {
     /// Tenant-class label for per-class SLO reporting — the workload
     /// kind's label by default, the tenant tag for imported traces.
     pub class: String,
+    /// Deadline/priority class stamped on every job this queue submits
+    /// (best-effort by default).
+    pub job_class: JobClass,
 }
 
 impl QueueMeta {
@@ -73,7 +77,13 @@ impl QueueMeta {
     pub fn of(spec: WorkloadSpec, closed: bool, weight: f64) -> QueueMeta {
         let role = spec.kind.role();
         let class = spec.kind.label().to_string();
-        QueueMeta { spec, closed, weight, role, class }
+        QueueMeta { spec, closed, weight, role, class, job_class: JobClass::default() }
+    }
+
+    /// Builder-style deadline/priority class override.
+    pub fn with_job_class(mut self, job_class: JobClass) -> QueueMeta {
+        self.job_class = job_class;
+        self
     }
 }
 
@@ -296,7 +306,8 @@ impl WorkloadStream {
             .iter()
             .enumerate()
             .map(|(q, qs)| QueueStream {
-                meta: QueueMeta::of(qs.workload.clone(), qs.arrival.is_closed(), qs.weight),
+                meta: QueueMeta::of(qs.workload.clone(), qs.arrival.is_closed(), qs.weight)
+                    .with_job_class(qs.class),
                 source: Box::new(SampledSource::new(qs, cfg.seed, q)),
             })
             .collect();
@@ -320,7 +331,7 @@ impl WorkloadStream {
             .queues
             .into_iter()
             .map(|rq| {
-                let meta = QueueMeta::of(rq.spec, rq.closed, rq.weight);
+                let meta = QueueMeta::of(rq.spec, rq.closed, rq.weight).with_job_class(rq.class);
                 let arrivals = rq.arrivals;
                 let jobs: VecDeque<StreamedJob> = rq
                     .recipes
@@ -365,6 +376,7 @@ impl WorkloadStream {
                 spec: qs.meta.spec.clone(),
                 closed: qs.meta.closed,
                 weight: qs.meta.weight,
+                class: qs.meta.job_class,
                 arrivals,
                 recipes,
             });

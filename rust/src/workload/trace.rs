@@ -35,6 +35,7 @@
 use crate::error::{Error, Result};
 use crate::metrics::json::Json;
 use crate::resources::ResVec;
+use crate::spark::job::JobClass;
 use crate::spark::workload::{DurationModel, WorkloadKind, WorkloadSpec};
 use crate::workload::churn::ChurnEvent;
 use crate::workload::scenario::{JobRecipe, RealizedQueue, RealizedScenario};
@@ -91,8 +92,22 @@ fn spec_pairs(id: usize, closed: bool, weight: f64, spec: &WorkloadSpec) -> Vec<
     pairs
 }
 
-fn spec_to_json(id: usize, closed: bool, weight: f64, spec: &WorkloadSpec) -> Json {
-    Json::obj(spec_pairs(id, closed, weight, spec))
+/// Append the deadline/priority class keys — only when non-default, so
+/// pre-SLO traces re-serialize byte-identically.
+fn class_pairs(pairs: &mut Vec<(&'static str, Json)>, class: &JobClass) {
+    if let Some(d) = class.deadline {
+        pairs.push(("deadline", Json::Num(d)));
+    }
+    if class.priority != 0 {
+        pairs.push(("priority", Json::Num(class.priority as f64)));
+    }
+}
+
+fn class_from_json(j: &Json) -> JobClass {
+    JobClass::new(
+        j.get("deadline").and_then(|v| v.as_f64()),
+        j.get("priority").and_then(|v| v.as_f64()).map(|p| p as i32).unwrap_or(0),
+    )
 }
 
 fn num(j: &Json, key: &str) -> Result<f64> {
@@ -150,12 +165,17 @@ fn job_to_json(queue: usize, job: &StreamedJob) -> Json {
 }
 
 fn churn_to_json(e: &ChurnEvent) -> Json {
-    Json::obj(vec![
+    let mut pairs = vec![
         ("ev", Json::Str("churn".into())),
         ("t", Json::Num(e.t)),
         ("agent", Json::Num(e.agent as f64)),
         ("up", Json::Bool(e.up)),
-    ])
+    ];
+    // only kill-downs carry the key, so drain-only traces keep their bytes
+    if e.kill {
+        pairs.push(("kill", Json::Bool(true)));
+    }
+    Json::obj(pairs)
 }
 
 fn churn_from_json(j: &Json) -> Result<ChurnEvent> {
@@ -166,6 +186,7 @@ fn churn_from_json(j: &Json) -> Result<ChurnEvent> {
             .get("up")
             .and_then(|v| v.as_bool())
             .ok_or_else(|| Error::Config("trace: churn missing 'up'".into()))?,
+        kill: j.get("kill").and_then(|v| v.as_bool()).unwrap_or(false),
     })
 }
 
@@ -186,7 +207,9 @@ pub fn to_jsonl(sc: &RealizedScenario) -> String {
     );
     out.push('\n');
     for (id, q) in sc.queues.iter().enumerate() {
-        out.push_str(&spec_to_json(id, q.closed, q.weight, &q.spec).render());
+        let mut pairs = spec_pairs(id, q.closed, q.weight, &q.spec);
+        class_pairs(&mut pairs, &q.class);
+        out.push_str(&Json::obj(pairs).render());
         out.push('\n');
         for (idx, recipe) in q.recipes.iter().enumerate() {
             let mut pairs = vec![
@@ -243,6 +266,7 @@ pub fn write_stream(
         if qs.meta.class != qs.meta.spec.kind.label() {
             pairs.push(("class", Json::Str(qs.meta.class.clone())));
         }
+        class_pairs(&mut pairs, &qs.meta.job_class);
         if let Some(total) = qs.source.size_hint() {
             pairs.push(("jobs", Json::Num(total as f64)));
         }
@@ -356,6 +380,7 @@ pub fn from_jsonl(text: &str) -> Result<RealizedScenario> {
                     spec: spec_from_json(&j)?,
                     closed,
                     weight,
+                    class: class_from_json(&j),
                     arrivals: Vec::new(),
                     recipes: Vec::new(),
                 });
@@ -554,7 +579,9 @@ pub fn open_stream(path: &str) -> Result<WorkloadStream> {
                     .unwrap_or(spec.kind.label())
                     .to_string();
                 let total = j.get("jobs").and_then(|v| v.as_f64()).map(|n| n as usize);
-                metas[id] = Some((QueueMeta { spec, closed, weight, role, class }, total));
+                let job_class = class_from_json(&j);
+                metas[id] =
+                    Some((QueueMeta { spec, closed, weight, role, class, job_class }, total));
             }
             Some("churn") => churn.push(churn_from_json(&j)?),
             Some("job") => {
@@ -706,6 +733,47 @@ mod tests {
         std::fs::write(&path, tampered).unwrap();
         let stream = open_stream(&path.to_string_lossy()).unwrap();
         assert!(stream.realize_all().is_err(), "idx gaps must not replay silently");
+    }
+
+    #[test]
+    fn kill_and_class_keys_round_trip_and_defaults_stay_absent() {
+        // kill-downs round-trip bit-exactly through the v2 writer/reader
+        let rev =
+            scenario_config("revocation", "drf", AllocatorMode::Characterized, Some(2), 0xF1)
+                .unwrap();
+        let sc = realize(&rev, "revocation");
+        assert!(sc.churn.iter().any(|e| e.kill), "revocation realizes kills");
+        let back = from_jsonl(&to_jsonl(&sc)).unwrap();
+        assert_eq!(sc, back);
+        // drain-only churn and best-effort classes emit none of the new
+        // keys — pre-SLO trace bytes are unchanged
+        let plain = realize(
+            &scenario_config("churn", "drf", AllocatorMode::Characterized, Some(2), 0xF1)
+                .unwrap(),
+            "churn",
+        );
+        let text = to_jsonl(&plain);
+        assert!(!plain.churn.is_empty());
+        assert!(!text.contains("\"kill\""));
+        assert!(!text.contains("\"deadline\""));
+        assert!(!text.contains("\"priority\""));
+        // deadline/priority classes survive v2 and v3 round trips
+        let pd = scenario_config(
+            "preempt-deadline",
+            "drf",
+            AllocatorMode::Characterized,
+            Some(2),
+            0xF2,
+        )
+        .unwrap();
+        let eager = realize(&pd, "pd");
+        let back = from_jsonl(&to_jsonl(&eager)).unwrap();
+        assert_eq!(back.queues[0].class, crate::spark::job::JobClass::new(Some(300.0), 10));
+        assert_eq!(eager, back);
+        let mut buf: Vec<u8> = Vec::new();
+        write_stream(WorkloadStream::sampled(&pd, "pd"), &mut buf, 2).unwrap();
+        let back3 = from_jsonl(&String::from_utf8(buf).unwrap()).unwrap();
+        assert_eq!(eager, back3);
     }
 
     #[test]

@@ -1,0 +1,217 @@
+//! Fault-injection integration tests: kill-based revocation and deadline
+//! preemption under scripted kill storms. Covers the PR-10 acceptance
+//! contract — same-seed kill runs are bit-identical across policies,
+//! kernels and shard counts (common random numbers survive revocation),
+//! re-queued jobs always complete, v3 traces of kill scenarios re-record
+//! byte-identically, and `--obs` decision traces of a revocation run are
+//! reproducible byte-for-byte.
+
+use mesos_fair::mesos::AllocatorMode;
+use mesos_fair::obs::trace as obs_trace;
+use mesos_fair::scheduler::{KernelKind, PreemptPolicy};
+use mesos_fair::sim::online::{OnlineConfig, OnlineResult, OnlineSim};
+use mesos_fair::workload::{
+    scenario_config, trace as scenario_trace, ChurnEvent, ChurnModel, WorkloadStream,
+};
+
+/// Bit-exact equality of the observable outcome of two runs, including
+/// the revocation/SLO counters this PR adds.
+fn assert_identical(a: &OnlineResult, b: &OnlineResult, ctx: &str) {
+    assert_eq!(a.jobs_completed, b.jobs_completed, "{ctx}: jobs");
+    assert_eq!(a.makespan, b.makespan, "{ctx}: makespan");
+    assert_eq!(a.grants, b.grants, "{ctx}: grants");
+    assert_eq!(a.trace.completions, b.trace.completions, "{ctx}: completion marks");
+    assert_eq!(a.trace.cpu.values(), b.trace.cpu.values(), "{ctx}: cpu series");
+    assert_eq!(a.trace.mem.values(), b.trace.mem.values(), "{ctx}: mem series");
+    assert_eq!(a.completion, b.completion, "{ctx}: completion stats");
+    assert_eq!(a.slowdown, b.slowdown, "{ctx}: slowdown stats");
+    assert_eq!(a.revocations, b.revocations, "{ctx}: revocations");
+    assert_eq!(a.preemptions, b.preemptions, "{ctx}: preemptions");
+    assert_eq!(a.reattempts, b.reattempts, "{ctx}: re-attempts");
+    assert_eq!(a.tardiness, b.tardiness, "{ctx}: tardiness stats");
+    assert_eq!(a.deadline_misses, b.deadline_misses, "{ctx}: deadline misses");
+}
+
+/// A deterministic kill storm: agents 4 and 5 die abruptly at t=8 with
+/// the first wave of executors in flight, then rejoin. Scripted (rather
+/// than `ChurnModel::Kill`) so `revocations > 0` holds at any seed.
+fn kill_config(policy: &str, seed: u64) -> OnlineConfig {
+    let mut cfg = OnlineConfig::small(policy, AllocatorMode::Characterized);
+    cfg.seed = seed;
+    cfg.churn = ChurnModel::Scripted(vec![
+        ChurnEvent::kill(8.0, 4),
+        ChurnEvent::kill(8.0, 5),
+        ChurnEvent::new(150.0, 4, true),
+        ChurnEvent::new(150.0, 5, true),
+    ]);
+    cfg
+}
+
+fn tmp(name: &str) -> String {
+    std::env::temp_dir().join(name).to_string_lossy().into_owned()
+}
+
+#[test]
+fn kill_runs_identical_across_kernels_and_shards() {
+    // revocation determinism: for every policy, a stochastic kill scenario
+    // under one seed yields one trajectory regardless of row-fill kernel
+    // or shard count — and a second run of any combination is bit-exact
+    for policy in ["drf", "psdsf", "rpsdsf"] {
+        let mut baseline: Option<OnlineResult> = None;
+        for kernel in [KernelKind::Scalar, KernelKind::Batched] {
+            for shards in [1usize, 2, 8] {
+                let mut cfg = kill_config(policy, 0xFA11);
+                cfg.kernel = kernel;
+                cfg.shards = shards;
+                let ctx = format!("{policy}/{kernel:?}/shards{shards}");
+                let a = OnlineSim::new(cfg.clone()).unwrap().run().unwrap();
+                let b = OnlineSim::new(cfg).unwrap().run().unwrap();
+                assert_identical(&a, &b, &format!("{ctx}: rerun"));
+                assert_eq!(a.jobs_completed, 8, "{ctx}: re-queued jobs complete");
+                match &baseline {
+                    None => baseline = Some(a),
+                    Some(base) => assert_identical(base, &a, &ctx),
+                }
+            }
+        }
+        assert!(
+            baseline.as_ref().unwrap().revocations > 0,
+            "{policy}: the storm must actually revoke executors"
+        );
+    }
+}
+
+#[test]
+fn mass_agent_loss_recovers_every_job() {
+    // kill storm: five of the six agents die in the same event cycle with
+    // work in flight; everything re-queues onto agent 0 until the rejoin
+    let mut cfg = OnlineConfig::small("drf", AllocatorMode::Characterized);
+    cfg.seed = 0xDEAD;
+    let mut events: Vec<ChurnEvent> = (1..6).map(|a| ChurnEvent::kill(12.0, a)).collect();
+    events.extend((1..6).map(|a| ChurnEvent::new(200.0, a, true)));
+    cfg.churn = ChurnModel::Scripted(events);
+    let r = OnlineSim::new(cfg).unwrap().run().unwrap();
+    assert_eq!(r.jobs_completed, 8, "mass loss must not lose jobs");
+    assert!(r.revocations > 0, "the storm hit live executors");
+    assert!(r.reattempts > 0, "lost in-flight tasks were re-drawn");
+}
+
+#[test]
+fn kill_during_offer_cycle_lands_before_the_allocation() {
+    // t=10.0 coincides with an Allocate tick (allocation_interval = 1s);
+    // the kill's event class orders it before the allocation, so the
+    // offer cycle must see the shrunken cluster — deterministically
+    let mut cfg = OnlineConfig::small("psdsf", AllocatorMode::Characterized);
+    cfg.seed = 0x0FFE;
+    cfg.churn = ChurnModel::Scripted(vec![
+        ChurnEvent::kill(10.0, 4),
+        ChurnEvent::kill(10.0, 5),
+        ChurnEvent::new(90.0, 4, true),
+        ChurnEvent::new(90.0, 5, true),
+    ]);
+    let a = OnlineSim::new(cfg.clone()).unwrap().run().unwrap();
+    let b = OnlineSim::new(cfg).unwrap().run().unwrap();
+    assert_identical(&a, &b, "kill-during-offer-cycle");
+    assert_eq!(a.jobs_completed, 8);
+}
+
+#[test]
+fn preempt_hook_without_deadline_classes_is_a_no_op() {
+    // zero-cost when off, part two: arming a preemption policy changes
+    // nothing unless some queue actually carries a deadline class, even
+    // under drain churn — no victim selection, no extra RNG draws
+    let mut cfg = OnlineConfig::small("drf", AllocatorMode::Characterized);
+    cfg.seed = 0x0B5E;
+    cfg.churn = ChurnModel::Scripted(vec![
+        ChurnEvent::new(15.0, 5, false),
+        ChurnEvent::new(80.0, 5, true),
+    ]);
+    let base = OnlineSim::new(cfg.clone()).unwrap().run().unwrap();
+    cfg.preempt = Some(PreemptPolicy::Priority);
+    let armed = OnlineSim::new(cfg.clone()).unwrap().run().unwrap();
+    assert_identical(&base, &armed, "armed-but-idle preemption");
+    assert_eq!(armed.preemptions, 0);
+    cfg.preempt = Some(PreemptPolicy::Share);
+    let armed = OnlineSim::new(cfg).unwrap().run().unwrap();
+    assert_identical(&base, &armed, "share-policy armed-but-idle");
+}
+
+#[test]
+fn preempt_deadline_scenario_deterministic_per_policy() {
+    for policy in ["drf", "rpsdsf"] {
+        let cfg = scenario_config(
+            "preempt-deadline",
+            policy,
+            AllocatorMode::Characterized,
+            Some(2),
+            0x510,
+        )
+        .unwrap();
+        let a = OnlineSim::new(cfg.clone()).unwrap().run().unwrap();
+        let b = OnlineSim::new(cfg).unwrap().run().unwrap();
+        assert_identical(&a, &b, &format!("preempt-deadline/{policy}"));
+        assert_eq!(a.deadline_jobs, 8, "{policy}: four deadline queues x 2 jobs");
+    }
+}
+
+#[test]
+fn revocation_v3_trace_rerecords_byte_identically() {
+    // the acceptance check: record a kill scenario, replay the file, and
+    // re-record it — the second file must match the first byte for byte
+    // (kill flags included)
+    let cfg =
+        scenario_config("revocation", "drf", AllocatorMode::Characterized, Some(1), 0xC0DE)
+            .unwrap();
+    let first = tmp("mesos_fair_revocation_first.jsonl");
+    let second = tmp("mesos_fair_revocation_second.jsonl");
+    let stream = WorkloadStream::sampled(&cfg, "revocation");
+    scenario_trace::write_stream_file(stream, &first, 64).unwrap();
+    let replayed = scenario_trace::open_stream(&first).unwrap();
+    scenario_trace::write_stream_file(replayed, &second, 64).unwrap();
+    let a = std::fs::read(&first).unwrap();
+    let b = std::fs::read(&second).unwrap();
+    assert!(!a.is_empty() && a == b, "re-recorded v3 trace diverged");
+    assert!(
+        String::from_utf8(a).unwrap().contains("\"kill\":true"),
+        "the recorded revocation trace must carry kill events"
+    );
+    // and the replayed stream drives the sim identically to live sampling
+    let live = OnlineSim::with_stream(cfg.clone(), WorkloadStream::sampled(&cfg, "revocation"))
+        .unwrap()
+        .run()
+        .unwrap();
+    let replay = OnlineSim::with_stream(cfg, scenario_trace::open_stream(&second).unwrap())
+        .unwrap()
+        .run()
+        .unwrap();
+    assert_identical(&live, &replay, "revocation live vs replay");
+    let _ = std::fs::remove_file(&first);
+    let _ = std::fs::remove_file(&second);
+}
+
+#[test]
+fn obs_trace_of_a_revocation_run_is_reproducible() {
+    // two obs-instrumented runs of the same kill scenario serialize to the
+    // same JSONL decision trace, and that trace records the revocations
+    let run = || {
+        let mut cfg = kill_config("drf", 0x0B5);
+        cfg.obs = true;
+        OnlineSim::new(cfg).unwrap().run().unwrap()
+    };
+    let meta = obs_trace::ObsMeta {
+        policy: "drf".into(),
+        mode: "characterized".into(),
+        scenario: "kill-storm".into(),
+        seed: 0x0B5,
+    };
+    let a = run();
+    let b = run();
+    let ja = obs_trace::to_jsonl(&meta, &a.obs.as_ref().unwrap().events);
+    let jb = obs_trace::to_jsonl(&meta, &b.obs.as_ref().unwrap().events);
+    assert_eq!(ja, jb, "obs decision traces must replay byte-identically");
+    assert!(a.revocations > 0);
+    assert!(ja.contains("\"ev\":\"revoke\""), "Revoke decisions are in the trace");
+    // the textual trace round-trips through the parser too
+    let parsed = obs_trace::from_jsonl(&ja).unwrap();
+    assert_eq!(parsed.events.len(), a.obs.unwrap().events.len());
+}
